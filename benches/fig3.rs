@@ -1,0 +1,55 @@
+//! FIG3: regenerate Figure 3 — the four Section-5 training methods under
+//! Strategy I (constant η = 0.1, eq. (20)). Three panels:
+//!   col 1: loss vs iteration   -> bench_out/fig3_loss_iter.csv
+//!   col 2: loss vs wall time   -> bench_out/fig3_loss_time.csv
+//!   col 3: δ(t) vs iteration   -> bench_out/fig3_delta.csv
+//!
+//! Scale: bench default 1200 iterations (SGS_BENCH_ITERS overrides; the
+//! paper's full run is 50 000). The expected *shape* (paper): data-parallel
+//! best per-iteration, distributed best per-time, δ(t) ≪ η.
+
+use sgs::benchkit::figures::{bench_base, ensure_prefix_dir, report_methods, run_four_methods};
+use sgs::trainer::LrSchedule;
+
+fn main() {
+    let mut base = bench_base("fig3");
+    base.lr = LrSchedule::strategy_1();
+    ensure_prefix_dir("bench_out/fig3");
+    let outs = run_four_methods(&base, "bench_out/fig3").expect("fig3 run failed");
+    report_methods(
+        "Fig. 3 (Strategy I, eq. 20): four methods",
+        &outs,
+    );
+
+    // headline shape checks (paper Section 5)
+    let loss = |label: &str| {
+        outs.iter()
+            .find(|(l, _)| *l == label)
+            .unwrap()
+            .1
+            .recorder
+            .summary()
+            .final_train_loss
+            .unwrap_or(f64::NAN)
+    };
+    let iter_ms = |label: &str| {
+        outs.iter().find(|(l, _)| *l == label).unwrap().1.iter_time_s * 1e3
+    };
+    println!("\nshape checks vs paper:");
+    println!(
+        "  decoupled vs centralized latency: {:.2}x (paper 85/58 = 1.47x)",
+        iter_ms("centralized") / iter_ms("decoupled")
+    );
+    println!(
+        "  per-iteration loss: data_parallel {:.4} <= distributed {:.4} (staleness cost)",
+        loss("data_parallel"),
+        loss("distributed")
+    );
+    let dist_delta = outs[3].1.final_delta;
+    println!(
+        "  distributed δ(T) = {:.2e}  (paper: well below η = 0.1): {}",
+        dist_delta,
+        if dist_delta < 0.1 { "OK" } else { "MISMATCH" }
+    );
+    println!("CSVs: bench_out/fig3_loss_iter.csv, fig3_loss_time.csv, fig3_delta.csv");
+}

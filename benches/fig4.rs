@@ -1,0 +1,45 @@
+//! FIG4: regenerate Figure 4 — the four Section-5 methods under Strategy II
+//! (piecewise η drops, eq. (21), breakpoints scaled to the bench budget).
+//! Panels/CSVs mirror fig3 with the fig4_ prefix.
+//!
+//! Expected shape (paper): the η drops collapse δ(t) stepwise and freeze
+//! the loss ordering established in phase 1.
+
+use sgs::benchkit::figures::{bench_base, ensure_prefix_dir, report_methods, run_four_methods};
+use sgs::trainer::LrSchedule;
+
+fn main() {
+    let mut base = bench_base("fig4");
+    base.lr = LrSchedule::strategy_2(base.iters);
+    ensure_prefix_dir("bench_out/fig4");
+    let outs = run_four_methods(&base, "bench_out/fig4").expect("fig4 run failed");
+    report_methods("Fig. 4 (Strategy II, eq. 21): four methods", &outs);
+
+    // Strategy II shape check: δ(t) after the final drop must sit far below
+    // the Strategy-I floor (δ scales with η, Theorem 4.5).
+    let dist = &outs[3].1;
+    let deltas: Vec<(usize, f64)> = dist
+        .recorder
+        .records
+        .iter()
+        .filter_map(|r| r.delta.map(|d| (r.t, d)))
+        .collect();
+    let phase1: Vec<f64> = deltas
+        .iter()
+        .filter(|(t, _)| *t > 20 && *t < base.iters * 3 / 10)
+        .map(|(_, d)| *d)
+        .collect();
+    let phase4: Vec<f64> = deltas
+        .iter()
+        .filter(|(t, _)| *t > base.iters * 8 / 10 + 10)
+        .map(|(_, d)| *d)
+        .collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "\nδ floor, phase η=0.1: {:.2e} -> phase η=0.0001: {:.2e}  ({})",
+        mean(&phase1),
+        mean(&phase4),
+        if mean(&phase4) < mean(&phase1) { "OK: δ tracks η downward" } else { "MISMATCH" }
+    );
+    println!("CSVs: bench_out/fig4_loss_iter.csv, fig4_loss_time.csv, fig4_delta.csv");
+}

@@ -1,0 +1,126 @@
+//! PERF: hot-path microbenches for §Perf in EXPERIMENTS.md —
+//! per-layer fwd/bwd on both backends, the loss head, gossip mixing, and
+//! the end-to-end distributed iteration. CSV: bench_out/hot_path.csv
+
+use sgs::benchkit::{humanize, BenchSet};
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::consensus::GossipMixer;
+use sgs::data::synthetic::SyntheticSpec;
+use sgs::graph::{max_safe_alpha, xiao_boyd_weights, Graph, Topology};
+use sgs::nn::init::init_params;
+use sgs::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use sgs::tensor::Tensor;
+use sgs::trainer::{LrSchedule, Trainer};
+use sgs::util::csv::CsvWriter;
+use sgs::util::rng::Pcg32;
+
+fn bench_backend(set: &mut BenchSet, backend: &dyn ComputeBackend, tag: &str) {
+    let layers = backend.layers().to_vec();
+    let b = backend.batch();
+    let mut rng = Pcg32::new(5);
+    let params = init_params(&mut rng, &layers);
+    let mut x = Tensor::zeros(&[b, layers[0].d_in]);
+    rng.fill_normal(x.data_mut(), 1.0);
+
+    let mut acts = vec![x];
+    for (i, (w, bias)) in params.iter().enumerate() {
+        let h = backend.layer_fwd(i, acts.last().unwrap(), w, bias).unwrap();
+        acts.push(h);
+    }
+
+    for (i, (w, bias)) in params.iter().enumerate() {
+        let x_in = acts[i].clone();
+        set.bench(format!("{tag}/layer{i}_fwd"), 2, 8, || {
+            backend.layer_fwd(i, &x_in, w, bias).unwrap()
+        });
+        let mut g = Tensor::zeros(acts[i + 1].shape());
+        rng.fill_normal(g.data_mut(), 1.0);
+        let h_out = acts[i + 1].clone();
+        set.bench(format!("{tag}/layer{i}_bwd"), 2, 8, || {
+            backend.layer_bwd(i, &x_in, w, &h_out, &g).unwrap()
+        });
+    }
+    let c = layers.last().unwrap().d_out;
+    let logits = acts.last().unwrap().clone();
+    let mut onehot = Tensor::zeros(&[b, c]);
+    for i in 0..b {
+        onehot.data_mut()[i * c + rng.below(c)] = 1.0;
+    }
+    set.bench(format!("{tag}/loss_head"), 2, 8, || {
+        backend.loss_grad(&logits, &onehot).unwrap()
+    });
+}
+
+fn main() {
+    let mut set = BenchSet::new("hot path");
+
+    let model = ModelShape::small();
+    let native = NativeBackend::new(model.layers(), 194);
+    bench_backend(&mut set, &native, "native");
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        match XlaBackend::load("artifacts") {
+            Ok(xla) => bench_backend(&mut set, &xla, "xla"),
+            Err(e) => eprintln!("xla unavailable: {e}"),
+        }
+    }
+
+    // gossip mixing cost at paper scale (100k params, S=4 ring)
+    let g = Graph::build(Topology::Ring, 4).unwrap();
+    let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+    let mut mixer = GossipMixer::new(&p, 100_234);
+    let mut rng = Pcg32::new(9);
+    let mut reps: Vec<Tensor> = (0..4)
+        .map(|_| {
+            let mut t = Tensor::zeros(&[100_234]);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        })
+        .collect();
+    set.bench("gossip_mix/S4_ring_100k_params", 3, 20, || {
+        mixer.mix(&mut reps)
+    });
+
+    // end-to-end distributed iteration (native, bench-scale model)
+    let cfg = ExperimentConfig {
+        name: "hotpath-e2e".into(),
+        s: 4,
+        k: 2,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        batch: 48,
+        iters: 10_000, // bounded by bench samples below, not by this
+        lr: LrSchedule::Const(0.1),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 3,
+        dataset_n: 6000,
+        delta_every: 0,
+        eval_every: 0,
+    };
+    let ds = SyntheticSpec::small(cfg.dataset_n, 64, 10, 1).generate();
+    let bk = NativeBackend::new(cfg.model.layers(), cfg.batch);
+    let mut tr = Trainer::new(cfg, &bk, &ds).unwrap();
+    set.bench("e2e_iteration/S4K2_native", 5, 30, || tr.step().unwrap());
+
+    set.report();
+
+    std::fs::create_dir_all("bench_out").ok();
+    let mut w = CsvWriter::create("bench_out/hot_path.csv", &["bench", "mean_s", "p50_s", "std_s"]).unwrap();
+    for r in &set.results {
+        w.row_str(&[
+            r.name.clone(),
+            format!("{:.6e}", r.mean_s()),
+            format!("{:.6e}", r.p50_s()),
+            format!("{:.6e}", r.std_s()),
+        ])
+        .unwrap();
+    }
+    w.flush().unwrap();
+    println!(
+        "\ne2e S4K2 iteration: {} | CSV: bench_out/hot_path.csv",
+        humanize(set.results.last().unwrap().mean_s())
+    );
+}

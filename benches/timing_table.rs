@@ -1,0 +1,101 @@
+//! TBL-timing: the Section-5 timing claim — "85 ms per mini-batch with
+//! traditional backpropagation vs 58 ms with the fully decoupled
+//! algorithm" (a 1.47× per-batch latency win for K=2).
+//!
+//! We calibrate per-layer fwd/bwd costs on the real backend(s), then replay
+//! each method's schedule (simclock::makespan). Absolute ms differ from the
+//! authors' GTX 1060; the ratio shape is the reproduction target.
+//! CSV: bench_out/timing_table.csv
+
+use sgs::benchkit::BenchSet;
+use sgs::config::ModelShape;
+use sgs::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use sgs::simclock::{dbp_iter_s, decoupled_iter_s, method_iter_s, CostModel};
+use sgs::util::csv::CsvWriter;
+
+fn table_for(backend: &dyn ComputeBackend, tag: &str, w: &mut CsvWriter) {
+    let cm = CostModel::calibrate(backend, 5);
+    println!("\n-- backend: {tag} (batch {}) --", cm.batch);
+    println!("{:<24} {:>12} {:>10}", "method", "iter", "vs (1,1)");
+    let base = method_iter_s(&cm, 1, 1, 1);
+    for (label, s, k, nb) in [
+        ("centralized (S1,K1)", 1usize, 1usize, 1usize),
+        ("decoupled (S1,K2)", 1, 2, 1),
+        ("decoupled (S1,K3)", 1, 3, 1),
+        ("data-parallel (S4,K1)", 4, 1, 3),
+        ("distributed (S4,K2)", 4, 2, 3),
+    ] {
+        let t = method_iter_s(&cm, s, k, nb);
+        println!(
+            "{:<24} {:>9.3} ms {:>9.2}x",
+            label,
+            t * 1e3,
+            base / t
+        );
+        w.row_str(&[
+            tag.into(),
+            label.into(),
+            format!("{:.6}", t * 1e3),
+            format!("{:.3}", base / t),
+        ])
+        .unwrap();
+    }
+    // the cited DDG baseline (Huo et al. 2018): backward-only decoupling
+    let dbp = dbp_iter_s(&cm, 2);
+    println!(
+        "{:<24} {:>9.3} ms {:>9.2}x   (Huo et al. baseline)",
+        "ddg/backward-only (K2)",
+        dbp * 1e3,
+        base / dbp
+    );
+    w.row_str(&[
+        tag.into(),
+        "ddg_backward_only_K2".into(),
+        format!("{:.6}", dbp * 1e3),
+        format!("{:.3}", base / dbp),
+    ])
+    .unwrap();
+
+    let speedup = base / decoupled_iter_s(&cm, 2);
+    println!(
+        "paper claim: sequential 85 ms -> decoupled 58 ms (1.47x). here: {:.2}x {}",
+        speedup,
+        if speedup > 1.2 { "(same regime: OK)" } else { "(MISMATCH)" }
+    );
+}
+
+fn main() {
+    std::fs::create_dir_all("bench_out").ok();
+    let mut w = CsvWriter::create(
+        "bench_out/timing_table.csv",
+        &["backend", "method", "iter_ms", "speedup_vs_centralized"],
+    )
+    .unwrap();
+
+    // native backend always available
+    let model = ModelShape::small();
+    let native = NativeBackend::new(model.layers(), 194);
+    table_for(&native, "native", &mut w);
+
+    // XLA backend when artifacts exist
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        match XlaBackend::load("artifacts") {
+            Ok(xla) => table_for(&xla, "xla", &mut w),
+            Err(e) => eprintln!("xla backend unavailable: {e}"),
+        }
+    } else {
+        eprintln!("(run `make artifacts` for the XLA column)");
+    }
+    w.flush().unwrap();
+
+    // also time the raw per-op building blocks for §Perf
+    let mut set = BenchSet::new("per-op building blocks (native)");
+    let cm = CostModel::calibrate(&native, 5);
+    for (i, (f, b)) in cm.fwd_s.iter().zip(&cm.bwd_s).enumerate() {
+        set.record(format!("layer{i}_fwd"), vec![*f]);
+        set.record(format!("layer{i}_bwd"), vec![*b]);
+    }
+    set.record("loss_head", vec![cm.loss_s]);
+    set.report();
+    println!("\nCSV: bench_out/timing_table.csv");
+}

@@ -1,0 +1,73 @@
+//! The Section-5 experiment at example scale: the paper's four methods —
+//! centralized (1,1), decoupled (1,2), data-parallel (4,1), distributed
+//! (4,2) — on one shared dataset, printing the comparison table Fig. 3
+//! summarizes. Native backend for speed; `benches/fig3.rs` is the full
+//! figure generator.
+//!
+//!     cargo run --release --example four_methods
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::coordinator::{build_dataset, run_with};
+use sgs::graph::Topology;
+use sgs::runtime::NativeBackend;
+use sgs::simclock::CostModel;
+use sgs::trainer::LrSchedule;
+
+fn main() -> Result<(), sgs::Error> {
+    let base = ExperimentConfig {
+        name: "four-methods".into(),
+        s: 4,
+        k: 2,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        batch: 32,
+        iters: 800,
+        lr: LrSchedule::strategy_1(),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 7,
+        dataset_n: 8000,
+        delta_every: 20,
+        eval_every: 200,
+    };
+    let ds = build_dataset(&base);
+    let backend = NativeBackend::new(base.model.layers(), base.batch);
+    let cm = CostModel::calibrate(&backend, 3);
+
+    println!(
+        "{:<16} {:>3} {:>3} {:>11} {:>12} {:>12} {:>8} {:>10}",
+        "method", "S", "K", "iter(ms)", "train-loss", "eval-loss", "acc", "δ(t)"
+    );
+    let mut rows = Vec::new();
+    for (label, cfg) in ExperimentConfig::paper_methods(&base) {
+        let out = run_with(cfg.clone(), &backend, &ds, Some(&cm))?;
+        let s = out.recorder.summary();
+        println!(
+            "{:<16} {:>3} {:>3} {:>11.3} {:>12.4} {:>12.4} {:>7.1}% {:>10.2e}",
+            label,
+            cfg.s,
+            cfg.k,
+            out.iter_time_s * 1e3,
+            s.final_train_loss.unwrap_or(f64::NAN),
+            s.final_eval_loss.unwrap_or(f64::NAN),
+            s.final_eval_acc.unwrap_or(f64::NAN) * 100.0,
+            out.final_delta
+        );
+        rows.push((label, out));
+    }
+
+    // the paper's two headline observations:
+    let iter_ms =
+        |label: &str| rows.iter().find(|(l, _)| *l == label).unwrap().1.iter_time_s * 1e3;
+    println!(
+        "\npipeline speedup (per-batch latency, paper: 85ms -> 58ms ≈ 1.47x): {:.2}x",
+        iter_ms("centralized") / iter_ms("decoupled")
+    );
+    println!(
+        "distributed vs centralized per-iteration latency: {:.2}x",
+        iter_ms("centralized") / iter_ms("distributed")
+    );
+    Ok(())
+}

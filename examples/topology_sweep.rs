@@ -1,0 +1,72 @@
+//! Topology ablation: how the model-group gossip graph (Assumption 3.1.2)
+//! shapes the consensus error δ(t) and the spectral gap γ.
+//!
+//!     cargo run --release --example topology_sweep
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::coordinator::{build_dataset, run_with, AgentGrid};
+use sgs::graph::{mixing_time_estimate, Topology};
+use sgs::runtime::NativeBackend;
+use sgs::trainer::LrSchedule;
+
+fn main() -> Result<(), sgs::Error> {
+    let s = 8;
+    let base = ExperimentConfig {
+        name: "topology-sweep".into(),
+        s,
+        k: 2,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 48, hidden: 32, blocks: 2, classes: 10 },
+        batch: 24,
+        iters: 400,
+        lr: LrSchedule::Const(0.1),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 3,
+        dataset_n: 12_000,
+        delta_every: 5,
+        eval_every: 0,
+    };
+    let ds = build_dataset(&base);
+    let backend = NativeBackend::new(base.model.layers(), base.batch);
+
+    println!("S = {s} data-groups, K = 2 modules; sweeping gossip topology\n");
+    println!(
+        "{:<12} {:>8} {:>10} {:>12} {:>12} {:>12}",
+        "topology", "edges", "gamma", "mix(x100)", "final loss", "δ floor"
+    );
+    for topo in [
+        Topology::Line,
+        Topology::Ring,
+        Topology::Star,
+        Topology::Torus { rows: 2, cols: 4 },
+        Topology::Complete,
+    ] {
+        let grid = AgentGrid::build(s, 1, topo, None)?;
+        let mut cfg = base.clone();
+        cfg.topology = topo;
+        let out = run_with(cfg, &backend, &ds, None)?;
+        let deltas: Vec<f64> = out
+            .recorder
+            .records
+            .iter()
+            .rev()
+            .filter_map(|r| r.delta)
+            .take(20)
+            .collect();
+        let floor = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
+        println!(
+            "{:<12} {:>8} {:>10.4} {:>12} {:>12.4} {:>12.2e}",
+            topo.name(),
+            grid.model_graph.edge_count(),
+            out.gamma,
+            mixing_time_estimate(out.gamma, 100.0),
+            out.recorder.summary().final_train_loss.unwrap_or(f64::NAN),
+            floor
+        );
+    }
+    println!("\ndenser graphs -> smaller gamma -> tighter consensus (Lemma 4.4).");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + write a manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once (`make artifacts`); the rust binary is
+self-contained afterwards.  Re-running is a no-op when the fingerprint of
+(model spec, source files) is unchanged.
+
+Usage:
+    python -m compile.aot --config small --out-dir ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_fingerprint() -> str:
+    """Hash of every .py under compile/ — artifact invalidation signal."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                with open(os.path.join(dirpath, name), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def fingerprint(spec: M.ModelSpec) -> str:
+    h = hashlib.sha256()
+    h.update(repr(spec).encode())
+    h.update(_source_fingerprint().encode())
+    return h.hexdigest()[:16]
+
+
+def lower_layer(spec: M.LayerSpec, batch: int):
+    args = M.example_layer_args(spec, batch)
+    fwd = jax.jit(M.layer_fwd_fn(spec.kind)).lower(*args["fwd"])
+    bwd = jax.jit(M.layer_bwd_fn(spec.kind)).lower(*args["bwd"])
+    return to_hlo_text(fwd), to_hlo_text(bwd)
+
+
+def lower_loss(batch: int, classes: int):
+    args = M.example_loss_args(batch, classes)
+    lowered = jax.jit(M.loss_grad_fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_eval(spec: M.ModelSpec):
+    args = M.example_eval_args(spec)
+    lowered = jax.jit(M.eval_loss_fn(spec)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build(spec: M.ModelSpec, out_dir: str, force: bool = False) -> dict:
+    """Emit all artifacts for `spec` into `out_dir`; return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fp = fingerprint(spec)
+
+    if not force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp and all(
+            os.path.exists(os.path.join(out_dir, e["fwd"]))
+            and os.path.exists(os.path.join(out_dir, e["bwd"]))
+            for e in old.get("layers", [])
+        ):
+            print(f"artifacts up-to-date (fingerprint {fp}), skipping")
+            return old
+
+    layers = []
+    emitted = {}
+    for layer in spec.layers:
+        key = layer.key(spec.batch)
+        fwd_name, bwd_name = f"{key}_fwd.hlo.txt", f"{key}_bwd.hlo.txt"
+        if key not in emitted:  # residual blocks share one artifact pair
+            fwd_text, bwd_text = lower_layer(layer, spec.batch)
+            with open(os.path.join(out_dir, fwd_name), "w") as f:
+                f.write(fwd_text)
+            with open(os.path.join(out_dir, bwd_name), "w") as f:
+                f.write(bwd_text)
+            emitted[key] = True
+            print(f"  lowered {key} (fwd {len(fwd_text)}B, bwd {len(bwd_text)}B)")
+        layers.append(
+            {
+                "kind": layer.kind,
+                "d_in": layer.d_in,
+                "d_out": layer.d_out,
+                "fwd": fwd_name,
+                "bwd": bwd_name,
+            }
+        )
+
+    loss_name = f"xent_{spec.batch}x{spec.classes}.hlo.txt"
+    with open(os.path.join(out_dir, loss_name), "w") as f:
+        f.write(lower_loss(spec.batch, spec.classes))
+    print(f"  lowered {loss_name}")
+
+    eval_name = f"eval_{spec.name}.hlo.txt"
+    with open(os.path.join(out_dir, eval_name), "w") as f:
+        f.write(lower_eval(spec))
+    print(f"  lowered {eval_name}")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "fingerprint": fp,
+        "model": spec.name,
+        "batch": spec.batch,
+        "d_in": spec.d_in,
+        "hidden": spec.hidden,
+        "blocks": spec.blocks,
+        "classes": spec.classes,
+        "param_count": spec.param_count(),
+        "layers": layers,
+        "loss": loss_name,
+        "eval": eval_name,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({spec.param_count()} params, fp {fp})")
+    return manifest
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="small", choices=sorted(M.CONFIGS))
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--batch", type=int, help="override mini-batch size")
+    args = p.parse_args(argv)
+    spec = M.CONFIGS[args.config]
+    if args.batch:
+        spec = M.ModelSpec(
+            spec.name, args.batch, spec.d_in, spec.hidden, spec.blocks, spec.classes
+        )
+    build(spec, args.out_dir, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

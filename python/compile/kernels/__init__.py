@@ -1,0 +1,25 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+Every kernel lowers with interpret=True (plain HLO, runnable on the CPU
+PJRT plugin used by the rust runtime) and has a pure-jnp oracle in ref.py.
+"""
+from .fused_dense import fused_dense, fused_dense_bwd, relu_mask_bwd
+from .matmul import matmul, matmul_nt, matmul_tn, pick_block, vmem_bytes
+from .softmax_xent import softmax_xent
+from .ref import KIND_LINEAR, KIND_RELU, KIND_RESIDUAL, KINDS
+
+__all__ = [
+    "fused_dense",
+    "fused_dense_bwd",
+    "relu_mask_bwd",
+    "matmul",
+    "matmul_nt",
+    "matmul_tn",
+    "pick_block",
+    "vmem_bytes",
+    "softmax_xent",
+    "KIND_LINEAR",
+    "KIND_RELU",
+    "KIND_RESIDUAL",
+    "KINDS",
+]

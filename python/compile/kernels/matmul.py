@@ -1,0 +1,127 @@
+"""Tiled Pallas matmul kernels (L1) — the compute hot-spot of the paper.
+
+Three variants cover the whole training data-flow:
+
+  matmul     C[m,n] = A[m,k] @ B[k,n]      forward dense transform
+  matmul_nt  C[m,n] = A[m,k] @ B[n,k].T    backward dX: g_z @ W.T
+  matmul_tn  C[m,n] = A[k,m].T @ B[k,n]    backward dW: x.T @ g_z
+
+All three share the canonical TPU accumulation pattern: a 3-D grid
+(m/bm, n/bn, k/bk); each (i, j) output tile stays resident in VMEM while the
+innermost grid axis sweeps the contraction dimension, so the MXU sees a
+stream of (bm,bk)x(bk,bn) tiles and HBM sees exactly one write per output
+tile.  The transposed variants move the transpose into the BlockSpec index
+map instead of materializing a transposed operand in HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+runs bit-for-bit.  Real-TPU tile-shape reasoning lives in DESIGN.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred MXU-aligned tile edge. pick_block() degrades gracefully for dims
+# that 128 does not divide (e.g. the paper's B = 194 mini-batch).
+DEFAULT_BLOCK = 128
+
+
+def pick_block(dim: int, want: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of `dim` that is <= `want`.
+
+    Pallas interpret-mode requires the grid to tile the array exactly; on a
+    real TPU we would pad to the MXU tile instead (see DESIGN.md
+    §Hardware-Adaptation). Always terminates: 1 divides everything.
+    """
+    if dim <= want:
+        return dim
+    for cand in range(want, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1  # unreachable
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, trans_a: bool, trans_b: bool, nk: int):
+    """Shared accumulate kernel. o_ref accumulates in f32 across the k axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if trans_a:
+        a = a.T
+    if trans_b:
+        b = b.T
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _tiled(a, b, *, trans_a: bool, trans_b: bool, bm=None, bn=None, bk=None):
+    if trans_a:
+        k_dim, m = a.shape
+    else:
+        m, k_dim = a.shape
+    if trans_b:
+        n, k2 = b.shape
+    else:
+        k2, n = b.shape
+    assert k_dim == k2, f"contraction mismatch: {a.shape} vs {b.shape}"
+
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k_dim)
+    grid = (m // bm, n // bn, k_dim // bk)
+
+    a_spec = (
+        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+        if trans_a
+        else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    )
+    b_spec = (
+        pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+        if trans_b
+        else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    )
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    kernel = functools.partial(
+        _mm_kernel, trans_a=trans_a, trans_b=trans_b, nk=grid[2]
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul(a, b, **blocks):
+    """C = A @ B with MXU-style tiling."""
+    return _tiled(a, b, trans_a=False, trans_b=False, **blocks)
+
+
+def matmul_nt(a, b, **blocks):
+    """C = A @ B.T — backward dX path (g_z[B,dout] @ W[din,dout].T)."""
+    return _tiled(a, b, trans_a=False, trans_b=True, **blocks)
+
+
+def matmul_tn(a, b, **blocks):
+    """C = A.T @ B — backward dW path (x[B,din].T @ g_z[B,dout])."""
+    return _tiled(a, b, trans_a=True, trans_b=False, **blocks)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one program instance (a, b, o tiles).
+
+    Used by DESIGN.md §Perf to check the double-buffered footprint stays
+    under the ~16 MiB/core budget of a TPU v4 — interpret mode gives no
+    hardware counters, so this estimate IS the profile for L1.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

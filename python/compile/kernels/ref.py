@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each Pallas kernel must match its
+oracle to float32 tolerance on randomized shapes (see python/tests).
+They are also what `jax.vjp` differentiates to validate the hand-written
+backward kernels against autodiff.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Layer kinds understood by the whole stack (mirrored in rust/src/nn/layer.rs
+# and runtime/manifest.rs -- keep the strings in sync).
+KIND_LINEAR = "linear"
+KIND_RELU = "relu"
+KIND_RESIDUAL = "residual"
+KINDS = (KIND_LINEAR, KIND_RELU, KIND_RESIDUAL)
+
+
+def dense_fwd_ref(x, w, b, kind):
+    """h_out for one dense layer.
+
+    linear:   x @ w + b
+    relu:     relu(x @ w + b)
+    residual: relu(x @ w + b) + x        (requires d_in == d_out)
+    """
+    z = jnp.dot(x, w) + b[None, :]
+    if kind == KIND_LINEAR:
+        return z
+    if kind == KIND_RELU:
+        return jnp.maximum(z, 0.0)
+    if kind == KIND_RESIDUAL:
+        return jnp.maximum(z, 0.0) + x
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def dense_bwd_ref(x, w, h_out, g_out, kind):
+    """(g_x, g_w, g_b) for one dense layer, recomputation-free.
+
+    The ReLU mask is reconstructed from the stored forward output so the
+    backward pass needs no pre-activation stash:
+      relu:     relu(z) = h_out            -> mask = h_out > 0
+      residual: relu(z) = h_out - x        -> mask = (h_out - x) > 0
+    """
+    if kind == KIND_LINEAR:
+        g_z = g_out
+    elif kind == KIND_RELU:
+        g_z = g_out * (h_out > 0.0).astype(g_out.dtype)
+    elif kind == KIND_RESIDUAL:
+        g_z = g_out * ((h_out - x) > 0.0).astype(g_out.dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    g_x = jnp.dot(g_z, w.T)
+    if kind == KIND_RESIDUAL:
+        g_x = g_x + g_out
+    g_w = jnp.dot(x.T, g_z)
+    g_b = jnp.sum(g_z, axis=0)
+    return g_x, g_w, g_b
+
+
+def softmax_xent_ref(logits, onehot):
+    """(mean_loss, g_logits) for softmax cross-entropy over a batch.
+
+    g_logits is the gradient of the MEAN loss (the 1/B is baked in, matching
+    eq. (4) of the paper; the |D_s|/N data-parallel scaling is applied by the
+    rust coordinator).
+    """
+    b = logits.shape[0]
+    m = jnp.max(logits, axis=1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=1, keepdims=True))
+    logp = shifted - lse
+    loss = -jnp.sum(onehot * logp) / b
+    g = (jnp.exp(logp) - onehot) / b
+    return loss, g
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b)
+
+
+def matmul_nt_ref(a, b):
+    """a @ b.T  (backward dX path: g_z[B,dout] @ W[din,dout].T)."""
+    return jnp.dot(a, b.T)
+
+
+def matmul_tn_ref(a, b):
+    """a.T @ b  (backward dW path: x[B,din].T @ g_z[B,dout])."""
+    return jnp.dot(a.T, b)
+
+
+def full_forward_ref(x, params, kinds):
+    """Compose a whole network from layer oracles. params: [(w, b), ...]."""
+    h = x
+    for (w, b), kind in zip(params, kinds):
+        h = dense_fwd_ref(h, w, b, kind)
+    return h
+
+
+def loss_of_params_ref(x, onehot, params, kinds):
+    logits = full_forward_ref(x, params, kinds)
+    loss, _ = softmax_xent_ref(logits, onehot)
+    return loss

@@ -1,0 +1,60 @@
+"""Fused softmax cross-entropy loss + gradient Pallas kernel (L1).
+
+One row-tiled pass computes, per mini-batch row:
+  max -> exp -> sum -> log-sum-exp -> loss and (softmax - onehot)/B
+so the logits tensor is read from HBM exactly once and both outputs
+(per-row loss and g_logits) are written exactly once.  The class dimension
+C stays whole inside the block (C = 10 here; padded to a lane-width tile on
+a real TPU — see DESIGN.md §Hardware-Adaptation).
+
+The 1/B mean scaling is baked into both outputs, matching eq. (4); the
+|D_s|/N data-parallel factor is applied by the rust coordinator (eq. (13a)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _xent_kernel(logits_ref, onehot_ref, loss_ref, g_ref, *, inv_b: float):
+    logits = logits_ref[...]
+    onehot = onehot_ref[...]
+    m = jnp.max(logits, axis=1, keepdims=True)
+    shifted = logits - m
+    e = jnp.exp(shifted)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    lse = jnp.log(s)
+    logp = shifted - lse
+    # per-row loss, pre-scaled by 1/B so a plain sum over rows is the mean
+    loss_ref[...] = -jnp.sum(onehot * logp, axis=1) * inv_b
+    g_ref[...] = (e / s - onehot) * inv_b
+
+
+def softmax_xent(logits, onehot, *, bm=None):
+    """(mean_loss, g_logits). logits, onehot: [B, C] f32."""
+    b, c = logits.shape
+    assert onehot.shape == (b, c)
+    bm = bm or pick_block(b)
+    grid = (b // bm,)
+    row_spec = pl.BlockSpec((bm, c), lambda i: (i, 0))
+    kernel = functools.partial(_xent_kernel, inv_b=1.0 / b)
+    loss_rows, g = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            row_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, c), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, onehot)
+    return jnp.sum(loss_rows), g

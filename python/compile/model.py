@@ -1,0 +1,161 @@
+"""L2: the paper's model as per-layer JAX forward/backward graphs.
+
+The paper treats the network as a chain of L parameterized blocks split into
+K modules (Section 3.2); the rust coordinator composes ANY K-way partition
+at run time from per-layer artifacts, so the unit of AOT compilation here is
+one layer (forward and backward) plus the fused loss head.  Every function
+calls the L1 Pallas kernels so the kernels lower into the same HLO the rust
+runtime executes.
+
+The reference model is a residual MLP standing in for the paper's ResNet-20
+(architecture substitution documented in DESIGN.md §3): CIFAR-shaped input,
+`d_in -> hidden (relu) -> [hidden -> hidden (residual)] * blocks ->
+classes (linear)`, softmax cross-entropy head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    KIND_LINEAR,
+    KIND_RELU,
+    KIND_RESIDUAL,
+    fused_dense,
+    fused_dense_bwd,
+    softmax_xent,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one dense layer (one AOT artifact pair)."""
+
+    kind: str
+    d_in: int
+    d_out: int
+
+    def key(self, batch: int) -> str:
+        return f"{self.kind}_{batch}x{self.d_in}x{self.d_out}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of the whole network for one mini-batch size."""
+
+    name: str
+    batch: int
+    d_in: int
+    hidden: int
+    blocks: int
+    classes: int
+
+    @property
+    def layers(self) -> List[LayerSpec]:
+        specs = [LayerSpec(KIND_RELU, self.d_in, self.hidden)]
+        specs += [
+            LayerSpec(KIND_RESIDUAL, self.hidden, self.hidden)
+            for _ in range(self.blocks)
+        ]
+        specs.append(LayerSpec(KIND_LINEAR, self.hidden, self.classes))
+        return specs
+
+    @property
+    def num_layers(self) -> int:
+        return self.blocks + 2
+
+    def param_count(self) -> int:
+        return sum(l.d_in * l.d_out + l.d_out for l in self.layers)
+
+
+# Named configurations. `paper` mirrors the CIFAR-10 geometry (3072-dim
+# inputs, B=194 as in Section 5); `small` is the 1-core bench default;
+# `tiny` keeps pytest and rust integration tests fast.
+CONFIGS = {
+    "paper": ModelSpec("paper", batch=194, d_in=3072, hidden=256, blocks=6, classes=10),
+    "small": ModelSpec("small", batch=194, d_in=256, hidden=128, blocks=4, classes=10),
+    "tiny": ModelSpec("tiny", batch=8, d_in=32, hidden=16, blocks=2, classes=10),
+}
+
+
+def layer_fwd_fn(kind: str):
+    """(x[B,din], w[din,dout], b[dout]) -> (h_out[B,dout],)"""
+
+    def fwd(x, w, b):
+        return (fused_dense(x, w, b, kind),)
+
+    return fwd
+
+
+def layer_bwd_fn(kind: str):
+    """(x, w, h_out, g_out) -> (g_x, g_w, g_b)
+
+    h_out is the stored forward output of THIS layer for the in-flight
+    mini-batch; the weights must be the snapshot used at forward time
+    (eq. (10): gradients are evaluated at w(tau + k - 1)) — the rust
+    staleness buffers guarantee that.
+    """
+
+    def bwd(x, w, h_out, g_out):
+        return fused_dense_bwd(x, w, h_out, g_out, kind)
+
+    return bwd
+
+
+def loss_grad_fn(logits, onehot):
+    """(logits[B,C], onehot[B,C]) -> (mean_loss[], g_logits[B,C])"""
+    return softmax_xent(logits, onehot)
+
+
+def full_forward(spec: ModelSpec, x, params: List[Tuple[jnp.ndarray, jnp.ndarray]]):
+    """Whole-network forward (used for the eval artifact and python tests)."""
+    h = x
+    for layer, (w, b) in zip(spec.layers, params):
+        (h,) = layer_fwd_fn(layer.kind)(h, w, b)
+    return h
+
+
+def eval_loss_fn(spec: ModelSpec):
+    """(x, onehot, *flat_params) -> (loss,) — one fused eval-loss artifact.
+
+    Lets the rust side report train/test loss with a single executable call
+    instead of L + 1 per-layer calls.
+    """
+
+    def fn(x, onehot, *flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(spec.num_layers)]
+        logits = full_forward(spec, x, params)
+        loss, _ = loss_grad_fn(logits, onehot)
+        return (loss,)
+
+    return fn
+
+
+def example_layer_args(spec: LayerSpec, batch: int):
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((batch, spec.d_in), f32)
+    w = jax.ShapeDtypeStruct((spec.d_in, spec.d_out), f32)
+    b = jax.ShapeDtypeStruct((spec.d_out,), f32)
+    h = jax.ShapeDtypeStruct((batch, spec.d_out), f32)
+    return {"fwd": (x, w, b), "bwd": (x, w, h, h)}
+
+
+def example_loss_args(batch: int, classes: int):
+    f32 = jnp.float32
+    l = jax.ShapeDtypeStruct((batch, classes), f32)
+    return (l, l)
+
+
+def example_eval_args(spec: ModelSpec):
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((spec.batch, spec.d_in), f32),
+        jax.ShapeDtypeStruct((spec.batch, spec.classes), f32),
+    ]
+    for layer in spec.layers:
+        args.append(jax.ShapeDtypeStruct((layer.d_in, layer.d_out), f32))
+        args.append(jax.ShapeDtypeStruct((layer.d_out,), f32))
+    return tuple(args)

@@ -1,0 +1,97 @@
+"""AOT path: HLO text artifacts + manifest are well-formed and cached.
+
+Validates the rust-side contract: every artifact referenced by the manifest
+exists, contains parseable HLO text (ENTRY + a tuple root), and re-running
+with an unchanged fingerprint is a no-op.
+"""
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    spec = M.CONFIGS["tiny"]
+    manifest = aot.build(spec, out)
+    return spec, out, manifest
+
+
+class TestManifest:
+    def test_fields(self, built):
+        spec, out, m = built
+        assert m["version"] == aot.MANIFEST_VERSION
+        assert m["model"] == "tiny"
+        assert m["batch"] == spec.batch
+        assert m["classes"] == spec.classes
+        assert m["param_count"] == spec.param_count()
+        assert len(m["layers"]) == spec.num_layers
+
+    def test_layer_entries_match_spec(self, built):
+        spec, _, m = built
+        for entry, layer in zip(m["layers"], spec.layers):
+            assert entry["kind"] == layer.kind
+            assert entry["d_in"] == layer.d_in
+            assert entry["d_out"] == layer.d_out
+
+    def test_manifest_is_valid_json_on_disk(self, built):
+        _, out, m = built
+        with open(os.path.join(out, "manifest.json")) as f:
+            assert json.load(f) == m
+
+
+class TestArtifacts:
+    def test_all_files_exist(self, built):
+        _, out, m = built
+        names = {e["fwd"] for e in m["layers"]} | {e["bwd"] for e in m["layers"]}
+        names |= {m["loss"], m["eval"]}
+        for name in names:
+            path = os.path.join(out, name)
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 0
+
+    def test_hlo_text_shape(self, built):
+        _, out, m = built
+        for name in [m["layers"][0]["fwd"], m["layers"][0]["bwd"], m["loss"]]:
+            with open(os.path.join(out, name)) as f:
+                text = f.read()
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+            # return_tuple=True => root is a tuple
+            assert "tuple(" in text.replace(" ", "").lower() or "tuple" in text
+
+    def test_residual_blocks_share_artifacts(self, built):
+        spec, _, m = built
+        res = [e for e in m["layers"] if e["kind"] == "residual"]
+        assert len(res) == spec.blocks >= 2
+        assert len({e["fwd"] for e in res}) == 1
+
+
+class TestCaching:
+    def test_rebuild_is_noop(self, built, capsys):
+        spec, out, m = built
+        again = aot.build(spec, out)
+        assert again == m
+        assert "up-to-date" in capsys.readouterr().out
+
+    def test_force_rebuilds(self, built):
+        spec, out, m = built
+        again = aot.build(spec, out, force=True)
+        assert again["fingerprint"] == m["fingerprint"]
+
+    def test_fingerprint_changes_with_spec(self):
+        a = aot.fingerprint(M.CONFIGS["tiny"])
+        b = aot.fingerprint(M.CONFIGS["small"])
+        assert a != b
+
+
+class TestBatchOverride:
+    def test_cli_batch_override(self, tmp_path):
+        out = str(tmp_path / "arts")
+        assert aot.main(["--config", "tiny", "--out-dir", out, "--batch", "4"]) == 0
+        with open(os.path.join(out, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["batch"] == 4

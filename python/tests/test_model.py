@@ -1,0 +1,139 @@
+"""L2 correctness: per-layer graphs compose to the right whole-model gradient.
+
+The decisive check: chaining layer_bwd through the network (exactly what the
+rust coordinator does across modules) reproduces jax.grad of the end-to-end
+reference loss.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _init_params(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for layer in spec.layers:
+        w = jnp.asarray(
+            rng.normal(scale=1.0 / np.sqrt(layer.d_in), size=(layer.d_in, layer.d_out)),
+            jnp.float32,
+        )
+        b = jnp.zeros((layer.d_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    spec = M.CONFIGS["tiny"]
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(spec.batch, spec.d_in)), jnp.float32)
+    onehot = jnp.eye(spec.classes, dtype=jnp.float32)[
+        rng.integers(0, spec.classes, spec.batch)
+    ]
+    return spec, x, onehot, _init_params(spec)
+
+
+class TestSpecs:
+    def test_layer_structure(self):
+        spec = M.CONFIGS["tiny"]
+        layers = spec.layers
+        assert layers[0].kind == "relu" and layers[-1].kind == "linear"
+        assert all(l.kind == "residual" for l in layers[1:-1])
+        assert len(layers) == spec.num_layers == spec.blocks + 2
+
+    def test_residual_dims_square(self):
+        for spec in M.CONFIGS.values():
+            for l in spec.layers:
+                if l.kind == "residual":
+                    assert l.d_in == l.d_out
+
+    def test_param_count(self):
+        spec = M.CONFIGS["tiny"]
+        want = sum(l.d_in * l.d_out + l.d_out for l in spec.layers)
+        assert spec.param_count() == want
+
+    def test_paper_config_matches_section5(self):
+        spec = M.CONFIGS["paper"]
+        assert spec.batch == 194  # Section 5 mini-batch size
+        assert spec.d_in == 32 * 32 * 3  # CIFAR-10 geometry
+        assert spec.classes == 10
+
+    def test_artifact_key_format(self):
+        l = M.LayerSpec("relu", 256, 128)
+        assert l.key(194) == "relu_194x256x128"
+
+
+class TestForward:
+    def test_full_forward_matches_ref(self, tiny):
+        spec, x, _, params = tiny
+        got = M.full_forward(spec, x, params)
+        want = ref.full_forward_ref(x, params, [l.kind for l in spec.layers])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_layer_fwd_shapes(self, tiny):
+        spec, x, _, params = tiny
+        h = x
+        for layer, (w, b) in zip(spec.layers, params):
+            (h,) = M.layer_fwd_fn(layer.kind)(h, w, b)
+            assert h.shape == (spec.batch, layer.d_out)
+
+
+class TestBackwardChain:
+    def test_chained_bwd_matches_autodiff(self, tiny):
+        """Per-layer bwd chained across the net == jax.grad of the ref loss."""
+        spec, x, onehot, params = tiny
+        kinds = [l.kind for l in spec.layers]
+
+        # forward, stashing inputs/outputs exactly like the staleness buffers
+        acts = [x]
+        for layer, (w, b) in zip(spec.layers, params):
+            (h,) = M.layer_fwd_fn(layer.kind)(acts[-1], w, b)
+            acts.append(h)
+
+        loss, g = M.loss_grad_fn(acts[-1], onehot)
+        grads = []
+        for i in reversed(range(len(params))):
+            w, b = params[i]
+            g, g_w, g_b = M.layer_bwd_fn(kinds[i])(acts[i], w, acts[i + 1], g)
+            grads.append((g_w, g_b))
+        grads.reverse()
+
+        want_loss = ref.loss_of_params_ref(x, onehot, params, kinds)
+        np.testing.assert_allclose(float(loss), float(want_loss), atol=1e-5)
+
+        want_grads = jax.grad(
+            lambda p: ref.loss_of_params_ref(x, onehot, p, kinds)
+        )(params)
+        for i, ((gw, gb), (gw_r, gb_r)) in enumerate(zip(grads, want_grads)):
+            np.testing.assert_allclose(
+                np.asarray(gw), np.asarray(gw_r), atol=1e-4, err_msg=f"g_w[{i}]"
+            )
+            np.testing.assert_allclose(
+                np.asarray(gb), np.asarray(gb_r), atol=1e-4, err_msg=f"g_b[{i}]"
+            )
+
+    def test_eval_loss_fn_matches_ref(self, tiny):
+        spec, x, onehot, params = tiny
+        flat = [t for wb in params for t in wb]
+        (loss,) = M.eval_loss_fn(spec)(x, onehot, *flat)
+        want = ref.loss_of_params_ref(
+            x, onehot, params, [l.kind for l in spec.layers]
+        )
+        np.testing.assert_allclose(float(loss), float(want), atol=1e-5)
+
+
+class TestExampleArgs:
+    def test_layer_args_shapes(self):
+        l = M.LayerSpec("relu", 6, 4)
+        args = M.example_layer_args(l, 3)
+        assert args["fwd"][0].shape == (3, 6)
+        assert args["bwd"][3].shape == (3, 4)
+
+    def test_eval_args_count(self):
+        spec = M.CONFIGS["tiny"]
+        args = M.example_eval_args(spec)
+        assert len(args) == 2 + 2 * spec.num_layers

@@ -1,0 +1,134 @@
+//! Shared figure-regeneration driver for benches/fig3.rs and fig4.rs:
+//! runs the paper's four methods on one dataset and emits the three-panel
+//! CSV set (loss-vs-iteration, loss-vs-time, δ-vs-iteration).
+
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{build_dataset, run_with, RunOutput};
+use crate::error::Result;
+use crate::runtime::NativeBackend;
+use crate::simclock::CostModel;
+use crate::util::csv::CsvWriter;
+
+/// Bench-scale default base config (overridable via env).
+pub fn bench_base(name: &str) -> ExperimentConfig {
+    let iters = std::env::var("SGS_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200);
+    ExperimentConfig {
+        name: name.into(),
+        iters,
+        model: crate::config::ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        batch: 48,
+        dataset_n: 12_000,
+        delta_every: 5,
+        eval_every: 100,
+        seed: 1717,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Run the four Section-5 methods and write the figure CSVs with the given
+/// path prefix (e.g. "bench_out/fig3"). Returns (label, output) pairs.
+pub fn run_four_methods(
+    base: &ExperimentConfig,
+    prefix: &str,
+) -> Result<Vec<(&'static str, RunOutput)>> {
+    let ds = build_dataset(base);
+    let backend = NativeBackend::new(base.model.layers(), base.batch);
+    let cm = CostModel::calibrate(&backend, 3);
+
+    let mut outs = Vec::new();
+    for (label, cfg) in ExperimentConfig::paper_methods(base) {
+        eprintln!("  running {label} (S={}, K={}) ...", cfg.s, cfg.k);
+        outs.push((label, run_with(cfg, &backend, &ds, Some(&cm))?));
+    }
+
+    // panel 1: loss vs iteration (smoothed)
+    let mut w = CsvWriter::create(
+        format!("{prefix}_loss_iter.csv"),
+        &["iter", "centralized", "decoupled", "data_parallel", "distributed"],
+    )?;
+    let series: Vec<Vec<(usize, f64, f64)>> = outs
+        .iter()
+        .map(|(_, o)| o.recorder.loss_series(10, 25))
+        .collect();
+    let rows = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    for i in 0..rows {
+        w.row(&[
+            series[0][i].0 as f64,
+            series[0][i].1,
+            series[1][i].1,
+            series[2][i].1,
+            series[3][i].1,
+        ])?;
+    }
+    w.flush()?;
+
+    // panel 2: loss vs modelled wall time
+    let mut w = CsvWriter::create(
+        format!("{prefix}_loss_time.csv"),
+        &["method_id", "time_s", "loss"],
+    )?;
+    for (mid, (_, o)) in outs.iter().enumerate() {
+        for (_, loss, time_s) in o.recorder.loss_series(10, 25) {
+            w.row(&[mid as f64, time_s, loss])?;
+        }
+    }
+    w.flush()?;
+
+    // panel 3: consensus error δ(t) for the S>1 methods
+    let mut w = CsvWriter::create(
+        format!("{prefix}_delta.csv"),
+        &["iter", "data_parallel", "distributed"],
+    )?;
+    let dp: Vec<(usize, f64)> = outs[2]
+        .1
+        .recorder
+        .records
+        .iter()
+        .filter_map(|r| r.delta.map(|d| (r.t, d)))
+        .collect();
+    let dist: Vec<(usize, f64)> = outs[3]
+        .1
+        .recorder
+        .records
+        .iter()
+        .filter_map(|r| r.delta.map(|d| (r.t, d)))
+        .collect();
+    for ((t, a), (_, b)) in dp.iter().zip(&dist) {
+        w.row(&[*t as f64, *a, *b])?;
+    }
+    w.flush()?;
+
+    Ok(outs)
+}
+
+/// Print the method summary table a figure bench ends with.
+pub fn report_methods(title: &str, outs: &[(&'static str, RunOutput)]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<16} {:>11} {:>12} {:>12} {:>10}",
+        "method", "iter(ms)", "final loss", "eval loss", "δ"
+    );
+    for (label, o) in outs {
+        let s = o.recorder.summary();
+        println!(
+            "{:<16} {:>11.3} {:>12.4} {:>12.4} {:>10.2e}",
+            label,
+            o.iter_time_s * 1e3,
+            s.final_train_loss.unwrap_or(f64::NAN),
+            s.final_eval_loss.unwrap_or(f64::NAN),
+            o.final_delta
+        );
+    }
+}
+
+/// Ensure a parent dir exists for a prefix like "bench_out/fig3".
+pub fn ensure_prefix_dir(prefix: &str) {
+    if let Some(parent) = Path::new(prefix).parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+}

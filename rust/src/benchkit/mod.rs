@@ -1,0 +1,138 @@
+//! In-house bench harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that use
+//! [`BenchSet`] to time closures with warmup, print a mean±std table, and
+//! write CSV series under `bench_out/` for EXPERIMENTS.md.
+
+pub mod figures;
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, stddev};
+
+/// One timed result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stddev(&self.samples)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+}
+
+/// Collects named timings and renders a table.
+pub struct BenchSet {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    pub fn new(title: impl Into<String>) -> BenchSet {
+        BenchSet {
+            title: title.into(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` with `warmup` discarded runs and `samples` recorded ones.
+    pub fn bench<T>(
+        &mut self,
+        name: impl Into<String>,
+        warmup: usize,
+        samples: usize,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.into(),
+            samples: times,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured sample set (e.g. modelled times).
+    pub fn record(&mut self, name: impl Into<String>, samples: Vec<f64>) {
+        self.results.push(BenchResult {
+            name: name.into(),
+            samples,
+        });
+    }
+
+    /// Render the table to stdout.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<40} {:>12} {:>12} {:>12}",
+            "bench", "mean", "p50", "std"
+        );
+        for r in &self.results {
+            println!(
+                "{:<40} {:>12} {:>12} {:>12}",
+                r.name,
+                humanize(r.mean_s()),
+                humanize(r.p50_s()),
+                humanize(r.std_s()),
+            );
+        }
+    }
+}
+
+/// Human-friendly seconds.
+pub fn humanize(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Standard output directory for bench CSVs.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("bench_out");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut set = BenchSet::new("t");
+        let r = set.bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(2.0).ends_with(" s"));
+        assert!(humanize(2e-3).ends_with(" ms"));
+        assert!(humanize(2e-6).ends_with(" us"));
+        assert!(humanize(2e-9).ends_with(" ns"));
+    }
+}

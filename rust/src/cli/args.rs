@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `sgs <command> [--flag value]... [--switch]...`
+//! Flags are declared by the command handlers via typed getters; unknown
+//! flags are an error (catches typos).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            return Err(Error::Cli("missing command".into()));
+        }
+        let command = argv[0].clone();
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Cli(format!("expected --flag, got {arg:?}")))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".into()); // bare switch
+                i += 1;
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            consumed: Default::default(),
+        })
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().insert(name.to_string());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} wants an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} wants a number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(name, default as usize)? as u64)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Call after all getters: errors on flags nobody consumed.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Cli(format!("unknown flags: {unknown:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv("train --iters 100 --s 4 --verbose --lr const:0.1")).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 100);
+        assert_eq!(a.get_usize("s", 0).unwrap(), 4);
+        assert_eq!(a.get("lr"), Some("const:0.1"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("k", 2).unwrap(), 2);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        let a = Args::parse(&argv("train --bogus 1")).unwrap();
+        let _ = a.get("iters");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let a = Args::parse(&argv("train --iters banana")).unwrap();
+        assert!(a.get_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&argv("train oops")).is_err());
+        assert!(Args::parse(&[]).is_err());
+    }
+}

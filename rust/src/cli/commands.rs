@@ -1,0 +1,311 @@
+//! CLI commands: the launcher surface of the framework.
+//!
+//! * `train`     — run one (S,K) experiment, write CSV
+//! * `compare`   — run the paper's four Section-5 methods side by side
+//! * `describe`  — grid/topology/spectral report for a config
+//! * `trace`     — print the Fig. 1 pipeline schedule
+//! * `calibrate` — measure the cost model and print the timing table
+
+use std::path::{Path, PathBuf};
+
+use crate::cli::args::Args;
+use crate::config::{ExperimentConfig, ModelShape};
+use crate::coordinator::{build_dataset, run_with, AgentGrid};
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::runtime::{make_backend, BackendKind};
+use crate::simclock::{method_iter_s, CostModel};
+use crate::staleness::Schedule;
+use crate::trainer::LrSchedule;
+
+pub const USAGE: &str = "\
+sgs — Distributed Deep Learning using Stochastic Gradient Staleness
+
+USAGE: sgs <command> [--flag value]...
+
+COMMANDS
+  train      run one experiment            (--s --k --iters --lr --topology
+             --alpha --batch --seed --backend native|xla --artifacts DIR
+             --model tiny|small|paper --opt sgd|momentum:B|nesterov:B
+             --mode fd|dbp --out CSV --clock)
+  compare    run the paper's four methods  (same flags; --out-dir DIR)
+  describe   print grid + spectral report  (--s --k --topology --alpha)
+  trace      print the Fig. 1 schedule     (--k --iters)
+  calibrate  cost model + timing table     (--backend --artifacts --model)
+  help       this text
+";
+
+fn model_of(name: &str) -> Result<ModelShape> {
+    match name {
+        "tiny" => Ok(ModelShape::tiny()),
+        "small" => Ok(ModelShape::small()),
+        "paper" => Ok(ModelShape::paper()),
+        _ => Err(crate::error::Error::Cli(format!(
+            "unknown model {name:?} (want tiny|small|paper)"
+        ))),
+    }
+}
+
+/// Assemble an ExperimentConfig from flags (shared by train/compare).
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = ExperimentConfig::load(Path::new(path))?;
+    }
+    cfg.s = args.get_usize("s", cfg.s)?;
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.iters = args.get_usize("iters", cfg.iters)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.dataset_n = args.get_usize("dataset-n", cfg.dataset_n)?;
+    cfg.delta_every = args.get_usize("delta-every", cfg.delta_every)?;
+    cfg.gossip_rounds = args.get_usize("gossip-rounds", cfg.gossip_rounds)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.model = model_of(args.get_or("model", "small"))?;
+    cfg.topology = Topology::parse(args.get_or("topology", &cfg.topology.name()))?;
+    if let Some(a) = args.get("alpha") {
+        cfg.alpha = Some(a.parse().map_err(|_| {
+            crate::error::Error::Cli(format!("--alpha wants a number, got {a:?}"))
+        })?);
+    }
+    if let Some(lr) = args.get("lr") {
+        cfg.lr = LrSchedule::parse(lr)?;
+    }
+    if let Some(opt) = args.get("opt") {
+        cfg.optimizer = crate::trainer::OptimizerKind::parse(opt)?;
+    }
+    if let Some(mode) = args.get("mode") {
+        cfg.mode = crate::staleness::PipelineMode::parse(mode)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn backend_flags(args: &Args) -> Result<(BackendKind, PathBuf)> {
+    let kind = BackendKind::parse(args.get_or("backend", "native"))?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    Ok((kind, artifacts))
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let (kind, artifacts) = backend_flags(args)?;
+    let out_csv = args.get("out").map(PathBuf::from);
+    let clock = args.get_bool("clock");
+    args.finish()?;
+
+    println!(
+        "train: {} S={} K={} topology={} backend={} iters={}",
+        cfg.name,
+        cfg.s,
+        cfg.k,
+        cfg.topology.name(),
+        kind.as_str(),
+        cfg.iters
+    );
+    let ds = build_dataset(&cfg);
+    let backend = make_backend(kind, &artifacts, cfg.model.layers(), cfg.batch)?;
+    let cm = clock.then(|| CostModel::calibrate(backend.as_ref(), 3));
+    let out = run_with(cfg, backend.as_ref(), &ds, cm.as_ref())?;
+
+    let s = out.recorder.summary();
+    println!(
+        "done: final train loss {:?}, eval loss {:?}, acc {:?}, delta {:.3e}, gamma {:.4}",
+        s.final_train_loss, s.final_eval_loss, s.final_eval_acc, out.final_delta, out.gamma
+    );
+    if let Some(path) = out_csv {
+        out.recorder.write_csv(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+pub fn cmd_compare(args: &Args) -> Result<()> {
+    let base = config_from_args(args)?;
+    let (kind, artifacts) = backend_flags(args)?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "bench_out"));
+    args.finish()?;
+
+    let ds = build_dataset(&base);
+    let backend = make_backend(kind, &artifacts, base.model.layers(), base.batch)?;
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
+
+    println!(
+        "{:<16} {:>6} {:>6} {:>12} {:>12} {:>12} {:>10}",
+        "method", "S", "K", "iter_ms", "final_loss", "eval_loss", "delta"
+    );
+    for (label, cfg) in ExperimentConfig::paper_methods(&base) {
+        let out = run_with(cfg.clone(), backend.as_ref(), &ds, Some(&cm))?;
+        let s = out.recorder.summary();
+        println!(
+            "{:<16} {:>6} {:>6} {:>12.3} {:>12.4} {:>12.4} {:>10.2e}",
+            label,
+            cfg.s,
+            cfg.k,
+            out.iter_time_s * 1e3,
+            s.final_train_loss.unwrap_or(f64::NAN),
+            s.final_eval_loss.unwrap_or(f64::NAN),
+            out.final_delta,
+        );
+        std::fs::create_dir_all(&out_dir)?;
+        out.recorder
+            .write_csv(out_dir.join(format!("compare_{label}.csv")))?;
+    }
+    println!("CSVs in {}", out_dir.display());
+    Ok(())
+}
+
+pub fn cmd_describe(args: &Args) -> Result<()> {
+    let s = args.get_usize("s", 4)?;
+    let k = args.get_usize("k", 2)?;
+    let topology = Topology::parse(args.get_or("topology", "ring"))?;
+    let alpha = match args.get("alpha") {
+        Some(a) => Some(a.parse().map_err(|_| {
+            crate::error::Error::Cli(format!("--alpha wants a number, got {a:?}"))
+        })?),
+        None => None,
+    };
+    args.finish()?;
+
+    let grid = AgentGrid::build(s, k, topology, alpha)?;
+    grid.check_assumption_3_1()?;
+    println!("agent grid: S={s} data-groups x K={k} model-groups = {} agents", s * k);
+    println!("model-group topology: {} (alpha = {:.4})", topology.name(), grid.alpha);
+    println!("G^comm: {} edges, diameter {:?}", grid.total_edges(), grid.comm.diameter());
+    println!("gamma = rho(P - 11^T/S) = {:.6}  (Lemma 2.1: < 1)", grid.gamma());
+    println!(
+        "mixing: disagreement x0.01 in ~{} gossip steps",
+        crate::graph::mixing_time_estimate(grid.gamma(), 100.0)
+    );
+    let sched = Schedule::new(k);
+    println!("staleness per module: {:?}", (0..k).map(|m| sched.staleness(m)).collect::<Vec<_>>());
+    println!("warmup iterations: {}", sched.warmup_iters());
+    println!("Assumption 3.1: OK");
+    Ok(())
+}
+
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let k = args.get_usize("k", 3)?;
+    let iters = args.get_usize("iters", 12)?;
+    args.finish()?;
+
+    let sched = Schedule::new(k);
+    println!("pipeline schedule, K={k} (Fig. 1): F<b> = forward batch b, B<b> = backward batch b");
+    print!("{:<10}", "module\\t");
+    for t in 0..iters {
+        print!("{t:>12}");
+    }
+    println!();
+    for m in 0..k {
+        print!("{m:<10}");
+        for t in 0..iters as i64 {
+            let (f, b) = sched.trace_cell(t, m);
+            let cell = match (f, b) {
+                (Some(f), Some(b)) => format!("F{f}/B{b}"),
+                (Some(f), None) => format!("F{f}"),
+                (None, Some(b)) => format!("B{b}"),
+                (None, None) => "-".into(),
+            };
+            print!("{cell:>12}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+pub fn cmd_calibrate(args: &Args) -> Result<()> {
+    let (kind, artifacts) = backend_flags(args)?;
+    let model = model_of(args.get_or("model", "small"))?;
+    let batch = args.get_usize("batch", 194)?;
+    let reps = args.get_usize("reps", 5)?;
+    args.finish()?;
+
+    let backend = make_backend(kind, &artifacts, model.layers(), batch)?;
+    let cm = CostModel::calibrate(backend.as_ref(), reps);
+    println!("cost model ({} backend, batch {batch}):", kind.as_str());
+    for (i, (f, b)) in cm.fwd_s.iter().zip(&cm.bwd_s).enumerate() {
+        println!("  layer {i}: fwd {:.3} ms, bwd {:.3} ms", f * 1e3, b * 1e3);
+    }
+    println!("  loss head: {:.3} ms", cm.loss_s * 1e3);
+    println!("\ntiming table (per mini-batch iteration):");
+    println!("{:<22} {:>12} {:>10}", "method", "iter", "speedup");
+    let base = method_iter_s(&cm, 1, 1, 1);
+    for (label, s, k, nb) in [
+        ("centralized (1,1)", 1usize, 1usize, 1usize),
+        ("decoupled (1,2)", 1, 2, 1),
+        ("data-parallel (4,1)", 4, 1, 3),
+        ("distributed (4,2)", 4, 2, 3),
+    ] {
+        let t = method_iter_s(&cm, s, k, nb);
+        println!(
+            "{:<22} {:>9.3} ms {:>9.2}x",
+            label,
+            t * 1e3,
+            base / t
+        );
+    }
+    Ok(())
+}
+
+pub fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "describe" => cmd_describe(&args),
+        "trace" => cmd_trace(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(crate::error::Error::Cli(format!(
+            "unknown command {other:?}\n{USAGE}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn describe_runs() {
+        dispatch(&argv("describe --s 4 --k 2 --topology ring")).unwrap();
+    }
+
+    #[test]
+    fn trace_runs() {
+        dispatch(&argv("trace --k 3 --iters 8")).unwrap();
+    }
+
+    #[test]
+    fn train_tiny_native() {
+        dispatch(&argv(
+            "train --model tiny --s 2 --k 2 --iters 10 --batch 8 --dataset-n 200 \
+             --eval-every 5 --delta-every 5 --lr const:0.1",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn config_from_args_respects_flags() {
+        let a = Args::parse(&argv(
+            "train --s 3 --k 2 --iters 50 --batch 16 --dataset-n 600 --model tiny --topology star",
+        ))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!((cfg.s, cfg.k, cfg.iters, cfg.batch), (3, 2, 50, 16));
+        assert_eq!(cfg.topology, Topology::Star);
+        assert_eq!(cfg.model, ModelShape::tiny());
+    }
+}

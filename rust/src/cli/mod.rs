@@ -1,0 +1,7 @@
+//! Command-line launcher: argument parsing + command handlers.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::{dispatch, USAGE};

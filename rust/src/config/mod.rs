@@ -1,0 +1,271 @@
+//! Experiment configuration: one struct describes everything a run needs —
+//! the (S, K) grid, graph topology, model geometry, data source, step-size
+//! strategy, and instrumentation cadence. JSON round-trip for the launcher.
+
+use crate::error::{Error, Result};
+use crate::graph::Topology;
+use crate::staleness::PipelineMode;
+use crate::trainer::lr::LrSchedule;
+use crate::trainer::opt::OptimizerKind;
+use crate::util::json::Json;
+
+/// Model geometry (mirrors python/compile/model.py CONFIGS).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShape {
+    pub d_in: usize,
+    pub hidden: usize,
+    pub blocks: usize,
+    pub classes: usize,
+}
+
+impl ModelShape {
+    pub fn n_layers(&self) -> usize {
+        self.blocks + 2
+    }
+
+    /// The `small` AOT config (bench default).
+    pub fn small() -> ModelShape {
+        ModelShape { d_in: 256, hidden: 128, blocks: 4, classes: 10 }
+    }
+
+    /// The `tiny` AOT config (tests).
+    pub fn tiny() -> ModelShape {
+        ModelShape { d_in: 32, hidden: 16, blocks: 2, classes: 10 }
+    }
+
+    /// The `paper` CIFAR-10 geometry.
+    pub fn paper() -> ModelShape {
+        ModelShape { d_in: 3072, hidden: 256, blocks: 6, classes: 10 }
+    }
+
+    pub fn layers(&self) -> Vec<crate::nn::LayerShape> {
+        crate::nn::resmlp_layers(self.d_in, self.hidden, self.blocks, self.classes)
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// number of data-groups (S) and model-groups (K)
+    pub s: usize,
+    pub k: usize,
+    /// model-group gossip topology (Assumption 3.1.2: must be connected)
+    pub topology: Topology,
+    /// Xiao–Boyd α; None → max_safe_alpha of the graph
+    pub alpha: Option<f64>,
+    /// gossip rounds per iteration (r mixing steps ⇒ contraction γ^r —
+    /// trades communication for a tighter consensus floor)
+    pub gossip_rounds: usize,
+    pub model: ModelShape,
+    pub batch: usize,
+    pub iters: usize,
+    pub lr: LrSchedule,
+    /// stale-gradient update rule (paper: plain SGD; momentum = extension)
+    pub optimizer: OptimizerKind,
+    /// fully decoupled (paper) vs backward-unlocked (Huo et al. baseline)
+    pub mode: PipelineMode,
+    pub seed: u64,
+    /// dataset size (synthetic unless CIFAR10_DIR is set and fits)
+    pub dataset_n: usize,
+    /// record δ(t) every this many iterations (0 = never)
+    pub delta_every: usize,
+    /// evaluate averaged weights on the probe batch every this many (0 = never)
+    pub eval_every: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            s: 4,
+            k: 2,
+            topology: Topology::Ring,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape::small(),
+            batch: 194,
+            iters: 2000,
+            lr: LrSchedule::strategy_1(),
+            optimizer: OptimizerKind::Sgd,
+            mode: PipelineMode::FullyDecoupled,
+            seed: 0,
+            dataset_n: 50_000,
+            delta_every: 10,
+            eval_every: 50,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's four Section-5 methods at a given iteration budget.
+    /// Returns (label, config) in the paper's order.
+    pub fn paper_methods(base: &ExperimentConfig) -> Vec<(&'static str, ExperimentConfig)> {
+        let mk = |name: &str, s: usize, k: usize| {
+            let mut c = base.clone();
+            c.name = name.into();
+            c.s = s;
+            c.k = k;
+            c
+        };
+        vec![
+            ("centralized", mk("centralized", 1, 1)),
+            ("decoupled", mk("decoupled", 1, 2)),
+            ("data_parallel", mk("data_parallel", 4, 1)),
+            ("distributed", mk("distributed", 4, 2)),
+        ]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.s == 0 || self.k == 0 {
+            return Err(Error::Config("S and K must be >= 1".into()));
+        }
+        if self.k > self.model.n_layers() {
+            return Err(Error::Config(format!(
+                "K={} exceeds layer count {}",
+                self.k,
+                self.model.n_layers()
+            )));
+        }
+        if self.batch == 0 || self.iters == 0 {
+            return Err(Error::Config("batch and iters must be >= 1".into()));
+        }
+        if self.gossip_rounds == 0 {
+            return Err(Error::Config("gossip_rounds must be >= 1".into()));
+        }
+        if self.dataset_n / self.s < self.batch {
+            return Err(Error::Config(format!(
+                "shard size {} < batch {}",
+                self.dataset_n / self.s,
+                self.batch
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str())
+            .set("s", self.s)
+            .set("k", self.k)
+            .set("topology", self.topology.name())
+            .set("d_in", self.model.d_in)
+            .set("hidden", self.model.hidden)
+            .set("blocks", self.model.blocks)
+            .set("classes", self.model.classes)
+            .set("batch", self.batch)
+            .set("iters", self.iters)
+            .set("lr", self.lr.describe())
+            .set("optimizer", self.optimizer.describe())
+            .set("mode", self.mode.describe())
+            // string-encoded: u64 seeds above 2^53 don't survive f64 JSON numbers
+            .set("seed", format!("{}", self.seed))
+            .set("dataset_n", self.dataset_n)
+            .set("delta_every", self.delta_every)
+            .set("eval_every", self.eval_every)
+            .set("gossip_rounds", self.gossip_rounds);
+        if let Some(a) = self.alpha {
+            j.set("alpha", a);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let cfg = ExperimentConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            s: j.get("s")?.as_usize()?,
+            k: j.get("k")?.as_usize()?,
+            topology: Topology::parse(j.get("topology")?.as_str()?)?,
+            alpha: match j.opt("alpha") {
+                Some(a) => Some(a.as_f64()?),
+                None => None,
+            },
+            gossip_rounds: match j.opt("gossip_rounds") {
+                Some(g) => g.as_usize()?,
+                None => 1,
+            },
+            model: ModelShape {
+                d_in: j.get("d_in")?.as_usize()?,
+                hidden: j.get("hidden")?.as_usize()?,
+                blocks: j.get("blocks")?.as_usize()?,
+                classes: j.get("classes")?.as_usize()?,
+            },
+            batch: j.get("batch")?.as_usize()?,
+            iters: j.get("iters")?.as_usize()?,
+            lr: LrSchedule::parse(j.get("lr")?.as_str()?)?,
+            // optional for older config files
+            optimizer: match j.opt("optimizer") {
+                Some(o) => OptimizerKind::parse(o.as_str()?)?,
+                None => OptimizerKind::Sgd,
+            },
+            mode: match j.opt("mode") {
+                Some(m) => PipelineMode::parse(m.as_str()?)?,
+                None => PipelineMode::FullyDecoupled,
+            },
+            seed: match j.get("seed")? {
+                Json::Str(s) => s
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad seed {s:?}")))?,
+                other => other.as_f64()? as u64,
+            },
+            dataset_n: j.get("dataset_n")?.as_usize()?,
+            delta_every: j.get("delta_every")?.as_usize()?,
+            eval_every: j.get("eval_every")?.as_usize()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ExperimentConfig> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.alpha = Some(0.2);
+        cfg.lr = LrSchedule::strategy_2(1000);
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.s, cfg.s);
+        assert_eq!(back.alpha, cfg.alpha);
+        assert_eq!(back.lr, cfg.lr);
+        assert_eq!(back.topology, cfg.topology);
+    }
+
+    #[test]
+    fn paper_methods_are_the_four_sk_points() {
+        let methods = ExperimentConfig::paper_methods(&ExperimentConfig::default());
+        let points: Vec<(usize, usize)> = methods.iter().map(|(_, c)| (c.s, c.k)).collect();
+        assert_eq!(points, vec![(1, 1), (1, 2), (4, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.k = 99;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.s = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.dataset_n = 300;
+        c.s = 4;
+        c.batch = 194;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Consensus (disagreement) metric — eq. (22):
+//! δ(t) = max_{1≤l≤L, 1≤s≤S} ‖w_{s,l}(t) − (1/S)Σ_r w_{r,l}(t)‖₂.
+
+use crate::nn::layer::LayerShape;
+use crate::tensor::Tensor;
+
+/// δ(t) over per-group parameter sets laid out as [group][layer](W, b).
+/// The per-layer vector in eq. (22) is the concatenated (W, b) of layer l.
+pub fn consensus_error(params: &[Vec<(Tensor, Tensor)>]) -> f64 {
+    let s = params.len();
+    assert!(s > 0);
+    let n_layers = params[0].len();
+    let mut worst: f64 = 0.0;
+    for l in 0..n_layers {
+        // mean of layer l across groups
+        let mut mean_w = params[0][l].0.clone();
+        let mut mean_b = params[0][l].1.clone();
+        for rep in &params[1..] {
+            mean_w.axpy(1.0, &rep[l].0);
+            mean_b.axpy(1.0, &rep[l].1);
+        }
+        mean_w.scale(1.0 / s as f32);
+        mean_b.scale(1.0 / s as f32);
+        for rep in params {
+            let mut dw = rep[l].0.clone();
+            dw.axpy(-1.0, &mean_w);
+            let mut db = rep[l].1.clone();
+            db.axpy(-1.0, &mean_b);
+            let norm = (dw.norm2().powi(2) + db.norm2().powi(2)).sqrt();
+            worst = worst.max(norm);
+        }
+    }
+    worst
+}
+
+/// Same metric over flat per-group parameter vectors, splitting at layer
+/// boundaries given by `layers` (the gossip layer works on flats).
+pub fn consensus_error_flat(flats: &[Tensor], layers: &[LayerShape]) -> f64 {
+    let s = flats.len();
+    assert!(s > 0);
+    let mut worst: f64 = 0.0;
+    let mut off = 0usize;
+    for l in layers {
+        let len = l.param_count();
+        // mean over groups of this layer's slice
+        let mut mean = vec![0.0f64; len];
+        for f in flats {
+            for (m, &v) in mean.iter_mut().zip(&f.data()[off..off + len]) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= s as f64;
+        }
+        for f in flats {
+            let norm: f64 = f.data()[off..off + len]
+                .iter()
+                .zip(&mean)
+                .map(|(&v, &m)| {
+                    let d = v as f64 - m;
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt();
+            worst = worst.max(norm);
+        }
+        off += len;
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layer::{LayerKind, LayerShape};
+
+    fn layer_params(v: f32) -> Vec<(Tensor, Tensor)> {
+        vec![(
+            Tensor::from_vec(&[2, 1], vec![v, v]).unwrap(),
+            Tensor::from_vec(&[1], vec![0.0]).unwrap(),
+        )]
+    }
+
+    #[test]
+    fn identical_replicas_have_zero_error() {
+        let params = vec![layer_params(1.0), layer_params(1.0), layer_params(1.0)];
+        assert_eq!(consensus_error(&params), 0.0);
+    }
+
+    #[test]
+    fn known_two_group_case() {
+        // groups at w=0 and w=2 (two entries each); mean 1, deviation
+        // norm = sqrt(1+1) = sqrt(2) for both
+        let params = vec![layer_params(0.0), layer_params(2.0)];
+        assert!((consensus_error(&params) - 2.0f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flat_matches_structured() {
+        use crate::nn::init::{flatten_params, init_params};
+        use crate::util::rng::Pcg32;
+        let layers = vec![
+            LayerShape::new(LayerKind::Relu, 3, 4).unwrap(),
+            LayerShape::new(LayerKind::Linear, 4, 2).unwrap(),
+        ];
+        let mut rng = Pcg32::new(7);
+        let groups: Vec<Vec<(Tensor, Tensor)>> =
+            (0..3).map(|_| init_params(&mut rng, &layers)).collect();
+        let flats: Vec<Tensor> = groups.iter().map(|g| flatten_params(g)).collect();
+        let a = consensus_error(&groups);
+        let b = consensus_error_flat(&flats, &layers);
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn max_is_over_layers_and_groups() {
+        // make one layer of one group far from consensus
+        let mut groups = vec![
+            vec![
+                (Tensor::zeros(&[2, 1]), Tensor::zeros(&[1])),
+                (Tensor::zeros(&[1, 1]), Tensor::zeros(&[1])),
+            ];
+            3
+        ];
+        groups[2][1].0.data_mut()[0] = 9.0; // mean 3, deviation 6
+        let err = consensus_error(&groups);
+        assert!((err - 6.0).abs() < 1e-6, "{err}");
+    }
+}

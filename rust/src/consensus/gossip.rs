@@ -1,0 +1,145 @@
+//! Gossip mixing (eq. (13b)): ŵ_{s,k}(t+1) = Σ_{r∈N_{s,k}} P_sr û_{r,k}(t).
+//!
+//! One [`GossipMixer`] serves one model-group k (all S agents holding
+//! replicas of module k's weights). The mix is a sparse weighted sum over
+//! graph neighbours — only nonzero P entries are touched, so cost is
+//! O(|E| · params), and scratch buffers are reused across iterations
+//! (no allocation on the hot path; see DESIGN.md §Perf).
+
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+
+/// Reusable mixer for S replicas of one flat parameter vector.
+pub struct GossipMixer {
+    /// sparse rows of P: for each s, the (r, P_sr) pairs with P_sr != 0
+    rows: Vec<Vec<(usize, f64)>>,
+    scratch: Vec<Tensor>,
+}
+
+impl GossipMixer {
+    /// Build from a mixing matrix (validated elsewhere — see
+    /// `graph::weights`). `param_len` sizes the scratch buffers.
+    pub fn new(p: &Mat, param_len: usize) -> GossipMixer {
+        assert_eq!(p.rows, p.cols);
+        let rows = (0..p.rows)
+            .map(|s| {
+                (0..p.cols)
+                    .filter(|&r| p[(s, r)] != 0.0)
+                    .map(|r| (r, p[(s, r)]))
+                    .collect()
+            })
+            .collect();
+        GossipMixer {
+            rows,
+            scratch: (0..p.rows).map(|_| Tensor::zeros(&[param_len])).collect(),
+        }
+    }
+
+    pub fn s(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// In-place mix: replicas[s] <- Σ_r P_sr · replicas[r].
+    ///
+    /// `replicas` are the post-update vectors û_{s,k}(t); afterwards they
+    /// hold ŵ_{s,k}(t+1).
+    pub fn mix(&mut self, replicas: &mut [Tensor]) {
+        assert_eq!(replicas.len(), self.rows.len(), "replica count != S");
+        for (s, row) in self.rows.iter().enumerate() {
+            let out = &mut self.scratch[s];
+            if out.shape() != replicas[s].shape() {
+                // mixer is reused across differently-shaped tensors (W vs b)
+                *out = Tensor::zeros(replicas[s].shape());
+            }
+            out.fill_zero();
+            for &(r, w) in row {
+                out.axpy(w as f32, &replicas[r]);
+            }
+        }
+        for (dst, src) in replicas.iter_mut().zip(&mut self.scratch) {
+            std::mem::swap(dst, src);
+        }
+    }
+
+    /// Number of scalar multiply-adds per mix (comm/compute cost model).
+    pub fn flops_per_mix(&self, param_len: usize) -> usize {
+        self.rows.iter().map(|r| r.len()).sum::<usize>() * param_len * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{xiao_boyd_weights, max_safe_alpha, Graph, Topology};
+
+    fn replicas(vals: &[f32]) -> Vec<Tensor> {
+        vals.iter()
+            .map(|&v| Tensor::from_vec(&[2], vec![v, 2.0 * v]).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn identity_p_is_noop() {
+        let p = Mat::identity(3);
+        let mut m = GossipMixer::new(&p, 2);
+        let mut r = replicas(&[1.0, 2.0, 3.0]);
+        let orig = r.clone();
+        m.mix(&mut r);
+        assert_eq!(r, orig);
+    }
+
+    #[test]
+    fn complete_graph_full_alpha_averages() {
+        // K_S with α = 1/S: one step lands every replica on the average
+        let s = 4;
+        let g = Graph::build(Topology::Complete, s).unwrap();
+        let p = xiao_boyd_weights(&g, 1.0 / s as f64 - 1e-12).unwrap();
+        let mut m = GossipMixer::new(&p, 2);
+        let mut r = replicas(&[1.0, 2.0, 3.0, 6.0]);
+        m.mix(&mut r);
+        for rep in &r {
+            assert!((rep.data()[0] - 3.0).abs() < 1e-5);
+            assert!((rep.data()[1] - 6.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mix_preserves_average() {
+        // doubly stochastic P ⇒ the replica average is invariant
+        let g = Graph::build(Topology::Ring, 5).unwrap();
+        let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+        let mut m = GossipMixer::new(&p, 2);
+        let mut r = replicas(&[1.0, -2.0, 3.5, 0.0, 7.0]);
+        let avg_before: f32 = r.iter().map(|t| t.data()[0]).sum::<f32>() / 5.0;
+        for _ in 0..10 {
+            m.mix(&mut r);
+        }
+        let avg_after: f32 = r.iter().map(|t| t.data()[0]).sum::<f32>() / 5.0;
+        assert!((avg_before - avg_after).abs() < 1e-4);
+    }
+
+    #[test]
+    fn repeated_mixing_converges_to_consensus() {
+        let g = Graph::build(Topology::Line, 4).unwrap();
+        let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+        let mut m = GossipMixer::new(&p, 2);
+        let mut r = replicas(&[0.0, 0.0, 0.0, 4.0]);
+        for _ in 0..200 {
+            m.mix(&mut r);
+        }
+        for rep in &r {
+            assert!((rep.data()[0] - 1.0).abs() < 1e-3, "{:?}", rep.data());
+        }
+    }
+
+    #[test]
+    fn sparse_rows_skip_zeros() {
+        let g = Graph::build(Topology::Line, 5).unwrap();
+        let p = xiao_boyd_weights(&g, 0.25).unwrap();
+        let m = GossipMixer::new(&p, 10);
+        // interior line node touches itself + 2 neighbours
+        assert_eq!(m.rows[2].len(), 3);
+        assert_eq!(m.rows[0].len(), 2);
+        assert!(m.flops_per_mix(10) < 5 * 5 * 10 * 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Decentralized consensus across model-groups: the gossip mixing step of
+//! eq. (13b) and the disagreement metric δ(t) of eq. (22).
+
+pub mod error;
+pub mod gossip;
+
+pub use error::{consensus_error, consensus_error_flat};
+pub use gossip::GossipMixer;

@@ -1,0 +1,186 @@
+//! The S×K agent grid and its communication graph G^comm (Section 3.3).
+//!
+//! Nodes are agents (s,k); edges are the union of
+//!   * S data-group subgraphs G^D_s — **lines** along the pipeline
+//!     (Assumption 3.1.1), and
+//!   * K model-group subgraphs G^M_k — copies of the gossip **topology**
+//!     (Assumption 3.1.2: connected).
+//! The grid validates both assumptions and exposes the spectral quantities
+//! the convergence bounds need.
+
+use crate::error::{Error, Result};
+use crate::graph::{gamma, max_safe_alpha, xiao_boyd_weights, Graph, Topology};
+use crate::linalg::Mat;
+
+/// Agent identifier (data-group s, model-group k).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AgentId {
+    pub s: usize,
+    pub k: usize,
+}
+
+pub struct AgentGrid {
+    pub s: usize,
+    pub k: usize,
+    /// the full G^comm on S·K nodes
+    pub comm: Graph,
+    /// the shared model-group topology G (all G^M_k copies of it)
+    pub model_graph: Graph,
+    /// Xiao–Boyd α in use
+    pub alpha: f64,
+    /// the S×S mixing matrix P
+    pub p: Mat,
+}
+
+impl AgentGrid {
+    /// node id of agent (s,k) in G^comm
+    pub fn node(&self, id: AgentId) -> usize {
+        id.s * self.k + id.k
+    }
+
+    pub fn agent_of(&self, node: usize) -> AgentId {
+        AgentId {
+            s: node / self.k,
+            k: node % self.k,
+        }
+    }
+
+    pub fn build(s: usize, k: usize, topology: Topology, alpha: Option<f64>) -> Result<AgentGrid> {
+        if s == 0 || k == 0 {
+            return Err(Error::Config("grid needs S,K >= 1".into()));
+        }
+        let model_graph = Graph::build(topology, s)?;
+        if !model_graph.is_connected() {
+            return Err(Error::Graph(
+                "model-group topology violates Assumption 3.1.2 (not connected)".into(),
+            ));
+        }
+        let alpha = alpha.unwrap_or_else(|| max_safe_alpha(&model_graph));
+        let p = xiao_boyd_weights(&model_graph, alpha)?;
+
+        let mut comm = Graph::empty(s * k);
+        // data-group lines: (s, k) — (s, k+1)
+        for si in 0..s {
+            for ki in 0..k.saturating_sub(1) {
+                comm.add_edge(si * k + ki, si * k + ki + 1);
+            }
+        }
+        // model-group gossip copies: (s, k) — (r, k) for (s,r) in topology
+        for ki in 0..k {
+            for si in 0..s {
+                for &ri in model_graph.neighbors(si) {
+                    if si < ri {
+                        comm.add_edge(si * k + ki, ri * k + ki);
+                    }
+                }
+            }
+        }
+
+        Ok(AgentGrid {
+            s,
+            k,
+            comm,
+            model_graph,
+            alpha,
+            p,
+        })
+    }
+
+    /// γ = ρ(P − 11ᵀ/S) (Lemma 2.1.2).
+    pub fn gamma(&self) -> f64 {
+        gamma(&self.p)
+    }
+
+    /// Verify Assumption 3.1 on the constructed grid (the induced
+    /// data-group subgraphs must be lines; model-group subgraphs must be
+    /// connected copies of the topology).
+    pub fn check_assumption_3_1(&self) -> Result<()> {
+        for si in 0..self.s {
+            let sub = self.induced(&(0..self.k).map(|ki| si * self.k + ki).collect::<Vec<_>>());
+            if !sub.is_line() {
+                return Err(Error::Graph(format!(
+                    "data-group {si} subgraph is not a line"
+                )));
+            }
+        }
+        for ki in 0..self.k {
+            let sub = self.induced(&(0..self.s).map(|si| si * self.k + ki).collect::<Vec<_>>());
+            if !sub.is_connected() {
+                return Err(Error::Graph(format!(
+                    "model-group {ki} subgraph is not connected"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Subgraph induced on `nodes` (relabelled 0..nodes.len()).
+    fn induced(&self, nodes: &[usize]) -> Graph {
+        let mut g = Graph::empty(nodes.len());
+        for (a, &na) in nodes.iter().enumerate() {
+            for (b, &nb) in nodes.iter().enumerate() {
+                if a < b && self.comm.has_edge(na, nb) {
+                    g.add_edge(a, b);
+                }
+            }
+        }
+        g
+    }
+
+    /// Total links an implementation must provision.
+    pub fn total_edges(&self) -> usize {
+        self.comm.edge_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_by_two_grid_matches_paper_fig2() {
+        let grid = AgentGrid::build(4, 2, Topology::Ring, None).unwrap();
+        assert_eq!(grid.comm.n(), 8);
+        grid.check_assumption_3_1().unwrap();
+        // edges: 4 data lines (1 edge each) + 2 ring copies (4 edges each)
+        assert_eq!(grid.total_edges(), 4 + 8);
+        assert!(grid.gamma() < 1.0);
+    }
+
+    #[test]
+    fn node_agent_roundtrip() {
+        let grid = AgentGrid::build(3, 4, Topology::Complete, None).unwrap();
+        for s in 0..3 {
+            for k in 0..4 {
+                let id = AgentId { s, k };
+                assert_eq!(grid.agent_of(grid.node(id)), id);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_grids() {
+        // S=1: no gossip edges; K=1: no pipeline edges
+        let g11 = AgentGrid::build(1, 1, Topology::Complete, None).unwrap();
+        assert_eq!(g11.total_edges(), 0);
+        g11.check_assumption_3_1().unwrap();
+
+        let g14 = AgentGrid::build(1, 4, Topology::Complete, None).unwrap();
+        assert_eq!(g14.total_edges(), 3);
+        g14.check_assumption_3_1().unwrap();
+
+        let g41 = AgentGrid::build(4, 1, Topology::Star, None).unwrap();
+        assert_eq!(g41.total_edges(), 3);
+        g41.check_assumption_3_1().unwrap();
+    }
+
+    #[test]
+    fn alpha_respected_and_gamma_consistent() {
+        let grid = AgentGrid::build(5, 2, Topology::Ring, Some(0.3)).unwrap();
+        assert_eq!(grid.alpha, 0.3);
+        assert_eq!(grid.p[(0, 1)], 0.3);
+        let g2 = AgentGrid::build(5, 2, Topology::Ring, Some(0.1)).unwrap();
+        // smaller alpha mixes slower on a ring
+        assert!(grid.gamma() < g2.gamma());
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator — the paper's system contribution: the S×K agent grid
+//! (Section 3.3), its communication structure (Assumption 3.1), and the
+//! top-level experiment runner tying data, schedule, consensus, backend,
+//! and metrics together.
+
+pub mod grid;
+pub mod run;
+
+pub use grid::{AgentGrid, AgentId};
+pub use run::{build_dataset, run_experiment, run_with, RunOutput};

@@ -1,0 +1,165 @@
+//! Top-level experiment runner: config → dataset → grid → backend →
+//! trainer → recorded results. This is what the CLI, examples, and benches
+//! all call.
+
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::grid::AgentGrid;
+use crate::data::{cifar, synthetic::SyntheticSpec, Dataset};
+use crate::error::Result;
+use crate::metrics::Recorder;
+use crate::runtime::{make_backend, BackendKind, ComputeBackend};
+use crate::simclock::{method_iter_s_mode, CostModel};
+use crate::trainer::Trainer;
+
+/// Everything a finished run hands back.
+pub struct RunOutput {
+    pub cfg: ExperimentConfig,
+    pub recorder: Recorder,
+    pub gamma: f64,
+    pub iter_time_s: f64,
+    pub final_delta: f64,
+}
+
+/// Build the dataset for a config: real CIFAR-10 when `CIFAR10_DIR` is set
+/// and compatible, else the synthetic teacher-labelled generator.
+pub fn build_dataset(cfg: &ExperimentConfig) -> Dataset {
+    if cfg.model.d_in == cifar::CIFAR_DIM && cfg.model.classes == cifar::CIFAR_CLASSES {
+        if let Some(ds) = cifar::from_env() {
+            eprintln!("using real CIFAR-10 from CIFAR10_DIR ({} samples)", ds.len());
+            return ds;
+        }
+    }
+    SyntheticSpec {
+        n: cfg.dataset_n,
+        dim: cfg.model.d_in,
+        classes: cfg.model.classes,
+        ..SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, cfg.seed ^ 0xDA7A5E7)
+    }
+    .generate()
+}
+
+/// Run one experiment end-to-end on an already-built backend + dataset.
+/// `cost_model`: when given, per-iteration sim time is attached to records.
+pub fn run_with(
+    cfg: ExperimentConfig,
+    backend: &dyn ComputeBackend,
+    ds: &Dataset,
+    cost_model: Option<&CostModel>,
+) -> Result<RunOutput> {
+    let grid = AgentGrid::build(cfg.s, cfg.k, cfg.topology, cfg.alpha)?;
+    grid.check_assumption_3_1()?;
+    let gamma = grid.gamma();
+
+    let iter_time_s = cost_model
+        .map(|cm| {
+            method_iter_s_mode(
+                cm,
+                cfg.s,
+                cfg.k,
+                grid.model_graph.max_degree() + 1,
+                cfg.mode,
+            )
+        })
+        .unwrap_or(0.0);
+
+    let mut trainer = Trainer::new(cfg.clone(), backend, ds)?;
+    trainer.iter_time_s = iter_time_s;
+    trainer.run()?;
+    let final_delta = trainer.consensus_delta();
+
+    Ok(RunOutput {
+        cfg,
+        recorder: std::mem::take(&mut trainer_recorder(trainer)),
+        gamma,
+        iter_time_s,
+        final_delta,
+    })
+}
+
+fn trainer_recorder(t: Trainer<'_>) -> Recorder {
+    // Trainer gives only a reference; rebuild by cloning records.
+    Recorder {
+        records: t.recorder().records.clone(),
+    }
+}
+
+/// Full convenience entry: build dataset + backend from the config, run,
+/// optionally dump CSV to `out_csv`.
+pub fn run_experiment(
+    cfg: ExperimentConfig,
+    backend_kind: BackendKind,
+    artifacts_dir: &Path,
+    calibrate_clock: bool,
+    out_csv: Option<&Path>,
+) -> Result<RunOutput> {
+    let ds = build_dataset(&cfg);
+    let backend = make_backend(
+        backend_kind,
+        artifacts_dir,
+        cfg.model.layers(),
+        cfg.batch,
+    )?;
+    let cm = calibrate_clock.then(|| CostModel::calibrate(backend.as_ref(), 3));
+    let out = run_with(cfg, backend.as_ref(), &ds, cm.as_ref())?;
+    if let Some(path) = out_csv {
+        out.recorder.write_csv(path)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::graph::Topology;
+    use crate::runtime::NativeBackend;
+    use crate::trainer::LrSchedule;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "run-test".into(),
+            s: 2,
+            k: 2,
+            topology: Topology::Complete,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            batch: 8,
+            iters: 30,
+            lr: LrSchedule::Const(0.2),
+            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            mode: crate::staleness::PipelineMode::FullyDecoupled,
+            seed: 5,
+            dataset_n: 200,
+            delta_every: 5,
+            eval_every: 10,
+        }
+    }
+
+    #[test]
+    fn run_with_produces_records_and_gamma() {
+        let c = cfg();
+        let ds = build_dataset(&c);
+        let backend = NativeBackend::new(c.model.layers(), c.batch);
+        let cm = CostModel::calibrate(&backend, 1);
+        let out = run_with(c, &backend, &ds, Some(&cm)).unwrap();
+        assert_eq!(out.recorder.records.len(), 30);
+        assert!(out.gamma < 1.0);
+        assert!(out.iter_time_s > 0.0);
+        // sim time grows linearly
+        let r = &out.recorder.records;
+        assert!(r[29].sim_time_s > r[0].sim_time_s);
+        assert!(out.recorder.summary().final_train_loss.is_some());
+    }
+
+    #[test]
+    fn synthetic_dataset_respects_config_geometry() {
+        let c = cfg();
+        let ds = build_dataset(&c);
+        assert_eq!(ds.dim, 10);
+        assert_eq!(ds.classes, 3);
+        assert_eq!(ds.len(), 200);
+    }
+}

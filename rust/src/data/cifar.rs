@@ -1,0 +1,126 @@
+//! Real CIFAR-10 loader (binary version: data_batch_*.bin).
+//!
+//! Used automatically when `CIFAR10_DIR` points at the extracted
+//! `cifar-10-batches-bin` directory; otherwise experiments fall back to the
+//! synthetic generator (DESIGN.md §3). Record format per sample:
+//! 1 label byte + 3072 pixel bytes (R, G, B planes of a 32×32 image).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+pub const CIFAR_DIM: usize = 3072;
+pub const CIFAR_CLASSES: usize = 10;
+const RECORD: usize = 1 + CIFAR_DIM;
+
+/// Load one binary batch file. Pixels are normalized to zero-mean unit-ish
+/// range: (v/255 − 0.5) / 0.25.
+pub fn load_batch_file(path: &Path) -> Result<(Vec<f32>, Vec<u8>)> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.is_empty() || bytes.len() % RECORD != 0 {
+        return Err(Error::Shape(format!(
+            "{}: size {} not a multiple of record size {RECORD}",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    let n = bytes.len() / RECORD;
+    let mut features = Vec::with_capacity(n * CIFAR_DIM);
+    let mut labels = Vec::with_capacity(n);
+    for rec in bytes.chunks_exact(RECORD) {
+        let label = rec[0];
+        if label as usize >= CIFAR_CLASSES {
+            return Err(Error::Shape(format!("bad CIFAR label {label}")));
+        }
+        labels.push(label);
+        features.extend(rec[1..].iter().map(|&v| (v as f32 / 255.0 - 0.5) / 0.25));
+    }
+    Ok((features, labels))
+}
+
+/// Load the 5 training batches from `dir`.
+pub fn load_train_dir(dir: &Path) -> Result<Dataset> {
+    let mut features = Vec::new();
+    let mut labels = Vec::new();
+    for i in 1..=5 {
+        let path = dir.join(format!("data_batch_{i}.bin"));
+        if !path.exists() {
+            return Err(Error::Manifest(format!("missing {}", path.display())));
+        }
+        let (f, l) = load_batch_file(&path)?;
+        features.extend(f);
+        labels.extend(l);
+    }
+    Dataset::new(features, labels, CIFAR_DIM, CIFAR_CLASSES)
+}
+
+/// If `CIFAR10_DIR` is set and loadable, return the real dataset.
+pub fn from_env() -> Option<Dataset> {
+    let dir = std::env::var_os("CIFAR10_DIR")?;
+    match load_train_dir(Path::new(&dir)) {
+        Ok(ds) => Some(ds),
+        Err(e) => {
+            eprintln!("warning: CIFAR10_DIR set but unloadable: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fake_batch(path: &Path, n: usize) {
+        let mut f = std::fs::File::create(path).unwrap();
+        for i in 0..n {
+            let mut rec = vec![0u8; RECORD];
+            rec[0] = (i % CIFAR_CLASSES) as u8;
+            for (j, b) in rec[1..].iter_mut().enumerate() {
+                *b = ((i * 7 + j) % 256) as u8;
+            }
+            f.write_all(&rec).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_wellformed_batch() {
+        let dir = std::env::temp_dir().join("sgs_cifar_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data_batch_1.bin");
+        write_fake_batch(&path, 20);
+        let (f, l) = load_batch_file(&path).unwrap();
+        assert_eq!(l.len(), 20);
+        assert_eq!(f.len(), 20 * CIFAR_DIM);
+        // normalization: byte 0 -> (0/255 - .5)/.25 = -2.0
+        assert!((f[0] - -2.0).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let dir = std::env::temp_dir().join("sgs_cifar_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data_batch_1.bin");
+        std::fs::write(&path, vec![0u8; RECORD + 5]).unwrap();
+        assert!(load_batch_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_dir_needs_all_five() {
+        let dir = std::env::temp_dir().join("sgs_cifar_partial");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_batch(&dir.join("data_batch_1.bin"), 4);
+        assert!(load_train_dir(&dir).is_err());
+        for i in 2..=5 {
+            write_fake_batch(&dir.join(format!("data_batch_{i}.bin")), 4);
+        }
+        let ds = load_train_dir(&dir).unwrap();
+        assert_eq!(ds.len(), 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

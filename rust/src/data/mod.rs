@@ -1,0 +1,127 @@
+//! Training data: synthetic CIFAR-like generation (teacher network),
+//! optional real CIFAR-10 binary loading, sharding across data-groups
+//! (Section 3.1: D = D_1 ∪ … ∪ D_S, disjoint), and mini-batch sampling.
+
+pub mod cifar;
+pub mod sampler;
+pub mod shard;
+pub mod synthetic;
+
+pub use sampler::MiniBatchSampler;
+pub use shard::{shard_even, shard_proportional, Shard};
+pub use synthetic::SyntheticSpec;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// An in-memory labelled dataset (row-major features, integer labels).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    features: Vec<f32>,
+    labels: Vec<u8>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(features: Vec<f32>, labels: Vec<u8>, dim: usize, classes: usize) -> Result<Dataset> {
+        if labels.is_empty() || features.len() != labels.len() * dim {
+            return Err(Error::Shape(format!(
+                "dataset: {} features vs {} labels x dim {}",
+                features.len(),
+                labels.len(),
+                dim
+            )));
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= classes) {
+            return Err(Error::Shape(format!(
+                "label {bad} out of range for {classes} classes"
+            )));
+        }
+        Ok(Dataset {
+            features,
+            labels,
+            dim,
+            classes,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    /// Gather indices into an (x [B,dim], onehot [B,classes]) batch pair.
+    pub fn gather(&self, indices: &[usize]) -> (Tensor, Tensor) {
+        let b = indices.len();
+        let mut x = Tensor::zeros(&[b, self.dim]);
+        let mut onehot = Tensor::zeros(&[b, self.classes]);
+        for (row, &i) in indices.iter().enumerate() {
+            x.data_mut()[row * self.dim..(row + 1) * self.dim]
+                .copy_from_slice(self.feature_row(i));
+            onehot.data_mut()[row * self.classes + self.label(i)] = 1.0;
+        }
+        (x, onehot)
+    }
+
+    /// Class histogram (sanity metrics / tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ds() -> Dataset {
+        // 4 samples, dim 2, 3 classes
+        Dataset::new(
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![0, 1, 2, 1],
+            2,
+            3,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(Dataset::new(vec![0.0; 6], vec![0, 1], 2, 2).is_err()); // 6 != 2*2
+        assert!(Dataset::new(vec![0.0; 4], vec![0, 5], 2, 3).is_err()); // label 5
+        assert!(Dataset::new(vec![], vec![], 2, 3).is_err());
+    }
+
+    #[test]
+    fn gather_shapes_and_onehot() {
+        let ds = tiny_ds();
+        let (x, oh) = ds.gather(&[2, 0]);
+        assert_eq!(x.shape(), &[2, 2]);
+        assert_eq!(x.data(), &[4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(oh.shape(), &[2, 3]);
+        assert_eq!(oh.data(), &[0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn class_counts_sum_to_len() {
+        let ds = tiny_ds();
+        let counts = ds.class_counts();
+        assert_eq!(counts, vec![1, 2, 1]);
+        assert_eq!(counts.iter().sum::<usize>(), ds.len());
+    }
+}

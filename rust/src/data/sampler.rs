@@ -1,0 +1,109 @@
+//! Mini-batch sampling (the task of agent (s,1) in Algorithm 1).
+//!
+//! Samples B indices uniformly without replacement from the shard each
+//! iteration — i.i.d. across iterations, which is what Assumption 4.2
+//! (unbiased stochastic gradients) requires. A deterministic per-agent
+//! stream keeps the sim and threaded engines bit-identical.
+
+use crate::data::shard::Shard;
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+pub struct MiniBatchSampler {
+    shard: Shard,
+    batch: usize,
+    rng: Pcg32,
+}
+
+impl MiniBatchSampler {
+    /// `seed` must be unique per data-group; derive it from the experiment
+    /// seed with `Pcg32::fork`.
+    pub fn new(shard: Shard, batch: usize, seed: u64) -> MiniBatchSampler {
+        assert!(batch <= shard.len(), "batch {} > shard {}", batch, shard.len());
+        MiniBatchSampler {
+            shard,
+            batch,
+            rng: Pcg32::new(seed),
+        }
+    }
+
+    pub fn shard(&self) -> &Shard {
+        &self.shard
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Draw the mini-batch for iteration t. Consumes RNG state — call
+    /// exactly once per iteration, in iteration order.
+    pub fn sample(&mut self) -> Vec<usize> {
+        let picks = self.rng.sample_indices(self.shard.len(), self.batch);
+        picks.into_iter().map(|i| self.shard.indices[i]).collect()
+    }
+
+    /// Draw and gather in one step.
+    pub fn sample_batch(&mut self, ds: &Dataset) -> (Tensor, Tensor) {
+        let idx = self.sample();
+        ds.gather(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::shard_even;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn samples_stay_inside_shard() {
+        let ds = SyntheticSpec::small(100, 6, 3, 0).generate();
+        let shards = shard_even(&ds, 4, 5).unwrap();
+        let allowed: std::collections::HashSet<usize> =
+            shards[2].indices.iter().copied().collect();
+        let mut sampler = MiniBatchSampler::new(shards[2].clone(), 8, 77);
+        for _ in 0..20 {
+            for i in sampler.sample() {
+                assert!(allowed.contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_has_no_duplicates() {
+        let ds = SyntheticSpec::small(64, 6, 3, 0).generate();
+        let shards = shard_even(&ds, 2, 5).unwrap();
+        let mut sampler = MiniBatchSampler::new(shards[0].clone(), 16, 3);
+        let mut b = sampler.sample();
+        b.sort();
+        b.dedup();
+        assert_eq!(b.len(), 16);
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let ds = SyntheticSpec::small(64, 6, 3, 0).generate();
+        let shards = shard_even(&ds, 2, 5).unwrap();
+        let mut a = MiniBatchSampler::new(shards[0].clone(), 8, 9);
+        let mut b = MiniBatchSampler::new(shards[0].clone(), 8, 9);
+        for _ in 0..5 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+
+    #[test]
+    fn gathers_right_shapes() {
+        let ds = SyntheticSpec::small(64, 6, 3, 0).generate();
+        let shards = shard_even(&ds, 1, 5).unwrap();
+        let mut sampler = MiniBatchSampler::new(shards[0].clone(), 8, 9);
+        let (x, oh) = sampler.sample_batch(&ds);
+        assert_eq!(x.shape(), &[8, 6]);
+        assert_eq!(oh.shape(), &[8, 3]);
+        // one-hot rows sum to 1
+        for r in 0..8 {
+            let s: f32 = oh.data()[r * 3..(r + 1) * 3].iter().sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+}

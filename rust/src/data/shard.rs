@@ -1,0 +1,241 @@
+//! Dataset sharding across data-groups (Section 3.1).
+//!
+//! D = D_1 ∪ … ∪ D_S with D_i ∩ D_j = ∅. A [`Shard`] is a view (index set)
+//! into the shared dataset; the |D_s|/N gradient scaling of eq. (13a) reads
+//! the sizes recorded here.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// An index-set view of one data-group's subset D_s.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub group: usize,
+    pub indices: Vec<usize>,
+    /// N = |D| (for the |D_s|/N scaling)
+    pub total: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// |D_s| / N — the local cost-function weight in eq. (13a).
+    pub fn weight(&self) -> f64 {
+        self.len() as f64 / self.total as f64
+    }
+}
+
+/// Shuffle (seeded) then split as evenly as possible into S disjoint shards.
+/// The first (N mod S) shards get one extra sample.
+pub fn shard_even(ds: &Dataset, s: usize, seed: u64) -> Result<Vec<Shard>> {
+    if s == 0 {
+        return Err(Error::Config("shard_even: S = 0".into()));
+    }
+    if ds.len() < s {
+        return Err(Error::Config(format!(
+            "cannot shard {} samples into {s} groups",
+            ds.len()
+        )));
+    }
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg32::new(seed ^ 0x5AAD);
+    rng.shuffle(&mut idx);
+
+    let base = ds.len() / s;
+    let extra = ds.len() % s;
+    let mut shards = Vec::with_capacity(s);
+    let mut off = 0;
+    for group in 0..s {
+        let take = base + usize::from(group < extra);
+        shards.push(Shard {
+            group,
+            indices: idx[off..off + take].to_vec(),
+            total: ds.len(),
+        });
+        off += take;
+    }
+    Ok(shards)
+}
+
+/// Shuffle (seeded) then split with sizes proportional to `weights`
+/// (heterogeneous agents: eq. (13a)'s |D_s|/N scaling is what keeps the
+/// summed gradient unbiased even when shards are unequal). Every shard
+/// gets at least one sample; remainders go to the largest weights.
+pub fn shard_proportional(ds: &Dataset, weights: &[f64], seed: u64) -> Result<Vec<Shard>> {
+    let s = weights.len();
+    if s == 0 {
+        return Err(Error::Config("shard_proportional: no weights".into()));
+    }
+    if weights.iter().any(|&w| w <= 0.0 || !w.is_finite()) {
+        return Err(Error::Config(format!("bad shard weights {weights:?}")));
+    }
+    if ds.len() < s {
+        return Err(Error::Config(format!(
+            "cannot shard {} samples into {s} groups",
+            ds.len()
+        )));
+    }
+    let total_w: f64 = weights.iter().sum();
+    // largest-remainder apportionment with a 1-sample floor
+    let mut sizes: Vec<usize> = weights
+        .iter()
+        .map(|w| ((w / total_w) * ds.len() as f64).floor().max(1.0) as usize)
+        .collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // fix over/under-assignment deterministically by weight order
+    let mut order: Vec<usize> = (0..s).collect();
+    order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+    let mut idx = 0;
+    while assigned < ds.len() {
+        sizes[order[idx % s]] += 1;
+        assigned += 1;
+        idx += 1;
+    }
+    idx = 0;
+    while assigned > ds.len() {
+        let g = order[s - 1 - (idx % s)];
+        if sizes[g] > 1 {
+            sizes[g] -= 1;
+            assigned -= 1;
+        }
+        idx += 1;
+    }
+
+    let mut all: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Pcg32::new(seed ^ 0x5AAD);
+    rng.shuffle(&mut all);
+    let mut shards = Vec::with_capacity(s);
+    let mut off = 0;
+    for (group, &take) in sizes.iter().enumerate() {
+        shards.push(Shard {
+            group,
+            indices: all[off..off + take].to_vec(),
+            total: ds.len(),
+        });
+        off += take;
+    }
+    Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn ds() -> Dataset {
+        SyntheticSpec::small(103, 8, 4, 3).generate()
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let ds = ds();
+        let shards = shard_even(&ds, 4, 9).unwrap();
+        assert_eq!(shards.len(), 4);
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sizes_balanced() {
+        let ds = ds();
+        let shards = shard_even(&ds, 4, 9).unwrap();
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes, vec![26, 26, 26, 25]); // 103 = 26+26+26+25
+        let wsum: f64 = shards.iter().map(|s| s.weight()).sum();
+        assert!((wsum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = ds();
+        let a = shard_even(&ds, 3, 1).unwrap();
+        let b = shard_even(&ds, 3, 1).unwrap();
+        let c = shard_even(&ds, 3, 2).unwrap();
+        assert_eq!(a[0].indices, b[0].indices);
+        assert_ne!(a[0].indices, c[0].indices);
+    }
+
+    #[test]
+    fn proportional_sizes_and_cover() {
+        let ds = ds(); // 103 samples
+        let shards = shard_proportional(&ds, &[3.0, 1.0], 4).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].len() + shards[1].len(), 103);
+        // ~3:1 split
+        assert!(shards[0].len() >= 74 && shards[0].len() <= 80, "{}", shards[0].len());
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 103);
+        // weights sum to 1 (the |D_s|/N invariant behind Assumption 4.2)
+        let wsum: f64 = shards.iter().map(|s| s.weight()).sum();
+        assert!((wsum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proportional_unbiasedness_of_weighted_gradient_sum() {
+        // Σ_s (|D_s|/N)·mean_grad(D_s) == mean_grad(D) when each group
+        // processes its FULL shard — the exactness behind eq. (13a)'s
+        // scaling with unequal shards.
+        use crate::nn::{self, init::init_params, resmlp_layers};
+        use crate::util::rng::Pcg32;
+        let ds = SyntheticSpec::small(60, 6, 3, 5).generate();
+        let layers = resmlp_layers(6, 5, 0, 3);
+        let mut rng = Pcg32::new(8);
+        let params = init_params(&mut rng, &layers);
+
+        let shards = shard_proportional(&ds, &[2.0, 1.0, 1.0], 9).unwrap();
+        let full_idx: Vec<usize> = (0..ds.len()).collect();
+        let (x, oh) = ds.gather(&full_idx);
+        let (_, full_grads) = nn::full_backward(&x, &oh, &params, &layers);
+
+        // weighted sum of per-shard mean gradients
+        let mut acc: Vec<(crate::tensor::Tensor, crate::tensor::Tensor)> = full_grads
+            .iter()
+            .map(|(w, b)| {
+                (
+                    crate::tensor::Tensor::zeros(w.shape()),
+                    crate::tensor::Tensor::zeros(b.shape()),
+                )
+            })
+            .collect();
+        for shard in &shards {
+            let (xs, ohs) = ds.gather(&shard.indices);
+            let (_, grads) = nn::full_backward(&xs, &ohs, &params, &layers);
+            for ((aw, ab), (gw, gb)) in acc.iter_mut().zip(&grads) {
+                aw.axpy(shard.weight() as f32, gw);
+                ab.axpy(shard.weight() as f32, gb);
+            }
+        }
+        for ((aw, ab), (fw, fb)) in acc.iter().zip(&full_grads) {
+            assert!(aw.max_abs_diff(fw) < 1e-5);
+            assert!(ab.max_abs_diff(fb) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn proportional_rejects_bad_weights() {
+        let ds = ds();
+        assert!(shard_proportional(&ds, &[], 1).is_err());
+        assert!(shard_proportional(&ds, &[1.0, -1.0], 1).is_err());
+        assert!(shard_proportional(&ds, &[1.0, f64::NAN], 1).is_err());
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let ds = ds();
+        assert!(shard_even(&ds, 0, 1).is_err());
+        assert!(shard_even(&ds, 104, 1).is_err());
+        let one = shard_even(&ds, 1, 1).unwrap();
+        assert_eq!(one[0].len(), 103);
+        assert_eq!(one[0].weight(), 1.0);
+    }
+}

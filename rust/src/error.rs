@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+//!
+//! Everything funnels into [`Error`]; `Result<T>` is the crate-wide alias.
+//! The XLA runtime errors are stringified at the boundary (the `xla` crate's
+//! error type is not `Sync`, which would poison every downstream API).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,15 @@
+//! Communication graphs for the multi-agent system (Section 2.3).
+//!
+//! Assumption 3.1 requires each data-group subgraph `G^D_s` to be a line
+//! (the pipeline) and each model-group subgraph `G^M_k` to be connected
+//! (the gossip layer). This module supplies the topology constructors,
+//! the Xiao–Boyd / Metropolis mixing matrices, and the spectral gap
+//! γ = ρ(P − 11ᵀ/S) that drives every convergence bound.
+
+pub mod spectral;
+pub mod topology;
+pub mod weights;
+
+pub use spectral::{gamma, mixing_time_estimate};
+pub use topology::{Graph, Topology};
+pub use weights::{metropolis_weights, xiao_boyd_weights, max_safe_alpha};

@@ -1,0 +1,93 @@
+//! Spectral quantities of the mixing matrix.
+//!
+//! γ = ρ(P − 11ᵀ/S) (Lemma 2.1.2) is the per-step contraction of consensus
+//! disagreement; every bound in Section 4 is a function of it.
+
+use crate::linalg::{spectral_radius_sym, Mat};
+
+/// γ = ρ(P − (1/S)·11ᵀ). For Lemma 2.1 weight matrices this is < 1.
+pub fn gamma(p: &Mat) -> f64 {
+    let n = p.rows;
+    let avg = Mat::full(n, n, 1.0 / n as f64);
+    spectral_radius_sym(&(p - &avg))
+}
+
+/// Iterations for disagreement to shrink by `factor` (γ^t ≤ 1/factor):
+/// t = ln(factor)/ln(1/γ). Returns 0 when γ ≈ 0 (complete graph, α = 1/S).
+pub fn mixing_time_estimate(gamma_val: f64, factor: f64) -> usize {
+    if gamma_val <= 1e-12 {
+        return 0;
+    }
+    if gamma_val >= 1.0 {
+        return usize::MAX;
+    }
+    (factor.ln() / (1.0 / gamma_val).ln()).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::{Graph, Topology};
+    use crate::graph::weights::{max_safe_alpha, xiao_boyd_weights};
+
+    fn gamma_of(t: Topology, n: usize) -> f64 {
+        let g = Graph::build(t, n).unwrap();
+        let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+        gamma(&p)
+    }
+
+    #[test]
+    fn gamma_below_one_on_connected_graphs() {
+        for t in [Topology::Line, Topology::Ring, Topology::Complete, Topology::Star] {
+            for n in [2, 4, 8] {
+                let g = gamma_of(t, n);
+                assert!(g < 1.0, "{t:?} n={n}: gamma={g}");
+                assert!(g >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn complete_graph_near_perfect_mixing() {
+        // K_S at α = 1/S gives P = 11ᵀ/S exactly, so γ = 0.
+        let s = 6;
+        let g = Graph::build(Topology::Complete, s).unwrap();
+        let p = xiao_boyd_weights(&g, 1.0 / s as f64 - 1e-12).unwrap();
+        assert!(gamma(&p) < 1e-9);
+    }
+
+    #[test]
+    fn denser_graphs_mix_faster() {
+        // line is the slowest mixer of the standard family
+        let line = gamma_of(Topology::Line, 8);
+        let ring = gamma_of(Topology::Ring, 8);
+        let complete = gamma_of(Topology::Complete, 8);
+        assert!(complete < ring && ring < line, "{complete} {ring} {line}");
+    }
+
+    #[test]
+    fn gamma_is_contraction_factor_empirically() {
+        // one gossip step must shrink disagreement by ≥ γ (+ tolerance)
+        let g = Graph::build(Topology::Ring, 8).unwrap();
+        let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+        let gam = gamma(&p);
+        let mut rng = crate::util::rng::Pcg32::new(3);
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let mean = x.iter().sum::<f64>() / 8.0;
+        let dev: Vec<f64> = x.iter().map(|v| v - mean).collect();
+        let before = dev.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mixed = p.matvec(&x);
+        let dev2: Vec<f64> = mixed.iter().map(|v| v - mean).collect();
+        let after = dev2.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(after <= gam * before + 1e-9, "{after} > {gam} * {before}");
+    }
+
+    #[test]
+    fn mixing_time_monotone() {
+        assert_eq!(mixing_time_estimate(0.0, 100.0), 0);
+        let fast = mixing_time_estimate(0.5, 100.0);
+        let slow = mixing_time_estimate(0.9, 100.0);
+        assert!(fast < slow);
+        assert_eq!(mixing_time_estimate(1.0, 100.0), usize::MAX);
+    }
+}

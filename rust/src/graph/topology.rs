@@ -1,0 +1,342 @@
+//! Undirected graph type + the standard topologies used in decentralized
+//! training papers (and in our ablations): line, ring, star, complete,
+//! 2-D torus, and seeded connected Erdős–Rényi.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg32;
+
+/// Named topology constructors for a graph on `n` nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Path 0–1–…–(n−1). The required shape for data-group subgraphs.
+    Line,
+    /// Cycle.
+    Ring,
+    /// Every pair connected (gossip becomes exact averaging at α = 1/n).
+    Complete,
+    /// Node 0 is the hub.
+    Star,
+    /// rows × cols wrap-around grid; requires rows*cols == n.
+    Torus { rows: usize, cols: usize },
+    /// G(n, p) resampled until connected (seeded).
+    ErdosRenyi { p_num: u32, p_den: u32, seed: u64 },
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        Ok(match s {
+            "line" => Topology::Line,
+            "ring" => Topology::Ring,
+            "complete" | "full" => Topology::Complete,
+            "star" => Topology::Star,
+            _ => {
+                if let Some(rest) = s.strip_prefix("torus:") {
+                    let (r, c) = rest
+                        .split_once('x')
+                        .ok_or_else(|| Error::Graph(format!("bad torus spec {s:?}")))?;
+                    Topology::Torus {
+                        rows: r.parse().map_err(|_| Error::Graph(format!("bad torus {s:?}")))?,
+                        cols: c.parse().map_err(|_| Error::Graph(format!("bad torus {s:?}")))?,
+                    }
+                } else if let Some(rest) = s.strip_prefix("er:") {
+                    // er:<percent>:<seed>
+                    let mut parts = rest.split(':');
+                    let pct: u32 = parts
+                        .next()
+                        .and_then(|x| x.parse().ok())
+                        .ok_or_else(|| Error::Graph(format!("bad er spec {s:?}")))?;
+                    let seed: u64 = parts.next().and_then(|x| x.parse().ok()).unwrap_or(0);
+                    Topology::ErdosRenyi { p_num: pct, p_den: 100, seed }
+                } else {
+                    return Err(Error::Graph(format!("unknown topology {s:?}")));
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Topology::Line => "line".into(),
+            Topology::Ring => "ring".into(),
+            Topology::Complete => "complete".into(),
+            Topology::Star => "star".into(),
+            Topology::Torus { rows, cols } => format!("torus:{rows}x{cols}"),
+            Topology::ErdosRenyi { p_num, p_den, seed } => {
+                format!("er:{}:{seed}", 100 * p_num / p_den)
+            }
+        }
+    }
+}
+
+/// Simple undirected graph with sorted adjacency lists.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Graph {
+        Graph {
+            n,
+            adj: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn build(topology: Topology, n: usize) -> Result<Graph> {
+        if n == 0 {
+            return Err(Error::Graph("graph with 0 nodes".into()));
+        }
+        let mut g = Graph::empty(n);
+        match topology {
+            Topology::Line => {
+                for i in 0..n.saturating_sub(1) {
+                    g.add_edge(i, i + 1);
+                }
+            }
+            Topology::Ring => {
+                if n == 1 {
+                } else if n == 2 {
+                    g.add_edge(0, 1);
+                } else {
+                    for i in 0..n {
+                        g.add_edge(i, (i + 1) % n);
+                    }
+                }
+            }
+            Topology::Complete => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        g.add_edge(i, j);
+                    }
+                }
+            }
+            Topology::Star => {
+                for i in 1..n {
+                    g.add_edge(0, i);
+                }
+            }
+            Topology::Torus { rows, cols } => {
+                if rows * cols != n {
+                    return Err(Error::Graph(format!(
+                        "torus {rows}x{cols} != n={n}"
+                    )));
+                }
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let id = r * cols + c;
+                        if cols > 1 {
+                            g.add_edge(id, r * cols + (c + 1) % cols);
+                        }
+                        if rows > 1 {
+                            g.add_edge(id, ((r + 1) % rows) * cols + c);
+                        }
+                    }
+                }
+            }
+            Topology::ErdosRenyi { p_num, p_den, seed } => {
+                let p = p_num as f64 / p_den as f64;
+                let mut rng = Pcg32::new(seed ^ 0xE5D0_5E5D);
+                for attempt in 0..1000 {
+                    let mut cand = Graph::empty(n);
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            if rng.f64() < p {
+                                cand.add_edge(i, j);
+                            }
+                        }
+                    }
+                    if cand.is_connected() {
+                        g = cand;
+                        break;
+                    }
+                    if attempt == 999 {
+                        return Err(Error::Graph(format!(
+                            "er({p}) never connected after 1000 draws on n={n}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(g)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i < self.n && j < self.n && i != j, "bad edge ({i},{j})");
+        if !self.adj[i].contains(&j) {
+            self.adj[i].push(j);
+            self.adj[i].sort_unstable();
+            self.adj[j].push(i);
+            self.adj[j].sort_unstable();
+        }
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check (Assumption 3.1.2 for model-groups).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return false;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via BFS from every node (∞ -> None if disconnected).
+    pub fn diameter(&self) -> Option<usize> {
+        let mut diam = 0;
+        for src in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[src] = 0;
+            let mut queue = std::collections::VecDeque::from([src]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            let far = *dist.iter().max().unwrap();
+            if far == usize::MAX {
+                return None;
+            }
+            diam = diam.max(far);
+        }
+        Some(diam)
+    }
+
+    /// True iff this graph is exactly a path (Assumption 3.1.1).
+    pub fn is_line(&self) -> bool {
+        if self.n == 1 {
+            return true;
+        }
+        let deg1 = (0..self.n).filter(|&i| self.degree(i) == 1).count();
+        let deg2 = (0..self.n).filter(|&i| self.degree(i) == 2).count();
+        deg1 == 2 && deg1 + deg2 == self.n && self.is_connected()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_shape() {
+        let g = Graph::build(Topology::Line, 5).unwrap();
+        assert!(g.is_line());
+        assert!(g.is_connected());
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.diameter(), Some(4));
+        assert_eq!(g.neighbors(2), &[1, 3]);
+    }
+
+    #[test]
+    fn ring_shape() {
+        let g = Graph::build(Topology::Ring, 6).unwrap();
+        assert!(g.is_connected());
+        assert!(!g.is_line());
+        assert_eq!(g.edge_count(), 6);
+        assert!((0..6).all(|i| g.degree(i) == 2));
+        assert_eq!(g.diameter(), Some(3));
+    }
+
+    #[test]
+    fn complete_shape() {
+        let g = Graph::build(Topology::Complete, 4).unwrap();
+        assert_eq!(g.edge_count(), 6);
+        assert_eq!(g.max_degree(), 3);
+        assert_eq!(g.diameter(), Some(1));
+    }
+
+    #[test]
+    fn star_shape() {
+        let g = Graph::build(Topology::Star, 5).unwrap();
+        assert_eq!(g.degree(0), 4);
+        assert!((1..5).all(|i| g.degree(i) == 1));
+        assert_eq!(g.diameter(), Some(2));
+    }
+
+    #[test]
+    fn torus_shape() {
+        let g = Graph::build(Topology::Torus { rows: 2, cols: 3 }, 6).unwrap();
+        assert!(g.is_connected());
+        // each node: 2 horizontal (wrap) + 1 vertical (2-row wrap dedups)
+        assert!((0..6).all(|i| g.degree(i) == 3));
+    }
+
+    #[test]
+    fn torus_dim_mismatch_rejected() {
+        assert!(Graph::build(Topology::Torus { rows: 2, cols: 2 }, 6).is_err());
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let g = Graph::build(
+            Topology::ErdosRenyi { p_num: 40, p_den: 100, seed: 7 },
+            12,
+        )
+        .unwrap();
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn single_node() {
+        for t in [Topology::Line, Topology::Ring, Topology::Complete, Topology::Star] {
+            let g = Graph::build(t, 1).unwrap();
+            assert!(g.is_connected());
+            assert_eq!(g.edge_count(), 0);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["line", "ring", "complete", "star", "torus:2x3", "er:40:7"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(Topology::parse(&t.name()).unwrap(), t);
+        }
+        assert!(Topology::parse("hypercube").is_err());
+    }
+
+    #[test]
+    fn add_edge_dedups() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        assert_eq!(g.edge_count(), 1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Mixing (gossip) weight matrices.
+//!
+//! `xiao_boyd_weights` is the paper's eq. (7): P_ij = α on edges,
+//! 1 − κ_i α on the diagonal, α ∈ (0, 1/max_i κ_i). Lemma 2.1 guarantees P
+//! is symmetric doubly stochastic with ρ(P − 11ᵀ/S) < 1 on connected
+//! graphs. `metropolis_weights` is the standard degree-adaptive alternative
+//! used as an ablation.
+
+use super::topology::Graph;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Largest α strictly inside the admissible interval of eq. (7), with a
+/// small safety margin: α = margin / max_degree, margin < 1.
+pub fn max_safe_alpha(g: &Graph) -> f64 {
+    let kmax = g.max_degree().max(1) as f64;
+    // 1/(kmax + 1) is the classical "lazy" choice — always inside the open
+    // interval (0, 1/kmax) and equals the Metropolis weight on regular graphs.
+    1.0 / (kmax + 1.0)
+}
+
+/// Eq. (7). Errors if α is outside (0, 1/max_degree) or the graph is
+/// disconnected (Lemma 2.1 would not apply).
+pub fn xiao_boyd_weights(g: &Graph, alpha: f64) -> Result<Mat> {
+    let n = g.n();
+    if !g.is_connected() {
+        return Err(Error::Graph("xiao_boyd_weights on disconnected graph".into()));
+    }
+    let kmax = g.max_degree() as f64;
+    if n > 1 && (alpha <= 0.0 || alpha >= 1.0 / kmax) {
+        return Err(Error::Graph(format!(
+            "alpha {alpha} outside (0, 1/{kmax})"
+        )));
+    }
+    let mut p = Mat::zeros(n, n);
+    for i in 0..n {
+        for &j in g.neighbors(i) {
+            p[(i, j)] = alpha;
+        }
+        p[(i, i)] = 1.0 - g.degree(i) as f64 * alpha;
+    }
+    Ok(p)
+}
+
+/// Metropolis–Hastings weights: P_ij = 1/(1 + max(κ_i, κ_j)) on edges,
+/// diagonal = 1 − Σ_j P_ij. Also symmetric doubly stochastic on any graph.
+pub fn metropolis_weights(g: &Graph) -> Result<Mat> {
+    let n = g.n();
+    if !g.is_connected() {
+        return Err(Error::Graph("metropolis_weights on disconnected graph".into()));
+    }
+    let mut p = Mat::zeros(n, n);
+    for i in 0..n {
+        let mut off = 0.0;
+        for &j in g.neighbors(i) {
+            let w = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            p[(i, j)] = w;
+            off += w;
+        }
+        p[(i, i)] = 1.0 - off;
+    }
+    Ok(p)
+}
+
+/// Check P is symmetric and doubly stochastic with nonnegative entries
+/// (the Lemma 2.1 preconditions). Returns the max violation.
+pub fn stochasticity_violation(p: &Mat) -> f64 {
+    let n = p.rows;
+    let mut v: f64 = 0.0;
+    for i in 0..n {
+        v = v.max((p.row_sum(i) - 1.0).abs());
+        v = v.max((p.col_sum(i) - 1.0).abs());
+        for j in 0..n {
+            v = v.max((p[(i, j)] - p[(j, i)]).abs());
+            if p[(i, j)] < 0.0 {
+                v = v.max(-p[(i, j)]);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::{Graph, Topology};
+
+    fn all_topologies(n: usize) -> Vec<Graph> {
+        vec![
+            Graph::build(Topology::Line, n).unwrap(),
+            Graph::build(Topology::Ring, n).unwrap(),
+            Graph::build(Topology::Complete, n).unwrap(),
+            Graph::build(Topology::Star, n).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn xiao_boyd_doubly_stochastic() {
+        for g in all_topologies(6) {
+            let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+            assert!(stochasticity_violation(&p) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn metropolis_doubly_stochastic() {
+        for g in all_topologies(7) {
+            let p = metropolis_weights(&g).unwrap();
+            assert!(stochasticity_violation(&p) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn alpha_bounds_enforced() {
+        let g = Graph::build(Topology::Ring, 5).unwrap(); // max degree 2
+        assert!(xiao_boyd_weights(&g, 0.0).is_err());
+        assert!(xiao_boyd_weights(&g, 0.5).is_err()); // = 1/kmax
+        assert!(xiao_boyd_weights(&g, 0.49).is_ok());
+    }
+
+    #[test]
+    fn complete_graph_alpha_inv_s_is_exact_average() {
+        // On K_S with α=1/S, P = 11ᵀ/S: one gossip step = exact averaging.
+        let s = 5;
+        let g = Graph::build(Topology::Complete, s).unwrap();
+        let p = xiao_boyd_weights(&g, 1.0 / s as f64 - 1e-9).unwrap();
+        for i in 0..s {
+            for j in 0..s {
+                assert!((p[(i, j)] - 1.0 / s as f64).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_rejected() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(xiao_boyd_weights(&g, 0.3).is_err());
+        assert!(metropolis_weights(&g).is_err());
+    }
+
+    #[test]
+    fn edge_weight_is_alpha() {
+        let g = Graph::build(Topology::Line, 4).unwrap();
+        let p = xiao_boyd_weights(&g, 0.25).unwrap();
+        assert_eq!(p[(0, 1)], 0.25);
+        assert_eq!(p[(1, 2)], 0.25);
+        assert_eq!(p[(0, 2)], 0.0);
+        assert!((p[(1, 1)] - 0.5).abs() < 1e-12); // degree 2
+    }
+}

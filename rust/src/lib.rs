@@ -1,0 +1,41 @@
+//! # sgs — Distributed Deep Learning using Stochastic Gradient Staleness
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of Pham & Ahn (2025):
+//! decentralized data parallelism (gossip consensus over a Xiao–Boyd weight
+//! matrix) combined with the fully decoupled parallel backpropagation of
+//! Zhuang et al. (stale gradients across K pipeline modules), on an S×K
+//! agent grid.
+//!
+//! Layer map (Python is never on the request path):
+//! - **L3 (this crate)** — the coordinator: agent grid, staleness schedule,
+//!   gossip consensus, data sharding, step-size strategies, metrics,
+//!   discrete-event sim clock, CLI.
+//! - **L2/L1 (python/compile)** — per-layer JAX graphs calling Pallas
+//!   kernels, AOT-lowered once to HLO text under `artifacts/`.
+//! - **runtime** — loads those artifacts through the PJRT C API (`xla`
+//!   crate) and executes them from the hot loop; a pure-Rust `nn` backend
+//!   provides the autodiff-checked oracle and an artifact-free fallback.
+//!
+//! Start at [`coordinator::run_experiment`] or the `examples/` directory.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod nn;
+pub mod pipeline;
+pub mod runtime;
+pub mod simclock;
+pub mod staleness;
+pub mod tensor;
+pub mod testutil;
+pub mod trainer;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,139 @@
+//! Symmetric eigenvalue routines: cyclic Jacobi (exact, small S) and power
+//! iteration (cross-check).  Used to compute γ = ρ(P − 11ᵀ/S) < 1 from
+//! Lemma 2.1 — the contraction factor in every consensus bound.
+
+use super::matrix::Mat;
+
+/// All eigenvalues of a symmetric matrix via the cyclic Jacobi method.
+/// Returns eigenvalues sorted descending. Panics if not square.
+pub fn symmetric_eigenvalues(m: &Mat) -> Vec<f64> {
+    assert_eq!(m.rows, m.cols, "eigenvalues of non-square matrix");
+    debug_assert!(m.is_symmetric(1e-9), "matrix not symmetric");
+    let n = m.rows;
+    let mut a = m.clone();
+    // cyclic sweeps until off-diagonal mass is negligible
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-13 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig
+}
+
+/// Spectral radius (max |λ|) of a symmetric matrix, via Jacobi.
+pub fn spectral_radius_sym(m: &Mat) -> f64 {
+    symmetric_eigenvalues(m)
+        .iter()
+        .fold(0.0, |acc, &l| acc.max(l.abs()))
+}
+
+/// Power iteration estimate of the dominant |eigenvalue| of a symmetric
+/// matrix. Cross-checks Jacobi in tests; also handy for big ad-hoc matrices.
+pub fn power_iteration_sym(m: &Mat, iters: usize, seed: u64) -> f64 {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut rng = crate::util::rng::Pcg32::new(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let w = m.matvec(&v);
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        lambda = v.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>();
+        v = w.iter().map(|x| x / norm).collect();
+    }
+    lambda.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diag_eigenvalues() {
+        let mut m = Mat::zeros(3, 3);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = -5.0;
+        m[(2, 2)] = 1.0;
+        let eig = symmetric_eigenvalues(&m);
+        assert!((eig[0] - 3.0).abs() < 1e-12);
+        assert!((eig[2] - -5.0).abs() < 1e-12);
+        assert!((spectral_radius_sym(&m) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let m = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let eig = symmetric_eigenvalues(&m);
+        assert!((eig[0] - 3.0).abs() < 1e-12);
+        assert!((eig[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        // random symmetric 6x6: sum of eigenvalues == trace
+        let mut rng = crate::util::rng::Pcg32::new(17);
+        let n = 6;
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        let trace: f64 = (0..n).map(|i| m[(i, i)]).sum();
+        let eig = symmetric_eigenvalues(&m);
+        assert!((eig.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let m = Mat::from_rows(&[&[4.0, 1.0, 0.0], &[1.0, 3.0, 1.0], &[0.0, 1.0, 2.0]]);
+        let pi = power_iteration_sym(&m, 500, 1);
+        let jac = spectral_radius_sym(&m);
+        assert!((pi - jac).abs() < 1e-6, "pi={pi} jac={jac}");
+    }
+}

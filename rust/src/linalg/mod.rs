@@ -1,0 +1,9 @@
+//! Dense linear algebra over f64 — just enough for the consensus analysis:
+//! the Xiao–Boyd mixing matrix **P**, its spectral quantities (Lemma 2.1),
+//! and the analytic bounds of Lemma 4.4 / Theorem 4.5.
+
+pub mod eig;
+pub mod matrix;
+
+pub use eig::{power_iteration_sym, spectral_radius_sym, symmetric_eigenvalues};
+pub use matrix::Mat;

@@ -1,0 +1,21 @@
+//! `sgs` binary — the L3 coordinator launcher.
+//!
+//! Run `sgs help` for the command list. Typical session:
+//! ```text
+//! make artifacts                      # AOT-compile the Pallas/JAX layers
+//! sgs describe --s 4 --k 2            # inspect the agent grid
+//! sgs compare --backend xla --iters 2000 --out-dir bench_out
+//! ```
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() {
+        vec!["help".to_string()]
+    } else {
+        argv
+    };
+    if let Err(e) = sgs::cli::dispatch(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,5 @@
+//! Run instrumentation: per-iteration records, summaries, CSV/JSON dumps.
+
+pub mod recorder;
+
+pub use recorder::{Record, Recorder, RunSummary};

@@ -1,0 +1,186 @@
+//! Per-iteration training records + end-of-run summary.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+/// One training iteration's observations.
+#[derive(Debug, Clone, Default)]
+pub struct Record {
+    pub t: usize,
+    pub lr: f64,
+    /// mean mini-batch loss across data-groups (None during pipeline fill)
+    pub train_loss: Option<f64>,
+    /// loss of the group-averaged weights on the probe batch
+    pub eval_loss: Option<f64>,
+    /// probe-batch accuracy of the averaged weights
+    pub eval_acc: Option<f64>,
+    /// consensus error δ(t) (eq. 22)
+    pub delta: Option<f64>,
+    /// modelled wall-clock time at the END of this iteration (sim clock)
+    pub sim_time_s: f64,
+}
+
+/// Collects records and produces figures/summaries.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<Record>,
+}
+
+/// Scalar end-of-run summary.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub iters: usize,
+    pub final_train_loss: Option<f64>,
+    pub final_eval_loss: Option<f64>,
+    pub final_eval_acc: Option<f64>,
+    pub final_delta: Option<f64>,
+    pub total_sim_time_s: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn last_some<F: Fn(&Record) -> Option<f64>>(&self, f: F) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| f(r))
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        RunSummary {
+            iters: self.records.len(),
+            final_train_loss: self.last_some(|r| r.train_loss),
+            final_eval_loss: self.last_some(|r| r.eval_loss),
+            final_eval_acc: self.last_some(|r| r.eval_acc),
+            final_delta: self.last_some(|r| r.delta),
+            total_sim_time_s: self.records.last().map_or(0.0, |r| r.sim_time_s),
+        }
+    }
+
+    /// Smoothed train-loss series: mean over trailing `window` losses at
+    /// each multiple of `stride` (figure-friendly downsampling).
+    pub fn loss_series(&self, stride: usize, window: usize) -> Vec<(usize, f64, f64)> {
+        let mut out = Vec::new();
+        for (i, r) in self.records.iter().enumerate() {
+            if i % stride.max(1) != 0 {
+                continue;
+            }
+            let lo = i.saturating_sub(window.saturating_sub(1));
+            let losses: Vec<f64> = self.records[lo..=i]
+                .iter()
+                .filter_map(|r| r.train_loss)
+                .collect();
+            if losses.is_empty() {
+                continue;
+            }
+            out.push((r.t, crate::util::mean(&losses), r.sim_time_s));
+        }
+        out
+    }
+
+    /// Write the full per-iteration table as CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["t", "lr", "train_loss", "eval_loss", "eval_acc", "delta", "sim_time_s"],
+        )?;
+        let nan = f64::NAN;
+        for r in &self.records {
+            w.row(&[
+                r.t as f64,
+                r.lr,
+                r.train_loss.unwrap_or(nan),
+                r.eval_loss.unwrap_or(nan),
+                r.eval_acc.unwrap_or(nan),
+                r.delta.unwrap_or(nan),
+                r.sim_time_s,
+            ])?;
+        }
+        w.flush()
+    }
+
+    pub fn summary_json(&self) -> Json {
+        let s = self.summary();
+        let mut j = Json::obj();
+        j.set("iters", s.iters)
+            .set("total_sim_time_s", s.total_sim_time_s);
+        let set_opt = |j: &mut Json, key: &str, v: Option<f64>| {
+            if let Some(v) = v {
+                j.set(key, v);
+            }
+        };
+        set_opt(&mut j, "final_train_loss", s.final_train_loss);
+        set_opt(&mut j, "final_eval_loss", s.final_eval_loss);
+        set_opt(&mut j, "final_eval_acc", s.final_eval_acc);
+        set_opt(&mut j, "final_delta", s.final_delta);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, loss: Option<f64>) -> Record {
+        Record {
+            t,
+            lr: 0.1,
+            train_loss: loss,
+            sim_time_s: t as f64 * 0.01,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn summary_picks_last_values() {
+        let mut r = Recorder::new();
+        r.push(rec(0, None));
+        r.push(rec(1, Some(2.0)));
+        r.push(rec(2, Some(1.5)));
+        r.push(rec(3, None));
+        let s = r.summary();
+        assert_eq!(s.final_train_loss, Some(1.5));
+        assert_eq!(s.iters, 4);
+        assert!((s.total_sim_time_s - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_series_smooths_and_strides() {
+        let mut r = Recorder::new();
+        for t in 0..10 {
+            r.push(rec(t, Some(t as f64)));
+        }
+        let series = r.loss_series(2, 2);
+        assert_eq!(series.len(), 5);
+        // at t=2, window {1,2} -> mean 1.5
+        assert_eq!(series[1].0, 2);
+        assert!((series[1].1 - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("sgs_recorder");
+        let path = dir.join("run.csv");
+        let mut r = Recorder::new();
+        r.push(rec(0, Some(2.3)));
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("t,lr,train_loss"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

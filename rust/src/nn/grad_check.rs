@@ -1,0 +1,143 @@
+//! Finite-difference gradient checking — the ground truth beneath both
+//! backends. Central differences on randomly sampled coordinates (checking
+//! every coordinate of a 100k-param net would drown the test suite).
+
+use crate::nn::layer::LayerShape;
+use crate::nn::{dense_bwd, dense_fwd, full_backward, full_loss};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Max relative error between analytic and finite-difference gradients of a
+/// scalarized single layer: f = Σ g_out ⊙ layer(x, w, b).
+pub fn check_layer(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    layer: LayerShape,
+    eps: f32,
+    rng: &mut Pcg32,
+) -> f64 {
+    let h_out = dense_fwd(x, w, b, layer.kind);
+    // fixed co-vector so the scalar is smooth in the parameters
+    let mut g_out = Tensor::zeros(h_out.shape());
+    rng.fill_normal(g_out.data_mut(), 1.0);
+
+    let (g_x, g_w, g_b) = dense_bwd(x, w, &h_out, &g_out, layer.kind);
+
+    let scalar = |x: &Tensor, w: &Tensor, b: &Tensor| -> f64 {
+        let h = dense_fwd(x, w, b, layer.kind);
+        h.data()
+            .iter()
+            .zip(g_out.data())
+            .map(|(&a, &c)| (a as f64) * (c as f64))
+            .sum()
+    };
+
+    let mut worst: f64 = 0.0;
+    let mut probe = |analytic: &Tensor, which: usize| {
+        let n_samples = analytic.len().min(12);
+        for _ in 0..n_samples {
+            let idx = rng.below(analytic.len());
+            let (mut xp, mut wp, mut bp) = (x.clone(), w.clone(), b.clone());
+            let (mut xm, mut wm, mut bm) = (x.clone(), w.clone(), b.clone());
+            let target_p = match which {
+                0 => &mut xp,
+                1 => &mut wp,
+                _ => &mut bp,
+            };
+            target_p.data_mut()[idx] += eps;
+            let target_m = match which {
+                0 => &mut xm,
+                1 => &mut wm,
+                _ => &mut bm,
+            };
+            target_m.data_mut()[idx] -= eps;
+            let fd = (scalar(&xp, &wp, &bp) - scalar(&xm, &wm, &bm)) / (2.0 * eps as f64);
+            let an = analytic.data()[idx] as f64;
+            let denom = fd.abs().max(an.abs()).max(1.0);
+            worst = worst.max((fd - an).abs() / denom);
+        }
+    };
+    probe(&g_x, 0);
+    probe(&g_w, 1);
+    probe(&g_b, 2);
+    worst
+}
+
+/// Max relative error between `full_backward` and central differences on
+/// sampled coordinates of every layer's (W, b).
+pub fn check_full(
+    x: &Tensor,
+    onehot: &Tensor,
+    params: &[(Tensor, Tensor)],
+    layers: &[LayerShape],
+    eps: f32,
+    rng: &mut Pcg32,
+) -> f64 {
+    let (_, grads) = full_backward(x, onehot, params, layers);
+    let mut worst: f64 = 0.0;
+    for li in 0..params.len() {
+        for which in 0..2usize {
+            let analytic = if which == 0 { &grads[li].0 } else { &grads[li].1 };
+            let n_samples = analytic.len().min(8);
+            for _ in 0..n_samples {
+                let idx = rng.below(analytic.len());
+                let mut pp: Vec<(Tensor, Tensor)> = params.to_vec();
+                let mut pm: Vec<(Tensor, Tensor)> = params.to_vec();
+                if which == 0 {
+                    pp[li].0.data_mut()[idx] += eps;
+                    pm[li].0.data_mut()[idx] -= eps;
+                } else {
+                    pp[li].1.data_mut()[idx] += eps;
+                    pm[li].1.data_mut()[idx] -= eps;
+                }
+                let fd = (full_loss(x, onehot, &pp, layers) as f64
+                    - full_loss(x, onehot, &pm, layers) as f64)
+                    / (2.0 * eps as f64);
+                let an = analytic.data()[idx] as f64;
+                let denom = fd.abs().max(an.abs()).max(1e-2);
+                worst = worst.max((fd - an).abs() / denom);
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::{he_init, init_params};
+    use crate::nn::layer::{resmlp_layers, LayerKind};
+
+    #[test]
+    fn linear_layer_fd_exact() {
+        // linear layers are exactly linear -> central difference is exact
+        let mut rng = Pcg32::new(9);
+        let x = {
+            let mut t = Tensor::zeros(&[3, 4]);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        };
+        let w = he_init(&mut rng, 4, 5);
+        let b = Tensor::zeros(&[5]);
+        let layer = LayerShape::new(LayerKind::Linear, 4, 5).unwrap();
+        let err = check_layer(&x, &w, &b, layer, 1e-2, &mut rng);
+        assert!(err < 1e-3, "{err}");
+    }
+
+    #[test]
+    fn full_net_fd_small() {
+        let mut rng = Pcg32::new(11);
+        let layers = resmlp_layers(6, 5, 1, 3);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut onehot = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            let c = rng.below(3);
+            onehot.data_mut()[i * 3 + c] = 1.0;
+        }
+        let err = check_full(&x, &onehot, &params, &layers, 1e-3, &mut rng);
+        assert!(err < 2e-2, "{err}");
+    }
+}

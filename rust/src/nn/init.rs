@@ -1,0 +1,108 @@
+//! Weight initialization. He (Kaiming) normal for ReLU stacks — std
+//! sqrt(2/d_in) — with zero biases, matching the python test fixtures'
+//! 1/sqrt(d_in) scale closely enough that both backends start in the same
+//! loss regime.
+
+use crate::nn::layer::LayerShape;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// W ~ N(0, 2/d_in), shaped [d_in, d_out].
+pub fn he_init(rng: &mut Pcg32, d_in: usize, d_out: usize) -> Tensor {
+    let std = (2.0 / d_in as f32).sqrt();
+    let mut w = Tensor::zeros(&[d_in, d_out]);
+    rng.fill_normal(w.data_mut(), std);
+    w
+}
+
+/// W ~ N(0, 2/(d_in + d_out)) (Glorot), shaped [d_in, d_out].
+pub fn glorot_init(rng: &mut Pcg32, d_in: usize, d_out: usize) -> Tensor {
+    let std = (2.0 / (d_in + d_out) as f32).sqrt();
+    let mut w = Tensor::zeros(&[d_in, d_out]);
+    rng.fill_normal(w.data_mut(), std);
+    w
+}
+
+/// Initialize a full layer stack: He weights, zero biases.
+pub fn init_params(rng: &mut Pcg32, layers: &[LayerShape]) -> Vec<(Tensor, Tensor)> {
+    layers
+        .iter()
+        .map(|l| (he_init(rng, l.d_in, l.d_out), Tensor::zeros(&[l.d_out])))
+        .collect()
+}
+
+/// Flatten (W, b) pairs into one parameter vector (W row-major, then b) —
+/// the layout the gossip/consensus layer mixes.
+pub fn flatten_params(params: &[(Tensor, Tensor)]) -> Tensor {
+    let total: usize = params.iter().map(|(w, b)| w.len() + b.len()).sum();
+    let mut flat = Vec::with_capacity(total);
+    for (w, b) in params {
+        flat.extend_from_slice(w.data());
+        flat.extend_from_slice(b.data());
+    }
+    Tensor::from_vec(&[total], flat).unwrap()
+}
+
+/// Inverse of `flatten_params` for a given layer stack.
+pub fn unflatten_params(flat: &Tensor, layers: &[LayerShape]) -> Vec<(Tensor, Tensor)> {
+    let mut out = Vec::with_capacity(layers.len());
+    let mut off = 0;
+    for l in layers {
+        let wlen = l.d_in * l.d_out;
+        let w = Tensor::from_vec(
+            &[l.d_in, l.d_out],
+            flat.data()[off..off + wlen].to_vec(),
+        )
+        .unwrap();
+        off += wlen;
+        let b = Tensor::from_vec(&[l.d_out], flat.data()[off..off + l.d_out].to_vec()).unwrap();
+        off += l.d_out;
+        out.push((w, b));
+    }
+    debug_assert_eq!(off, flat.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layer::{resmlp_layers, LayerKind};
+
+    #[test]
+    fn he_std_is_right() {
+        let mut rng = Pcg32::new(1);
+        let w = he_init(&mut rng, 512, 256);
+        let xs: Vec<f64> = w.data().iter().map(|&x| x as f64).collect();
+        let sd = crate::util::stddev(&xs);
+        let want = (2.0f64 / 512.0).sqrt();
+        assert!((sd - want).abs() < 0.002, "sd={sd} want={want}");
+    }
+
+    #[test]
+    fn init_params_shapes() {
+        let mut rng = Pcg32::new(2);
+        let layers = resmlp_layers(8, 4, 2, 3);
+        let params = init_params(&mut rng, &layers);
+        assert_eq!(params.len(), 4);
+        assert_eq!(params[0].0.shape(), &[8, 4]);
+        assert_eq!(params[3].0.shape(), &[4, 3]);
+        assert!(params.iter().all(|(_, b)| b.data().iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Pcg32::new(3);
+        let layers = vec![
+            LayerShape::new(LayerKind::Relu, 3, 2).unwrap(),
+            LayerShape::new(LayerKind::Linear, 2, 4).unwrap(),
+        ];
+        let params = init_params(&mut rng, &layers);
+        let flat = flatten_params(&params);
+        assert_eq!(flat.len(), 3 * 2 + 2 + 2 * 4 + 4);
+        let back = unflatten_params(&flat, &layers);
+        for ((w, b), (w2, b2)) in params.iter().zip(&back) {
+            assert_eq!(w, w2);
+            assert_eq!(b, b2);
+        }
+    }
+}

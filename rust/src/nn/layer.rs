@@ -1,0 +1,133 @@
+//! Layer vocabulary shared with the compile path.
+//!
+//! `LayerKind` string forms must stay in sync with
+//! `python/compile/kernels/ref.py` (KIND_*) and the manifest emitted by
+//! `python/compile/aot.py`.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// z = x·W + b
+    Linear,
+    /// relu(z)
+    Relu,
+    /// relu(z) + x  (requires d_in == d_out)
+    Residual,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        match s {
+            "linear" => Ok(LayerKind::Linear),
+            "relu" => Ok(LayerKind::Relu),
+            "residual" => Ok(LayerKind::Residual),
+            _ => Err(Error::Manifest(format!("unknown layer kind {s:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Linear => "linear",
+            LayerKind::Relu => "relu",
+            LayerKind::Residual => "residual",
+        }
+    }
+}
+
+/// Static shape of one dense layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerShape {
+    pub kind: LayerKind,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl LayerShape {
+    pub fn new(kind: LayerKind, d_in: usize, d_out: usize) -> Result<LayerShape> {
+        if kind == LayerKind::Residual && d_in != d_out {
+            return Err(Error::Shape(format!(
+                "residual layer requires d_in == d_out, got {d_in} x {d_out}"
+            )));
+        }
+        Ok(LayerShape { kind, d_in, d_out })
+    }
+
+    /// Flattened parameter count (W then b).
+    pub fn param_count(&self) -> usize {
+        self.d_in * self.d_out + self.d_out
+    }
+
+    /// Artifact key (matches `LayerSpec.key` in python/compile/model.py).
+    pub fn key(&self, batch: usize) -> String {
+        format!("{}_{batch}x{}x{}", self.kind.as_str(), self.d_in, self.d_out)
+    }
+}
+
+/// Build the reference residual-MLP layer stack used by all experiments:
+/// d_in -> hidden (relu) -> [hidden -> hidden residual] * blocks -> classes.
+pub fn resmlp_layers(
+    d_in: usize,
+    hidden: usize,
+    blocks: usize,
+    classes: usize,
+) -> Vec<LayerShape> {
+    let mut layers = vec![LayerShape {
+        kind: LayerKind::Relu,
+        d_in,
+        d_out: hidden,
+    }];
+    layers.extend((0..blocks).map(|_| LayerShape {
+        kind: LayerKind::Residual,
+        d_in: hidden,
+        d_out: hidden,
+    }));
+    layers.push(LayerShape {
+        kind: LayerKind::Linear,
+        d_in: hidden,
+        d_out: classes,
+    });
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [LayerKind::Linear, LayerKind::Relu, LayerKind::Residual] {
+            assert_eq!(LayerKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(LayerKind::parse("conv").is_err());
+    }
+
+    #[test]
+    fn residual_must_be_square() {
+        assert!(LayerShape::new(LayerKind::Residual, 4, 5).is_err());
+        assert!(LayerShape::new(LayerKind::Residual, 4, 4).is_ok());
+        assert!(LayerShape::new(LayerKind::Relu, 4, 5).is_ok());
+    }
+
+    #[test]
+    fn key_matches_python_format() {
+        let l = LayerShape::new(LayerKind::Relu, 256, 128).unwrap();
+        assert_eq!(l.key(194), "relu_194x256x128");
+    }
+
+    #[test]
+    fn resmlp_structure() {
+        let layers = resmlp_layers(32, 16, 3, 10);
+        assert_eq!(layers.len(), 5);
+        assert_eq!(layers[0].kind, LayerKind::Relu);
+        assert!(layers[1..4].iter().all(|l| l.kind == LayerKind::Residual));
+        assert_eq!(layers[4].kind, LayerKind::Linear);
+        assert_eq!(layers[4].d_out, 10);
+    }
+
+    #[test]
+    fn param_count() {
+        let l = LayerShape::new(LayerKind::Relu, 3, 2).unwrap();
+        assert_eq!(l.param_count(), 8);
+    }
+}

@@ -1,0 +1,408 @@
+//! Pure-Rust neural-network math: the native `ComputeBackend`.
+//!
+//! Implements exactly the same per-layer forward/backward and loss-grad
+//! contracts as the Pallas kernels (python/compile/kernels), so it serves
+//! three roles:
+//!   1. the finite-difference-checked **oracle** the XLA path is validated
+//!      against (tests/integration_backends.rs),
+//!   2. an artifact-free fallback backend (coordinator runs without
+//!      `make artifacts`),
+//!   3. the "traditional BP on one device" baseline comparator.
+//!
+//! Matmuls use an ikj loop ordering (row-major friendly, autovectorizes);
+//! blocking is deliberately left to the XLA path — see DESIGN.md §Perf.
+
+pub mod grad_check;
+pub mod init;
+pub mod layer;
+
+pub use layer::{resmlp_layers, LayerKind, LayerShape};
+
+use crate::tensor::Tensor;
+
+/// out[m,n] += a[m,k] @ b[k,n]
+fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k_dim);
+    debug_assert_eq!(b.len(), k_dim * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k_dim..(i + 1) * k_dim];
+        let o_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]^T
+///
+/// §Perf: the naive per-(i,j) dot-product version ran ~2.5x slower per
+/// FLOP than `matmul_acc` (serial accumulator chains defeat
+/// autovectorization). Restructured as 4-row blocks of dot products so
+/// the compiler keeps 4 independent accumulator vectors in flight;
+/// see EXPERIMENTS.md §Perf for the before/after.
+fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
+    debug_assert_eq!(b.len(), n * k_dim);
+    for i in 0..m {
+        let a_row = &a[i * k_dim..(i + 1) * k_dim];
+        let o_row = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        // 4 output columns at a time: 4 independent accumulators
+        while j + 4 <= n {
+            let b0 = &b[j * k_dim..(j + 1) * k_dim];
+            let b1 = &b[(j + 1) * k_dim..(j + 2) * k_dim];
+            let b2 = &b[(j + 2) * k_dim..(j + 3) * k_dim];
+            let b3 = &b[(j + 3) * k_dim..(j + 4) * k_dim];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for kk in 0..k_dim {
+                let av = a_row[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            o_row[j] = s0;
+            o_row[j + 1] = s1;
+            o_row[j + 2] = s2;
+            o_row[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let b_row = &b[j * k_dim..(j + 1) * k_dim];
+            o_row[j] = a_row.iter().zip(b_row).map(|(x, y)| x * y).sum();
+            j += 1;
+        }
+    }
+}
+
+/// out[m,n] = a[k,m]^T @ b[k,n]
+///
+/// §Perf note: the `av == 0.0` skip stays — `a` here is the stashed input
+/// activation (post-ReLU, a large zero fraction in hidden layers); removing
+/// the branch was tried and regressed residual-layer bwd ~15%
+/// (EXPERIMENTS.md §Perf, iteration 2).
+fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
+    debug_assert_eq!(a.len(), k_dim * m);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for kk in 0..k_dim {
+        let a_row = &a[kk * m..(kk + 1) * m];
+        let b_row = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Forward one dense layer: h_out = act(x·W + b) [+ x].
+///
+/// x: [B, d_in], w: [d_in, d_out] (row-major), b: [d_out].
+pub fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, kind: LayerKind) -> Tensor {
+    let (batch, d_in) = (x.shape()[0], x.shape()[1]);
+    let d_out = w.shape()[1];
+    debug_assert_eq!(w.shape()[0], d_in);
+    debug_assert_eq!(b.len(), d_out);
+    let mut out = Tensor::zeros(&[batch, d_out]);
+    matmul_acc(x.data(), w.data(), out.data_mut(), batch, d_in, d_out);
+    let od = out.data_mut();
+    for i in 0..batch {
+        for j in 0..d_out {
+            let mut z = od[i * d_out + j] + b.data()[j];
+            match kind {
+                LayerKind::Linear => {}
+                LayerKind::Relu => z = z.max(0.0),
+                LayerKind::Residual => z = z.max(0.0) + x.data()[i * d_out + j],
+            }
+            od[i * d_out + j] = z;
+        }
+    }
+    out
+}
+
+/// Backward one dense layer; mirrors `ref.dense_bwd_ref`.
+///
+/// Returns (g_x, g_w, g_b). `h_out` must be the forward output computed
+/// with exactly these `x` and `w` (the staleness buffers guarantee it).
+pub fn dense_bwd(
+    x: &Tensor,
+    w: &Tensor,
+    h_out: &Tensor,
+    g_out: &Tensor,
+    kind: LayerKind,
+) -> (Tensor, Tensor, Tensor) {
+    let (batch, d_in) = (x.shape()[0], x.shape()[1]);
+    let d_out = w.shape()[1];
+
+    // g_z = g_out * mask(z > 0), mask reconstructed from stored outputs
+    let mut g_z = g_out.clone();
+    match kind {
+        LayerKind::Linear => {}
+        LayerKind::Relu => {
+            for (g, &h) in g_z.data_mut().iter_mut().zip(h_out.data()) {
+                if h <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        LayerKind::Residual => {
+            for ((g, &h), &xv) in g_z
+                .data_mut()
+                .iter_mut()
+                .zip(h_out.data())
+                .zip(x.data())
+            {
+                if h - xv <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+    }
+
+    let mut g_x = Tensor::zeros(&[batch, d_in]);
+    matmul_nt(g_z.data(), w.data(), g_x.data_mut(), batch, d_out, d_in);
+    if kind == LayerKind::Residual {
+        g_x.axpy(1.0, g_out);
+    }
+
+    let mut g_w = Tensor::zeros(&[d_in, d_out]);
+    matmul_tn(x.data(), g_z.data(), g_w.data_mut(), d_in, batch, d_out);
+
+    let mut g_b = Tensor::zeros(&[d_out]);
+    for i in 0..batch {
+        for j in 0..d_out {
+            g_b.data_mut()[j] += g_z.data()[i * d_out + j];
+        }
+    }
+    (g_x, g_w, g_b)
+}
+
+/// Fused softmax cross-entropy: (mean_loss, g_logits) with the 1/B mean
+/// baked into the gradient (eq. (4)).
+pub fn softmax_xent(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor) {
+    let (batch, classes) = (logits.shape()[0], logits.shape()[1]);
+    debug_assert_eq!(onehot.shape(), logits.shape());
+    let inv_b = 1.0 / batch as f32;
+    let mut g = Tensor::zeros(&[batch, classes]);
+    let mut loss = 0.0f64;
+    for i in 0..batch {
+        let row = &logits.data()[i * classes..(i + 1) * classes];
+        let oh = &onehot.data()[i * classes..(i + 1) * classes];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - m).exp();
+        }
+        let lse = sum.ln();
+        let g_row = &mut g.data_mut()[i * classes..(i + 1) * classes];
+        for j in 0..classes {
+            let logp = row[j] - m - lse;
+            loss -= (oh[j] * logp) as f64;
+            g_row[j] = ((row[j] - m).exp() / sum - oh[j]) * inv_b;
+        }
+    }
+    ((loss * inv_b as f64) as f32, g)
+}
+
+/// Full-network forward over a layer stack; params are (W, b) pairs.
+pub fn full_forward(x: &Tensor, params: &[(Tensor, Tensor)], layers: &[LayerShape]) -> Tensor {
+    let mut h = x.clone();
+    for ((w, b), layer) in params.iter().zip(layers) {
+        h = dense_fwd(&h, w, b, layer.kind);
+    }
+    h
+}
+
+/// Mean loss of the whole network on (x, onehot).
+pub fn full_loss(
+    x: &Tensor,
+    onehot: &Tensor,
+    params: &[(Tensor, Tensor)],
+    layers: &[LayerShape],
+) -> f32 {
+    let logits = full_forward(x, params, layers);
+    softmax_xent(&logits, onehot).0
+}
+
+/// Whole-network gradient via per-layer backward chaining: the exact
+/// computation the coordinator distributes across K modules, in one place.
+/// Returns mean-scaled (g_w, g_b) per layer.
+pub fn full_backward(
+    x: &Tensor,
+    onehot: &Tensor,
+    params: &[(Tensor, Tensor)],
+    layers: &[LayerShape],
+) -> (f32, Vec<(Tensor, Tensor)>) {
+    // forward, stashing every activation (same as the staleness buffers)
+    let mut acts = vec![x.clone()];
+    for ((w, b), layer) in params.iter().zip(layers) {
+        let h = dense_fwd(acts.last().unwrap(), w, b, layer.kind);
+        acts.push(h);
+    }
+    let (loss, mut g) = softmax_xent(acts.last().unwrap(), onehot);
+    let mut grads = Vec::with_capacity(params.len());
+    for i in (0..params.len()).rev() {
+        let (w, _) = &params[i];
+        let (g_x, g_w, g_b) = dense_bwd(&acts[i], w, &acts[i + 1], &g, layers[i].kind);
+        grads.push((g_w, g_b));
+        g = g_x;
+    }
+    grads.reverse();
+    (loss, grads)
+}
+
+/// Classification accuracy of logits vs one-hot labels.
+pub fn accuracy(logits: &Tensor, onehot: &Tensor) -> f64 {
+    let (batch, classes) = (logits.shape()[0], logits.shape()[1]);
+    let mut correct = 0usize;
+    for i in 0..batch {
+        let row = &logits.data()[i * classes..(i + 1) * classes];
+        let oh = &onehot.data()[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let label = oh
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::he_init;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn dense_fwd_known_values() {
+        // x = [[1, 2]], W = [[1, 0], [0, 1]], b = [0.5, -10]
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![0.5, -10.0]).unwrap();
+        let lin = dense_fwd(&x, &w, &b, LayerKind::Linear);
+        assert_eq!(lin.data(), &[1.5, -8.0]);
+        let relu = dense_fwd(&x, &w, &b, LayerKind::Relu);
+        assert_eq!(relu.data(), &[1.5, 0.0]);
+        let res = dense_fwd(&x, &w, &b, LayerKind::Residual);
+        assert_eq!(res.data(), &[2.5, 2.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_is_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let mut onehot = Tensor::zeros(&[4, 10]);
+        for i in 0..4 {
+            onehot.data_mut()[i * 10 + i] = 1.0;
+        }
+        let (loss, g) = softmax_xent(&logits, &onehot);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero
+        for i in 0..4 {
+            let s: f32 = g.data()[i * 10..(i + 1) * 10].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_with_large_logits() {
+        let logits = Tensor::from_vec(&[1, 2], vec![1000.0, -1000.0]).unwrap();
+        let onehot = Tensor::from_vec(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let (loss, g) = softmax_xent(&logits, &onehot);
+        assert!(loss.is_finite() && loss < 1e-3);
+        assert!(g.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bwd_matches_finite_difference_all_kinds() {
+        let mut rng = Pcg32::new(1);
+        for kind in [LayerKind::Linear, LayerKind::Relu, LayerKind::Residual] {
+            let (b_sz, d) = (4, 6);
+            let x = rand_tensor(&mut rng, &[b_sz, d]);
+            let w = he_init(&mut rng, d, d);
+            let bias = rand_tensor(&mut rng, &[d]);
+            let layer = LayerShape::new(kind, d, d).unwrap();
+            let err = grad_check::check_layer(&x, &w, &bias, layer, 1e-3, &mut rng);
+            assert!(err < 2e-2, "{kind:?}: fd mismatch {err}");
+        }
+    }
+
+    #[test]
+    fn full_backward_matches_finite_difference() {
+        let mut rng = Pcg32::new(2);
+        let layers = resmlp_layers(8, 6, 2, 4);
+        let params: Vec<(Tensor, Tensor)> = layers
+            .iter()
+            .map(|l| (he_init(&mut rng, l.d_in, l.d_out), Tensor::zeros(&[l.d_out])))
+            .collect();
+        let x = rand_tensor(&mut rng, &[5, 8]);
+        let mut onehot = Tensor::zeros(&[5, 4]);
+        for i in 0..5 {
+            let c = rng.below(4);
+            onehot.data_mut()[i * 4 + c] = 1.0;
+        }
+        let err = grad_check::check_full(&x, &onehot, &params, &layers, 1e-3, &mut rng);
+        assert!(err < 2e-2, "fd mismatch {err}");
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, 5.0, 0.0, 9.0, 1.0, 1.0]).unwrap();
+        let onehot = Tensor::from_vec(&[2, 3], vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(accuracy(&logits, &onehot), 0.5);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_naive() {
+        let mut rng = Pcg32::new(5);
+        let (m, k, n) = (7, 5, 6);
+        let a = rand_tensor(&mut rng, &[m, k]);
+        let bt = rand_tensor(&mut rng, &[n, k]);
+        let at = rand_tensor(&mut rng, &[k, m]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+
+        // nt: a @ bt^T
+        let mut out = vec![0.0; m * n];
+        matmul_nt(a.data(), bt.data(), &mut out, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a.data()[i * k + kk] * bt.data()[j * k + kk]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-4);
+            }
+        }
+        // tn: at^T @ b
+        let mut out2 = vec![0.0; m * n];
+        matmul_tn(at.data(), b.data(), &mut out2, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| at.data()[kk * m + i] * b.data()[kk * n + j]).sum();
+                assert!((out2[i * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! The fully decoupled pipeline: per-module agents, the deterministic sim
+//! engine, and the one-thread-per-agent engine.
+
+pub mod module_agent;
+pub mod sim;
+pub mod threaded;
+
+pub use module_agent::{ActMsg, ModuleAgent};
+pub use sim::{GroupIterOut, PipelineGroup};
+pub use threaded::{run_threaded, ThreadedRunOut};

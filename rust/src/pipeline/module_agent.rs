@@ -1,0 +1,235 @@
+//! One pipeline module: the compute state of agent (s,k).
+//!
+//! Owns the current weights of its layer slice [lo, hi), the in-flight
+//! batch stashes, and the forward/backward operations against a
+//! `ComputeBackend`. Gradients are evaluated at the **stashed** weight
+//! snapshot (eq. (10): w(τ+k−1)), never at the current weights.
+
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+use crate::staleness::{Stash, StashQueue};
+use crate::tensor::Tensor;
+use crate::trainer::opt::{ModuleOptimizer, OptimizerKind};
+
+/// Activation message travelling down the pipeline: the boundary
+/// activation plus the batch's labels (consumed by the last module).
+#[derive(Debug, Clone)]
+pub struct ActMsg {
+    pub x: Tensor,
+    pub onehot: Tensor,
+}
+
+pub struct ModuleAgent {
+    /// module index within the pipeline (0-based)
+    pub k: usize,
+    /// global layer range [lo, hi)
+    pub lo: usize,
+    pub hi: usize,
+    /// current weights ŵ_{s,k}(t) for the local layers
+    pub params: Vec<(Tensor, Tensor)>,
+    stash: StashQueue,
+    opt: ModuleOptimizer,
+}
+
+impl ModuleAgent {
+    /// Plain-SGD agent (the paper's update, eq. (13a)).
+    pub fn new(k: usize, lo: usize, hi: usize, params: Vec<(Tensor, Tensor)>) -> ModuleAgent {
+        Self::with_optimizer(k, lo, hi, params, OptimizerKind::Sgd)
+    }
+
+    pub fn with_optimizer(
+        k: usize,
+        lo: usize,
+        hi: usize,
+        params: Vec<(Tensor, Tensor)>,
+        opt: OptimizerKind,
+    ) -> ModuleAgent {
+        assert_eq!(params.len(), hi - lo);
+        ModuleAgent {
+            k,
+            lo,
+            hi,
+            params,
+            stash: StashQueue::new(),
+            opt: ModuleOptimizer::new(opt),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.stash.len()
+    }
+
+    /// Forward batch `tau` through the local layers with CURRENT weights,
+    /// stashing activations + a weight snapshot for the later backward.
+    /// Returns the boundary activation to send downstream.
+    pub fn forward(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        tau: i64,
+        msg: ActMsg,
+    ) -> Result<ActMsg> {
+        let acts = backend.module_fwd(self.lo, self.hi, &msg.x, &self.params)?;
+        let out = acts.last().unwrap().clone();
+        self.stash.push(Stash {
+            batch_id: tau,
+            acts,
+            params: self.params.clone(),
+            onehot: Some(msg.onehot.clone()),
+        });
+        Ok(ActMsg {
+            x: out,
+            onehot: msg.onehot,
+        })
+    }
+
+    /// For the LAST module: mean loss + g_logits of stashed batch `tau`
+    /// (its forward ran earlier this same iteration).
+    pub fn loss_grad_of(
+        &self,
+        backend: &dyn ComputeBackend,
+        tau: i64,
+    ) -> Result<(f32, Tensor)> {
+        let stash = self
+            .stash
+            .get(tau)
+            .ok_or_else(|| Error::other(format!("no stash for batch {tau}")))?;
+        let logits = stash.acts.last().unwrap();
+        let onehot = stash
+            .onehot
+            .as_ref()
+            .ok_or_else(|| Error::other("stash missing labels"))?;
+        backend.loss_grad(logits, onehot)
+    }
+
+    /// Backward batch `tau`: consume its stash, chain `layer_bwd` from the
+    /// local top layer down, all evaluated at the stashed weight snapshot.
+    /// Returns (gradient to send upstream, per-local-layer (g_W, g_b)).
+    pub fn backward(
+        &mut self,
+        backend: &dyn ComputeBackend,
+        tau: i64,
+        g_out: Tensor,
+    ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        let stash = self.stash.pop(tau);
+        let mut g = g_out;
+        let n = self.n_layers();
+        let mut grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
+        for off in (0..n).rev() {
+            let (w, _) = &stash.params[off];
+            let (g_x, g_w, g_b) = backend.layer_bwd(
+                self.lo + off,
+                &stash.acts[off],
+                w,
+                &stash.acts[off + 1],
+                &g,
+            )?;
+            grads.push((g_w, g_b));
+            g = g_x;
+        }
+        grads.reverse();
+        Ok((g, grads))
+    }
+
+    /// Apply the stale-gradient update (eq. (13a), generalized to the
+    /// configured optimizer): û = optimizer(ŵ, ∇̂; η·scale), with
+    /// scale = |D_s|/N (the trainer passes it).
+    pub fn apply_update(&mut self, eta: f64, scale: f64, grads: &[(Tensor, Tensor)]) {
+        debug_assert_eq!(grads.len(), self.params.len());
+        self.opt.step(&mut self.params, grads, eta, scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> (NativeBackend, ModuleAgent, ActMsg) {
+        let layers = resmlp_layers(6, 5, 2, 3); // 4 layers
+        let backend = NativeBackend::new(layers.clone(), 4);
+        let mut rng = Pcg32::new(8);
+        let params = init_params(&mut rng, &layers);
+        let agent = ModuleAgent::new(0, 0, 2, params[0..2].to_vec());
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut onehot = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            onehot.data_mut()[i * 3 + rng.below(3)] = 1.0;
+        }
+        (backend, agent, ActMsg { x, onehot })
+    }
+
+    #[test]
+    fn forward_stashes_and_emits_boundary() {
+        let (backend, mut agent, msg) = setup();
+        let out = agent.forward(&backend, 0, msg).unwrap();
+        assert_eq!(out.x.shape(), &[4, 5]);
+        assert_eq!(agent.inflight(), 1);
+    }
+
+    #[test]
+    fn backward_uses_snapshot_weights() {
+        let (backend, mut agent, msg) = setup();
+        agent.forward(&backend, 0, msg.clone()).unwrap();
+
+        // mutate CURRENT weights after the forward; backward must still use
+        // the stashed snapshot, so g_w is identical to an unmutated run
+        let mut agent2 = ModuleAgent::new(0, 0, 2, agent.params.clone());
+        // rebuild same stash in agent2
+        agent2.forward(&backend, 0, msg).unwrap();
+        for (w, _) in agent.params.iter_mut() {
+            w.scale(5.0);
+        }
+
+        let g_out = Tensor::from_vec(&[4, 5], vec![0.1; 20]).unwrap();
+        let (g_in_a, grads_a) = agent.backward(&backend, 0, g_out.clone()).unwrap();
+        let (g_in_b, grads_b) = agent2.backward(&backend, 0, g_out).unwrap();
+        assert_eq!(g_in_a, g_in_b);
+        assert_eq!(grads_a, grads_b);
+        assert_eq!(agent.inflight(), 0);
+    }
+
+    #[test]
+    fn update_moves_downhill() {
+        let (backend, mut agent, msg) = setup();
+        let before = agent.params.clone();
+        agent.forward(&backend, 0, msg).unwrap();
+        let g_out = Tensor::from_vec(&[4, 5], vec![1.0; 20]).unwrap();
+        let (_, grads) = agent.backward(&backend, 0, g_out).unwrap();
+        agent.apply_update(0.1, 0.5, &grads);
+        for ((w_new, _), ((w_old, _), (g_w, _))) in
+            agent.params.iter().zip(before.iter().zip(&grads))
+        {
+            for ((&n, &o), &g) in w_new.data().iter().zip(w_old.data()).zip(g_w.data()) {
+                assert!((n - (o - 0.05 * g)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn loss_grad_reads_stash() {
+        // single-module pipeline: module covers all layers incl. logits
+        let layers = resmlp_layers(6, 5, 0, 3);
+        let backend = NativeBackend::new(layers.clone(), 4);
+        let mut rng = Pcg32::new(9);
+        let params = init_params(&mut rng, &layers);
+        let mut agent = ModuleAgent::new(0, 0, 2, params);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut onehot = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            onehot.data_mut()[i * 3 + rng.below(3)] = 1.0;
+        }
+        agent.forward(&backend, 0, ActMsg { x, onehot }).unwrap();
+        let (loss, g) = agent.loss_grad_of(&backend, 0).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        assert_eq!(g.shape(), &[4, 3]);
+    }
+}

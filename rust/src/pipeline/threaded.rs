@@ -1,0 +1,345 @@
+//! Threaded engine: one OS thread per agent (s,k), exactly the paper's
+//! multi-agent deployment shape.
+//!
+//! * activations flow k→k+1 and error gradients k+1→k over mpsc channels
+//!   (Algorithm 1's send/receive pairs);
+//! * gossip (eq. 13b) synchronizes each model-group through shared slots
+//!   guarded by a per-iteration barrier;
+//! * the mixing arithmetic runs in the same (ascending-r) order as the sim
+//!   engine, so the two engines are **bit-identical**
+//!   (tests/integration_engines.rs).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Barrier, Mutex};
+
+use crate::config::ExperimentConfig;
+use crate::data::{shard_even, Dataset, MiniBatchSampler};
+use crate::error::{Error, Result};
+use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
+use crate::nn::init::init_params;
+use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
+use crate::runtime::ComputeBackend;
+use crate::staleness::{partition_layers, Schedule};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Result of a threaded run: per-iteration mean losses + final weights.
+pub struct ThreadedRunOut {
+    /// train loss per iteration (mean over groups; None during fill)
+    pub losses: Vec<Option<f64>>,
+    /// final parameters per group, all L layers in order
+    pub final_params: Vec<Vec<(Tensor, Tensor)>>,
+}
+
+/// Run `cfg` with one thread per agent. Identical numerics to
+/// `trainer::Trainer` (sim engine); returns losses + final weights.
+pub fn run_threaded(
+    cfg: &ExperimentConfig,
+    backend: &(dyn ComputeBackend + Sync),
+    ds: &Dataset,
+) -> Result<ThreadedRunOut> {
+    cfg.validate()?;
+    let layers = cfg.model.layers();
+    let s_groups = cfg.s;
+    let k_modules = cfg.k;
+    let iters = cfg.iters as i64;
+
+    let mut root_rng = Pcg32::new(cfg.seed);
+    let init = init_params(&mut root_rng.fork(0x1217), &layers);
+    let bounds = partition_layers(layers.len(), k_modules);
+    let shards = shard_even(ds, s_groups, cfg.seed ^ 0xDA7A)?;
+
+    // P row for each s (ascending-r order, matching GossipMixer)
+    let p_rows: Vec<Vec<(usize, f64)>> = if s_groups > 1 {
+        let g = Graph::build(cfg.topology, s_groups)?;
+        let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
+        let p = xiao_boyd_weights(&g, alpha)?;
+        (0..s_groups)
+            .map(|s| {
+                (0..s_groups)
+                    .filter(|&r| p[(s, r)] != 0.0)
+                    .map(|r| (r, p[(s, r)]))
+                    .collect()
+            })
+            .collect()
+    } else {
+        vec![vec![(0usize, 1.0f64)]]
+    };
+
+    // gossip slots: slot[k][s] = û_{s,k}(t) posted after the update phase
+    let slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>> = (0..k_modules)
+        .map(|_| (0..s_groups).map(|_| Mutex::new(None)).collect())
+        .collect();
+    let n_agents = s_groups * k_modules;
+    let barrier = Barrier::new(n_agents);
+
+    // per-edge channels
+    struct GroupChans {
+        act_tx: Vec<Option<Sender<ActMsg>>>,
+        act_rx: Vec<Option<Receiver<ActMsg>>>,
+        grad_tx: Vec<Option<Sender<Tensor>>>,
+        grad_rx: Vec<Option<Receiver<Tensor>>>,
+    }
+    let mut chans: Vec<GroupChans> = Vec::with_capacity(s_groups);
+    for _ in 0..s_groups {
+        let mut gc = GroupChans {
+            act_tx: (0..k_modules).map(|_| None).collect(),
+            act_rx: (0..k_modules).map(|_| None).collect(),
+            grad_tx: (0..k_modules).map(|_| None).collect(),
+            grad_rx: (0..k_modules).map(|_| None).collect(),
+        };
+        for k in 0..k_modules.saturating_sub(1) {
+            let (tx, rx) = channel::<ActMsg>();
+            gc.act_tx[k] = Some(tx); // module k sends acts to k+1
+            gc.act_rx[k + 1] = Some(rx);
+            let (tx, rx) = channel::<Tensor>();
+            gc.grad_tx[k + 1] = Some(tx); // module k+1 sends grads to k
+            gc.grad_rx[k] = Some(rx);
+        }
+        chans.push(gc);
+    }
+
+    // loss reporting from last-module agents
+    let (loss_tx, loss_rx) = channel::<(i64, usize, f32)>();
+
+    let sched = Schedule::with_mode(k_modules, cfg.mode);
+    let result: Result<Vec<()>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n_agents);
+        // drain channel containers so each thread owns its endpoints
+        let mut chan_parts: Vec<(Vec<Option<Sender<ActMsg>>>, Vec<Option<Receiver<ActMsg>>>, Vec<Option<Sender<Tensor>>>, Vec<Option<Receiver<Tensor>>>)> = chans
+            .into_iter()
+            .map(|gc| (gc.act_tx, gc.act_rx, gc.grad_tx, gc.grad_rx))
+            .collect();
+
+        for s in 0..s_groups {
+            let (act_txs, act_rxs, grad_txs, grad_rxs) = {
+                let (a, b, c, d) = std::mem::take(&mut chan_parts[s]);
+                (a, b, c, d)
+            };
+            let mut act_txs = act_txs;
+            let mut act_rxs = act_rxs;
+            let mut grad_txs = grad_txs;
+            let mut grad_rxs = grad_rxs;
+
+            for k in 0..k_modules {
+                let (lo, hi) = bounds[k];
+                let mut agent =
+                    ModuleAgent::with_optimizer(k, lo, hi, init[lo..hi].to_vec(), cfg.optimizer);
+                let mut sampler = (k == 0).then(|| {
+                    MiniBatchSampler::new(
+                        shards[s].clone(),
+                        cfg.batch,
+                        cfg.seed ^ (0xBA7C << 8) ^ s as u64,
+                    )
+                });
+                let grad_scale = shards[s].weight();
+                let act_tx = act_txs[k].take();
+                let act_rx = act_rxs[k].take();
+                let grad_tx = grad_txs[k].take();
+                let grad_rx = grad_rxs[k].take();
+                let loss_tx = loss_tx.clone();
+                let slots = &slots;
+                let barrier = &barrier;
+                let p_row = p_rows[s].clone();
+
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for t in 0..iters {
+                        let eta = cfg.lr.at(t as usize);
+                        // ---- forward ----
+                        if let Some(tau) = sched.forward_batch(t, k) {
+                            let msg = if k == 0 {
+                                let (x, onehot) =
+                                    sampler.as_mut().unwrap().sample_batch(ds);
+                                ActMsg { x, onehot }
+                            } else {
+                                act_rx
+                                    .as_ref()
+                                    .unwrap()
+                                    .recv()
+                                    .map_err(|_| Error::other("act channel closed"))?
+                            };
+                            let boundary = agent.forward(backend, tau, msg)?;
+                            if let Some(tx) = &act_tx {
+                                tx.send(boundary)
+                                    .map_err(|_| Error::other("act send failed"))?;
+                            }
+                        }
+                        // ---- backward + update ----
+                        if let Some(tau) = sched.backward_batch(t, k) {
+                            let g_out = if k == k_modules - 1 {
+                                let (loss, g) = agent.loss_grad_of(backend, tau)?;
+                                let _ = loss_tx.send((t, s, loss));
+                                g
+                            } else {
+                                grad_rx
+                                    .as_ref()
+                                    .unwrap()
+                                    .recv()
+                                    .map_err(|_| Error::other("grad channel closed"))?
+                            };
+                            let (g_in, grads) = agent.backward(backend, tau, g_out)?;
+                            if let Some(tx) = &grad_tx {
+                                tx.send(g_in)
+                                    .map_err(|_| Error::other("grad send failed"))?;
+                            }
+                            agent.apply_update(eta, grad_scale, &grads);
+                        }
+                        // ---- gossip (eq. 13b), cfg.gossip_rounds times ----
+                        for _round in 0..cfg.gossip_rounds {
+                            if s_groups > 1 {
+                                *slots[k][s].lock().unwrap() = Some(agent.params.clone());
+                                barrier.wait(); // all û posted
+                                let mut mixed: Vec<(Tensor, Tensor)> = agent
+                                    .params
+                                    .iter()
+                                    .map(|(w, b)| {
+                                        (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
+                                    })
+                                    .collect();
+                                for &(r, wgt) in &p_row {
+                                    let guard = slots[k][r].lock().unwrap();
+                                    let u_r = guard.as_ref().unwrap();
+                                    for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
+                                        acc.0.axpy(wgt as f32, uw);
+                                        acc.1.axpy(wgt as f32, ub);
+                                    }
+                                }
+                                agent.params = mixed;
+                                barrier.wait(); // all reads done before next write
+                            } else {
+                                barrier.wait();
+                                barrier.wait();
+                            }
+                        }
+                    }
+                    // hand final params back through the slot
+                    *slots[k][s].lock().unwrap() = Some(agent.params.clone());
+                    Ok(())
+                }));
+            }
+        }
+        handles.into_iter().map(|h| h.join().expect("agent panicked")).collect()
+    });
+    result?;
+    drop(loss_tx);
+
+    // assemble per-iteration mean losses
+    let mut per_iter: Vec<Vec<f64>> = vec![Vec::new(); iters as usize];
+    while let Ok((t, _s, loss)) = loss_rx.try_recv() {
+        per_iter[t as usize].push(loss as f64);
+    }
+    let losses = per_iter
+        .into_iter()
+        .map(|v| (!v.is_empty()).then(|| crate::util::mean(&v)))
+        .collect();
+
+    let final_params = (0..s_groups)
+        .map(|s| {
+            (0..k_modules)
+                .flat_map(|k| slots[k][s].lock().unwrap().take().unwrap())
+                .collect()
+        })
+        .collect();
+
+    Ok(ThreadedRunOut {
+        losses,
+        final_params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::graph::Topology;
+    use crate::runtime::NativeBackend;
+    use crate::trainer::{LrSchedule, Trainer};
+
+    fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "threaded-test".into(),
+            s,
+            k,
+            topology: Topology::Ring,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            batch: 8,
+            iters,
+            lr: LrSchedule::Const(0.2),
+            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            mode: crate::staleness::PipelineMode::FullyDecoupled,
+            seed: 11,
+            dataset_n: 240,
+            delta_every: 0,
+            eval_every: 0,
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sim_bitwise_dbp_mode() {
+        // the backward-unlocked baseline must also be engine-independent
+        let mut c = cfg(2, 3, 10);
+        c.mode = crate::staleness::PipelineMode::BackwardUnlocked;
+        let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
+        let backend = NativeBackend::new(c.model.layers(), c.batch);
+        let out = run_threaded(&c, &backend, &ds).unwrap();
+        let mut sim = Trainer::new(c, &backend, &ds).unwrap();
+        sim.run().unwrap();
+        for (s_idx, grp) in sim.groups().iter().enumerate() {
+            for ((w1, b1), (w2, b2)) in grp.all_params().iter().zip(&out.final_params[s_idx]) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sim_with_multi_round_gossip() {
+        let mut c = cfg(3, 2, 8);
+        c.gossip_rounds = 2;
+        let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
+        let backend = NativeBackend::new(c.model.layers(), c.batch);
+        let out = run_threaded(&c, &backend, &ds).unwrap();
+        let mut sim = Trainer::new(c, &backend, &ds).unwrap();
+        sim.run().unwrap();
+        for (s_idx, grp) in sim.groups().iter().enumerate() {
+            for ((w1, b1), (w2, b2)) in grp.all_params().iter().zip(&out.final_params[s_idx]) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sim_bitwise() {
+        for (s, k) in [(1, 1), (1, 3), (3, 1), (2, 2)] {
+            let c = cfg(s, k, 12);
+            let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
+            let backend = NativeBackend::new(c.model.layers(), c.batch);
+
+            let out = run_threaded(&c, &backend, &ds).unwrap();
+
+            let mut sim = Trainer::new(c.clone(), &backend, &ds).unwrap();
+            sim.run().unwrap();
+
+            for (s_idx, grp) in sim.groups().iter().enumerate() {
+                for ((w1, b1), (w2, b2)) in
+                    grp.all_params().iter().zip(&out.final_params[s_idx])
+                {
+                    assert_eq!(w1, w2, "S={s},K={k} weight mismatch");
+                    assert_eq!(b1, b2, "S={s},K={k} bias mismatch");
+                }
+            }
+            // loss streams agree where both defined
+            for (t, rec) in sim.recorder().records.iter().enumerate() {
+                match (rec.train_loss, out.losses[t]) {
+                    (Some(a), Some(b)) => assert!((a - b).abs() < 1e-9, "t={t}"),
+                    (None, None) => {}
+                    other => panic!("t={t}: {other:?}"),
+                }
+            }
+        }
+    }
+}

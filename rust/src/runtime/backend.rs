@@ -1,0 +1,119 @@
+//! The `ComputeBackend` trait: the seam between the L3 coordinator and
+//! whatever executes the per-layer math.
+//!
+//! Two implementations:
+//!   * [`super::native::NativeBackend`] — pure Rust (`nn`), always
+//!     available, doubles as the correctness oracle;
+//!   * [`super::xla_backend::XlaBackend`] — AOT HLO artifacts through PJRT,
+//!     the production hot path.
+//!
+//! Contract notes (shared with python/compile/model.py):
+//!   * `layer_bwd` must be called with the weight snapshot used by that
+//!     batch's forward pass (eq. (10) evaluates gradients at w(τ+k−1));
+//!   * `loss_grad` returns the gradient of the MEAN batch loss; the
+//!     |D_s|/N data-parallel scaling is applied by the trainer (eq. (13a)).
+
+use crate::error::Result;
+use crate::nn::layer::LayerShape;
+use crate::tensor::Tensor;
+
+pub trait ComputeBackend: Sync {
+    /// Human-readable backend name (metrics, logs).
+    fn name(&self) -> &str;
+
+    /// The layer stack this backend was built for.
+    fn layers(&self) -> &[LayerShape];
+
+    /// Mini-batch size every call must use.
+    fn batch(&self) -> usize;
+
+    /// h_out = act(x·W + b) [+ x] for layer `idx`.
+    fn layer_fwd(&self, idx: usize, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor>;
+
+    /// (g_x, g_w, g_b) for layer `idx`.
+    fn layer_bwd(
+        &self,
+        idx: usize,
+        x: &Tensor,
+        w: &Tensor,
+        h_out: &Tensor,
+        g_out: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)>;
+
+    /// (mean_loss, g_logits) on one mini-batch.
+    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)>;
+
+    /// Mean loss of a full parameter set on one batch (evaluation path).
+    /// Default composes per-layer forwards; XLA overrides with the fused
+    /// eval artifact.
+    fn eval_loss(
+        &self,
+        x: &Tensor,
+        onehot: &Tensor,
+        params: &[(Tensor, Tensor)],
+    ) -> Result<f32> {
+        let mut h = x.clone();
+        for (idx, (w, b)) in params.iter().enumerate() {
+            h = self.layer_fwd(idx, &h, w, b)?;
+        }
+        Ok(self.loss_grad(&h, onehot)?.0)
+    }
+
+    /// Forward through layers [lo, hi) — one pipeline module's share.
+    fn module_fwd(
+        &self,
+        lo: usize,
+        hi: usize,
+        x: &Tensor,
+        params: &[(Tensor, Tensor)],
+    ) -> Result<Vec<Tensor>> {
+        debug_assert_eq!(params.len(), hi - lo);
+        let mut acts = Vec::with_capacity(hi - lo + 1);
+        acts.push(x.clone());
+        for (off, (w, b)) in params.iter().enumerate() {
+            let h = self.layer_fwd(lo + off, acts.last().unwrap(), w, b)?;
+            acts.push(h);
+        }
+        Ok(acts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn default_eval_loss_matches_manual_composition() {
+        let layers = resmlp_layers(6, 5, 1, 3);
+        let backend = NativeBackend::new(layers.clone(), 4);
+        let mut rng = Pcg32::new(1);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut onehot = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            onehot.data_mut()[i * 3 + rng.below(3)] = 1.0;
+        }
+        let via_trait = backend.eval_loss(&x, &onehot, &params).unwrap();
+        let direct = crate::nn::full_loss(&x, &onehot, &params, &layers);
+        assert!((via_trait - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn module_fwd_stashes_all_activations() {
+        let layers = resmlp_layers(6, 5, 2, 3);
+        let backend = NativeBackend::new(layers.clone(), 4);
+        let mut rng = Pcg32::new(2);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let acts = backend.module_fwd(0, 2, &x, &params[0..2]).unwrap();
+        assert_eq!(acts.len(), 3);
+        assert_eq!(acts[0].shape(), &[4, 6]);
+        assert_eq!(acts[2].shape(), &[4, 5]);
+    }
+}

@@ -1,0 +1,208 @@
+//! The artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::nn::layer::{LayerKind, LayerShape};
+use crate::util::json::Json;
+
+/// One per-layer artifact pair.
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub shape: LayerShape,
+    pub fwd: PathBuf,
+    pub bwd: PathBuf,
+}
+
+/// Parsed manifest: the model geometry plus artifact paths (absolute).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub fingerprint: String,
+    pub batch: usize,
+    pub d_in: usize,
+    pub hidden: usize,
+    pub blocks: usize,
+    pub classes: usize,
+    pub param_count: usize,
+    pub layers: Vec<LayerEntry>,
+    pub loss: PathBuf,
+    pub eval: Option<PathBuf>,
+}
+
+/// Manifest versions this runtime understands.
+pub const SUPPORTED_VERSIONS: &[usize] = &[2];
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate paths + geometry.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let j = Json::from_file(&dir.join("manifest.json"))
+            .map_err(|e| Error::Manifest(format!("{}: {e}", dir.display())))?;
+
+        let version = j.get("version")?.as_usize()?;
+        if !SUPPORTED_VERSIONS.contains(&version) {
+            return Err(Error::Manifest(format!(
+                "manifest version {version} unsupported (want one of {SUPPORTED_VERSIONS:?})"
+            )));
+        }
+
+        let mut layers = Vec::new();
+        for entry in j.get("layers")?.as_arr()? {
+            let kind = LayerKind::parse(entry.get("kind")?.as_str()?)?;
+            let shape = LayerShape::new(
+                kind,
+                entry.get("d_in")?.as_usize()?,
+                entry.get("d_out")?.as_usize()?,
+            )?;
+            layers.push(LayerEntry {
+                shape,
+                fwd: dir.join(entry.get("fwd")?.as_str()?),
+                bwd: dir.join(entry.get("bwd")?.as_str()?),
+            });
+        }
+        if layers.is_empty() {
+            return Err(Error::Manifest("manifest has no layers".into()));
+        }
+
+        let m = Manifest {
+            model: j.get("model")?.as_str()?.to_string(),
+            fingerprint: j.get("fingerprint")?.as_str()?.to_string(),
+            batch: j.get("batch")?.as_usize()?,
+            d_in: j.get("d_in")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            blocks: j.get("blocks")?.as_usize()?,
+            classes: j.get("classes")?.as_usize()?,
+            param_count: j.get("param_count")?.as_usize()?,
+            loss: dir.join(j.get("loss")?.as_str()?),
+            eval: j
+                .opt("eval")
+                .and_then(|e| e.as_str().ok().map(|s| dir.join(s))),
+            layers,
+            dir,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // geometry chain must be consistent
+        if self.layers[0].shape.d_in != self.d_in {
+            return Err(Error::Manifest("first layer d_in != manifest d_in".into()));
+        }
+        for pair in self.layers.windows(2) {
+            if pair[0].shape.d_out != pair[1].shape.d_in {
+                return Err(Error::Manifest(format!(
+                    "layer chain mismatch: {:?} -> {:?}",
+                    pair[0].shape, pair[1].shape
+                )));
+            }
+        }
+        if self.layers.last().unwrap().shape.d_out != self.classes {
+            return Err(Error::Manifest("last layer d_out != classes".into()));
+        }
+        let want: usize = self.layers.iter().map(|l| l.shape.param_count()).sum();
+        if want != self.param_count {
+            return Err(Error::Manifest(format!(
+                "param_count {} != sum of layers {}",
+                self.param_count, want
+            )));
+        }
+        // artifact files must exist
+        for entry in &self.layers {
+            for p in [&entry.fwd, &entry.bwd] {
+                if !p.exists() {
+                    return Err(Error::Manifest(format!("missing artifact {}", p.display())));
+                }
+            }
+        }
+        if !self.loss.exists() {
+            return Err(Error::Manifest(format!(
+                "missing loss artifact {}",
+                self.loss.display()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        self.layers.iter().map(|l| l.shape).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest_fixture(dir: &Path, batch: usize) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for name in ["f0", "b0", "f1", "b1", "loss"] {
+            let mut f = std::fs::File::create(dir.join(format!("{name}.hlo.txt")))?;
+            writeln!(f, "HloModule stub ENTRY x")?;
+        }
+        let text = format!(
+            r#"{{
+              "version": 2, "fingerprint": "t", "model": "fixture",
+              "batch": {batch}, "d_in": 4, "hidden": 3, "blocks": 0, "classes": 2,
+              "param_count": {pc},
+              "layers": [
+                {{"kind": "relu", "d_in": 4, "d_out": 3, "fwd": "f0.hlo.txt", "bwd": "b0.hlo.txt"}},
+                {{"kind": "linear", "d_in": 3, "d_out": 2, "fwd": "f1.hlo.txt", "bwd": "b1.hlo.txt"}}
+              ],
+              "loss": "loss.hlo.txt"
+            }}"#,
+            pc = 4 * 3 + 3 + 3 * 2 + 2,
+        );
+        std::fs::write(dir.join("manifest.json"), text)
+    }
+
+    #[test]
+    fn loads_valid_fixture() {
+        let dir = std::env::temp_dir().join("sgs_manifest_ok");
+        write_manifest_fixture(&dir, 8).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].shape.kind, LayerKind::Relu);
+        assert_eq!(m.layer_shapes()[1].d_out, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let dir = std::env::temp_dir().join("sgs_manifest_missing");
+        write_manifest_fixture(&dir, 8).unwrap();
+        std::fs::remove_file(dir.join("b1.hlo.txt")).unwrap();
+        assert!(matches!(Manifest::load(&dir), Err(Error::Manifest(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_chain_mismatch() {
+        let dir = std::env::temp_dir().join("sgs_manifest_chain");
+        write_manifest_fixture(&dir, 8).unwrap();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"d_in\": 3", "\"d_in\": 5");
+        std::fs::write(&path, text).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let dir = std::env::temp_dir().join("sgs_manifest_ver");
+        write_manifest_fixture(&dir, 8).unwrap();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"version\": 2", "\"version\": 99");
+        std::fs::write(&path, text).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,71 @@
+//! Runtime layer: loads AOT artifacts (HLO text) through PJRT and exposes
+//! them — or the pure-Rust fallback — behind the [`ComputeBackend`] trait.
+//!
+//! See /opt/xla-example/load_hlo for the reference load-and-execute wiring
+//! this module productionizes.
+
+pub mod backend;
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+pub mod xla_backend;
+
+pub use backend::ComputeBackend;
+pub use manifest::Manifest;
+pub use native::NativeBackend;
+pub use pjrt::{Executable, PjRt};
+pub use xla_backend::XlaBackend;
+
+use crate::error::Result;
+use crate::nn::layer::LayerShape;
+
+/// Which backend an experiment runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            _ => Err(crate::error::Error::Config(format!(
+                "unknown backend {s:?} (want native|xla)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Build a backend: XLA from an artifact dir, or native from a layer stack.
+pub fn make_backend(
+    kind: BackendKind,
+    artifacts_dir: &std::path::Path,
+    layers: Vec<LayerShape>,
+    batch: usize,
+) -> Result<Box<dyn ComputeBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(layers, batch))),
+        BackendKind::Xla => Ok(Box::new(XlaBackend::load(artifacts_dir)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Pure-Rust `ComputeBackend` over the `nn` module.
+//!
+//! No artifacts required — the coordinator and the whole test suite run on
+//! this backend anywhere; the XLA path is validated against it.
+
+use crate::error::{Error, Result};
+use crate::nn::{self, layer::LayerShape};
+use crate::runtime::backend::ComputeBackend;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    layers: Vec<LayerShape>,
+    batch: usize,
+}
+
+impl NativeBackend {
+    pub fn new(layers: Vec<LayerShape>, batch: usize) -> NativeBackend {
+        NativeBackend { layers, batch }
+    }
+
+    fn check_layer(&self, idx: usize) -> Result<LayerShape> {
+        self.layers
+            .get(idx)
+            .copied()
+            .ok_or_else(|| Error::Shape(format!("layer index {idx} out of range")))
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn layers(&self) -> &[LayerShape] {
+        &self.layers
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn layer_fwd(&self, idx: usize, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let layer = self.check_layer(idx)?;
+        Ok(nn::dense_fwd(x, w, b, layer.kind))
+    }
+
+    fn layer_bwd(
+        &self,
+        idx: usize,
+        x: &Tensor,
+        w: &Tensor,
+        h_out: &Tensor,
+        g_out: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let layer = self.check_layer(idx)?;
+        Ok(nn::dense_bwd(x, w, h_out, g_out, layer.kind))
+    }
+
+    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)> {
+        Ok(nn::softmax_xent(logits, onehot))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fwd_bwd_through_trait_match_nn() {
+        let layers = resmlp_layers(5, 4, 1, 3);
+        let b = NativeBackend::new(layers.clone(), 2);
+        let mut rng = Pcg32::new(3);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[2, 5]);
+        rng.fill_normal(x.data_mut(), 1.0);
+
+        let h = b.layer_fwd(0, &x, &params[0].0, &params[0].1).unwrap();
+        let h_direct = nn::dense_fwd(&x, &params[0].0, &params[0].1, layers[0].kind);
+        assert_eq!(h, h_direct);
+
+        let mut g = Tensor::zeros(h.shape());
+        rng.fill_normal(g.data_mut(), 1.0);
+        let (gx, gw, gb) = b.layer_bwd(0, &x, &params[0].0, &h, &g).unwrap();
+        let (gx2, gw2, gb2) = nn::dense_bwd(&x, &params[0].0, &h, &g, layers[0].kind);
+        assert_eq!((gx, gw, gb), (gx2, gw2, gb2));
+    }
+
+    #[test]
+    fn bad_layer_index_errors() {
+        let layers = resmlp_layers(5, 4, 0, 3);
+        let b = NativeBackend::new(layers, 2);
+        let t = Tensor::zeros(&[2, 5]);
+        assert!(b.layer_fwd(7, &t, &t, &t).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Thin wrapper over the `xla` crate's PJRT C-API bindings.
+//!
+//! Load path (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Text is the interchange format because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects
+//! in proto form.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Shared PJRT client (CPU). Create once, compile many executables.
+pub struct PjRt {
+    client: xla::PjRtClient,
+}
+
+impl PjRt {
+    pub fn cpu() -> Result<PjRt> {
+        Ok(PjRt {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into a ready executable.
+    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Xla(format!("parse {} failed: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            Error::Xla(format!("compile {} failed: {e}", path.display()))
+        })?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so outputs always arrive as one tuple literal.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+// SAFETY: PJRT's CPU client is thread-safe for compilation and execution
+// (PJRT C API contract: PJRT_LoadedExecutable_Execute may be called
+// concurrently). The wrapper holds opaque pointers only. The threaded
+// pipeline engine shares executables across agent threads read-only.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for PjRt {}
+unsafe impl Sync for PjRt {}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute on host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Host tensor -> XLA literal (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: jax scalars lower as f32[] — reshape to empty dims
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// XLA literal -> host tensor (f32 only; converts other float types).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match shape.ty() {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        other => {
+            return Err(Error::Xla(format!(
+                "unsupported output element type {other:?}"
+            )))
+        }
+    };
+    Tensor::from_vec(&dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full round-trip tests against real artifacts live in
+    // tests/integration_runtime.rs (they need `make artifacts`).
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = Tensor::scalar(2.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.data(), &[2.5]);
+        assert!(back.shape().is_empty());
+    }
+}

@@ -1,0 +1,171 @@
+//! Per-operation cost model, calibrated by MEASURING the real backend.
+//!
+//! This is the documented substitution for the paper's GTX-1060 testbed
+//! (DESIGN.md §3): per-layer forward/backward and loss-head costs are
+//! timed on the actual PJRT (or native) backend once, then the makespan
+//! module plays the pipeline schedule against them to produce the
+//! wall-time axis of Figs. 3–4 and the Section-5 timing table.
+
+use crate::nn::init::init_params;
+use crate::nn::LayerShape;
+use crate::runtime::ComputeBackend;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use crate::util::timer::sample_timings;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// seconds per layer forward / backward
+    pub fwd_s: Vec<f64>,
+    pub bwd_s: Vec<f64>,
+    /// loss head (softmax-xent fwd+grad)
+    pub loss_s: f64,
+    /// boundary-activation transfer per scalar (inter-agent link)
+    pub comm_s_per_scalar: f64,
+    /// gossip cost per parameter scalar per neighbour
+    pub gossip_s_per_scalar: f64,
+    /// SGD update cost per parameter scalar
+    pub update_s_per_scalar: f64,
+    pub batch: usize,
+    pub layer_shapes: Vec<LayerShape>,
+}
+
+impl CostModel {
+    /// Measure the real backend. `reps` timed repetitions after 1 warmup.
+    pub fn calibrate(backend: &dyn ComputeBackend, reps: usize) -> CostModel {
+        let layers = backend.layers().to_vec();
+        let batch = backend.batch();
+        let mut rng = Pcg32::new(0xC0575);
+        let params = init_params(&mut rng, &layers);
+
+        let mut fwd_s = Vec::with_capacity(layers.len());
+        let mut bwd_s = Vec::with_capacity(layers.len());
+        let mut acts: Vec<Tensor> = Vec::with_capacity(layers.len() + 1);
+        let mut x = Tensor::zeros(&[batch, layers[0].d_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        acts.push(x);
+
+        for (idx, layer) in layers.iter().enumerate() {
+            let (w, b) = &params[idx];
+            let x_in = acts.last().unwrap().clone();
+            let times = sample_timings(1, reps, || {
+                backend.layer_fwd(idx, &x_in, w, b).expect("calibrate fwd")
+            });
+            fwd_s.push(crate::util::mean(&times));
+            acts.push(backend.layer_fwd(idx, &x_in, w, b).unwrap());
+            let _ = layer;
+        }
+
+        for (idx, _) in layers.iter().enumerate() {
+            let (w, _) = &params[idx];
+            let mut g = Tensor::zeros(acts[idx + 1].shape());
+            rng.fill_normal(g.data_mut(), 1.0);
+            let x_in = &acts[idx];
+            let h_out = &acts[idx + 1];
+            let times = sample_timings(1, reps, || {
+                backend
+                    .layer_bwd(idx, x_in, w, h_out, &g)
+                    .expect("calibrate bwd")
+            });
+            bwd_s.push(crate::util::mean(&times));
+        }
+
+        let classes = layers.last().unwrap().d_out;
+        let logits = acts.last().unwrap().clone();
+        let mut onehot = Tensor::zeros(&[batch, classes]);
+        for i in 0..batch {
+            onehot.data_mut()[i * classes + rng.below(classes)] = 1.0;
+        }
+        let times = sample_timings(1, reps, || {
+            backend.loss_grad(&logits, &onehot).expect("calibrate loss")
+        });
+        let loss_s = crate::util::mean(&times);
+
+        // memory-bound scalar ops: measure one AXPY sweep over ~1M f32
+        let n = 1 << 20;
+        let mut a = Tensor::zeros(&[n]);
+        let bvec = Tensor::from_vec(&[n], vec![1.0; n]).unwrap();
+        let axpy_times = sample_timings(1, reps.max(3), || a.axpy(0.5, &bvec));
+        let per_scalar = crate::util::mean(&axpy_times) / n as f64;
+
+        CostModel {
+            fwd_s,
+            bwd_s,
+            loss_s,
+            // boundary transfer modelled as one memcpy-class pass
+            comm_s_per_scalar: per_scalar,
+            gossip_s_per_scalar: per_scalar,
+            update_s_per_scalar: per_scalar,
+            batch,
+            layer_shapes: layers,
+        }
+    }
+
+    /// Fixed synthetic model for unit tests and schedule what-ifs.
+    pub fn synthetic(fwd: &[f64], bwd: &[f64], loss: f64) -> CostModel {
+        assert_eq!(fwd.len(), bwd.len());
+        CostModel {
+            fwd_s: fwd.to_vec(),
+            bwd_s: bwd.to_vec(),
+            loss_s: loss,
+            comm_s_per_scalar: 0.0,
+            gossip_s_per_scalar: 0.0,
+            update_s_per_scalar: 0.0,
+            batch: 1,
+            layer_shapes: Vec::new(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.fwd_s.len()
+    }
+
+    /// Parameter scalars in layers [lo, hi). Synthetic models without
+    /// layer shapes cost nothing for updates/gossip.
+    pub fn params_in(&self, lo: usize, hi: usize) -> usize {
+        if self.layer_shapes.is_empty() {
+            return 0;
+        }
+        self.layer_shapes[lo..hi]
+            .iter()
+            .map(|l| l.param_count())
+            .sum()
+    }
+
+    /// Boundary activation scalars leaving layer `hi-1`.
+    pub fn boundary_scalars(&self, hi: usize) -> usize {
+        if hi == 0 || hi > self.layer_shapes.len() {
+            return 0;
+        }
+        self.batch * self.layer_shapes[hi - 1].d_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resmlp_layers;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn calibrate_produces_positive_times() {
+        let layers = resmlp_layers(16, 12, 1, 4);
+        let backend = NativeBackend::new(layers.clone(), 8);
+        let cm = CostModel::calibrate(&backend, 2);
+        assert_eq!(cm.n_layers(), 3);
+        assert!(cm.fwd_s.iter().all(|&t| t > 0.0));
+        assert!(cm.bwd_s.iter().all(|&t| t > 0.0));
+        assert!(cm.loss_s > 0.0);
+        assert!(cm.comm_s_per_scalar > 0.0);
+    }
+
+    #[test]
+    fn params_and_boundaries() {
+        let layers = resmlp_layers(16, 12, 1, 4);
+        let backend = NativeBackend::new(layers.clone(), 8);
+        let cm = CostModel::calibrate(&backend, 1);
+        assert_eq!(cm.params_in(0, 3), layers.iter().map(|l| l.param_count()).sum());
+        assert_eq!(cm.boundary_scalars(1), 8 * 12);
+        assert_eq!(cm.boundary_scalars(0), 0);
+    }
+}

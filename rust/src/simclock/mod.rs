@@ -1,0 +1,12 @@
+//! Discrete-event wall-time modelling: calibrate per-op costs on the real
+//! backend, then replay each method's schedule to get per-iteration times
+//! (the substitution for the paper's GPU testbed — DESIGN.md §3).
+
+pub mod cost_model;
+pub mod makespan;
+
+pub use cost_model::CostModel;
+pub use makespan::{
+    centralized_iter_s, dbp_iter_s, decoupled_iter_s, distributed_iter_s, gossip_s,
+    method_iter_s, method_iter_s_mode, module_busy_s,
+};

@@ -1,0 +1,192 @@
+//! Storage for the decoupled pipeline's in-flight state:
+//!
+//! * [`Stash`] — everything a module must retain between a batch's forward
+//!   and backward pass: the module-local activations AND the weight
+//!   snapshot (eq. (10) evaluates the gradient at forward-time weights
+//!   w(τ+k−1), not at update-time weights).
+//! * [`StashQueue`] — FIFO of stashes, bounded by `Schedule::max_inflight`.
+//! * [`Mailbox`] — one-iteration-delayed message passing between adjacent
+//!   modules (activations downstream, error gradients upstream): messages
+//!   posted at iteration t become visible at t+1, mirroring Algorithm 1's
+//!   send/receive pairing.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+
+/// Per-batch forward record of one module.
+#[derive(Debug, Clone)]
+pub struct Stash {
+    pub batch_id: i64,
+    /// activations: input at [0], then one per local layer (len = layers+1)
+    pub acts: Vec<Tensor>,
+    /// weight snapshot (W, b per local layer) used for this forward pass
+    pub params: Vec<(Tensor, Tensor)>,
+    /// labels ride along with the batch (consumed by the last module)
+    pub onehot: Option<Tensor>,
+}
+
+/// FIFO of in-flight stashes with strict ordering checks.
+#[derive(Debug, Default)]
+pub struct StashQueue {
+    items: std::collections::VecDeque<Stash>,
+}
+
+impl StashQueue {
+    pub fn new() -> StashQueue {
+        StashQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push(&mut self, stash: Stash) {
+        if let Some(last) = self.items.back() {
+            assert!(
+                stash.batch_id == last.batch_id + 1,
+                "stash out of order: {} after {}",
+                stash.batch_id,
+                last.batch_id
+            );
+        }
+        self.items.push_back(stash);
+    }
+
+    /// Pop the stash for `batch_id`, which must be the oldest in flight —
+    /// the schedule consumes batches strictly in order.
+    pub fn pop(&mut self, batch_id: i64) -> Stash {
+        let front = self
+            .items
+            .pop_front()
+            .unwrap_or_else(|| panic!("pop({batch_id}) on empty stash queue"));
+        assert_eq!(
+            front.batch_id, batch_id,
+            "schedule violation: popping {batch_id}, front is {}",
+            front.batch_id
+        );
+        front
+    }
+
+    /// Peek at an in-flight stash without consuming (metrics).
+    pub fn get(&self, batch_id: i64) -> Option<&Stash> {
+        self.items.iter().find(|s| s.batch_id == batch_id)
+    }
+}
+
+/// One-iteration-delayed mailbox keyed by batch id.
+///
+/// `post` during iteration t; `flip` at the iteration boundary; `take`
+/// during iteration t+1.
+#[derive(Debug)]
+pub struct Mailbox<T> {
+    staged: HashMap<i64, T>,
+    visible: HashMap<i64, T>,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Mailbox {
+            staged: HashMap::new(),
+            visible: HashMap::new(),
+        }
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Mailbox<T> {
+        Mailbox::default()
+    }
+
+    /// Post a message during the current iteration (visible next iteration).
+    pub fn post(&mut self, batch_id: i64, msg: T) {
+        let prev = self.staged.insert(batch_id, msg);
+        assert!(prev.is_none(), "duplicate message for batch {batch_id}");
+    }
+
+    /// Consume a message posted last iteration.
+    pub fn take(&mut self, batch_id: i64) -> Option<T> {
+        self.visible.remove(&batch_id)
+    }
+
+    /// Iteration boundary: staged messages become visible.
+    pub fn flip(&mut self) {
+        debug_assert!(
+            self.visible.is_empty(),
+            "unconsumed messages at iteration boundary: {:?}",
+            self.visible.keys().collect::<Vec<_>>()
+        );
+        std::mem::swap(&mut self.staged, &mut self.visible);
+        self.staged.clear();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.staged.len() + self.visible.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stash(id: i64) -> Stash {
+        Stash {
+            batch_id: id,
+            acts: vec![Tensor::zeros(&[1, 1])],
+            params: vec![],
+            onehot: None,
+        }
+    }
+
+    #[test]
+    fn queue_fifo_in_order() {
+        let mut q = StashQueue::new();
+        q.push(stash(0));
+        q.push(stash(1));
+        q.push(stash(2));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(0).batch_id, 0);
+        assert_eq!(q.pop(1).batch_id, 1);
+        assert!(q.get(2).is_some());
+        assert!(q.get(5).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn queue_rejects_gap() {
+        let mut q = StashQueue::new();
+        q.push(stash(0));
+        q.push(stash(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule violation")]
+    fn queue_rejects_out_of_order_pop() {
+        let mut q = StashQueue::new();
+        q.push(stash(0));
+        q.push(stash(1));
+        q.pop(1);
+    }
+
+    #[test]
+    fn mailbox_one_iteration_delay() {
+        let mut mb: Mailbox<u32> = Mailbox::new();
+        mb.post(7, 42);
+        assert_eq!(mb.take(7), None, "message visible too early");
+        mb.flip();
+        assert_eq!(mb.take(7), Some(42));
+        assert_eq!(mb.take(7), None, "double consume");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate message")]
+    fn mailbox_rejects_duplicate() {
+        let mut mb: Mailbox<u32> = Mailbox::new();
+        mb.post(1, 1);
+        mb.post(1, 2);
+    }
+}

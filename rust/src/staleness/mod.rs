@@ -1,0 +1,61 @@
+//! The stale-gradient machinery of the fully decoupled pipeline:
+//! index algebra ([`schedule`]) and in-flight state ([`buffers`]).
+
+pub mod buffers;
+pub mod schedule;
+
+pub use buffers::{Mailbox, Stash, StashQueue};
+pub use schedule::{PipelineMode, Schedule};
+
+/// Even, contiguous partition of L layers into K modules (the paper's
+/// g(1..K) groups). The first (L mod K) modules get one extra layer.
+/// Returns per-module [lo, hi) bounds.
+pub fn partition_layers(n_layers: usize, k_modules: usize) -> Vec<(usize, usize)> {
+    assert!(k_modules >= 1 && k_modules <= n_layers, "K={k_modules} L={n_layers}");
+    let base = n_layers / k_modules;
+    let extra = n_layers % k_modules;
+    let mut bounds = Vec::with_capacity(k_modules);
+    let mut lo = 0;
+    for k in 0..k_modules {
+        let take = base + usize::from(k < extra);
+        bounds.push((lo, lo + take));
+        lo += take;
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_contiguously() {
+        for l in 1..12usize {
+            for k in 1..=l {
+                let b = partition_layers(l, k);
+                assert_eq!(b.len(), k);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[k - 1].1, l);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                // balanced: sizes differ by at most 1
+                let sizes: Vec<usize> = b.iter().map(|(lo, hi)| hi - lo).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_known_case() {
+        // 8 layers into 3 modules: 3 + 3 + 2
+        assert_eq!(partition_layers(8, 3), vec![(0, 3), (3, 6), (6, 8)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_rejects_k_gt_l() {
+        partition_layers(3, 4);
+    }
+}

@@ -1,0 +1,276 @@
+//! The staleness index algebra of the fully decoupled pipeline
+//! (Section 3.2, eqs. (10)/(13); Fig. 1).
+//!
+//! Modules are 0-indexed here (paper is 1-indexed). With K modules, at
+//! global iteration t module k:
+//!   * **forwards** the mini-batch sampled at `τ_f = t − k` using its
+//!     current weights w(t)  (paper: batch t−k+1 with 1-indexed k);
+//!   * **backwards** the mini-batch `τ_b = t − 2K + k + 2` (paper:
+//!     t−2K+k+1), whose gradient is evaluated at the weight snapshot the
+//!     module used when it forwarded that batch — version `τ_b + k`
+//!     (paper: w(t−2K+2k));
+//!   * **updates** with that stale gradient, giving weight-update staleness
+//!     `2(K−1−k)`: the last module is fresh, the first is 2K−2 behind.
+//!
+//! Messages (activations k→k+1, error gradients k+1→k) are produced at
+//! iteration t and consumed at t+1, which is exactly what makes these
+//! indices consistent: τ_b(k−1, t+1) = τ_b(k, t).
+
+/// Which decoupling the pipeline runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Zhuang et al. 2022 / this paper: both passes decoupled — module k
+    /// forwards batch t−k and backwards batch t−2K+k+2 (0-indexed).
+    FullyDecoupled,
+    /// Huo et al. 2018 (DDG baseline): forward stays locked (all modules
+    /// forward batch t within one iteration), only the backward pass is
+    /// decoupled via delayed error gradients: module k backwards t−(K−1−k).
+    BackwardUnlocked,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> crate::error::Result<PipelineMode> {
+        match s {
+            "fd" | "fully-decoupled" => Ok(PipelineMode::FullyDecoupled),
+            "dbp" | "ddg" | "backward-unlocked" => Ok(PipelineMode::BackwardUnlocked),
+            _ => Err(crate::error::Error::Config(format!(
+                "unknown pipeline mode {s:?} (want fd|dbp)"
+            ))),
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            PipelineMode::FullyDecoupled => "fd",
+            PipelineMode::BackwardUnlocked => "dbp",
+        }
+    }
+}
+
+/// Pure schedule bookkeeping for one data-group's pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    k_modules: usize,
+    mode: PipelineMode,
+}
+
+impl Schedule {
+    /// The paper's fully decoupled schedule.
+    pub fn new(k_modules: usize) -> Schedule {
+        Schedule::with_mode(k_modules, PipelineMode::FullyDecoupled)
+    }
+
+    pub fn with_mode(k_modules: usize, mode: PipelineMode) -> Schedule {
+        assert!(k_modules >= 1);
+        Schedule { k_modules, mode }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k_modules
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        self.mode
+    }
+
+    /// Batch id module `k` forward-processes at iteration `t` (None during
+    /// pipeline fill).
+    pub fn forward_batch(&self, t: i64, k: usize) -> Option<i64> {
+        debug_assert!(k < self.k_modules);
+        let tau = match self.mode {
+            PipelineMode::FullyDecoupled => t - k as i64,
+            PipelineMode::BackwardUnlocked => t, // forward locking retained
+        };
+        (tau >= 0).then_some(tau)
+    }
+
+    /// Batch id module `k` backward-processes at iteration `t` (None while
+    /// the gradient has not reached this module yet — eq. (10) uses a zero
+    /// gradient then).
+    pub fn backward_batch(&self, t: i64, k: usize) -> Option<i64> {
+        debug_assert!(k < self.k_modules);
+        let tau = match self.mode {
+            PipelineMode::FullyDecoupled => t - 2 * self.k_modules as i64 + k as i64 + 2,
+            PipelineMode::BackwardUnlocked => t - (self.k_modules as i64 - 1 - k as i64),
+        };
+        (tau >= 0).then_some(tau)
+    }
+
+    /// Weight version the backward gradient is evaluated at (the snapshot
+    /// stored at forward time): the iteration in which batch τ_b was
+    /// forwarded at this module — FD: τ_b + k (paper: w(t−2K+2k));
+    /// DBP: τ_b (every module forwards at the sampling iteration).
+    pub fn backward_weight_version(&self, t: i64, k: usize) -> Option<i64> {
+        self.backward_batch(t, k).map(|tau| match self.mode {
+            PipelineMode::FullyDecoupled => tau + k as i64,
+            PipelineMode::BackwardUnlocked => tau,
+        })
+    }
+
+    /// Weight-update staleness of module k: iterations between the weight
+    /// snapshot the gradient was computed on and the weights it updates.
+    pub fn staleness(&self, k: usize) -> usize {
+        debug_assert!(k < self.k_modules);
+        match self.mode {
+            PipelineMode::FullyDecoupled => 2 * (self.k_modules - 1 - k),
+            PipelineMode::BackwardUnlocked => self.k_modules - 1 - k,
+        }
+    }
+
+    /// First iteration at which EVERY module has a real (non-zero)
+    /// gradient: FD t ≥ 2K − 2; DBP t ≥ K − 1.
+    pub fn warmup_iters(&self) -> usize {
+        match self.mode {
+            PipelineMode::FullyDecoupled => 2 * self.k_modules - 2,
+            PipelineMode::BackwardUnlocked => self.k_modules - 1,
+        }
+    }
+
+    /// Max number of in-flight batch stashes any module must retain:
+    /// forward runs ahead of backward by τ_f − τ_b batches (+1 for the one
+    /// being processed).
+    pub fn max_inflight(&self, k: usize) -> usize {
+        debug_assert!(k < self.k_modules);
+        // τ_f − τ_b equals the weight staleness in both modes
+        // (FD: 2(K−1−k); DBP: K−1−k), +1 for the batch in hand.
+        let t = 100 + 2 * self.k_modules as i64; // any steady-state instant
+        (self.forward_batch(t, k).unwrap() - self.backward_batch(t, k).unwrap()) as usize + 1
+    }
+
+    /// The Fig. 1 trace: (module, iteration) -> activity description.
+    /// Used by `benches/schedule_trace.rs` to regenerate the figure.
+    pub fn trace_cell(&self, t: i64, k: usize) -> (Option<i64>, Option<i64>) {
+        (self.forward_batch(t, k), self.backward_batch(t, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_degenerates_to_plain_sgd() {
+        // K = 1: forward and backward the same fresh batch every iteration
+        let s = Schedule::new(1);
+        for t in 0..10 {
+            assert_eq!(s.forward_batch(t, 0), Some(t));
+            assert_eq!(s.backward_batch(t, 0), Some(t));
+            assert_eq!(s.backward_weight_version(t, 0), Some(t));
+        }
+        assert_eq!(s.staleness(0), 0);
+        assert_eq!(s.warmup_iters(), 0);
+        assert_eq!(s.max_inflight(0), 1);
+    }
+
+    #[test]
+    fn k2_indices_match_paper() {
+        let s = Schedule::new(2);
+        // t=5: module 0 forwards batch 5, backwards batch 3;
+        //      module 1 forwards batch 4, backwards batch 4 (fresh).
+        assert_eq!(s.forward_batch(5, 0), Some(5));
+        assert_eq!(s.backward_batch(5, 0), Some(3));
+        assert_eq!(s.forward_batch(5, 1), Some(4));
+        assert_eq!(s.backward_batch(5, 1), Some(4));
+        // last module's backward batch == its forward batch, always
+        for t in 1..20 {
+            assert_eq!(s.forward_batch(t, 1), s.backward_batch(t, 1));
+        }
+        assert_eq!(s.staleness(0), 2);
+        assert_eq!(s.staleness(1), 0);
+        assert_eq!(s.warmup_iters(), 2);
+    }
+
+    #[test]
+    fn k3_matches_fig1() {
+        let s = Schedule::new(3);
+        // paper Fig. 1 rhythm: staleness 4, 2, 0 for modules 1..3
+        assert_eq!(s.staleness(0), 4);
+        assert_eq!(s.staleness(1), 2);
+        assert_eq!(s.staleness(2), 0);
+        // module 2 (last) at t: fwd batch t−2, bwd batch t−2
+        assert_eq!(s.forward_batch(9, 2), Some(7));
+        assert_eq!(s.backward_batch(9, 2), Some(7));
+        // module 0 at t=9 backwards batch 9−6+0+2=5, snapshot version 5
+        assert_eq!(s.backward_batch(9, 0), Some(5));
+        assert_eq!(s.backward_weight_version(9, 0), Some(5));
+        // module 1 at t=9 backwards batch 6 with snapshot version 7
+        assert_eq!(s.backward_batch(9, 1), Some(6));
+        assert_eq!(s.backward_weight_version(9, 1), Some(7));
+    }
+
+    #[test]
+    fn message_transit_consistency() {
+        // grad produced by module k at t is exactly what module k−1
+        // consumes at t+1: τ_b(k−1, t+1) == τ_b(k, t)
+        for kk in 2..6usize {
+            let s = Schedule::new(kk);
+            for t in (2 * kk as i64)..(2 * kk as i64 + 10) {
+                for k in 1..kk {
+                    assert_eq!(s.backward_batch(t + 1, k - 1), s.backward_batch(t, k));
+                }
+                // act produced by module k at t is consumed by k+1 at t+1:
+                // τ_f(k+1, t+1) == τ_f(k, t)
+                for k in 0..kk - 1 {
+                    assert_eq!(s.forward_batch(t + 1, k + 1), s.forward_batch(t, k));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_phase_returns_none() {
+        let s = Schedule::new(3);
+        assert_eq!(s.forward_batch(0, 1), None);
+        assert_eq!(s.forward_batch(1, 2), None);
+        assert_eq!(s.backward_batch(0, 0), None);
+        assert_eq!(s.backward_batch(3, 0), None); // t−6+2 = −1
+        assert_eq!(s.backward_batch(4, 0), Some(0));
+    }
+
+    #[test]
+    fn ddg_mode_matches_huo_et_al() {
+        // backward-unlocked (DDG): forward locked at batch t, backward
+        // delayed K−1−k, staleness halved vs fully decoupled
+        let s = Schedule::with_mode(3, PipelineMode::BackwardUnlocked);
+        for t in 5..15 {
+            for k in 0..3 {
+                assert_eq!(s.forward_batch(t, k), Some(t));
+            }
+            // grad transit consistency: τ_b(k−1, t+1) == τ_b(k, t)
+            for k in 1..3 {
+                assert_eq!(s.backward_batch(t + 1, k - 1), s.backward_batch(t, k));
+            }
+        }
+        assert_eq!(s.backward_batch(10, 2), Some(10)); // last module fresh
+        assert_eq!(s.backward_batch(10, 0), Some(8));
+        assert_eq!(s.staleness(0), 2);
+        assert_eq!(s.staleness(2), 0);
+        assert_eq!(s.warmup_iters(), 2);
+        // DBP gradients evaluate at the sampling-iteration snapshot
+        assert_eq!(s.backward_weight_version(10, 0), Some(8));
+        // fully decoupled doubles the staleness of the first module
+        let fd = Schedule::new(3);
+        assert_eq!(fd.staleness(0), 2 * s.staleness(0));
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [PipelineMode::FullyDecoupled, PipelineMode::BackwardUnlocked] {
+            assert_eq!(PipelineMode::parse(m.describe()).unwrap(), m);
+        }
+        assert!(PipelineMode::parse("gpipe").is_err());
+    }
+
+    #[test]
+    fn inflight_bound_is_tight() {
+        // module k's stash at time t covers batches τ_b..τ_f inclusive
+        for kk in 1..6usize {
+            let s = Schedule::new(kk);
+            for k in 0..kk {
+                let t = 100i64;
+                let span = s.forward_batch(t, k).unwrap() - s.backward_batch(t, k).unwrap() + 1;
+                assert_eq!(span as usize, s.max_inflight(k));
+            }
+        }
+    }
+}

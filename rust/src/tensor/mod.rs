@@ -1,0 +1,189 @@
+//! Host-side f32 tensors: the coordinator's working representation for
+//! activations, gradients, and (flattened) parameters.
+//!
+//! Deliberately minimal — a shape plus a contiguous row-major buffer.
+//! Heavy math happens either in the XLA executables (runtime) or in the
+//! pure-Rust `nn` backend; this type carries data between them and hosts
+//! the handful of vector ops the gossip/update hot loop needs (AXPY, scale,
+//! norms), which are written to autovectorize.
+
+use crate::error::{Error, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(Error::Shape(format!(
+                "from_vec: shape {:?} wants {} elems, got {}",
+                shape,
+                want,
+                data.len()
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret the buffer under a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != self.data.len() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    // ---- hot-loop vector ops (autovectorizable simple loops) ----
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= s
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// self = 0
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|a| *a = 0.0);
+    }
+
+    /// Euclidean norm.
+    pub fn norm2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |x_i - y_i| across two tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// out = Σ_i coeffs[i] * xs[i]   (gossip mixing row); shapes must agree.
+pub fn weighted_sum(coeffs: &[f64], xs: &[&Tensor], out: &mut Tensor) {
+    debug_assert_eq!(coeffs.len(), xs.len());
+    out.fill_zero();
+    for (&c, x) in coeffs.iter().zip(xs) {
+        if c != 0.0 {
+            out.axpy(c as f32, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let r = t.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.at2(2, 1), 5.0);
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[3.0, 4.0, 5.0]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[1.5, 2.0, 2.5]);
+        let t = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm2() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 0.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![0.0, 1.0]).unwrap();
+        let mut out = Tensor::zeros(&[2]);
+        weighted_sum(&[0.25, 0.75], &[&a, &b], &mut out);
+        assert_eq!(out.data(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.5, 1.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Approximate-equality assertions for floats and tensors.
+
+use crate::tensor::Tensor;
+
+pub fn assert_close_f64(got: f64, want: f64, tol: f64, label: &str) {
+    let denom = want.abs().max(1.0);
+    assert!(
+        (got - want).abs() / denom <= tol,
+        "{label}: got {got}, want {want} (tol {tol})"
+    );
+}
+
+pub fn assert_close_f32(got: f32, want: f32, tol: f32, label: &str) {
+    assert_close_f64(got as f64, want as f64, tol as f64, label);
+}
+
+/// Max-abs-difference tensor comparison with shape check.
+pub fn assert_tensors_close(got: &Tensor, want: &Tensor, tol: f32, label: &str) {
+    assert_eq!(got.shape(), want.shape(), "{label}: shape mismatch");
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff <= tol,
+        "{label}: max abs diff {diff} > tol {tol}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_passes() {
+        assert_close_f64(1.0000001, 1.0, 1e-5, "x");
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.0 + 1e-7]).unwrap();
+        assert_tensors_close(&a, &b, 1e-5, "t");
+    }
+
+    #[test]
+    #[should_panic]
+    fn far_fails() {
+        assert_close_f64(2.0, 1.0, 1e-5, "x");
+    }
+}

@@ -1,0 +1,8 @@
+//! Test infrastructure built in-house (no proptest offline): a seeded
+//! property-testing harness and approximate-equality helpers.
+
+pub mod approx;
+pub mod prop;
+
+pub use approx::{assert_close_f32, assert_close_f64, assert_tensors_close};
+pub use prop::forall;

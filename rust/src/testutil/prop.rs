@@ -1,0 +1,67 @@
+//! Mini property-testing harness: generate `cases` random inputs from a
+//! seeded RNG, check the property on each, and report the failing case's
+//! debug form plus the seed that reproduces it.
+
+use crate::util::rng::Pcg32;
+
+/// Run `prop` on `cases` random inputs from `gen`. Panics on the first
+/// failing case with enough context to reproduce (global seed + index).
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg32::new(seed);
+    for i in 0..cases {
+        let mut case_rng = rng.fork(i as u64);
+        let input = gen(&mut case_rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {i}/{cases} (seed {seed}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns a Result-style message.
+pub fn forall_msg<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> std::result::Result<(), String>,
+) {
+    let mut rng = Pcg32::new(seed);
+    for i in 0..cases {
+        let mut case_rng = rng.fork(i as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {i}/{cases} (seed {seed}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_on_true_property() {
+        forall(1, 100, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_case_context() {
+        forall(1, 100, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn forall_msg_reports_reason() {
+        forall_msg(2, 10, |r| r.f64(), |&x| {
+            if x < 1.0 { Ok(()) } else { Err(format!("{x} >= 1")) }
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Training checkpoints: persist per-group parameters + run position.
+//!
+//! Format: a JSON sidecar (`<name>.json`: config echo, iteration, shapes)
+//! plus a raw little-endian f32 blob (`<name>.bin`: group-major, layer-
+//! major, W then b) — no serde/bincode offline, and the blob form keeps
+//! 100k-param checkpoints instant.
+//!
+//! Semantics: checkpoints capture the WEIGHTS at an iteration boundary.
+//! In-flight pipeline state (stashes/mailboxes) is deliberately not saved:
+//! on resume the pipeline refills, i.e. the first `warmup_iters()` updates
+//! after resume use zero gradients exactly like a fresh start (eq. (10)'s
+//! τ < 0 convention). This mirrors how production trainers restart
+//! pipelines and keeps checkpoints engine-portable.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::nn::layer::LayerShape;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub const CHECKPOINT_VERSION: usize = 1;
+
+/// A saved training state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// iteration the weights correspond to (boundary AFTER this many iters)
+    pub iteration: usize,
+    /// per-group, per-layer (W, b)
+    pub groups: Vec<Vec<(Tensor, Tensor)>>,
+    pub layers: Vec<LayerShape>,
+}
+
+impl Checkpoint {
+    pub fn new(
+        iteration: usize,
+        groups: Vec<Vec<(Tensor, Tensor)>>,
+        layers: Vec<LayerShape>,
+    ) -> Checkpoint {
+        Checkpoint {
+            iteration,
+            groups,
+            layers,
+        }
+    }
+
+    fn paths(base: &Path) -> (PathBuf, PathBuf) {
+        (base.with_extension("json"), base.with_extension("bin"))
+    }
+
+    /// Write `<base>.json` + `<base>.bin`.
+    pub fn save(&self, base: impl AsRef<Path>) -> Result<()> {
+        let (meta_path, blob_path) = Self::paths(base.as_ref());
+        if let Some(parent) = meta_path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+
+        let mut layers = Vec::new();
+        for l in &self.layers {
+            let mut j = Json::obj();
+            j.set("kind", l.kind.as_str())
+                .set("d_in", l.d_in)
+                .set("d_out", l.d_out);
+            layers.push(j);
+        }
+        let mut meta = Json::obj();
+        meta.set("version", CHECKPOINT_VERSION)
+            .set("iteration", self.iteration)
+            .set("groups", self.groups.len())
+            .set("layers", layers);
+        meta.write_file(&meta_path)?;
+
+        let mut blob = std::io::BufWriter::new(std::fs::File::create(&blob_path)?);
+        for group in &self.groups {
+            debug_assert_eq!(group.len(), self.layers.len());
+            for (w, b) in group {
+                for &v in w.data().iter().chain(b.data()) {
+                    blob.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        blob.flush()?;
+        Ok(())
+    }
+
+    /// Load `<base>.json` + `<base>.bin`, validating sizes.
+    pub fn load(base: impl AsRef<Path>) -> Result<Checkpoint> {
+        let (meta_path, blob_path) = Self::paths(base.as_ref());
+        let meta = Json::from_file(&meta_path)?;
+        let version = meta.get("version")?.as_usize()?;
+        if version != CHECKPOINT_VERSION {
+            return Err(Error::Config(format!(
+                "checkpoint version {version} unsupported"
+            )));
+        }
+        let iteration = meta.get("iteration")?.as_usize()?;
+        let n_groups = meta.get("groups")?.as_usize()?;
+        let mut layers = Vec::new();
+        for l in meta.get("layers")?.as_arr()? {
+            layers.push(LayerShape::new(
+                crate::nn::layer::LayerKind::parse(l.get("kind")?.as_str()?)?,
+                l.get("d_in")?.as_usize()?,
+                l.get("d_out")?.as_usize()?,
+            )?);
+        }
+
+        let per_group: usize = layers.iter().map(|l| l.param_count()).sum();
+        let want_bytes = n_groups * per_group * 4;
+        let mut bytes = Vec::with_capacity(want_bytes);
+        std::fs::File::open(&blob_path)?.read_to_end(&mut bytes)?;
+        if bytes.len() != want_bytes {
+            return Err(Error::Config(format!(
+                "checkpoint blob {} has {} bytes, want {want_bytes}",
+                blob_path.display(),
+                bytes.len()
+            )));
+        }
+
+        let mut floats = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let mut group = Vec::with_capacity(layers.len());
+            for l in &layers {
+                let w: Vec<f32> = (&mut floats).take(l.d_in * l.d_out).collect();
+                let b: Vec<f32> = (&mut floats).take(l.d_out).collect();
+                group.push((
+                    Tensor::from_vec(&[l.d_in, l.d_out], w)?,
+                    Tensor::from_vec(&[l.d_out], b)?,
+                ));
+            }
+            groups.push(group);
+        }
+        Ok(Checkpoint {
+            iteration,
+            groups,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::util::rng::Pcg32;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let layers = resmlp_layers(6, 4, 1, 3);
+        let mut rng = Pcg32::new(4);
+        let groups: Vec<_> = (0..3).map(|_| init_params(&mut rng, &layers)).collect();
+        Checkpoint::new(123, groups, layers)
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let dir = std::env::temp_dir().join("sgs_ckpt_rt");
+        let base = dir.join("ck");
+        let ck = sample_checkpoint();
+        ck.save(&base).unwrap();
+        let back = Checkpoint::load(&base).unwrap();
+        assert_eq!(back.iteration, 123);
+        assert_eq!(back.groups.len(), 3);
+        for (g1, g2) in ck.groups.iter().zip(&back.groups) {
+            for ((w1, b1), (w2, b2)) in g1.iter().zip(g2) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_blob() {
+        let dir = std::env::temp_dir().join("sgs_ckpt_trunc");
+        let base = dir.join("ck");
+        sample_checkpoint().save(&base).unwrap();
+        let blob = base.with_extension("bin");
+        let bytes = std::fs::read(&blob).unwrap();
+        std::fs::write(&blob, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(Checkpoint::load(&base).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = std::env::temp_dir().join("sgs_ckpt_ver");
+        let base = dir.join("ck");
+        sample_checkpoint().save(&base).unwrap();
+        let meta = base.with_extension("json");
+        let text = std::fs::read_to_string(&meta)
+            .unwrap()
+            .replace("\"version\": 1", "\"version\": 9");
+        std::fs::write(&meta, text).unwrap();
+        assert!(Checkpoint::load(&base).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,146 @@
+//! Step-size strategies (Section 5 eqs. (20)–(21), Assumption 4.6).
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    /// Strategy I: η_t = η ∀t (eq. (20)).
+    Const(f64),
+    /// Strategy II: piecewise-constant drops; (boundary, value-after) pairs
+    /// applied in order. `base` is η before the first boundary (eq. (21)).
+    Piecewise { base: f64, drops: Vec<(usize, f64)> },
+    /// Diminishing η_t = η*/(t+1) — satisfies Assumption 4.6 when η* ≤ S/ϱ.
+    Diminishing { eta0: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f64 {
+        match self {
+            LrSchedule::Const(eta) => *eta,
+            LrSchedule::Piecewise { base, drops } => {
+                let mut eta = *base;
+                for &(boundary, value) in drops {
+                    if t > boundary {
+                        eta = value;
+                    }
+                }
+                eta
+            }
+            LrSchedule::Diminishing { eta0 } => eta0 / (t as f64 + 1.0),
+        }
+    }
+
+    /// The paper's Strategy I (η = 0.1).
+    pub fn strategy_1() -> LrSchedule {
+        LrSchedule::Const(0.1)
+    }
+
+    /// The paper's Strategy II (eq. (21)), with breakpoints scaled from the
+    /// 50 000-iteration run to `total_iters` proportionally
+    /// (15k/30k/40k out of 50k → 0.3/0.6/0.8).
+    pub fn strategy_2(total_iters: usize) -> LrSchedule {
+        LrSchedule::Piecewise {
+            base: 0.1,
+            drops: vec![
+                (total_iters * 3 / 10, 0.01),
+                (total_iters * 6 / 10, 0.001),
+                (total_iters * 8 / 10, 0.0001),
+            ],
+        }
+    }
+
+    /// Parse "const:0.1" | "piecewise:0.1@0,0.01@300,..." | "dim:0.5".
+    pub fn parse(s: &str) -> Result<LrSchedule> {
+        let bad = || Error::Config(format!("bad lr schedule {s:?}"));
+        if let Some(v) = s.strip_prefix("const:") {
+            return Ok(LrSchedule::Const(v.parse().map_err(|_| bad())?));
+        }
+        if let Some(v) = s.strip_prefix("dim:") {
+            return Ok(LrSchedule::Diminishing {
+                eta0: v.parse().map_err(|_| bad())?,
+            });
+        }
+        if let Some(spec) = s.strip_prefix("piecewise:") {
+            let mut base = None;
+            let mut drops = Vec::new();
+            for part in spec.split(',') {
+                let (val, at) = part.split_once('@').ok_or_else(bad)?;
+                let val: f64 = val.parse().map_err(|_| bad())?;
+                let at: usize = at.parse().map_err(|_| bad())?;
+                if at == 0 && base.is_none() {
+                    base = Some(val);
+                } else {
+                    drops.push((at, val));
+                }
+            }
+            return Ok(LrSchedule::Piecewise {
+                base: base.ok_or_else(bad)?,
+                drops,
+            });
+        }
+        Err(bad())
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            LrSchedule::Const(eta) => format!("const:{eta}"),
+            LrSchedule::Piecewise { base, drops } => {
+                let mut s = format!("piecewise:{base}@0");
+                for (at, v) in drops {
+                    s.push_str(&format!(",{v}@{at}"));
+                }
+                s
+            }
+            LrSchedule::Diminishing { eta0 } => format!("dim:{eta0}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_1_constant() {
+        let lr = LrSchedule::strategy_1();
+        assert_eq!(lr.at(0), 0.1);
+        assert_eq!(lr.at(49_999), 0.1);
+    }
+
+    #[test]
+    fn strategy_2_matches_eq21_at_full_scale() {
+        // at 50k iters the breakpoints are exactly the paper's 15k/30k/40k
+        let lr = LrSchedule::strategy_2(50_000);
+        assert_eq!(lr.at(0), 0.1);
+        assert_eq!(lr.at(15_000), 0.1); // t ≤ 15000
+        assert_eq!(lr.at(15_001), 0.01);
+        assert_eq!(lr.at(30_000), 0.01);
+        assert_eq!(lr.at(30_001), 0.001);
+        assert_eq!(lr.at(40_000), 0.001);
+        assert_eq!(lr.at(40_001), 0.0001);
+    }
+
+    #[test]
+    fn diminishing_satisfies_assumption_4_6() {
+        let lr = LrSchedule::Diminishing { eta0: 0.5 };
+        // decreasing
+        for t in 0..100 {
+            assert!(lr.at(t) > lr.at(t + 1));
+        }
+        // Σ η_t diverges (harmonic) but Σ η_t² converges: check partial sums
+        let sum1: f64 = (0..10_000).map(|t| lr.at(t)).sum();
+        let sum2: f64 = (0..10_000).map(|t| lr.at(t).powi(2)).sum();
+        assert!(sum1 > 4.0);
+        assert!(sum2 < 0.5); // 0.25 · π²/6 ≈ 0.411
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["const:0.1", "dim:0.5", "piecewise:0.1@0,0.01@300,0.001@600"] {
+            let lr = LrSchedule::parse(s).unwrap();
+            assert_eq!(LrSchedule::parse(&lr.describe()).unwrap(), lr);
+        }
+        assert!(LrSchedule::parse("cosine:1").is_err());
+        assert!(LrSchedule::parse("piecewise:nope").is_err());
+    }
+}

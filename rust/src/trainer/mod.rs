@@ -1,0 +1,479 @@
+//! The distributed trainer: S pipeline groups + per-module-group gossip.
+//!
+//! This single engine realizes all four Section-5 methods as (S, K) points:
+//! centralized (1,1), decoupled model (1,2), data-parallel (4,1), and the
+//! paper's distributed method (4,2) — plus any other grid point.
+
+pub mod checkpoint;
+pub mod lr;
+pub mod opt;
+pub mod sgd;
+
+pub use checkpoint::Checkpoint;
+pub use lr::LrSchedule;
+pub use opt::OptimizerKind;
+
+use crate::config::ExperimentConfig;
+use crate::consensus::{consensus_error, GossipMixer};
+use crate::data::{shard_even, Dataset, MiniBatchSampler};
+use crate::error::Result;
+use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
+use crate::linalg::Mat;
+use crate::metrics::{Record, Recorder};
+use crate::nn::init::init_params;
+use crate::nn::LayerShape;
+use crate::pipeline::module_agent::ModuleAgent;
+use crate::pipeline::sim::PipelineGroup;
+use crate::runtime::ComputeBackend;
+use crate::staleness::partition_layers;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// A ready-to-run experiment (sim engine).
+pub struct Trainer<'a> {
+    pub cfg: ExperimentConfig,
+    backend: &'a dyn ComputeBackend,
+    ds: &'a Dataset,
+    groups: Vec<PipelineGroup>,
+    mixer: Option<GossipMixer>,
+    pub p_matrix: Option<Mat>,
+    layers: Vec<LayerShape>,
+    probe: (Tensor, Tensor),
+    /// modelled seconds per iteration (from simclock; 0 if not set)
+    pub iter_time_s: f64,
+    t: i64,
+    /// iterations completed before a checkpoint restore (LR/record offset)
+    t_offset: usize,
+    recorder: Recorder,
+}
+
+impl<'a> Trainer<'a> {
+    /// Build groups, shards, samplers, and the gossip mixer.
+    ///
+    /// All S groups start from IDENTICAL weights (the common choice; the
+    /// consensus analysis then has δ(0) = 0).
+    pub fn new(
+        cfg: ExperimentConfig,
+        backend: &'a dyn ComputeBackend,
+        ds: &'a Dataset,
+    ) -> Result<Trainer<'a>> {
+        cfg.validate()?;
+        let layers = cfg.model.layers();
+        assert_eq!(
+            backend.layers(),
+            &layers[..],
+            "backend layer stack differs from config model"
+        );
+
+        let mut root_rng = Pcg32::new(cfg.seed);
+        let init = init_params(&mut root_rng.fork(0x1217), &layers);
+        let bounds = partition_layers(layers.len(), cfg.k);
+
+        let shards = shard_even(ds, cfg.s, cfg.seed ^ 0xDA7A)?;
+        let mut groups = Vec::with_capacity(cfg.s);
+        for (s, shard) in shards.into_iter().enumerate() {
+            let modules: Vec<ModuleAgent> = bounds
+                .iter()
+                .enumerate()
+                .map(|(k, &(lo, hi))| {
+                    ModuleAgent::with_optimizer(k, lo, hi, init[lo..hi].to_vec(), cfg.optimizer)
+                })
+                .collect();
+            let sampler =
+                MiniBatchSampler::new(shard, cfg.batch, cfg.seed ^ (0xBA7C << 8) ^ s as u64);
+            groups.push(PipelineGroup::with_mode(s, modules, sampler, cfg.mode));
+        }
+
+        // gossip machinery only when there is someone to gossip with
+        let (mixer, p_matrix) = if cfg.s > 1 {
+            let g = Graph::build(cfg.topology, cfg.s)?;
+            let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
+            let p = xiao_boyd_weights(&g, alpha)?;
+            (Some(GossipMixer::new(&p, 0)), Some(p))
+        } else {
+            (None, None)
+        };
+
+        // fixed probe batch for eval (drawn from the full dataset)
+        let mut probe_rng = root_rng.fork(0x9E0B);
+        let probe_idx = probe_rng.sample_indices(ds.len(), cfg.batch.min(ds.len()));
+        let probe = ds.gather(&probe_idx);
+
+        Ok(Trainer {
+            cfg,
+            backend,
+            ds,
+            groups,
+            mixer,
+            p_matrix,
+            layers,
+            probe,
+            iter_time_s: 0.0,
+            t: 0,
+            t_offset: 0,
+            recorder: Recorder::new(),
+        })
+    }
+
+    pub fn groups(&self) -> &[PipelineGroup] {
+        &self.groups
+    }
+
+    /// Snapshot the current weights + absolute iteration count.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint::new(
+            self.t_offset + self.t as usize,
+            self.groups.iter().map(|g| g.all_params()).collect(),
+            self.layers.clone(),
+        )
+    }
+
+    /// Restore weights from a checkpoint and continue training from its
+    /// iteration (LR schedule resumes at the right position). The pipeline
+    /// refills: the first `warmup_iters()` post-restore updates use zero
+    /// gradients, exactly like a fresh start (eq. (10)'s τ < 0 convention).
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        if ck.groups.len() != self.groups.len() {
+            return Err(crate::error::Error::Config(format!(
+                "checkpoint has {} groups, trainer has {}",
+                ck.groups.len(),
+                self.groups.len()
+            )));
+        }
+        if ck.layers != self.layers {
+            return Err(crate::error::Error::Config(
+                "checkpoint layer stack differs from trainer model".into(),
+            ));
+        }
+        for (group, saved) in self.groups.iter_mut().zip(&ck.groups) {
+            let mut off = 0;
+            for module in group.modules.iter_mut() {
+                for p in module.params.iter_mut() {
+                    *p = saved[off].clone();
+                    off += 1;
+                }
+            }
+        }
+        self.t_offset = ck.iteration;
+        self.t = 0;
+        Ok(())
+    }
+
+    /// Group-averaged parameters W̄(t) (the quantity the theory tracks).
+    pub fn averaged_params(&self) -> Vec<(Tensor, Tensor)> {
+        let s = self.groups.len();
+        let mut avg = self.groups[0].all_params();
+        for g in &self.groups[1..] {
+            for (acc, (w, b)) in avg.iter_mut().zip(g.all_params()) {
+                acc.0.axpy(1.0, &w);
+                acc.1.axpy(1.0, &b);
+            }
+        }
+        for (w, b) in avg.iter_mut() {
+            w.scale(1.0 / s as f32);
+            b.scale(1.0 / s as f32);
+        }
+        avg
+    }
+
+    /// δ(t) of eq. (22) over the current per-group parameters.
+    pub fn consensus_delta(&self) -> f64 {
+        if self.groups.len() < 2 {
+            return 0.0;
+        }
+        let per_group: Vec<Vec<(Tensor, Tensor)>> =
+            self.groups.iter().map(|g| g.all_params()).collect();
+        consensus_error(&per_group)
+    }
+
+    /// One global iteration: every group steps (fwd/bwd/update, eq. 13a),
+    /// then each model-group gossips (eq. 13b).
+    pub fn step(&mut self) -> Result<Record> {
+        let t = self.t;
+        let eta = self.cfg.lr.at(self.t_offset + t as usize);
+
+        let mut losses = Vec::new();
+        for g in &mut self.groups {
+            let out = g.step(self.backend, self.ds, t, eta)?;
+            if let Some(l) = out.loss {
+                losses.push(l as f64);
+            }
+        }
+
+        // gossip: for every module's every parameter tensor, mix across groups
+        if let Some(mixer) = &mut self.mixer {
+            let k_modules = self.groups[0].k();
+            for k in 0..k_modules {
+                let n_local = self.groups[0].modules[k].n_layers();
+                for l in 0..n_local {
+                    for which in 0..2 {
+                        // gather replicas (move out, mix, move back)
+                        let mut replicas: Vec<Tensor> = self
+                            .groups
+                            .iter_mut()
+                            .map(|g| {
+                                let p = &mut g.modules[k].params[l];
+                                std::mem::replace(
+                                    if which == 0 { &mut p.0 } else { &mut p.1 },
+                                    Tensor::zeros(&[0]),
+                                )
+                            })
+                            .collect();
+                        // r rounds: contraction γ^r per iteration
+                        for _ in 0..self.cfg.gossip_rounds {
+                            mixer.mix(&mut replicas);
+                        }
+                        for (g, r) in self.groups.iter_mut().zip(replicas) {
+                            let p = &mut g.modules[k].params[l];
+                            *(if which == 0 { &mut p.0 } else { &mut p.1 }) = r;
+                        }
+                    }
+                }
+            }
+        }
+
+        self.t += 1;
+        let t_us = self.t_offset + t as usize;
+
+        let mut record = Record {
+            t: t_us,
+            lr: eta,
+            train_loss: (!losses.is_empty()).then(|| crate::util::mean(&losses)),
+            sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
+            ..Default::default()
+        };
+
+        if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
+            record.delta = Some(self.consensus_delta());
+        }
+        if self.cfg.eval_every > 0 && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
+        {
+            let avg = self.averaged_params();
+            let (x, oh) = &self.probe;
+            record.eval_loss = Some(self.backend.eval_loss(x, oh, &avg)? as f64);
+            let logits = crate::nn::full_forward(x, &avg, &self.layers);
+            record.eval_acc = Some(crate::nn::accuracy(&logits, oh));
+        }
+
+        self.recorder.push(record.clone());
+        Ok(record)
+    }
+
+    /// Run the configured number of iterations; returns the recorder.
+    pub fn run(&mut self) -> Result<&Recorder> {
+        for _ in 0..self.cfg.iters {
+            self.step()?;
+        }
+        Ok(&self.recorder)
+    }
+
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
+    }
+
+    pub fn iterations_done(&self) -> usize {
+        self.t as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::graph::Topology;
+    use crate::runtime::NativeBackend;
+
+    fn tiny_cfg(s: usize, k: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "test".into(),
+            s,
+            k,
+            topology: Topology::Ring,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 },
+            batch: 16,
+            iters: 200,
+            lr: LrSchedule::Const(0.1),
+            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            mode: crate::staleness::PipelineMode::FullyDecoupled,
+            seed: 7,
+            dataset_n: 400,
+            delta_every: 5,
+            eval_every: 20,
+        }
+    }
+
+    fn run_cfg(cfg: ExperimentConfig) -> (RecorderSnapshot, f64) {
+        let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3)
+            .generate();
+        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+        let mut tr = Trainer::new(cfg, &backend, &ds).unwrap();
+        tr.run().unwrap();
+        let delta = tr.consensus_delta();
+        // smooth over windows: single-batch losses are noisy at batch 16
+        let losses: Vec<f64> = tr
+            .recorder()
+            .records
+            .iter()
+            .filter_map(|r| r.train_loss)
+            .collect();
+        let head = crate::util::mean(&losses[..20.min(losses.len())]);
+        let n = losses.len();
+        let tail = crate::util::mean(&losses[n.saturating_sub(20)..]);
+        (
+            RecorderSnapshot {
+                final_train_loss: Some(tail),
+                first_train_loss: Some(head),
+            },
+            delta,
+        )
+    }
+
+    struct RecorderSnapshot {
+        final_train_loss: Option<f64>,
+        first_train_loss: Option<f64>,
+    }
+
+    #[test]
+    fn all_four_paper_methods_learn() {
+        for (s, k) in [(1, 1), (1, 2), (4, 1), (4, 2)] {
+            let (snap, _) = run_cfg(tiny_cfg(s, k));
+            let first = snap.first_train_loss.unwrap();
+            let last = snap.final_train_loss.unwrap();
+            assert!(
+                last < first * 0.9,
+                "S={s},K={k}: loss {first} -> {last} did not drop"
+            );
+        }
+    }
+
+    #[test]
+    fn consensus_error_stays_small() {
+        // identical init ⇒ δ(0)=0; gossip keeps δ(t) below O(η) (Thm 4.5)
+        let (_, delta) = run_cfg(tiny_cfg(4, 2));
+        assert!(delta < 0.5, "delta blew up: {delta}");
+    }
+
+    #[test]
+    fn s1_has_zero_delta() {
+        let (_, delta) = run_cfg(tiny_cfg(1, 2));
+        assert_eq!(delta, 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, da) = run_cfg(tiny_cfg(2, 2));
+        let (b, db) = run_cfg(tiny_cfg(2, 2));
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn dbp_mode_learns_and_differs_from_fd() {
+        // the Huo-et-al backward-unlocked baseline must train, and its
+        // halved staleness gives a different trajectory than FD
+        let mut fd = tiny_cfg(2, 3);
+        fd.iters = 100;
+        let mut dbp = fd.clone();
+        dbp.mode = crate::staleness::PipelineMode::BackwardUnlocked;
+        let (fd_snap, _) = run_cfg(fd);
+        let (dbp_snap, _) = run_cfg(dbp);
+        let dbp_first = dbp_snap.first_train_loss.unwrap();
+        let dbp_last = dbp_snap.final_train_loss.unwrap();
+        assert!(dbp_last < dbp_first, "dbp did not learn: {dbp_first} -> {dbp_last}");
+        assert_ne!(fd_snap.final_train_loss, dbp_snap.final_train_loss);
+    }
+
+    #[test]
+    fn momentum_optimizer_trains_through_pipeline() {
+        let mut cfg = tiny_cfg(2, 2);
+        cfg.iters = 150;
+        cfg.lr = LrSchedule::Const(0.05);
+        cfg.optimizer = crate::trainer::opt::OptimizerKind::Momentum { beta: 0.9 };
+        let (snap, delta) = run_cfg(cfg);
+        assert!(
+            snap.final_train_loss.unwrap() < snap.first_train_loss.unwrap(),
+            "momentum run did not learn"
+        );
+        assert!(delta.is_finite() && delta < 1.0);
+    }
+
+    #[test]
+    fn more_gossip_rounds_tighten_consensus() {
+        // γ^r contraction: r=3 rounds per iteration must leave a smaller
+        // consensus floor than r=1 on a slow-mixing ring
+        let mut one = tiny_cfg(4, 2);
+        one.iters = 120;
+        let mut three = one.clone();
+        three.gossip_rounds = 3;
+        let (_, d1) = run_cfg(one);
+        let (_, d3) = run_cfg(three);
+        assert!(
+            d3 < d1,
+            "3 rounds should beat 1: delta {d3:.3e} vs {d1:.3e}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_training() {
+        let cfg = tiny_cfg(2, 2);
+        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
+        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+
+        // train 50, checkpoint (to disk), restore into a FRESH trainer
+        let mut a = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+        for _ in 0..50 {
+            a.step().unwrap();
+        }
+        let dir = std::env::temp_dir().join("sgs_trainer_ckpt");
+        let base = dir.join("ck");
+        a.checkpoint().save(&base).unwrap();
+
+        let ck = Checkpoint::load(&base).unwrap();
+        assert_eq!(ck.iteration, 50);
+        let mut b = Trainer::new(cfg, &backend, &ds).unwrap();
+        b.restore(&ck).unwrap();
+
+        // restored weights match exactly
+        for (ga, gb) in a.groups().iter().zip(b.groups()) {
+            for ((w1, b1), (w2, b2)) in ga.all_params().iter().zip(gb.all_params().iter()) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
+        // resumed trainer keeps learning and reports absolute iterations
+        for _ in 0..30 {
+            b.step().unwrap();
+        }
+        let recs = &b.recorder().records;
+        assert_eq!(recs[0].t, 50);
+        assert_eq!(recs[29].t, 79);
+        assert!(recs.iter().rev().find_map(|r| r.train_loss).unwrap() < 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let cfg = tiny_cfg(2, 2);
+        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
+        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+        let a = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+        let mut ck = a.checkpoint();
+        ck.groups.pop(); // wrong group count
+        let mut b = Trainer::new(cfg, &backend, &ds).unwrap();
+        assert!(b.restore(&ck).is_err());
+    }
+
+    #[test]
+    fn averaged_params_shape() {
+        let cfg = tiny_cfg(3, 2);
+        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
+        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+        let tr = Trainer::new(cfg, &backend, &ds).unwrap();
+        let avg = tr.averaged_params();
+        assert_eq!(avg.len(), 4);
+        assert_eq!(avg[0].0.shape(), &[12, 10]);
+    }
+}

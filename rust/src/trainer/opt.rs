@@ -1,0 +1,199 @@
+//! Optimizers for the stale-gradient update (eq. (13a) generalized).
+//!
+//! The paper analyses plain SGD; momentum under gradient staleness is its
+//! natural extension (and the classic failure mode of asynchronous
+//! methods — stale momentum compounds stale gradients, which is why the
+//! ablation in `benches/ablation_sk.rs`-style sweeps matters). State is
+//! per-module so both pipeline engines share the same mechanics.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    /// w ← w − η·scale·g  (the paper's update)
+    Sgd,
+    /// v ← β v + g; w ← w − η·scale·v  (heavy-ball)
+    Momentum { beta: f64 },
+    /// v ← β v + g; w ← w − η·scale·(g + β v)  (Nesterov-style lookahead)
+    Nesterov { beta: f64 },
+}
+
+impl OptimizerKind {
+    /// Parse "sgd" | "momentum:0.9" | "nesterov:0.9".
+    pub fn parse(s: &str) -> Result<OptimizerKind> {
+        let bad = || Error::Config(format!("bad optimizer {s:?}"));
+        if s == "sgd" {
+            return Ok(OptimizerKind::Sgd);
+        }
+        if let Some(v) = s.strip_prefix("momentum:") {
+            return Ok(OptimizerKind::Momentum {
+                beta: v.parse().map_err(|_| bad())?,
+            });
+        }
+        if let Some(v) = s.strip_prefix("nesterov:") {
+            return Ok(OptimizerKind::Nesterov {
+                beta: v.parse().map_err(|_| bad())?,
+            });
+        }
+        Err(bad())
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            OptimizerKind::Sgd => "sgd".into(),
+            OptimizerKind::Momentum { beta } => format!("momentum:{beta}"),
+            OptimizerKind::Nesterov { beta } => format!("nesterov:{beta}"),
+        }
+    }
+}
+
+/// Per-module optimizer state: one velocity buffer per parameter tensor.
+#[derive(Debug, Clone)]
+pub struct ModuleOptimizer {
+    pub kind: OptimizerKind,
+    /// (v_W, v_b) per local layer; allocated lazily on first use
+    velocity: Vec<(Tensor, Tensor)>,
+}
+
+impl ModuleOptimizer {
+    pub fn new(kind: OptimizerKind) -> ModuleOptimizer {
+        ModuleOptimizer {
+            kind,
+            velocity: Vec::new(),
+        }
+    }
+
+    /// Apply the stale-gradient step to `params` in place.
+    /// `scale` is the |D_s|/N factor of eq. (13a).
+    pub fn step(
+        &mut self,
+        params: &mut [(Tensor, Tensor)],
+        grads: &[(Tensor, Tensor)],
+        eta: f64,
+        scale: f64,
+    ) {
+        debug_assert_eq!(params.len(), grads.len());
+        let lr = (eta * scale) as f32;
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for ((w, b), (g_w, g_b)) in params.iter_mut().zip(grads) {
+                    w.axpy(-lr, g_w);
+                    b.axpy(-lr, g_b);
+                }
+            }
+            OptimizerKind::Momentum { beta } => {
+                self.ensure_velocity(params);
+                let beta = beta as f32;
+                for (((w, b), (g_w, g_b)), (v_w, v_b)) in
+                    params.iter_mut().zip(grads).zip(&mut self.velocity)
+                {
+                    v_w.scale(beta);
+                    v_w.axpy(1.0, g_w);
+                    v_b.scale(beta);
+                    v_b.axpy(1.0, g_b);
+                    w.axpy(-lr, v_w);
+                    b.axpy(-lr, v_b);
+                }
+            }
+            OptimizerKind::Nesterov { beta } => {
+                self.ensure_velocity(params);
+                let beta = beta as f32;
+                for (((w, b), (g_w, g_b)), (v_w, v_b)) in
+                    params.iter_mut().zip(grads).zip(&mut self.velocity)
+                {
+                    v_w.scale(beta);
+                    v_w.axpy(1.0, g_w);
+                    v_b.scale(beta);
+                    v_b.axpy(1.0, g_b);
+                    // lookahead: g + β v
+                    w.axpy(-lr, g_w);
+                    w.axpy(-lr * beta, v_w);
+                    b.axpy(-lr, g_b);
+                    b.axpy(-lr * beta, v_b);
+                }
+            }
+        }
+    }
+
+    fn ensure_velocity(&mut self, params: &[(Tensor, Tensor)]) {
+        if self.velocity.len() != params.len() {
+            self.velocity = params
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
+                .collect();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_param(v: f32) -> Vec<(Tensor, Tensor)> {
+        vec![(
+            Tensor::from_vec(&[1], vec![v]).unwrap(),
+            Tensor::from_vec(&[1], vec![0.0]).unwrap(),
+        )]
+    }
+
+    fn grad(g: f32) -> Vec<(Tensor, Tensor)> {
+        vec![(
+            Tensor::from_vec(&[1], vec![g]).unwrap(),
+            Tensor::from_vec(&[1], vec![0.0]).unwrap(),
+        )]
+    }
+
+    #[test]
+    fn sgd_matches_manual() {
+        let mut opt = ModuleOptimizer::new(OptimizerKind::Sgd);
+        let mut p = one_param(1.0);
+        opt.step(&mut p, &grad(2.0), 0.1, 0.5);
+        assert!((p[0].0.data()[0] - (1.0 - 0.1 * 0.5 * 2.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = ModuleOptimizer::new(OptimizerKind::Momentum { beta: 0.5 });
+        let mut p = one_param(0.0);
+        // constant gradient 1: v = 1, 1.5, 1.75, ... -> steps grow toward 2x
+        opt.step(&mut p, &grad(1.0), 0.1, 1.0); // w = -0.1
+        opt.step(&mut p, &grad(1.0), 0.1, 1.0); // v=1.5, w = -0.25
+        assert!((p[0].0.data()[0] - -0.25).abs() < 1e-6, "{}", p[0].0.data()[0]);
+    }
+
+    #[test]
+    fn nesterov_takes_lookahead_step() {
+        let mut opt = ModuleOptimizer::new(OptimizerKind::Nesterov { beta: 0.5 });
+        let mut p = one_param(0.0);
+        opt.step(&mut p, &grad(1.0), 0.1, 1.0); // v=1, step = g + βv = 1.5 -> w=-0.15
+        assert!((p[0].0.data()[0] - -0.15).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_beats_sgd_on_quadratic() {
+        // minimize 0.5*w^2 (grad = w): momentum converges faster from w=1
+        let run = |kind| {
+            let mut opt = ModuleOptimizer::new(kind);
+            let mut p = one_param(1.0);
+            for _ in 0..30 {
+                let g = grad(p[0].0.data()[0]);
+                opt.step(&mut p, &g, 0.1, 1.0);
+            }
+            p[0].0.data()[0].abs()
+        };
+        let sgd = run(OptimizerKind::Sgd);
+        let mom = run(OptimizerKind::Momentum { beta: 0.8 });
+        assert!(mom < sgd, "momentum {mom} should beat sgd {sgd}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["sgd", "momentum:0.9", "nesterov:0.85"] {
+            let o = OptimizerKind::parse(s).unwrap();
+            assert_eq!(OptimizerKind::parse(&o.describe()).unwrap(), o);
+        }
+        assert!(OptimizerKind::parse("adam").is_err());
+        assert!(OptimizerKind::parse("momentum:x").is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Plain mini-batch SGD with classic backpropagation (eq. (3)/(4)) —
+//! the textbook baseline the paper's centralized method (S=1, K=1) must
+//! reproduce exactly, implemented independently of the pipeline machinery
+//! so equivalence tests have a second opinion.
+
+use crate::data::{Dataset, MiniBatchSampler};
+use crate::nn::{self, LayerShape};
+use crate::tensor::Tensor;
+
+pub struct SgdBaseline {
+    pub layers: Vec<LayerShape>,
+    pub params: Vec<(Tensor, Tensor)>,
+    sampler: MiniBatchSampler,
+}
+
+impl SgdBaseline {
+    pub fn new(
+        layers: Vec<LayerShape>,
+        params: Vec<(Tensor, Tensor)>,
+        sampler: MiniBatchSampler,
+    ) -> SgdBaseline {
+        SgdBaseline {
+            layers,
+            params,
+            sampler,
+        }
+    }
+
+    /// One SGD iteration; returns the mini-batch loss before the update.
+    pub fn step(&mut self, ds: &Dataset, eta: f64) -> f32 {
+        let (x, onehot) = self.sampler.sample_batch(ds);
+        let (loss, grads) = nn::full_backward(&x, &onehot, &self.params, &self.layers);
+        for ((w, b), (g_w, g_b)) in self.params.iter_mut().zip(&grads) {
+            w.axpy(-(eta as f32), g_w);
+            b.axpy(-(eta as f32), g_b);
+        }
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard_even, synthetic::SyntheticSpec};
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sgd_learns() {
+        let ds = SyntheticSpec::small(200, 10, 3, 1).generate();
+        let layers = resmlp_layers(10, 8, 1, 3);
+        let mut rng = Pcg32::new(2);
+        let params = init_params(&mut rng, &layers);
+        let shard = shard_even(&ds, 1, 0).unwrap().remove(0);
+        let sampler = MiniBatchSampler::new(shard, 16, 5);
+        let mut sgd = SgdBaseline::new(layers, params, sampler);
+        let first = sgd.step(&ds, 0.3);
+        let mut last = first;
+        for _ in 0..120 {
+            last = sgd.step(&ds, 0.3);
+        }
+        assert!(last < first * 0.8, "{first} -> {last}");
+    }
+}

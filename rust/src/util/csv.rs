@@ -1,0 +1,92 @@
+//! Tiny CSV writer for figure/metric series (`bench_out/*.csv`).
+//!
+//! Every bench in `benches/` regenerates one paper figure as a CSV with a
+//! header row; EXPERIMENTS.md references these files.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    /// Write one row of numeric cells (must match the header width).
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        let mut line = String::with_capacity(cells.len() * 12);
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if c.fract() == 0.0 && c.abs() < 1e15 {
+                line.push_str(&format!("{}", *c as i64));
+            } else {
+                line.push_str(&format!("{c:.6e}"));
+            }
+        }
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Write one row of mixed string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("sgs_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "loss"]).unwrap();
+            w.row(&[0.0, 2.302585]).unwrap();
+            w.row(&[1.0, 2.1]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "iter,loss");
+        assert!(lines[1].starts_with("0,2.302585"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("sgs_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Algorithm-level integration tests: the distributed method's documented
+//! equivalences and the Section-4 convergence claims, checked empirically
+//! on the native backend.
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::data::synthetic::SyntheticSpec;
+use sgs::data::{shard_even, MiniBatchSampler};
+use sgs::graph::Topology;
+use sgs::nn::init::init_params;
+use sgs::runtime::NativeBackend;
+use sgs::trainer::{sgd::SgdBaseline, LrSchedule, Trainer};
+use sgs::util::rng::Pcg32;
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "conv-test".into(),
+        s: 4,
+        k: 2,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 },
+        batch: 12,
+        iters: 300,
+        lr: LrSchedule::Const(0.1),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 21,
+        dataset_n: 480,
+        delta_every: 1,
+        eval_every: 50,
+    }
+}
+
+fn run(cfg: ExperimentConfig) -> (Vec<Option<f64>>, Vec<(usize, f64)>, f64) {
+    let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 9).generate();
+    let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+    let mut tr = Trainer::new(cfg, &backend, &ds).unwrap();
+    tr.run().unwrap();
+    let losses = tr.recorder().records.iter().map(|r| r.train_loss).collect();
+    let deltas = tr
+        .recorder()
+        .records
+        .iter()
+        .filter_map(|r| r.delta.map(|d| (r.t, d)))
+        .collect();
+    let final_delta = tr.consensus_delta();
+    (losses, deltas, final_delta)
+}
+
+#[test]
+fn centralized_method_equals_plain_sgd_exactly() {
+    // (S=1, K=1) through the full coordinator == the independent SGD
+    // baseline with the same init + sampling stream.
+    let mut cfg = base_cfg();
+    cfg.s = 1;
+    cfg.k = 1;
+    cfg.iters = 25;
+    let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 9).generate();
+    let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+    let mut tr = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+
+    // replicate the trainer's internal init/sampling streams
+    let layers = cfg.model.layers();
+    let mut root = Pcg32::new(cfg.seed);
+    let params = init_params(&mut root.fork(0x1217), &layers);
+    let shard = shard_even(&ds, 1, cfg.seed ^ 0xDA7A).unwrap().remove(0);
+    let sampler = MiniBatchSampler::new(shard, cfg.batch, cfg.seed ^ (0xBA7C << 8));
+    let mut sgd = SgdBaseline::new(layers, params, sampler);
+
+    for _ in 0..cfg.iters {
+        let rec = tr.step().unwrap();
+        let loss = sgd.step(&ds, 0.1);
+        assert!((rec.train_loss.unwrap() - loss as f64).abs() < 1e-6);
+    }
+    for (grp_p, sgd_p) in tr.groups()[0].all_params().iter().zip(&sgd.params) {
+        assert!(grp_p.0.max_abs_diff(&sgd_p.0) < 1e-6);
+        assert!(grp_p.1.max_abs_diff(&sgd_p.1) < 1e-6);
+    }
+}
+
+#[test]
+fn delta_bounded_by_step_size_scale() {
+    // Theorem 4.5 eq. (16): with δ(0)=0, ‖δ(t)‖ ≤ γη/(1−γ) · σ√(K/BS).
+    // Empirically the paper observes δ(t) << η; assert δ stays below η.
+    let cfg = base_cfg();
+    let eta = 0.1;
+    let (_, deltas, _) = run(cfg);
+    assert!(!deltas.is_empty());
+    let after_warmup: Vec<f64> = deltas
+        .iter()
+        .filter(|(t, _)| *t > 20)
+        .map(|(_, d)| *d)
+        .collect();
+    let max_delta = after_warmup.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        max_delta < eta,
+        "delta {max_delta} should stay below eta {eta} (paper Fig. 3 col 3)"
+    );
+}
+
+#[test]
+fn smaller_step_size_gives_smaller_delta() {
+    // Theorem 4.5: the consensus-error floor scales with η.
+    let mut big = base_cfg();
+    big.iters = 150;
+    big.lr = LrSchedule::Const(0.2);
+    let mut small = big.clone();
+    small.lr = LrSchedule::Const(0.02);
+    let (_, d_big, _) = run(big);
+    let (_, d_small, _) = run(small);
+    let tail = |d: &[(usize, f64)]| {
+        let xs: Vec<f64> = d.iter().rev().take(30).map(|(_, v)| *v).collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    let (tb, ts) = (tail(&d_big), tail(&d_small));
+    assert!(
+        ts < tb,
+        "delta floor should shrink with eta: eta=0.2 -> {tb:.2e}, eta=0.02 -> {ts:.2e}"
+    );
+}
+
+#[test]
+fn diminishing_steps_drive_delta_to_zero() {
+    // Theorem 4.7 eq. (18): with Assumption 4.6 step sizes, δ(t) → 0.
+    let mut cfg = base_cfg();
+    cfg.iters = 400;
+    cfg.lr = LrSchedule::Diminishing { eta0: 0.5 };
+    let (_, deltas, final_delta) = run(cfg);
+    let early: Vec<f64> = deltas
+        .iter()
+        .filter(|(t, _)| (10..60).contains(t))
+        .map(|(_, d)| *d)
+        .collect();
+    let early_mean = early.iter().sum::<f64>() / early.len() as f64;
+    assert!(
+        final_delta < early_mean * 0.5,
+        "delta should decay: early {early_mean:.2e}, final {final_delta:.2e}"
+    );
+}
+
+#[test]
+fn distributed_matches_data_parallel_loss_at_same_iterations() {
+    // Section 5: the distributed method's per-iteration loss tracks the
+    // data-parallel method closely (slightly worse from staleness, far
+    // better than stale-only). Check final smoothed losses are in order:
+    // data_parallel <= distributed (+slack) and both learn.
+    let mk = |s, k| {
+        let mut c = base_cfg();
+        c.s = s;
+        c.k = k;
+        c.iters = 400;
+        c
+    };
+    let tail_mean = |losses: &[Option<f64>]| {
+        let xs: Vec<f64> = losses.iter().rev().filter_map(|l| *l).take(50).collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    let head_mean = |losses: &[Option<f64>]| {
+        let xs: Vec<f64> = losses.iter().filter_map(|l| *l).take(20).collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    let (dp_losses, _, _) = run(mk(4, 1));
+    let (dist_losses, _, _) = run(mk(4, 2));
+    let (dp_head, dp_tail) = (head_mean(&dp_losses), tail_mean(&dp_losses));
+    let (dist_head, dist_tail) = (head_mean(&dist_losses), tail_mean(&dist_losses));
+    assert!(dp_tail < dp_head * 0.8, "data-parallel learns");
+    assert!(dist_tail < dist_head * 0.8, "distributed learns");
+    // staleness costs something but not catastrophe (paper Fig. 3 col 1)
+    assert!(
+        dist_tail < dp_tail * 2.0 + 0.2,
+        "distributed within striking distance: dp {dp_tail:.3}, dist {dist_tail:.3}"
+    );
+}
+
+#[test]
+fn topology_affects_consensus_not_correctness() {
+    // any connected topology must keep training stable; denser mixes give
+    // smaller delta floors (gamma ordering).
+    let mut floors = Vec::new();
+    for topo in [Topology::Line, Topology::Ring, Topology::Complete] {
+        let mut cfg = base_cfg();
+        cfg.topology = topo;
+        cfg.iters = 150;
+        let (losses, deltas, _) = run(cfg);
+        let tail: Vec<f64> = deltas.iter().rev().take(30).map(|(_, d)| *d).collect();
+        floors.push(tail.iter().sum::<f64>() / tail.len() as f64);
+        let final_losses: Vec<f64> = losses.iter().rev().filter_map(|l| *l).take(20).collect();
+        assert!(final_losses.iter().all(|l| l.is_finite()));
+    }
+    // complete mixes strictly better than line
+    assert!(
+        floors[2] < floors[0],
+        "complete {:.2e} should beat line {:.2e}",
+        floors[2],
+        floors[0]
+    );
+}

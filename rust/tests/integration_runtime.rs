@@ -1,0 +1,182 @@
+//! Runtime integration: the AOT XLA path (Pallas kernels → HLO → PJRT)
+//! must agree with the pure-Rust oracle on every layer, the loss head, and
+//! the fused eval artifact.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use sgs::nn;
+use sgs::runtime::{ComputeBackend, Manifest, NativeBackend, XlaBackend};
+use sgs::tensor::Tensor;
+use sgs::util::rng::Pcg32;
+
+const TOL: f32 = 5e-4;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn rand_t(rng: &mut Pcg32, shape: &[usize], std: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), std);
+    t
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.batch > 0);
+    assert_eq!(m.layers.first().unwrap().shape.d_in, m.d_in);
+    assert_eq!(m.layers.last().unwrap().shape.d_out, m.classes);
+    assert_eq!(
+        m.param_count,
+        m.layer_shapes().iter().map(|l| l.param_count()).sum::<usize>()
+    );
+}
+
+#[test]
+fn every_layer_fwd_bwd_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::load(&dir).unwrap();
+    let native = NativeBackend::new(xla.layers().to_vec(), xla.batch());
+    let mut rng = Pcg32::new(42);
+    let b = xla.batch();
+
+    let mut x = rand_t(&mut rng, &[b, xla.layers()[0].d_in], 1.0);
+    for (i, l) in xla.layers().to_vec().iter().enumerate() {
+        let w = rand_t(&mut rng, &[l.d_in, l.d_out], (2.0 / l.d_in as f32).sqrt());
+        let bias = rand_t(&mut rng, &[l.d_out], 0.1);
+
+        let hx = xla.layer_fwd(i, &x, &w, &bias).unwrap();
+        let hn = native.layer_fwd(i, &x, &w, &bias).unwrap();
+        assert!(hx.max_abs_diff(&hn) < TOL, "layer {i} fwd");
+
+        let g = rand_t(&mut rng, hx.shape(), 1.0);
+        let (ax, aw, ab) = xla.layer_bwd(i, &x, &w, &hn, &g).unwrap();
+        let (nx, nw, nb) = native.layer_bwd(i, &x, &w, &hn, &g).unwrap();
+        assert!(ax.max_abs_diff(&nx) < TOL, "layer {i} g_x");
+        assert!(aw.max_abs_diff(&nw) < TOL, "layer {i} g_w");
+        assert!(ab.max_abs_diff(&nb) < TOL, "layer {i} g_b");
+
+        x = hn;
+    }
+}
+
+#[test]
+fn loss_head_matches_native_and_is_stable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::load(&dir).unwrap();
+    let native = NativeBackend::new(xla.layers().to_vec(), xla.batch());
+    let b = xla.batch();
+    let c = xla.layers().last().unwrap().d_out;
+    let mut rng = Pcg32::new(7);
+
+    let logits = rand_t(&mut rng, &[b, c], 3.0);
+    let mut onehot = Tensor::zeros(&[b, c]);
+    for i in 0..b {
+        onehot.data_mut()[i * c + rng.below(c)] = 1.0;
+    }
+    let (lx, gx) = xla.loss_grad(&logits, &onehot).unwrap();
+    let (ln, gn) = native.loss_grad(&logits, &onehot).unwrap();
+    assert!((lx - ln).abs() < TOL, "{lx} vs {ln}");
+    assert!(gx.max_abs_diff(&gn) < TOL);
+
+    // gradient rows sum to ~0 (softmax identity) through the whole AOT path
+    for i in 0..b {
+        let s: f32 = gx.data()[i * c..(i + 1) * c].iter().sum();
+        assert!(s.abs() < 1e-5);
+    }
+}
+
+#[test]
+fn fused_eval_artifact_matches_composed_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::load(&dir).unwrap();
+    let layers = xla.layers().to_vec();
+    let b = xla.batch();
+    let c = layers.last().unwrap().d_out;
+    let mut rng = Pcg32::new(9);
+
+    let params: Vec<(Tensor, Tensor)> = layers
+        .iter()
+        .map(|l| {
+            (
+                rand_t(&mut rng, &[l.d_in, l.d_out], (2.0 / l.d_in as f32).sqrt()),
+                Tensor::zeros(&[l.d_out]),
+            )
+        })
+        .collect();
+    let x = rand_t(&mut rng, &[b, layers[0].d_in], 1.0);
+    let mut onehot = Tensor::zeros(&[b, c]);
+    for i in 0..b {
+        onehot.data_mut()[i * c + rng.below(c)] = 1.0;
+    }
+
+    let fused = xla.eval_loss(&x, &onehot, &params).unwrap();
+    let composed = nn::full_loss(&x, &onehot, &params, &layers);
+    assert!((fused - composed).abs() < TOL, "{fused} vs {composed}");
+}
+
+#[test]
+fn xla_training_matches_native_training() {
+    // 10 iterations of the full distributed method, XLA vs native backend:
+    // identical sampling/consensus arithmetic, f32-tolerance weight match.
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::load(&dir).unwrap();
+    let layers = xla.layers().to_vec();
+    let native = NativeBackend::new(layers.clone(), xla.batch());
+
+    let cfg = sgs::config::ExperimentConfig {
+        name: "xla-vs-native".into(),
+        s: 2,
+        k: 2,
+        topology: sgs::graph::Topology::Complete,
+        alpha: None,
+        gossip_rounds: 1,
+        model: sgs::config::ModelShape {
+            d_in: layers[0].d_in,
+            hidden: layers[0].d_out,
+            blocks: layers.len() - 2,
+            classes: layers.last().unwrap().d_out,
+        },
+        batch: xla.batch(),
+        iters: 10,
+        lr: sgs::trainer::LrSchedule::Const(0.05),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 13,
+        dataset_n: 2000,
+        delta_every: 0,
+        eval_every: 0,
+    };
+    let ds = sgs::coordinator::build_dataset(&cfg);
+
+    let mut t_xla = sgs::trainer::Trainer::new(cfg.clone(), &xla, &ds).unwrap();
+    t_xla.run().unwrap();
+    let mut t_nat = sgs::trainer::Trainer::new(cfg, &native, &ds).unwrap();
+    t_nat.run().unwrap();
+
+    for (gx, gn) in t_xla.groups().iter().zip(t_nat.groups()) {
+        for ((wx, bx), (wn, bn)) in gx.all_params().iter().zip(gn.all_params().iter()) {
+            assert!(wx.max_abs_diff(wn) < 5e-3, "weights diverged");
+            assert!(bx.max_abs_diff(bn) < 5e-3, "biases diverged");
+        }
+    }
+    // loss streams close
+    for (rx, rn) in t_xla
+        .recorder()
+        .records
+        .iter()
+        .zip(&t_nat.recorder().records)
+    {
+        if let (Some(a), Some(b)) = (rx.train_loss, rn.train_loss) {
+            assert!((a - b).abs() < 1e-3, "loss diverged: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Property-based tests (in-house harness, no proptest offline): random
+//! instances of the coordinator invariants — schedule algebra, layer
+//! partitioning, mixing-matrix stochasticity, gossip average preservation,
+//! JSON/config round-trips.
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::consensus::GossipMixer;
+use sgs::graph::{
+    gamma, max_safe_alpha, metropolis_weights, xiao_boyd_weights, Graph, Topology,
+};
+use sgs::staleness::{partition_layers, Schedule};
+use sgs::tensor::Tensor;
+use sgs::testutil::forall;
+use sgs::trainer::LrSchedule;
+use sgs::util::json::Json;
+use sgs::util::rng::Pcg32;
+
+fn random_topology(rng: &mut Pcg32) -> Topology {
+    match rng.below(5) {
+        0 => Topology::Line,
+        1 => Topology::Ring,
+        2 => Topology::Complete,
+        3 => Topology::Star,
+        _ => Topology::ErdosRenyi {
+            p_num: 30 + rng.below(60) as u32,
+            p_den: 100,
+            seed: rng.next_u64(),
+        },
+    }
+}
+
+#[test]
+fn prop_schedule_message_transit() {
+    // for random K and t: τ_b(k−1, t+1) == τ_b(k, t) and
+    // τ_f(k+1, t+1) == τ_f(k, t) — the pipeline's message consistency
+    forall(
+        101,
+        200,
+        |r| (2 + r.below(7), r.below(200) as i64),
+        |&(k_modules, t)| {
+            let s = Schedule::new(k_modules);
+            (1..k_modules).all(|k| s.backward_batch(t + 1, k - 1) == s.backward_batch(t, k))
+                && (0..k_modules - 1)
+                    .all(|k| s.forward_batch(t + 1, k + 1) == s.forward_batch(t, k))
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_staleness_identity() {
+    // update-time staleness == (forward version) − (backward version) for
+    // the batch being consumed, in steady state
+    forall(
+        102,
+        200,
+        |r| (1 + r.below(8), 100 + r.below(100) as i64),
+        |&(k_modules, t)| {
+            let s = Schedule::new(k_modules);
+            (0..k_modules).all(|k| {
+                let v = s.backward_weight_version(t, k).unwrap();
+                (t - v) as usize == s.staleness(k)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_partition_is_balanced_cover() {
+    forall(
+        103,
+        300,
+        |r| {
+            let l = 1 + r.below(24);
+            (l, 1 + r.below(l))
+        },
+        |&(l, k)| {
+            let b = partition_layers(l, k);
+            let covers = b[0].0 == 0
+                && b[b.len() - 1].1 == l
+                && b.windows(2).all(|w| w[0].1 == w[1].0);
+            let sizes: Vec<usize> = b.iter().map(|(lo, hi)| hi - lo).collect();
+            let balanced =
+                sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1;
+            covers && balanced && b.len() == k
+        },
+    );
+}
+
+#[test]
+fn prop_mixing_matrices_doubly_stochastic_gamma_lt_1() {
+    forall(
+        104,
+        60,
+        |r| {
+            let n = 2 + r.below(10);
+            (random_topology(r), n)
+        },
+        |&(topo, n)| {
+            let topo = match topo {
+                Topology::Torus { .. } => Topology::Ring,
+                t => t,
+            };
+            let g = Graph::build(topo, n).unwrap();
+            let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+            let m = metropolis_weights(&g).unwrap();
+            let viol = |p: &sgs::linalg::Mat| {
+                let n = p.rows;
+                let mut worst: f64 = 0.0;
+                for i in 0..n {
+                    worst = worst.max((p.row_sum(i) - 1.0).abs());
+                    worst = worst.max((p.col_sum(i) - 1.0).abs());
+                }
+                worst
+            };
+            viol(&p) < 1e-9 && viol(&m) < 1e-9 && gamma(&p) < 1.0 && gamma(&m) < 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_gossip_preserves_average_and_contracts() {
+    forall(
+        105,
+        40,
+        |r| {
+            let n = 2 + r.below(8);
+            let vals: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 3.0)).collect();
+            (random_topology(r), vals)
+        },
+        |(topo, vals)| {
+            let topo = match topo {
+                Topology::Torus { .. } => Topology::Ring,
+                t => *t,
+            };
+            let n = vals.len();
+            let g = Graph::build(topo, n).unwrap();
+            let p = xiao_boyd_weights(&g, max_safe_alpha(&g)).unwrap();
+            let mut mixer = GossipMixer::new(&p, 1);
+            let mut reps: Vec<Tensor> = vals
+                .iter()
+                .map(|&v| Tensor::from_vec(&[1], vec![v]).unwrap())
+                .collect();
+            let avg = |reps: &[Tensor]| {
+                reps.iter().map(|t| t.data()[0] as f64).sum::<f64>() / reps.len() as f64
+            };
+            let spread = |reps: &[Tensor]| {
+                let a = avg(reps);
+                reps.iter()
+                    .map(|t| (t.data()[0] as f64 - a).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            };
+            let (a0, s0) = (avg(&reps), spread(&reps));
+            mixer.mix(&mut reps);
+            let (a1, s1) = (avg(&reps), spread(&reps));
+            (a0 - a1).abs() < 1e-5 && s1 <= s0 + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => Json::Str(format!("s{}-δ≤γ", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut obj = Json::obj();
+                for i in 0..rng.below(4) {
+                    obj.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+    forall(
+        106,
+        200,
+        |r| random_json(r, 3),
+        |j| {
+            Json::parse(&j.to_string_compact()).unwrap() == *j
+                && Json::parse(&j.to_string_pretty()).unwrap() == *j
+        },
+    );
+}
+
+#[test]
+fn prop_config_roundtrip() {
+    forall(
+        107,
+        100,
+        |r| {
+            let s = 1 + r.below(6);
+            ExperimentConfig {
+                name: format!("cfg{}", r.below(100)),
+                s,
+                k: 1 + r.below(3),
+                topology: match random_topology(r) {
+                    Topology::Torus { .. } => Topology::Ring,
+                    t => t,
+                },
+                alpha: (r.below(2) == 0).then(|| 0.01 + r.f64() * 0.05),
+                gossip_rounds: 1 + r.below(3),
+                model: ModelShape { d_in: 8 + r.below(8), hidden: 8, blocks: 1 + r.below(3), classes: 3 },
+                batch: 4 + r.below(8),
+                iters: 10 + r.below(100),
+                lr: match r.below(3) {
+                    0 => LrSchedule::Const(0.1),
+                    1 => LrSchedule::strategy_2(500),
+                    _ => LrSchedule::Diminishing { eta0: 0.4 },
+                },
+                optimizer: match r.below(3) {
+                    0 => sgs::trainer::OptimizerKind::Sgd,
+                    1 => sgs::trainer::OptimizerKind::Momentum { beta: 0.9 },
+                    _ => sgs::trainer::OptimizerKind::Nesterov { beta: 0.9 },
+                },
+                mode: if r.below(2) == 0 {
+                    sgs::staleness::PipelineMode::FullyDecoupled
+                } else {
+                    sgs::staleness::PipelineMode::BackwardUnlocked
+                },
+                seed: r.next_u64(),
+                dataset_n: 2000,
+                delta_every: r.below(20),
+                eval_every: r.below(20),
+            }
+        },
+        |cfg| {
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            back.s == cfg.s
+                && back.k == cfg.k
+                && back.lr == cfg.lr
+                && back.alpha == cfg.alpha
+                && back.topology == cfg.topology
+                && back.seed == cfg.seed
+                && back.optimizer == cfg.optimizer
+                && back.mode == cfg.mode
+        },
+    );
+}
+
+#[test]
+fn prop_lr_schedules_nonincreasing_where_required() {
+    forall(
+        108,
+        100,
+        |r| match r.below(2) {
+            0 => LrSchedule::Diminishing { eta0: 0.1 + r.f64() },
+            _ => LrSchedule::strategy_2(100 + r.below(1000)),
+        },
+        |lr| (0..500).all(|t| lr.at(t) >= lr.at(t + 1) && lr.at(t) > 0.0),
+    );
+}
