@@ -4,9 +4,12 @@
 //! forward pass, at the price of doubled gradient staleness.
 //! CSV: bench_out/ablation_mode.csv
 
+use std::sync::Arc;
+
 use sgs::benchkit::figures::bench_base;
-use sgs::coordinator::{build_dataset, run_with};
-use sgs::runtime::NativeBackend;
+use sgs::coordinator::build_dataset;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::simclock::{method_iter_s_mode, CostModel};
 use sgs::staleness::{PipelineMode, Schedule};
 use sgs::util::csv::CsvWriter;
@@ -18,9 +21,10 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(800);
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
-    let cm = CostModel::calibrate(&backend, 3);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     std::fs::create_dir_all("bench_out").ok();
     let mut w = CsvWriter::create(
@@ -42,7 +46,13 @@ fn main() {
             cfg.k = k;
             cfg.mode = *mode;
             let sched = Schedule::with_mode(k, *mode);
-            let out = run_with(cfg, &backend, &ds, Some(&cm)).expect("run failed");
+            let out = Session::builder(cfg)
+                .with_backend(backend.clone())
+                .dataset(ds.clone())
+                .cost_model(&cm)
+                .build()
+                .and_then(|sess| sess.run_to_end())
+                .expect("run failed");
             let iter_s = method_iter_s_mode(&cm, 1, k, 1, *mode);
             let loss = out.recorder.summary().final_train_loss.unwrap_or(f64::NAN);
             println!(

@@ -3,9 +3,12 @@
 //! point: modelled per-iteration latency, samples/second, final loss at a
 //! fixed iteration budget. CSV: bench_out/ablation_sk.csv
 
+use std::sync::Arc;
+
 use sgs::benchkit::figures::bench_base;
-use sgs::coordinator::{build_dataset, run_with, AgentGrid};
-use sgs::runtime::NativeBackend;
+use sgs::coordinator::{build_dataset, AgentGrid};
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::simclock::{method_iter_s, CostModel};
 use sgs::util::csv::CsvWriter;
 
@@ -16,9 +19,10 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(500);
     // model has 5 layers; K in {1, 5} partitions it; keep K <= 5
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
-    let cm = CostModel::calibrate(&backend, 3);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     std::fs::create_dir_all("bench_out").ok();
     let mut w = CsvWriter::create(
@@ -37,7 +41,13 @@ fn main() {
             cfg.s = s;
             cfg.k = k;
             let grid = AgentGrid::build(s, k, cfg.topology, cfg.alpha).unwrap();
-            let out = run_with(cfg, &backend, &ds, Some(&cm)).expect("run failed");
+            let out = Session::builder(cfg)
+                .with_backend(backend.clone())
+                .dataset(ds.clone())
+                .cost_model(&cm)
+                .build()
+                .and_then(|sess| sess.run_to_end())
+                .expect("run failed");
             let iter_s = method_iter_s(&cm, s, k, grid.model_graph.max_degree() + 1);
             // throughput: S mini-batches of B samples per iteration
             let samples_per_s = (s * base.batch) as f64 / iter_s;

@@ -3,10 +3,13 @@
 //! relate the consensus floor to the spectral gap γ.
 //! CSV: bench_out/ablation_topology.csv
 
+use std::sync::Arc;
+
 use sgs::benchkit::figures::bench_base;
-use sgs::coordinator::{build_dataset, run_with};
+use sgs::coordinator::build_dataset;
 use sgs::graph::Topology;
-use sgs::runtime::NativeBackend;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::util::csv::CsvWriter;
 
 fn main() {
@@ -17,8 +20,9 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(600);
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
 
     std::fs::create_dir_all("bench_out").ok();
     let mut w = CsvWriter::create(
@@ -44,7 +48,12 @@ fn main() {
     {
         let mut cfg = base.clone();
         cfg.topology = *topo;
-        let out = run_with(cfg, &backend, &ds, None).expect("run failed");
+        let out = Session::builder(cfg)
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .build()
+            .and_then(|sess| sess.run_to_end())
+            .expect("run failed");
         let deltas: Vec<f64> = out
             .recorder
             .records

@@ -2,15 +2,20 @@
 //! per-layer fwd/bwd on both backends, the loss head, gossip mixing, and
 //! the end-to-end distributed iteration. CSV: bench_out/hot_path.csv
 
+use std::sync::Arc;
+
 use sgs::benchkit::{humanize, BenchSet};
 use sgs::config::{ExperimentConfig, ModelShape};
 use sgs::consensus::GossipMixer;
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::graph::{max_safe_alpha, xiao_boyd_weights, Graph, Topology};
 use sgs::nn::init::init_params;
-use sgs::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use sgs::runtime::{ComputeBackend, NativeBackend};
+#[cfg(feature = "xla")]
+use sgs::runtime::XlaBackend;
+use sgs::session::{EngineKind, Session};
 use sgs::tensor::Tensor;
-use sgs::trainer::{LrSchedule, Trainer};
+use sgs::trainer::LrSchedule;
 use sgs::util::csv::CsvWriter;
 use sgs::util::rng::Pcg32;
 
@@ -58,6 +63,7 @@ fn main() {
     let native = NativeBackend::new(model.layers(), 194);
     bench_backend(&mut set, &native, "native");
 
+    #[cfg(feature = "xla")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
         match XlaBackend::load("artifacts") {
             Ok(xla) => bench_backend(&mut set, &xla, "xla"),
@@ -101,9 +107,25 @@ fn main() {
         eval_every: 0,
     };
     let ds = SyntheticSpec::small(cfg.dataset_n, 64, 10, 1).generate();
-    let bk = NativeBackend::new(cfg.model.layers(), cfg.batch);
-    let mut tr = Trainer::new(cfg, &bk, &ds).unwrap();
-    set.bench("e2e_iteration/S4K2_native", 5, 30, || tr.step().unwrap());
+    let bk: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
+    let mut sim = Session::builder(cfg.clone())
+        .with_backend(bk.clone())
+        .dataset(ds.clone())
+        .build()
+        .unwrap();
+    set.bench("e2e_iteration/S4K2_sim", 5, 30, || sim.step().unwrap());
+
+    // the same iteration on the one-thread-per-agent engine (spawn +
+    // barrier overhead included — the deployment-shape cost)
+    let mut threaded = Session::builder(cfg)
+        .with_backend(bk)
+        .dataset(ds)
+        .engine(EngineKind::Threaded)
+        .build()
+        .unwrap();
+    set.bench("e2e_iteration/S4K2_threaded", 5, 30, || {
+        threaded.step().unwrap()
+    });
 
     set.report();
 

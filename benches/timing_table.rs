@@ -9,7 +9,9 @@
 
 use sgs::benchkit::BenchSet;
 use sgs::config::ModelShape;
-use sgs::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use sgs::runtime::{ComputeBackend, NativeBackend};
+#[cfg(feature = "xla")]
+use sgs::runtime::XlaBackend;
 use sgs::simclock::{dbp_iter_s, decoupled_iter_s, method_iter_s, CostModel};
 use sgs::util::csv::CsvWriter;
 
@@ -78,6 +80,7 @@ fn main() {
     table_for(&native, "native", &mut w);
 
     // XLA backend when artifacts exist
+    #[cfg(feature = "xla")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
         match XlaBackend::load("artifacts") {
             Ok(xla) => table_for(&xla, "xla", &mut w),

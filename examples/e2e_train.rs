@@ -3,27 +3,36 @@
 //! Pallas kernels (L1) → JAX per-layer graphs (L2) → AOT HLO text →
 //! rust PJRT runtime → S×K coordinator (L3): trains the `small` model
 //! (100 234 params, B=194, CIFAR-shaped synthetic data) with the paper's
-//! distributed method for several hundred iterations ON THE XLA BACKEND,
-//! logging the loss curve. Recorded in EXPERIMENTS.md §E2E.
+//! distributed method for several hundred iterations ON THE XLA BACKEND
+//! through the unified `Session` API, logging the loss curve. Recorded in
+//! EXPERIMENTS.md §E2E.
 //!
 //!     make artifacts && cargo run --release --example e2e_train
 //!     (optional: SGS_E2E_ITERS=600 to override the iteration budget)
 
-use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::coordinator::{build_dataset, run_with};
-use sgs::graph::Topology;
-use sgs::runtime::{ComputeBackend, XlaBackend};
-use sgs::simclock::CostModel;
-use sgs::trainer::LrSchedule;
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("e2e_train requires the `xla` feature (enabled by default);");
+    eprintln!("rebuild without --no-default-features to run it.");
+}
 
+#[cfg(feature = "xla")]
 fn main() -> Result<(), sgs::Error> {
+    use std::sync::Arc;
+
+    use sgs::config::{ExperimentConfig, ModelShape};
+    use sgs::graph::Topology;
+    use sgs::runtime::{ComputeBackend, XlaBackend};
+    use sgs::session::Session;
+    use sgs::trainer::LrSchedule;
+
     let iters: usize = std::env::var("SGS_E2E_ITERS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(300);
 
     println!("== e2e: loading AOT artifacts (HLO text -> PJRT) ==");
-    let backend = XlaBackend::load("artifacts")?;
+    let backend: Arc<dyn ComputeBackend> = Arc::new(XlaBackend::load("artifacts")?);
     println!(
         "backend: {} | {} layers | batch {}",
         backend.name(),
@@ -64,13 +73,15 @@ fn main() -> Result<(), sgs::Error> {
         cfg.lr.describe()
     );
 
-    println!("generating 50k-sample synthetic CIFAR-like dataset ...");
-    let ds = build_dataset(&cfg);
-    println!("calibrating cost model on the XLA backend ...");
-    let cm = CostModel::calibrate(&backend, 3);
+    println!("building session (50k-sample synthetic CIFAR-like dataset,");
+    println!("cost model calibrated on the XLA backend) ...");
+    let session = Session::builder(cfg)
+        .with_backend(backend)
+        .calibrate_clock(true)
+        .build()?;
 
     let t0 = std::time::Instant::now();
-    let out = run_with(cfg, &backend, &ds, Some(&cm))?;
+    let out = session.run_to_end()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n   iter       lr   train-loss    eval-loss     acc        δ(t)");

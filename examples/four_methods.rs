@@ -1,15 +1,18 @@
 //! The Section-5 experiment at example scale: the paper's four methods —
 //! centralized (1,1), decoupled (1,2), data-parallel (4,1), distributed
-//! (4,2) — on one shared dataset, printing the comparison table Fig. 3
-//! summarizes. Native backend for speed; `benches/fig3.rs` is the full
-//! figure generator.
+//! (4,2) — on one shared dataset through the unified `Session` API,
+//! printing the comparison table Fig. 3 summarizes. Native backend for
+//! speed; `benches/fig3.rs` is the full figure generator.
 //!
 //!     cargo run --release --example four_methods
 
+use std::sync::Arc;
+
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::coordinator::{build_dataset, run_with};
+use sgs::coordinator::build_dataset;
 use sgs::graph::Topology;
-use sgs::runtime::NativeBackend;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::simclock::CostModel;
 use sgs::trainer::LrSchedule;
 
@@ -32,9 +35,10 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 20,
         eval_every: 200,
     };
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
-    let cm = CostModel::calibrate(&backend, 3);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     println!(
         "{:<16} {:>3} {:>3} {:>11} {:>12} {:>12} {:>8} {:>10}",
@@ -42,7 +46,12 @@ fn main() -> Result<(), sgs::Error> {
     );
     let mut rows = Vec::new();
     for (label, cfg) in ExperimentConfig::paper_methods(&base) {
-        let out = run_with(cfg.clone(), &backend, &ds, Some(&cm))?;
+        let out = Session::builder(cfg.clone())
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .cost_model(&cm)
+            .build()?
+            .run_to_end()?;
         let s = out.recorder.summary();
         println!(
             "{:<16} {:>3} {:>3} {:>11.3} {:>12.4} {:>12.4} {:>7.1}% {:>10.2e}",

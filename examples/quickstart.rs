@@ -1,17 +1,21 @@
 //! Quickstart: train the paper's distributed method (S=4 data-groups,
 //! K=2 pipeline modules, ring gossip) on the synthetic CIFAR-like task
-//! with the pure-Rust backend — no artifacts needed.
+//! through the unified `Session` API — no artifacts needed, and the same
+//! code drives either engine (`--threaded` for one thread per agent).
 //!
-//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart [-- --threaded]
 
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::coordinator::{build_dataset, run_with};
 use sgs::graph::Topology;
-use sgs::runtime::NativeBackend;
-use sgs::simclock::CostModel;
+use sgs::session::{EngineKind, Session};
 use sgs::trainer::LrSchedule;
 
 fn main() -> Result<(), sgs::Error> {
+    let engine = if std::env::args().any(|a| a == "--threaded") {
+        EngineKind::Threaded
+    } else {
+        EngineKind::Sim
+    };
     let cfg = ExperimentConfig {
         name: "quickstart".into(),
         s: 4,
@@ -31,28 +35,41 @@ fn main() -> Result<(), sgs::Error> {
         eval_every: 100,
     };
 
-    println!("== sgs quickstart: S={} K={} on {} ==", cfg.s, cfg.k, cfg.topology.name());
-    let ds = build_dataset(&cfg);
-    let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-    let cm = CostModel::calibrate(&backend, 3);
-    let out = run_with(cfg, &backend, &ds, Some(&cm))?;
+    println!(
+        "== sgs quickstart: S={} K={} on {} ({} engine) ==",
+        cfg.s,
+        cfg.k,
+        cfg.topology.name(),
+        engine.as_str()
+    );
+    let mut session = Session::builder(cfg)
+        .engine(engine)
+        .calibrate_clock(true)
+        .build()?;
 
-    println!("gamma = {:.4} (consensus contraction, Lemma 2.1)", out.gamma);
-    println!("modelled iteration time: {:.3} ms", out.iter_time_s * 1e3);
-    println!("\n   iter   train-loss      δ(t)");
-    for (t, loss, _) in out.recorder.loss_series(50, 25) {
-        let delta = out
-            .recorder
-            .records
-            .iter()
-            .take(t + 1)
-            .rev()
-            .find_map(|r| r.delta);
-        println!(
-            "{t:>7} {loss:>12.4} {:>10}",
-            delta.map_or("-".into(), |d| format!("{d:.2e}"))
-        );
-    }
+    println!("gamma = {:.4} (consensus contraction, Lemma 2.1)", session.gamma());
+    println!("modelled iteration time: {:.3} ms", session.iter_time_s() * 1e3);
+
+    // stream iteration events: loss, δ(t), and per-module staleness
+    println!("\n   iter   train-loss      δ(t)   staleness");
+    let mut last_delta = None;
+    session.run_streaming(|ev| {
+        if let Some(d) = ev.delta {
+            last_delta = Some(d);
+        }
+        if ev.t % 50 == 0 {
+            println!(
+                "{:>7} {:>12.4} {:>10} {:>10?}",
+                ev.t,
+                ev.train_loss.unwrap_or(f64::NAN),
+                last_delta.map_or("-".into(), |d| format!("{d:.2e}")),
+                ev.staleness
+            );
+        }
+        Ok(())
+    })?;
+
+    let out = session.finish();
     let s = out.recorder.summary();
     println!(
         "\nfinal: train {:.4}, eval {:.4}, accuracy {:.1}%, δ {:.2e}",

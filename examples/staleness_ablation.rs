@@ -5,10 +5,13 @@
 //!
 //!     cargo run --release --example staleness_ablation
 
+use std::sync::Arc;
+
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::coordinator::{build_dataset, run_with};
+use sgs::coordinator::build_dataset;
 use sgs::graph::Topology;
-use sgs::runtime::NativeBackend;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::simclock::CostModel;
 use sgs::staleness::Schedule;
 use sgs::trainer::LrSchedule;
@@ -33,9 +36,10 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 0,
         eval_every: 150,
     };
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
-    let cm = CostModel::calibrate(&backend, 3);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     println!(
         "{:>3} {:>12} {:>11} {:>10} {:>12} {:>12} {:>8}",
@@ -45,7 +49,12 @@ fn main() -> Result<(), sgs::Error> {
         let sched = Schedule::new(k);
         let mut cfg = base.clone();
         cfg.k = k;
-        let out = run_with(cfg, &backend, &ds, Some(&cm))?;
+        let out = Session::builder(cfg)
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .cost_model(&cm)
+            .build()?
+            .run_to_end()?;
         let s = out.recorder.summary();
         println!(
             "{:>3} {:>12} {:>11} {:>10.3} {:>12.4} {:>12.4} {:>7.1}%",

@@ -3,10 +3,13 @@
 //!
 //!     cargo run --release --example topology_sweep
 
+use std::sync::Arc;
+
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::coordinator::{build_dataset, run_with, AgentGrid};
+use sgs::coordinator::{build_dataset, AgentGrid};
 use sgs::graph::{mixing_time_estimate, Topology};
-use sgs::runtime::NativeBackend;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
 use sgs::trainer::LrSchedule;
 
 fn main() -> Result<(), sgs::Error> {
@@ -29,8 +32,9 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 5,
         eval_every: 0,
     };
-    let ds = build_dataset(&base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
 
     println!("S = {s} data-groups, K = 2 modules; sweeping gossip topology\n");
     println!(
@@ -47,7 +51,11 @@ fn main() -> Result<(), sgs::Error> {
         let grid = AgentGrid::build(s, 1, topo, None)?;
         let mut cfg = base.clone();
         cfg.topology = topo;
-        let out = run_with(cfg, &backend, &ds, None)?;
+        let out = Session::builder(cfg)
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .build()?
+            .run_to_end()?;
         let deltas: Vec<f64> = out
             .recorder
             .records

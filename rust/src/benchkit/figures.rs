@@ -3,11 +3,13 @@
 //! CSV set (loss-vs-iteration, loss-vs-time, δ-vs-iteration).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{build_dataset, run_with, RunOutput};
+use crate::coordinator::{build_dataset, RunOutput};
 use crate::error::Result;
-use crate::runtime::NativeBackend;
+use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::session::Session;
 use crate::simclock::CostModel;
 use crate::util::csv::CsvWriter;
 
@@ -36,14 +38,21 @@ pub fn run_four_methods(
     base: &ExperimentConfig,
     prefix: &str,
 ) -> Result<Vec<(&'static str, RunOutput)>> {
-    let ds = build_dataset(base);
-    let backend = NativeBackend::new(base.model.layers(), base.batch);
-    let cm = CostModel::calibrate(&backend, 3);
+    let ds = Arc::new(build_dataset(base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(base.model.layers(), base.batch));
+    let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     let mut outs = Vec::new();
     for (label, cfg) in ExperimentConfig::paper_methods(base) {
         eprintln!("  running {label} (S={}, K={}) ...", cfg.s, cfg.k);
-        outs.push((label, run_with(cfg, &backend, &ds, Some(&cm))?));
+        let out = Session::builder(cfg)
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .cost_model(&cm)
+            .build()?
+            .run_to_end()?;
+        outs.push((label, out));
     }
 
     // panel 1: loss vs iteration (smoothed)

@@ -7,13 +7,15 @@
 //! * `calibrate` — measure the cost model and print the timing table
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::cli::args::Args;
 use crate::config::{ExperimentConfig, ModelShape};
-use crate::coordinator::{build_dataset, run_with, AgentGrid};
+use crate::coordinator::{build_dataset, AgentGrid};
 use crate::error::Result;
 use crate::graph::Topology;
-use crate::runtime::{make_backend, BackendKind};
+use crate::runtime::{make_backend, BackendKind, ComputeBackend};
+use crate::session::{EngineKind, EventWriter, Session};
 use crate::simclock::{method_iter_s, CostModel};
 use crate::staleness::Schedule;
 use crate::trainer::LrSchedule;
@@ -26,8 +28,9 @@ USAGE: sgs <command> [--flag value]...
 COMMANDS
   train      run one experiment            (--s --k --iters --lr --topology
              --alpha --batch --seed --backend native|xla --artifacts DIR
-             --model tiny|small|paper --opt sgd|momentum:B|nesterov:B
-             --mode fd|dbp --out CSV --clock)
+             --engine sim|threaded --model tiny|small|paper
+             --opt sgd|momentum:B|nesterov:B --mode fd|dbp
+             --out CSV --events-out JSONL --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
@@ -90,23 +93,43 @@ fn backend_flags(args: &Args) -> Result<(BackendKind, PathBuf)> {
 pub fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let (kind, artifacts) = backend_flags(args)?;
+    let engine = EngineKind::parse(args.get_or("engine", "sim"))?;
     let out_csv = args.get("out").map(PathBuf::from);
+    let events_out = args.get("events-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
     args.finish()?;
 
     println!(
-        "train: {} S={} K={} topology={} backend={} iters={}",
+        "train: {} S={} K={} topology={} backend={} engine={} iters={}",
         cfg.name,
         cfg.s,
         cfg.k,
         cfg.topology.name(),
         kind.as_str(),
+        engine.as_str(),
         cfg.iters
     );
-    let ds = build_dataset(&cfg);
-    let backend = make_backend(kind, &artifacts, cfg.model.layers(), cfg.batch)?;
-    let cm = clock.then(|| CostModel::calibrate(backend.as_ref(), 3));
-    let out = run_with(cfg, backend.as_ref(), &ds, cm.as_ref())?;
+    let mut session = Session::builder(cfg)
+        .backend(kind)
+        .artifacts(artifacts)
+        .engine(engine)
+        .calibrate_clock(clock)
+        .build()?;
+
+    let mut events = match &events_out {
+        Some(path) => Some(EventWriter::create(path)?),
+        None => None,
+    };
+    session.run_streaming(|ev| {
+        if let Some(w) = events.as_mut() {
+            w.write(ev)?;
+        }
+        Ok(())
+    })?;
+    if let Some(w) = events.as_mut() {
+        w.flush()?;
+    }
+    let out = session.finish();
 
     let s = out.recorder.summary();
     println!(
@@ -117,17 +140,22 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         out.recorder.write_csv(&path)?;
         println!("wrote {}", path.display());
     }
+    if let Some(path) = events_out {
+        println!("wrote events {}", path.display());
+    }
     Ok(())
 }
 
 pub fn cmd_compare(args: &Args) -> Result<()> {
     let base = config_from_args(args)?;
     let (kind, artifacts) = backend_flags(args)?;
+    let engine = EngineKind::parse(args.get_or("engine", "sim"))?;
     let out_dir = PathBuf::from(args.get_or("out-dir", "bench_out"));
     args.finish()?;
 
-    let ds = build_dataset(&base);
-    let backend = make_backend(kind, &artifacts, base.model.layers(), base.batch)?;
+    let ds = Arc::new(build_dataset(&base));
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::from(make_backend(kind, &artifacts, base.model.layers(), base.batch)?);
     let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     println!(
@@ -135,7 +163,13 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
         "method", "S", "K", "iter_ms", "final_loss", "eval_loss", "delta"
     );
     for (label, cfg) in ExperimentConfig::paper_methods(&base) {
-        let out = run_with(cfg.clone(), backend.as_ref(), &ds, Some(&cm))?;
+        let out = Session::builder(cfg.clone())
+            .with_backend(backend.clone())
+            .dataset(ds.clone())
+            .engine(engine)
+            .cost_model(&cm)
+            .build()?
+            .run_to_end()?;
         let s = out.recorder.summary();
         println!(
             "{:<16} {:>6} {:>6} {:>12.3} {:>12.4} {:>12.4} {:>10.2e}",
@@ -288,6 +322,36 @@ mod tests {
         dispatch(&argv(
             "train --model tiny --s 2 --k 2 --iters 10 --batch 8 --dataset-n 200 \
              --eval-every 5 --delta-every 5 --lr const:0.1",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn train_tiny_threaded_with_events() {
+        let dir = std::env::temp_dir().join("sgs_cli_events");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        dispatch(&argv(&format!(
+            "train --model tiny --s 2 --k 2 --iters 8 --batch 8 --dataset-n 200 \
+             --engine threaded --lr const:0.1 --events-out {}",
+            path.display()
+        )))
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 8);
+        for line in text.lines() {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            assert!(j.get("t").unwrap().as_usize().is_ok());
+            assert!(j.get("staleness").unwrap().as_arr().is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_accepts_uppercase_backend() {
+        dispatch(&argv(
+            "train --model tiny --s 1 --k 1 --iters 3 --batch 8 --dataset-n 100 \
+             --backend NATIVE --lr const:0.1",
         ))
         .unwrap();
     }

@@ -7,4 +7,4 @@ pub mod grid;
 pub mod run;
 
 pub use grid::{AgentGrid, AgentId};
-pub use run::{build_dataset, run_experiment, run_with, RunOutput};
+pub use run::{build_dataset, run_experiment, RunOutput};

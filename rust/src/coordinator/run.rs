@@ -1,26 +1,16 @@
-//! Top-level experiment runner: config → dataset → grid → backend →
-//! trainer → recorded results. This is what the CLI, examples, and benches
-//! all call.
+//! Top-level convenience runner: dataset selection plus a one-call wrapper
+//! over [`crate::session::Session`], which is where all the wiring
+//! (config → backend → dataset → engine) actually lives.
 
 use std::path::Path;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::grid::AgentGrid;
 use crate::data::{cifar, synthetic::SyntheticSpec, Dataset};
 use crate::error::Result;
-use crate::metrics::Recorder;
-use crate::runtime::{make_backend, BackendKind, ComputeBackend};
-use crate::simclock::{method_iter_s_mode, CostModel};
-use crate::trainer::Trainer;
+use crate::runtime::BackendKind;
+use crate::session::Session;
 
-/// Everything a finished run hands back.
-pub struct RunOutput {
-    pub cfg: ExperimentConfig,
-    pub recorder: Recorder,
-    pub gamma: f64,
-    pub iter_time_s: f64,
-    pub final_delta: f64,
-}
+pub use crate::session::RunOutput;
 
 /// Build the dataset for a config: real CIFAR-10 when `CIFAR10_DIR` is set
 /// and compatible, else the synthetic teacher-labelled generator.
@@ -40,53 +30,8 @@ pub fn build_dataset(cfg: &ExperimentConfig) -> Dataset {
     .generate()
 }
 
-/// Run one experiment end-to-end on an already-built backend + dataset.
-/// `cost_model`: when given, per-iteration sim time is attached to records.
-pub fn run_with(
-    cfg: ExperimentConfig,
-    backend: &dyn ComputeBackend,
-    ds: &Dataset,
-    cost_model: Option<&CostModel>,
-) -> Result<RunOutput> {
-    let grid = AgentGrid::build(cfg.s, cfg.k, cfg.topology, cfg.alpha)?;
-    grid.check_assumption_3_1()?;
-    let gamma = grid.gamma();
-
-    let iter_time_s = cost_model
-        .map(|cm| {
-            method_iter_s_mode(
-                cm,
-                cfg.s,
-                cfg.k,
-                grid.model_graph.max_degree() + 1,
-                cfg.mode,
-            )
-        })
-        .unwrap_or(0.0);
-
-    let mut trainer = Trainer::new(cfg.clone(), backend, ds)?;
-    trainer.iter_time_s = iter_time_s;
-    trainer.run()?;
-    let final_delta = trainer.consensus_delta();
-
-    Ok(RunOutput {
-        cfg,
-        recorder: std::mem::take(&mut trainer_recorder(trainer)),
-        gamma,
-        iter_time_s,
-        final_delta,
-    })
-}
-
-fn trainer_recorder(t: Trainer<'_>) -> Recorder {
-    // Trainer gives only a reference; rebuild by cloning records.
-    Recorder {
-        records: t.recorder().records.clone(),
-    }
-}
-
-/// Full convenience entry: build dataset + backend from the config, run,
-/// optionally dump CSV to `out_csv`.
+/// Full convenience entry: build dataset + backend from the config, run on
+/// the sim engine, optionally dump CSV to `out_csv`.
 pub fn run_experiment(
     cfg: ExperimentConfig,
     backend_kind: BackendKind,
@@ -94,15 +39,12 @@ pub fn run_experiment(
     calibrate_clock: bool,
     out_csv: Option<&Path>,
 ) -> Result<RunOutput> {
-    let ds = build_dataset(&cfg);
-    let backend = make_backend(
-        backend_kind,
-        artifacts_dir,
-        cfg.model.layers(),
-        cfg.batch,
-    )?;
-    let cm = calibrate_clock.then(|| CostModel::calibrate(backend.as_ref(), 3));
-    let out = run_with(cfg, backend.as_ref(), &ds, cm.as_ref())?;
+    let out = Session::builder(cfg)
+        .backend(backend_kind)
+        .artifacts(artifacts_dir)
+        .calibrate_clock(calibrate_clock)
+        .build()?
+        .run_to_end()?;
     if let Some(path) = out_csv {
         out.recorder.write_csv(path)?;
     }
@@ -112,9 +54,12 @@ pub fn run_experiment(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
+
     use crate::config::ModelShape;
     use crate::graph::Topology;
-    use crate::runtime::NativeBackend;
+    use crate::runtime::{ComputeBackend, NativeBackend};
+    use crate::simclock::CostModel;
     use crate::trainer::LrSchedule;
 
     fn cfg() -> ExperimentConfig {
@@ -139,12 +84,20 @@ mod tests {
     }
 
     #[test]
-    fn run_with_produces_records_and_gamma() {
+    fn session_run_produces_records_and_gamma() {
         let c = cfg();
-        let ds = build_dataset(&c);
-        let backend = NativeBackend::new(c.model.layers(), c.batch);
-        let cm = CostModel::calibrate(&backend, 1);
-        let out = run_with(c, &backend, &ds, Some(&cm)).unwrap();
+        let ds = Arc::new(build_dataset(&c));
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(c.model.layers(), c.batch));
+        let cm = CostModel::calibrate(backend.as_ref(), 1);
+        let out = Session::builder(c)
+            .with_backend(backend)
+            .dataset(ds)
+            .cost_model(&cm)
+            .build()
+            .unwrap()
+            .run_to_end()
+            .unwrap();
         assert_eq!(out.recorder.records.len(), 30);
         assert!(out.gamma < 1.0);
         assert!(out.iter_time_s > 0.0);

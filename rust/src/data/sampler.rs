@@ -36,6 +36,17 @@ impl MiniBatchSampler {
         self.batch
     }
 
+    /// Exact RNG stream position (full-state checkpoints).
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.raw_state()
+    }
+
+    /// Jump the RNG to an exact position saved by [`Self::rng_state`], so a
+    /// restored engine draws the same remaining mini-batch stream.
+    pub fn set_rng_state(&mut self, state: (u64, u64)) {
+        self.rng = Pcg32::from_raw_state(state);
+    }
+
     /// Draw the mini-batch for iteration t. Consumes RNG state — call
     /// exactly once per iteration, in iteration order.
     pub fn sample(&mut self) -> Vec<usize> {

@@ -36,6 +36,7 @@ pub enum Error {
     Other(String),
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

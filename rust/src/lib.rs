@@ -16,7 +16,8 @@
 //!   crate) and executes them from the hot loop; a pure-Rust `nn` backend
 //!   provides the autodiff-checked oracle and an artifact-free fallback.
 //!
-//! Start at [`coordinator::run_experiment`] or the `examples/` directory.
+//! Start at [`session::Session`] — the one entry point for training on
+//! either engine (sim or threaded) — or the `examples/` directory.
 
 pub mod benchkit;
 pub mod cli;
@@ -31,6 +32,7 @@ pub mod metrics;
 pub mod nn;
 pub mod pipeline;
 pub mod runtime;
+pub mod session;
 pub mod simclock;
 pub mod staleness;
 pub mod tensor;

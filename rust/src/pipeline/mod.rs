@@ -1,5 +1,6 @@
 //! The fully decoupled pipeline: per-module agents, the deterministic sim
-//! engine, and the one-thread-per-agent engine.
+//! engine's group state, and the one-thread-per-agent engine. Both engines
+//! are driven through [`crate::session::Session`].
 
 pub mod module_agent;
 pub mod sim;
@@ -7,4 +8,4 @@ pub mod threaded;
 
 pub use module_agent::{ActMsg, ModuleAgent};
 pub use sim::{GroupIterOut, PipelineGroup};
-pub use threaded::{run_threaded, ThreadedRunOut};
+pub use threaded::ThreadedEngine;

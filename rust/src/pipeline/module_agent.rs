@@ -63,6 +63,33 @@ impl ModuleAgent {
         self.stash.len()
     }
 
+    /// Clone the in-flight stashes, oldest first (full-state checkpoints).
+    pub fn stash_snapshot(&self) -> Vec<Stash> {
+        self.stash.snapshot()
+    }
+
+    /// Replace the in-flight stashes wholesale (checkpoint restore).
+    pub fn restore_stash(&mut self, stashes: Vec<Stash>) {
+        self.stash.replace(stashes);
+    }
+
+    /// Clone the optimizer's velocity buffers (full-state checkpoints).
+    pub fn opt_velocity(&self) -> Vec<(Tensor, Tensor)> {
+        self.opt.velocity_snapshot()
+    }
+
+    /// Replace the optimizer's velocity buffers (checkpoint restore).
+    pub fn set_opt_velocity(&mut self, velocity: Vec<(Tensor, Tensor)>) {
+        self.opt.set_velocity(velocity);
+    }
+
+    /// Drop all transient state — in-flight stashes and optimizer velocity —
+    /// leaving only the weights (weights-only restore: the pipeline refills).
+    pub fn reset_transient(&mut self) {
+        self.stash.replace(Vec::new());
+        self.opt.set_velocity(Vec::new());
+    }
+
     /// Forward batch `tau` through the local layers with CURRENT weights,
     /// stashing activations + a weight snapshot for the later backward.
     /// Returns the boundary activation to send downstream.

@@ -8,6 +8,7 @@
 use crate::data::{Dataset, MiniBatchSampler};
 use crate::error::Result;
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
+use crate::trainer::checkpoint::{GroupResume, ModuleResume};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Mailbox, PipelineMode, Schedule};
 use crate::tensor::Tensor;
@@ -153,6 +154,66 @@ impl PipelineGroup {
             mb.flip();
         }
         Ok(out)
+    }
+
+    /// Exact in-flight state of this group: sampler stream position,
+    /// optimizer velocity, stashes, and pending mailbox messages.
+    pub fn resume_state(&self) -> GroupResume {
+        GroupResume {
+            sampler_rng: self.sampler.rng_state(),
+            modules: self
+                .modules
+                .iter()
+                .enumerate()
+                .map(|(k, m)| ModuleResume {
+                    velocity: m.opt_velocity(),
+                    stashes: m.stash_snapshot(),
+                    act_in: self.act_mail[k].visible_snapshot().pop(),
+                    grad_in: self.grad_mail[k].visible_snapshot().pop(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Drop all in-flight state — stashes, velocity, pending messages —
+    /// keeping only the weights (weights-only restore: the pipeline refills).
+    pub fn clear_transient(&mut self) {
+        for m in &mut self.modules {
+            m.reset_transient();
+        }
+        for mb in &mut self.act_mail {
+            mb.clear();
+        }
+        for mb in &mut self.grad_mail {
+            mb.clear();
+        }
+    }
+
+    /// Install exact in-flight state saved by [`Self::resume_state`].
+    pub fn restore_resume(&mut self, rs: &GroupResume) {
+        assert_eq!(rs.modules.len(), self.modules.len(), "module count mismatch");
+        self.clear_transient();
+        self.sampler.set_rng_state(rs.sampler_rng);
+        for (k, mr) in rs.modules.iter().enumerate() {
+            self.modules[k].set_opt_velocity(mr.velocity.clone());
+            self.modules[k].restore_stash(mr.stashes.clone());
+            if let Some((id, msg)) = &mr.act_in {
+                self.act_mail[k].inject_visible(*id, msg.clone());
+            }
+            if let Some((id, g)) = &mr.grad_in {
+                self.grad_mail[k].inject_visible(*id, g.clone());
+            }
+        }
+    }
+
+    /// Restart the mini-batch sampler at the head of a fresh stream
+    /// (weights-only restore mirrors a freshly built engine).
+    pub fn reset_sampler(&mut self, seed: u64) {
+        self.sampler = MiniBatchSampler::new(
+            self.sampler.shard().clone(),
+            self.sampler.batch_size(),
+            seed,
+        );
     }
 
     /// Current full parameter list (all L layers, module order).

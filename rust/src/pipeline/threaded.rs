@@ -1,250 +1,596 @@
 //! Threaded engine: one OS thread per agent (s,k), exactly the paper's
-//! multi-agent deployment shape.
+//! multi-agent deployment shape — restructured as an incremental
+//! [`Engine`] so every iteration yields an [`IterEvent`] instead of the
+//! run only reporting at the end.
 //!
 //! * activations flow k→k+1 and error gradients k+1→k over mpsc channels
-//!   (Algorithm 1's send/receive pairs);
+//!   (Algorithm 1's send/receive pairs); messages that cross an iteration
+//!   boundary simply stay buffered in the channel between `step` calls;
 //! * gossip (eq. 13b) synchronizes each model-group through shared slots
 //!   guarded by a per-iteration barrier;
 //! * the mixing arithmetic runs in the same (ascending-r) order as the sim
 //!   engine, so the two engines are **bit-identical**
-//!   (tests/integration_engines.rs).
+//!   (tests/integration_engines.rs);
+//! * `checkpoint`/`restore` capture the full transient state — sampler
+//!   stream positions, optimizer velocity, in-flight stashes, and the
+//!   buffered channel messages — so a restored engine continues the exact
+//!   iterate stream (and snapshots are portable to/from the sim engine).
+//!
+//! Trade-off: `step` scopes one thread per agent per iteration (spawn +
+//! join each step) rather than parking persistent workers. That keeps the
+//! engine free of cross-step synchronization state at the cost of S×K
+//! spawns per iteration — visible in `benches/hot_path.rs`
+//! (`e2e_iteration/S4K2_threaded` vs `_sim`); persistent workers behind a
+//! phase barrier are the follow-up if that overhead starts to matter.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
 
 use crate::config::ExperimentConfig;
+use crate::consensus::consensus_error;
 use crate::data::{shard_even, Dataset, MiniBatchSampler};
 use crate::error::{Error, Result};
 use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
 use crate::nn::init::init_params;
+use crate::nn::LayerShape;
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
-use crate::staleness::{partition_layers, Schedule};
+use crate::session::{Engine, IterEvent};
+use crate::staleness::{partition_layers, PipelineMode, Schedule};
 use crate::tensor::Tensor;
+use crate::trainer::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
 use crate::util::rng::Pcg32;
 
-/// Result of a threaded run: per-iteration mean losses + final weights.
-pub struct ThreadedRunOut {
-    /// train loss per iteration (mean over groups; None during fill)
-    pub losses: Vec<Option<f64>>,
-    /// final parameters per group, all L layers in order
-    pub final_params: Vec<Vec<(Tensor, Tensor)>>,
+/// Per-agent state the engine keeps between iterations. Channel endpoints
+/// live here so in-flight messages persist across `step` calls.
+struct AgentSlot {
+    s: usize,
+    k: usize,
+    agent: ModuleAgent,
+    /// only the k = 0 agent samples (Algorithm 1: agent (s,1))
+    sampler: Option<MiniBatchSampler>,
+    grad_scale: f64,
+    act_tx: Option<Sender<ActMsg>>,
+    act_rx: Option<Receiver<ActMsg>>,
+    grad_tx: Option<Sender<Tensor>>,
+    grad_rx: Option<Receiver<Tensor>>,
 }
 
-/// Run `cfg` with one thread per agent. Identical numerics to
-/// `trainer::Trainer` (sim engine); returns losses + final weights.
-pub fn run_threaded(
-    cfg: &ExperimentConfig,
-    backend: &(dyn ComputeBackend + Sync),
-    ds: &Dataset,
-) -> Result<ThreadedRunOut> {
-    cfg.validate()?;
-    let layers = cfg.model.layers();
-    let s_groups = cfg.s;
-    let k_modules = cfg.k;
-    let iters = cfg.iters as i64;
+/// The one-thread-per-agent engine behind the unified session API.
+pub struct ThreadedEngine {
+    cfg: ExperimentConfig,
+    backend: Arc<dyn ComputeBackend>,
+    ds: Arc<Dataset>,
+    layers: Vec<LayerShape>,
+    sched: Schedule,
+    staleness: Vec<usize>,
+    /// s-major: agents[s * K + k]
+    agents: Vec<AgentSlot>,
+    /// P row for each s (ascending-r order, matching GossipMixer)
+    p_rows: Vec<Vec<(usize, f64)>>,
+    /// gossip slots: gossip_slots[k][s] = û_{s,k}(t) posted per round
+    gossip_slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>>,
+    barrier: Barrier,
+    loss_tx: Sender<(usize, f32)>,
+    loss_rx: Receiver<(usize, f32)>,
+    /// fixed probe batch for eval (same derivation as the sim engine)
+    probe: (Tensor, Tensor),
+    iter_time_s: f64,
+    t: i64,
+    t_offset: usize,
+}
 
-    let mut root_rng = Pcg32::new(cfg.seed);
-    let init = init_params(&mut root_rng.fork(0x1217), &layers);
-    let bounds = partition_layers(layers.len(), k_modules);
-    let shards = shard_even(ds, s_groups, cfg.seed ^ 0xDA7A)?;
-
-    // P row for each s (ascending-r order, matching GossipMixer)
-    let p_rows: Vec<Vec<(usize, f64)>> = if s_groups > 1 {
-        let g = Graph::build(cfg.topology, s_groups)?;
-        let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
-        let p = xiao_boyd_weights(&g, alpha)?;
-        (0..s_groups)
-            .map(|s| {
-                (0..s_groups)
-                    .filter(|&r| p[(s, r)] != 0.0)
-                    .map(|r| (r, p[(s, r)]))
-                    .collect()
-            })
-            .collect()
-    } else {
-        vec![vec![(0usize, 1.0f64)]]
-    };
-
-    // gossip slots: slot[k][s] = û_{s,k}(t) posted after the update phase
-    let slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>> = (0..k_modules)
-        .map(|_| (0..s_groups).map(|_| Mutex::new(None)).collect())
-        .collect();
-    let n_agents = s_groups * k_modules;
-    let barrier = Barrier::new(n_agents);
-
-    // per-edge channels
-    struct GroupChans {
-        act_tx: Vec<Option<Sender<ActMsg>>>,
-        act_rx: Vec<Option<Receiver<ActMsg>>>,
-        grad_tx: Vec<Option<Sender<Tensor>>>,
-        grad_rx: Vec<Option<Receiver<Tensor>>>,
-    }
-    let mut chans: Vec<GroupChans> = Vec::with_capacity(s_groups);
-    for _ in 0..s_groups {
-        let mut gc = GroupChans {
-            act_tx: (0..k_modules).map(|_| None).collect(),
-            act_rx: (0..k_modules).map(|_| None).collect(),
-            grad_tx: (0..k_modules).map(|_| None).collect(),
-            grad_rx: (0..k_modules).map(|_| None).collect(),
-        };
-        for k in 0..k_modules.saturating_sub(1) {
-            let (tx, rx) = channel::<ActMsg>();
-            gc.act_tx[k] = Some(tx); // module k sends acts to k+1
-            gc.act_rx[k + 1] = Some(rx);
-            let (tx, rx) = channel::<Tensor>();
-            gc.grad_tx[k + 1] = Some(tx); // module k+1 sends grads to k
-            gc.grad_rx[k] = Some(rx);
+impl ThreadedEngine {
+    pub(crate) fn new(
+        cfg: ExperimentConfig,
+        backend: Arc<dyn ComputeBackend>,
+        ds: Arc<Dataset>,
+    ) -> Result<ThreadedEngine> {
+        cfg.validate()?;
+        let layers = cfg.model.layers();
+        if backend.layers() != &layers[..] {
+            return Err(Error::Config(format!(
+                "backend layer stack {:?} differs from config model {:?}",
+                backend.layers(),
+                layers
+            )));
         }
-        chans.push(gc);
-    }
+        let s_groups = cfg.s;
+        let k_modules = cfg.k;
 
-    // loss reporting from last-module agents
-    let (loss_tx, loss_rx) = channel::<(i64, usize, f32)>();
+        // identical stream discipline to Trainer::new: init fork first,
+        // probe fork second
+        let mut root_rng = Pcg32::new(cfg.seed);
+        let init = init_params(&mut root_rng.fork(0x1217), &layers);
+        let bounds = partition_layers(layers.len(), k_modules);
+        let shards = shard_even(&ds, s_groups, cfg.seed ^ 0xDA7A)?;
 
-    let sched = Schedule::with_mode(k_modules, cfg.mode);
-    let result: Result<Vec<()>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(n_agents);
-        // drain channel containers so each thread owns its endpoints
-        let mut chan_parts: Vec<(Vec<Option<Sender<ActMsg>>>, Vec<Option<Receiver<ActMsg>>>, Vec<Option<Sender<Tensor>>>, Vec<Option<Receiver<Tensor>>>)> = chans
-            .into_iter()
-            .map(|gc| (gc.act_tx, gc.act_rx, gc.grad_tx, gc.grad_rx))
+        let p_rows: Vec<Vec<(usize, f64)>> = if s_groups > 1 {
+            let g = Graph::build(cfg.topology, s_groups)?;
+            let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
+            let p = xiao_boyd_weights(&g, alpha)?;
+            (0..s_groups)
+                .map(|s| {
+                    (0..s_groups)
+                        .filter(|&r| p[(s, r)] != 0.0)
+                        .map(|r| (r, p[(s, r)]))
+                        .collect()
+                })
+                .collect()
+        } else {
+            vec![vec![(0usize, 1.0f64)]]
+        };
+
+        let gossip_slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>> = (0..k_modules)
+            .map(|_| (0..s_groups).map(|_| Mutex::new(None)).collect())
             .collect();
 
+        let mut agents = Vec::with_capacity(s_groups * k_modules);
         for s in 0..s_groups {
-            let (act_txs, act_rxs, grad_txs, grad_rxs) = {
-                let (a, b, c, d) = std::mem::take(&mut chan_parts[s]);
-                (a, b, c, d)
-            };
-            let mut act_txs = act_txs;
-            let mut act_rxs = act_rxs;
-            let mut grad_txs = grad_txs;
-            let mut grad_rxs = grad_rxs;
-
-            for k in 0..k_modules {
-                let (lo, hi) = bounds[k];
-                let mut agent =
-                    ModuleAgent::with_optimizer(k, lo, hi, init[lo..hi].to_vec(), cfg.optimizer);
-                let mut sampler = (k == 0).then(|| {
-                    MiniBatchSampler::new(
-                        shards[s].clone(),
-                        cfg.batch,
-                        cfg.seed ^ (0xBA7C << 8) ^ s as u64,
-                    )
+            for (k, &(lo, hi)) in bounds.iter().enumerate() {
+                agents.push(AgentSlot {
+                    s,
+                    k,
+                    agent: ModuleAgent::with_optimizer(
+                        k,
+                        lo,
+                        hi,
+                        init[lo..hi].to_vec(),
+                        cfg.optimizer,
+                    ),
+                    sampler: (k == 0).then(|| {
+                        MiniBatchSampler::new(
+                            shards[s].clone(),
+                            cfg.batch,
+                            cfg.seed ^ (0xBA7C << 8) ^ s as u64,
+                        )
+                    }),
+                    grad_scale: shards[s].weight(),
+                    act_tx: None,
+                    act_rx: None,
+                    grad_tx: None,
+                    grad_rx: None,
                 });
-                let grad_scale = shards[s].weight();
-                let act_tx = act_txs[k].take();
-                let act_rx = act_rxs[k].take();
-                let grad_tx = grad_txs[k].take();
-                let grad_rx = grad_rxs[k].take();
-                let loss_tx = loss_tx.clone();
-                let slots = &slots;
-                let barrier = &barrier;
-                let p_row = p_rows[s].clone();
+            }
+        }
 
+        let mut probe_rng = root_rng.fork(0x9E0B);
+        let probe_idx = probe_rng.sample_indices(ds.len(), cfg.batch.min(ds.len()));
+        let probe = ds.gather(&probe_idx);
+
+        let sched = Schedule::with_mode(k_modules, cfg.mode);
+        let (loss_tx, loss_rx) = channel();
+        let mut engine = ThreadedEngine {
+            staleness: (0..k_modules).map(|k| sched.staleness(k)).collect(),
+            sched,
+            layers,
+            agents,
+            p_rows,
+            gossip_slots,
+            barrier: Barrier::new(s_groups * k_modules),
+            loss_tx,
+            loss_rx,
+            probe,
+            iter_time_s: 0.0,
+            t: 0,
+            t_offset: 0,
+            cfg,
+            backend,
+            ds,
+        };
+        engine.rewire_channels();
+        Ok(engine)
+    }
+
+    /// (Re)create the per-edge channels: act k→k+1, grad k+1→k. Dropping
+    /// the old endpoints discards any buffered messages.
+    fn rewire_channels(&mut self) {
+        let k_modules = self.cfg.k;
+        for slot in &mut self.agents {
+            slot.act_tx = None;
+            slot.act_rx = None;
+            slot.grad_tx = None;
+            slot.grad_rx = None;
+        }
+        for s in 0..self.cfg.s {
+            let base = s * k_modules;
+            for k in 0..k_modules.saturating_sub(1) {
+                let (tx, rx) = channel::<ActMsg>();
+                self.agents[base + k].act_tx = Some(tx);
+                self.agents[base + k + 1].act_rx = Some(rx);
+                let (tx, rx) = channel::<Tensor>();
+                self.agents[base + k + 1].grad_tx = Some(tx);
+                self.agents[base + k].grad_rx = Some(rx);
+            }
+        }
+    }
+
+    /// Parameters of data-group `s`, all L layers in module order.
+    fn group_params(&self, s: usize) -> Vec<(Tensor, Tensor)> {
+        let base = s * self.cfg.k;
+        (0..self.cfg.k)
+            .flat_map(|k| self.agents[base + k].agent.params.iter().cloned())
+            .collect()
+    }
+
+    fn all_group_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        (0..self.cfg.s).map(|s| self.group_params(s)).collect()
+    }
+
+    /// Group-averaged parameters W̄(t) — same accumulation order as the sim
+    /// engine so eval losses agree bitwise.
+    fn averaged_params(&self) -> Vec<(Tensor, Tensor)> {
+        let s_groups = self.cfg.s;
+        let mut avg = self.group_params(0);
+        for s in 1..s_groups {
+            for (acc, (w, b)) in avg.iter_mut().zip(self.group_params(s)) {
+                acc.0.axpy(1.0, &w);
+                acc.1.axpy(1.0, &b);
+            }
+        }
+        for (w, b) in avg.iter_mut() {
+            w.scale(1.0 / s_groups as f32);
+            b.scale(1.0 / s_groups as f32);
+        }
+        avg
+    }
+
+    /// Read the exact transient state. The in-flight messages live in the
+    /// mpsc buffers between iterations, so each is drained and immediately
+    /// sent back (FIFO order preserved; at an iteration boundary every
+    /// channel holds at most one message — schedule transit consistency).
+    fn resume_state(&mut self) -> ResumeState {
+        let t = self.t;
+        let k_modules = self.cfg.k;
+        let fd = self.sched.mode() == PipelineMode::FullyDecoupled;
+        let mut groups = Vec::with_capacity(self.cfg.s);
+        for s in 0..self.cfg.s {
+            let base = s * k_modules;
+            let sampler_rng = self.agents[base]
+                .sampler
+                .as_ref()
+                .expect("module 0 owns the sampler")
+                .rng_state();
+            let mut modules = Vec::with_capacity(k_modules);
+            for k in 0..k_modules {
+                let idx = base + k;
+                let pending_act = self.agents[idx]
+                    .act_rx
+                    .as_ref()
+                    .and_then(|rx| rx.try_recv().ok());
+                let act_in = pending_act.map(|msg| {
+                    assert!(fd, "pending act in forward-locked mode");
+                    let id = self
+                        .sched
+                        .forward_batch(t, k)
+                        .expect("pending act without a scheduled consumer");
+                    self.agents[idx - 1]
+                        .act_tx
+                        .as_ref()
+                        .expect("act sender exists for a wired edge")
+                        .send(msg.clone())
+                        .expect("re-buffer act");
+                    (id, msg)
+                });
+                let pending_grad = self.agents[idx]
+                    .grad_rx
+                    .as_ref()
+                    .and_then(|rx| rx.try_recv().ok());
+                let grad_in = pending_grad.map(|g| {
+                    let id = self
+                        .sched
+                        .backward_batch(t, k)
+                        .expect("pending grad without a scheduled consumer");
+                    self.agents[idx + 1]
+                        .grad_tx
+                        .as_ref()
+                        .expect("grad sender exists for a wired edge")
+                        .send(g.clone())
+                        .expect("re-buffer grad");
+                    (id, g)
+                });
+                let slot = &self.agents[idx];
+                modules.push(ModuleResume {
+                    velocity: slot.agent.opt_velocity(),
+                    stashes: slot.agent.stash_snapshot(),
+                    act_in,
+                    grad_in,
+                });
+            }
+            groups.push(GroupResume {
+                sampler_rng,
+                modules,
+            });
+        }
+        ResumeState {
+            t,
+            t_offset: self.t_offset,
+            groups,
+        }
+    }
+}
+
+impl Engine for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    /// One global iteration: spawn the S×K agent threads for this
+    /// iteration's barrier loop (Algorithm 1 body + gossip), then assemble
+    /// the event from the losses the last-module agents reported.
+    fn step(&mut self) -> Result<IterEvent> {
+        let t = self.t;
+        let t_us = self.t_offset + t as usize;
+        let eta = self.cfg.lr.at(t_us);
+        let s_groups = self.cfg.s;
+        let k_modules = self.cfg.k;
+        let gossip_rounds = self.cfg.gossip_rounds;
+        let sched = self.sched;
+
+        // leftovers from a failed step must not pollute this iteration
+        while self.loss_rx.try_recv().is_ok() {}
+
+        let backend: &dyn ComputeBackend = self.backend.as_ref();
+        let ds: &Dataset = self.ds.as_ref();
+        let gossip_slots = &self.gossip_slots;
+        let barrier = &self.barrier;
+        let p_rows = &self.p_rows;
+        let loss_tx_root = self.loss_tx.clone();
+
+        let result: Result<Vec<()>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(s_groups * k_modules);
+            for slot in self.agents.iter_mut() {
+                let p_row = &p_rows[slot.s];
+                let loss_tx = loss_tx_root.clone();
                 handles.push(scope.spawn(move || -> Result<()> {
-                    for t in 0..iters {
-                        let eta = cfg.lr.at(t as usize);
-                        // ---- forward ----
-                        if let Some(tau) = sched.forward_batch(t, k) {
-                            let msg = if k == 0 {
-                                let (x, onehot) =
-                                    sampler.as_mut().unwrap().sample_batch(ds);
-                                ActMsg { x, onehot }
-                            } else {
-                                act_rx
-                                    .as_ref()
-                                    .unwrap()
-                                    .recv()
-                                    .map_err(|_| Error::other("act channel closed"))?
-                            };
-                            let boundary = agent.forward(backend, tau, msg)?;
-                            if let Some(tx) = &act_tx {
-                                tx.send(boundary)
-                                    .map_err(|_| Error::other("act send failed"))?;
-                            }
-                        }
-                        // ---- backward + update ----
-                        if let Some(tau) = sched.backward_batch(t, k) {
-                            let g_out = if k == k_modules - 1 {
-                                let (loss, g) = agent.loss_grad_of(backend, tau)?;
-                                let _ = loss_tx.send((t, s, loss));
-                                g
-                            } else {
-                                grad_rx
-                                    .as_ref()
-                                    .unwrap()
-                                    .recv()
-                                    .map_err(|_| Error::other("grad channel closed"))?
-                            };
-                            let (g_in, grads) = agent.backward(backend, tau, g_out)?;
-                            if let Some(tx) = &grad_tx {
-                                tx.send(g_in)
-                                    .map_err(|_| Error::other("grad send failed"))?;
-                            }
-                            agent.apply_update(eta, grad_scale, &grads);
-                        }
-                        // ---- gossip (eq. 13b), cfg.gossip_rounds times ----
-                        for _round in 0..cfg.gossip_rounds {
-                            if s_groups > 1 {
-                                *slots[k][s].lock().unwrap() = Some(agent.params.clone());
-                                barrier.wait(); // all û posted
-                                let mut mixed: Vec<(Tensor, Tensor)> = agent
-                                    .params
-                                    .iter()
-                                    .map(|(w, b)| {
-                                        (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
-                                    })
-                                    .collect();
-                                for &(r, wgt) in &p_row {
-                                    let guard = slots[k][r].lock().unwrap();
-                                    let u_r = guard.as_ref().unwrap();
-                                    for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
-                                        acc.0.axpy(wgt as f32, uw);
-                                        acc.1.axpy(wgt as f32, ub);
-                                    }
-                                }
-                                agent.params = mixed;
-                                barrier.wait(); // all reads done before next write
-                            } else {
-                                barrier.wait();
-                                barrier.wait();
-                            }
+                    let s = slot.s;
+                    let k = slot.k;
+                    // ---- forward ----
+                    if let Some(tau) = sched.forward_batch(t, k) {
+                        let msg = if k == 0 {
+                            let (x, onehot) =
+                                slot.sampler.as_mut().unwrap().sample_batch(ds);
+                            ActMsg { x, onehot }
+                        } else {
+                            slot.act_rx
+                                .as_ref()
+                                .unwrap()
+                                .recv()
+                                .map_err(|_| Error::other("act channel closed"))?
+                        };
+                        let boundary = slot.agent.forward(backend, tau, msg)?;
+                        if let Some(tx) = &slot.act_tx {
+                            tx.send(boundary)
+                                .map_err(|_| Error::other("act send failed"))?;
                         }
                     }
-                    // hand final params back through the slot
-                    *slots[k][s].lock().unwrap() = Some(agent.params.clone());
+                    // ---- backward + update ----
+                    if let Some(tau) = sched.backward_batch(t, k) {
+                        let g_out = if k == k_modules - 1 {
+                            let (loss, g) = slot.agent.loss_grad_of(backend, tau)?;
+                            let _ = loss_tx.send((s, loss));
+                            g
+                        } else {
+                            slot.grad_rx
+                                .as_ref()
+                                .unwrap()
+                                .recv()
+                                .map_err(|_| Error::other("grad channel closed"))?
+                        };
+                        let (g_in, grads) = slot.agent.backward(backend, tau, g_out)?;
+                        if let Some(tx) = &slot.grad_tx {
+                            tx.send(g_in)
+                                .map_err(|_| Error::other("grad send failed"))?;
+                        }
+                        slot.agent.apply_update(eta, slot.grad_scale, &grads);
+                    }
+                    // ---- gossip (eq. 13b), cfg.gossip_rounds times ----
+                    for _round in 0..gossip_rounds {
+                        if s_groups > 1 {
+                            *gossip_slots[k][s].lock().unwrap() =
+                                Some(slot.agent.params.clone());
+                            barrier.wait(); // all û posted
+                            let mut mixed: Vec<(Tensor, Tensor)> = slot
+                                .agent
+                                .params
+                                .iter()
+                                .map(|(w, b)| {
+                                    (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
+                                })
+                                .collect();
+                            for &(r, wgt) in p_row {
+                                let guard = gossip_slots[k][r].lock().unwrap();
+                                let u_r = guard.as_ref().unwrap();
+                                for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
+                                    acc.0.axpy(wgt as f32, uw);
+                                    acc.1.axpy(wgt as f32, ub);
+                                }
+                            }
+                            slot.agent.params = mixed;
+                            barrier.wait(); // all reads done before next write
+                        } else {
+                            barrier.wait();
+                            barrier.wait();
+                        }
+                    }
                     Ok(())
                 }));
             }
-        }
-        handles.into_iter().map(|h| h.join().expect("agent panicked")).collect()
-    });
-    result?;
-    drop(loss_tx);
-
-    // assemble per-iteration mean losses
-    let mut per_iter: Vec<Vec<f64>> = vec![Vec::new(); iters as usize];
-    while let Ok((t, _s, loss)) = loss_rx.try_recv() {
-        per_iter[t as usize].push(loss as f64);
-    }
-    let losses = per_iter
-        .into_iter()
-        .map(|v| (!v.is_empty()).then(|| crate::util::mean(&v)))
-        .collect();
-
-    let final_params = (0..s_groups)
-        .map(|s| {
-            (0..k_modules)
-                .flat_map(|k| slots[k][s].lock().unwrap().take().unwrap())
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("agent thread panicked"))
                 .collect()
-        })
-        .collect();
+        });
+        result?;
 
-    Ok(ThreadedRunOut {
-        losses,
-        final_params,
-    })
+        // this iteration's losses, in data-group order for a deterministic
+        // mean (bit-identical to the sim engine's group loop)
+        let mut losses: Vec<(usize, f64)> = Vec::new();
+        while let Ok((s, loss)) = self.loss_rx.try_recv() {
+            losses.push((s, loss as f64));
+        }
+        losses.sort_by_key(|&(s, _)| s);
+        let loss_vals: Vec<f64> = losses.into_iter().map(|(_, l)| l).collect();
+
+        self.t += 1;
+        // LOCKSTEP with Trainer::step's record assembly (trainer/mod.rs):
+        // the eval/δ cadence conditions, sim_time formula, and loss mean
+        // must stay identical or the engines' asserted bit-equality breaks
+        // (tests/integration_engines.rs).
+        let mut ev = IterEvent {
+            t: t_us,
+            lr: eta,
+            train_loss: (!loss_vals.is_empty()).then(|| crate::util::mean(&loss_vals)),
+            eval_loss: None,
+            eval_acc: None,
+            delta: None,
+            sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
+            staleness: self.staleness.clone(),
+        };
+        if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
+            ev.delta = Some(self.consensus_delta());
+        }
+        if self.cfg.eval_every > 0
+            && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
+        {
+            let avg = self.averaged_params();
+            let (x, oh) = &self.probe;
+            ev.eval_loss = Some(self.backend.eval_loss(x, oh, &avg)? as f64);
+            let logits = crate::nn::full_forward(x, &avg, &self.layers);
+            ev.eval_acc = Some(crate::nn::accuracy(&logits, oh));
+        }
+        Ok(ev)
+    }
+
+    fn iterations_done(&self) -> usize {
+        self.t_offset + self.t as usize
+    }
+
+    fn checkpoint(&mut self) -> Checkpoint {
+        let groups = self.all_group_params();
+        let resume = self.resume_state();
+        Checkpoint::new(
+            self.t_offset + self.t as usize,
+            groups,
+            self.layers.clone(),
+        )
+        .with_resume(resume)
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        let s_groups = self.cfg.s;
+        let k_modules = self.cfg.k;
+        if ck.groups.len() != s_groups {
+            return Err(Error::Config(format!(
+                "checkpoint has {} groups, engine has {s_groups}",
+                ck.groups.len()
+            )));
+        }
+        if ck.layers != self.layers {
+            return Err(Error::Config(
+                "checkpoint layer stack differs from engine model".into(),
+            ));
+        }
+        for (s, saved) in ck.groups.iter().enumerate() {
+            let mut off = 0;
+            for k in 0..k_modules {
+                let slot = &mut self.agents[s * k_modules + k];
+                for p in slot.agent.params.iter_mut() {
+                    *p = saved[off].clone();
+                    off += 1;
+                }
+            }
+        }
+        // clean slate: fresh channels, empty stashes/velocity, no losses
+        self.rewire_channels();
+        while self.loss_rx.try_recv().is_ok() {}
+        for slot in &mut self.agents {
+            slot.agent.reset_transient();
+        }
+        match &ck.resume {
+            Some(rs) => {
+                if rs.groups.len() != s_groups {
+                    return Err(Error::Config(format!(
+                        "resume state has {} groups, engine has {s_groups}",
+                        rs.groups.len()
+                    )));
+                }
+                self.t = rs.t;
+                self.t_offset = rs.t_offset;
+                for (s, gr) in rs.groups.iter().enumerate() {
+                    if gr.modules.len() != k_modules {
+                        return Err(Error::Config(format!(
+                            "resume state has {} modules, engine has {k_modules}",
+                            gr.modules.len()
+                        )));
+                    }
+                    let base = s * k_modules;
+                    self.agents[base]
+                        .sampler
+                        .as_mut()
+                        .expect("module 0 owns the sampler")
+                        .set_rng_state(gr.sampler_rng);
+                    for (k, mr) in gr.modules.iter().enumerate() {
+                        let slot = &mut self.agents[base + k];
+                        slot.agent.set_opt_velocity(mr.velocity.clone());
+                        slot.agent.restore_stash(mr.stashes.clone());
+                    }
+                    // re-buffer the in-flight messages into the new channels
+                    for (k, mr) in gr.modules.iter().enumerate() {
+                        if let Some((_, msg)) = &mr.act_in {
+                            self.agents[base + k - 1]
+                                .act_tx
+                                .as_ref()
+                                .expect("act sender exists for a wired edge")
+                                .send(msg.clone())
+                                .map_err(|_| Error::other("act re-buffer failed"))?;
+                        }
+                        if let Some((_, g)) = &mr.grad_in {
+                            self.agents[base + k + 1]
+                                .grad_tx
+                                .as_ref()
+                                .expect("grad sender exists for a wired edge")
+                                .send(g.clone())
+                                .map_err(|_| Error::other("grad re-buffer failed"))?;
+                        }
+                    }
+                }
+            }
+            None => {
+                // weights-only: refill semantics, samplers restart fresh
+                self.t = 0;
+                self.t_offset = ck.iteration;
+                for s in 0..s_groups {
+                    let seed = self.cfg.seed ^ (0xBA7C << 8) ^ s as u64;
+                    let batch = self.cfg.batch;
+                    let slot = &mut self.agents[s * k_modules];
+                    let shard = slot
+                        .sampler
+                        .as_ref()
+                        .expect("module 0 owns the sampler")
+                        .shard()
+                        .clone();
+                    slot.sampler = Some(MiniBatchSampler::new(shard, batch, seed));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn final_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        self.all_group_params()
+    }
+
+    fn consensus_delta(&self) -> f64 {
+        if self.cfg.s < 2 {
+            return 0.0;
+        }
+        consensus_error(&self.all_group_params())
+    }
+
+    fn set_iter_time_s(&mut self, iter_time_s: f64) {
+        self.iter_time_s = iter_time_s;
+    }
 }
 
 #[cfg(test)]
@@ -277,69 +623,103 @@ mod tests {
         }
     }
 
-    #[test]
-    fn threaded_matches_sim_bitwise_dbp_mode() {
-        // the backward-unlocked baseline must also be engine-independent
-        let mut c = cfg(2, 3, 10);
-        c.mode = crate::staleness::PipelineMode::BackwardUnlocked;
-        let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
-        let backend = NativeBackend::new(c.model.layers(), c.batch);
-        let out = run_threaded(&c, &backend, &ds).unwrap();
-        let mut sim = Trainer::new(c, &backend, &ds).unwrap();
-        sim.run().unwrap();
-        for (s_idx, grp) in sim.groups().iter().enumerate() {
-            for ((w1, b1), (w2, b2)) in grp.all_params().iter().zip(&out.final_params[s_idx]) {
-                assert_eq!(w1, w2);
-                assert_eq!(b1, b2);
-            }
-        }
+    fn setup(c: &ExperimentConfig) -> (Arc<dyn ComputeBackend>, Arc<Dataset>) {
+        let ds = Arc::new(SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate());
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(c.model.layers(), c.batch));
+        (backend, ds)
     }
 
-    #[test]
-    fn threaded_matches_sim_with_multi_round_gossip() {
-        let mut c = cfg(3, 2, 8);
-        c.gossip_rounds = 2;
-        let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
-        let backend = NativeBackend::new(c.model.layers(), c.batch);
-        let out = run_threaded(&c, &backend, &ds).unwrap();
-        let mut sim = Trainer::new(c, &backend, &ds).unwrap();
+    fn drive_threaded(c: &ExperimentConfig) -> (Vec<Option<f64>>, ThreadedEngine) {
+        let (backend, ds) = setup(c);
+        let mut eng = ThreadedEngine::new(c.clone(), backend, ds).unwrap();
+        let mut losses = Vec::with_capacity(c.iters);
+        for _ in 0..c.iters {
+            losses.push(eng.step().unwrap().train_loss);
+        }
+        (losses, eng)
+    }
+
+    fn assert_matches_sim(c: ExperimentConfig) {
+        let (losses, eng) = drive_threaded(&c);
+        let (backend, ds) = setup(&c);
+        let mut sim = Trainer::new(c, backend, ds).unwrap();
         sim.run().unwrap();
         for (s_idx, grp) in sim.groups().iter().enumerate() {
-            for ((w1, b1), (w2, b2)) in grp.all_params().iter().zip(&out.final_params[s_idx]) {
-                assert_eq!(w1, w2);
-                assert_eq!(b1, b2);
+            let threaded = eng.final_params();
+            for ((w1, b1), (w2, b2)) in grp.all_params().iter().zip(&threaded[s_idx]) {
+                assert_eq!(w1, w2, "group {s_idx} weight mismatch");
+                assert_eq!(b1, b2, "group {s_idx} bias mismatch");
             }
+        }
+        for (t, rec) in sim.recorder().records.iter().enumerate() {
+            assert_eq!(rec.train_loss, losses[t], "t={t}");
         }
     }
 
     #[test]
     fn threaded_matches_sim_bitwise() {
         for (s, k) in [(1, 1), (1, 3), (3, 1), (2, 2)] {
-            let c = cfg(s, k, 12);
-            let ds = SyntheticSpec::small(c.dataset_n, 10, 3, 3).generate();
-            let backend = NativeBackend::new(c.model.layers(), c.batch);
+            assert_matches_sim(cfg(s, k, 12));
+        }
+    }
 
-            let out = run_threaded(&c, &backend, &ds).unwrap();
+    #[test]
+    fn threaded_matches_sim_bitwise_dbp_mode() {
+        // the backward-unlocked baseline must also be engine-independent
+        let mut c = cfg(2, 3, 10);
+        c.mode = crate::staleness::PipelineMode::BackwardUnlocked;
+        assert_matches_sim(c);
+    }
 
-            let mut sim = Trainer::new(c.clone(), &backend, &ds).unwrap();
-            sim.run().unwrap();
+    #[test]
+    fn threaded_matches_sim_with_multi_round_gossip() {
+        let mut c = cfg(3, 2, 8);
+        c.gossip_rounds = 2;
+        assert_matches_sim(c);
+    }
 
-            for (s_idx, grp) in sim.groups().iter().enumerate() {
-                for ((w1, b1), (w2, b2)) in
-                    grp.all_params().iter().zip(&out.final_params[s_idx])
-                {
-                    assert_eq!(w1, w2, "S={s},K={k} weight mismatch");
-                    assert_eq!(b1, b2, "S={s},K={k} bias mismatch");
-                }
-            }
-            // loss streams agree where both defined
-            for (t, rec) in sim.recorder().records.iter().enumerate() {
-                match (rec.train_loss, out.losses[t]) {
-                    (Some(a), Some(b)) => assert!((a - b).abs() < 1e-9, "t={t}"),
-                    (None, None) => {}
-                    other => panic!("t={t}: {other:?}"),
-                }
+    #[test]
+    fn threaded_exact_restore_is_bit_identical() {
+        let c = cfg(2, 2, 20);
+        let (full_losses, full) = drive_threaded(&c);
+
+        let (backend, ds) = setup(&c);
+        let mut part = ThreadedEngine::new(c.clone(), backend, ds).unwrap();
+        for _ in 0..9 {
+            part.step().unwrap();
+        }
+        let ck = part.checkpoint();
+        assert!(ck.resume.is_some());
+        assert_eq!(ck.iteration, 9);
+
+        let (backend, ds) = setup(&c);
+        let mut resumed = ThreadedEngine::new(c.clone(), backend, ds).unwrap();
+        resumed.restore(&ck).unwrap();
+        for t in 9..c.iters {
+            let ev = resumed.step().unwrap();
+            assert_eq!(ev.t, t);
+            assert_eq!(ev.train_loss, full_losses[t], "t={t}");
+        }
+        for (a, b) in full.final_params().iter().zip(resumed.final_params().iter()) {
+            for ((w1, b1), (w2, b2)) in a.iter().zip(b.iter()) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
             }
         }
+    }
+
+    #[test]
+    fn threaded_weights_only_restore_refills() {
+        let c = cfg(2, 2, 16);
+        let (_, mut eng) = drive_threaded(&c);
+        let mut ck = eng.checkpoint();
+        ck.resume = None; // simulate a disk round-trip
+        eng.restore(&ck).unwrap();
+        assert_eq!(eng.iterations_done(), 16);
+        // keeps running from the refilled pipeline (no loss until refill)
+        let ev = eng.step().unwrap();
+        assert_eq!(ev.t, 16);
+        assert!(ev.train_loss.is_none(), "pipeline should be refilling");
     }
 }

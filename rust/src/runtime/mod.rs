@@ -7,13 +7,17 @@
 pub mod backend;
 pub mod manifest;
 pub mod native;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+#[cfg(feature = "xla")]
 pub mod xla_backend;
 
 pub use backend::ComputeBackend;
 pub use manifest::Manifest;
 pub use native::NativeBackend;
+#[cfg(feature = "xla")]
 pub use pjrt::{Executable, PjRt};
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 
 use crate::error::Result;
@@ -27,8 +31,10 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse "native" | "xla" — case-insensitive and whitespace-tolerant,
+    /// so `--backend XLA` or a padded config value still resolves.
     pub fn parse(s: &str) -> Result<BackendKind> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "native" => Ok(BackendKind::Native),
             "xla" => Ok(BackendKind::Xla),
             _ => Err(crate::error::Error::Config(format!(
@@ -54,7 +60,17 @@ pub fn make_backend(
 ) -> Result<Box<dyn ComputeBackend>> {
     match kind {
         BackendKind::Native => Ok(Box::new(NativeBackend::new(layers, batch))),
+        #[cfg(feature = "xla")]
         BackendKind::Xla => Ok(Box::new(XlaBackend::load(artifacts_dir)?)),
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Xla => {
+            let _ = artifacts_dir;
+            Err(crate::error::Error::Config(
+                "built without the `xla` feature; rebuild with default features \
+                 for the XLA backend"
+                    .into(),
+            ))
+        }
     }
 }
 
@@ -67,5 +83,15 @@ mod tests {
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
         assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
         assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse_is_case_and_whitespace_insensitive() {
+        assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("Native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("  xla \n").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse(" NATIVE ").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("  tpu  ").is_err());
+        assert!(BackendKind::parse("").is_err());
     }
 }

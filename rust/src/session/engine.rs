@@ -1,0 +1,99 @@
+//! The [`Engine`] trait: one contract both execution strategies satisfy, so
+//! every caller — CLI, examples, benches, tests — drives training the same
+//! way and the engines stay interchangeable (and bit-identical).
+
+use crate::error::Result;
+use crate::session::IterEvent;
+use crate::tensor::Tensor;
+use crate::trainer::Checkpoint;
+
+/// Which execution strategy runs the S×K agent grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Deterministic single-threaded engine (`trainer::Trainer`): executes
+    /// every agent's Algorithm-1 body in a fixed order per iteration.
+    Sim,
+    /// One OS thread per agent (s,k) — the paper's multi-agent deployment
+    /// shape — synchronized by a per-iteration barrier. Computes the same
+    /// iterates as the sim engine, bit for bit.
+    Threaded,
+}
+
+impl EngineKind {
+    /// Parse "sim" | "threaded" (case-insensitive, whitespace-tolerant).
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" => Ok(EngineKind::Sim),
+            "threaded" | "threads" => Ok(EngineKind::Threaded),
+            _ => Err(crate::error::Error::Config(format!(
+                "unknown engine {s:?} (want sim|threaded)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::Sim => "sim",
+            EngineKind::Threaded => "threaded",
+        }
+    }
+}
+
+/// A training engine: advances the whole agent grid one global iteration at
+/// a time, yielding an [`IterEvent`] per step, and supports full-state
+/// checkpoint/restore.
+///
+/// Implementations: the sim engine (adapting [`crate::trainer::Trainer`])
+/// and [`crate::pipeline::ThreadedEngine`]. Both compute identical iterates
+/// from the same config + seed (tests/integration_engines.rs).
+pub trait Engine {
+    /// Engine name for logs/metrics ("sim" | "threaded").
+    fn name(&self) -> &'static str;
+
+    /// Run one global iteration (forward/backward/update on every group,
+    /// then gossip) and report what happened.
+    fn step(&mut self) -> Result<IterEvent>;
+
+    /// Absolute iterations completed (restore offset included).
+    fn iterations_done(&self) -> usize;
+
+    /// Snapshot weights + iteration, with the exact-resume payload attached
+    /// (`&mut` because the threaded engine drains and refills its channel
+    /// buffers to read the in-flight messages).
+    fn checkpoint(&mut self) -> Checkpoint;
+
+    /// Restore a checkpoint. With a resume payload the continuation is
+    /// bit-identical to the uninterrupted run; weights-only checkpoints
+    /// restart the pipeline (refill semantics).
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()>;
+
+    /// Current per-group parameters, all L layers in module order.
+    fn final_params(&self) -> Vec<Vec<(Tensor, Tensor)>>;
+
+    /// Consensus error δ(t) of eq. (22) over the current parameters.
+    fn consensus_delta(&self) -> f64;
+
+    /// Attach the modelled seconds-per-iteration (sim clock) reported in
+    /// each event's `sim_time_s`.
+    fn set_iter_time_s(&mut self, iter_time_s: f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse_is_lenient() {
+        assert_eq!(EngineKind::parse("sim").unwrap(), EngineKind::Sim);
+        assert_eq!(EngineKind::parse(" Threaded ").unwrap(), EngineKind::Threaded);
+        assert_eq!(EngineKind::parse("SIM").unwrap(), EngineKind::Sim);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn engine_kind_roundtrip() {
+        for k in [EngineKind::Sim, EngineKind::Threaded] {
+            assert_eq!(EngineKind::parse(k.as_str()).unwrap(), k);
+        }
+    }
+}

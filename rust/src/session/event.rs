@@ -1,0 +1,154 @@
+//! Streaming iteration events: the per-iteration observation record every
+//! engine yields through [`crate::session::Session::step`], plus a JSONL
+//! writer for the CLI's `--events-out` stream.
+//!
+//! JSONL schema (one object per line, `None` fields omitted):
+//!
+//! ```json
+//! {"t": 12, "lr": 0.1, "train_loss": 2.19, "eval_loss": 2.25,
+//!  "eval_acc": 0.14, "delta": 1.3e-3, "sim_time_s": 0.696,
+//!  "staleness": [2, 0]}
+//! ```
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::Record;
+use crate::util::json::Json;
+
+/// One engine iteration's observations (the streaming form of
+/// [`crate::metrics::Record`], plus the schedule's per-module staleness).
+#[derive(Debug, Clone)]
+pub struct IterEvent {
+    /// absolute iteration index (restore offset included)
+    pub t: usize,
+    /// step size η_t used by this iteration
+    pub lr: f64,
+    /// mean mini-batch loss across data-groups (None during pipeline fill)
+    pub train_loss: Option<f64>,
+    /// probe-batch loss of the group-averaged weights (eval cadence)
+    pub eval_loss: Option<f64>,
+    /// probe-batch accuracy of the averaged weights
+    pub eval_acc: Option<f64>,
+    /// consensus error δ(t) (eq. 22, delta cadence)
+    pub delta: Option<f64>,
+    /// modelled wall-clock time at the END of this iteration (sim clock)
+    pub sim_time_s: f64,
+    /// weight-update staleness per module, 2(K−1−k) in FD mode
+    pub staleness: Vec<usize>,
+}
+
+impl IterEvent {
+    /// Downgrade to the tabular [`Record`] the recorder/CSV layer stores.
+    pub fn to_record(&self) -> Record {
+        Record {
+            t: self.t,
+            lr: self.lr,
+            train_loss: self.train_loss,
+            eval_loss: self.eval_loss,
+            eval_acc: self.eval_acc,
+            delta: self.delta,
+            sim_time_s: self.sim_time_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("t", self.t)
+            .set("lr", self.lr)
+            .set("sim_time_s", self.sim_time_s)
+            .set("staleness", self.staleness.clone());
+        let set_opt = |j: &mut Json, key: &str, v: Option<f64>| {
+            if let Some(v) = v {
+                j.set(key, v);
+            }
+        };
+        set_opt(&mut j, "train_loss", self.train_loss);
+        set_opt(&mut j, "eval_loss", self.eval_loss);
+        set_opt(&mut j, "eval_acc", self.eval_acc);
+        set_opt(&mut j, "delta", self.delta);
+        j
+    }
+}
+
+/// Append-only JSONL sink for [`IterEvent`]s (`sgs train --events-out`).
+pub struct EventWriter {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl EventWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<EventWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(EventWriter {
+            w: std::io::BufWriter::new(std::fs::File::create(path)?),
+        })
+    }
+
+    pub fn write(&mut self, ev: &IterEvent) -> Result<()> {
+        writeln!(self.w, "{}", ev.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev() -> IterEvent {
+        IterEvent {
+            t: 3,
+            lr: 0.1,
+            train_loss: Some(2.25),
+            eval_loss: None,
+            eval_acc: None,
+            delta: Some(1e-3),
+            sim_time_s: 0.25,
+            staleness: vec![2, 0],
+        }
+    }
+
+    #[test]
+    fn json_omits_absent_fields() {
+        let j = ev().to_json();
+        assert_eq!(j.get("t").unwrap().as_usize().unwrap(), 3);
+        assert!(j.opt("train_loss").is_some());
+        assert!(j.opt("eval_loss").is_none());
+        assert_eq!(j.get("staleness").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn record_roundtrip_keeps_fields() {
+        let r = ev().to_record();
+        assert_eq!(r.t, 3);
+        assert_eq!(r.train_loss, Some(2.25));
+        assert_eq!(r.delta, Some(1e-3));
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("sgs_event_writer");
+        let path = dir.join("events.jsonl");
+        let mut w = EventWriter::create(&path).unwrap();
+        w.write(&ev()).unwrap();
+        w.write(&ev()).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("lr").unwrap().as_f64().unwrap(), 0.1);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

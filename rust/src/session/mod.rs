@@ -1,0 +1,405 @@
+//! The one public entry point for training: build a [`Session`] with
+//! [`SessionBuilder`], then drive it step-by-step (streaming
+//! [`IterEvent`]s) or to completion.
+//!
+//! Both execution strategies — the deterministic sim engine and the
+//! one-thread-per-agent threaded engine — sit behind the same [`Engine`]
+//! trait and compute **bit-identical** iterates from the same config and
+//! seed (tests/integration_engines.rs), which is the paper's central
+//! equivalence claim made executable.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use sgs::config::ExperimentConfig;
+//! use sgs::session::{EngineKind, Session};
+//!
+//! fn main() -> sgs::Result<()> {
+//!     let mut cfg = ExperimentConfig::default();
+//!     cfg.iters = 500;
+//!
+//!     let mut session = Session::builder(cfg)
+//!         .engine(EngineKind::Threaded) // or EngineKind::Sim — same iterates
+//!         .calibrate_clock(true)        // attach modelled wall-clock times
+//!         .build()?;
+//!
+//!     // stream iteration events (loss, δ(t), per-module staleness, ...)
+//!     session.run_streaming(|ev| {
+//!         if ev.t % 100 == 0 {
+//!             println!("iter {:>5}  loss {:?}  δ {:?}", ev.t, ev.train_loss, ev.delta);
+//!         }
+//!         Ok(())
+//!     })?;
+//!
+//!     // mid-run observation, checkpoint/restore, and summary also work:
+//!     let ck = session.checkpoint(); // exact in-memory snapshot
+//!     let out = session.finish();    // RunOutput: recorder, γ, δ(T), ...
+//!     println!("final δ = {:.3e}, γ = {:.4}", out.final_delta, out.gamma);
+//!     drop(ck);
+//!     Ok(())
+//! }
+//! ```
+
+pub mod engine;
+pub mod event;
+mod sim;
+
+pub use engine::{Engine, EngineKind};
+pub use event::{EventWriter, IterEvent};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::grid::AgentGrid;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::metrics::Recorder;
+use crate::pipeline::ThreadedEngine;
+use crate::runtime::{make_backend, BackendKind, ComputeBackend};
+use crate::simclock::{method_iter_s_mode, CostModel};
+use crate::tensor::Tensor;
+use crate::trainer::Checkpoint;
+
+use sim::SimEngine;
+
+/// Everything a finished run hands back.
+pub struct RunOutput {
+    pub cfg: ExperimentConfig,
+    pub recorder: Recorder,
+    /// consensus contraction factor ρ(P − 11ᵀ/S) of the gossip graph
+    pub gamma: f64,
+    /// modelled seconds per iteration (0 without a cost model)
+    pub iter_time_s: f64,
+    /// consensus error δ(T) at the end of the run
+    pub final_delta: f64,
+}
+
+/// Fluent constructor for a [`Session`]: config → backend → dataset →
+/// engine, replacing the hand-rolled wiring every caller used to repeat.
+pub struct SessionBuilder {
+    cfg: ExperimentConfig,
+    engine: EngineKind,
+    backend_kind: BackendKind,
+    artifacts_dir: PathBuf,
+    backend: Option<Arc<dyn ComputeBackend>>,
+    dataset: Option<Arc<Dataset>>,
+    cost_model: Option<CostModel>,
+    calibrate_clock: bool,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: ExperimentConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            engine: EngineKind::Sim,
+            backend_kind: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            backend: None,
+            dataset: None,
+            cost_model: None,
+            calibrate_clock: false,
+        }
+    }
+
+    /// Execution strategy (default: sim).
+    pub fn engine(mut self, kind: EngineKind) -> SessionBuilder {
+        self.engine = kind;
+        self
+    }
+
+    /// Backend kind to construct (default: native). Ignored when a prebuilt
+    /// backend is supplied via [`Self::with_backend`].
+    pub fn backend(mut self, kind: BackendKind) -> SessionBuilder {
+        self.backend_kind = kind;
+        self
+    }
+
+    /// AOT artifact directory for the XLA backend (default: "artifacts").
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> SessionBuilder {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Share a prebuilt backend (benches: calibrate once, run many).
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> SessionBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Share a dataset across sessions (default: built from the config —
+    /// real CIFAR-10 when `CIFAR10_DIR` fits, else synthetic).
+    pub fn dataset(mut self, ds: impl Into<Arc<Dataset>>) -> SessionBuilder {
+        self.dataset = Some(ds.into());
+        self
+    }
+
+    /// Override the experiment seed (convenience for sweeps).
+    pub fn seed(mut self, seed: u64) -> SessionBuilder {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Attach a pre-calibrated cost model for modelled iteration times.
+    pub fn cost_model(mut self, cm: &CostModel) -> SessionBuilder {
+        self.cost_model = Some(cm.clone());
+        self
+    }
+
+    /// Calibrate a cost model on the built backend (ignored when
+    /// [`Self::cost_model`] supplied one).
+    pub fn calibrate_clock(mut self, yes: bool) -> SessionBuilder {
+        self.calibrate_clock = yes;
+        self
+    }
+
+    /// Validate the config, check Assumption 3.1, build dataset + backend +
+    /// engine, and hand back a ready [`Session`].
+    pub fn build(self) -> Result<Session> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let grid = AgentGrid::build(cfg.s, cfg.k, cfg.topology, cfg.alpha)?;
+        grid.check_assumption_3_1()?;
+        let gamma = grid.gamma();
+
+        let ds = match self.dataset {
+            Some(ds) => ds,
+            None => Arc::new(crate::coordinator::build_dataset(&cfg)),
+        };
+        let backend: Arc<dyn ComputeBackend> = match self.backend {
+            Some(b) => b,
+            None => Arc::from(make_backend(
+                self.backend_kind,
+                &self.artifacts_dir,
+                cfg.model.layers(),
+                cfg.batch,
+            )?),
+        };
+
+        let cm = match (self.cost_model, self.calibrate_clock) {
+            (Some(cm), _) => Some(cm),
+            (None, true) => Some(CostModel::calibrate(backend.as_ref(), 3)),
+            (None, false) => None,
+        };
+        let iter_time_s = cm
+            .map(|cm| {
+                method_iter_s_mode(
+                    &cm,
+                    cfg.s,
+                    cfg.k,
+                    grid.model_graph.max_degree() + 1,
+                    cfg.mode,
+                )
+            })
+            .unwrap_or(0.0);
+
+        let mut engine: Box<dyn Engine> = match self.engine {
+            EngineKind::Sim => {
+                Box::new(SimEngine::new(cfg.clone(), backend.clone(), ds.clone())?)
+            }
+            EngineKind::Threaded => {
+                Box::new(ThreadedEngine::new(cfg.clone(), backend.clone(), ds.clone())?)
+            }
+        };
+        engine.set_iter_time_s(iter_time_s);
+
+        Ok(Session {
+            cfg,
+            engine,
+            recorder: Recorder::new(),
+            gamma,
+            iter_time_s,
+            backend,
+            ds,
+        })
+    }
+}
+
+/// A running experiment: an engine plus its instrumentation. Step it,
+/// stream it, checkpoint it, or run it to the configured budget.
+pub struct Session {
+    cfg: ExperimentConfig,
+    engine: Box<dyn Engine>,
+    recorder: Recorder,
+    gamma: f64,
+    iter_time_s: f64,
+    backend: Arc<dyn ComputeBackend>,
+    ds: Arc<Dataset>,
+}
+
+impl Session {
+    pub fn builder(cfg: ExperimentConfig) -> SessionBuilder {
+        SessionBuilder::new(cfg)
+    }
+
+    pub fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Consensus contraction factor ρ(P − 11ᵀ/S) (Lemma 2.1: < 1).
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Modelled seconds per iteration (0 without a cost model).
+    pub fn iter_time_s(&self) -> f64 {
+        self.iter_time_s
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    pub fn backend(&self) -> &Arc<dyn ComputeBackend> {
+        &self.backend
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.ds
+    }
+
+    /// Absolute iterations completed (restore offset included).
+    pub fn iterations_done(&self) -> usize {
+        self.engine.iterations_done()
+    }
+
+    /// Advance one global iteration and record + return its event.
+    pub fn step(&mut self) -> Result<IterEvent> {
+        let ev = self.engine.step()?;
+        self.recorder.push(ev.to_record());
+        Ok(ev)
+    }
+
+    /// Run the remaining iterations up to the configured budget.
+    pub fn run(&mut self) -> Result<()> {
+        while self.iterations_done() < self.cfg.iters {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Run the remaining iterations, handing every event to `on_event`
+    /// (JSONL sinks, live dashboards, early-stopping probes, ...).
+    pub fn run_streaming(
+        &mut self,
+        mut on_event: impl FnMut(&IterEvent) -> Result<()>,
+    ) -> Result<()> {
+        while self.iterations_done() < self.cfg.iters {
+            let ev = self.step()?;
+            on_event(&ev)?;
+        }
+        Ok(())
+    }
+
+    /// Exact in-memory snapshot (weights + full transient state). `save` on
+    /// the returned checkpoint persists the portable weights-only core.
+    pub fn checkpoint(&mut self) -> Checkpoint {
+        self.engine.checkpoint()
+    }
+
+    /// Restore a checkpoint (exact when it carries a resume payload,
+    /// refill semantics otherwise) and reset the session recorder.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.engine.restore(ck)?;
+        self.recorder = Recorder::new();
+        Ok(())
+    }
+
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
+    }
+
+    /// Current per-group parameters, all L layers in module order.
+    pub fn final_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        self.engine.final_params()
+    }
+
+    /// Consensus error δ(t) over the current parameters (eq. 22).
+    pub fn consensus_delta(&self) -> f64 {
+        self.engine.consensus_delta()
+    }
+
+    /// Close the session and hand back the run artifacts.
+    pub fn finish(self) -> RunOutput {
+        let final_delta = self.engine.consensus_delta();
+        RunOutput {
+            cfg: self.cfg,
+            recorder: self.recorder,
+            gamma: self.gamma,
+            iter_time_s: self.iter_time_s,
+            final_delta,
+        }
+    }
+
+    /// Convenience: run to the configured budget, then [`Self::finish`].
+    pub fn run_to_end(mut self) -> Result<RunOutput> {
+        self.run()?;
+        Ok(self.finish())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::graph::Topology;
+    use crate::trainer::LrSchedule;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "session-test".into(),
+            s: 2,
+            k: 2,
+            topology: Topology::Ring,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            batch: 8,
+            iters: 12,
+            lr: LrSchedule::Const(0.2),
+            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            mode: crate::staleness::PipelineMode::FullyDecoupled,
+            seed: 5,
+            dataset_n: 200,
+            delta_every: 3,
+            eval_every: 6,
+        }
+    }
+
+    #[test]
+    fn session_runs_and_records() {
+        let out = Session::builder(tiny_cfg()).build().unwrap().run_to_end().unwrap();
+        assert_eq!(out.recorder.records.len(), 12);
+        assert!(out.gamma < 1.0);
+        assert!(out.final_delta.is_finite());
+        assert!(out.recorder.summary().final_train_loss.is_some());
+    }
+
+    #[test]
+    fn step_streams_events_with_staleness() {
+        let mut session = Session::builder(tiny_cfg()).build().unwrap();
+        let ev = session.step().unwrap();
+        assert_eq!(ev.t, 0);
+        assert_eq!(ev.staleness, vec![2, 0]); // K=2 FD: 2(K−1−k)
+        assert_eq!(session.iterations_done(), 1);
+        let mut seen = 0;
+        session.run_streaming(|_| { seen += 1; Ok(()) }).unwrap();
+        assert_eq!(seen, 11);
+        assert_eq!(session.recorder().records.len(), 12);
+    }
+
+    #[test]
+    fn both_engines_build_through_builder() {
+        for kind in [EngineKind::Sim, EngineKind::Threaded] {
+            let session = Session::builder(tiny_cfg()).engine(kind).build().unwrap();
+            assert_eq!(session.engine_name(), kind.as_str());
+        }
+    }
+
+    #[test]
+    fn builder_rejects_invalid_config() {
+        let mut cfg = tiny_cfg();
+        cfg.k = 99;
+        assert!(Session::builder(cfg).build().is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! The sim engine behind the [`Engine`] trait: a thin adapter over
+//! [`crate::trainer::Trainer`], which already computes eval/δ cadence and
+//! full-state checkpoints.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::runtime::ComputeBackend;
+use crate::session::{Engine, IterEvent};
+use crate::staleness::Schedule;
+use crate::tensor::Tensor;
+use crate::trainer::{Checkpoint, Trainer};
+
+pub(crate) struct SimEngine {
+    tr: Trainer,
+    staleness: Vec<usize>,
+}
+
+impl SimEngine {
+    pub(crate) fn new(
+        cfg: ExperimentConfig,
+        backend: Arc<dyn ComputeBackend>,
+        ds: Arc<Dataset>,
+    ) -> Result<SimEngine> {
+        let sched = Schedule::with_mode(cfg.k, cfg.mode);
+        let staleness = (0..cfg.k).map(|k| sched.staleness(k)).collect();
+        Ok(SimEngine {
+            tr: Trainer::new(cfg, backend, ds)?,
+            staleness,
+        })
+    }
+}
+
+impl Engine for SimEngine {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn step(&mut self) -> Result<IterEvent> {
+        let r = self.tr.step()?;
+        Ok(IterEvent {
+            t: r.t,
+            lr: r.lr,
+            train_loss: r.train_loss,
+            eval_loss: r.eval_loss,
+            eval_acc: r.eval_acc,
+            delta: r.delta,
+            sim_time_s: r.sim_time_s,
+            staleness: self.staleness.clone(),
+        })
+    }
+
+    fn iterations_done(&self) -> usize {
+        self.tr.iterations_done()
+    }
+
+    fn checkpoint(&mut self) -> Checkpoint {
+        self.tr.checkpoint()
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.tr.restore(ck)
+    }
+
+    fn final_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        self.tr.groups().iter().map(|g| g.all_params()).collect()
+    }
+
+    fn consensus_delta(&self) -> f64 {
+        self.tr.consensus_delta()
+    }
+
+    fn set_iter_time_s(&mut self, iter_time_s: f64) {
+        self.tr.iter_time_s = iter_time_s;
+    }
+}

@@ -76,6 +76,18 @@ impl StashQueue {
     pub fn get(&self, batch_id: i64) -> Option<&Stash> {
         self.items.iter().find(|s| s.batch_id == batch_id)
     }
+
+    /// Clone the whole in-flight queue, oldest first (full-state
+    /// checkpoints).
+    pub fn snapshot(&self) -> Vec<Stash> {
+        self.items.iter().cloned().collect()
+    }
+
+    /// Replace the queue wholesale with a snapshot taken by
+    /// [`Self::snapshot`] (checkpoint restore; ids must be contiguous).
+    pub fn replace(&mut self, stashes: Vec<Stash>) {
+        self.items = stashes.into();
+    }
 }
 
 /// One-iteration-delayed mailbox keyed by batch id.
@@ -126,6 +138,35 @@ impl<T> Mailbox<T> {
 
     pub fn pending(&self) -> usize {
         self.staged.len() + self.visible.len()
+    }
+
+    /// Drop every pending message (checkpoint restore starts clean).
+    pub fn clear(&mut self) {
+        self.staged.clear();
+        self.visible.clear();
+    }
+
+    /// Clone the messages already visible to the next iteration, in batch-id
+    /// order (full-state checkpoints; at an iteration boundary `staged` is
+    /// always empty because `flip` just ran).
+    pub fn visible_snapshot(&self) -> Vec<(i64, T)>
+    where
+        T: Clone,
+    {
+        let mut v: Vec<(i64, T)> = self
+            .visible
+            .iter()
+            .map(|(id, msg)| (*id, msg.clone()))
+            .collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    /// Re-inject a message directly into the visible set (checkpoint
+    /// restore — the message was consumable at the snapshot boundary).
+    pub fn inject_visible(&mut self, batch_id: i64, msg: T) {
+        let prev = self.visible.insert(batch_id, msg);
+        assert!(prev.is_none(), "inject over pending message {batch_id}");
     }
 }
 

@@ -5,22 +5,67 @@
 //! major, W then b) — no serde/bincode offline, and the blob form keeps
 //! 100k-param checkpoints instant.
 //!
-//! Semantics: checkpoints capture the WEIGHTS at an iteration boundary.
-//! In-flight pipeline state (stashes/mailboxes) is deliberately not saved:
-//! on resume the pipeline refills, i.e. the first `warmup_iters()` updates
-//! after resume use zero gradients exactly like a fresh start (eq. (10)'s
-//! τ < 0 convention). This mirrors how production trainers restart
-//! pipelines and keeps checkpoints engine-portable.
+//! Semantics — two tiers:
+//!
+//! * **On disk** (`save`/`load`): the WEIGHTS at an iteration boundary.
+//!   In-flight pipeline state is deliberately not persisted: on resume the
+//!   pipeline refills, i.e. the first `warmup_iters()` updates after resume
+//!   use zero gradients exactly like a fresh start (eq. (10)'s τ < 0
+//!   convention). This mirrors how production trainers restart pipelines
+//!   and keeps the blob format engine-portable and version-stable.
+//! * **In memory** (`Engine::checkpoint` through the session API): the
+//!   checkpoint additionally carries a [`ResumeState`] — sampler stream
+//!   positions, optimizer velocity, in-flight stashes, and pending
+//!   inter-module messages — so a restored engine continues **bit-identical**
+//!   to the uninterrupted run (tests/integration_engines.rs). Both engines
+//!   produce and accept the same `ResumeState`, so an exact snapshot taken
+//!   on the sim engine resumes exactly on the threaded one and vice versa.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::nn::layer::LayerShape;
+use crate::pipeline::module_agent::ActMsg;
+use crate::staleness::Stash;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
 pub const CHECKPOINT_VERSION: usize = 1;
+
+/// Exact in-flight state of one pipeline module (full-resume checkpoints).
+#[derive(Debug, Clone, Default)]
+pub struct ModuleResume {
+    /// optimizer velocity buffers (empty = not yet allocated / plain SGD)
+    pub velocity: Vec<(Tensor, Tensor)>,
+    /// in-flight forward stashes, oldest first
+    pub stashes: Vec<Stash>,
+    /// activation message pending delivery TO this module (batch id, msg) —
+    /// sim: the visible mailbox entry; threaded: the buffered channel message
+    pub act_in: Option<(i64, ActMsg)>,
+    /// error-gradient message pending delivery TO this module
+    pub grad_in: Option<(i64, Tensor)>,
+}
+
+/// Exact in-flight state of one data-group.
+#[derive(Debug, Clone)]
+pub struct GroupResume {
+    /// mini-batch sampler RNG position (state word, stream increment)
+    pub sampler_rng: (u64, u64),
+    /// per-module transient state, module order
+    pub modules: Vec<ModuleResume>,
+}
+
+/// Everything beyond the weights that an engine needs to continue a run
+/// bit-identically: the iteration counters plus per-group transient state.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// engine-relative iteration counter at the snapshot (batch-id clock)
+    pub t: i64,
+    /// iteration offset the engine itself was restarted from (0 normally)
+    pub t_offset: usize,
+    pub groups: Vec<GroupResume>,
+}
 
 /// A saved training state.
 #[derive(Debug, Clone)]
@@ -30,6 +75,9 @@ pub struct Checkpoint {
     /// per-group, per-layer (W, b)
     pub groups: Vec<Vec<(Tensor, Tensor)>>,
     pub layers: Vec<LayerShape>,
+    /// exact-resume payload; present on in-memory engine checkpoints, `None`
+    /// after a disk round-trip (the blob format stays weights-only)
+    pub resume: Option<ResumeState>,
 }
 
 impl Checkpoint {
@@ -42,7 +90,14 @@ impl Checkpoint {
             iteration,
             groups,
             layers,
+            resume: None,
         }
+    }
+
+    /// Attach an exact-resume payload (engine checkpoints).
+    pub fn with_resume(mut self, resume: ResumeState) -> Checkpoint {
+        self.resume = Some(resume);
+        self
     }
 
     fn paths(base: &Path) -> (PathBuf, PathBuf) {
@@ -137,6 +192,7 @@ impl Checkpoint {
             iteration,
             groups,
             layers,
+            resume: None,
         })
     }
 }

@@ -13,6 +13,8 @@ pub use checkpoint::Checkpoint;
 pub use lr::LrSchedule;
 pub use opt::OptimizerKind;
 
+use std::sync::Arc;
+
 use crate::config::ExperimentConfig;
 use crate::consensus::{consensus_error, GossipMixer};
 use crate::data::{shard_even, Dataset, MiniBatchSampler};
@@ -27,13 +29,17 @@ use crate::pipeline::sim::PipelineGroup;
 use crate::runtime::ComputeBackend;
 use crate::staleness::partition_layers;
 use crate::tensor::Tensor;
+use crate::trainer::checkpoint::ResumeState;
 use crate::util::rng::Pcg32;
 
 /// A ready-to-run experiment (sim engine).
-pub struct Trainer<'a> {
+///
+/// Construction is crate-private: external code drives training through
+/// [`crate::session::Session`], the one public entry point for both engines.
+pub struct Trainer {
     pub cfg: ExperimentConfig,
-    backend: &'a dyn ComputeBackend,
-    ds: &'a Dataset,
+    backend: Arc<dyn ComputeBackend>,
+    ds: Arc<Dataset>,
     groups: Vec<PipelineGroup>,
     mixer: Option<GossipMixer>,
     pub p_matrix: Option<Mat>,
@@ -47,29 +53,31 @@ pub struct Trainer<'a> {
     recorder: Recorder,
 }
 
-impl<'a> Trainer<'a> {
+impl Trainer {
     /// Build groups, shards, samplers, and the gossip mixer.
     ///
     /// All S groups start from IDENTICAL weights (the common choice; the
     /// consensus analysis then has δ(0) = 0).
-    pub fn new(
+    pub(crate) fn new(
         cfg: ExperimentConfig,
-        backend: &'a dyn ComputeBackend,
-        ds: &'a Dataset,
-    ) -> Result<Trainer<'a>> {
+        backend: Arc<dyn ComputeBackend>,
+        ds: Arc<Dataset>,
+    ) -> Result<Trainer> {
         cfg.validate()?;
         let layers = cfg.model.layers();
-        assert_eq!(
-            backend.layers(),
-            &layers[..],
-            "backend layer stack differs from config model"
-        );
+        if backend.layers() != &layers[..] {
+            return Err(crate::error::Error::Config(format!(
+                "backend layer stack {:?} differs from config model {:?}",
+                backend.layers(),
+                layers
+            )));
+        }
 
         let mut root_rng = Pcg32::new(cfg.seed);
         let init = init_params(&mut root_rng.fork(0x1217), &layers);
         let bounds = partition_layers(layers.len(), cfg.k);
 
-        let shards = shard_even(ds, cfg.s, cfg.seed ^ 0xDA7A)?;
+        let shards = shard_even(&ds, cfg.s, cfg.seed ^ 0xDA7A)?;
         let mut groups = Vec::with_capacity(cfg.s);
         for (s, shard) in shards.into_iter().enumerate() {
             let modules: Vec<ModuleAgent> = bounds
@@ -119,19 +127,36 @@ impl<'a> Trainer<'a> {
         &self.groups
     }
 
-    /// Snapshot the current weights + absolute iteration count.
+    /// Snapshot the current weights + absolute iteration count, with the
+    /// exact-resume payload attached (sampler positions, velocity, in-flight
+    /// pipeline state). `save` persists only the weights-only core.
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint::new(
             self.t_offset + self.t as usize,
             self.groups.iter().map(|g| g.all_params()).collect(),
             self.layers.clone(),
         )
+        .with_resume(self.resume_state())
     }
 
-    /// Restore weights from a checkpoint and continue training from its
-    /// iteration (LR schedule resumes at the right position). The pipeline
-    /// refills: the first `warmup_iters()` post-restore updates use zero
-    /// gradients, exactly like a fresh start (eq. (10)'s τ < 0 convention).
+    fn resume_state(&self) -> ResumeState {
+        ResumeState {
+            t: self.t,
+            t_offset: self.t_offset,
+            groups: self.groups.iter().map(|g| g.resume_state()).collect(),
+        }
+    }
+
+    /// Restore from a checkpoint and continue training from its iteration
+    /// (LR schedule resumes at the right position).
+    ///
+    /// With an exact-resume payload (`ck.resume`, present on in-memory
+    /// engine checkpoints) the continuation is bit-identical to the
+    /// uninterrupted run. Weights-only checkpoints (disk round-trips) fall
+    /// back to refill semantics: transient state is dropped, samplers
+    /// restart, and the first `warmup_iters()` post-restore updates use
+    /// zero gradients, exactly like a fresh start (eq. (10)'s τ < 0
+    /// convention).
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         if ck.groups.len() != self.groups.len() {
             return Err(crate::error::Error::Config(format!(
@@ -154,8 +179,31 @@ impl<'a> Trainer<'a> {
                 }
             }
         }
-        self.t_offset = ck.iteration;
-        self.t = 0;
+        match &ck.resume {
+            Some(rs) => {
+                if rs.groups.len() != self.groups.len() {
+                    return Err(crate::error::Error::Config(format!(
+                        "resume state has {} groups, trainer has {}",
+                        rs.groups.len(),
+                        self.groups.len()
+                    )));
+                }
+                self.t = rs.t;
+                self.t_offset = rs.t_offset;
+                for (group, gr) in self.groups.iter_mut().zip(&rs.groups) {
+                    group.restore_resume(gr);
+                }
+            }
+            None => {
+                self.t = 0;
+                self.t_offset = ck.iteration;
+                let seed = self.cfg.seed;
+                for (s, group) in self.groups.iter_mut().enumerate() {
+                    group.clear_transient();
+                    group.reset_sampler(seed ^ (0xBA7C << 8) ^ s as u64);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -193,8 +241,10 @@ impl<'a> Trainer<'a> {
         let eta = self.cfg.lr.at(self.t_offset + t as usize);
 
         let mut losses = Vec::new();
+        let backend = Arc::clone(&self.backend);
+        let ds = Arc::clone(&self.ds);
         for g in &mut self.groups {
-            let out = g.step(self.backend, self.ds, t, eta)?;
+            let out = g.step(backend.as_ref(), &ds, t, eta)?;
             if let Some(l) = out.loss {
                 losses.push(l as f64);
             }
@@ -235,6 +285,10 @@ impl<'a> Trainer<'a> {
         self.t += 1;
         let t_us = self.t_offset + t as usize;
 
+        // LOCKSTEP with ThreadedEngine::step's event assembly: the eval/δ
+        // cadence conditions, sim_time formula, and loss mean must stay
+        // identical or the engines' asserted bit-equality breaks
+        // (tests/integration_engines.rs).
         let mut record = Record {
             t: t_us,
             lr: eta,
@@ -259,9 +313,10 @@ impl<'a> Trainer<'a> {
         Ok(record)
     }
 
-    /// Run the configured number of iterations; returns the recorder.
+    /// Run up to the configured iteration budget (absolute — a restored
+    /// trainer only runs the remaining iterations); returns the recorder.
     pub fn run(&mut self) -> Result<&Recorder> {
-        for _ in 0..self.cfg.iters {
+        while self.iterations_done() < self.cfg.iters {
             self.step()?;
         }
         Ok(&self.recorder)
@@ -271,8 +326,9 @@ impl<'a> Trainer<'a> {
         &self.recorder
     }
 
+    /// Absolute iterations completed (restore offset included).
     pub fn iterations_done(&self) -> usize {
-        self.t as usize
+        self.t_offset + self.t as usize
     }
 }
 
@@ -306,10 +362,12 @@ mod tests {
     }
 
     fn run_cfg(cfg: ExperimentConfig) -> (RecorderSnapshot, f64) {
-        let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3)
-            .generate();
-        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-        let mut tr = Trainer::new(cfg, &backend, &ds).unwrap();
+        let ds = Arc::new(
+            SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3).generate(),
+        );
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
+        let mut tr = Trainer::new(cfg, backend, ds).unwrap();
         tr.run().unwrap();
         let delta = tr.consensus_delta();
         // smooth over windows: single-batch losses are noisy at batch 16
@@ -419,11 +477,12 @@ mod tests {
     #[test]
     fn checkpoint_restore_resumes_training() {
         let cfg = tiny_cfg(2, 2);
-        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
-        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
+        let ds = Arc::new(SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate());
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
 
         // train 50, checkpoint (to disk), restore into a FRESH trainer
-        let mut a = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+        let mut a = Trainer::new(cfg.clone(), backend.clone(), ds.clone()).unwrap();
         for _ in 0..50 {
             a.step().unwrap();
         }
@@ -433,7 +492,8 @@ mod tests {
 
         let ck = Checkpoint::load(&base).unwrap();
         assert_eq!(ck.iteration, 50);
-        let mut b = Trainer::new(cfg, &backend, &ds).unwrap();
+        assert!(ck.resume.is_none(), "disk checkpoints are weights-only");
+        let mut b = Trainer::new(cfg, backend, ds).unwrap();
         b.restore(&ck).unwrap();
 
         // restored weights match exactly
@@ -457,21 +517,62 @@ mod tests {
     #[test]
     fn restore_rejects_mismatched_shapes() {
         let cfg = tiny_cfg(2, 2);
-        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
-        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-        let a = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+        let ds = Arc::new(SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate());
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
+        let a = Trainer::new(cfg.clone(), backend.clone(), ds.clone()).unwrap();
         let mut ck = a.checkpoint();
         ck.groups.pop(); // wrong group count
-        let mut b = Trainer::new(cfg, &backend, &ds).unwrap();
+        let mut b = Trainer::new(cfg, backend, ds).unwrap();
         assert!(b.restore(&ck).is_err());
+    }
+
+    #[test]
+    fn exact_restore_continues_bit_identically() {
+        // full-state (in-memory) checkpoints must resume the exact stream:
+        // interrupted-and-restored == uninterrupted, bit for bit
+        let mut cfg = tiny_cfg(2, 2);
+        cfg.iters = 40;
+        cfg.optimizer = crate::trainer::opt::OptimizerKind::Momentum { beta: 0.9 };
+        let ds = Arc::new(SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate());
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
+
+        let mut full = Trainer::new(cfg.clone(), backend.clone(), ds.clone()).unwrap();
+        full.run().unwrap();
+
+        let mut part = Trainer::new(cfg.clone(), backend.clone(), ds.clone()).unwrap();
+        for _ in 0..17 {
+            part.step().unwrap();
+        }
+        let ck = part.checkpoint();
+        assert!(ck.resume.is_some());
+        let mut resumed = Trainer::new(cfg, backend, ds).unwrap();
+        resumed.restore(&ck).unwrap();
+        resumed.run().unwrap();
+
+        for (a, b) in full.recorder().records[17..]
+            .iter()
+            .zip(&resumed.recorder().records)
+        {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.train_loss, b.train_loss, "t={}", a.t);
+        }
+        for (ga, gb) in full.groups().iter().zip(resumed.groups()) {
+            for ((w1, b1), (w2, b2)) in ga.all_params().iter().zip(gb.all_params().iter()) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
     }
 
     #[test]
     fn averaged_params_shape() {
         let cfg = tiny_cfg(3, 2);
-        let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate();
-        let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-        let tr = Trainer::new(cfg, &backend, &ds).unwrap();
+        let ds = Arc::new(SyntheticSpec::small(cfg.dataset_n, 12, 3, 3).generate());
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
+        let tr = Trainer::new(cfg, backend, ds).unwrap();
         let avg = tr.averaged_params();
         assert_eq!(avg.len(), 4);
         assert_eq!(avg[0].0.shape(), &[12, 10]);

@@ -116,6 +116,18 @@ impl ModuleOptimizer {
         }
     }
 
+    /// Clone the velocity buffers (full-state checkpoints). Empty while the
+    /// lazy allocation has not happened (or for stateless SGD).
+    pub fn velocity_snapshot(&self) -> Vec<(Tensor, Tensor)> {
+        self.velocity.clone()
+    }
+
+    /// Replace the velocity buffers wholesale (checkpoint restore; an empty
+    /// vec resets to the pre-first-step state).
+    pub fn set_velocity(&mut self, velocity: Vec<(Tensor, Tensor)>) {
+        self.velocity = velocity;
+    }
+
     fn ensure_velocity(&mut self, params: &[(Tensor, Tensor)]) {
         if self.velocity.len() != params.len() {
             self.velocity = params

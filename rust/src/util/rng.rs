@@ -39,6 +39,17 @@ impl Pcg32 {
         rng
     }
 
+    /// Raw generator position (state word, stream increment) — everything
+    /// needed to later resume the exact stream (full-state checkpoints).
+    pub fn raw_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact position saved by [`Self::raw_state`].
+    pub fn from_raw_state((state, inc): (u64, u64)) -> Pcg32 {
+        Pcg32 { state, inc }
+    }
+
     /// Derive an independent child stream (e.g. one per agent (s,k)).
     pub fn fork(&mut self, tag: u64) -> Pcg32 {
         let s = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);

@@ -1,14 +1,14 @@
 //! Algorithm-level integration tests: the distributed method's documented
 //! equivalences and the Section-4 convergence claims, checked empirically
-//! on the native backend.
+//! on the native backend through the unified `Session` API.
 
 use sgs::config::{ExperimentConfig, ModelShape};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::data::{shard_even, MiniBatchSampler};
 use sgs::graph::Topology;
 use sgs::nn::init::init_params;
-use sgs::runtime::NativeBackend;
-use sgs::trainer::{sgd::SgdBaseline, LrSchedule, Trainer};
+use sgs::session::Session;
+use sgs::trainer::{sgd::SgdBaseline, LrSchedule};
 use sgs::util::rng::Pcg32;
 
 fn base_cfg() -> ExperimentConfig {
@@ -34,33 +34,34 @@ fn base_cfg() -> ExperimentConfig {
 
 fn run(cfg: ExperimentConfig) -> (Vec<Option<f64>>, Vec<(usize, f64)>, f64) {
     let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 9).generate();
-    let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-    let mut tr = Trainer::new(cfg, &backend, &ds).unwrap();
-    tr.run().unwrap();
-    let losses = tr.recorder().records.iter().map(|r| r.train_loss).collect();
-    let deltas = tr
+    let mut session = Session::builder(cfg).dataset(ds).build().unwrap();
+    session.run().unwrap();
+    let losses = session.recorder().records.iter().map(|r| r.train_loss).collect();
+    let deltas = session
         .recorder()
         .records
         .iter()
         .filter_map(|r| r.delta.map(|d| (r.t, d)))
         .collect();
-    let final_delta = tr.consensus_delta();
+    let final_delta = session.consensus_delta();
     (losses, deltas, final_delta)
 }
 
 #[test]
 fn centralized_method_equals_plain_sgd_exactly() {
-    // (S=1, K=1) through the full coordinator == the independent SGD
+    // (S=1, K=1) through the full session API == the independent SGD
     // baseline with the same init + sampling stream.
     let mut cfg = base_cfg();
     cfg.s = 1;
     cfg.k = 1;
     cfg.iters = 25;
     let ds = SyntheticSpec::small(cfg.dataset_n, 12, 3, 9).generate();
-    let backend = NativeBackend::new(cfg.model.layers(), cfg.batch);
-    let mut tr = Trainer::new(cfg.clone(), &backend, &ds).unwrap();
+    let mut session = Session::builder(cfg.clone())
+        .dataset(ds.clone())
+        .build()
+        .unwrap();
 
-    // replicate the trainer's internal init/sampling streams
+    // replicate the engine's internal init/sampling streams
     let layers = cfg.model.layers();
     let mut root = Pcg32::new(cfg.seed);
     let params = init_params(&mut root.fork(0x1217), &layers);
@@ -69,11 +70,11 @@ fn centralized_method_equals_plain_sgd_exactly() {
     let mut sgd = SgdBaseline::new(layers, params, sampler);
 
     for _ in 0..cfg.iters {
-        let rec = tr.step().unwrap();
+        let ev = session.step().unwrap();
         let loss = sgd.step(&ds, 0.1);
-        assert!((rec.train_loss.unwrap() - loss as f64).abs() < 1e-6);
+        assert!((ev.train_loss.unwrap() - loss as f64).abs() < 1e-6);
     }
-    for (grp_p, sgd_p) in tr.groups()[0].all_params().iter().zip(&sgd.params) {
+    for (grp_p, sgd_p) in session.final_params()[0].iter().zip(&sgd.params) {
         assert!(grp_p.0.max_abs_diff(&sgd_p.0) < 1e-6);
         assert!(grp_p.1.max_abs_diff(&sgd_p.1) < 1e-6);
     }

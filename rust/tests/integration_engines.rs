@@ -1,0 +1,200 @@
+//! Engine-equivalence integration tests through the unified `Session` API:
+//! the paper's central claim — the decoupled multi-agent (threaded)
+//! deployment computes the SAME iterates as the lock-step sim reference —
+//! plus exact checkpoint/resume on both engines, including cross-engine
+//! snapshot portability.
+
+use std::sync::Arc;
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::data::synthetic::SyntheticSpec;
+use sgs::data::Dataset;
+use sgs::graph::Topology;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::{EngineKind, IterEvent, Session};
+use sgs::trainer::LrSchedule;
+
+fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "engines-test".into(),
+        s,
+        k,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+        batch: 8,
+        iters,
+        lr: LrSchedule::Const(0.2),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 11,
+        dataset_n: 240,
+        delta_every: 4,
+        eval_every: 8,
+    }
+}
+
+fn shared(c: &ExperimentConfig) -> (Arc<dyn ComputeBackend>, Arc<Dataset>) {
+    let ds = Arc::new(
+        SyntheticSpec::small(c.dataset_n, c.model.d_in, c.model.classes, 3).generate(),
+    );
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(c.model.layers(), c.batch));
+    (backend, ds)
+}
+
+fn session(c: &ExperimentConfig, kind: EngineKind) -> Session {
+    let (backend, ds) = shared(c);
+    Session::builder(c.clone())
+        .with_backend(backend)
+        .dataset(ds)
+        .engine(kind)
+        .build()
+        .unwrap()
+}
+
+fn collect_events(mut s: Session) -> (Vec<IterEvent>, Session) {
+    let mut events = Vec::new();
+    while s.iterations_done() < s.cfg().iters {
+        events.push(s.step().unwrap());
+    }
+    (events, s)
+}
+
+fn assert_events_eq(a: &IterEvent, b: &IterEvent) {
+    assert_eq!(a.t, b.t);
+    assert_eq!(a.lr, b.lr);
+    assert_eq!(a.train_loss, b.train_loss, "t={}", a.t);
+    assert_eq!(a.delta, b.delta, "t={}", a.t);
+    assert_eq!(a.eval_loss, b.eval_loss, "t={}", a.t);
+    assert_eq!(a.eval_acc, b.eval_acc, "t={}", a.t);
+    assert_eq!(a.staleness, b.staleness);
+}
+
+fn assert_params_eq(a: &[Vec<(sgs::tensor::Tensor, sgs::tensor::Tensor)>],
+                    b: &[Vec<(sgs::tensor::Tensor, sgs::tensor::Tensor)>]) {
+    assert_eq!(a.len(), b.len());
+    for (ga, gb) in a.iter().zip(b.iter()) {
+        for ((w1, b1), (w2, b2)) in ga.iter().zip(gb.iter()) {
+            assert_eq!(w1, w2);
+            assert_eq!(b1, b2);
+        }
+    }
+}
+
+#[test]
+fn sim_and_threaded_are_bit_identical_over_the_sk_grid() {
+    // s ∈ {1,2} × k ∈ {1,2}: per-iteration losses (and the δ/eval cadence
+    // observations) must agree bit for bit through the unified API
+    for s in [1usize, 2] {
+        for k in [1usize, 2] {
+            let c = cfg(s, k, 14);
+            let (sim_events, sim) = collect_events(session(&c, EngineKind::Sim));
+            let (thr_events, thr) = collect_events(session(&c, EngineKind::Threaded));
+            assert_eq!(sim_events.len(), thr_events.len());
+            for (a, b) in sim_events.iter().zip(&thr_events) {
+                assert_events_eq(a, b);
+            }
+            assert_params_eq(&sim.final_params(), &thr.final_params());
+            assert_eq!(sim.consensus_delta(), thr.consensus_delta(), "S={s} K={k}");
+        }
+    }
+}
+
+#[test]
+fn engines_match_with_momentum_and_multi_round_gossip() {
+    let mut c = cfg(2, 2, 10);
+    c.gossip_rounds = 2;
+    c.optimizer = sgs::trainer::OptimizerKind::Momentum { beta: 0.9 };
+    let (sim_events, sim) = collect_events(session(&c, EngineKind::Sim));
+    let (thr_events, thr) = collect_events(session(&c, EngineKind::Threaded));
+    for (a, b) in sim_events.iter().zip(&thr_events) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&sim.final_params(), &thr.final_params());
+}
+
+#[test]
+fn resume_equivalence_on_both_engines() {
+    // restore at iter t, run to T: bit-identical to the uninterrupted run
+    // (full-state checkpoints carry sampler/velocity/in-flight state)
+    for kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let mut c = cfg(2, 2, 20);
+        c.optimizer = sgs::trainer::OptimizerKind::Momentum { beta: 0.9 };
+
+        let (full_events, full) = collect_events(session(&c, kind));
+
+        let mut part = session(&c, kind);
+        for _ in 0..9 {
+            part.step().unwrap();
+        }
+        let ck = part.checkpoint();
+        assert!(ck.resume.is_some(), "engine checkpoints carry resume state");
+        assert_eq!(ck.iteration, 9);
+
+        let mut resumed = session(&c, kind);
+        resumed.restore(&ck).unwrap();
+        assert_eq!(resumed.iterations_done(), 9);
+        let (tail_events, resumed) = collect_events(resumed);
+        assert_eq!(tail_events.len(), 11);
+        for (a, b) in full_events[9..].iter().zip(&tail_events) {
+            assert_events_eq(a, b);
+        }
+        assert_params_eq(&full.final_params(), &resumed.final_params());
+    }
+}
+
+#[test]
+fn snapshots_are_portable_across_engines() {
+    // checkpoint taken on the sim engine resumes exactly on the threaded
+    // engine (and vice versa): ResumeState is engine-agnostic
+    let c = cfg(2, 2, 18);
+    let (full_events, _) = collect_events(session(&c, EngineKind::Sim));
+
+    for (src, dst) in [
+        (EngineKind::Sim, EngineKind::Threaded),
+        (EngineKind::Threaded, EngineKind::Sim),
+    ] {
+        let mut part = session(&c, src);
+        for _ in 0..7 {
+            part.step().unwrap();
+        }
+        let ck = part.checkpoint();
+
+        let mut resumed = session(&c, dst);
+        resumed.restore(&ck).unwrap();
+        let (tail_events, _) = collect_events(resumed);
+        for (a, b) in full_events[7..].iter().zip(&tail_events) {
+            assert_events_eq(a, b);
+        }
+    }
+}
+
+#[test]
+fn weights_only_restore_refills_on_both_engines() {
+    // disk-shape checkpoints (no resume payload) fall back to refill
+    // semantics identically on both engines
+    let c = cfg(2, 2, 12);
+    let mut outs = Vec::new();
+    for kind in [EngineKind::Sim, EngineKind::Threaded] {
+        let mut part = session(&c, kind);
+        for _ in 0..6 {
+            part.step().unwrap();
+        }
+        let mut ck = part.checkpoint();
+        ck.resume = None; // simulate a disk round-trip
+        let mut resumed = session(&c, kind);
+        resumed.restore(&ck).unwrap();
+        let ev = resumed.step().unwrap();
+        assert_eq!(ev.t, 6);
+        assert!(ev.train_loss.is_none(), "pipeline should be refilling");
+        let (events, s) = collect_events(resumed);
+        outs.push((events, s.final_params()));
+    }
+    // both engines walk the same refill trajectory
+    for (a, b) in outs[0].0.iter().zip(&outs[1].0) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&outs[0].1, &outs[1].1);
+}

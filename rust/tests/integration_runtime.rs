@@ -2,7 +2,10 @@
 //! must agree with the pure-Rust oracle on every layer, the loss head, and
 //! the fused eval artifact.
 //!
-//! Requires `make artifacts` (skips with a notice otherwise).
+//! Requires `make artifacts` (skips with a notice otherwise) and the `xla`
+//! cargo feature (on by default; absent under --no-default-features).
+
+#![cfg(feature = "xla")]
 
 use sgs::nn;
 use sgs::runtime::{ComputeBackend, Manifest, NativeBackend, XlaBackend};
@@ -155,15 +158,25 @@ fn xla_training_matches_native_training() {
         delta_every: 0,
         eval_every: 0,
     };
-    let ds = sgs::coordinator::build_dataset(&cfg);
+    let ds = std::sync::Arc::new(sgs::coordinator::build_dataset(&cfg));
 
-    let mut t_xla = sgs::trainer::Trainer::new(cfg.clone(), &xla, &ds).unwrap();
+    let xla: std::sync::Arc<dyn ComputeBackend> = std::sync::Arc::new(xla);
+    let native: std::sync::Arc<dyn ComputeBackend> = std::sync::Arc::new(native);
+    let mut t_xla = sgs::session::Session::builder(cfg.clone())
+        .with_backend(xla)
+        .dataset(ds.clone())
+        .build()
+        .unwrap();
     t_xla.run().unwrap();
-    let mut t_nat = sgs::trainer::Trainer::new(cfg, &native, &ds).unwrap();
+    let mut t_nat = sgs::session::Session::builder(cfg)
+        .with_backend(native)
+        .dataset(ds)
+        .build()
+        .unwrap();
     t_nat.run().unwrap();
 
-    for (gx, gn) in t_xla.groups().iter().zip(t_nat.groups()) {
-        for ((wx, bx), (wn, bn)) in gx.all_params().iter().zip(gn.all_params().iter()) {
+    for (gx, gn) in t_xla.final_params().iter().zip(t_nat.final_params().iter()) {
+        for ((wx, bx), (wn, bn)) in gx.iter().zip(gn.iter()) {
             assert!(wx.max_abs_diff(wn) < 5e-3, "weights diverged");
             assert!(bx.max_abs_diff(bn) < 5e-3, "biases diverged");
         }
