@@ -100,6 +100,7 @@ fn main() {
         iters: 10_000, // bounded by bench samples below, not by this
         lr: LrSchedule::Const(0.1),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 3,
         dataset_n: 6000,

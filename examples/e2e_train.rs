@@ -58,6 +58,7 @@ fn main() -> Result<(), sgs::Error> {
         iters,
         lr: LrSchedule::strategy_2(iters),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 2026,
         dataset_n: 50_000,

@@ -29,6 +29,7 @@ fn main() -> Result<(), sgs::Error> {
         iters: 800,
         lr: LrSchedule::strategy_1(),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 7,
         dataset_n: 8000,

@@ -28,6 +28,7 @@ fn main() -> Result<(), sgs::Error> {
         iters: 500,
         lr: LrSchedule::strategy_1(),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 42,
         dataset_n: 4000,

@@ -30,6 +30,7 @@ fn main() -> Result<(), sgs::Error> {
         iters: 600,
         lr: LrSchedule::Const(0.1),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 11,
         dataset_n: 8000,

@@ -26,6 +26,7 @@ fn main() -> Result<(), sgs::Error> {
         iters: 400,
         lr: LrSchedule::Const(0.1),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 3,
         dataset_n: 12_000,

@@ -30,6 +30,7 @@ COMMANDS
              --alpha --batch --seed --backend native|xla --artifacts DIR
              --engine sim|threaded --model tiny|small|paper
              --opt sgd|momentum:B|nesterov:B --mode fd|dbp
+             --compensate none|dc:LAMBDA|accum:N
              --out CSV --events-out JSONL --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   describe   print grid + spectral report  (--s --k --topology --alpha)
@@ -76,6 +77,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(opt) = args.get("opt") {
         cfg.optimizer = crate::trainer::OptimizerKind::parse(opt)?;
+    }
+    if let Some(comp) = args.get("compensate") {
+        cfg.compensate = crate::compensate::CompensatorKind::parse(comp)?;
     }
     if let Some(mode) = args.get("mode") {
         cfg.mode = crate::staleness::PipelineMode::parse(mode)?;
@@ -345,6 +349,37 @@ mod tests {
             assert!(j.get("staleness").unwrap().as_arr().is_ok());
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_with_compensation_strategies() {
+        for comp in ["dc:0.04", "accum:2"] {
+            dispatch(&argv(&format!(
+                "train --model tiny --s 2 --k 2 --iters 8 --batch 8 --dataset-n 200 \
+                 --compensate {comp} --lr const:0.1"
+            )))
+            .unwrap();
+        }
+        // bad strategy strings surface as CLI config errors
+        assert!(dispatch(&argv(
+            "train --model tiny --s 1 --k 1 --iters 2 --batch 8 --dataset-n 100 \
+             --compensate warp:9"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn config_from_args_parses_compensate() {
+        let a = Args::parse(&argv(
+            "train --s 2 --k 2 --iters 10 --batch 8 --dataset-n 200 --model tiny \
+             --compensate accum:3",
+        ))
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(
+            cfg.compensate,
+            crate::compensate::CompensatorKind::Accumulate { n: 3 }
+        );
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! ADL-style gradient accumulation (Zhuang et al., "Accumulated Decoupled
+//! Learning"): average n micro-step gradients before applying the stale
+//! update.
+//!
+//! Each scheduled backward deposits its gradient into a running sum; every
+//! n-th deposit emits the mean and the module takes one optimizer step.
+//! The (n−1) intermediate iterations [`Compensated::Hold`] the update —
+//! weights stay fixed, so the n gradients in a window are all evaluated
+//! against the same update epoch, shrinking stale-gradient variance at the
+//! cost of n× fewer (but n×-larger-batch) updates.
+//!
+//! n = 1 degenerates to the raw stale update (the `None` baseline) —
+//! asserted bit-exactly in the tests below. The running sum and counter
+//! are checkpointed via [`CompensatorState`] so exact resume stays
+//! bit-identical mid-window.
+
+use crate::compensate::{Compensated, Compensator, CompensatorState};
+use crate::tensor::Tensor;
+
+/// Per-module accumulation strategy: running (W, b) sums + a micro-step
+/// counter.
+#[derive(Debug, Clone)]
+pub struct Accumulate {
+    n: usize,
+    sum: Vec<(Tensor, Tensor)>,
+    count: usize,
+}
+
+impl Accumulate {
+    pub fn new(n: usize) -> Accumulate {
+        assert!(n >= 1, "accum n must be >= 1");
+        Accumulate {
+            n,
+            sum: Vec::new(),
+            count: 0,
+        }
+    }
+}
+
+impl Compensator for Accumulate {
+    fn compensate(
+        &mut self,
+        raw: Vec<(Tensor, Tensor)>,
+        _now: &[(Tensor, Tensor)],
+        _snapshot: &[(Tensor, Tensor)],
+    ) -> Compensated {
+        if self.sum.len() != raw.len() {
+            self.sum = raw
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
+                .collect();
+            self.count = 0;
+        }
+        for ((s_w, s_b), (g_w, g_b)) in self.sum.iter_mut().zip(&raw) {
+            s_w.axpy(1.0, g_w);
+            s_b.axpy(1.0, g_b);
+        }
+        self.count += 1;
+        if self.count < self.n {
+            return Compensated::Hold;
+        }
+        // emit: scale the window sum to its mean and measure how far the
+        // applied gradient moved from this iteration's raw one — a single
+        // pass over the buffers, which become the returned gradients
+        let inv = 1.0 / self.n as f32;
+        let mut grads = std::mem::take(&mut self.sum);
+        let mut sq = 0.0f64;
+        for ((m_w, m_b), (g_w, g_b)) in grads.iter_mut().zip(&raw) {
+            for (m, &g) in m_w.data_mut().iter_mut().zip(g_w.data()) {
+                *m *= inv;
+                let d = (*m - g) as f64;
+                sq += d * d;
+            }
+            for (m, &g) in m_b.data_mut().iter_mut().zip(g_b.data()) {
+                *m *= inv;
+                let d = (*m - g) as f64;
+                sq += d * d;
+            }
+        }
+        self.count = 0;
+        Compensated::Apply {
+            grads,
+            correction_norm: sq.sqrt(),
+        }
+    }
+
+    fn state(&self) -> CompensatorState {
+        CompensatorState {
+            accum: self.sum.clone(),
+            count: self.count,
+        }
+    }
+
+    fn set_state(&mut self, state: CompensatorState) {
+        self.sum = state.accum;
+        self.count = state.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compensate::test_grads;
+
+    #[test]
+    fn n1_is_bit_identical_to_none() {
+        let g = test_grads(&[0.3, -1.2]);
+        let w = test_grads(&[0.0, 0.0]);
+        let mut a = Accumulate::new(1);
+        for _ in 0..3 {
+            match a.compensate(g.clone(), &w, &w) {
+                Compensated::Apply {
+                    grads,
+                    correction_norm,
+                } => {
+                    assert_eq!(correction_norm, 0.0);
+                    for ((aw, ab), (bw, bb)) in grads.iter().zip(&g) {
+                        assert_eq!(aw, bw);
+                        assert_eq!(ab, bb);
+                    }
+                }
+                other => panic!("expected Apply, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn n2_holds_then_emits_the_mean() {
+        let w = test_grads(&[0.0]);
+        let g1 = test_grads(&[1.0]);
+        let g2 = test_grads(&[3.0]);
+        let mut a = Accumulate::new(2);
+        assert!(matches!(a.compensate(g1.clone(), &w, &w), Compensated::Hold));
+        match a.compensate(g2, &w, &w) {
+            Compensated::Apply { grads, .. } => {
+                // mean of W = [1, −1] and [3, −3]
+                assert_eq!(grads[0].0.data(), &[2.0, -2.0]);
+                assert_eq!(grads[0].1.data(), &[1.0]);
+            }
+            other => panic!("expected Apply, got {other:?}"),
+        }
+        // window resets: next deposit holds again
+        assert!(matches!(a.compensate(g1, &w, &w), Compensated::Hold));
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_mid_window() {
+        let w = test_grads(&[0.0]);
+        let g1 = test_grads(&[1.0]);
+        let g2 = test_grads(&[5.0]);
+        let mut a = Accumulate::new(2);
+        assert!(matches!(a.compensate(g1, &w, &w), Compensated::Hold));
+
+        let saved = a.state();
+        assert_eq!(saved.count, 1);
+        let mut b = Accumulate::new(2);
+        b.set_state(saved);
+
+        let (ga, gb) = match (
+            a.compensate(g2.clone(), &w, &w),
+            b.compensate(g2, &w, &w),
+        ) {
+            (Compensated::Apply { grads: ga, .. }, Compensated::Apply { grads: gb, .. }) => {
+                (ga, gb)
+            }
+            other => panic!("expected Apply pair, got {other:?}"),
+        };
+        assert_eq!(ga[0].0, gb[0].0);
+        assert_eq!(ga[0].1, gb[0].1);
+    }
+
+    #[test]
+    fn empty_state_resets_to_fresh() {
+        let w = test_grads(&[0.0]);
+        let g = test_grads(&[1.0]);
+        let mut a = Accumulate::new(3);
+        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
+        a.set_state(CompensatorState::default());
+        // counter back to zero: two more holds before an emit
+        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
+        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
+        assert!(matches!(a.compensate(g, &w, &w), Compensated::Apply { .. }));
+    }
+}

@@ -1,0 +1,139 @@
+//! DC-S3GD-style delay compensation (Rigazzi et al. 2019, after Zheng et
+//! al.'s DC-ASGD): first-order Taylor correction of the stale gradient.
+//!
+//! The stale gradient g was evaluated at the forward-time snapshot w_snap
+//! (eq. (10)); a fresh gradient at the current weights w_now would be
+//! approximately `g + H·(w_now − w_snap)`. The Hessian is approximated by
+//! its diagonal outer-product surrogate `λ·g⊙g`, giving the cheap
+//! element-wise update
+//!
+//! ```text
+//! g_eff = g + λ · g ⊙ g ⊙ (w_now − w_snap)
+//! ```
+//!
+//! applied in place on the owned gradient buffers — one pass, no copies.
+//! λ = 0 degenerates to the raw stale gradient (the `None` baseline) —
+//! asserted bit-exactly in the tests below.
+
+use crate::compensate::{Compensated, Compensator};
+use crate::tensor::Tensor;
+
+/// Per-module delay-compensation strategy. Stateless between iterations:
+/// the snapshot it corrects against rides in the stash, not here.
+#[derive(Debug, Clone, Copy)]
+pub struct DelayComp {
+    lambda: f64,
+}
+
+impl DelayComp {
+    pub fn new(lambda: f64) -> DelayComp {
+        DelayComp { lambda }
+    }
+}
+
+/// g += λ · g ⊙ g ⊙ (now − snap), element-wise in place on one tensor;
+/// returns the squared norm of the correction term added (accumulated
+/// here so the hot path walks the parameters exactly once).
+fn correct_in_place(g: &mut Tensor, now: &Tensor, snap: &Tensor, lambda: f32) -> f64 {
+    let (g, n, s) = (g.data_mut(), now.data(), snap.data());
+    debug_assert_eq!(g.len(), n.len());
+    debug_assert_eq!(n.len(), s.len());
+    let mut sq = 0.0f64;
+    for i in 0..g.len() {
+        let corr = lambda * g[i] * g[i] * (n[i] - s[i]);
+        g[i] += corr;
+        sq += corr as f64 * corr as f64;
+    }
+    sq
+}
+
+impl Compensator for DelayComp {
+    fn compensate(
+        &mut self,
+        mut raw: Vec<(Tensor, Tensor)>,
+        now: &[(Tensor, Tensor)],
+        snapshot: &[(Tensor, Tensor)],
+    ) -> Compensated {
+        debug_assert_eq!(raw.len(), now.len());
+        debug_assert_eq!(raw.len(), snapshot.len());
+        let lambda = self.lambda as f32;
+        let mut sq = 0.0f64;
+        for (i, (g_w, g_b)) in raw.iter_mut().enumerate() {
+            sq += correct_in_place(g_w, &now[i].0, &snapshot[i].0, lambda);
+            sq += correct_in_place(g_b, &now[i].1, &snapshot[i].1, lambda);
+        }
+        Compensated::Apply {
+            grads: raw,
+            correction_norm: sq.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compensate::test_grads;
+
+    fn apply(dc: &mut DelayComp, g: &[(Tensor, Tensor)], now: &[(Tensor, Tensor)],
+             snap: &[(Tensor, Tensor)]) -> (Vec<(Tensor, Tensor)>, f64) {
+        match dc.compensate(g.to_vec(), now, snap) {
+            Compensated::Apply {
+                grads,
+                correction_norm,
+            } => (grads, correction_norm),
+            other => panic!("expected Apply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_bit_identical_to_none() {
+        let g = test_grads(&[0.3, -1.2]);
+        let now = test_grads(&[1.0, 2.0]);
+        let snap = test_grads(&[0.5, 1.5]);
+        let mut dc = DelayComp::new(0.0);
+        let (grads, norm) = apply(&mut dc, &g, &now, &snap);
+        assert_eq!(norm, 0.0);
+        for ((aw, ab), (bw, bb)) in grads.iter().zip(&g) {
+            assert_eq!(aw, bw);
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn no_drift_means_no_correction() {
+        // w_now == w_snap ⇒ the correction term vanishes for any λ
+        let g = test_grads(&[0.7]);
+        let w = test_grads(&[2.0]);
+        let mut dc = DelayComp::new(3.0);
+        let (grads, norm) = apply(&mut dc, &g, &w, &w);
+        assert_eq!(norm, 0.0);
+        assert_eq!(&grads[0].0, &g[0].0);
+    }
+
+    #[test]
+    fn correction_matches_manual_formula() {
+        let g = test_grads(&[2.0]); // W = [2, -2], b = [1]
+        let now = test_grads(&[1.0]); // W = [1, -1], b = [0.5]
+        let snap = test_grads(&[0.0]); // zeros
+        let mut dc = DelayComp::new(0.5);
+        let (grads, norm) = apply(&mut dc, &g, &now, &snap);
+        // W[0]: 2 + 0.5·2·2·(1−0) = 4; W[1]: −2 + 0.5·4·(−1) = −4
+        assert_eq!(grads[0].0.data(), &[4.0, -4.0]);
+        // b[0]: 1 + 0.5·1·1·0.5 = 1.25
+        assert_eq!(grads[0].1.data(), &[1.25]);
+        // ‖correction‖ = sqrt(2² + 2² + 0.25²)
+        assert!((norm - (4.0 + 4.0 + 0.0625f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn larger_staleness_drift_grows_the_correction() {
+        let g = test_grads(&[1.0]);
+        let snap = test_grads(&[0.0]);
+        let near = test_grads(&[0.1]);
+        let far = test_grads(&[1.0]);
+        let mut dc = DelayComp::new(1.0);
+        let (_, n_near) = apply(&mut dc, &g, &near, &snap);
+        let (_, n_far) = apply(&mut dc, &g, &far, &snap);
+        assert!(n_far > n_near, "{n_far} <= {n_near}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Staleness compensation: pluggable gradient-correction strategies.
+//!
+//! The paper applies every stale gradient raw (eq. (13a)), no matter how
+//! far behind the forward-time snapshot is — staleness grows as 2(K−1−k),
+//! which is exactly the regime where deeper pipeline splits degrade
+//! convergence. This subsystem inserts a correction step **between**
+//! gradient computation and the [`crate::trainer::OptimizerKind`] update,
+//! shared by both engines (sim and threaded stay bit-identical under every
+//! strategy — tests/integration_engines.rs):
+//!
+//! * [`CompensatorKind::None`] — the paper baseline: apply the raw stale
+//!   gradient.
+//! * [`CompensatorKind::DelayComp`] — DC-S3GD-style first-order delay
+//!   compensation (Rigazzi et al., "DC-S3GD: Delay-Compensated Stale-
+//!   Synchronous SGD", after Zheng et al.'s DC-ASGD): approximate the fresh
+//!   gradient with `g + λ·g⊙g⊙(w_now − w_snapshot)`, using the diagonal
+//!   outer-product surrogate for the Hessian in the Taylor expansion around
+//!   the forward-time weight snapshot already carried in
+//!   [`crate::staleness::Stash::params`].
+//! * [`CompensatorKind::Accumulate`] — ADL-style gradient accumulation
+//!   (Zhuang et al., "Accumulated Decoupled Learning"): average n
+//!   micro-step gradients and apply the stale update once per n
+//!   iterations, shrinking gradient variance under staleness.
+//!
+//! Every strategy owns **per-module state** (one [`Compensator`] box per
+//! [`crate::pipeline::module_agent::ModuleAgent`]), snapshotted into
+//! checkpoints as [`CompensatorState`] so exact resume stays bit-identical.
+//! The per-iteration correction magnitude is surfaced per module in
+//! [`crate::session::IterEvent::correction`].
+
+pub mod accumulate;
+pub mod delay;
+
+pub use accumulate::Accumulate;
+pub use delay::DelayComp;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Which gradient-correction strategy a run uses (config axis, CLI
+/// `--compensate`, sweep axis). Parse mirror of
+/// [`crate::trainer::OptimizerKind::parse`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompensatorKind {
+    /// Paper baseline: apply the raw stale gradient unchanged.
+    None,
+    /// DC-S3GD first-order correction `g + λ·g⊙g⊙(w_now − w_snapshot)`.
+    DelayComp { lambda: f64 },
+    /// ADL gradient accumulation: average `n` micro-steps, update once.
+    Accumulate { n: usize },
+}
+
+impl CompensatorKind {
+    /// Parse "none" | "dc:LAMBDA" | "accum:N" (case-insensitive,
+    /// whitespace-tolerant, like [`crate::session::EngineKind::parse`]).
+    pub fn parse(s: &str) -> Result<CompensatorKind> {
+        let norm = s.trim().to_ascii_lowercase();
+        let bad = || Error::Config(format!("bad compensator {s:?} (want none|dc:LAMBDA|accum:N)"));
+        if norm == "none" {
+            return Ok(CompensatorKind::None);
+        }
+        if let Some(v) = norm.strip_prefix("dc:") {
+            let lambda: f64 = v.parse().map_err(|_| bad())?;
+            let kind = CompensatorKind::DelayComp { lambda };
+            kind.validate()?;
+            return Ok(kind);
+        }
+        if let Some(v) = norm.strip_prefix("accum:") {
+            let n: usize = v.parse().map_err(|_| bad())?;
+            let kind = CompensatorKind::Accumulate { n };
+            kind.validate()?;
+            return Ok(kind);
+        }
+        Err(bad())
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            CompensatorKind::None => "none".into(),
+            CompensatorKind::DelayComp { lambda } => format!("dc:{lambda}"),
+            CompensatorKind::Accumulate { n } => format!("accum:{n}"),
+        }
+    }
+
+    /// Reject parameters no strategy can run with (directly-constructed
+    /// configs bypass `parse`, so `ExperimentConfig::validate` calls this).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            CompensatorKind::None => Ok(()),
+            CompensatorKind::DelayComp { lambda } => {
+                if lambda.is_finite() && lambda >= 0.0 {
+                    Ok(())
+                } else {
+                    Err(Error::Config(format!(
+                        "dc lambda must be finite and >= 0, got {lambda}"
+                    )))
+                }
+            }
+            CompensatorKind::Accumulate { n } => {
+                if n >= 1 {
+                    Ok(())
+                } else {
+                    Err(Error::Config("accum n must be >= 1".into()))
+                }
+            }
+        }
+    }
+
+    /// Instantiate the per-module strategy state.
+    pub fn build(&self) -> Box<dyn Compensator> {
+        match *self {
+            CompensatorKind::None => Box::new(NoCompensation),
+            CompensatorKind::DelayComp { lambda } => Box::new(DelayComp::new(lambda)),
+            CompensatorKind::Accumulate { n } => Box::new(Accumulate::new(n)),
+        }
+    }
+}
+
+/// What the strategy decided for this iteration's update.
+#[derive(Debug)]
+pub enum Compensated {
+    /// Take one optimizer step with these gradients (for the raw baseline
+    /// they are the unmodified input — no copy is made anywhere).
+    /// `correction_norm` is ‖g_eff − g_raw‖₂ over all of the module's
+    /// parameter tensors (0 when nothing was corrected).
+    Apply {
+        grads: Vec<(Tensor, Tensor)>,
+        correction_norm: f64,
+    },
+    /// Hold the update this iteration (mid-accumulation).
+    Hold,
+}
+
+/// Portable snapshot of a strategy's mutable state (full-resume
+/// checkpoints; both engines produce and accept the same shape).
+#[derive(Debug, Clone, Default)]
+pub struct CompensatorState {
+    /// accumulated gradient sums, per local layer (Accumulate)
+    pub accum: Vec<(Tensor, Tensor)>,
+    /// micro-steps accumulated so far (Accumulate)
+    pub count: usize,
+}
+
+/// One module's gradient-correction strategy. Called once per scheduled
+/// backward, between gradient computation and the optimizer step —
+/// identically ordered in both engines, which is what keeps sim ≡ threaded
+/// bit-identical under every strategy. Takes the raw gradients by value so
+/// strategies can correct in place or absorb them without copying.
+pub trait Compensator: Send {
+    /// Transform the raw stale gradient. `now` is the module's current
+    /// weights ŵ(t); `snapshot` is the forward-time weight snapshot the
+    /// gradient was evaluated at (eq. (10): w(τ+k−1), from the stash).
+    fn compensate(
+        &mut self,
+        raw: Vec<(Tensor, Tensor)>,
+        now: &[(Tensor, Tensor)],
+        snapshot: &[(Tensor, Tensor)],
+    ) -> Compensated;
+
+    /// Snapshot mutable state for full-resume checkpoints (stateless
+    /// strategies return the empty default).
+    fn state(&self) -> CompensatorState {
+        CompensatorState::default()
+    }
+
+    /// Restore state saved by [`Self::state`] (the empty default resets to
+    /// the pre-first-step state).
+    fn set_state(&mut self, _state: CompensatorState) {}
+}
+
+/// The paper baseline: pass the raw stale gradient through untouched.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoCompensation;
+
+impl Compensator for NoCompensation {
+    fn compensate(
+        &mut self,
+        raw: Vec<(Tensor, Tensor)>,
+        _now: &[(Tensor, Tensor)],
+        _snapshot: &[(Tensor, Tensor)],
+    ) -> Compensated {
+        Compensated::Apply {
+            grads: raw,
+            correction_norm: 0.0,
+        }
+    }
+}
+
+/// Group-mean of per-module correction norms: sum over groups in
+/// ascending-s order, then divide by S. Both engines reduce their
+/// per-group observations through this one function, so the
+/// [`crate::session::IterEvent::correction`] field stays bit-identical
+/// between sim and threaded by construction.
+pub fn group_mean_correction(k_modules: usize, per_group: &[Vec<f64>]) -> Vec<f64> {
+    let mut mean = vec![0.0f64; k_modules];
+    for group in per_group {
+        debug_assert_eq!(group.len(), k_modules);
+        for (k, c) in group.iter().enumerate() {
+            mean[k] += c;
+        }
+    }
+    let s = per_group.len().max(1) as f64;
+    for c in mean.iter_mut() {
+        *c /= s;
+    }
+    mean
+}
+
+#[cfg(test)]
+pub(crate) fn test_grads(vals: &[f32]) -> Vec<(Tensor, Tensor)> {
+    vals.iter()
+        .map(|&v| {
+            (
+                Tensor::from_vec(&[2], vec![v, -v]).unwrap(),
+                Tensor::from_vec(&[1], vec![v * 0.5]).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["none", "dc:0.04", "accum:2"] {
+            let k = CompensatorKind::parse(s).unwrap();
+            assert_eq!(CompensatorKind::parse(&k.describe()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn parse_is_lenient_about_case_and_whitespace() {
+        assert_eq!(CompensatorKind::parse(" None ").unwrap(), CompensatorKind::None);
+        assert_eq!(
+            CompensatorKind::parse("DC:0.04").unwrap(),
+            CompensatorKind::DelayComp { lambda: 0.04 }
+        );
+        assert_eq!(
+            CompensatorKind::parse(" Accum:3 ").unwrap(),
+            CompensatorKind::Accumulate { n: 3 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_parameters() {
+        assert!(CompensatorKind::parse("dc").is_err());
+        assert!(CompensatorKind::parse("dc:x").is_err());
+        assert!(CompensatorKind::parse("dc:-0.1").is_err());
+        assert!(CompensatorKind::parse("accum:0").is_err());
+        assert!(CompensatorKind::parse("accum:1.5").is_err());
+        assert!(CompensatorKind::parse("ema:0.9").is_err());
+    }
+
+    #[test]
+    fn validate_catches_directly_constructed_bad_kinds() {
+        assert!(CompensatorKind::DelayComp { lambda: f64::NAN }.validate().is_err());
+        assert!(CompensatorKind::Accumulate { n: 0 }.validate().is_err());
+        assert!(CompensatorKind::None.validate().is_ok());
+    }
+
+    #[test]
+    fn group_mean_is_elementwise_over_groups() {
+        let mean = group_mean_correction(2, &[vec![1.0, 0.0], vec![3.0, 2.0]]);
+        assert_eq!(mean, vec![2.0, 1.0]);
+        // no groups: zeros, not NaN
+        assert_eq!(group_mean_correction(2, &[]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn none_passes_raw_through_uncorrected() {
+        let g = test_grads(&[1.0, 2.0]);
+        let w = test_grads(&[0.0, 0.0]);
+        let mut c = CompensatorKind::None.build();
+        match c.compensate(g.clone(), &w, &w) {
+            Compensated::Apply {
+                grads,
+                correction_norm,
+            } => {
+                assert_eq!(correction_norm, 0.0);
+                for ((aw, ab), (bw, bb)) in grads.iter().zip(&g) {
+                    assert_eq!(aw, bw);
+                    assert_eq!(ab, bb);
+                }
+            }
+            other => panic!("expected Apply, got {other:?}"),
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! the (S, K) grid, graph topology, model geometry, data source, step-size
 //! strategy, and instrumentation cadence. JSON round-trip for the launcher.
 
+use crate::compensate::CompensatorKind;
 use crate::error::{Error, Result};
 use crate::graph::Topology;
 use crate::staleness::PipelineMode;
@@ -63,6 +64,9 @@ pub struct ExperimentConfig {
     pub lr: LrSchedule,
     /// stale-gradient update rule (paper: plain SGD; momentum = extension)
     pub optimizer: OptimizerKind,
+    /// staleness-compensation strategy applied between gradient computation
+    /// and the optimizer update (paper baseline: none)
+    pub compensate: CompensatorKind,
     /// fully decoupled (paper) vs backward-unlocked (Huo et al. baseline)
     pub mode: PipelineMode,
     pub seed: u64,
@@ -88,6 +92,7 @@ impl Default for ExperimentConfig {
             iters: 2000,
             lr: LrSchedule::strategy_1(),
             optimizer: OptimizerKind::Sgd,
+            compensate: CompensatorKind::None,
             mode: PipelineMode::FullyDecoupled,
             seed: 0,
             dataset_n: 50_000,
@@ -133,6 +138,7 @@ impl ExperimentConfig {
         if self.gossip_rounds == 0 {
             return Err(Error::Config("gossip_rounds must be >= 1".into()));
         }
+        self.compensate.validate()?;
         if self.dataset_n / self.s < self.batch {
             return Err(Error::Config(format!(
                 "shard size {} < batch {}",
@@ -157,6 +163,7 @@ impl ExperimentConfig {
             .set("iters", self.iters)
             .set("lr", self.lr.describe())
             .set("optimizer", self.optimizer.describe())
+            .set("compensate", self.compensate.describe())
             .set("mode", self.mode.describe())
             // string-encoded: u64 seeds above 2^53 don't survive f64 JSON numbers
             .set("seed", format!("{}", self.seed))
@@ -197,6 +204,11 @@ impl ExperimentConfig {
             optimizer: match j.opt("optimizer") {
                 Some(o) => OptimizerKind::parse(o.as_str()?)?,
                 None => OptimizerKind::Sgd,
+            },
+            // optional for older config files
+            compensate: match j.opt("compensate") {
+                Some(c) => CompensatorKind::parse(c.as_str()?)?,
+                None => CompensatorKind::None,
             },
             mode: match j.opt("mode") {
                 Some(m) => PipelineMode::parse(m.as_str()?)?,
@@ -239,12 +251,35 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.alpha = Some(0.2);
         cfg.lr = LrSchedule::strategy_2(1000);
+        cfg.compensate = CompensatorKind::DelayComp { lambda: 0.04 };
         let j = cfg.to_json();
         let back = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(back.s, cfg.s);
         assert_eq!(back.alpha, cfg.alpha);
         assert_eq!(back.lr, cfg.lr);
         assert_eq!(back.topology, cfg.topology);
+        assert_eq!(back.compensate, cfg.compensate);
+    }
+
+    #[test]
+    fn compensate_defaults_to_none_for_older_configs() {
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("compensate");
+        }
+        assert_eq!(
+            ExperimentConfig::from_json(&j).unwrap().compensate,
+            CompensatorKind::None
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_compensator_params() {
+        let mut c = ExperimentConfig::default();
+        c.compensate = CompensatorKind::Accumulate { n: 0 };
+        assert!(c.validate().is_err());
+        c.compensate = CompensatorKind::DelayComp { lambda: -1.0 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -5,6 +5,8 @@
 
 pub mod grid;
 pub mod run;
+pub mod sweep;
 
 pub use grid::{AgentGrid, AgentId};
 pub use run::{build_dataset, run_experiment, RunOutput};
+pub use sweep::{run_sweep, SweepPoint, SweepSpec};

@@ -75,6 +75,7 @@ mod tests {
             iters: 30,
             lr: LrSchedule::Const(0.2),
             optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            compensate: crate::compensate::CompensatorKind::None,
             mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 5,
             dataset_n: 200,

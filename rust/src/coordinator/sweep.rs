@@ -1,0 +1,204 @@
+//! Grid sweeps over the (S, K, compensation) axes — the coordinator-level
+//! ablation driver behind `benches/ablation_compensate.rs`.
+//!
+//! One backend and one dataset are built per sweep and shared across every
+//! point (the batch geometry is fixed by the base config), so a sweep
+//! costs what the runs cost, not what the wiring costs.
+
+use std::sync::Arc;
+
+use crate::compensate::CompensatorKind;
+use crate::config::ExperimentConfig;
+use crate::coordinator::build_dataset;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::session::{EngineKind, Session};
+
+/// What to sweep: the cartesian product of `s_values` × `k_values` ×
+/// `compensators` applied on top of `base`.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub base: ExperimentConfig,
+    pub s_values: Vec<usize>,
+    pub k_values: Vec<usize>,
+    /// gradient-correction strategies to ablate (the new axis)
+    pub compensators: Vec<CompensatorKind>,
+    pub engine: EngineKind,
+}
+
+impl SweepSpec {
+    /// Sweep only the compensation axis at the base config's (S, K).
+    pub fn compensation_only(
+        base: ExperimentConfig,
+        compensators: Vec<CompensatorKind>,
+    ) -> SweepSpec {
+        let (s, k) = (base.s, base.k);
+        SweepSpec {
+            base,
+            s_values: vec![s],
+            k_values: vec![k],
+            compensators,
+            engine: EngineKind::Sim,
+        }
+    }
+}
+
+/// One grid point's outcome.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub s: usize,
+    pub k: usize,
+    pub compensate: CompensatorKind,
+    /// smoothed final training loss (recorder summary)
+    pub final_train_loss: Option<f64>,
+    pub final_eval_loss: Option<f64>,
+    pub final_delta: f64,
+    pub gamma: f64,
+    /// mean over iterations of the per-iteration total correction norm
+    /// (sum over modules) — how much work the strategy actually did
+    pub mean_correction: f64,
+}
+
+/// Run every grid point; points that cannot be built (e.g. K exceeding the
+/// model's layer count) are skipped with a note on stderr rather than
+/// aborting the sweep.
+pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
+    let ds: Arc<Dataset> = Arc::new(build_dataset(&spec.base));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(
+        spec.base.model.layers(),
+        spec.base.batch,
+    ));
+
+    let mut points = Vec::new();
+    for &s in &spec.s_values {
+        for &k in &spec.k_values {
+            for &comp in &spec.compensators {
+                let mut cfg = spec.base.clone();
+                cfg.name = format!("sweep-s{s}-k{k}-{}", comp.describe());
+                cfg.s = s;
+                cfg.k = k;
+                cfg.compensate = comp;
+                if let Err(e) = cfg.validate() {
+                    eprintln!("skipping S={s} K={k} {}: {e}", comp.describe());
+                    continue;
+                }
+                let mut session = Session::builder(cfg)
+                    .with_backend(backend.clone())
+                    .dataset(ds.clone())
+                    .engine(spec.engine)
+                    .build()?;
+                let mut corr_total = 0.0f64;
+                let mut iters = 0usize;
+                session.run_streaming(|ev| {
+                    corr_total += ev.correction.iter().sum::<f64>();
+                    iters += 1;
+                    Ok(())
+                })?;
+                let out = session.finish();
+                let summary = out.recorder.summary();
+                points.push(SweepPoint {
+                    s,
+                    k,
+                    compensate: comp,
+                    final_train_loss: summary.final_train_loss,
+                    final_eval_loss: summary.final_eval_loss,
+                    final_delta: out.final_delta,
+                    gamma: out.gamma,
+                    mean_correction: if iters > 0 {
+                        corr_total / iters as f64
+                    } else {
+                        0.0
+                    },
+                });
+            }
+        }
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelShape;
+    use crate::graph::Topology;
+    use crate::staleness::PipelineMode;
+    use crate::trainer::{LrSchedule, OptimizerKind};
+
+    fn base() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "sweep-test".into(),
+            s: 1,
+            k: 1,
+            topology: Topology::Ring,
+            alpha: None,
+            gossip_rounds: 1,
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            batch: 8,
+            iters: 10,
+            lr: LrSchedule::Const(0.2),
+            optimizer: OptimizerKind::Sgd,
+            compensate: CompensatorKind::None,
+            mode: PipelineMode::FullyDecoupled,
+            seed: 5,
+            dataset_n: 200,
+            delta_every: 0,
+            eval_every: 0,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_the_full_product() {
+        let spec = SweepSpec {
+            base: base(),
+            s_values: vec![1, 2],
+            k_values: vec![1, 2],
+            compensators: vec![
+                CompensatorKind::None,
+                CompensatorKind::DelayComp { lambda: 0.04 },
+            ],
+            engine: EngineKind::Sim,
+        };
+        let points = run_sweep(&spec).unwrap();
+        assert_eq!(points.len(), 8);
+        for p in &points {
+            assert!(p.final_train_loss.is_some(), "S={} K={} produced no loss", p.s, p.k);
+            assert!(p.mean_correction.is_finite());
+        }
+        // the none baseline never corrects anything
+        assert!(points
+            .iter()
+            .filter(|p| p.compensate == CompensatorKind::None)
+            .all(|p| p.mean_correction == 0.0));
+        // dc on a stale pipeline (K=2) does
+        assert!(points
+            .iter()
+            .any(|p| matches!(p.compensate, CompensatorKind::DelayComp { .. })
+                && p.k == 2
+                && p.mean_correction > 0.0));
+    }
+
+    #[test]
+    fn invalid_points_are_skipped_not_fatal() {
+        let spec = SweepSpec {
+            base: base(),
+            s_values: vec![1],
+            k_values: vec![1, 99], // 99 > layer count: skipped
+            compensators: vec![CompensatorKind::None],
+            engine: EngineKind::Sim,
+        };
+        let points = run_sweep(&spec).unwrap();
+        assert_eq!(points.len(), 1);
+    }
+
+    #[test]
+    fn compensation_only_sweep_keeps_base_grid() {
+        let spec = SweepSpec::compensation_only(
+            base(),
+            vec![CompensatorKind::None, CompensatorKind::Accumulate { n: 2 }],
+        );
+        let points = run_sweep(&spec).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.s == 1 && p.k == 1));
+    }
+}

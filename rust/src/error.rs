@@ -29,6 +29,9 @@ pub enum Error {
     #[error("config error: {0}")]
     Config(String),
 
+    #[error("schedule violation: {0}")]
+    Schedule(String),
+
     #[error("cli error: {0}")]
     Cli(String),
 

@@ -21,6 +21,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod compensate;
 pub mod config;
 pub mod consensus;
 pub mod coordinator;

@@ -5,6 +5,7 @@
 //! `ComputeBackend`. Gradients are evaluated at the **stashed** weight
 //! snapshot (eq. (10): w(τ+k−1)), never at the current weights.
 
+use crate::compensate::{Compensated, Compensator, CompensatorKind, CompensatorState};
 use crate::error::{Error, Result};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Stash, StashQueue};
@@ -29,6 +30,11 @@ pub struct ModuleAgent {
     pub params: Vec<(Tensor, Tensor)>,
     stash: StashQueue,
     opt: ModuleOptimizer,
+    comp: Box<dyn Compensator>,
+    /// forward-time weight snapshot of the batch last backwarded (set by
+    /// [`Self::backward`], consumed by [`Self::apply_update`] in the same
+    /// iteration — the delay-compensation strategies correct against it)
+    fwd_snapshot: Option<Vec<(Tensor, Tensor)>>,
 }
 
 impl ModuleAgent {
@@ -44,6 +50,19 @@ impl ModuleAgent {
         params: Vec<(Tensor, Tensor)>,
         opt: OptimizerKind,
     ) -> ModuleAgent {
+        Self::with_strategies(k, lo, hi, params, opt, CompensatorKind::None)
+    }
+
+    /// Full construction: update rule + staleness-compensation strategy
+    /// (both engines route through here, so the mechanics stay shared).
+    pub fn with_strategies(
+        k: usize,
+        lo: usize,
+        hi: usize,
+        params: Vec<(Tensor, Tensor)>,
+        opt: OptimizerKind,
+        comp: CompensatorKind,
+    ) -> ModuleAgent {
         assert_eq!(params.len(), hi - lo);
         ModuleAgent {
             k,
@@ -52,6 +71,8 @@ impl ModuleAgent {
             params,
             stash: StashQueue::new(),
             opt: ModuleOptimizer::new(opt),
+            comp: comp.build(),
+            fwd_snapshot: None,
         }
     }
 
@@ -83,11 +104,26 @@ impl ModuleAgent {
         self.opt.set_velocity(velocity);
     }
 
-    /// Drop all transient state — in-flight stashes and optimizer velocity —
-    /// leaving only the weights (weights-only restore: the pipeline refills).
+    /// Snapshot the compensation strategy's mutable state (full-state
+    /// checkpoints; empty for stateless strategies).
+    pub fn comp_state(&self) -> CompensatorState {
+        self.comp.state()
+    }
+
+    /// Restore the compensation strategy's state (checkpoint restore; the
+    /// empty default resets to the pre-first-step state).
+    pub fn set_comp_state(&mut self, state: CompensatorState) {
+        self.comp.set_state(state);
+    }
+
+    /// Drop all transient state — in-flight stashes, optimizer velocity,
+    /// and compensator accumulation — leaving only the weights
+    /// (weights-only restore: the pipeline refills).
     pub fn reset_transient(&mut self) {
         self.stash.replace(Vec::new());
         self.opt.set_velocity(Vec::new());
+        self.comp.set_state(CompensatorState::default());
+        self.fwd_snapshot = None;
     }
 
     /// Forward batch `tau` through the local layers with CURRENT weights,
@@ -106,7 +142,7 @@ impl ModuleAgent {
             acts,
             params: self.params.clone(),
             onehot: Some(msg.onehot.clone()),
-        });
+        })?;
         Ok(ActMsg {
             x: out,
             onehot: msg.onehot,
@@ -141,7 +177,7 @@ impl ModuleAgent {
         tau: i64,
         g_out: Tensor,
     ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
-        let stash = self.stash.pop(tau);
+        let stash = self.stash.pop(tau)?;
         let mut g = g_out;
         let n = self.n_layers();
         let mut grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
@@ -158,15 +194,45 @@ impl ModuleAgent {
             g = g_x;
         }
         grads.reverse();
+        // keep the forward-time snapshot for the compensation step this
+        // same iteration (apply_update consumes it)
+        self.fwd_snapshot = Some(stash.params);
         Ok((g, grads))
     }
 
     /// Apply the stale-gradient update (eq. (13a), generalized to the
-    /// configured optimizer): û = optimizer(ŵ, ∇̂; η·scale), with
-    /// scale = |D_s|/N (the trainer passes it).
-    pub fn apply_update(&mut self, eta: f64, scale: f64, grads: &[(Tensor, Tensor)]) {
+    /// configured optimizer and compensation strategy):
+    /// û = optimizer(ŵ, compensate(∇̂); η·scale), with scale = |D_s|/N
+    /// (the trainer passes it). Takes the gradients by value so strategies
+    /// can correct in place without copying. Returns the correction norm
+    /// ‖g_eff − g_raw‖₂ (0 for the raw baseline or a held update).
+    pub fn apply_update(&mut self, eta: f64, scale: f64, grads: Vec<(Tensor, Tensor)>) -> f64 {
         debug_assert_eq!(grads.len(), self.params.len());
-        self.opt.step(&mut self.params, grads, eta, scale);
+        let snapshot = self.fwd_snapshot.take().unwrap_or_default();
+        // every engine path runs backward (which stores the snapshot)
+        // immediately before apply_update; a missing snapshot is the same
+        // scheduling-bug class StashQueue reports as Error::Schedule
+        debug_assert_eq!(
+            snapshot.len(),
+            self.params.len(),
+            "apply_update without a preceding backward"
+        );
+        let snap_ref: &[(Tensor, Tensor)] = if snapshot.len() == self.params.len() {
+            &snapshot
+        } else {
+            // release fallback: correct against current weights (zero drift)
+            &self.params
+        };
+        match self.comp.compensate(grads, &self.params, snap_ref) {
+            Compensated::Apply {
+                grads: eff,
+                correction_norm,
+            } => {
+                self.opt.step(&mut self.params, &eff, eta, scale);
+                correction_norm
+            }
+            Compensated::Hold => 0.0,
+        }
     }
 }
 
@@ -230,7 +296,7 @@ mod tests {
         agent.forward(&backend, 0, msg).unwrap();
         let g_out = Tensor::from_vec(&[4, 5], vec![1.0; 20]).unwrap();
         let (_, grads) = agent.backward(&backend, 0, g_out).unwrap();
-        agent.apply_update(0.1, 0.5, &grads);
+        agent.apply_update(0.1, 0.5, grads.clone());
         for ((w_new, _), ((w_old, _), (g_w, _))) in
             agent.params.iter().zip(before.iter().zip(&grads))
         {

@@ -20,6 +20,9 @@ pub struct GroupIterOut {
     pub loss: Option<f32>,
     /// id of the batch that loss belongs to
     pub loss_batch: Option<i64>,
+    /// per-module compensation correction norms ‖g_eff − g_raw‖₂ (one per
+    /// module k; 0 for the raw baseline, held updates, or pipeline fill)
+    pub correction: Vec<f64>,
 }
 
 pub struct PipelineGroup {
@@ -86,7 +89,10 @@ impl PipelineGroup {
         eta: f64,
     ) -> Result<GroupIterOut> {
         let k_modules = self.k();
-        let mut out = GroupIterOut::default();
+        let mut out = GroupIterOut {
+            correction: vec![0.0; k_modules],
+            ..GroupIterOut::default()
+        };
 
         // ---- forward phase ----
         // FD: activations cross module boundaries with a one-iteration
@@ -142,7 +148,7 @@ impl PipelineGroup {
                 None => None, // eq. (10): zero gradient before warm-up
             };
             if let Some(grads) = grads {
-                self.modules[k].apply_update(eta, self.grad_scale, &grads);
+                out.correction[k] = self.modules[k].apply_update(eta, self.grad_scale, grads);
             }
         }
 
@@ -168,6 +174,7 @@ impl PipelineGroup {
                 .map(|(k, m)| ModuleResume {
                     velocity: m.opt_velocity(),
                     stashes: m.stash_snapshot(),
+                    comp: m.comp_state(),
                     act_in: self.act_mail[k].visible_snapshot().pop(),
                     grad_in: self.grad_mail[k].visible_snapshot().pop(),
                 })
@@ -197,6 +204,7 @@ impl PipelineGroup {
         for (k, mr) in rs.modules.iter().enumerate() {
             self.modules[k].set_opt_velocity(mr.velocity.clone());
             self.modules[k].restore_stash(mr.stashes.clone());
+            self.modules[k].set_comp_state(mr.comp.clone());
             if let Some((id, msg)) = &mr.act_in {
                 self.act_mail[k].inject_visible(*id, msg.clone());
             }

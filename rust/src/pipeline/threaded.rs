@@ -73,6 +73,9 @@ pub struct ThreadedEngine {
     barrier: Barrier,
     loss_tx: Sender<(usize, f32)>,
     loss_rx: Receiver<(usize, f32)>,
+    /// (s, k, ‖g_eff − g_raw‖₂) reported by each agent that updated
+    corr_tx: Sender<(usize, usize, f64)>,
+    corr_rx: Receiver<(usize, usize, f64)>,
     /// fixed probe batch for eval (same derivation as the sim engine)
     probe: (Tensor, Tensor),
     iter_time_s: f64,
@@ -131,12 +134,13 @@ impl ThreadedEngine {
                 agents.push(AgentSlot {
                     s,
                     k,
-                    agent: ModuleAgent::with_optimizer(
+                    agent: ModuleAgent::with_strategies(
                         k,
                         lo,
                         hi,
                         init[lo..hi].to_vec(),
                         cfg.optimizer,
+                        cfg.compensate,
                     ),
                     sampler: (k == 0).then(|| {
                         MiniBatchSampler::new(
@@ -160,6 +164,7 @@ impl ThreadedEngine {
 
         let sched = Schedule::with_mode(k_modules, cfg.mode);
         let (loss_tx, loss_rx) = channel();
+        let (corr_tx, corr_rx) = channel();
         let mut engine = ThreadedEngine {
             staleness: (0..k_modules).map(|k| sched.staleness(k)).collect(),
             sched,
@@ -170,6 +175,8 @@ impl ThreadedEngine {
             barrier: Barrier::new(s_groups * k_modules),
             loss_tx,
             loss_rx,
+            corr_tx,
+            corr_rx,
             probe,
             iter_time_s: 0.0,
             t: 0,
@@ -293,6 +300,7 @@ impl ThreadedEngine {
                 modules.push(ModuleResume {
                     velocity: slot.agent.opt_velocity(),
                     stashes: slot.agent.stash_snapshot(),
+                    comp: slot.agent.comp_state(),
                     act_in,
                     grad_in,
                 });
@@ -329,6 +337,7 @@ impl Engine for ThreadedEngine {
 
         // leftovers from a failed step must not pollute this iteration
         while self.loss_rx.try_recv().is_ok() {}
+        while self.corr_rx.try_recv().is_ok() {}
 
         let backend: &dyn ComputeBackend = self.backend.as_ref();
         let ds: &Dataset = self.ds.as_ref();
@@ -336,84 +345,105 @@ impl Engine for ThreadedEngine {
         let barrier = &self.barrier;
         let p_rows = &self.p_rows;
         let loss_tx_root = self.loss_tx.clone();
+        let corr_tx_root = self.corr_tx.clone();
 
         let result: Result<Vec<()>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(s_groups * k_modules);
             for slot in self.agents.iter_mut() {
                 let p_row = &p_rows[slot.s];
                 let loss_tx = loss_tx_root.clone();
+                let corr_tx = corr_tx_root.clone();
                 handles.push(scope.spawn(move || -> Result<()> {
                     let s = slot.s;
                     let k = slot.k;
-                    // ---- forward ----
-                    if let Some(tau) = sched.forward_batch(t, k) {
-                        let msg = if k == 0 {
-                            let (x, onehot) =
-                                slot.sampler.as_mut().unwrap().sample_batch(ds);
-                            ActMsg { x, onehot }
-                        } else {
-                            slot.act_rx
-                                .as_ref()
-                                .unwrap()
-                                .recv()
-                                .map_err(|_| Error::other("act channel closed"))?
-                        };
-                        let boundary = slot.agent.forward(backend, tau, msg)?;
-                        if let Some(tx) = &slot.act_tx {
-                            tx.send(boundary)
-                                .map_err(|_| Error::other("act send failed"))?;
+                    // ---- forward + backward (Algorithm 1 body) ----
+                    // Errors here (schedule violations, backend failures)
+                    // must NOT strand the other agents: the error path below
+                    // still paces every barrier and poisons this agent's
+                    // channels so blocked peers cascade to Err, and `step`
+                    // returns the failure instead of deadlocking.
+                    let work = (|| -> Result<()> {
+                        if let Some(tau) = sched.forward_batch(t, k) {
+                            let msg = if k == 0 {
+                                let (x, onehot) =
+                                    slot.sampler.as_mut().unwrap().sample_batch(ds);
+                                ActMsg { x, onehot }
+                            } else {
+                                slot.act_rx
+                                    .as_ref()
+                                    .unwrap()
+                                    .recv()
+                                    .map_err(|_| Error::other("act channel closed"))?
+                            };
+                            let boundary = slot.agent.forward(backend, tau, msg)?;
+                            if let Some(tx) = &slot.act_tx {
+                                tx.send(boundary)
+                                    .map_err(|_| Error::other("act send failed"))?;
+                            }
                         }
-                    }
-                    // ---- backward + update ----
-                    if let Some(tau) = sched.backward_batch(t, k) {
-                        let g_out = if k == k_modules - 1 {
-                            let (loss, g) = slot.agent.loss_grad_of(backend, tau)?;
-                            let _ = loss_tx.send((s, loss));
-                            g
-                        } else {
-                            slot.grad_rx
-                                .as_ref()
-                                .unwrap()
-                                .recv()
-                                .map_err(|_| Error::other("grad channel closed"))?
-                        };
-                        let (g_in, grads) = slot.agent.backward(backend, tau, g_out)?;
-                        if let Some(tx) = &slot.grad_tx {
-                            tx.send(g_in)
-                                .map_err(|_| Error::other("grad send failed"))?;
+                        if let Some(tau) = sched.backward_batch(t, k) {
+                            let g_out = if k == k_modules - 1 {
+                                let (loss, g) = slot.agent.loss_grad_of(backend, tau)?;
+                                let _ = loss_tx.send((s, loss));
+                                g
+                            } else {
+                                slot.grad_rx
+                                    .as_ref()
+                                    .unwrap()
+                                    .recv()
+                                    .map_err(|_| Error::other("grad channel closed"))?
+                            };
+                            let (g_in, grads) = slot.agent.backward(backend, tau, g_out)?;
+                            if let Some(tx) = &slot.grad_tx {
+                                tx.send(g_in)
+                                    .map_err(|_| Error::other("grad send failed"))?;
+                            }
+                            let norm = slot.agent.apply_update(eta, slot.grad_scale, grads);
+                            let _ = corr_tx.send((s, k, norm));
                         }
-                        slot.agent.apply_update(eta, slot.grad_scale, &grads);
+                        Ok(())
+                    })();
+                    if work.is_err() {
+                        // drop this agent's senders: peers blocked in recv()
+                        // observe a closed channel and error out too
+                        slot.act_tx = None;
+                        slot.grad_tx = None;
                     }
                     // ---- gossip (eq. 13b), cfg.gossip_rounds times ----
+                    // runs on the error path as well (posting the current û,
+                    // skipping only the local mix) so every agent makes the
+                    // same number of barrier waits
                     for _round in 0..gossip_rounds {
                         if s_groups > 1 {
                             *gossip_slots[k][s].lock().unwrap() =
                                 Some(slot.agent.params.clone());
                             barrier.wait(); // all û posted
-                            let mut mixed: Vec<(Tensor, Tensor)> = slot
-                                .agent
-                                .params
-                                .iter()
-                                .map(|(w, b)| {
-                                    (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
-                                })
-                                .collect();
-                            for &(r, wgt) in p_row {
-                                let guard = gossip_slots[k][r].lock().unwrap();
-                                let u_r = guard.as_ref().unwrap();
-                                for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
-                                    acc.0.axpy(wgt as f32, uw);
-                                    acc.1.axpy(wgt as f32, ub);
+                            if work.is_ok() {
+                                let mut mixed: Vec<(Tensor, Tensor)> = slot
+                                    .agent
+                                    .params
+                                    .iter()
+                                    .map(|(w, b)| {
+                                        (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
+                                    })
+                                    .collect();
+                                for &(r, wgt) in p_row {
+                                    let guard = gossip_slots[k][r].lock().unwrap();
+                                    let u_r = guard.as_ref().unwrap();
+                                    for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
+                                        acc.0.axpy(wgt as f32, uw);
+                                        acc.1.axpy(wgt as f32, ub);
+                                    }
                                 }
+                                slot.agent.params = mixed;
                             }
-                            slot.agent.params = mixed;
                             barrier.wait(); // all reads done before next write
                         } else {
                             barrier.wait();
                             barrier.wait();
                         }
                     }
-                    Ok(())
+                    work
                 }));
             }
             handles
@@ -432,6 +462,16 @@ impl Engine for ThreadedEngine {
         losses.sort_by_key(|&(s, _)| s);
         let loss_vals: Vec<f64> = losses.into_iter().map(|(_, l)| l).collect();
 
+        // slot the reported norms back into (s, k) position, then reduce
+        // through the same shared group-mean as the sim engine
+        // (agents that held or had no scheduled backward stay at 0.0,
+        // exactly like GroupIterOut::correction)
+        let mut per_group = vec![vec![0.0f64; k_modules]; s_groups];
+        while let Ok((s, k, norm)) = self.corr_rx.try_recv() {
+            per_group[s][k] = norm;
+        }
+        let correction = crate::compensate::group_mean_correction(k_modules, &per_group);
+
         self.t += 1;
         // LOCKSTEP with Trainer::step's record assembly (trainer/mod.rs):
         // the eval/δ cadence conditions, sim_time formula, and loss mean
@@ -446,6 +486,7 @@ impl Engine for ThreadedEngine {
             delta: None,
             sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
             staleness: self.staleness.clone(),
+            correction,
         };
         if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
             ev.delta = Some(self.consensus_delta());
@@ -501,9 +542,11 @@ impl Engine for ThreadedEngine {
                 }
             }
         }
-        // clean slate: fresh channels, empty stashes/velocity, no losses
+        // clean slate: fresh channels, empty stashes/velocity/compensator
+        // accumulation, no pending losses or correction reports
         self.rewire_channels();
         while self.loss_rx.try_recv().is_ok() {}
+        while self.corr_rx.try_recv().is_ok() {}
         for slot in &mut self.agents {
             slot.agent.reset_transient();
         }
@@ -534,6 +577,7 @@ impl Engine for ThreadedEngine {
                         let slot = &mut self.agents[base + k];
                         slot.agent.set_opt_velocity(mr.velocity.clone());
                         slot.agent.restore_stash(mr.stashes.clone());
+                        slot.agent.set_comp_state(mr.comp.clone());
                     }
                     // re-buffer the in-flight messages into the new channels
                     for (k, mr) in gr.modules.iter().enumerate() {
@@ -615,6 +659,7 @@ mod tests {
             iters,
             lr: LrSchedule::Const(0.2),
             optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            compensate: crate::compensate::CompensatorKind::None,
             mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 11,
             dataset_n: 240,

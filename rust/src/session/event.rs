@@ -7,8 +7,12 @@
 //! ```json
 //! {"t": 12, "lr": 0.1, "train_loss": 2.19, "eval_loss": 2.25,
 //!  "eval_acc": 0.14, "delta": 1.3e-3, "sim_time_s": 0.696,
-//!  "staleness": [2, 0]}
+//!  "staleness": [2, 0], "correction": [0.0031, 0.0]}
 //! ```
+//!
+//! `correction[k]` is the group-mean staleness-compensation correction norm
+//! ‖g_eff − g_raw‖₂ of module k this iteration (all zeros under the
+//! `none` baseline — see [`crate::compensate`]).
 
 use std::io::Write as _;
 use std::path::Path;
@@ -37,6 +41,9 @@ pub struct IterEvent {
     pub sim_time_s: f64,
     /// weight-update staleness per module, 2(K−1−k) in FD mode
     pub staleness: Vec<usize>,
+    /// per-module compensation correction norm ‖g_eff − g_raw‖₂, group
+    /// mean (zeros under the `none` baseline or while the pipeline fills)
+    pub correction: Vec<f64>,
 }
 
 impl IterEvent {
@@ -58,7 +65,8 @@ impl IterEvent {
         j.set("t", self.t)
             .set("lr", self.lr)
             .set("sim_time_s", self.sim_time_s)
-            .set("staleness", self.staleness.clone());
+            .set("staleness", self.staleness.clone())
+            .set("correction", self.correction.clone());
         let set_opt = |j: &mut Json, key: &str, v: Option<f64>| {
             if let Some(v) = v {
                 j.set(key, v);
@@ -114,6 +122,7 @@ mod tests {
             delta: Some(1e-3),
             sim_time_s: 0.25,
             staleness: vec![2, 0],
+            correction: vec![0.01, 0.0],
         }
     }
 
@@ -124,6 +133,9 @@ mod tests {
         assert!(j.opt("train_loss").is_some());
         assert!(j.opt("eval_loss").is_none());
         assert_eq!(j.get("staleness").unwrap().as_arr().unwrap().len(), 2);
+        let corr = j.get("correction").unwrap().as_arr().unwrap();
+        assert_eq!(corr.len(), 2);
+        assert_eq!(corr[0].as_f64().unwrap(), 0.01);
     }
 
     #[test]

@@ -358,6 +358,7 @@ mod tests {
             iters: 12,
             lr: LrSchedule::Const(0.2),
             optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            compensate: crate::compensate::CompensatorKind::None,
             mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 5,
             dataset_n: 200,
@@ -381,6 +382,7 @@ mod tests {
         let ev = session.step().unwrap();
         assert_eq!(ev.t, 0);
         assert_eq!(ev.staleness, vec![2, 0]); // K=2 FD: 2(K−1−k)
+        assert_eq!(ev.correction, vec![0.0, 0.0]); // none baseline: no corrections
         assert_eq!(session.iterations_done(), 1);
         let mut seen = 0;
         session.run_streaming(|_| { seen += 1; Ok(()) }).unwrap();

@@ -49,6 +49,7 @@ impl Engine for SimEngine {
             delta: r.delta,
             sim_time_s: r.sim_time_s,
             staleness: self.staleness.clone(),
+            correction: self.tr.last_correction().to_vec(),
         })
     }
 

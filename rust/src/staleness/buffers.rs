@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 
+use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
 /// Per-batch forward record of one module.
@@ -45,31 +46,38 @@ impl StashQueue {
         self.items.is_empty()
     }
 
-    pub fn push(&mut self, stash: Stash) {
+    /// Append the next in-flight stash. Ids must be contiguous; a gap or
+    /// regression means an engine scheduling bug, surfaced as a typed
+    /// [`Error::Schedule`] so threaded-engine faults become `Err` results
+    /// instead of thread aborts.
+    pub fn push(&mut self, stash: Stash) -> Result<()> {
         if let Some(last) = self.items.back() {
-            assert!(
-                stash.batch_id == last.batch_id + 1,
-                "stash out of order: {} after {}",
-                stash.batch_id,
-                last.batch_id
-            );
+            if stash.batch_id != last.batch_id + 1 {
+                return Err(Error::Schedule(format!(
+                    "stash out of order: {} after {}",
+                    stash.batch_id, last.batch_id
+                )));
+            }
         }
         self.items.push_back(stash);
+        Ok(())
     }
 
     /// Pop the stash for `batch_id`, which must be the oldest in flight —
-    /// the schedule consumes batches strictly in order.
-    pub fn pop(&mut self, batch_id: i64) -> Stash {
-        let front = self
-            .items
-            .pop_front()
-            .unwrap_or_else(|| panic!("pop({batch_id}) on empty stash queue"));
-        assert_eq!(
-            front.batch_id, batch_id,
-            "schedule violation: popping {batch_id}, front is {}",
-            front.batch_id
-        );
-        front
+    /// the schedule consumes batches strictly in order; violations are
+    /// reported as [`Error::Schedule`].
+    pub fn pop(&mut self, batch_id: i64) -> Result<Stash> {
+        let front = self.items.pop_front().ok_or_else(|| {
+            Error::Schedule(format!("pop({batch_id}) on empty stash queue"))
+        })?;
+        if front.batch_id != batch_id {
+            let got = front.batch_id;
+            self.items.push_front(front);
+            return Err(Error::Schedule(format!(
+                "popping {batch_id}, front is {got}"
+            )));
+        }
+        Ok(front)
     }
 
     /// Peek at an in-flight stash without consuming (metrics).
@@ -186,31 +194,41 @@ mod tests {
     #[test]
     fn queue_fifo_in_order() {
         let mut q = StashQueue::new();
-        q.push(stash(0));
-        q.push(stash(1));
-        q.push(stash(2));
+        q.push(stash(0)).unwrap();
+        q.push(stash(1)).unwrap();
+        q.push(stash(2)).unwrap();
         assert_eq!(q.len(), 3);
-        assert_eq!(q.pop(0).batch_id, 0);
-        assert_eq!(q.pop(1).batch_id, 1);
+        assert_eq!(q.pop(0).unwrap().batch_id, 0);
+        assert_eq!(q.pop(1).unwrap().batch_id, 1);
         assert!(q.get(2).is_some());
         assert!(q.get(5).is_none());
     }
 
     #[test]
-    #[should_panic(expected = "out of order")]
-    fn queue_rejects_gap() {
+    fn queue_rejects_gap_as_error() {
         let mut q = StashQueue::new();
-        q.push(stash(0));
-        q.push(stash(2));
+        q.push(stash(0)).unwrap();
+        let err = q.push(stash(2)).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Schedule(_)), "{err}");
+        assert_eq!(q.len(), 1, "failed push must not enqueue");
     }
 
     #[test]
-    #[should_panic(expected = "schedule violation")]
-    fn queue_rejects_out_of_order_pop() {
+    fn queue_rejects_out_of_order_pop_as_error() {
         let mut q = StashQueue::new();
-        q.push(stash(0));
-        q.push(stash(1));
-        q.pop(1);
+        q.push(stash(0)).unwrap();
+        q.push(stash(1)).unwrap();
+        let err = q.pop(1).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Schedule(_)), "{err}");
+        // queue unchanged: the in-order pop still works
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(0).unwrap().batch_id, 0);
+    }
+
+    #[test]
+    fn pop_on_empty_is_error() {
+        let mut q = StashQueue::new();
+        assert!(q.pop(0).is_err());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
+use crate::compensate::CompensatorState;
 use crate::error::{Error, Result};
 use crate::nn::layer::LayerShape;
 use crate::pipeline::module_agent::ActMsg;
@@ -40,6 +41,9 @@ pub struct ModuleResume {
     pub velocity: Vec<(Tensor, Tensor)>,
     /// in-flight forward stashes, oldest first
     pub stashes: Vec<Stash>,
+    /// staleness-compensation strategy state (empty for stateless
+    /// strategies; mid-window accumulation for `accum:N`)
+    pub comp: CompensatorState,
     /// activation message pending delivery TO this module (batch id, msg) —
     /// sim: the visible mailbox entry; threaded: the buffered channel message
     pub act_in: Option<(i64, ActMsg)>,

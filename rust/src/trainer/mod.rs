@@ -51,6 +51,8 @@ pub struct Trainer {
     /// iterations completed before a checkpoint restore (LR/record offset)
     t_offset: usize,
     recorder: Recorder,
+    /// per-module compensation correction norms of the last step, group-mean
+    last_correction: Vec<f64>,
 }
 
 impl Trainer {
@@ -75,7 +77,8 @@ impl Trainer {
 
         let mut root_rng = Pcg32::new(cfg.seed);
         let init = init_params(&mut root_rng.fork(0x1217), &layers);
-        let bounds = partition_layers(layers.len(), cfg.k);
+        let k_modules = cfg.k;
+        let bounds = partition_layers(layers.len(), k_modules);
 
         let shards = shard_even(&ds, cfg.s, cfg.seed ^ 0xDA7A)?;
         let mut groups = Vec::with_capacity(cfg.s);
@@ -84,7 +87,14 @@ impl Trainer {
                 .iter()
                 .enumerate()
                 .map(|(k, &(lo, hi))| {
-                    ModuleAgent::with_optimizer(k, lo, hi, init[lo..hi].to_vec(), cfg.optimizer)
+                    ModuleAgent::with_strategies(
+                        k,
+                        lo,
+                        hi,
+                        init[lo..hi].to_vec(),
+                        cfg.optimizer,
+                        cfg.compensate,
+                    )
                 })
                 .collect();
             let sampler =
@@ -120,6 +130,7 @@ impl Trainer {
             t: 0,
             t_offset: 0,
             recorder: Recorder::new(),
+            last_correction: vec![0.0; k_modules],
         })
     }
 
@@ -241,6 +252,7 @@ impl Trainer {
         let eta = self.cfg.lr.at(self.t_offset + t as usize);
 
         let mut losses = Vec::new();
+        let mut corrections: Vec<Vec<f64>> = Vec::with_capacity(self.groups.len());
         let backend = Arc::clone(&self.backend);
         let ds = Arc::clone(&self.ds);
         for g in &mut self.groups {
@@ -248,7 +260,10 @@ impl Trainer {
             if let Some(l) = out.loss {
                 losses.push(l as f64);
             }
+            corrections.push(out.correction);
         }
+        self.last_correction =
+            crate::compensate::group_mean_correction(self.groups[0].k(), &corrections);
 
         // gossip: for every module's every parameter tensor, mix across groups
         if let Some(mixer) = &mut self.mixer {
@@ -326,6 +341,13 @@ impl Trainer {
         &self.recorder
     }
 
+    /// Per-module compensation correction norms of the last [`Self::step`]
+    /// (group mean of ‖g_eff − g_raw‖₂; zeros before the first step or
+    /// under the `none` baseline).
+    pub fn last_correction(&self) -> &[f64] {
+        &self.last_correction
+    }
+
     /// Absolute iterations completed (restore offset included).
     pub fn iterations_done(&self) -> usize {
         self.t_offset + self.t as usize
@@ -353,6 +375,7 @@ mod tests {
             iters: 200,
             lr: LrSchedule::Const(0.1),
             optimizer: crate::trainer::opt::OptimizerKind::Sgd,
+            compensate: crate::compensate::CompensatorKind::None,
             mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 7,
             dataset_n: 400,
@@ -442,6 +465,49 @@ mod tests {
         let dbp_last = dbp_snap.final_train_loss.unwrap();
         assert!(dbp_last < dbp_first, "dbp did not learn: {dbp_first} -> {dbp_last}");
         assert_ne!(fd_snap.final_train_loss, dbp_snap.final_train_loss);
+    }
+
+    #[test]
+    fn compensation_strategies_train_through_pipeline() {
+        // dc and accum must not break learning on the (2,2) grid point;
+        // accum halves the update count, so give it the same budget
+        for comp in [
+            crate::compensate::CompensatorKind::DelayComp { lambda: 0.04 },
+            crate::compensate::CompensatorKind::Accumulate { n: 2 },
+        ] {
+            let mut cfg = tiny_cfg(2, 2);
+            cfg.compensate = comp;
+            let (snap, delta) = run_cfg(cfg);
+            let first = snap.first_train_loss.unwrap();
+            let last = snap.final_train_loss.unwrap();
+            assert!(last < first * 0.9, "{comp:?}: loss {first} -> {last} did not drop");
+            assert!(delta.is_finite() && delta < 1.0);
+        }
+    }
+
+    #[test]
+    fn dc_lambda_zero_matches_none_bitwise() {
+        // the λ=0 degenerate case must be the EXACT baseline trajectory
+        let mut none = tiny_cfg(2, 2);
+        none.iters = 60;
+        let mut dc0 = none.clone();
+        dc0.compensate = crate::compensate::CompensatorKind::DelayComp { lambda: 0.0 };
+        let (a, da) = run_cfg(none);
+        let (b, db) = run_cfg(dc0);
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn accum_n1_matches_none_bitwise() {
+        let mut none = tiny_cfg(2, 2);
+        none.iters = 60;
+        let mut acc1 = none.clone();
+        acc1.compensate = crate::compensate::CompensatorKind::Accumulate { n: 1 };
+        let (a, da) = run_cfg(none);
+        let (b, db) = run_cfg(acc1);
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(da, db);
     }
 
     #[test]

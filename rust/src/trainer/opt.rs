@@ -20,21 +20,29 @@ pub enum OptimizerKind {
 }
 
 impl OptimizerKind {
-    /// Parse "sgd" | "momentum:0.9" | "nesterov:0.9".
+    /// Parse "sgd" | "momentum:0.9" | "nesterov:0.9" (case-insensitive and
+    /// whitespace-tolerant, like `BackendKind`/`EngineKind`). β must lie in
+    /// [0, 1): anything else diverges under the v ← βv + g recursion.
     pub fn parse(s: &str) -> Result<OptimizerKind> {
-        let bad = || Error::Config(format!("bad optimizer {s:?}"));
-        if s == "sgd" {
+        let norm = s.trim().to_ascii_lowercase();
+        let bad = || Error::Config(format!("bad optimizer {s:?} (want sgd|momentum:B|nesterov:B)"));
+        let beta_of = |v: &str| -> Result<f64> {
+            let beta: f64 = v.parse().map_err(|_| bad())?;
+            if !(0.0..1.0).contains(&beta) {
+                return Err(Error::Config(format!(
+                    "optimizer beta must be in [0, 1), got {beta}"
+                )));
+            }
+            Ok(beta)
+        };
+        if norm == "sgd" {
             return Ok(OptimizerKind::Sgd);
         }
-        if let Some(v) = s.strip_prefix("momentum:") {
-            return Ok(OptimizerKind::Momentum {
-                beta: v.parse().map_err(|_| bad())?,
-            });
+        if let Some(v) = norm.strip_prefix("momentum:") {
+            return Ok(OptimizerKind::Momentum { beta: beta_of(v)? });
         }
-        if let Some(v) = s.strip_prefix("nesterov:") {
-            return Ok(OptimizerKind::Nesterov {
-                beta: v.parse().map_err(|_| bad())?,
-            });
+        if let Some(v) = norm.strip_prefix("nesterov:") {
+            return Ok(OptimizerKind::Nesterov { beta: beta_of(v)? });
         }
         Err(bad())
     }
@@ -207,5 +215,27 @@ mod tests {
         }
         assert!(OptimizerKind::parse("adam").is_err());
         assert!(OptimizerKind::parse("momentum:x").is_err());
+    }
+
+    #[test]
+    fn parse_is_lenient_about_case_and_whitespace() {
+        assert_eq!(OptimizerKind::parse(" SGD ").unwrap(), OptimizerKind::Sgd);
+        assert_eq!(
+            OptimizerKind::parse("Momentum:0.9").unwrap(),
+            OptimizerKind::Momentum { beta: 0.9 }
+        );
+        assert_eq!(
+            OptimizerKind::parse(" NESTEROV:0.5 ").unwrap(),
+            OptimizerKind::Nesterov { beta: 0.5 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_beta_outside_unit_interval() {
+        assert!(OptimizerKind::parse("momentum:1.0").is_err());
+        assert!(OptimizerKind::parse("momentum:-0.1").is_err());
+        assert!(OptimizerKind::parse("nesterov:1.5").is_err());
+        assert!(OptimizerKind::parse("nesterov:nan").is_err());
+        assert!(OptimizerKind::parse("momentum:0.0").is_ok(), "0 is a valid (inert) beta");
     }
 }

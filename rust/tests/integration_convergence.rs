@@ -24,6 +24,7 @@ fn base_cfg() -> ExperimentConfig {
         iters: 300,
         lr: LrSchedule::Const(0.1),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 21,
         dataset_n: 480,

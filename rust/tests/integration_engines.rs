@@ -27,6 +27,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         iters,
         lr: LrSchedule::Const(0.2),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 11,
         dataset_n: 240,
@@ -70,6 +71,7 @@ fn assert_events_eq(a: &IterEvent, b: &IterEvent) {
     assert_eq!(a.eval_loss, b.eval_loss, "t={}", a.t);
     assert_eq!(a.eval_acc, b.eval_acc, "t={}", a.t);
     assert_eq!(a.staleness, b.staleness);
+    assert_eq!(a.correction, b.correction, "t={}", a.t);
 }
 
 fn assert_params_eq(a: &[Vec<(sgs::tensor::Tensor, sgs::tensor::Tensor)>],
@@ -113,6 +115,72 @@ fn engines_match_with_momentum_and_multi_round_gossip() {
         assert_events_eq(a, b);
     }
     assert_params_eq(&sim.final_params(), &thr.final_params());
+}
+
+#[test]
+fn sim_and_threaded_are_bit_identical_under_compensation() {
+    // the paper's equivalence claim must survive every correction strategy:
+    // same iterates, same correction-norm observations, bit for bit
+    for comp in [
+        sgs::compensate::CompensatorKind::DelayComp { lambda: 0.04 },
+        sgs::compensate::CompensatorKind::Accumulate { n: 2 },
+    ] {
+        let mut c = cfg(2, 2, 14);
+        c.compensate = comp;
+        let (sim_events, sim) = collect_events(session(&c, EngineKind::Sim));
+        let (thr_events, thr) = collect_events(session(&c, EngineKind::Threaded));
+        assert_eq!(sim_events.len(), thr_events.len());
+        for (a, b) in sim_events.iter().zip(&thr_events) {
+            assert_events_eq(a, b);
+        }
+        assert_params_eq(&sim.final_params(), &thr.final_params());
+
+        // the strategy actually engaged: some module reported a correction
+        // (dc) or held updates shrink nothing (accum corrections can be 0
+        // only before the first emit), and compensated weights diverge
+        // from the raw baseline
+        let touched = sim_events
+            .iter()
+            .any(|ev| ev.correction.iter().any(|&n| n > 0.0));
+        assert!(touched, "{:?} never corrected", comp);
+        let (_, baseline) = collect_events(session(&cfg(2, 2, 14), EngineKind::Sim));
+        let base_params = baseline.final_params();
+        let comp_params = sim.final_params();
+        let diverged = base_params
+            .iter()
+            .zip(&comp_params)
+            .any(|(ga, gb)| ga.iter().zip(gb.iter()).any(|(a, b)| a != b));
+        assert!(diverged, "{:?} left the trajectory unchanged", comp);
+    }
+}
+
+#[test]
+fn compensated_runs_resume_bit_identically() {
+    // accum:2 carries mid-window state across the checkpoint boundary; dc
+    // corrects against stash snapshots restored with the pipeline
+    for comp in [
+        sgs::compensate::CompensatorKind::DelayComp { lambda: 0.04 },
+        sgs::compensate::CompensatorKind::Accumulate { n: 2 },
+    ] {
+        for kind in [EngineKind::Sim, EngineKind::Threaded] {
+            let mut c = cfg(2, 2, 20);
+            c.compensate = comp;
+            let (full_events, full) = collect_events(session(&c, kind));
+
+            let mut part = session(&c, kind);
+            for _ in 0..9 {
+                part.step().unwrap();
+            }
+            let ck = part.checkpoint();
+            let mut resumed = session(&c, kind);
+            resumed.restore(&ck).unwrap();
+            let (tail_events, resumed) = collect_events(resumed);
+            for (a, b) in full_events[9..].iter().zip(&tail_events) {
+                assert_events_eq(a, b);
+            }
+            assert_params_eq(&full.final_params(), &resumed.final_params());
+        }
+    }
 }
 
 #[test]

@@ -152,6 +152,7 @@ fn xla_training_matches_native_training() {
         iters: 10,
         lr: sgs::trainer::LrSchedule::Const(0.05),
         optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
         mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 13,
         dataset_n: 2000,

@@ -217,6 +217,11 @@ fn prop_config_roundtrip() {
                     1 => sgs::trainer::OptimizerKind::Momentum { beta: 0.9 },
                     _ => sgs::trainer::OptimizerKind::Nesterov { beta: 0.9 },
                 },
+                compensate: match r.below(3) {
+                    0 => sgs::compensate::CompensatorKind::None,
+                    1 => sgs::compensate::CompensatorKind::DelayComp { lambda: 0.02 },
+                    _ => sgs::compensate::CompensatorKind::Accumulate { n: 1 + r.below(3) },
+                },
                 mode: if r.below(2) == 0 {
                     sgs::staleness::PipelineMode::FullyDecoupled
                 } else {
@@ -237,6 +242,7 @@ fn prop_config_roundtrip() {
                 && back.topology == cfg.topology
                 && back.seed == cfg.seed
                 && back.optimizer == cfg.optimizer
+                && back.compensate == cfg.compensate
                 && back.mode == cfg.mode
         },
     );
