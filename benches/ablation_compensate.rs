@@ -38,6 +38,7 @@ fn main() {
         dataset_n: 4000,
         delta_every: 0,
         eval_every: 100,
+        compute_threads: 0,
     };
 
     let spec = SweepSpec {

@@ -1,6 +1,11 @@
 //! PERF: hot-path microbenches for §Perf in EXPERIMENTS.md —
-//! per-layer fwd/bwd on both backends, the loss head, gossip mixing, and
-//! the end-to-end distributed iteration. CSV: bench_out/hot_path.csv
+//! per-layer fwd/bwd on both backends (through the workspace API the
+//! engines run), the loss head, gossip mixing, and the end-to-end
+//! distributed iteration on both engines. CSV: bench_out/hot_path.csv
+//!
+//! `--smoke` (CI): one sample per bench, two e2e iterations — asserts the
+//! whole pipeline still runs and the CSV is emitted, without pretending
+//! shared-runner timings mean anything.
 
 use std::sync::Arc;
 
@@ -10,16 +15,23 @@ use sgs::consensus::GossipMixer;
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::graph::{max_safe_alpha, xiao_boyd_weights, Graph, Topology};
 use sgs::nn::init::init_params;
-use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::nn::BwdScratch;
 #[cfg(feature = "xla")]
 use sgs::runtime::XlaBackend;
+use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::{EngineKind, Session};
 use sgs::tensor::Tensor;
 use sgs::trainer::LrSchedule;
 use sgs::util::csv::CsvWriter;
 use sgs::util::rng::Pcg32;
 
-fn bench_backend(set: &mut BenchSet, backend: &dyn ComputeBackend, tag: &str) {
+fn bench_backend(
+    set: &mut BenchSet,
+    backend: &dyn ComputeBackend,
+    tag: &str,
+    warmup: usize,
+    samples: usize,
+) {
     let layers = backend.layers().to_vec();
     let b = backend.batch();
     let mut rng = Pcg32::new(5);
@@ -29,20 +41,26 @@ fn bench_backend(set: &mut BenchSet, backend: &dyn ComputeBackend, tag: &str) {
 
     let mut acts = vec![x];
     for (i, (w, bias)) in params.iter().enumerate() {
-        let h = backend.layer_fwd(i, acts.last().unwrap(), w, bias).unwrap();
+        let mut h = Tensor::empty();
+        backend.layer_fwd_into(i, acts.last().unwrap(), w, bias, &mut h).unwrap();
         acts.push(h);
     }
 
     for (i, (w, bias)) in params.iter().enumerate() {
         let x_in = acts[i].clone();
-        set.bench(format!("{tag}/layer{i}_fwd"), 2, 8, || {
-            backend.layer_fwd(i, &x_in, w, bias).unwrap()
+        let mut out = Tensor::empty();
+        set.bench(format!("{tag}/layer{i}_fwd"), warmup, samples, || {
+            backend.layer_fwd_into(i, &x_in, w, bias, &mut out).unwrap()
         });
         let mut g = Tensor::zeros(acts[i + 1].shape());
         rng.fill_normal(g.data_mut(), 1.0);
         let h_out = acts[i + 1].clone();
-        set.bench(format!("{tag}/layer{i}_bwd"), 2, 8, || {
-            backend.layer_bwd(i, &x_in, w, &h_out, &g).unwrap()
+        let (mut g_x, mut g_w, mut g_b) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut scratch = BwdScratch::new();
+        set.bench(format!("{tag}/layer{i}_bwd"), warmup, samples, || {
+            backend
+                .layer_bwd_into(i, &x_in, w, &h_out, &g, &mut g_x, &mut g_w, &mut g_b, &mut scratch)
+                .unwrap()
         });
     }
     let c = layers.last().unwrap().d_out;
@@ -51,22 +69,25 @@ fn bench_backend(set: &mut BenchSet, backend: &dyn ComputeBackend, tag: &str) {
     for i in 0..b {
         onehot.data_mut()[i * c + rng.below(c)] = 1.0;
     }
-    set.bench(format!("{tag}/loss_head"), 2, 8, || {
-        backend.loss_grad(&logits, &onehot).unwrap()
+    let mut loss_g = Tensor::empty();
+    set.bench(format!("{tag}/loss_head"), warmup, samples, || {
+        backend.loss_grad_into(&logits, &onehot, &mut loss_g).unwrap()
     });
 }
 
 fn main() {
-    let mut set = BenchSet::new("hot path");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, samples) = if smoke { (0, 1) } else { (2, 8) };
+    let mut set = BenchSet::new(if smoke { "hot path (smoke)" } else { "hot path" });
 
     let model = ModelShape::small();
     let native = NativeBackend::new(model.layers(), 194);
-    bench_backend(&mut set, &native, "native");
+    bench_backend(&mut set, &native, "native", warmup, samples);
 
     #[cfg(feature = "xla")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
         match XlaBackend::load("artifacts") {
-            Ok(xla) => bench_backend(&mut set, &xla, "xla"),
+            Ok(xla) => bench_backend(&mut set, &xla, "xla", warmup, samples),
             Err(e) => eprintln!("xla unavailable: {e}"),
         }
     }
@@ -83,7 +104,8 @@ fn main() {
             t
         })
         .collect();
-    set.bench("gossip_mix/S4_ring_100k_params", 3, 20, || {
+    let (g_warm, g_samples) = if smoke { (0, 1) } else { (3, 20) };
+    set.bench("gossip_mix/S4_ring_100k_params", g_warm, g_samples, || {
         mixer.mix(&mut reps)
     });
 
@@ -106,7 +128,9 @@ fn main() {
         dataset_n: 6000,
         delta_every: 0,
         eval_every: 0,
+        compute_threads: 0, // all cores: kernel row chunks + group fan-out
     };
+    let (e_warm, e_samples) = if smoke { (0, 2) } else { (5, 30) };
     let ds = SyntheticSpec::small(cfg.dataset_n, 64, 10, 1).generate();
     let bk: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));
     let mut sim = Session::builder(cfg.clone())
@@ -114,7 +138,9 @@ fn main() {
         .dataset(ds.clone())
         .build()
         .unwrap();
-    set.bench("e2e_iteration/S4K2_sim", 5, 30, || sim.step().unwrap());
+    set.bench("e2e_iteration/S4K2_sim", e_warm, e_samples, || {
+        sim.step().unwrap()
+    });
 
     // the same iteration on the one-thread-per-agent engine (spawn +
     // barrier overhead included — the deployment-shape cost)
@@ -124,14 +150,16 @@ fn main() {
         .engine(EngineKind::Threaded)
         .build()
         .unwrap();
-    set.bench("e2e_iteration/S4K2_threaded", 5, 30, || {
+    set.bench("e2e_iteration/S4K2_threaded", e_warm, e_samples, || {
         threaded.step().unwrap()
     });
 
     set.report();
 
     std::fs::create_dir_all("bench_out").ok();
-    let mut w = CsvWriter::create("bench_out/hot_path.csv", &["bench", "mean_s", "p50_s", "std_s"]).unwrap();
+    let mut w =
+        CsvWriter::create("bench_out/hot_path.csv", &["bench", "mean_s", "p50_s", "std_s"])
+            .unwrap();
     for r in &set.results {
         w.row_str(&[
             r.name.clone(),
@@ -142,6 +170,13 @@ fn main() {
         .unwrap();
     }
     w.flush().unwrap();
+    if smoke {
+        assert!(
+            std::path::Path::new("bench_out/hot_path.csv").exists(),
+            "smoke run must emit the CSV"
+        );
+        println!("smoke OK: {} benches, CSV emitted", set.results.len());
+    }
     println!(
         "\ne2e S4K2 iteration: {} | CSV: bench_out/hot_path.csv",
         humanize(set.results.last().unwrap().mean_s())

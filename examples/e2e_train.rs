@@ -64,6 +64,7 @@ fn main() -> Result<(), sgs::Error> {
         dataset_n: 50_000,
         delta_every: 10,
         eval_every: 25,
+        compute_threads: 0,
     };
     println!(
         "config: S={} K={} topology={} iters={} lr={}",

@@ -34,6 +34,7 @@ fn main() -> Result<(), sgs::Error> {
         dataset_n: 4000,
         delta_every: 10,
         eval_every: 100,
+        compute_threads: 0,
     };
 
     println!(

@@ -36,6 +36,7 @@ fn main() -> Result<(), sgs::Error> {
         dataset_n: 8000,
         delta_every: 0,
         eval_every: 150,
+        compute_threads: 0,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

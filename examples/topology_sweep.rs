@@ -32,6 +32,7 @@ fn main() -> Result<(), sgs::Error> {
         dataset_n: 12_000,
         delta_every: 5,
         eval_every: 0,
+        compute_threads: 0,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use crate::cli::args::Args;
 use crate::config::{ExperimentConfig, ModelShape};
+use crate::nn::resolve_threads;
 use crate::coordinator::{build_dataset, AgentGrid};
 use crate::error::Result;
 use crate::graph::Topology;
@@ -31,11 +32,13 @@ COMMANDS
              --engine sim|threaded --model tiny|small|paper
              --opt sgd|momentum:B|nesterov:B --mode fd|dbp
              --compensate none|dc:LAMBDA|accum:N
+             --compute-threads N (0 = all cores; any N is bit-identical)
              --out CSV --events-out JSONL --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
-  calibrate  cost model + timing table     (--backend --artifacts --model)
+  calibrate  cost model + timing table     (--backend --artifacts --model
+             --compute-threads N)
   help       this text
 ";
 
@@ -65,6 +68,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.delta_every = args.get_usize("delta-every", cfg.delta_every)?;
     cfg.gossip_rounds = args.get_usize("gossip-rounds", cfg.gossip_rounds)?;
     cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.compute_threads = args.get_usize("compute-threads", cfg.compute_threads)?;
     cfg.model = model_of(args.get_or("model", "small"))?;
     cfg.topology = Topology::parse(args.get_or("topology", &cfg.topology.name()))?;
     if let Some(a) = args.get("alpha") {
@@ -158,8 +162,19 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
     args.finish()?;
 
     let ds = Arc::new(build_dataset(&base));
+    // one backend serves every method; give its kernels the per-group
+    // share of the worker budget (same split Session::build applies) so
+    // the S=4 methods' group fan-out doesn't multiply with kernel fan-out
+    let resolved = resolve_threads(base.compute_threads);
+    let kernel_threads = (resolved / resolved.min(base.s.max(1))).max(1);
     let backend: Arc<dyn ComputeBackend> =
-        Arc::from(make_backend(kind, &artifacts, base.model.layers(), base.batch)?);
+        Arc::from(make_backend(
+            kind,
+            &artifacts,
+            base.model.layers(),
+            base.batch,
+            kernel_threads,
+        )?);
     let cm = CostModel::calibrate(backend.as_ref(), 3);
 
     println!(
@@ -256,9 +271,10 @@ pub fn cmd_calibrate(args: &Args) -> Result<()> {
     let model = model_of(args.get_or("model", "small"))?;
     let batch = args.get_usize("batch", 194)?;
     let reps = args.get_usize("reps", 5)?;
+    let threads = args.get_usize("compute-threads", 0)?;
     args.finish()?;
 
-    let backend = make_backend(kind, &artifacts, model.layers(), batch)?;
+    let backend = make_backend(kind, &artifacts, model.layers(), batch, threads)?;
     let cm = CostModel::calibrate(backend.as_ref(), reps);
     println!("cost model ({} backend, batch {batch}):", kind.as_str());
     for (i, (f, b)) in cm.fwd_s.iter().zip(&cm.bwd_s).enumerate() {
@@ -380,6 +396,17 @@ mod tests {
             cfg.compensate,
             crate::compensate::CompensatorKind::Accumulate { n: 3 }
         );
+    }
+
+    #[test]
+    fn train_with_pinned_compute_threads() {
+        for threads in ["1", "2"] {
+            dispatch(&argv(&format!(
+                "train --model tiny --s 2 --k 2 --iters 6 --batch 8 --dataset-n 200 \
+                 --compute-threads {threads} --lr const:0.1"
+            )))
+            .unwrap();
+        }
     }
 
     #[test]

@@ -40,18 +40,20 @@ impl Accumulate {
 impl Compensator for Accumulate {
     fn compensate(
         &mut self,
-        raw: Vec<(Tensor, Tensor)>,
+        grads: &mut [(Tensor, Tensor)],
         _now: &[(Tensor, Tensor)],
         _snapshot: &[(Tensor, Tensor)],
     ) -> Compensated {
-        if self.sum.len() != raw.len() {
-            self.sum = raw
+        if self.sum.len() != grads.len() {
+            // lazy one-time sizing; the buffers live for the module's whole
+            // run (emits zero them in place rather than dropping them)
+            self.sum = grads
                 .iter()
                 .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
                 .collect();
             self.count = 0;
         }
-        for ((s_w, s_b), (g_w, g_b)) in self.sum.iter_mut().zip(&raw) {
+        for ((s_w, s_b), (g_w, g_b)) in self.sum.iter_mut().zip(grads.iter()) {
             s_w.axpy(1.0, g_w);
             s_b.axpy(1.0, g_b);
         }
@@ -59,27 +61,29 @@ impl Compensator for Accumulate {
         if self.count < self.n {
             return Compensated::Hold;
         }
-        // emit: scale the window sum to its mean and measure how far the
-        // applied gradient moved from this iteration's raw one — a single
-        // pass over the buffers, which become the returned gradients
+        // emit: write the window mean over the raw workspace gradient and
+        // measure how far the applied gradient moved from this iteration's
+        // raw one — one pass, in place, keeping the sum buffers
         let inv = 1.0 / self.n as f32;
-        let mut grads = std::mem::take(&mut self.sum);
         let mut sq = 0.0f64;
-        for ((m_w, m_b), (g_w, g_b)) in grads.iter_mut().zip(&raw) {
-            for (m, &g) in m_w.data_mut().iter_mut().zip(g_w.data()) {
-                *m *= inv;
-                let d = (*m - g) as f64;
+        for ((s_w, s_b), (g_w, g_b)) in self.sum.iter_mut().zip(grads.iter_mut()) {
+            for (s, g) in s_w.data_mut().iter_mut().zip(g_w.data_mut()) {
+                let m = *s * inv;
+                let d = (m - *g) as f64;
                 sq += d * d;
+                *g = m;
+                *s = 0.0;
             }
-            for (m, &g) in m_b.data_mut().iter_mut().zip(g_b.data()) {
-                *m *= inv;
-                let d = (*m - g) as f64;
+            for (s, g) in s_b.data_mut().iter_mut().zip(g_b.data_mut()) {
+                let m = *s * inv;
+                let d = (m - *g) as f64;
                 sq += d * d;
+                *g = m;
+                *s = 0.0;
             }
         }
         self.count = 0;
         Compensated::Apply {
-            grads,
             correction_norm: sq.sqrt(),
         }
     }
@@ -108,11 +112,9 @@ mod tests {
         let w = test_grads(&[0.0, 0.0]);
         let mut a = Accumulate::new(1);
         for _ in 0..3 {
-            match a.compensate(g.clone(), &w, &w) {
-                Compensated::Apply {
-                    grads,
-                    correction_norm,
-                } => {
+            let mut grads = g.clone();
+            match a.compensate(&mut grads, &w, &w) {
+                Compensated::Apply { correction_norm } => {
                     assert_eq!(correction_norm, 0.0);
                     for ((aw, ab), (bw, bb)) in grads.iter().zip(&g) {
                         assert_eq!(aw, bw);
@@ -128,19 +130,25 @@ mod tests {
     fn n2_holds_then_emits_the_mean() {
         let w = test_grads(&[0.0]);
         let g1 = test_grads(&[1.0]);
-        let g2 = test_grads(&[3.0]);
+        let mut g2 = test_grads(&[3.0]);
         let mut a = Accumulate::new(2);
-        assert!(matches!(a.compensate(g1.clone(), &w, &w), Compensated::Hold));
-        match a.compensate(g2, &w, &w) {
-            Compensated::Apply { grads, .. } => {
-                // mean of W = [1, −1] and [3, −3]
-                assert_eq!(grads[0].0.data(), &[2.0, -2.0]);
-                assert_eq!(grads[0].1.data(), &[1.0]);
+        assert!(matches!(
+            a.compensate(&mut g1.clone(), &w, &w),
+            Compensated::Hold
+        ));
+        match a.compensate(&mut g2, &w, &w) {
+            Compensated::Apply { .. } => {
+                // mean of W = [1, −1] and [3, −3], written over the input
+                assert_eq!(g2[0].0.data(), &[2.0, -2.0]);
+                assert_eq!(g2[0].1.data(), &[1.0]);
             }
             other => panic!("expected Apply, got {other:?}"),
         }
         // window resets: next deposit holds again
-        assert!(matches!(a.compensate(g1, &w, &w), Compensated::Hold));
+        assert!(matches!(
+            a.compensate(&mut g1.clone(), &w, &w),
+            Compensated::Hold
+        ));
     }
 
     #[test]
@@ -149,22 +157,26 @@ mod tests {
         let g1 = test_grads(&[1.0]);
         let g2 = test_grads(&[5.0]);
         let mut a = Accumulate::new(2);
-        assert!(matches!(a.compensate(g1, &w, &w), Compensated::Hold));
+        assert!(matches!(
+            a.compensate(&mut g1.clone(), &w, &w),
+            Compensated::Hold
+        ));
 
         let saved = a.state();
         assert_eq!(saved.count, 1);
         let mut b = Accumulate::new(2);
         b.set_state(saved);
 
-        let (ga, gb) = match (
-            a.compensate(g2.clone(), &w, &w),
-            b.compensate(g2, &w, &w),
-        ) {
-            (Compensated::Apply { grads: ga, .. }, Compensated::Apply { grads: gb, .. }) => {
-                (ga, gb)
-            }
-            other => panic!("expected Apply pair, got {other:?}"),
-        };
+        let mut ga = g2.clone();
+        let mut gb = g2.clone();
+        assert!(matches!(
+            a.compensate(&mut ga, &w, &w),
+            Compensated::Apply { .. }
+        ));
+        assert!(matches!(
+            b.compensate(&mut gb, &w, &w),
+            Compensated::Apply { .. }
+        ));
         assert_eq!(ga[0].0, gb[0].0);
         assert_eq!(ga[0].1, gb[0].1);
     }
@@ -174,11 +186,23 @@ mod tests {
         let w = test_grads(&[0.0]);
         let g = test_grads(&[1.0]);
         let mut a = Accumulate::new(3);
-        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
+        assert!(matches!(
+            a.compensate(&mut g.clone(), &w, &w),
+            Compensated::Hold
+        ));
         a.set_state(CompensatorState::default());
         // counter back to zero: two more holds before an emit
-        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
-        assert!(matches!(a.compensate(g.clone(), &w, &w), Compensated::Hold));
-        assert!(matches!(a.compensate(g, &w, &w), Compensated::Apply { .. }));
+        assert!(matches!(
+            a.compensate(&mut g.clone(), &w, &w),
+            Compensated::Hold
+        ));
+        assert!(matches!(
+            a.compensate(&mut g.clone(), &w, &w),
+            Compensated::Hold
+        ));
+        assert!(matches!(
+            a.compensate(&mut g.clone(), &w, &w),
+            Compensated::Apply { .. }
+        ));
     }
 }

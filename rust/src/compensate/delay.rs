@@ -50,20 +50,19 @@ fn correct_in_place(g: &mut Tensor, now: &Tensor, snap: &Tensor, lambda: f32) ->
 impl Compensator for DelayComp {
     fn compensate(
         &mut self,
-        mut raw: Vec<(Tensor, Tensor)>,
+        grads: &mut [(Tensor, Tensor)],
         now: &[(Tensor, Tensor)],
         snapshot: &[(Tensor, Tensor)],
     ) -> Compensated {
-        debug_assert_eq!(raw.len(), now.len());
-        debug_assert_eq!(raw.len(), snapshot.len());
+        debug_assert_eq!(grads.len(), now.len());
+        debug_assert_eq!(grads.len(), snapshot.len());
         let lambda = self.lambda as f32;
         let mut sq = 0.0f64;
-        for (i, (g_w, g_b)) in raw.iter_mut().enumerate() {
+        for (i, (g_w, g_b)) in grads.iter_mut().enumerate() {
             sq += correct_in_place(g_w, &now[i].0, &snapshot[i].0, lambda);
             sq += correct_in_place(g_b, &now[i].1, &snapshot[i].1, lambda);
         }
         Compensated::Apply {
-            grads: raw,
             correction_norm: sq.sqrt(),
         }
     }
@@ -76,11 +75,9 @@ mod tests {
 
     fn apply(dc: &mut DelayComp, g: &[(Tensor, Tensor)], now: &[(Tensor, Tensor)],
              snap: &[(Tensor, Tensor)]) -> (Vec<(Tensor, Tensor)>, f64) {
-        match dc.compensate(g.to_vec(), now, snap) {
-            Compensated::Apply {
-                grads,
-                correction_norm,
-            } => (grads, correction_norm),
+        let mut grads = g.to_vec();
+        match dc.compensate(&mut grads, now, snap) {
+            Compensated::Apply { correction_norm } => (grads, correction_norm),
             other => panic!("expected Apply, got {other:?}"),
         }
     }

@@ -23,7 +23,9 @@
 //!   iterations, shrinking gradient variance under staleness.
 //!
 //! Every strategy owns **per-module state** (one [`Compensator`] box per
-//! [`crate::pipeline::module_agent::ModuleAgent`]), snapshotted into
+//! [`crate::pipeline::module_agent::ModuleAgent`]), corrects the agent's
+//! workspace gradients **in place** (the steady-state loop is
+//! allocation-free — tests/alloc_guard.rs), and is snapshotted into
 //! checkpoints as [`CompensatorState`] so exact resume stays bit-identical.
 //! The per-iteration correction magnitude is surfaced per module in
 //! [`crate::session::IterEvent::correction`].
@@ -52,7 +54,10 @@ pub enum CompensatorKind {
 
 impl CompensatorKind {
     /// Parse "none" | "dc:LAMBDA" | "accum:N" (case-insensitive,
-    /// whitespace-tolerant, like [`crate::session::EngineKind::parse`]).
+    /// whitespace-tolerant around both the strategy and its parameter,
+    /// like [`crate::trainer::OptimizerKind::parse`]). Bad parameters
+    /// (dc λ < 0 or non-finite, accum n = 0) are rejected with a typed
+    /// [`Error::Config`].
     pub fn parse(s: &str) -> Result<CompensatorKind> {
         let norm = s.trim().to_ascii_lowercase();
         let bad = || Error::Config(format!("bad compensator {s:?} (want none|dc:LAMBDA|accum:N)"));
@@ -60,13 +65,13 @@ impl CompensatorKind {
             return Ok(CompensatorKind::None);
         }
         if let Some(v) = norm.strip_prefix("dc:") {
-            let lambda: f64 = v.parse().map_err(|_| bad())?;
+            let lambda: f64 = v.trim().parse().map_err(|_| bad())?;
             let kind = CompensatorKind::DelayComp { lambda };
             kind.validate()?;
             return Ok(kind);
         }
         if let Some(v) = norm.strip_prefix("accum:") {
-            let n: usize = v.parse().map_err(|_| bad())?;
+            let n: usize = v.trim().parse().map_err(|_| bad())?;
             let kind = CompensatorKind::Accumulate { n };
             kind.validate()?;
             return Ok(kind);
@@ -117,17 +122,15 @@ impl CompensatorKind {
 }
 
 /// What the strategy decided for this iteration's update.
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Compensated {
-    /// Take one optimizer step with these gradients (for the raw baseline
-    /// they are the unmodified input — no copy is made anywhere).
-    /// `correction_norm` is ‖g_eff − g_raw‖₂ over all of the module's
-    /// parameter tensors (0 when nothing was corrected).
-    Apply {
-        grads: Vec<(Tensor, Tensor)>,
-        correction_norm: f64,
-    },
-    /// Hold the update this iteration (mid-accumulation).
+    /// Take one optimizer step with the (now corrected-in-place) workspace
+    /// gradients. `correction_norm` is ‖g_eff − g_raw‖₂ over all of the
+    /// module's parameter tensors (0 when nothing was corrected).
+    Apply { correction_norm: f64 },
+    /// Hold the update this iteration (mid-accumulation); the workspace
+    /// gradients are left untouched and will be overwritten by the next
+    /// backward.
     Hold,
 }
 
@@ -144,15 +147,17 @@ pub struct CompensatorState {
 /// One module's gradient-correction strategy. Called once per scheduled
 /// backward, between gradient computation and the optimizer step —
 /// identically ordered in both engines, which is what keeps sim ≡ threaded
-/// bit-identical under every strategy. Takes the raw gradients by value so
-/// strategies can correct in place or absorb them without copying.
+/// bit-identical under every strategy. Corrects the agent's workspace
+/// gradient buffers **in place** — the steady-state loop moves and copies
+/// nothing (tests/alloc_guard.rs).
 pub trait Compensator: Send {
-    /// Transform the raw stale gradient. `now` is the module's current
-    /// weights ŵ(t); `snapshot` is the forward-time weight snapshot the
-    /// gradient was evaluated at (eq. (10): w(τ+k−1), from the stash).
+    /// Transform the raw stale gradient in `grads` in place. `now` is the
+    /// module's current weights ŵ(t); `snapshot` is the forward-time
+    /// weight snapshot the gradient was evaluated at (eq. (10): w(τ+k−1),
+    /// from the stash).
     fn compensate(
         &mut self,
-        raw: Vec<(Tensor, Tensor)>,
+        grads: &mut [(Tensor, Tensor)],
         now: &[(Tensor, Tensor)],
         snapshot: &[(Tensor, Tensor)],
     ) -> Compensated;
@@ -175,12 +180,11 @@ pub struct NoCompensation;
 impl Compensator for NoCompensation {
     fn compensate(
         &mut self,
-        raw: Vec<(Tensor, Tensor)>,
+        _grads: &mut [(Tensor, Tensor)],
         _now: &[(Tensor, Tensor)],
         _snapshot: &[(Tensor, Tensor)],
     ) -> Compensated {
         Compensated::Apply {
-            grads: raw,
             correction_norm: 0.0,
         }
     }
@@ -270,21 +274,31 @@ mod tests {
 
     #[test]
     fn none_passes_raw_through_uncorrected() {
-        let g = test_grads(&[1.0, 2.0]);
+        let mut g = test_grads(&[1.0, 2.0]);
+        let orig = test_grads(&[1.0, 2.0]);
         let w = test_grads(&[0.0, 0.0]);
         let mut c = CompensatorKind::None.build();
-        match c.compensate(g.clone(), &w, &w) {
-            Compensated::Apply {
-                grads,
-                correction_norm,
-            } => {
+        match c.compensate(&mut g, &w, &w) {
+            Compensated::Apply { correction_norm } => {
                 assert_eq!(correction_norm, 0.0);
-                for ((aw, ab), (bw, bb)) in grads.iter().zip(&g) {
+                for ((aw, ab), (bw, bb)) in g.iter().zip(&orig) {
                     assert_eq!(aw, bw);
                     assert_eq!(ab, bb);
                 }
             }
             other => panic!("expected Apply, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_around_parameters() {
+        assert_eq!(
+            CompensatorKind::parse("dc: 0.04").unwrap(),
+            CompensatorKind::DelayComp { lambda: 0.04 }
+        );
+        assert_eq!(
+            CompensatorKind::parse("ACCUM: 4 ").unwrap(),
+            CompensatorKind::Accumulate { n: 4 }
+        );
     }
 }

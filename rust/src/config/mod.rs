@@ -76,6 +76,10 @@ pub struct ExperimentConfig {
     pub delta_every: usize,
     /// evaluate averaged weights on the probe batch every this many (0 = never)
     pub eval_every: usize,
+    /// compute workers: native-kernel row chunks and concurrent group
+    /// stepping (0 = available parallelism; any value is bit-identical —
+    /// chunk boundaries are fixed and reductions keep one order)
+    pub compute_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -98,6 +102,7 @@ impl Default for ExperimentConfig {
             dataset_n: 50_000,
             delta_every: 10,
             eval_every: 50,
+            compute_threads: 0,
         }
     }
 }
@@ -170,7 +175,8 @@ impl ExperimentConfig {
             .set("dataset_n", self.dataset_n)
             .set("delta_every", self.delta_every)
             .set("eval_every", self.eval_every)
-            .set("gossip_rounds", self.gossip_rounds);
+            .set("gossip_rounds", self.gossip_rounds)
+            .set("compute_threads", self.compute_threads);
         if let Some(a) = self.alpha {
             j.set("alpha", a);
         }
@@ -223,6 +229,11 @@ impl ExperimentConfig {
             dataset_n: j.get("dataset_n")?.as_usize()?,
             delta_every: j.get("delta_every")?.as_usize()?,
             eval_every: j.get("eval_every")?.as_usize()?,
+            // optional for older config files (0 = auto)
+            compute_threads: match j.opt("compute_threads") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -259,6 +270,20 @@ mod tests {
         assert_eq!(back.lr, cfg.lr);
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.compensate, cfg.compensate);
+    }
+
+    #[test]
+    fn compute_threads_roundtrips_and_defaults_to_auto() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.compute_threads = 3;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.compute_threads, 3);
+        // older config files without the key resolve to 0 (= auto)
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("compute_threads");
+        }
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().compute_threads, 0);
     }
 
     #[test]

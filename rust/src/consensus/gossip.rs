@@ -13,15 +13,23 @@ use crate::tensor::Tensor;
 pub struct GossipMixer {
     /// sparse rows of P: for each s, the (r, P_sr) pairs with P_sr != 0
     rows: Vec<Vec<(usize, f64)>>,
-    scratch: Vec<Tensor>,
+    /// one scratch set (S tensors) per distinct replica shape. The trainer
+    /// alternates W- and b-shaped tensors through one mixer every
+    /// iteration; a single shared scratch set reallocated on every shape
+    /// flip (the pre-refactor behaviour) made gossip allocate on the hot
+    /// path despite its "no allocation" contract. Shapes per run are few
+    /// (W and b per distinct layer geometry), so a linear scan finds the
+    /// set without hashing or allocating.
+    scratch: Vec<(Vec<usize>, Vec<Tensor>)>,
 }
 
 impl GossipMixer {
     /// Build from a mixing matrix (validated elsewhere — see
-    /// `graph::weights`). `param_len` sizes the scratch buffers.
+    /// `graph::weights`). `param_len` pre-sizes a scratch set for flat
+    /// vectors of that length (0 = size lazily from the first mix).
     pub fn new(p: &Mat, param_len: usize) -> GossipMixer {
         assert_eq!(p.rows, p.cols);
-        let rows = (0..p.rows)
+        let rows: Vec<Vec<(usize, f64)>> = (0..p.rows)
             .map(|s| {
                 (0..p.cols)
                     .filter(|&r| p[(s, r)] != 0.0)
@@ -29,34 +37,55 @@ impl GossipMixer {
                     .collect()
             })
             .collect();
-        GossipMixer {
-            rows,
-            scratch: (0..p.rows).map(|_| Tensor::zeros(&[param_len])).collect(),
-        }
+        let scratch = if param_len > 0 {
+            vec![(
+                vec![param_len],
+                (0..p.rows).map(|_| Tensor::zeros(&[param_len])).collect(),
+            )]
+        } else {
+            Vec::new()
+        };
+        GossipMixer { rows, scratch }
     }
 
     pub fn s(&self) -> usize {
         self.rows.len()
     }
 
+    /// Scratch-set index for `shape`, creating it on first encounter.
+    fn scratch_for(&mut self, shape: &[usize]) -> usize {
+        if let Some(i) = self.scratch.iter().position(|(s, _)| s[..] == *shape) {
+            return i;
+        }
+        let s_count = self.rows.len();
+        self.scratch.push((
+            shape.to_vec(),
+            (0..s_count).map(|_| Tensor::zeros(shape)).collect(),
+        ));
+        self.scratch.len() - 1
+    }
+
     /// In-place mix: replicas[s] <- Σ_r P_sr · replicas[r].
     ///
     /// `replicas` are the post-update vectors û_{s,k}(t); afterwards they
-    /// hold ŵ_{s,k}(t+1).
+    /// hold ŵ_{s,k}(t+1). Allocation-free once every shape this mixer
+    /// serves has been seen once.
     pub fn mix(&mut self, replicas: &mut [Tensor]) {
         assert_eq!(replicas.len(), self.rows.len(), "replica count != S");
+        debug_assert!(
+            replicas.iter().all(|r| r.shape() == replicas[0].shape()),
+            "replicas must share one shape"
+        );
+        let si = self.scratch_for(replicas[0].shape());
+        let bufs = &mut self.scratch[si].1;
         for (s, row) in self.rows.iter().enumerate() {
-            let out = &mut self.scratch[s];
-            if out.shape() != replicas[s].shape() {
-                // mixer is reused across differently-shaped tensors (W vs b)
-                *out = Tensor::zeros(replicas[s].shape());
-            }
+            let out = &mut bufs[s];
             out.fill_zero();
             for &(r, w) in row {
                 out.axpy(w as f32, &replicas[r]);
             }
         }
-        for (dst, src) in replicas.iter_mut().zip(&mut self.scratch) {
+        for (dst, src) in replicas.iter_mut().zip(bufs.iter_mut()) {
             std::mem::swap(dst, src);
         }
     }
@@ -130,6 +159,36 @@ mod tests {
         for rep in &r {
             assert!((rep.data()[0] - 1.0).abs() < 1e-3, "{:?}", rep.data());
         }
+    }
+
+    #[test]
+    fn alternating_shapes_keep_one_scratch_set_per_shape() {
+        // the trainer alternates W- and b-shaped tensors through one mixer;
+        // each shape must get (and keep) its own scratch set instead of
+        // thrashing a single reallocated one
+        let p = Mat::identity(3);
+        let mut m = GossipMixer::new(&p, 0);
+        let mut w_shaped: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[4, 2])).collect();
+        let mut b_shaped: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[2])).collect();
+        for _ in 0..5 {
+            m.mix(&mut w_shaped);
+            m.mix(&mut b_shaped);
+        }
+        assert_eq!(m.scratch.len(), 2, "one scratch set per distinct shape");
+        assert_eq!(m.scratch[0].0, vec![4, 2]);
+        assert_eq!(m.scratch[1].0, vec![2]);
+        // identity P: mixing is a no-op on the values
+        assert!(w_shaped.iter().all(|t| t.shape() == [4, 2]));
+        assert!(b_shaped.iter().all(|t| t.shape() == [2]));
+    }
+
+    #[test]
+    fn prealloc_hint_seeds_the_flat_vector_scratch() {
+        let p = Mat::identity(2);
+        let m = GossipMixer::new(&p, 7);
+        assert_eq!(m.scratch.len(), 1);
+        assert_eq!(m.scratch[0].0, vec![7]);
+        assert_eq!(m.scratch[0].1.len(), 2);
     }
 
     #[test]

@@ -81,6 +81,7 @@ mod tests {
             dataset_n: 200,
             delta_every: 5,
             eval_every: 10,
+            compute_threads: 0,
         }
     }
 

@@ -144,6 +144,7 @@ mod tests {
             dataset_n: 200,
             delta_every: 0,
             eval_every: 0,
+            compute_threads: 0,
         }
     }
 

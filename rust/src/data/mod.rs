@@ -64,15 +64,24 @@ impl Dataset {
 
     /// Gather indices into an (x [B,dim], onehot [B,classes]) batch pair.
     pub fn gather(&self, indices: &[usize]) -> (Tensor, Tensor) {
+        let mut x = Tensor::empty();
+        let mut onehot = Tensor::empty();
+        self.gather_into(indices, &mut x, &mut onehot);
+        (x, onehot)
+    }
+
+    /// [`Self::gather`] into caller-owned buffers, sized on first use and
+    /// reused allocation-free afterwards (the samplers' hot path).
+    pub fn gather_into(&self, indices: &[usize], x: &mut Tensor, onehot: &mut Tensor) {
         let b = indices.len();
-        let mut x = Tensor::zeros(&[b, self.dim]);
-        let mut onehot = Tensor::zeros(&[b, self.classes]);
+        x.ensure_shape(&[b, self.dim]);
+        onehot.ensure_shape(&[b, self.classes]);
+        onehot.fill_zero();
         for (row, &i) in indices.iter().enumerate() {
             x.data_mut()[row * self.dim..(row + 1) * self.dim]
                 .copy_from_slice(self.feature_row(i));
             onehot.data_mut()[row * self.classes + self.label(i)] = 1.0;
         }
-        (x, onehot)
     }
 
     /// Class histogram (sanity metrics / tests).

@@ -14,6 +14,10 @@ pub struct MiniBatchSampler {
     shard: Shard,
     batch: usize,
     rng: Pcg32,
+    /// Fisher–Yates scratch + pick buffers, reused every iteration so the
+    /// steady-state hot path allocates nothing (tests/alloc_guard.rs).
+    scratch: Vec<usize>,
+    picks: Vec<usize>,
 }
 
 impl MiniBatchSampler {
@@ -25,6 +29,8 @@ impl MiniBatchSampler {
             shard,
             batch,
             rng: Pcg32::new(seed),
+            scratch: Vec::new(),
+            picks: Vec::new(),
         }
     }
 
@@ -47,17 +53,40 @@ impl MiniBatchSampler {
         self.rng = Pcg32::from_raw_state(state);
     }
 
-    /// Draw the mini-batch for iteration t. Consumes RNG state — call
-    /// exactly once per iteration, in iteration order.
-    pub fn sample(&mut self) -> Vec<usize> {
-        let picks = self.rng.sample_indices(self.shard.len(), self.batch);
-        picks.into_iter().map(|i| self.shard.indices[i]).collect()
+    /// Draw the mini-batch for iteration t into the reusable pick buffer.
+    /// Consumes RNG state — call exactly once per iteration, in iteration
+    /// order.
+    pub fn sample_into(&mut self) -> &[usize] {
+        self.rng.sample_indices_into(
+            self.shard.len(),
+            self.batch,
+            &mut self.scratch,
+            &mut self.picks,
+        );
+        for p in self.picks.iter_mut() {
+            *p = self.shard.indices[*p];
+        }
+        &self.picks
     }
 
-    /// Draw and gather in one step.
+    /// [`Self::sample_into`], copied out (tests / one-off callers).
+    pub fn sample(&mut self) -> Vec<usize> {
+        self.sample_into().to_vec()
+    }
+
+    /// Draw and gather in one step (allocates the batch pair).
     pub fn sample_batch(&mut self, ds: &Dataset) -> (Tensor, Tensor) {
-        let idx = self.sample();
-        ds.gather(&idx)
+        let mut x = Tensor::empty();
+        let mut onehot = Tensor::empty();
+        self.sample_batch_into(ds, &mut x, &mut onehot);
+        (x, onehot)
+    }
+
+    /// Draw and gather into caller-owned buffers — the engines' hot path;
+    /// allocation-free once the buffers are sized.
+    pub fn sample_batch_into(&mut self, ds: &Dataset, x: &mut Tensor, onehot: &mut Tensor) {
+        self.sample_into();
+        ds.gather_into(&self.picks, x, onehot);
     }
 }
 

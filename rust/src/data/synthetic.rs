@@ -11,7 +11,7 @@
 use crate::data::Dataset;
 use crate::nn::init::init_params;
 use crate::nn::layer::resmlp_layers;
-use crate::nn::{dense_fwd, LayerShape};
+use crate::nn::{dense_fwd_into, LayerShape};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -105,8 +105,10 @@ impl SyntheticSpec {
             )
             .unwrap();
             let mut h = x;
+            let mut out = Tensor::empty();
             for ((w, b), layer) in teacher.iter().zip(&teacher_layers) {
-                h = dense_fwd(&h, w, b, layer.kind);
+                dense_fwd_into(&h, w, b, layer.kind, &mut out, 1);
+                std::mem::swap(&mut h, &mut out);
             }
             for r in 0..rows {
                 let row = &h.data()[r * self.classes..(r + 1) * self.classes];

@@ -45,6 +45,14 @@ impl Recorder {
         Recorder::default()
     }
 
+    /// Pre-reserve for a run of `iters` records so the per-iteration push
+    /// never reallocates (the engines' steady state is allocation-free).
+    pub fn with_capacity(iters: usize) -> Recorder {
+        Recorder {
+            records: Vec::with_capacity(iters),
+        }
+    }
+
     pub fn push(&mut self, r: Record) {
         self.records.push(r);
     }

@@ -3,12 +3,14 @@
 //! every coordinate of a 100k-param net would drown the test suite).
 
 use crate::nn::layer::LayerShape;
-use crate::nn::{dense_bwd, dense_fwd, full_backward, full_loss};
+use crate::nn::{dense_bwd_into, dense_fwd_into, full_backward, full_loss, BwdScratch};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
 /// Max relative error between analytic and finite-difference gradients of a
-/// scalarized single layer: f = Σ g_out ⊙ layer(x, w, b).
+/// scalarized single layer: f = Σ g_out ⊙ layer(x, w, b). Drives the same
+/// in-place workspace kernels the backends run, so the finite-difference
+/// oracle pins exactly the production code path.
 pub fn check_layer(
     x: &Tensor,
     w: &Tensor,
@@ -17,15 +19,30 @@ pub fn check_layer(
     eps: f32,
     rng: &mut Pcg32,
 ) -> f64 {
-    let h_out = dense_fwd(x, w, b, layer.kind);
+    let mut h_out = Tensor::empty();
+    dense_fwd_into(x, w, b, layer.kind, &mut h_out, 1);
     // fixed co-vector so the scalar is smooth in the parameters
     let mut g_out = Tensor::zeros(h_out.shape());
     rng.fill_normal(g_out.data_mut(), 1.0);
 
-    let (g_x, g_w, g_b) = dense_bwd(x, w, &h_out, &g_out, layer.kind);
+    let (mut g_x, mut g_w, mut g_b) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+    let mut scratch = BwdScratch::new();
+    dense_bwd_into(
+        x,
+        w,
+        &h_out,
+        &g_out,
+        layer.kind,
+        &mut g_x,
+        &mut g_w,
+        &mut g_b,
+        &mut scratch,
+        1,
+    );
 
     let scalar = |x: &Tensor, w: &Tensor, b: &Tensor| -> f64 {
-        let h = dense_fwd(x, w, b, layer.kind);
+        let mut h = Tensor::empty();
+        dense_fwd_into(x, w, b, layer.kind, &mut h, 1);
         h.data()
             .iter()
             .zip(g_out.data())

@@ -9,8 +9,19 @@
 //!      `make artifacts`),
 //!   3. the "traditional BP on one device" baseline comparator.
 //!
-//! Matmuls use an ikj loop ordering (row-major friendly, autovectorizes);
-//! blocking is deliberately left to the XLA path — see DESIGN.md §Perf.
+//! §Perf — every kernel is an **in-place, caller-owned-workspace** variant
+//! (`dense_fwd_into` / `dense_bwd_into` / `softmax_xent_into`): the
+//! steady-state training loop allocates nothing (tests/alloc_guard.rs).
+//! The matmuls are k-blocked (`KBLOCK`-row panels of `b` stay hot in
+//! L1/L2 while the output rows stream past) and parallelized over fixed
+//! output-row chunks with `std::thread::scope` — each output element is
+//! always accumulated in ascending-k order by exactly one worker, so a
+//! single-threaded run is bit-identical to any worker count (the engines'
+//! equivalence tests keep pinning semantics). The backward input-gradient
+//! matmul transposes W once into workspace scratch and runs in saxpy form
+//! (`g_x += g_z[i,k] * w_t[k,:]`): serial dot-product accumulator chains
+//! defeated autovectorization in the old `matmul_nt`, and the ReLU-masked
+//! `g_z` rows make the zero-skip branch pay twice over.
 
 pub mod grad_check;
 pub mod init;
@@ -20,80 +31,151 @@ pub use layer::{resmlp_layers, LayerKind, LayerShape};
 
 use crate::tensor::Tensor;
 
-/// out[m,n] += a[m,k] @ b[k,n]
-fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
+/// Resolved worker count for the native kernels and the group-parallel
+/// engine step: `requested` workers, with 0 meaning the machine's
+/// available parallelism (the `--compute-threads` default).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Minimum multiply-accumulates each extra worker must bring before a
+/// kernel fans out: below this, `std::thread::scope` spawn/join overhead
+/// (~tens of µs) outweighs the split and the kernel stays on the calling
+/// thread. Chunk boundaries are fixed by (rows, workers) alone, never by
+/// load, so the split is deterministic.
+const MIN_MACS_PER_THREAD: usize = 1 << 19;
+
+/// k-panel height for the blocked matmuls: a KBLOCK×n panel of `b`
+/// (≤ 32 KiB at n = 128) stays resident while a chunk's output rows
+/// stream past it.
+const KBLOCK: usize = 64;
+
+/// Workers to actually use for a kernel of `macs` multiply-accumulates
+/// over `rows` independent output rows.
+fn plan_threads(threads: usize, rows: usize, macs: usize) -> usize {
+    if threads <= 1 || rows < 2 {
+        return 1;
+    }
+    threads.min(rows).min((macs / MIN_MACS_PER_THREAD).max(1))
+}
+
+/// out[m,n] += a[m,k] @ b[k,n], k-blocked, parallel over fixed row chunks.
+///
+/// §Perf: the `av == 0.0` skip stays — `a` is a post-ReLU activation on
+/// the forward path and the ReLU-masked `g_z` on the backward path, both
+/// with a large zero fraction (EXPERIMENTS.md §Perf).
+#[allow(clippy::too_many_arguments)]
+fn matmul_acc(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k_dim: usize,
+    n: usize,
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), m * k_dim);
     debug_assert_eq!(b.len(), k_dim * n);
     debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let a_row = &a[i * k_dim..(i + 1) * k_dim];
-        let o_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in a_row.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in o_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
-        }
+    let nt = plan_threads(threads, m, m * k_dim * n);
+    if nt <= 1 {
+        matmul_acc_chunk(a, b, out, 0, k_dim, n);
+        return;
     }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+            scope.spawn(move || matmul_acc_chunk(a, b, out_chunk, ci * chunk, k_dim, n));
+        }
+    });
 }
 
-/// out[m,n] = a[m,k] @ b[n,k]^T
-///
-/// §Perf: the naive per-(i,j) dot-product version ran ~2.5x slower per
-/// FLOP than `matmul_acc` (serial accumulator chains defeat
-/// autovectorization). Restructured as 4-row blocks of dot products so
-/// the compiler keeps 4 independent accumulator vectors in flight;
-/// see EXPERIMENTS.md §Perf for the before/after.
-fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
-    debug_assert_eq!(b.len(), n * k_dim);
-    for i in 0..m {
-        let a_row = &a[i * k_dim..(i + 1) * k_dim];
-        let o_row = &mut out[i * n..(i + 1) * n];
-        let mut j = 0;
-        // 4 output columns at a time: 4 independent accumulators
-        while j + 4 <= n {
-            let b0 = &b[j * k_dim..(j + 1) * k_dim];
-            let b1 = &b[(j + 1) * k_dim..(j + 2) * k_dim];
-            let b2 = &b[(j + 2) * k_dim..(j + 3) * k_dim];
-            let b3 = &b[(j + 3) * k_dim..(j + 4) * k_dim];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for kk in 0..k_dim {
+/// One row-chunk of `matmul_acc`: rows [row0, row0 + out.len()/n) of the
+/// result. Accumulation is ascending-k per element regardless of chunking
+/// or blocking — the determinism contract.
+#[allow(clippy::needless_range_loop)]
+fn matmul_acc_chunk(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, k_dim: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut kb = 0;
+    while kb < k_dim {
+        let ke = (kb + KBLOCK).min(k_dim);
+        for i in 0..rows {
+            let a_row = &a[(row0 + i) * k_dim..(row0 + i + 1) * k_dim];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for kk in kb..ke {
                 let av = a_row[kk];
-                s0 += av * b0[kk];
-                s1 += av * b1[kk];
-                s2 += av * b2[kk];
-                s3 += av * b3[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
             }
-            o_row[j] = s0;
-            o_row[j + 1] = s1;
-            o_row[j + 2] = s2;
-            o_row[j + 3] = s3;
-            j += 4;
         }
-        while j < n {
-            let b_row = &b[j * k_dim..(j + 1) * k_dim];
-            o_row[j] = a_row.iter().zip(b_row).map(|(x, y)| x * y).sum();
-            j += 1;
-        }
+        kb = ke;
     }
 }
 
-/// out[m,n] = a[k,m]^T @ b[k,n]
+/// out[m,n] = a[k,m]^T @ b[k,n], parallel over fixed output-row chunks.
 ///
 /// §Perf note: the `av == 0.0` skip stays — `a` here is the stashed input
 /// activation (post-ReLU, a large zero fraction in hidden layers); removing
 /// the branch was tried and regressed residual-layer bwd ~15%
 /// (EXPERIMENTS.md §Perf, iteration 2).
-fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: usize) {
+#[allow(clippy::too_many_arguments)]
+fn matmul_tn(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k_dim: usize,
+    n: usize,
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), k_dim * m);
+    debug_assert_eq!(b.len(), k_dim * n);
+    debug_assert_eq!(out.len(), m * n);
+    let nt = plan_threads(threads, m, m * k_dim * n);
+    if nt <= 1 {
+        matmul_tn_chunk(a, b, out, 0, m, k_dim, n);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+            scope.spawn(move || matmul_tn_chunk(a, b, out_chunk, ci * chunk, m, k_dim, n));
+        }
+    });
+}
+
+/// One row-chunk of `matmul_tn`: rows [col0, col0 + out.len()/n) of the
+/// result (columns of `a`). Each worker reads all of `b` but writes a
+/// disjoint row range, accumulating ascending-k — deterministic under any
+/// chunking.
+#[allow(clippy::too_many_arguments)]
+fn matmul_tn_chunk(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    col0: usize,
+    m: usize,
+    k_dim: usize,
+    n: usize,
+) {
     out.iter_mut().for_each(|o| *o = 0.0);
+    let rows = out.len() / n;
     for kk in 0..k_dim {
         let a_row = &a[kk * m..(kk + 1) * m];
         let b_row = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in a_row.iter().enumerate() {
+        for i in 0..rows {
+            let av = a_row[col0 + i];
             if av == 0.0 {
                 continue;
             }
@@ -105,63 +187,112 @@ fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k_dim: usize, n: u
     }
 }
 
-/// Forward one dense layer: h_out = act(x·W + b) [+ x].
+/// dst[cols, rows] = src[rows, cols]^T (row-major both sides).
+fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for r in 0..rows {
+        let s_row = &src[r * cols..(r + 1) * cols];
+        for (c, &v) in s_row.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+}
+
+/// Caller-owned scratch for one layer's backward pass: the masked output
+/// gradient and the transposed weight panel. Sized lazily on first use
+/// ([`Tensor::ensure_shape`]), allocation-free after that.
+#[derive(Debug, Clone, Default)]
+pub struct BwdScratch {
+    /// g_z = g_out ⊙ mask(z > 0), [batch, d_out]
+    pub g_z: Tensor,
+    /// W^T, [d_out, d_in] — lets the g_x matmul run in saxpy form
+    pub w_t: Tensor,
+}
+
+impl BwdScratch {
+    pub fn new() -> BwdScratch {
+        BwdScratch {
+            g_z: Tensor::empty(),
+            w_t: Tensor::empty(),
+        }
+    }
+}
+
+/// Forward one dense layer into `out`: out = act(x·W + b) [+ x].
 ///
-/// x: [B, d_in], w: [d_in, d_out] (row-major), b: [d_out].
-pub fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, kind: LayerKind) -> Tensor {
+/// x: [B, d_in], w: [d_in, d_out] (row-major), b: [d_out]. `out` is sized
+/// to [B, d_out] on first use and reused allocation-free afterwards.
+pub fn dense_fwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    kind: LayerKind,
+    out: &mut Tensor,
+    threads: usize,
+) {
     let (batch, d_in) = (x.shape()[0], x.shape()[1]);
     let d_out = w.shape()[1];
     debug_assert_eq!(w.shape()[0], d_in);
     debug_assert_eq!(b.len(), d_out);
-    let mut out = Tensor::zeros(&[batch, d_out]);
-    matmul_acc(x.data(), w.data(), out.data_mut(), batch, d_in, d_out);
+    out.ensure_shape(&[batch, d_out]);
+    out.fill_zero();
+    matmul_acc(x.data(), w.data(), out.data_mut(), batch, d_in, d_out, threads);
     let od = out.data_mut();
+    let (bd, xd) = (b.data(), x.data());
     for i in 0..batch {
         for j in 0..d_out {
-            let mut z = od[i * d_out + j] + b.data()[j];
+            let mut z = od[i * d_out + j] + bd[j];
             match kind {
                 LayerKind::Linear => {}
                 LayerKind::Relu => z = z.max(0.0),
-                LayerKind::Residual => z = z.max(0.0) + x.data()[i * d_out + j],
+                LayerKind::Residual => z = z.max(0.0) + xd[i * d_out + j],
             }
             od[i * d_out + j] = z;
         }
     }
-    out
 }
 
-/// Backward one dense layer; mirrors `ref.dense_bwd_ref`.
+/// Backward one dense layer into caller-owned buffers; mirrors
+/// `ref.dense_bwd_ref`.
 ///
-/// Returns (g_x, g_w, g_b). `h_out` must be the forward output computed
-/// with exactly these `x` and `w` (the staleness buffers guarantee it).
-pub fn dense_bwd(
+/// `h_out` must be the forward output computed with exactly these `x` and
+/// `w` (the staleness buffers guarantee it). Writes (g_x, g_w, g_b); all
+/// out-buffers and `scratch` are sized on first use and reused
+/// allocation-free afterwards.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_bwd_into(
     x: &Tensor,
     w: &Tensor,
     h_out: &Tensor,
     g_out: &Tensor,
     kind: LayerKind,
-) -> (Tensor, Tensor, Tensor) {
+    g_x: &mut Tensor,
+    g_w: &mut Tensor,
+    g_b: &mut Tensor,
+    scratch: &mut BwdScratch,
+    threads: usize,
+) {
     let (batch, d_in) = (x.shape()[0], x.shape()[1]);
     let d_out = w.shape()[1];
+    debug_assert_eq!(h_out.shape(), &[batch, d_out]);
+    debug_assert_eq!(g_out.shape(), &[batch, d_out]);
 
     // g_z = g_out * mask(z > 0), mask reconstructed from stored outputs
-    let mut g_z = g_out.clone();
+    scratch.g_z.ensure_shape(&[batch, d_out]);
+    let gz = scratch.g_z.data_mut();
+    gz.copy_from_slice(g_out.data());
     match kind {
         LayerKind::Linear => {}
         LayerKind::Relu => {
-            for (g, &h) in g_z.data_mut().iter_mut().zip(h_out.data()) {
+            for (g, &h) in gz.iter_mut().zip(h_out.data()) {
                 if h <= 0.0 {
                     *g = 0.0;
                 }
             }
         }
         LayerKind::Residual => {
-            for ((g, &h), &xv) in g_z
-                .data_mut()
-                .iter_mut()
-                .zip(h_out.data())
-                .zip(x.data())
-            {
+            for ((g, &h), &xv) in gz.iter_mut().zip(h_out.data()).zip(x.data()) {
                 if h - xv <= 0.0 {
                     *g = 0.0;
                 }
@@ -169,31 +300,57 @@ pub fn dense_bwd(
         }
     }
 
-    let mut g_x = Tensor::zeros(&[batch, d_in]);
-    matmul_nt(g_z.data(), w.data(), g_x.data_mut(), batch, d_out, d_in);
+    // g_x = g_z @ W^T: transpose W once (d_in·d_out, cheap next to the
+    // B·d_in·d_out matmul) so the product runs as vectorizable saxpy rows
+    scratch.w_t.ensure_shape(&[d_out, d_in]);
+    transpose_into(w.data(), scratch.w_t.data_mut(), d_in, d_out);
+    g_x.ensure_shape(&[batch, d_in]);
+    g_x.fill_zero();
+    matmul_acc(
+        scratch.g_z.data(),
+        scratch.w_t.data(),
+        g_x.data_mut(),
+        batch,
+        d_out,
+        d_in,
+        threads,
+    );
     if kind == LayerKind::Residual {
         g_x.axpy(1.0, g_out);
     }
 
-    let mut g_w = Tensor::zeros(&[d_in, d_out]);
-    matmul_tn(x.data(), g_z.data(), g_w.data_mut(), d_in, batch, d_out);
+    // g_w = x^T @ g_z
+    g_w.ensure_shape(&[d_in, d_out]);
+    matmul_tn(
+        x.data(),
+        scratch.g_z.data(),
+        g_w.data_mut(),
+        d_in,
+        batch,
+        d_out,
+        threads,
+    );
 
-    let mut g_b = Tensor::zeros(&[d_out]);
+    // g_b = column sums of g_z
+    g_b.ensure_shape(&[d_out]);
+    g_b.fill_zero();
+    let gbd = g_b.data_mut();
+    let gz = scratch.g_z.data();
     for i in 0..batch {
-        for j in 0..d_out {
-            g_b.data_mut()[j] += g_z.data()[i * d_out + j];
+        let row = &gz[i * d_out..(i + 1) * d_out];
+        for (o, &v) in gbd.iter_mut().zip(row) {
+            *o += v;
         }
     }
-    (g_x, g_w, g_b)
 }
 
-/// Fused softmax cross-entropy: (mean_loss, g_logits) with the 1/B mean
-/// baked into the gradient (eq. (4)).
-pub fn softmax_xent(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor) {
+/// Fused softmax cross-entropy into `g`: returns the mean loss with the
+/// 1/B mean baked into the gradient (eq. (4)). `g` is sized on first use.
+pub fn softmax_xent_into(logits: &Tensor, onehot: &Tensor, g: &mut Tensor) -> f32 {
     let (batch, classes) = (logits.shape()[0], logits.shape()[1]);
     debug_assert_eq!(onehot.shape(), logits.shape());
+    g.ensure_shape(&[batch, classes]);
     let inv_b = 1.0 / batch as f32;
-    let mut g = Tensor::zeros(&[batch, classes]);
     let mut loss = 0.0f64;
     for i in 0..batch {
         let row = &logits.data()[i * classes..(i + 1) * classes];
@@ -211,14 +368,18 @@ pub fn softmax_xent(logits: &Tensor, onehot: &Tensor) -> (f32, Tensor) {
             g_row[j] = ((row[j] - m).exp() / sum - oh[j]) * inv_b;
         }
     }
-    ((loss * inv_b as f64) as f32, g)
+    (loss * inv_b as f64) as f32
 }
 
 /// Full-network forward over a layer stack; params are (W, b) pairs.
+/// Evaluation/oracle utility — allocates its own activations and runs
+/// single-threaded; the training hot path goes through the workspace API.
 pub fn full_forward(x: &Tensor, params: &[(Tensor, Tensor)], layers: &[LayerShape]) -> Tensor {
     let mut h = x.clone();
+    let mut out = Tensor::empty();
     for ((w, b), layer) in params.iter().zip(layers) {
-        h = dense_fwd(&h, w, b, layer.kind);
+        dense_fwd_into(&h, w, b, layer.kind, &mut out, 1);
+        std::mem::swap(&mut h, &mut out);
     }
     h
 }
@@ -231,12 +392,13 @@ pub fn full_loss(
     layers: &[LayerShape],
 ) -> f32 {
     let logits = full_forward(x, params, layers);
-    softmax_xent(&logits, onehot).0
+    softmax_xent_into(&logits, onehot, &mut Tensor::empty())
 }
 
 /// Whole-network gradient via per-layer backward chaining: the exact
 /// computation the coordinator distributes across K modules, in one place.
-/// Returns mean-scaled (g_w, g_b) per layer.
+/// Returns mean-scaled (g_w, g_b) per layer. Oracle utility — owns its
+/// workspace; the distributed hot path reuses per-agent workspaces.
 pub fn full_backward(
     x: &Tensor,
     onehot: &Tensor,
@@ -246,16 +408,32 @@ pub fn full_backward(
     // forward, stashing every activation (same as the staleness buffers)
     let mut acts = vec![x.clone()];
     for ((w, b), layer) in params.iter().zip(layers) {
-        let h = dense_fwd(acts.last().unwrap(), w, b, layer.kind);
+        let mut h = Tensor::empty();
+        dense_fwd_into(acts.last().unwrap(), w, b, layer.kind, &mut h, 1);
         acts.push(h);
     }
-    let (loss, mut g) = softmax_xent(acts.last().unwrap(), onehot);
+    let mut g = Tensor::empty();
+    let loss = softmax_xent_into(acts.last().unwrap(), onehot, &mut g);
     let mut grads = Vec::with_capacity(params.len());
+    let mut scratch = BwdScratch::new();
+    let mut g_x = Tensor::empty();
     for i in (0..params.len()).rev() {
         let (w, _) = &params[i];
-        let (g_x, g_w, g_b) = dense_bwd(&acts[i], w, &acts[i + 1], &g, layers[i].kind);
+        let (mut g_w, mut g_b) = (Tensor::empty(), Tensor::empty());
+        dense_bwd_into(
+            &acts[i],
+            w,
+            &acts[i + 1],
+            &g,
+            layers[i].kind,
+            &mut g_x,
+            &mut g_w,
+            &mut g_b,
+            &mut scratch,
+            1,
+        );
         grads.push((g_w, g_b));
-        g = g_x;
+        std::mem::swap(&mut g, &mut g_x);
     }
     grads.reverse();
     (loss, grads)
@@ -299,18 +477,21 @@ mod tests {
         t
     }
 
+    fn fwd(x: &Tensor, w: &Tensor, b: &Tensor, kind: LayerKind) -> Tensor {
+        let mut out = Tensor::empty();
+        dense_fwd_into(x, w, b, kind, &mut out, 1);
+        out
+    }
+
     #[test]
     fn dense_fwd_known_values() {
         // x = [[1, 2]], W = [[1, 0], [0, 1]], b = [0.5, -10]
         let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
         let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
         let b = Tensor::from_vec(&[2], vec![0.5, -10.0]).unwrap();
-        let lin = dense_fwd(&x, &w, &b, LayerKind::Linear);
-        assert_eq!(lin.data(), &[1.5, -8.0]);
-        let relu = dense_fwd(&x, &w, &b, LayerKind::Relu);
-        assert_eq!(relu.data(), &[1.5, 0.0]);
-        let res = dense_fwd(&x, &w, &b, LayerKind::Residual);
-        assert_eq!(res.data(), &[2.5, 2.0]);
+        assert_eq!(fwd(&x, &w, &b, LayerKind::Linear).data(), &[1.5, -8.0]);
+        assert_eq!(fwd(&x, &w, &b, LayerKind::Relu).data(), &[1.5, 0.0]);
+        assert_eq!(fwd(&x, &w, &b, LayerKind::Residual).data(), &[2.5, 2.0]);
     }
 
     #[test]
@@ -320,7 +501,8 @@ mod tests {
         for i in 0..4 {
             onehot.data_mut()[i * 10 + i] = 1.0;
         }
-        let (loss, g) = softmax_xent(&logits, &onehot);
+        let mut g = Tensor::empty();
+        let loss = softmax_xent_into(&logits, &onehot, &mut g);
         assert!((loss - (10.0f32).ln()).abs() < 1e-5);
         // gradient rows sum to zero
         for i in 0..4 {
@@ -333,7 +515,8 @@ mod tests {
     fn softmax_stable_with_large_logits() {
         let logits = Tensor::from_vec(&[1, 2], vec![1000.0, -1000.0]).unwrap();
         let onehot = Tensor::from_vec(&[1, 2], vec![1.0, 0.0]).unwrap();
-        let (loss, g) = softmax_xent(&logits, &onehot);
+        let mut g = Tensor::empty();
+        let loss = softmax_xent_into(&logits, &onehot, &mut g);
         assert!(loss.is_finite() && loss < 1e-3);
         assert!(g.data().iter().all(|v| v.is_finite()));
     }
@@ -380,29 +563,97 @@ mod tests {
     #[test]
     fn matmul_variants_agree_with_naive() {
         let mut rng = Pcg32::new(5);
-        let (m, k, n) = (7, 5, 6);
+        // m > KBLOCK would need k > KBLOCK to exercise blocking; keep both
+        let (m, k, n) = (7, 70, 6);
         let a = rand_tensor(&mut rng, &[m, k]);
-        let bt = rand_tensor(&mut rng, &[n, k]);
         let at = rand_tensor(&mut rng, &[k, m]);
         let b = rand_tensor(&mut rng, &[k, n]);
 
-        // nt: a @ bt^T
+        // acc: a @ b
         let mut out = vec![0.0; m * n];
-        matmul_nt(a.data(), bt.data(), &mut out, m, k, n);
+        matmul_acc(a.data(), b.data(), &mut out, m, k, n, 1);
         for i in 0..m {
             for j in 0..n {
-                let want: f32 = (0..k).map(|kk| a.data()[i * k + kk] * bt.data()[j * k + kk]).sum();
-                assert!((out[i * n + j] - want).abs() < 1e-4);
+                let want: f32 = (0..k).map(|kk| a.data()[i * k + kk] * b.data()[kk * n + j]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-3);
             }
         }
         // tn: at^T @ b
         let mut out2 = vec![0.0; m * n];
-        matmul_tn(at.data(), b.data(), &mut out2, m, k, n);
+        matmul_tn(at.data(), b.data(), &mut out2, m, k, n, 1);
         for i in 0..m {
             for j in 0..n {
                 let want: f32 = (0..k).map(|kk| at.data()[kk * m + i] * b.data()[kk * n + j]).sum();
-                assert!((out2[i * n + j] - want).abs() < 1e-4);
+                assert!((out2[i * n + j] - want).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::new(6);
+        let t = rand_tensor(&mut rng, &[3, 5]);
+        let mut tt = vec![0.0; 15];
+        transpose_into(t.data(), &mut tt, 3, 5);
+        let mut back = vec![0.0; 15];
+        transpose_into(&tt, &mut back, 5, 3);
+        assert_eq!(t.data(), &back[..]);
+    }
+
+    #[test]
+    fn kernels_bit_identical_across_thread_counts() {
+        // fixed chunk boundaries + ascending-k accumulation per output
+        // element ⇒ any worker count computes the same bits. Sizes chosen
+        // so plan_threads actually fans out (> MIN_MACS_PER_THREAD each).
+        let mut rng = Pcg32::new(7);
+        let (m, k, n) = (64, 160, 128); // 1.3M MACs ⇒ 2 workers at threads=2
+        let a = rand_tensor(&mut rng, &[m, k]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+        let at = rand_tensor(&mut rng, &[k, m]);
+        for threads in [2usize, 3, 5] {
+            let mut serial = vec![0.0; m * n];
+            matmul_acc(a.data(), b.data(), &mut serial, m, k, n, 1);
+            let mut par = vec![0.0; m * n];
+            matmul_acc(a.data(), b.data(), &mut par, m, k, n, threads);
+            assert_eq!(serial, par, "matmul_acc threads={threads}");
+
+            let mut serial2 = vec![0.0; m * n];
+            matmul_tn(at.data(), b.data(), &mut serial2, m, k, n, 1);
+            let mut par2 = vec![0.0; m * n];
+            matmul_tn(at.data(), b.data(), &mut par2, m, k, n, threads);
+            assert_eq!(serial2, par2, "matmul_tn threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dense_layers_bit_identical_across_thread_counts() {
+        let mut rng = Pcg32::new(8);
+        let (b_sz, d) = (64, 128); // above the fan-out threshold
+        let x = rand_tensor(&mut rng, &[b_sz, d]);
+        let w = he_init(&mut rng, d, d);
+        let bias = rand_tensor(&mut rng, &[d]);
+        for kind in [LayerKind::Relu, LayerKind::Residual] {
+            let (mut h1, mut h4) = (Tensor::empty(), Tensor::empty());
+            dense_fwd_into(&x, &w, &bias, kind, &mut h1, 1);
+            dense_fwd_into(&x, &w, &bias, kind, &mut h4, 4);
+            assert_eq!(h1, h4, "{kind:?} fwd");
+
+            let g = rand_tensor(&mut rng, &[b_sz, d]);
+            let run = |threads: usize| {
+                let (mut gx, mut gw, mut gb) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+                let mut scratch = BwdScratch::new();
+                dense_bwd_into(
+                    &x, &w, &h1, &g, kind, &mut gx, &mut gw, &mut gb, &mut scratch, threads,
+                );
+                (gx, gw, gb)
+            };
+            assert_eq!(run(1), run(4), "{kind:?} bwd");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_auto_is_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
     }
 }

@@ -7,5 +7,5 @@ pub mod sim;
 pub mod threaded;
 
 pub use module_agent::{ActMsg, ModuleAgent};
-pub use sim::{GroupIterOut, PipelineGroup};
+pub use sim::{GroupStepOut, PipelineGroup};
 pub use threaded::ThreadedEngine;

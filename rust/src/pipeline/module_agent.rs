@@ -1,12 +1,20 @@
 //! One pipeline module: the compute state of agent (s,k).
 //!
 //! Owns the current weights of its layer slice [lo, hi), the in-flight
-//! batch stashes, and the forward/backward operations against a
-//! `ComputeBackend`. Gradients are evaluated at the **stashed** weight
-//! snapshot (eq. (10): w(τ+k−1)), never at the current weights.
+//! batch stashes, a preallocated gradient [`Workspace`], and the
+//! forward/backward operations against a `ComputeBackend`. Gradients are
+//! evaluated at the **stashed** weight snapshot (eq. (10): w(τ+k−1)),
+//! never at the current weights.
+//!
+//! §Perf — the steady-state loop is allocation-free
+//! (tests/alloc_guard.rs): consumed stashes are recycled through a free
+//! pool instead of being dropped and re-cloned per batch, all gradients
+//! and backward scratch live in the per-agent workspace, and the
+//! compensation strategies correct the workspace buffers in place.
 
 use crate::compensate::{Compensated, Compensator, CompensatorKind, CompensatorState};
 use crate::error::{Error, Result};
+use crate::nn::BwdScratch;
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Stash, StashQueue};
 use crate::tensor::Tensor;
@@ -14,10 +22,34 @@ use crate::trainer::opt::{ModuleOptimizer, OptimizerKind};
 
 /// Activation message travelling down the pipeline: the boundary
 /// activation plus the batch's labels (consumed by the last module).
+/// The sim engine recycles these through per-edge pools; the threaded
+/// engine moves them over mpsc channels.
 #[derive(Debug, Clone)]
 pub struct ActMsg {
     pub x: Tensor,
     pub onehot: Tensor,
+}
+
+impl ActMsg {
+    /// Unsized placeholder for a message pool slot — no allocation; the
+    /// first `copy_resize` onto it sizes the buffers.
+    pub fn empty() -> ActMsg {
+        ActMsg {
+            x: Tensor::empty(),
+            onehot: Tensor::empty(),
+        }
+    }
+}
+
+/// Per-agent gradient workspace, sized lazily from the first backward's
+/// stash shapes and reused allocation-free from then on.
+struct Workspace {
+    /// g_x[off]: gradient flowing into layer (lo+off)'s input, [B, d_in]
+    g_x: Vec<Tensor>,
+    /// (g_W, g_b) per local layer — what the optimizer consumes
+    grads: Vec<(Tensor, Tensor)>,
+    /// per-layer backward scratch (masked gradient, transposed weights)
+    scratch: Vec<BwdScratch>,
 }
 
 pub struct ModuleAgent {
@@ -29,12 +61,18 @@ pub struct ModuleAgent {
     /// current weights ŵ_{s,k}(t) for the local layers
     pub params: Vec<(Tensor, Tensor)>,
     stash: StashQueue,
+    /// recycled stash slots: consumed by `forward`, refilled by
+    /// `apply_update` once a batch's snapshot is no longer needed
+    free: Vec<Stash>,
+    /// the stash consumed by the last `backward` — its `params` are the
+    /// forward-time snapshot the compensation strategies correct against;
+    /// `apply_update` recycles it into `free`
+    pending: Option<Stash>,
+    ws: Option<Workspace>,
+    /// loss-head gradient buffer [B, classes] (last module only)
+    loss_g: Tensor,
     opt: ModuleOptimizer,
     comp: Box<dyn Compensator>,
-    /// forward-time weight snapshot of the batch last backwarded (set by
-    /// [`Self::backward`], consumed by [`Self::apply_update`] in the same
-    /// iteration — the delay-compensation strategies correct against it)
-    fwd_snapshot: Option<Vec<(Tensor, Tensor)>>,
 }
 
 impl ModuleAgent {
@@ -70,9 +108,12 @@ impl ModuleAgent {
             hi,
             params,
             stash: StashQueue::new(),
+            free: Vec::new(),
+            pending: None,
+            ws: None,
+            loss_g: Tensor::empty(),
             opt: ModuleOptimizer::new(opt),
             comp: comp.build(),
-            fwd_snapshot: None,
         }
     }
 
@@ -118,44 +159,79 @@ impl ModuleAgent {
 
     /// Drop all transient state — in-flight stashes, optimizer velocity,
     /// and compensator accumulation — leaving only the weights
-    /// (weights-only restore: the pipeline refills).
+    /// (weights-only restore: the pipeline refills). The workspace and
+    /// free pool survive; their shapes are still valid.
     pub fn reset_transient(&mut self) {
         self.stash.replace(Vec::new());
         self.opt.set_velocity(Vec::new());
         self.comp.set_state(CompensatorState::default());
-        self.fwd_snapshot = None;
+        self.pending = None;
+    }
+
+    /// A stash slot with buffers shaped for this module's layer slice.
+    fn fresh_stash(&self, x: &Tensor, onehot: &Tensor) -> Stash {
+        let batch = x.shape()[0];
+        let mut acts = Vec::with_capacity(self.params.len() + 1);
+        acts.push(Tensor::zeros(x.shape()));
+        for (w, _) in &self.params {
+            acts.push(Tensor::zeros(&[batch, w.shape()[1]]));
+        }
+        Stash {
+            batch_id: 0,
+            acts,
+            params: self
+                .params
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
+                .collect(),
+            onehot: Some(Tensor::zeros(onehot.shape())),
+        }
     }
 
     /// Forward batch `tau` through the local layers with CURRENT weights,
     /// stashing activations + a weight snapshot for the later backward.
-    /// Returns the boundary activation to send downstream.
+    /// The boundary activation stays readable via [`Self::boundary_msg`]
+    /// until the next forward.
     pub fn forward(
         &mut self,
         backend: &dyn ComputeBackend,
         tau: i64,
-        msg: ActMsg,
-    ) -> Result<ActMsg> {
-        let acts = backend.module_fwd(self.lo, self.hi, &msg.x, &self.params)?;
-        let out = acts.last().unwrap().clone();
-        self.stash.push(Stash {
-            batch_id: tau,
-            acts,
-            params: self.params.clone(),
-            onehot: Some(msg.onehot.clone()),
-        })?;
-        Ok(ActMsg {
-            x: out,
-            onehot: msg.onehot,
-        })
+        x: &Tensor,
+        onehot: &Tensor,
+    ) -> Result<()> {
+        let mut stash = match self.free.pop() {
+            Some(s) => s,
+            None => self.fresh_stash(x, onehot),
+        };
+        stash.batch_id = tau;
+        stash.acts[0].copy_resize(x);
+        for (snap, cur) in stash.params.iter_mut().zip(&self.params) {
+            snap.0.copy_from(&cur.0);
+            snap.1.copy_from(&cur.1);
+        }
+        match stash.onehot.as_mut() {
+            Some(t) => t.copy_resize(onehot),
+            None => stash.onehot = Some(onehot.clone()),
+        }
+        backend.module_fwd_into(self.lo, &stash.params, &mut stash.acts)?;
+        self.stash.push(stash)?;
+        Ok(())
     }
 
-    /// For the LAST module: mean loss + g_logits of stashed batch `tau`
-    /// (its forward ran earlier this same iteration).
-    pub fn loss_grad_of(
-        &self,
-        backend: &dyn ComputeBackend,
-        tau: i64,
-    ) -> Result<(f32, Tensor)> {
+    /// The boundary activation and labels of the most recently forwarded
+    /// batch (what gets sent downstream).
+    pub fn boundary_msg(&self) -> (&Tensor, &Tensor) {
+        let stash = self.stash.newest().expect("boundary_msg before forward");
+        (
+            stash.acts.last().unwrap(),
+            stash.onehot.as_ref().expect("stash carries labels"),
+        )
+    }
+
+    /// For the LAST module: mean loss of stashed batch `tau` (its forward
+    /// ran earlier this same iteration). Leaves g_logits in the loss
+    /// buffer for the immediately following [`Self::backward`].
+    pub fn loss_of(&mut self, backend: &dyn ComputeBackend, tau: i64) -> Result<f32> {
         let stash = self
             .stash
             .get(tau)
@@ -165,74 +241,120 @@ impl ModuleAgent {
             .onehot
             .as_ref()
             .ok_or_else(|| Error::other("stash missing labels"))?;
-        backend.loss_grad(logits, onehot)
+        backend.loss_grad_into(logits, onehot, &mut self.loss_g)
     }
 
-    /// Backward batch `tau`: consume its stash, chain `layer_bwd` from the
-    /// local top layer down, all evaluated at the stashed weight snapshot.
-    /// Returns (gradient to send upstream, per-local-layer (g_W, g_b)).
+    fn ensure_ws(&mut self, stash: &Stash) {
+        let want = self.params.len();
+        let ok = self.ws.as_ref().is_some_and(|ws| {
+            ws.g_x.len() == want
+                && ws.g_x.first().map(|t| t.shape()) == stash.acts.first().map(|t| t.shape())
+        });
+        if ok {
+            return;
+        }
+        self.ws = Some(Workspace {
+            g_x: stash.acts[..want].iter().map(|a| Tensor::zeros(a.shape())).collect(),
+            grads: self
+                .params
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
+                .collect(),
+            scratch: (0..want).map(|_| BwdScratch::new()).collect(),
+        });
+    }
+
+    /// Backward batch `tau`: consume its stash, chain `layer_bwd_into`
+    /// from the local top layer down, all evaluated at the stashed weight
+    /// snapshot, into the workspace. `g_out` is the gradient arriving from
+    /// downstream; `None` means "use the loss-head gradient produced by
+    /// [`Self::loss_of`] this iteration" (the last module). Afterwards the
+    /// upstream gradient is readable via [`Self::upstream_grad`] and the
+    /// parameter gradients via [`Self::last_grads`].
     pub fn backward(
         &mut self,
         backend: &dyn ComputeBackend,
         tau: i64,
-        g_out: Tensor,
-    ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        g_out: Option<&Tensor>,
+    ) -> Result<()> {
         let stash = self.stash.pop(tau)?;
-        let mut g = g_out;
-        let n = self.n_layers();
-        let mut grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
+        self.ensure_ws(&stash);
+        let n = self.params.len();
+        let ws = self.ws.as_mut().expect("workspace just ensured");
+        let Workspace { g_x, grads, scratch } = ws;
         for off in (0..n).rev() {
-            let (w, _) = &stash.params[off];
-            let (g_x, g_w, g_b) = backend.layer_bwd(
+            let (gx_head, gx_tail) = g_x.split_at_mut(off + 1);
+            let g_at_out: &Tensor = if off + 1 < n {
+                &gx_tail[0]
+            } else {
+                match g_out {
+                    Some(g) => g,
+                    None => &self.loss_g,
+                }
+            };
+            let (gw, gb) = &mut grads[off];
+            backend.layer_bwd_into(
                 self.lo + off,
                 &stash.acts[off],
-                w,
+                &stash.params[off].0,
                 &stash.acts[off + 1],
-                &g,
+                g_at_out,
+                &mut gx_head[off],
+                gw,
+                gb,
+                &mut scratch[off],
             )?;
-            grads.push((g_w, g_b));
-            g = g_x;
         }
-        grads.reverse();
-        // keep the forward-time snapshot for the compensation step this
-        // same iteration (apply_update consumes it)
-        self.fwd_snapshot = Some(stash.params);
-        Ok((g, grads))
+        // keep the stash (its params are the forward-time snapshot) for
+        // the compensation step this same iteration; recycle any leftover
+        if let Some(prev) = self.pending.take() {
+            self.free.push(prev);
+        }
+        self.pending = Some(stash);
+        Ok(())
+    }
+
+    /// The gradient to send upstream (w.r.t. this module's input), valid
+    /// after [`Self::backward`] until the next backward.
+    pub fn upstream_grad(&self) -> &Tensor {
+        &self.ws.as_ref().expect("upstream_grad before backward").g_x[0]
+    }
+
+    /// The workspace parameter gradients of the last [`Self::backward`].
+    pub fn last_grads(&self) -> &[(Tensor, Tensor)] {
+        &self.ws.as_ref().expect("last_grads before backward").grads
     }
 
     /// Apply the stale-gradient update (eq. (13a), generalized to the
     /// configured optimizer and compensation strategy):
     /// û = optimizer(ŵ, compensate(∇̂); η·scale), with scale = |D_s|/N
-    /// (the trainer passes it). Takes the gradients by value so strategies
-    /// can correct in place without copying. Returns the correction norm
-    /// ‖g_eff − g_raw‖₂ (0 for the raw baseline or a held update).
-    pub fn apply_update(&mut self, eta: f64, scale: f64, grads: Vec<(Tensor, Tensor)>) -> f64 {
-        debug_assert_eq!(grads.len(), self.params.len());
-        let snapshot = self.fwd_snapshot.take().unwrap_or_default();
-        // every engine path runs backward (which stores the snapshot)
+    /// (the trainer passes it). Consumes the workspace gradients of the
+    /// preceding [`Self::backward`] and recycles its stash. Returns the
+    /// correction norm ‖g_eff − g_raw‖₂ (0 for the raw baseline or a held
+    /// update).
+    pub fn apply_update(&mut self, eta: f64, scale: f64) -> f64 {
+        let pending = self.pending.take();
+        // every engine path runs backward (which parks the snapshot stash)
         // immediately before apply_update; a missing snapshot is the same
         // scheduling-bug class StashQueue reports as Error::Schedule
-        debug_assert_eq!(
-            snapshot.len(),
-            self.params.len(),
-            "apply_update without a preceding backward"
-        );
-        let snap_ref: &[(Tensor, Tensor)] = if snapshot.len() == self.params.len() {
-            &snapshot
-        } else {
+        debug_assert!(pending.is_some(), "apply_update without a preceding backward");
+        let ws = self.ws.as_mut().expect("apply_update before any backward");
+        let snap: &[(Tensor, Tensor)] = match &pending {
+            Some(s) => &s.params,
             // release fallback: correct against current weights (zero drift)
-            &self.params
+            None => &self.params,
         };
-        match self.comp.compensate(grads, &self.params, snap_ref) {
-            Compensated::Apply {
-                grads: eff,
-                correction_norm,
-            } => {
-                self.opt.step(&mut self.params, &eff, eta, scale);
+        let norm = match self.comp.compensate(&mut ws.grads, &self.params, snap) {
+            Compensated::Apply { correction_norm } => {
+                self.opt.step(&mut self.params, &ws.grads, eta, scale);
                 correction_norm
             }
             Compensated::Hold => 0.0,
+        };
+        if let Some(s) = pending {
+            self.free.push(s);
         }
+        norm
     }
 }
 
@@ -262,30 +384,32 @@ mod tests {
     #[test]
     fn forward_stashes_and_emits_boundary() {
         let (backend, mut agent, msg) = setup();
-        let out = agent.forward(&backend, 0, msg).unwrap();
-        assert_eq!(out.x.shape(), &[4, 5]);
+        agent.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
+        let (bx, boh) = agent.boundary_msg();
+        assert_eq!(bx.shape(), &[4, 5]);
+        assert_eq!(boh.shape(), &[4, 3]);
         assert_eq!(agent.inflight(), 1);
     }
 
     #[test]
     fn backward_uses_snapshot_weights() {
         let (backend, mut agent, msg) = setup();
-        agent.forward(&backend, 0, msg.clone()).unwrap();
+        agent.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
 
         // mutate CURRENT weights after the forward; backward must still use
         // the stashed snapshot, so g_w is identical to an unmutated run
         let mut agent2 = ModuleAgent::new(0, 0, 2, agent.params.clone());
         // rebuild same stash in agent2
-        agent2.forward(&backend, 0, msg).unwrap();
+        agent2.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
         for (w, _) in agent.params.iter_mut() {
             w.scale(5.0);
         }
 
         let g_out = Tensor::from_vec(&[4, 5], vec![0.1; 20]).unwrap();
-        let (g_in_a, grads_a) = agent.backward(&backend, 0, g_out.clone()).unwrap();
-        let (g_in_b, grads_b) = agent2.backward(&backend, 0, g_out).unwrap();
-        assert_eq!(g_in_a, g_in_b);
-        assert_eq!(grads_a, grads_b);
+        agent.backward(&backend, 0, Some(&g_out)).unwrap();
+        agent2.backward(&backend, 0, Some(&g_out)).unwrap();
+        assert_eq!(agent.upstream_grad(), agent2.upstream_grad());
+        assert_eq!(agent.last_grads(), agent2.last_grads());
         assert_eq!(agent.inflight(), 0);
     }
 
@@ -293,10 +417,11 @@ mod tests {
     fn update_moves_downhill() {
         let (backend, mut agent, msg) = setup();
         let before = agent.params.clone();
-        agent.forward(&backend, 0, msg).unwrap();
+        agent.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
         let g_out = Tensor::from_vec(&[4, 5], vec![1.0; 20]).unwrap();
-        let (_, grads) = agent.backward(&backend, 0, g_out).unwrap();
-        agent.apply_update(0.1, 0.5, grads.clone());
+        agent.backward(&backend, 0, Some(&g_out)).unwrap();
+        let grads = agent.last_grads().to_vec();
+        agent.apply_update(0.1, 0.5);
         for ((w_new, _), ((w_old, _), (g_w, _))) in
             agent.params.iter().zip(before.iter().zip(&grads))
         {
@@ -307,7 +432,22 @@ mod tests {
     }
 
     #[test]
-    fn loss_grad_reads_stash() {
+    fn stash_slots_recycle_through_the_free_pool() {
+        let (backend, mut agent, msg) = setup();
+        let g_out = Tensor::from_vec(&[4, 5], vec![0.1; 20]).unwrap();
+        // steady-state cycle: forward / backward / update, many times —
+        // after the first full cycle the free pool feeds every forward
+        for tau in 0..6i64 {
+            agent.forward(&backend, tau, &msg.x, &msg.onehot).unwrap();
+            agent.backward(&backend, tau, Some(&g_out)).unwrap();
+            agent.apply_update(0.05, 1.0);
+        }
+        assert_eq!(agent.inflight(), 0);
+        assert_eq!(agent.free.len(), 1, "one slot cycling, none leaked");
+    }
+
+    #[test]
+    fn loss_reads_stash() {
         // single-module pipeline: module covers all layers incl. logits
         let layers = resmlp_layers(6, 5, 0, 3);
         let backend = NativeBackend::new(layers.clone(), 4);
@@ -320,9 +460,12 @@ mod tests {
         for i in 0..4 {
             onehot.data_mut()[i * 3 + rng.below(3)] = 1.0;
         }
-        agent.forward(&backend, 0, ActMsg { x, onehot }).unwrap();
-        let (loss, g) = agent.loss_grad_of(&backend, 0).unwrap();
+        agent.forward(&backend, 0, &x, &onehot).unwrap();
+        let loss = agent.loss_of(&backend, 0).unwrap();
         assert!(loss > 0.0 && loss.is_finite());
-        assert_eq!(g.shape(), &[4, 3]);
+        assert_eq!(agent.loss_g.shape(), &[4, 3]);
+        // backward with None consumes the loss-head gradient
+        agent.backward(&backend, 0, None).unwrap();
+        assert_eq!(agent.upstream_grad().shape(), &[4, 6]);
     }
 }

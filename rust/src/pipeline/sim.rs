@@ -3,26 +3,32 @@
 //! Executes Algorithm 1's per-agent body for all K modules of data-group s
 //! at each global iteration, with one-iteration message delays enforced by
 //! [`Mailbox`]es — numerically identical to the threaded engine
-//! (tests/integration_engines.rs) but single-threaded and reproducible.
+//! (tests/integration_engines.rs) but single-threaded per group and
+//! reproducible.
+//!
+//! §Perf — steady state allocates nothing (tests/alloc_guard.rs): the
+//! mini-batch is sampled into a reusable buffer, boundary activations and
+//! upstream gradients travel in per-edge message buffers that cycle
+//! between the mailboxes and a free pool, and each module's stash slots
+//! and gradient workspace are recycled by the agent itself.
 
 use crate::data::{Dataset, MiniBatchSampler};
 use crate::error::Result;
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
-use crate::trainer::checkpoint::{GroupResume, ModuleResume};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Mailbox, PipelineMode, Schedule};
 use crate::tensor::Tensor;
+use crate::trainer::checkpoint::{GroupResume, ModuleResume};
 
-/// Output of one iteration of one data-group.
-#[derive(Debug, Clone, Default)]
-pub struct GroupIterOut {
+/// Output of one iteration of one data-group (plain value — the
+/// per-module correction norms stay in the group, see
+/// [`PipelineGroup::last_correction`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupStepOut {
     /// mini-batch loss observed at the last module (None during fill)
     pub loss: Option<f32>,
     /// id of the batch that loss belongs to
     pub loss_batch: Option<i64>,
-    /// per-module compensation correction norms ‖g_eff − g_raw‖₂ (one per
-    /// module k; 0 for the raw baseline, held updates, or pipeline fill)
-    pub correction: Vec<f64>,
 }
 
 pub struct PipelineGroup {
@@ -34,6 +40,15 @@ pub struct PipelineGroup {
     act_mail: Vec<Mailbox<ActMsg>>,
     /// grad_mail[k]: gradient messages addressed to module k (from k+1)
     grad_mail: Vec<Mailbox<Tensor>>,
+    /// recycled activation-message buffers for the edge into module k
+    act_pool: Vec<Vec<ActMsg>>,
+    /// recycled gradient buffers for the edge into module k
+    grad_pool: Vec<Vec<Tensor>>,
+    /// module-0 input batch, sampled into and reused every iteration
+    src: ActMsg,
+    /// per-module compensation correction norms ‖g_eff − g_raw‖₂ of the
+    /// last step (0 for the raw baseline, held updates, or pipeline fill)
+    last_correction: Vec<f64>,
     /// |D_s|/N gradient scale of eq. (13a)
     grad_scale: f64,
 }
@@ -61,6 +76,10 @@ impl PipelineGroup {
             sampler,
             act_mail: (0..k).map(|_| Mailbox::new()).collect(),
             grad_mail: (0..k).map(|_| Mailbox::new()).collect(),
+            act_pool: (0..k).map(|_| Vec::new()).collect(),
+            grad_pool: (0..k).map(|_| Vec::new()).collect(),
+            src: ActMsg::empty(),
+            last_correction: vec![0.0; k],
             modules,
             grad_scale,
         }
@@ -78,6 +97,11 @@ impl PipelineGroup {
         self.grad_scale
     }
 
+    /// Per-module correction norms of the last [`Self::step`].
+    pub fn last_correction(&self) -> &[f64] {
+        &self.last_correction
+    }
+
     /// Run iteration `t` for this group: forward phase, backward phase,
     /// stale-gradient update (eq. (13a)). Gossip (eq. (13b)) happens at the
     /// trainer level across groups. `eta` is η_t.
@@ -87,38 +111,52 @@ impl PipelineGroup {
         ds: &Dataset,
         t: i64,
         eta: f64,
-    ) -> Result<GroupIterOut> {
+    ) -> Result<GroupStepOut> {
         let k_modules = self.k();
-        let mut out = GroupIterOut {
-            correction: vec![0.0; k_modules],
-            ..GroupIterOut::default()
-        };
+        let mut out = GroupStepOut::default();
+        for c in self.last_correction.iter_mut() {
+            *c = 0.0;
+        }
 
         // ---- forward phase ----
         // FD: activations cross module boundaries with a one-iteration
         // delay (mailboxes). DBP (backward-unlocked baseline): forward
         // locking is retained, so the boundary is carried directly to the
-        // next module within this same iteration.
+        // next module within this same iteration — through the same
+        // recycled edge buffers, skipping the mailbox.
         let direct = self.sched.mode() == PipelineMode::BackwardUnlocked;
         let mut carry: Option<ActMsg> = None;
         for k in 0..k_modules {
             if let Some(tau) = self.sched.forward_batch(t, k) {
-                let msg = if k == 0 {
-                    let (x, onehot) = self.sampler.sample_batch(ds);
-                    ActMsg { x, onehot }
+                let consumed: Option<ActMsg> = if k == 0 {
+                    self.sampler
+                        .sample_batch_into(ds, &mut self.src.x, &mut self.src.onehot);
+                    None
                 } else if direct {
-                    carry.take().expect("locked forward chain broken")
+                    Some(carry.take().expect("locked forward chain broken"))
                 } else {
-                    self.act_mail[k]
-                        .take(tau)
-                        .unwrap_or_else(|| panic!("missing act for batch {tau} at module {k}"))
+                    Some(self.act_mail[k].take(tau).unwrap_or_else(|| {
+                        panic!("missing act for batch {tau} at module {k}")
+                    }))
                 };
-                let boundary = self.modules[k].forward(backend, tau, msg)?;
+                match &consumed {
+                    Some(m) => self.modules[k].forward(backend, tau, &m.x, &m.onehot)?,
+                    None => {
+                        self.modules[k].forward(backend, tau, &self.src.x, &self.src.onehot)?
+                    }
+                }
+                if let Some(m) = consumed {
+                    self.act_pool[k].push(m);
+                }
                 if k + 1 < k_modules {
+                    let mut buf = self.act_pool[k + 1].pop().unwrap_or_else(ActMsg::empty);
+                    let (bx, boh) = self.modules[k].boundary_msg();
+                    buf.x.copy_resize(bx);
+                    buf.onehot.copy_resize(boh);
                     if direct {
-                        carry = Some(boundary);
+                        carry = Some(buf);
                     } else {
-                        self.act_mail[k + 1].post(tau, boundary);
+                        self.act_mail[k + 1].post(tau, buf);
                     }
                 }
             }
@@ -126,30 +164,28 @@ impl PipelineGroup {
 
         // ---- backward + update phase ----
         for k in (0..k_modules).rev() {
-            let grads = match self.sched.backward_batch(t, k) {
-                Some(tau) => {
-                    let g_out = if k == k_modules - 1 {
-                        // last module: loss grad of the batch it just forwarded
-                        let (loss, g) = self.modules[k].loss_grad_of(backend, tau)?;
-                        out.loss = Some(loss);
-                        out.loss_batch = Some(tau);
-                        g
-                    } else {
-                        self.grad_mail[k]
-                            .take(tau)
-                            .unwrap_or_else(|| panic!("missing grad for batch {tau} at module {k}"))
-                    };
-                    let (g_in, grads) = self.modules[k].backward(backend, tau, g_out)?;
-                    if k > 0 {
-                        self.grad_mail[k - 1].post(tau, g_in);
-                    }
-                    Some(grads)
+            if let Some(tau) = self.sched.backward_batch(t, k) {
+                let consumed: Option<Tensor> = if k == k_modules - 1 {
+                    // last module: loss grad of the batch it just forwarded
+                    out.loss = Some(self.modules[k].loss_of(backend, tau)?);
+                    out.loss_batch = Some(tau);
+                    None
+                } else {
+                    Some(self.grad_mail[k].take(tau).unwrap_or_else(|| {
+                        panic!("missing grad for batch {tau} at module {k}")
+                    }))
+                };
+                self.modules[k].backward(backend, tau, consumed.as_ref())?;
+                if let Some(g) = consumed {
+                    self.grad_pool[k].push(g);
                 }
-                None => None, // eq. (10): zero gradient before warm-up
-            };
-            if let Some(grads) = grads {
-                out.correction[k] = self.modules[k].apply_update(eta, self.grad_scale, grads);
-            }
+                if k > 0 {
+                    let mut buf = self.grad_pool[k - 1].pop().unwrap_or_else(Tensor::empty);
+                    buf.copy_resize(self.modules[k].upstream_grad());
+                    self.grad_mail[k - 1].post(tau, buf);
+                }
+                self.last_correction[k] = self.modules[k].apply_update(eta, self.grad_scale);
+            } // eq. (10): zero gradient before warm-up
         }
 
         // ---- iteration boundary: messages become visible next iteration ----
@@ -285,6 +321,13 @@ mod tests {
         // in-flight stashes stay bounded by the schedule's limit
         for (k, m) in g.modules.iter().enumerate() {
             assert!(m.inflight() <= g.sched.max_inflight(k));
+        }
+        // edge pools hold at most a couple of cycling buffers each
+        for pool in &g.act_pool {
+            assert!(pool.len() <= 2, "act pool grew: {}", pool.len());
+        }
+        for pool in &g.grad_pool {
+            assert!(pool.len() <= 2, "grad pool grew: {}", pool.len());
         }
     }
 

@@ -16,6 +16,14 @@
 //!   buffered channel messages — so a restored engine continues the exact
 //!   iterate stream (and snapshots are portable to/from the sim engine).
 //!
+//! §Perf — agents run on the workspace compute API: stash slots and
+//! gradient buffers recycle inside each [`ModuleAgent`], batches sample
+//! into per-slot buffers, and gossip copies û into preallocated shared
+//! slots and mixes into a persistent swap buffer instead of cloning the
+//! parameter set twice per round. The remaining steady-state allocations
+//! are the channel messages (mpsc sends own their payload) and the
+//! per-iteration thread scope below.
+//!
 //! Trade-off: `step` scopes one thread per agent per iteration (spawn +
 //! join each step) rather than parking persistent workers. That keeps the
 //! engine free of cross-step synchronization state at the cost of S×K
@@ -49,6 +57,12 @@ struct AgentSlot {
     agent: ModuleAgent,
     /// only the k = 0 agent samples (Algorithm 1: agent (s,1))
     sampler: Option<MiniBatchSampler>,
+    /// k = 0 only: reusable sampled-batch buffers
+    batch_x: Tensor,
+    batch_oh: Tensor,
+    /// persistent gossip mixing buffer (swapped with `agent.params` after
+    /// each mix round instead of allocating fresh zeros per round)
+    mix_buf: Vec<(Tensor, Tensor)>,
     grad_scale: f64,
     act_tx: Option<Sender<ActMsg>>,
     act_rx: Option<Receiver<ActMsg>>,
@@ -63,13 +77,13 @@ pub struct ThreadedEngine {
     ds: Arc<Dataset>,
     layers: Vec<LayerShape>,
     sched: Schedule,
-    staleness: Vec<usize>,
     /// s-major: agents[s * K + k]
     agents: Vec<AgentSlot>,
     /// P row for each s (ascending-r order, matching GossipMixer)
     p_rows: Vec<Vec<(usize, f64)>>,
-    /// gossip slots: gossip_slots[k][s] = û_{s,k}(t) posted per round
-    gossip_slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>>,
+    /// gossip slots: gossip_slots[k][s] = û_{s,k}(t), preallocated once
+    /// and copied into per round (no per-iteration clone of the params)
+    gossip_slots: Vec<Vec<Mutex<Vec<(Tensor, Tensor)>>>>,
     barrier: Barrier,
     loss_tx: Sender<(usize, f32)>,
     loss_rx: Receiver<(usize, f32)>,
@@ -78,6 +92,10 @@ pub struct ThreadedEngine {
     corr_rx: Receiver<(usize, usize, f64)>,
     /// fixed probe batch for eval (same derivation as the sim engine)
     probe: (Tensor, Tensor),
+    /// constant per run — refcount-bumped into every event
+    staleness_arc: Arc<[usize]>,
+    /// cached all-zeros correction (the `none` baseline's steady state)
+    zero_corr: Arc<[f64]>,
     iter_time_s: f64,
     t: i64,
     t_offset: usize,
@@ -124,8 +142,20 @@ impl ThreadedEngine {
             vec![vec![(0usize, 1.0f64)]]
         };
 
-        let gossip_slots: Vec<Vec<Mutex<Option<Vec<(Tensor, Tensor)>>>>> = (0..k_modules)
-            .map(|_| (0..s_groups).map(|_| Mutex::new(None)).collect())
+        // preallocated zero-shaped slots: agents copy û in per round
+        let zeros_like = |lo: usize, hi: usize| -> Vec<(Tensor, Tensor)> {
+            init[lo..hi]
+                .iter()
+                .map(|(w, b)| (Tensor::zeros(w.shape()), Tensor::zeros(b.shape())))
+                .collect()
+        };
+        let gossip_slots: Vec<Vec<Mutex<Vec<(Tensor, Tensor)>>>> = bounds
+            .iter()
+            .map(|&(lo, hi)| {
+                (0..s_groups)
+                    .map(|_| Mutex::new(zeros_like(lo, hi)))
+                    .collect()
+            })
             .collect();
 
         let mut agents = Vec::with_capacity(s_groups * k_modules);
@@ -149,6 +179,9 @@ impl ThreadedEngine {
                             cfg.seed ^ (0xBA7C << 8) ^ s as u64,
                         )
                     }),
+                    batch_x: Tensor::empty(),
+                    batch_oh: Tensor::empty(),
+                    mix_buf: zeros_like(lo, hi),
                     grad_scale: shards[s].weight(),
                     act_tx: None,
                     act_rx: None,
@@ -166,7 +199,8 @@ impl ThreadedEngine {
         let (loss_tx, loss_rx) = channel();
         let (corr_tx, corr_rx) = channel();
         let mut engine = ThreadedEngine {
-            staleness: (0..k_modules).map(|k| sched.staleness(k)).collect(),
+            staleness_arc: (0..k_modules).map(|k| sched.staleness(k)).collect(),
+            zero_corr: vec![0.0; k_modules].into(),
             sched,
             layers,
             agents,
@@ -364,41 +398,52 @@ impl Engine for ThreadedEngine {
                     // returns the failure instead of deadlocking.
                     let work = (|| -> Result<()> {
                         if let Some(tau) = sched.forward_batch(t, k) {
-                            let msg = if k == 0 {
-                                let (x, onehot) =
-                                    slot.sampler.as_mut().unwrap().sample_batch(ds);
-                                ActMsg { x, onehot }
+                            if k == 0 {
+                                slot.sampler.as_mut().unwrap().sample_batch_into(
+                                    ds,
+                                    &mut slot.batch_x,
+                                    &mut slot.batch_oh,
+                                );
+                                slot.agent
+                                    .forward(backend, tau, &slot.batch_x, &slot.batch_oh)?;
                             } else {
-                                slot.act_rx
+                                let msg = slot
+                                    .act_rx
                                     .as_ref()
                                     .unwrap()
                                     .recv()
-                                    .map_err(|_| Error::other("act channel closed"))?
-                            };
-                            let boundary = slot.agent.forward(backend, tau, msg)?;
+                                    .map_err(|_| Error::other("act channel closed"))?;
+                                slot.agent.forward(backend, tau, &msg.x, &msg.onehot)?;
+                            }
                             if let Some(tx) = &slot.act_tx {
-                                tx.send(boundary)
-                                    .map_err(|_| Error::other("act send failed"))?;
+                                let (bx, boh) = slot.agent.boundary_msg();
+                                tx.send(ActMsg {
+                                    x: bx.clone(),
+                                    onehot: boh.clone(),
+                                })
+                                .map_err(|_| Error::other("act send failed"))?;
                             }
                         }
                         if let Some(tau) = sched.backward_batch(t, k) {
-                            let g_out = if k == k_modules - 1 {
-                                let (loss, g) = slot.agent.loss_grad_of(backend, tau)?;
+                            let g_in: Option<Tensor> = if k == k_modules - 1 {
+                                let loss = slot.agent.loss_of(backend, tau)?;
                                 let _ = loss_tx.send((s, loss));
-                                g
+                                None
                             } else {
-                                slot.grad_rx
-                                    .as_ref()
-                                    .unwrap()
-                                    .recv()
-                                    .map_err(|_| Error::other("grad channel closed"))?
+                                Some(
+                                    slot.grad_rx
+                                        .as_ref()
+                                        .unwrap()
+                                        .recv()
+                                        .map_err(|_| Error::other("grad channel closed"))?,
+                                )
                             };
-                            let (g_in, grads) = slot.agent.backward(backend, tau, g_out)?;
+                            slot.agent.backward(backend, tau, g_in.as_ref())?;
                             if let Some(tx) = &slot.grad_tx {
-                                tx.send(g_in)
+                                tx.send(slot.agent.upstream_grad().clone())
                                     .map_err(|_| Error::other("grad send failed"))?;
                             }
-                            let norm = slot.agent.apply_update(eta, slot.grad_scale, grads);
+                            let norm = slot.agent.apply_update(eta, slot.grad_scale);
                             let _ = corr_tx.send((s, k, norm));
                         }
                         Ok(())
@@ -415,27 +460,36 @@ impl Engine for ThreadedEngine {
                     // same number of barrier waits
                     for _round in 0..gossip_rounds {
                         if s_groups > 1 {
-                            *gossip_slots[k][s].lock().unwrap() =
-                                Some(slot.agent.params.clone());
+                            {
+                                // post û into the preallocated slot (copy,
+                                // not clone — runs on the error path too so
+                                // peers mix against current weights)
+                                let mut posted = gossip_slots[k][s].lock().unwrap();
+                                for (dst, src) in posted.iter_mut().zip(&slot.agent.params) {
+                                    dst.0.copy_from(&src.0);
+                                    dst.1.copy_from(&src.1);
+                                }
+                            }
                             barrier.wait(); // all û posted
                             if work.is_ok() {
-                                let mut mixed: Vec<(Tensor, Tensor)> = slot
-                                    .agent
-                                    .params
-                                    .iter()
-                                    .map(|(w, b)| {
-                                        (Tensor::zeros(w.shape()), Tensor::zeros(b.shape()))
-                                    })
-                                    .collect();
+                                // zero + axpy in ascending-r order into the
+                                // persistent mix buffer, then swap with the
+                                // live params — same arithmetic as
+                                // GossipMixer::mix, no allocation
+                                for (mw, mb) in slot.mix_buf.iter_mut() {
+                                    mw.fill_zero();
+                                    mb.fill_zero();
+                                }
                                 for &(r, wgt) in p_row {
                                     let guard = gossip_slots[k][r].lock().unwrap();
-                                    let u_r = guard.as_ref().unwrap();
-                                    for (acc, (uw, ub)) in mixed.iter_mut().zip(u_r) {
+                                    for (acc, (uw, ub)) in
+                                        slot.mix_buf.iter_mut().zip(guard.iter())
+                                    {
                                         acc.0.axpy(wgt as f32, uw);
                                         acc.1.axpy(wgt as f32, ub);
                                     }
                                 }
-                                slot.agent.params = mixed;
+                                std::mem::swap(&mut slot.agent.params, &mut slot.mix_buf);
                             }
                             barrier.wait(); // all reads done before next write
                         } else {
@@ -465,12 +519,13 @@ impl Engine for ThreadedEngine {
         // slot the reported norms back into (s, k) position, then reduce
         // through the same shared group-mean as the sim engine
         // (agents that held or had no scheduled backward stay at 0.0,
-        // exactly like GroupIterOut::correction)
+        // exactly like PipelineGroup::last_correction)
         let mut per_group = vec![vec![0.0f64; k_modules]; s_groups];
         while let Ok((s, k, norm)) = self.corr_rx.try_recv() {
             per_group[s][k] = norm;
         }
         let correction = crate::compensate::group_mean_correction(k_modules, &per_group);
+        let correction = crate::session::event::correction_arc(&self.zero_corr, &correction);
 
         self.t += 1;
         // LOCKSTEP with Trainer::step's record assembly (trainer/mod.rs):
@@ -485,7 +540,7 @@ impl Engine for ThreadedEngine {
             eval_acc: None,
             delta: None,
             sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
-            staleness: self.staleness.clone(),
+            staleness: Arc::clone(&self.staleness_arc),
             correction,
         };
         if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
@@ -665,6 +720,7 @@ mod tests {
             dataset_n: 240,
             delta_every: 0,
             eval_every: 0,
+            compute_threads: 0,
         }
     }
 

@@ -7,15 +7,27 @@
 //!   * [`super::xla_backend::XlaBackend`] — AOT HLO artifacts through PJRT,
 //!     the production hot path.
 //!
+//! The contract is **workspace-based**: every kernel writes into
+//! caller-owned out-buffers (`layer_fwd_into` / `layer_bwd_into` /
+//! `loss_grad_into`). Out-buffers are sized by the backend on first use
+//! ([`crate::tensor::Tensor::ensure_shape`]) and reused allocation-free
+//! from then on — pass [`crate::tensor::Tensor::empty`] to let the
+//! backend size them. The steady-state training loop allocates nothing on
+//! the native backend (tests/alloc_guard.rs).
+//!
 //! Contract notes (shared with python/compile/model.py):
-//!   * `layer_bwd` must be called with the weight snapshot used by that
-//!     batch's forward pass (eq. (10) evaluates gradients at w(τ+k−1));
-//!   * `loss_grad` returns the gradient of the MEAN batch loss; the
-//!     |D_s|/N data-parallel scaling is applied by the trainer (eq. (13a)).
+//!   * `layer_bwd_into` must be called with the weight snapshot used by
+//!     that batch's forward pass (eq. (10) evaluates gradients at
+//!     w(τ+k−1));
+//!   * `loss_grad_into` returns the MEAN batch loss and writes its
+//!     gradient; the |D_s|/N data-parallel scaling is applied by the
+//!     trainer (eq. (13a)).
 
 use crate::error::Result;
 use crate::nn::layer::LayerShape;
 use crate::tensor::Tensor;
+
+pub use crate::nn::BwdScratch;
 
 pub trait ComputeBackend: Sync {
     /// Human-readable backend name (metrics, logs).
@@ -27,23 +39,57 @@ pub trait ComputeBackend: Sync {
     /// Mini-batch size every call must use.
     fn batch(&self) -> usize;
 
-    /// h_out = act(x·W + b) [+ x] for layer `idx`.
-    fn layer_fwd(&self, idx: usize, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor>;
+    /// out = act(x·W + b) [+ x] for layer `idx`. `out` is (re)sized by the
+    /// backend; a pre-sized buffer is reused without allocating.
+    fn layer_fwd_into(
+        &self,
+        idx: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()>;
 
-    /// (g_x, g_w, g_b) for layer `idx`.
-    fn layer_bwd(
+    /// (g_x, g_w, g_b) for layer `idx`, written into caller-owned buffers.
+    /// `scratch` holds the backend's per-layer intermediates (masked
+    /// gradient, transposed weights); backends that do not need it ignore
+    /// it.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_bwd_into(
         &self,
         idx: usize,
         x: &Tensor,
         w: &Tensor,
         h_out: &Tensor,
         g_out: &Tensor,
-    ) -> Result<(Tensor, Tensor, Tensor)>;
+        g_x: &mut Tensor,
+        g_w: &mut Tensor,
+        g_b: &mut Tensor,
+        scratch: &mut BwdScratch,
+    ) -> Result<()>;
 
-    /// (mean_loss, g_logits) on one mini-batch.
-    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)>;
+    /// Mean loss of one mini-batch; g_logits written into `g`.
+    fn loss_grad_into(&self, logits: &Tensor, onehot: &Tensor, g: &mut Tensor) -> Result<f32>;
 
-    /// Mean loss of a full parameter set on one batch (evaluation path).
+    /// Forward one pipeline module's layer share [lo, lo + params.len())
+    /// through caller-owned activation buffers: `acts[0]` holds the input,
+    /// `acts[i+1]` receives layer `lo + i`'s output (the stash layout).
+    fn module_fwd_into(
+        &self,
+        lo: usize,
+        params: &[(Tensor, Tensor)],
+        acts: &mut [Tensor],
+    ) -> Result<()> {
+        debug_assert_eq!(acts.len(), params.len() + 1);
+        for (off, (w, b)) in params.iter().enumerate() {
+            let (head, tail) = acts.split_at_mut(off + 1);
+            self.layer_fwd_into(lo + off, &head[off], w, b, &mut tail[0])?;
+        }
+        Ok(())
+    }
+
+    /// Mean loss of a full parameter set on one batch (evaluation path —
+    /// allocates its own activations; not part of the training hot loop).
     /// Default composes per-layer forwards; XLA overrides with the fused
     /// eval artifact.
     fn eval_loss(
@@ -53,37 +99,21 @@ pub trait ComputeBackend: Sync {
         params: &[(Tensor, Tensor)],
     ) -> Result<f32> {
         let mut h = x.clone();
+        let mut out = Tensor::empty();
         for (idx, (w, b)) in params.iter().enumerate() {
-            h = self.layer_fwd(idx, &h, w, b)?;
+            self.layer_fwd_into(idx, &h, w, b, &mut out)?;
+            std::mem::swap(&mut h, &mut out);
         }
-        Ok(self.loss_grad(&h, onehot)?.0)
-    }
-
-    /// Forward through layers [lo, hi) — one pipeline module's share.
-    fn module_fwd(
-        &self,
-        lo: usize,
-        hi: usize,
-        x: &Tensor,
-        params: &[(Tensor, Tensor)],
-    ) -> Result<Vec<Tensor>> {
-        debug_assert_eq!(params.len(), hi - lo);
-        let mut acts = Vec::with_capacity(hi - lo + 1);
-        acts.push(x.clone());
-        for (off, (w, b)) in params.iter().enumerate() {
-            let h = self.layer_fwd(lo + off, acts.last().unwrap(), w, b)?;
-            acts.push(h);
-        }
-        Ok(acts)
+        self.loss_grad_into(&h, onehot, &mut Tensor::empty())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::native::NativeBackend;
     use crate::nn::init::init_params;
     use crate::nn::resmlp_layers;
+    use crate::runtime::native::NativeBackend;
     use crate::util::rng::Pcg32;
 
     #[test]
@@ -104,16 +134,23 @@ mod tests {
     }
 
     #[test]
-    fn module_fwd_stashes_all_activations() {
+    fn module_fwd_into_fills_all_activations() {
         let layers = resmlp_layers(6, 5, 2, 3);
         let backend = NativeBackend::new(layers.clone(), 4);
         let mut rng = Pcg32::new(2);
         let params = init_params(&mut rng, &layers);
         let mut x = Tensor::zeros(&[4, 6]);
         rng.fill_normal(x.data_mut(), 1.0);
-        let acts = backend.module_fwd(0, 2, &x, &params[0..2]).unwrap();
-        assert_eq!(acts.len(), 3);
+        // caller-owned stash layout: input + one buffer per local layer,
+        // sized by the backend on first use
+        let mut acts = vec![x.clone(), Tensor::empty(), Tensor::empty()];
+        backend.module_fwd_into(0, &params[0..2], &mut acts).unwrap();
         assert_eq!(acts[0].shape(), &[4, 6]);
+        assert_eq!(acts[1].shape(), &[4, 5]);
         assert_eq!(acts[2].shape(), &[4, 5]);
+        // second call reuses the now-sized buffers and must agree
+        let snapshot = acts[2].clone();
+        backend.module_fwd_into(0, &params[0..2], &mut acts).unwrap();
+        assert_eq!(acts[2], snapshot);
     }
 }

@@ -12,7 +12,7 @@ pub mod pjrt;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
 
-pub use backend::ComputeBackend;
+pub use backend::{BwdScratch, ComputeBackend};
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 #[cfg(feature = "xla")]
@@ -52,19 +52,25 @@ impl BackendKind {
 }
 
 /// Build a backend: XLA from an artifact dir, or native from a layer stack.
+/// `threads` feeds the native kernels' worker count (0 = available
+/// parallelism); the XLA path ignores it (PJRT schedules internally).
 pub fn make_backend(
     kind: BackendKind,
     artifacts_dir: &std::path::Path,
     layers: Vec<LayerShape>,
     batch: usize,
+    threads: usize,
 ) -> Result<Box<dyn ComputeBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new(layers, batch))),
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_threads(layers, batch, threads))),
         #[cfg(feature = "xla")]
-        BackendKind::Xla => Ok(Box::new(XlaBackend::load(artifacts_dir)?)),
+        BackendKind::Xla => {
+            let _ = threads;
+            Ok(Box::new(XlaBackend::load(artifacts_dir)?))
+        }
         #[cfg(not(feature = "xla"))]
         BackendKind::Xla => {
-            let _ = artifacts_dir;
+            let _ = (artifacts_dir, threads);
             Err(crate::error::Error::Config(
                 "built without the `xla` feature; rebuild with default features \
                  for the XLA backend"

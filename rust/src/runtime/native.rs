@@ -1,10 +1,13 @@
 //! Pure-Rust `ComputeBackend` over the `nn` module.
 //!
 //! No artifacts required — the coordinator and the whole test suite run on
-//! this backend anywhere; the XLA path is validated against it.
+//! this backend anywhere; the XLA path is validated against it. Kernels
+//! run in place on caller-owned workspaces and fan out over
+//! `std::thread::scope` row chunks (`--compute-threads`; bit-identical to
+//! single-threaded by construction — see `nn` §Perf).
 
 use crate::error::{Error, Result};
-use crate::nn::{self, layer::LayerShape};
+use crate::nn::{self, layer::LayerShape, BwdScratch};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::Tensor;
 
@@ -12,11 +15,28 @@ use crate::tensor::Tensor;
 pub struct NativeBackend {
     layers: Vec<LayerShape>,
     batch: usize,
+    /// resolved kernel worker count (never 0)
+    threads: usize,
 }
 
 impl NativeBackend {
+    /// Default worker count: the machine's available parallelism.
     pub fn new(layers: Vec<LayerShape>, batch: usize) -> NativeBackend {
-        NativeBackend { layers, batch }
+        Self::with_threads(layers, batch, 0)
+    }
+
+    /// `threads = 0` means auto (available parallelism); `1` pins the
+    /// kernels to the calling thread (the allocation-guard test uses this).
+    pub fn with_threads(layers: Vec<LayerShape>, batch: usize, threads: usize) -> NativeBackend {
+        NativeBackend {
+            layers,
+            batch,
+            threads: nn::resolve_threads(threads),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn check_layer(&self, idx: usize) -> Result<LayerShape> {
@@ -40,25 +60,50 @@ impl ComputeBackend for NativeBackend {
         self.batch
     }
 
-    fn layer_fwd(&self, idx: usize, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    fn layer_fwd_into(
+        &self,
+        idx: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let layer = self.check_layer(idx)?;
-        Ok(nn::dense_fwd(x, w, b, layer.kind))
+        nn::dense_fwd_into(x, w, b, layer.kind, out, self.threads);
+        Ok(())
     }
 
-    fn layer_bwd(
+    #[allow(clippy::too_many_arguments)]
+    fn layer_bwd_into(
         &self,
         idx: usize,
         x: &Tensor,
         w: &Tensor,
         h_out: &Tensor,
         g_out: &Tensor,
-    ) -> Result<(Tensor, Tensor, Tensor)> {
+        g_x: &mut Tensor,
+        g_w: &mut Tensor,
+        g_b: &mut Tensor,
+        scratch: &mut BwdScratch,
+    ) -> Result<()> {
         let layer = self.check_layer(idx)?;
-        Ok(nn::dense_bwd(x, w, h_out, g_out, layer.kind))
+        nn::dense_bwd_into(
+            x,
+            w,
+            h_out,
+            g_out,
+            layer.kind,
+            g_x,
+            g_w,
+            g_b,
+            scratch,
+            self.threads,
+        );
+        Ok(())
     }
 
-    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)> {
-        Ok(nn::softmax_xent(logits, onehot))
+    fn loss_grad_into(&self, logits: &Tensor, onehot: &Tensor, g: &mut Tensor) -> Result<f32> {
+        Ok(nn::softmax_xent_into(logits, onehot, g))
     }
 }
 
@@ -78,15 +123,43 @@ mod tests {
         let mut x = Tensor::zeros(&[2, 5]);
         rng.fill_normal(x.data_mut(), 1.0);
 
-        let h = b.layer_fwd(0, &x, &params[0].0, &params[0].1).unwrap();
-        let h_direct = nn::dense_fwd(&x, &params[0].0, &params[0].1, layers[0].kind);
+        let mut h = Tensor::empty();
+        b.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut h).unwrap();
+        let mut h_direct = Tensor::empty();
+        nn::dense_fwd_into(&x, &params[0].0, &params[0].1, layers[0].kind, &mut h_direct, 1);
         assert_eq!(h, h_direct);
 
         let mut g = Tensor::zeros(h.shape());
         rng.fill_normal(g.data_mut(), 1.0);
-        let (gx, gw, gb) = b.layer_bwd(0, &x, &params[0].0, &h, &g).unwrap();
-        let (gx2, gw2, gb2) = nn::dense_bwd(&x, &params[0].0, &h, &g, layers[0].kind);
+        let (mut gx, mut gw, mut gb) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut scratch = BwdScratch::new();
+        b.layer_bwd_into(0, &x, &params[0].0, &h, &g, &mut gx, &mut gw, &mut gb, &mut scratch)
+            .unwrap();
+        let (mut gx2, mut gw2, mut gb2) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut scratch2 = BwdScratch::new();
+        nn::dense_bwd_into(
+            &x, &params[0].0, &h, &g, layers[0].kind,
+            &mut gx2, &mut gw2, &mut gb2, &mut scratch2, 1,
+        );
         assert_eq!((gx, gw, gb), (gx2, gw2, gb2));
+    }
+
+    #[test]
+    fn explicit_thread_counts_match_auto() {
+        // the workspace contract is thread-count independent bit for bit
+        let layers = resmlp_layers(6, 5, 1, 3);
+        let auto = NativeBackend::new(layers.clone(), 4);
+        let pinned = NativeBackend::with_threads(layers.clone(), 4, 1);
+        assert!(auto.threads() >= 1);
+        assert_eq!(pinned.threads(), 1);
+        let mut rng = Pcg32::new(4);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let (mut ha, mut hp) = (Tensor::empty(), Tensor::empty());
+        auto.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut ha).unwrap();
+        pinned.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut hp).unwrap();
+        assert_eq!(ha, hp);
     }
 
     #[test]
@@ -94,6 +167,7 @@ mod tests {
         let layers = resmlp_layers(5, 4, 0, 3);
         let b = NativeBackend::new(layers, 2);
         let t = Tensor::zeros(&[2, 5]);
-        assert!(b.layer_fwd(7, &t, &t, &t).is_err());
+        let mut out = Tensor::empty();
+        assert!(b.layer_fwd_into(7, &t, &t, &t, &mut out).is_err());
     }
 }

@@ -1,14 +1,18 @@
 //! XLA `ComputeBackend`: executes the AOT-compiled Pallas/JAX artifacts.
 //!
 //! Compiles every per-layer HLO module once at construction (the request
-//! path never touches Python or the compiler), then serves `layer_fwd` /
-//! `layer_bwd` / `loss_grad` straight off the PJRT CPU client.
+//! path never touches Python or the compiler), then serves
+//! `layer_fwd_into` / `layer_bwd_into` / `loss_grad_into` straight off the
+//! PJRT CPU client. PJRT owns the output buffers, so the `_into` contract
+//! is satisfied by moving the returned tensors into the caller's slots
+//! (the native backend is the allocation-free path; this one trades that
+//! for the AOT kernels).
 
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::nn::layer::LayerShape;
-use crate::runtime::backend::ComputeBackend;
+use crate::runtime::backend::{BwdScratch, ComputeBackend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pjrt::{Executable, PjRt};
 use crate::tensor::Tensor;
@@ -96,21 +100,36 @@ impl ComputeBackend for XlaBackend {
         self.batch
     }
 
-    fn layer_fwd(&self, idx: usize, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
-        let out = self.exe_for(idx, false)?.run(&[x, w, b])?;
-        out.into_iter()
+    fn layer_fwd_into(
+        &self,
+        idx: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let res = self.exe_for(idx, false)?.run(&[x, w, b])?;
+        *out = res
+            .into_iter()
             .next()
-            .ok_or_else(|| Error::Xla("layer_fwd returned empty tuple".into()))
+            .ok_or_else(|| Error::Xla("layer_fwd returned empty tuple".into()))?;
+        Ok(())
     }
 
-    fn layer_bwd(
+    #[allow(clippy::too_many_arguments)]
+    fn layer_bwd_into(
         &self,
         idx: usize,
         x: &Tensor,
         w: &Tensor,
         h_out: &Tensor,
         g_out: &Tensor,
-    ) -> Result<(Tensor, Tensor, Tensor)> {
+        g_x: &mut Tensor,
+        g_w: &mut Tensor,
+        g_b: &mut Tensor,
+        scratch: &mut BwdScratch,
+    ) -> Result<()> {
+        let _ = scratch; // the AOT kernel owns its intermediates
         let mut out = self.exe_for(idx, true)?.run(&[x, w, h_out, g_out])?;
         if out.len() != 3 {
             return Err(Error::Xla(format!(
@@ -118,13 +137,13 @@ impl ComputeBackend for XlaBackend {
                 out.len()
             )));
         }
-        let g_b = out.pop().unwrap();
-        let g_w = out.pop().unwrap();
-        let g_x = out.pop().unwrap();
-        Ok((g_x, g_w, g_b))
+        *g_b = out.pop().unwrap();
+        *g_w = out.pop().unwrap();
+        *g_x = out.pop().unwrap();
+        Ok(())
     }
 
-    fn loss_grad(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)> {
+    fn loss_grad_into(&self, logits: &Tensor, onehot: &Tensor, g: &mut Tensor) -> Result<f32> {
         let mut out = self.loss.run(&[logits, onehot])?;
         if out.len() != 2 {
             return Err(Error::Xla(format!(
@@ -132,9 +151,9 @@ impl ComputeBackend for XlaBackend {
                 out.len()
             )));
         }
-        let g = out.pop().unwrap();
+        *g = out.pop().unwrap();
         let loss = out.pop().unwrap();
-        Ok((loss.data()[0], g))
+        Ok(loss.data()[0])
     }
 
     fn eval_loss(
@@ -158,10 +177,12 @@ impl ComputeBackend for XlaBackend {
             None => {
                 // fall back to per-layer composition
                 let mut h = x.clone();
+                let mut out = Tensor::empty();
                 for (idx, (w, b)) in params.iter().enumerate() {
-                    h = self.layer_fwd(idx, &h, w, b)?;
+                    self.layer_fwd_into(idx, &h, w, b, &mut out)?;
+                    std::mem::swap(&mut h, &mut out);
                 }
-                Ok(self.loss_grad(&h, onehot)?.0)
+                self.loss_grad_into(&h, onehot, &mut Tensor::empty())
             }
         }
     }

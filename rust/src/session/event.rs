@@ -16,6 +16,7 @@
 
 use std::io::Write as _;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::metrics::Record;
@@ -23,6 +24,12 @@ use crate::util::json::Json;
 
 /// One engine iteration's observations (the streaming form of
 /// [`crate::metrics::Record`], plus the schedule's per-module staleness).
+///
+/// The per-module vectors are shared `Arc` slices so the engines can emit
+/// one event per iteration without allocating: `staleness` is constant
+/// for a run (one engine-cached slice, refcount-bumped per event) and
+/// `correction` reuses a cached all-zeros slice whenever nothing was
+/// corrected — the steady state of the `none` baseline.
 #[derive(Debug, Clone)]
 pub struct IterEvent {
     /// absolute iteration index (restore offset included)
@@ -40,10 +47,21 @@ pub struct IterEvent {
     /// modelled wall-clock time at the END of this iteration (sim clock)
     pub sim_time_s: f64,
     /// weight-update staleness per module, 2(K−1−k) in FD mode
-    pub staleness: Vec<usize>,
+    pub staleness: Arc<[usize]>,
     /// per-module compensation correction norm ‖g_eff − g_raw‖₂, group
     /// mean (zeros under the `none` baseline or while the pipeline fills)
-    pub correction: Vec<f64>,
+    pub correction: Arc<[f64]>,
+}
+
+/// Share `vals` as an event's correction field: the cached all-zeros
+/// slice when nothing was corrected (no allocation — the steady state of
+/// the `none` baseline), a fresh shared slice otherwise.
+pub(crate) fn correction_arc(zero: &Arc<[f64]>, vals: &[f64]) -> Arc<[f64]> {
+    if zero.len() == vals.len() && vals.iter().all(|&v| v == 0.0) {
+        Arc::clone(zero)
+    } else {
+        Arc::from(vals)
+    }
 }
 
 impl IterEvent {
@@ -65,8 +83,8 @@ impl IterEvent {
         j.set("t", self.t)
             .set("lr", self.lr)
             .set("sim_time_s", self.sim_time_s)
-            .set("staleness", self.staleness.clone())
-            .set("correction", self.correction.clone());
+            .set("staleness", self.staleness.to_vec())
+            .set("correction", self.correction.to_vec());
         let set_opt = |j: &mut Json, key: &str, v: Option<f64>| {
             if let Some(v) = v {
                 j.set(key, v);
@@ -121,9 +139,22 @@ mod tests {
             eval_acc: None,
             delta: Some(1e-3),
             sim_time_s: 0.25,
-            staleness: vec![2, 0],
-            correction: vec![0.01, 0.0],
+            staleness: Arc::from(vec![2, 0]),
+            correction: Arc::from(vec![0.01, 0.0]),
         }
+    }
+
+    #[test]
+    fn correction_arc_shares_the_zero_slice() {
+        let zero: Arc<[f64]> = Arc::from(vec![0.0, 0.0]);
+        let shared = correction_arc(&zero, &[0.0, 0.0]);
+        assert!(Arc::ptr_eq(&zero, &shared));
+        let fresh = correction_arc(&zero, &[0.1, 0.0]);
+        assert!(!Arc::ptr_eq(&zero, &fresh));
+        assert_eq!(&fresh[..], &[0.1, 0.0]);
+        // length mismatch (different K) never aliases the cache
+        let other = correction_arc(&zero, &[0.0]);
+        assert_eq!(other.len(), 1);
     }
 
     #[test]

@@ -166,6 +166,19 @@ impl SessionBuilder {
             Some(ds) => ds,
             None => Arc::new(crate::coordinator::build_dataset(&cfg)),
         };
+        // Split the worker budget between engine-level and kernel-level
+        // parallelism instead of multiplying them: the sim engine fans out
+        // over min(workers, S) concurrent groups, the threaded engine runs
+        // S×K agent threads — the kernels inside each context get the
+        // remaining share (≥ 1) so a default run never oversubscribes
+        // cores with nested scopes. Callers supplying a prebuilt backend
+        // (shared across sessions) choose its worker count themselves.
+        let resolved = crate::nn::resolve_threads(cfg.compute_threads);
+        let outer = match self.engine {
+            EngineKind::Sim => resolved.min(cfg.s),
+            EngineKind::Threaded => cfg.s * cfg.k,
+        };
+        let kernel_threads = (resolved / outer.max(1)).max(1);
         let backend: Arc<dyn ComputeBackend> = match self.backend {
             Some(b) => b,
             None => Arc::from(make_backend(
@@ -173,6 +186,7 @@ impl SessionBuilder {
                 &self.artifacts_dir,
                 cfg.model.layers(),
                 cfg.batch,
+                kernel_threads,
             )?),
         };
 
@@ -203,10 +217,11 @@ impl SessionBuilder {
         };
         engine.set_iter_time_s(iter_time_s);
 
+        let recorder = Recorder::with_capacity(cfg.iters);
         Ok(Session {
             cfg,
             engine,
-            recorder: Recorder::new(),
+            recorder,
             gamma,
             iter_time_s,
             backend,
@@ -301,7 +316,7 @@ impl Session {
     /// refill semantics otherwise) and reset the session recorder.
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         self.engine.restore(ck)?;
-        self.recorder = Recorder::new();
+        self.recorder = Recorder::with_capacity(self.cfg.iters);
         Ok(())
     }
 
@@ -364,6 +379,7 @@ mod tests {
             dataset_n: 200,
             delta_every: 3,
             eval_every: 6,
+            compute_threads: 0,
         }
     }
 
@@ -381,8 +397,8 @@ mod tests {
         let mut session = Session::builder(tiny_cfg()).build().unwrap();
         let ev = session.step().unwrap();
         assert_eq!(ev.t, 0);
-        assert_eq!(ev.staleness, vec![2, 0]); // K=2 FD: 2(K−1−k)
-        assert_eq!(ev.correction, vec![0.0, 0.0]); // none baseline: no corrections
+        assert_eq!(&ev.staleness[..], &[2, 0]); // K=2 FD: 2(K−1−k)
+        assert_eq!(&ev.correction[..], &[0.0, 0.0]); // none baseline: no corrections
         assert_eq!(session.iterations_done(), 1);
         let mut seen = 0;
         session.run_streaming(|_| { seen += 1; Ok(()) }).unwrap();

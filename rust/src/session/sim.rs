@@ -8,6 +8,7 @@ use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::runtime::ComputeBackend;
+use crate::session::event::correction_arc;
 use crate::session::{Engine, IterEvent};
 use crate::staleness::Schedule;
 use crate::tensor::Tensor;
@@ -15,7 +16,10 @@ use crate::trainer::{Checkpoint, Trainer};
 
 pub(crate) struct SimEngine {
     tr: Trainer,
-    staleness: Vec<usize>,
+    /// constant for the run — refcount-bumped into every event
+    staleness: Arc<[usize]>,
+    /// cached all-zeros correction (the `none` baseline's steady state)
+    zero_corr: Arc<[f64]>,
 }
 
 impl SimEngine {
@@ -25,10 +29,12 @@ impl SimEngine {
         ds: Arc<Dataset>,
     ) -> Result<SimEngine> {
         let sched = Schedule::with_mode(cfg.k, cfg.mode);
-        let staleness = (0..cfg.k).map(|k| sched.staleness(k)).collect();
+        let staleness: Arc<[usize]> = (0..cfg.k).map(|k| sched.staleness(k)).collect();
+        let zero_corr: Arc<[f64]> = vec![0.0; cfg.k].into();
         Ok(SimEngine {
             tr: Trainer::new(cfg, backend, ds)?,
             staleness,
+            zero_corr,
         })
     }
 }
@@ -48,8 +54,8 @@ impl Engine for SimEngine {
             eval_acc: r.eval_acc,
             delta: r.delta,
             sim_time_s: r.sim_time_s,
-            staleness: self.staleness.clone(),
-            correction: self.tr.last_correction().to_vec(),
+            staleness: Arc::clone(&self.staleness),
+            correction: correction_arc(&self.zero_corr, self.tr.last_correction()),
         })
     }
 

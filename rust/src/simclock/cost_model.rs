@@ -7,7 +7,7 @@
 //! wall-time axis of Figs. 3–4 and the Section-5 timing table.
 
 use crate::nn::init::init_params;
-use crate::nn::LayerShape;
+use crate::nn::{BwdScratch, LayerShape};
 use crate::runtime::ComputeBackend;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
@@ -48,11 +48,16 @@ impl CostModel {
         for (idx, layer) in layers.iter().enumerate() {
             let (w, b) = &params[idx];
             let x_in = acts.last().unwrap().clone();
+            // measure the workspace path: a pre-sized out-buffer, reused
+            let mut out = Tensor::empty();
             let times = sample_timings(1, reps, || {
-                backend.layer_fwd(idx, &x_in, w, b).expect("calibrate fwd")
+                backend
+                    .layer_fwd_into(idx, &x_in, w, b, &mut out)
+                    .expect("calibrate fwd")
             });
             fwd_s.push(crate::util::mean(&times));
-            acts.push(backend.layer_fwd(idx, &x_in, w, b).unwrap());
+            backend.layer_fwd_into(idx, &x_in, w, b, &mut out).unwrap();
+            acts.push(out);
             let _ = layer;
         }
 
@@ -62,9 +67,14 @@ impl CostModel {
             rng.fill_normal(g.data_mut(), 1.0);
             let x_in = &acts[idx];
             let h_out = &acts[idx + 1];
+            let (mut g_x, mut g_w, mut g_b) =
+                (Tensor::empty(), Tensor::empty(), Tensor::empty());
+            let mut scratch = BwdScratch::new();
             let times = sample_timings(1, reps, || {
                 backend
-                    .layer_bwd(idx, x_in, w, h_out, &g)
+                    .layer_bwd_into(
+                        idx, x_in, w, h_out, &g, &mut g_x, &mut g_w, &mut g_b, &mut scratch,
+                    )
                     .expect("calibrate bwd")
             });
             bwd_s.push(crate::util::mean(&times));
@@ -76,8 +86,11 @@ impl CostModel {
         for i in 0..batch {
             onehot.data_mut()[i * classes + rng.below(classes)] = 1.0;
         }
+        let mut loss_g = Tensor::empty();
         let times = sample_timings(1, reps, || {
-            backend.loss_grad(&logits, &onehot).expect("calibrate loss")
+            backend
+                .loss_grad_into(&logits, &onehot, &mut loss_g)
+                .expect("calibrate loss")
         });
         let loss_s = crate::util::mean(&times);
 

@@ -85,6 +85,12 @@ impl StashQueue {
         self.items.iter().find(|s| s.batch_id == batch_id)
     }
 
+    /// The most recently pushed stash (the boundary activation the agent
+    /// just produced lives in its last act buffer).
+    pub fn newest(&self) -> Option<&Stash> {
+        self.items.back()
+    }
+
     /// Clone the whole in-flight queue, oldest first (full-state
     /// checkpoints).
     pub fn snapshot(&self) -> Vec<Stash> {
@@ -198,6 +204,7 @@ mod tests {
         q.push(stash(1)).unwrap();
         q.push(stash(2)).unwrap();
         assert_eq!(q.len(), 3);
+        assert_eq!(q.newest().unwrap().batch_id, 2);
         assert_eq!(q.pop(0).unwrap().batch_id, 0);
         assert_eq!(q.pop(1).unwrap().batch_id, 1);
         assert!(q.get(2).is_some());

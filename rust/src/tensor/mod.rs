@@ -47,6 +47,16 @@ impl Tensor {
         }
     }
 
+    /// Zero-element placeholder that performs NO heap allocation — the
+    /// hot-path `mem::replace` filler (gossip gather) and the seed value
+    /// for lazily-sized workspace buffers.
+    pub fn empty() -> Tensor {
+        Tensor {
+            shape: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
@@ -88,6 +98,29 @@ impl Tensor {
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         debug_assert_eq!(self.shape.len(), 2);
         self.data[i * self.shape[1] + j]
+    }
+
+    /// Reallocate to `shape` unless already exactly that shape. The
+    /// workspace idiom: out-parameters are sized on first use and reused
+    /// allocation-free from then on.
+    pub fn ensure_shape(&mut self, shape: &[usize]) {
+        if self.shape[..] != *shape {
+            *self = Tensor::zeros(shape);
+        }
+    }
+
+    /// self = other, element for element. Shapes must already match —
+    /// the allocation-free copy used on stash/workspace buffers.
+    pub fn copy_from(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// self = other, resizing first if the shapes differ (sizes pooled
+    /// message buffers on their first trip; a plain memcpy afterwards).
+    pub fn copy_resize(&mut self, other: &Tensor) {
+        self.ensure_shape(other.shape());
+        self.data.copy_from_slice(&other.data);
     }
 
     // ---- hot-loop vector ops (autovectorizable simple loops) ----
@@ -178,6 +211,29 @@ mod tests {
         let mut out = Tensor::zeros(&[2]);
         weighted_sum(&[0.25, 0.75], &[&a, &b], &mut out);
         assert_eq!(out.data(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn empty_allocates_nothing_and_resizes_on_demand() {
+        let mut t = Tensor::empty();
+        assert_eq!(t.len(), 0);
+        let src = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        t.copy_resize(&src);
+        assert_eq!(t, src);
+        // same-shape copy path
+        let src2 = Tensor::from_vec(&[2, 2], vec![5.0; 4]).unwrap();
+        t.copy_from(&src2);
+        assert_eq!(t, src2);
+    }
+
+    #[test]
+    fn ensure_shape_is_identity_when_already_right() {
+        let mut t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        t.ensure_shape(&[3]); // no-op: data survives
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0]);
+        t.ensure_shape(&[2, 2]); // reshape: fresh zeros
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[0.0; 4]);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::metrics::{Record, Recorder};
 use crate::nn::init::init_params;
 use crate::nn::LayerShape;
 use crate::pipeline::module_agent::ModuleAgent;
-use crate::pipeline::sim::PipelineGroup;
+use crate::pipeline::sim::{GroupStepOut, PipelineGroup};
 use crate::runtime::ComputeBackend;
 use crate::staleness::partition_layers;
 use crate::tensor::Tensor;
@@ -53,6 +53,16 @@ pub struct Trainer {
     recorder: Recorder,
     /// per-module compensation correction norms of the last step, group-mean
     last_correction: Vec<f64>,
+    /// workers for stepping independent groups concurrently
+    /// (`ExperimentConfig::compute_threads`; groups are data-independent
+    /// within an iteration, so any worker count is bit-identical)
+    group_threads: usize,
+    /// per-group outputs of the last step (reused buffer)
+    step_outs: Vec<GroupStepOut>,
+    /// per-step loss scratch (reused buffer)
+    loss_buf: Vec<f64>,
+    /// gossip gather scratch: replicas move out, mix, move back (reused)
+    gossip_buf: Vec<Tensor>,
 }
 
 impl Trainer {
@@ -117,6 +127,9 @@ impl Trainer {
         let probe_idx = probe_rng.sample_indices(ds.len(), cfg.batch.min(ds.len()));
         let probe = ds.gather(&probe_idx);
 
+        let group_threads = crate::nn::resolve_threads(cfg.compute_threads).min(cfg.s);
+        let iters = cfg.iters;
+        let s_groups = cfg.s;
         Ok(Trainer {
             cfg,
             backend,
@@ -129,8 +142,49 @@ impl Trainer {
             iter_time_s: 0.0,
             t: 0,
             t_offset: 0,
-            recorder: Recorder::new(),
+            // capacity for the whole run keeps the steady-state push
+            // allocation-free (tests/alloc_guard.rs)
+            recorder: Recorder::with_capacity(iters),
             last_correction: vec![0.0; k_modules],
+            group_threads,
+            step_outs: vec![GroupStepOut::default(); s_groups],
+            loss_buf: Vec::with_capacity(s_groups),
+            gossip_buf: Vec::with_capacity(s_groups),
+        })
+    }
+
+    /// Step every group once — concurrently over `group_threads` workers
+    /// when there is more than one group. Groups only share the (Sync)
+    /// backend and dataset within an iteration, so the fan-out computes
+    /// exactly the serial loop's bits; results land in `step_outs` in
+    /// group order either way.
+    fn step_groups(&mut self, t: i64, eta: f64) -> Result<()> {
+        let backend: &dyn ComputeBackend = self.backend.as_ref();
+        let ds: &Dataset = &self.ds;
+        let nt = self.group_threads.min(self.groups.len());
+        if nt <= 1 {
+            for (g, out) in self.groups.iter_mut().zip(self.step_outs.iter_mut()) {
+                *out = g.step(backend, ds, t, eta)?;
+            }
+            return Ok(());
+        }
+        let chunk = self.groups.len().div_ceil(nt);
+        let groups = &mut self.groups;
+        let outs = &mut self.step_outs;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(nt);
+            for (gc, oc) in groups.chunks_mut(chunk).zip(outs.chunks_mut(chunk)) {
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (g, o) in gc.iter_mut().zip(oc.iter_mut()) {
+                        *o = g.step(backend, ds, t, eta)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().expect("group thread panicked")?;
+            }
+            Ok(())
         })
     }
 
@@ -251,19 +305,27 @@ impl Trainer {
         let t = self.t;
         let eta = self.cfg.lr.at(self.t_offset + t as usize);
 
-        let mut losses = Vec::new();
-        let mut corrections: Vec<Vec<f64>> = Vec::with_capacity(self.groups.len());
-        let backend = Arc::clone(&self.backend);
-        let ds = Arc::clone(&self.ds);
-        for g in &mut self.groups {
-            let out = g.step(backend.as_ref(), &ds, t, eta)?;
+        self.step_groups(t, eta)?;
+        self.loss_buf.clear();
+        for out in &self.step_outs {
             if let Some(l) = out.loss {
-                losses.push(l as f64);
+                self.loss_buf.push(l as f64);
             }
-            corrections.push(out.correction);
         }
-        self.last_correction =
-            crate::compensate::group_mean_correction(self.groups[0].k(), &corrections);
+        // group-mean correction, ascending-s then /S — the same reduction
+        // the threaded engine runs (group_mean_correction), in place
+        let s_count = self.groups.len() as f64;
+        for c in self.last_correction.iter_mut() {
+            *c = 0.0;
+        }
+        for g in &self.groups {
+            for (acc, c) in self.last_correction.iter_mut().zip(g.last_correction()) {
+                *acc += c;
+            }
+        }
+        for c in self.last_correction.iter_mut() {
+            *c /= s_count;
+        }
 
         // gossip: for every module's every parameter tensor, mix across groups
         if let Some(mixer) = &mut self.mixer {
@@ -272,23 +334,22 @@ impl Trainer {
                 let n_local = self.groups[0].modules[k].n_layers();
                 for l in 0..n_local {
                     for which in 0..2 {
-                        // gather replicas (move out, mix, move back)
-                        let mut replicas: Vec<Tensor> = self
-                            .groups
-                            .iter_mut()
-                            .map(|g| {
-                                let p = &mut g.modules[k].params[l];
-                                std::mem::replace(
-                                    if which == 0 { &mut p.0 } else { &mut p.1 },
-                                    Tensor::zeros(&[0]),
-                                )
-                            })
-                            .collect();
+                        // gather replicas (move out, mix, move back);
+                        // Tensor::empty + the reused gather buffer keep
+                        // this allocation-free
+                        self.gossip_buf.clear();
+                        for g in self.groups.iter_mut() {
+                            let p = &mut g.modules[k].params[l];
+                            self.gossip_buf.push(std::mem::replace(
+                                if which == 0 { &mut p.0 } else { &mut p.1 },
+                                Tensor::empty(),
+                            ));
+                        }
                         // r rounds: contraction γ^r per iteration
                         for _ in 0..self.cfg.gossip_rounds {
-                            mixer.mix(&mut replicas);
+                            mixer.mix(&mut self.gossip_buf);
                         }
-                        for (g, r) in self.groups.iter_mut().zip(replicas) {
+                        for (g, r) in self.groups.iter_mut().zip(self.gossip_buf.drain(..)) {
                             let p = &mut g.modules[k].params[l];
                             *(if which == 0 { &mut p.0 } else { &mut p.1 }) = r;
                         }
@@ -307,7 +368,7 @@ impl Trainer {
         let mut record = Record {
             t: t_us,
             lr: eta,
-            train_loss: (!losses.is_empty()).then(|| crate::util::mean(&losses)),
+            train_loss: (!self.loss_buf.is_empty()).then(|| crate::util::mean(&self.loss_buf)),
             sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
             ..Default::default()
         };
@@ -381,6 +442,7 @@ mod tests {
             dataset_n: 400,
             delta_every: 5,
             eval_every: 20,
+            compute_threads: 0,
         }
     }
 

@@ -117,15 +117,34 @@ impl Pcg32 {
 
     /// Sample `n` indices uniformly WITHOUT replacement from [0, pool).
     pub fn sample_indices(&mut self, pool: usize, n: usize) -> Vec<usize> {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        self.sample_indices_into(pool, n, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`Self::sample_indices`] into caller-owned buffers (same RNG
+    /// consumption, same picks): `scratch` holds the identity permutation
+    /// being partially Fisher–Yates-shuffled, `out` receives the n picks.
+    /// Both retain their capacity across calls — the per-iteration sampler
+    /// allocates nothing in steady state.
+    pub fn sample_indices_into(
+        &mut self,
+        pool: usize,
+        n: usize,
+        scratch: &mut Vec<usize>,
+        out: &mut Vec<usize>,
+    ) {
         assert!(n <= pool, "sample_indices: n={n} > pool={pool}");
         // partial Fisher–Yates over an index array
-        let mut idx: Vec<usize> = (0..pool).collect();
+        scratch.clear();
+        scratch.extend(0..pool);
         for i in 0..n {
             let j = i + self.below(pool - i);
-            idx.swap(i, j);
+            scratch.swap(i, j);
         }
-        idx.truncate(n);
-        idx
+        out.clear();
+        out.extend_from_slice(&scratch[..n]);
     }
 
     /// Fill with i.i.d. N(0, std^2) f32 values.
@@ -210,6 +229,18 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 40);
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_form() {
+        let mut a = Pcg32::new(21);
+        let mut b = Pcg32::new(21);
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        for _ in 0..5 {
+            let want = a.sample_indices(50, 12);
+            b.sample_indices_into(50, 12, &mut scratch, &mut out);
+            assert_eq!(want, out);
+        }
     }
 
     #[test]

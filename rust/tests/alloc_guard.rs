@@ -1,0 +1,123 @@
+//! Steady-state allocation guard: after the pipeline fills and every lazy
+//! buffer (workspaces, stash pools, message pools, sampler scratch,
+//! recorder capacity, gossip scratch) has been sized, a full
+//! `Session::step` on the native sim engine must perform ZERO heap
+//! allocations — the tentpole contract of the workspace compute API.
+//!
+//! The counting allocator tracks only the test thread (thread-local
+//! counters with const init — the counting itself never allocates), so
+//! the engine is pinned to one compute worker; any worker count computes
+//! the same bits, this just keeps all work on the counted thread.
+//!
+//! This file holds exactly one test: the global allocator is
+//! process-wide, and a lone test keeps the measurement window free of
+//! harness threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::data::synthetic::SyntheticSpec;
+use sgs::graph::Topology;
+use sgs::runtime::{ComputeBackend, NativeBackend};
+use sgs::session::Session;
+use sgs::trainer::LrSchedule;
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static DEALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the bookkeeping uses
+// const-initialized thread-local Cells, which never allocate on access.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.with(|t| t.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        if TRACKING.with(|t| t.get()) {
+            DEALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACKING.with(|t| t.get()) {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_sim_step_allocates_nothing() {
+    let cfg = ExperimentConfig {
+        name: "alloc-guard".into(),
+        s: 2,
+        k: 2,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+        batch: 8,
+        iters: 64,
+        lr: LrSchedule::Const(0.1),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 17,
+        dataset_n: 240,
+        // eval/δ cadences allocate by design (averaged params, probe
+        // forward); the guard pins the per-iteration training loop
+        delta_every: 0,
+        eval_every: 0,
+        // single worker: keeps every kernel on the counted thread
+        compute_threads: 1,
+    };
+    let ds = Arc::new(
+        SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3).generate(),
+    );
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_threads(
+        cfg.model.layers(),
+        cfg.batch,
+        1,
+    ));
+    let mut session = Session::builder(cfg)
+        .with_backend(backend)
+        .dataset(ds)
+        .build()
+        .unwrap();
+
+    // warmup: pipeline fill (2K−2 iterations) plus every lazy one-time
+    // sizing — workspaces, stash free pools, message-edge pools, sampler
+    // scratch, mailbox capacity, gossip scratch sets
+    for _ in 0..16 {
+        session.step().unwrap();
+    }
+
+    ALLOCS.with(|c| c.set(0));
+    DEALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for _ in 0..3 {
+        session.step().unwrap();
+    }
+    TRACKING.with(|t| t.set(false));
+    let allocs = ALLOCS.with(|c| c.get());
+    let deallocs = DEALLOCS.with(|c| c.get());
+
+    // keep the session alive through the window so drops don't count
+    assert!(session.iterations_done() >= 19);
+    assert_eq!(allocs, 0, "steady-state step performed {allocs} heap allocations");
+    assert_eq!(deallocs, 0, "steady-state step performed {deallocs} heap frees");
+}

@@ -30,6 +30,7 @@ fn base_cfg() -> ExperimentConfig {
         dataset_n: 480,
         delta_every: 1,
         eval_every: 50,
+        compute_threads: 0,
     }
 }
 

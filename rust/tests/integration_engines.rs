@@ -33,6 +33,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         dataset_n: 240,
         delta_every: 4,
         eval_every: 8,
+        compute_threads: 0,
     }
 }
 

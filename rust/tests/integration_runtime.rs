@@ -7,7 +7,7 @@
 
 #![cfg(feature = "xla")]
 
-use sgs::nn;
+use sgs::nn::{self, BwdScratch};
 use sgs::runtime::{ComputeBackend, Manifest, NativeBackend, XlaBackend};
 use sgs::tensor::Tensor;
 use sgs::util::rng::Pcg32;
@@ -56,13 +56,22 @@ fn every_layer_fwd_bwd_matches_native() {
         let w = rand_t(&mut rng, &[l.d_in, l.d_out], (2.0 / l.d_in as f32).sqrt());
         let bias = rand_t(&mut rng, &[l.d_out], 0.1);
 
-        let hx = xla.layer_fwd(i, &x, &w, &bias).unwrap();
-        let hn = native.layer_fwd(i, &x, &w, &bias).unwrap();
+        let mut hx = Tensor::empty();
+        xla.layer_fwd_into(i, &x, &w, &bias, &mut hx).unwrap();
+        let mut hn = Tensor::empty();
+        native.layer_fwd_into(i, &x, &w, &bias, &mut hn).unwrap();
         assert!(hx.max_abs_diff(&hn) < TOL, "layer {i} fwd");
 
         let g = rand_t(&mut rng, hx.shape(), 1.0);
-        let (ax, aw, ab) = xla.layer_bwd(i, &x, &w, &hn, &g).unwrap();
-        let (nx, nw, nb) = native.layer_bwd(i, &x, &w, &hn, &g).unwrap();
+        let (mut ax, mut aw, mut ab) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut s1 = BwdScratch::new();
+        xla.layer_bwd_into(i, &x, &w, &hn, &g, &mut ax, &mut aw, &mut ab, &mut s1)
+            .unwrap();
+        let (mut nx, mut nw, mut nb) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut s2 = BwdScratch::new();
+        native
+            .layer_bwd_into(i, &x, &w, &hn, &g, &mut nx, &mut nw, &mut nb, &mut s2)
+            .unwrap();
         assert!(ax.max_abs_diff(&nx) < TOL, "layer {i} g_x");
         assert!(aw.max_abs_diff(&nw) < TOL, "layer {i} g_w");
         assert!(ab.max_abs_diff(&nb) < TOL, "layer {i} g_b");
@@ -85,8 +94,10 @@ fn loss_head_matches_native_and_is_stable() {
     for i in 0..b {
         onehot.data_mut()[i * c + rng.below(c)] = 1.0;
     }
-    let (lx, gx) = xla.loss_grad(&logits, &onehot).unwrap();
-    let (ln, gn) = native.loss_grad(&logits, &onehot).unwrap();
+    let mut gx = Tensor::empty();
+    let lx = xla.loss_grad_into(&logits, &onehot, &mut gx).unwrap();
+    let mut gn = Tensor::empty();
+    let ln = native.loss_grad_into(&logits, &onehot, &mut gn).unwrap();
     assert!((lx - ln).abs() < TOL, "{lx} vs {ln}");
     assert!(gx.max_abs_diff(&gn) < TOL);
 
@@ -158,6 +169,7 @@ fn xla_training_matches_native_training() {
         dataset_n: 2000,
         delta_every: 0,
         eval_every: 0,
+        compute_threads: 0,
     };
     let ds = std::sync::Arc::new(sgs::coordinator::build_dataset(&cfg));
 

@@ -231,6 +231,7 @@ fn prop_config_roundtrip() {
                 dataset_n: 2000,
                 delta_every: r.below(20),
                 eval_every: r.below(20),
+                compute_threads: 0,
             }
         },
         |cfg| {
