@@ -15,10 +15,13 @@ use sgs::trainer::{LrSchedule, OptimizerKind};
 use sgs::util::csv::CsvWriter;
 
 fn main() {
+    // --smoke (CI): a handful of iterations per grid point — asserts the
+    // sweep driver + CSV emission still run, without trusting timings
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let iters = std::env::var("SGS_BENCH_ITERS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(400);
+        .unwrap_or(if smoke { 24 } else { 400 });
     // the tiny AOT geometry: 4 layers, so K in {1, 2, 4} partitions evenly
     let base = ExperimentConfig {
         name: "ablation-compensate".into(),
@@ -27,7 +30,7 @@ fn main() {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape::tiny(),
+        model: ModelShape::tiny().into(),
         batch: 32,
         iters,
         lr: LrSchedule::Const(0.1),
@@ -91,6 +94,15 @@ fn main() {
     }
     w.flush().unwrap();
 
+    if smoke {
+        assert!(
+            std::fs::metadata("bench_out/ablation_compensate.csv")
+                .map(|m| m.len() > 0)
+                .unwrap_or(false),
+            "smoke run must emit a non-empty CSV"
+        );
+        println!("smoke OK: {} grid points, CSV emitted", points.len());
+    }
     println!("\nexpected shape: at K=1 all strategies coincide (no staleness to");
     println!("compensate); at K=4 dc/accum should recover part of the none-baseline");
     println!("loss gap. CSV: bench_out/ablation_compensate.csv");

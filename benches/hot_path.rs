@@ -15,7 +15,7 @@ use sgs::consensus::GossipMixer;
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::graph::{max_safe_alpha, xiao_boyd_weights, Graph, Topology};
 use sgs::nn::init::init_params;
-use sgs::nn::BwdScratch;
+use sgs::nn::{BwdScratch, FwdScratch};
 #[cfg(feature = "xla")]
 use sgs::runtime::XlaBackend;
 use sgs::runtime::{ComputeBackend, NativeBackend};
@@ -40,17 +40,19 @@ fn bench_backend(
     rng.fill_normal(x.data_mut(), 1.0);
 
     let mut acts = vec![x];
+    let mut fs = FwdScratch::new();
     for (i, (w, bias)) in params.iter().enumerate() {
         let mut h = Tensor::empty();
-        backend.layer_fwd_into(i, acts.last().unwrap(), w, bias, &mut h).unwrap();
+        backend.layer_fwd_into(i, acts.last().unwrap(), w, bias, &mut h, &mut fs).unwrap();
         acts.push(h);
     }
 
     for (i, (w, bias)) in params.iter().enumerate() {
         let x_in = acts[i].clone();
         let mut out = Tensor::empty();
+        let mut fs = FwdScratch::new();
         set.bench(format!("{tag}/layer{i}_fwd"), warmup, samples, || {
-            backend.layer_fwd_into(i, &x_in, w, bias, &mut out).unwrap()
+            backend.layer_fwd_into(i, &x_in, w, bias, &mut out, &mut fs).unwrap()
         });
         let mut g = Tensor::zeros(acts[i + 1].shape());
         rng.fill_normal(g.data_mut(), 1.0);
@@ -117,7 +119,7 @@ fn main() {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 48,
         iters: 10_000, // bounded by bench samples below, not by this
         lr: LrSchedule::Const(0.1),

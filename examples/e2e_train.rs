@@ -53,7 +53,8 @@ fn main() -> Result<(), sgs::Error> {
             hidden: layers[0].d_out,
             blocks: layers.len() - 2,
             classes: layers.last().unwrap().d_out,
-        },
+        }
+        .into(),
         batch: backend.batch(),
         iters,
         lr: LrSchedule::strategy_2(iters),

@@ -23,7 +23,7 @@ fn main() -> Result<(), sgs::Error> {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 32,
         iters: 500,
         lr: LrSchedule::strategy_1(),

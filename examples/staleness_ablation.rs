@@ -25,7 +25,7 @@ fn main() -> Result<(), sgs::Error> {
         alpha: None,
         gossip_rounds: 1,
         // 6 layers so K in {1,2,3,6} partitions evenly
-        model: ModelShape { d_in: 48, hidden: 32, blocks: 4, classes: 10 },
+        model: ModelShape { d_in: 48, hidden: 32, blocks: 4, classes: 10 }.into(),
         batch: 24,
         iters: 600,
         lr: LrSchedule::Const(0.1),

@@ -21,7 +21,7 @@ fn main() -> Result<(), sgs::Error> {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 48, hidden: 32, blocks: 2, classes: 10 },
+        model: ModelShape { d_in: 48, hidden: 32, blocks: 2, classes: 10 }.into(),
         batch: 24,
         iters: 400,
         lr: LrSchedule::Const(0.1),

@@ -22,7 +22,7 @@ pub fn bench_base(name: &str) -> ExperimentConfig {
     ExperimentConfig {
         name: name.into(),
         iters,
-        model: crate::config::ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 },
+        model: crate::config::ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 48,
         dataset_n: 12_000,
         delta_every: 5,

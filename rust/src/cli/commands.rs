@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cli::args::Args;
-use crate::config::{ExperimentConfig, ModelShape};
+use crate::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use crate::nn::resolve_threads;
 use crate::coordinator::{build_dataset, AgentGrid};
 use crate::error::Result;
@@ -29,7 +29,7 @@ USAGE: sgs <command> [--flag value]...
 COMMANDS
   train      run one experiment            (--s --k --iters --lr --topology
              --alpha --batch --seed --backend native|xla --artifacts DIR
-             --engine sim|threaded --model tiny|small|paper
+             --engine sim|threaded --model tiny|small|paper|cnn
              --opt sgd|momentum:B|nesterov:B --mode fd|dbp
              --compensate none|dc:LAMBDA|accum:N
              --compute-threads N (0 = all cores; any N is bit-identical)
@@ -42,13 +42,14 @@ COMMANDS
   help       this text
 ";
 
-fn model_of(name: &str) -> Result<ModelShape> {
-    match name {
-        "tiny" => Ok(ModelShape::tiny()),
-        "small" => Ok(ModelShape::small()),
-        "paper" => Ok(ModelShape::paper()),
+fn model_of(name: &str) -> Result<ModelSpec> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "tiny" => Ok(ModelShape::tiny().into()),
+        "small" => Ok(ModelShape::small().into()),
+        "paper" => Ok(ModelShape::paper().into()),
+        "cnn" => Ok(StackModel::cifar_cnn().into()),
         _ => Err(crate::error::Error::Cli(format!(
-            "unknown model {name:?} (want tiny|small|paper)"
+            "unknown model {name:?} (want tiny|small|paper|cnn)"
         ))),
     }
 }
@@ -69,7 +70,11 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.gossip_rounds = args.get_usize("gossip-rounds", cfg.gossip_rounds)?;
     cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
     cfg.compute_threads = args.get_usize("compute-threads", cfg.compute_threads)?;
-    cfg.model = model_of(args.get_or("model", "small"))?;
+    // only override the config file's model when the flag is present (the
+    // default config already carries the `small` geometry)
+    if let Some(m) = args.get("model") {
+        cfg.model = model_of(m)?;
+    }
     cfg.topology = Topology::parse(args.get_or("topology", &cfg.topology.name()))?;
     if let Some(a) = args.get("alpha") {
         cfg.alpha = Some(a.parse().map_err(|_| {
@@ -368,6 +373,45 @@ mod tests {
     }
 
     #[test]
+    fn train_cnn_preset() {
+        // the CIFAR-geometry CNN on a synthetic 3072-dim dataset, split
+        // across 2 modules — the paper's headline workload end-to-end
+        dispatch(&argv(
+            "train --model cnn --s 1 --k 2 --iters 3 --batch 4 --dataset-n 64 \
+             --eval-every 0 --delta-every 0 --lr const:0.05",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn config_file_stack_model_survives_flag_defaults() {
+        // a --config file carrying a layer-spec stack must not be stomped
+        // by the --model default when the flag is absent
+        let dir = std::env::temp_dir().join("sgs_cli_stack_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cnn.json");
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = crate::config::ModelSpec::Stack(
+            StackModel::new(2, 6, 6, ["conv3x3:3", "maxpool", "flatten", "linear:3"], 3)
+                .unwrap(),
+        );
+        cfg.s = 1;
+        cfg.k = 2;
+        cfg.iters = 2;
+        cfg.batch = 4;
+        cfg.dataset_n = 40;
+        cfg.eval_every = 0;
+        cfg.delta_every = 0;
+        cfg.save(&path).unwrap();
+
+        let a = Args::parse(&argv(&format!("train --config {}", path.display()))).unwrap();
+        let parsed = config_from_args(&a).unwrap();
+        assert_eq!(parsed.model, cfg.model, "config-file model preserved");
+        dispatch(&argv(&format!("train --config {}", path.display()))).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn train_with_compensation_strategies() {
         for comp in ["dc:0.04", "accum:2"] {
             dispatch(&argv(&format!(
@@ -432,6 +476,6 @@ mod tests {
         let cfg = config_from_args(&a).unwrap();
         assert_eq!((cfg.s, cfg.k, cfg.iters, cfg.batch), (3, 2, 50, 16));
         assert_eq!(cfg.topology, Topology::Star);
-        assert_eq!(cfg.model, ModelShape::tiny());
+        assert_eq!(cfg.model, ModelShape::tiny().into());
     }
 }

@@ -10,7 +10,7 @@ use crate::trainer::lr::LrSchedule;
 use crate::trainer::opt::OptimizerKind;
 use crate::util::json::Json;
 
-/// Model geometry (mirrors python/compile/model.py CONFIGS).
+/// Residual-MLP model geometry (mirrors python/compile/model.py CONFIGS).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelShape {
     pub d_in: usize,
@@ -44,6 +44,108 @@ impl ModelShape {
     }
 }
 
+/// An explicit layer-spec stack over an NCHW input — the model form that
+/// expresses CNNs (`conv3x3:C` / `maxpool` / `flatten` / dense head specs,
+/// see [`crate::nn::build_stack`] for the grammar). Validated and
+/// shape-inferred at construction, so `layers()` stays infallible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StackModel {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub classes: usize,
+    /// the raw spec strings, in layer order (round-tripped through JSON)
+    pub specs: Vec<String>,
+    layers: Vec<crate::nn::LayerShape>,
+}
+
+impl StackModel {
+    /// Parse + shape-infer a spec stack; the final layer's width must equal
+    /// `classes` (the loss head's logits). Accepts any string-ish spec list
+    /// (`&["conv3x3:8", ...]` or a JSON-decoded `Vec<String>`).
+    pub fn new<S: Into<String>>(
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        specs: impl IntoIterator<Item = S>,
+        classes: usize,
+    ) -> Result<StackModel> {
+        let specs: Vec<String> = specs.into_iter().map(Into::into).collect();
+        let layers = crate::nn::build_stack(in_c, in_h, in_w, &specs)?;
+        let out = layers.last().map(|l| l.d_out).unwrap_or(0);
+        if out != classes {
+            return Err(Error::Config(format!(
+                "layer stack ends at width {out}, want classes = {classes}"
+            )));
+        }
+        Ok(StackModel { in_c, in_h, in_w, classes, specs, layers })
+    }
+
+    /// The paper-faithful CIFAR-10 CNN quickstart:
+    /// 2×[conv-relu-pool] → flatten → dense head (7 layers, K ≤ 7).
+    pub fn cifar_cnn() -> StackModel {
+        StackModel::new(
+            3,
+            32,
+            32,
+            ["conv3x3:8", "maxpool", "conv3x3:16", "maxpool", "flatten", "relu:64", "linear:10"],
+            10,
+        )
+        .expect("builtin cifar_cnn stack is valid")
+    }
+}
+
+/// Model description of an experiment: the classic residual MLP (the four
+/// flat-geometry presets) or an explicit layer-spec stack (CNNs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    ResMlp(ModelShape),
+    Stack(StackModel),
+}
+
+impl From<ModelShape> for ModelSpec {
+    fn from(m: ModelShape) -> ModelSpec {
+        ModelSpec::ResMlp(m)
+    }
+}
+
+impl From<StackModel> for ModelSpec {
+    fn from(m: StackModel) -> ModelSpec {
+        ModelSpec::Stack(m)
+    }
+}
+
+impl ModelSpec {
+    /// Flat input width (for a stack: c·h·w of the NCHW input).
+    pub fn d_in(&self) -> usize {
+        match self {
+            ModelSpec::ResMlp(m) => m.d_in,
+            ModelSpec::Stack(s) => s.in_c * s.in_h * s.in_w,
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            ModelSpec::ResMlp(m) => m.classes,
+            ModelSpec::Stack(s) => s.classes,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        match self {
+            ModelSpec::ResMlp(m) => m.n_layers(),
+            ModelSpec::Stack(s) => s.layers.len(),
+        }
+    }
+
+    pub fn layers(&self) -> Vec<crate::nn::LayerShape> {
+        match self {
+            ModelSpec::ResMlp(m) => m.layers(),
+            ModelSpec::Stack(s) => s.layers.clone(),
+        }
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -58,7 +160,7 @@ pub struct ExperimentConfig {
     /// gossip rounds per iteration (r mixing steps ⇒ contraction γ^r —
     /// trades communication for a tighter consensus floor)
     pub gossip_rounds: usize,
-    pub model: ModelShape,
+    pub model: ModelSpec,
     pub batch: usize,
     pub iters: usize,
     pub lr: LrSchedule,
@@ -91,7 +193,7 @@ impl Default for ExperimentConfig {
             topology: Topology::Ring,
             alpha: None,
             gossip_rounds: 1,
-            model: ModelShape::small(),
+            model: ModelShape::small().into(),
             batch: 194,
             iters: 2000,
             lr: LrSchedule::strategy_1(),
@@ -159,12 +261,26 @@ impl ExperimentConfig {
         j.set("name", self.name.as_str())
             .set("s", self.s)
             .set("k", self.k)
-            .set("topology", self.topology.name())
-            .set("d_in", self.model.d_in)
-            .set("hidden", self.model.hidden)
-            .set("blocks", self.model.blocks)
-            .set("classes", self.model.classes)
-            .set("batch", self.batch)
+            .set("topology", self.topology.name());
+        match &self.model {
+            ModelSpec::ResMlp(m) => {
+                j.set("d_in", m.d_in)
+                    .set("hidden", m.hidden)
+                    .set("blocks", m.blocks)
+                    .set("classes", m.classes);
+            }
+            ModelSpec::Stack(s) => {
+                j.set("input_c", s.in_c)
+                    .set("input_h", s.in_h)
+                    .set("input_w", s.in_w)
+                    .set("classes", s.classes)
+                    .set(
+                        "layers",
+                        s.specs.iter().map(|sp| Json::Str(sp.clone())).collect::<Vec<Json>>(),
+                    );
+            }
+        }
+        j.set("batch", self.batch)
             .set("iters", self.iters)
             .set("lr", self.lr.describe())
             .set("optimizer", self.optimizer.describe())
@@ -184,6 +300,29 @@ impl ExperimentConfig {
     }
 
     pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        // a "layers" spec list selects the stack form; the flat
+        // d_in/hidden/blocks keys keep meaning the classic residual MLP
+        let model = match j.opt("layers") {
+            Some(arr) => {
+                let mut specs = Vec::new();
+                for s in arr.as_arr()? {
+                    specs.push(s.as_str()?.to_string());
+                }
+                ModelSpec::Stack(StackModel::new(
+                    j.get("input_c")?.as_usize()?,
+                    j.get("input_h")?.as_usize()?,
+                    j.get("input_w")?.as_usize()?,
+                    specs,
+                    j.get("classes")?.as_usize()?,
+                )?)
+            }
+            None => ModelSpec::ResMlp(ModelShape {
+                d_in: j.get("d_in")?.as_usize()?,
+                hidden: j.get("hidden")?.as_usize()?,
+                blocks: j.get("blocks")?.as_usize()?,
+                classes: j.get("classes")?.as_usize()?,
+            }),
+        };
         let cfg = ExperimentConfig {
             name: j.get("name")?.as_str()?.to_string(),
             s: j.get("s")?.as_usize()?,
@@ -197,12 +336,7 @@ impl ExperimentConfig {
                 Some(g) => g.as_usize()?,
                 None => 1,
             },
-            model: ModelShape {
-                d_in: j.get("d_in")?.as_usize()?,
-                hidden: j.get("hidden")?.as_usize()?,
-                blocks: j.get("blocks")?.as_usize()?,
-                classes: j.get("classes")?.as_usize()?,
-            },
+            model,
             batch: j.get("batch")?.as_usize()?,
             iters: j.get("iters")?.as_usize()?,
             lr: LrSchedule::parse(j.get("lr")?.as_str()?)?,
@@ -270,6 +404,40 @@ mod tests {
         assert_eq!(back.lr, cfg.lr);
         assert_eq!(back.topology, cfg.topology);
         assert_eq!(back.compensate, cfg.compensate);
+    }
+
+    #[test]
+    fn stack_model_json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = ModelSpec::Stack(StackModel::cifar_cnn());
+        cfg.batch = 16;
+        cfg.dataset_n = 50_000;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.model.d_in(), 3072);
+        assert_eq!(back.model.classes(), 10);
+        assert_eq!(back.model.n_layers(), 7);
+    }
+
+    #[test]
+    fn stack_model_rejects_bad_specs_and_class_mismatch() {
+        assert!(StackModel::new(3, 32, 32, ["conv9x9:4", "flatten"], 10).is_err());
+        // head width 5 != classes 10
+        assert!(StackModel::new(3, 4, 4, ["flatten", "linear:5"], 10).is_err());
+        assert!(StackModel::new(3, 4, 4, ["flatten", "linear:10"], 10).is_ok());
+    }
+
+    #[test]
+    fn cifar_cnn_preset_is_valid_and_k_partitionable() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = ModelSpec::Stack(StackModel::cifar_cnn());
+        cfg.k = 4;
+        cfg.validate().unwrap();
+        let layers = cfg.model.layers();
+        assert_eq!(layers.len(), 7);
+        for pair in layers.windows(2) {
+            assert_eq!(pair[0].d_out, pair[1].d_in);
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub use crate::session::RunOutput;
 /// Build the dataset for a config: real CIFAR-10 when `CIFAR10_DIR` is set
 /// and compatible, else the synthetic teacher-labelled generator.
 pub fn build_dataset(cfg: &ExperimentConfig) -> Dataset {
-    if cfg.model.d_in == cifar::CIFAR_DIM && cfg.model.classes == cifar::CIFAR_CLASSES {
+    if cfg.model.d_in() == cifar::CIFAR_DIM && cfg.model.classes() == cifar::CIFAR_CLASSES {
         if let Some(ds) = cifar::from_env() {
             eprintln!("using real CIFAR-10 from CIFAR10_DIR ({} samples)", ds.len());
             return ds;
@@ -23,9 +23,14 @@ pub fn build_dataset(cfg: &ExperimentConfig) -> Dataset {
     }
     SyntheticSpec {
         n: cfg.dataset_n,
-        dim: cfg.model.d_in,
-        classes: cfg.model.classes,
-        ..SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, cfg.seed ^ 0xDA7A5E7)
+        dim: cfg.model.d_in(),
+        classes: cfg.model.classes(),
+        ..SyntheticSpec::small(
+            cfg.dataset_n,
+            cfg.model.d_in(),
+            cfg.model.classes(),
+            cfg.seed ^ 0xDA7A5E7,
+        )
     }
     .generate()
 }
@@ -70,7 +75,7 @@ mod tests {
             topology: Topology::Complete,
             alpha: None,
             gossip_rounds: 1,
-            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters: 30,
             lr: LrSchedule::Const(0.2),

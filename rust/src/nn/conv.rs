@@ -1,0 +1,481 @@
+//! Convolutional kernels over flattened-NCHW `[B, C·H·W]` activations:
+//! 3×3/stride-1/zero-pad-1 conv (+ReLU), 2×2/stride-2 max pool, and the
+//! NCHW → dense `flatten` marker.
+//!
+//! §Perf — same contract as the dense kernels (`nn` §Perf): everything is
+//! an in-place, caller-owned-workspace `_into` variant. The conv is
+//! im2col-based so both matmuls reuse the k-blocked, thread-parallel
+//! `matmul_acc`/`matmul_tn` primitives: the column matrix has B·H·W rows,
+//! so row-chunk fan-out has plenty of parallelism even at small batch.
+//! im2col / col2im / the NCHW↔row-major reorders run single-threaded —
+//! they are O(elements) memory passes next to the O(elements·9·C) matmuls
+//! — which keeps every reduction in one fixed order: any `--compute-threads`
+//! computes the same bits (asserted in the nn tests).
+
+use crate::nn::layer::Spatial;
+use crate::nn::{matmul_acc, matmul_tn, transpose_into, BwdScratch};
+use crate::tensor::Tensor;
+
+/// Caller-owned scratch for one spatial layer's forward pass: the im2col
+/// column matrix and the row-major matmul output awaiting its NCHW reorder.
+/// Sized lazily on first use ([`Tensor::ensure_shape`]), allocation-free
+/// after that; dense layers never touch it.
+#[derive(Debug, Clone, Default)]
+pub struct FwdScratch {
+    /// im2col of the input, [B·H·W, 9·c_in]
+    pub col: Tensor,
+    /// conv matmul output before the NCHW reorder, [B·H·W, c_out]
+    pub tmp: Tensor,
+}
+
+impl FwdScratch {
+    pub fn new() -> FwdScratch {
+        FwdScratch {
+            col: Tensor::empty(),
+            tmp: Tensor::empty(),
+        }
+    }
+}
+
+/// col[b·HW + i·W + j, c·9 + dr·3 + dc] = x[b, c·HW + (i+dr−1)·W + (j+dc−1)]
+/// (zero outside the image). One fixed scan order — deterministic.
+fn im2col_3x3(x: &[f32], col: &mut [f32], batch: usize, c: usize, h: usize, w: usize) {
+    let hw = h * w;
+    let cols = c * 9;
+    debug_assert_eq!(x.len(), batch * c * hw);
+    debug_assert_eq!(col.len(), batch * hw * cols);
+    for bi in 0..batch {
+        let x_img = &x[bi * c * hw..(bi + 1) * c * hw];
+        let col_img = &mut col[bi * hw * cols..(bi + 1) * hw * cols];
+        for i in 0..h {
+            for j in 0..w {
+                let row = &mut col_img[(i * w + j) * cols..(i * w + j + 1) * cols];
+                for cc in 0..c {
+                    let plane = &x_img[cc * hw..(cc + 1) * hw];
+                    for dr in 0..3usize {
+                        let ii = (i + dr).wrapping_sub(1);
+                        for dc in 0..3usize {
+                            let jj = (j + dc).wrapping_sub(1);
+                            row[cc * 9 + dr * 3 + dc] = if ii < h && jj < w {
+                                plane[ii * w + jj]
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add the inverse of [`im2col_3x3`]: g_x[...] += g_col[...] over
+/// the same index map, in the same fixed scan order (deterministic).
+fn col2im_3x3(g_col: &[f32], g_x: &mut [f32], batch: usize, c: usize, h: usize, w: usize) {
+    let hw = h * w;
+    let cols = c * 9;
+    debug_assert_eq!(g_x.len(), batch * c * hw);
+    debug_assert_eq!(g_col.len(), batch * hw * cols);
+    for bi in 0..batch {
+        let gx_img = &mut g_x[bi * c * hw..(bi + 1) * c * hw];
+        let gcol_img = &g_col[bi * hw * cols..(bi + 1) * hw * cols];
+        for i in 0..h {
+            for j in 0..w {
+                let row = &gcol_img[(i * w + j) * cols..(i * w + j + 1) * cols];
+                for cc in 0..c {
+                    let plane = &mut gx_img[cc * hw..(cc + 1) * hw];
+                    for dr in 0..3usize {
+                        let ii = (i + dr).wrapping_sub(1);
+                        for dc in 0..3usize {
+                            let jj = (j + dc).wrapping_sub(1);
+                            if ii < h && jj < w {
+                                plane[ii * w + jj] += row[cc * 9 + dr * 3 + dc];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forward conv3x3 (+bias +ReLU) into `out`: x [B, c_in·H·W] NCHW,
+/// w [9·c_in, c_out], b [c_out], out [B, c_out·H·W] NCHW. `out` and
+/// `scratch` are sized on first use and reused allocation-free afterwards.
+pub fn conv3x3_fwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    sp: Spatial,
+    out: &mut Tensor,
+    scratch: &mut FwdScratch,
+    threads: usize,
+) {
+    let batch = x.shape()[0];
+    let (c_in, h, ww, c_out) = (sp.c_in, sp.h, sp.w, sp.c_out);
+    let hw = h * ww;
+    debug_assert_eq!(x.shape()[1], c_in * hw);
+    debug_assert_eq!(w.shape(), &[9 * c_in, c_out]);
+    debug_assert_eq!(b.len(), c_out);
+
+    scratch.col.ensure_shape(&[batch * hw, 9 * c_in]);
+    im2col_3x3(x.data(), scratch.col.data_mut(), batch, c_in, h, ww);
+    scratch.tmp.ensure_shape(&[batch * hw, c_out]);
+    scratch.tmp.fill_zero();
+    matmul_acc(
+        scratch.col.data(),
+        w.data(),
+        scratch.tmp.data_mut(),
+        batch * hw,
+        9 * c_in,
+        c_out,
+        threads,
+    );
+
+    // bias + ReLU + row-major [B·HW, c_out] → NCHW [B, c_out·HW] reorder
+    out.ensure_shape(&[batch, c_out * hw]);
+    let od = out.data_mut();
+    let (tmp, bd) = (scratch.tmp.data(), b.data());
+    for bi in 0..batch {
+        let o_img = &mut od[bi * c_out * hw..(bi + 1) * c_out * hw];
+        let t_img = &tmp[bi * hw * c_out..(bi + 1) * hw * c_out];
+        for p in 0..hw {
+            let t_row = &t_img[p * c_out..(p + 1) * c_out];
+            for cc in 0..c_out {
+                o_img[cc * hw + p] = (t_row[cc] + bd[cc]).max(0.0);
+            }
+        }
+    }
+}
+
+/// Backward conv3x3: mirrors [`conv3x3_fwd_into`]'s z = col·W + b,
+/// h = relu(z). `h_out` must be the forward output of exactly these
+/// (x, w, b) — the ReLU mask is reconstructed from it like the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_bwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    h_out: &Tensor,
+    g_out: &Tensor,
+    sp: Spatial,
+    g_x: &mut Tensor,
+    g_w: &mut Tensor,
+    g_b: &mut Tensor,
+    scratch: &mut BwdScratch,
+    threads: usize,
+) {
+    let batch = x.shape()[0];
+    let (c_in, h, ww, c_out) = (sp.c_in, sp.h, sp.w, sp.c_out);
+    let hw = h * ww;
+    debug_assert_eq!(h_out.shape(), &[batch, c_out * hw]);
+    debug_assert_eq!(g_out.shape(), &[batch, c_out * hw]);
+
+    // g_z = g_out ⊙ mask(h > 0), NCHW
+    scratch.g_z.ensure_shape(&[batch, c_out * hw]);
+    let gz = scratch.g_z.data_mut();
+    gz.copy_from_slice(g_out.data());
+    for (g, &hv) in gz.iter_mut().zip(h_out.data()) {
+        if hv <= 0.0 {
+            *g = 0.0;
+        }
+    }
+
+    // NCHW → row-major [B·HW, c_out] (the matmul layout)
+    scratch.g_tmp.ensure_shape(&[batch * hw, c_out]);
+    let gt = scratch.g_tmp.data_mut();
+    let gz = scratch.g_z.data();
+    for bi in 0..batch {
+        let gz_img = &gz[bi * c_out * hw..(bi + 1) * c_out * hw];
+        let gt_img = &mut gt[bi * hw * c_out..(bi + 1) * hw * c_out];
+        for cc in 0..c_out {
+            let plane = &gz_img[cc * hw..(cc + 1) * hw];
+            for p in 0..hw {
+                gt_img[p * c_out + cc] = plane[p];
+            }
+        }
+    }
+
+    // g_w = col(x)^T @ g_tmp  (col recomputed — the forward's col lives in
+    // the per-layer FwdScratch, not here)
+    scratch.col.ensure_shape(&[batch * hw, 9 * c_in]);
+    im2col_3x3(x.data(), scratch.col.data_mut(), batch, c_in, h, ww);
+    g_w.ensure_shape(&[9 * c_in, c_out]);
+    matmul_tn(
+        scratch.col.data(),
+        scratch.g_tmp.data(),
+        g_w.data_mut(),
+        9 * c_in,
+        batch * hw,
+        c_out,
+        threads,
+    );
+
+    // g_b = column sums of g_tmp
+    g_b.ensure_shape(&[c_out]);
+    g_b.fill_zero();
+    let gbd = g_b.data_mut();
+    let gt = scratch.g_tmp.data();
+    for row in gt.chunks_exact(c_out) {
+        for (o, &v) in gbd.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+
+    // g_col = g_tmp @ W^T (saxpy form via the transposed weights), then
+    // scatter-add back through the im2col map
+    scratch.w_t.ensure_shape(&[c_out, 9 * c_in]);
+    transpose_into(w.data(), scratch.w_t.data_mut(), 9 * c_in, c_out);
+    scratch.g_col.ensure_shape(&[batch * hw, 9 * c_in]);
+    scratch.g_col.fill_zero();
+    matmul_acc(
+        scratch.g_tmp.data(),
+        scratch.w_t.data(),
+        scratch.g_col.data_mut(),
+        batch * hw,
+        c_out,
+        9 * c_in,
+        threads,
+    );
+    g_x.ensure_shape(&[batch, c_in * hw]);
+    g_x.fill_zero();
+    col2im_3x3(scratch.g_col.data(), g_x.data_mut(), batch, c_in, h, ww);
+}
+
+/// Forward 2×2/stride-2 max pool: x [B, c·H·W] → out [B, c·(H/2)·(W/2)].
+pub fn maxpool2_fwd_into(x: &Tensor, sp: Spatial, out: &mut Tensor) {
+    let batch = x.shape()[0];
+    let (c, h, w) = (sp.c_in, sp.h, sp.w);
+    let (ho, wo) = (h / 2, w / 2);
+    debug_assert_eq!(x.shape()[1], c * h * w);
+    out.ensure_shape(&[batch, c * ho * wo]);
+    let od = out.data_mut();
+    let xd = x.data();
+    for bi in 0..batch {
+        for cc in 0..c {
+            let plane = &xd[(bi * c + cc) * h * w..(bi * c + cc + 1) * h * w];
+            let o_plane = &mut od[(bi * c + cc) * ho * wo..(bi * c + cc + 1) * ho * wo];
+            for oi in 0..ho {
+                for oj in 0..wo {
+                    let (i, j) = (2 * oi, 2 * oj);
+                    let m = plane[i * w + j]
+                        .max(plane[i * w + j + 1])
+                        .max(plane[(i + 1) * w + j])
+                        .max(plane[(i + 1) * w + j + 1]);
+                    o_plane[oi * wo + oj] = m;
+                }
+            }
+        }
+    }
+}
+
+/// Backward max pool: the gradient routes to the FIRST window position (in
+/// (0,0),(0,1),(1,0),(1,1) scan order) matching the pooled value —
+/// deterministic under ties. `h_out` is the forward output on this `x`.
+pub fn maxpool2_bwd_into(x: &Tensor, h_out: &Tensor, g_out: &Tensor, sp: Spatial, g_x: &mut Tensor) {
+    let batch = x.shape()[0];
+    let (c, h, w) = (sp.c_in, sp.h, sp.w);
+    let (ho, wo) = (h / 2, w / 2);
+    debug_assert_eq!(g_out.shape(), &[batch, c * ho * wo]);
+    g_x.ensure_shape(&[batch, c * h * w]);
+    g_x.fill_zero();
+    let gxd = g_x.data_mut();
+    let (xd, hd, gd) = (x.data(), h_out.data(), g_out.data());
+    for bi in 0..batch {
+        for cc in 0..c {
+            let plane = &xd[(bi * c + cc) * h * w..(bi * c + cc + 1) * h * w];
+            let gx_plane = &mut gxd[(bi * c + cc) * h * w..(bi * c + cc + 1) * h * w];
+            let base_o = (bi * c + cc) * ho * wo;
+            for oi in 0..ho {
+                for oj in 0..wo {
+                    let m = hd[base_o + oi * wo + oj];
+                    let g = gd[base_o + oi * wo + oj];
+                    let (i, j) = (2 * oi, 2 * oj);
+                    for (di, dj) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                        if plane[(i + di) * w + j + dj] == m {
+                            gx_plane[(i + di) * w + j + dj] += g;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flatten forward: identity on the flat `[B, d]` buffer (the NCHW → dense
+/// boundary marker — activations are already flattened NCHW everywhere).
+pub fn flatten_fwd_into(x: &Tensor, out: &mut Tensor) {
+    out.copy_resize(x);
+}
+
+/// Flatten backward: identity.
+pub fn flatten_bwd_into(g_out: &Tensor, g_x: &mut Tensor) {
+    g_x.copy_resize(g_out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layer::LayerShape;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn im2col_known_values() {
+        // one 1-channel 2x2 image [[1,2],[3,4]]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut col = vec![0.0; 4 * 9];
+        im2col_3x3(&x, &mut col, 1, 1, 2, 2);
+        // output position (0,0): 3x3 window centered there, zero-padded
+        assert_eq!(&col[0..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // output position (1,1): window centered on value 4
+        assert_eq!(&col[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_adjoint_of_im2col() {
+        // <im2col(x), g> == <x, col2im(g)> — adjointness pins the scatter
+        let mut rng = Pcg32::new(3);
+        let (b, c, h, w) = (2usize, 3usize, 4usize, 5usize);
+        let x = rand_tensor(&mut rng, &[b, c * h * w]);
+        let mut col = vec![0.0; b * h * w * c * 9];
+        im2col_3x3(x.data(), &mut col, b, c, h, w);
+        let g_col = rand_tensor(&mut rng, &[b * h * w, c * 9]);
+        let mut g_x = vec![0.0; b * c * h * w];
+        col2im_3x3(g_col.data(), &mut g_x, b, c, h, w);
+        let lhs: f64 = col.iter().zip(g_col.data()).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = x.data().iter().zip(&g_x).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_identity_kernel_is_relu() {
+        // W that picks the center tap of channel 0 reproduces relu(x + b)
+        let (c_in, h, w, c_out) = (1usize, 3usize, 3usize, 1usize);
+        let sp = LayerShape::conv3x3(c_in, h, w, c_out).unwrap().spatial.unwrap();
+        let mut wt = Tensor::zeros(&[9, 1]);
+        wt.data_mut()[4] = 1.0; // dr=1, dc=1: the center tap
+        let b = Tensor::from_vec(&[1], vec![-0.5]).unwrap();
+        let x = Tensor::from_vec(
+            &[1, 9],
+            vec![1.0, -2.0, 0.25, 3.0, 0.5, -1.0, 2.0, 0.75, -0.25],
+        )
+        .unwrap();
+        let mut out = Tensor::empty();
+        let mut fs = FwdScratch::new();
+        conv3x3_fwd_into(&x, &wt, &b, sp, &mut out, &mut fs, 1);
+        let want: Vec<f32> = x.data().iter().map(|&v| (v - 0.5).max(0.0)).collect();
+        assert_eq!(out.data(), &want[..]);
+    }
+
+    #[test]
+    fn conv_backward_masks_inactive_relu_exactly() {
+        // identity center-tap kernel: h = relu(x + b) elementwise, so the
+        // backward must reproduce the dense-ReLU mask bit for bit:
+        // g_x[p] = g_out[p]·1[h[p] > 0] (only the center tap routes back),
+        // g_b = Σ_p masked g — pins the mask without finite differences
+        let sp = LayerShape::conv3x3(1, 3, 3, 1).unwrap().spatial.unwrap();
+        let mut wt = Tensor::zeros(&[9, 1]);
+        wt.data_mut()[4] = 1.0;
+        let b = Tensor::from_vec(&[1], vec![-0.5]).unwrap();
+        let x = Tensor::from_vec(
+            &[1, 9],
+            vec![1.0, -2.0, 0.25, 3.0, 0.5, -1.0, 2.0, 0.75, -0.25],
+        )
+        .unwrap();
+        let mut h = Tensor::empty();
+        let mut fs = FwdScratch::new();
+        conv3x3_fwd_into(&x, &wt, &b, sp, &mut h, &mut fs, 1);
+
+        let g = Tensor::from_vec(
+            &[1, 9],
+            vec![1.0, 1.0, 1.0, -2.0, 0.5, 1.0, 1.0, 3.0, 1.0],
+        )
+        .unwrap();
+        let (mut gx, mut gw, mut gb) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+        let mut scratch = BwdScratch::new();
+        conv3x3_bwd_into(&x, &wt, &h, &g, sp, &mut gx, &mut gw, &mut gb, &mut scratch, 1);
+
+        let mask: Vec<f32> = h.data().iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect();
+        let want_gx: Vec<f32> =
+            g.data().iter().zip(&mask).map(|(&gv, &m)| gv * m).collect();
+        assert_eq!(gx.data(), &want_gx[..]);
+        let want_gb: f32 = want_gx.iter().sum();
+        assert_eq!(gb.data(), &[want_gb]);
+        assert_eq!(gw.shape(), &[9, 1]);
+    }
+
+    #[test]
+    fn maxpool_known_values_and_routing() {
+        let sp = LayerShape::maxpool2(1, 2, 2).unwrap().spatial.unwrap();
+        let x = Tensor::from_vec(&[1, 4], vec![1.0, 4.0, 3.0, 2.0]).unwrap();
+        let mut out = Tensor::empty();
+        maxpool2_fwd_into(&x, sp, &mut out);
+        assert_eq!(out.data(), &[4.0]);
+        let g = Tensor::from_vec(&[1, 1], vec![2.5]).unwrap();
+        let mut gx = Tensor::empty();
+        maxpool2_bwd_into(&x, &out, &g, sp, &mut gx);
+        assert_eq!(gx.data(), &[0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_ties_route_to_first_position() {
+        let sp = LayerShape::maxpool2(1, 2, 2).unwrap().spatial.unwrap();
+        let x = Tensor::from_vec(&[1, 4], vec![7.0, 7.0, 7.0, 7.0]).unwrap();
+        let mut out = Tensor::empty();
+        maxpool2_fwd_into(&x, sp, &mut out);
+        let g = Tensor::from_vec(&[1, 1], vec![1.0]).unwrap();
+        let mut gx = Tensor::empty();
+        maxpool2_bwd_into(&x, &out, &g, sp, &mut gx);
+        assert_eq!(gx.data(), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn flatten_is_identity_both_ways() {
+        let mut rng = Pcg32::new(4);
+        let x = rand_tensor(&mut rng, &[3, 12]);
+        let mut out = Tensor::empty();
+        flatten_fwd_into(&x, &mut out);
+        assert_eq!(out, x);
+        let mut gx = Tensor::empty();
+        flatten_bwd_into(&x, &mut gx);
+        assert_eq!(gx, x);
+    }
+
+    #[test]
+    fn conv_kernels_bit_identical_across_thread_counts() {
+        // sizes above the matmul fan-out threshold: B·HW = 2048 rows,
+        // 2048·36·16 ≈ 1.2M MACs ⇒ real row-chunk fan-out at threads ≥ 2
+        let mut rng = Pcg32::new(5);
+        let sp = LayerShape::conv3x3(4, 16, 16, 16).unwrap().spatial.unwrap();
+        let x = rand_tensor(&mut rng, &[8, 4 * 256]);
+        let w = rand_tensor(&mut rng, &[36, 16]);
+        let b = rand_tensor(&mut rng, &[16]);
+        let run_fwd = |threads: usize| {
+            let mut out = Tensor::empty();
+            let mut fs = FwdScratch::new();
+            conv3x3_fwd_into(&x, &w, &b, sp, &mut out, &mut fs, threads);
+            out
+        };
+        let h1 = run_fwd(1);
+        for threads in [2usize, 3, 5] {
+            assert_eq!(h1, run_fwd(threads), "fwd threads={threads}");
+        }
+        let g = rand_tensor(&mut rng, &[8, 16 * 256]);
+        let run_bwd = |threads: usize| {
+            let (mut gx, mut gw, mut gb) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
+            let mut scratch = BwdScratch::new();
+            conv3x3_bwd_into(&x, &w, &h1, &g, sp, &mut gx, &mut gw, &mut gb, &mut scratch, threads);
+            (gx, gw, gb)
+        };
+        let b1 = run_bwd(1);
+        for threads in [2usize, 4] {
+            assert_eq!(b1, run_bwd(threads), "bwd threads={threads}");
+        }
+    }
+}

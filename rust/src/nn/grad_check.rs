@@ -3,14 +3,16 @@
 //! every coordinate of a 100k-param net would drown the test suite).
 
 use crate::nn::layer::LayerShape;
-use crate::nn::{dense_bwd_into, dense_fwd_into, full_backward, full_loss, BwdScratch};
+use crate::nn::{full_backward, full_loss, layer_bwd_into, layer_fwd_into, BwdScratch, FwdScratch};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
 /// Max relative error between analytic and finite-difference gradients of a
 /// scalarized single layer: f = Σ g_out ⊙ layer(x, w, b). Drives the same
-/// in-place workspace kernels the backends run, so the finite-difference
-/// oracle pins exactly the production code path.
+/// in-place workspace kernels the backends run (any [`LayerShape`] kind,
+/// conv/pool/flatten included), so the finite-difference oracle pins
+/// exactly the production code path. Parameter-free layers simply have no
+/// W/b coordinates to probe.
 pub fn check_layer(
     x: &Tensor,
     w: &Tensor,
@@ -20,19 +22,20 @@ pub fn check_layer(
     rng: &mut Pcg32,
 ) -> f64 {
     let mut h_out = Tensor::empty();
-    dense_fwd_into(x, w, b, layer.kind, &mut h_out, 1);
+    let mut fs = FwdScratch::new();
+    layer_fwd_into(x, w, b, layer, &mut h_out, &mut fs, 1);
     // fixed co-vector so the scalar is smooth in the parameters
     let mut g_out = Tensor::zeros(h_out.shape());
     rng.fill_normal(g_out.data_mut(), 1.0);
 
     let (mut g_x, mut g_w, mut g_b) = (Tensor::empty(), Tensor::empty(), Tensor::empty());
     let mut scratch = BwdScratch::new();
-    dense_bwd_into(
+    layer_bwd_into(
         x,
         w,
         &h_out,
         &g_out,
-        layer.kind,
+        layer,
         &mut g_x,
         &mut g_w,
         &mut g_b,
@@ -42,7 +45,8 @@ pub fn check_layer(
 
     let scalar = |x: &Tensor, w: &Tensor, b: &Tensor| -> f64 {
         let mut h = Tensor::empty();
-        dense_fwd_into(x, w, b, layer.kind, &mut h, 1);
+        let mut fs = FwdScratch::new();
+        layer_fwd_into(x, w, b, layer, &mut h, &mut fs, 1);
         h.data()
             .iter()
             .zip(g_out.data())
@@ -140,6 +144,92 @@ mod tests {
         let layer = LayerShape::new(LayerKind::Linear, 4, 5).unwrap();
         let err = check_layer(&x, &w, &b, layer, 1e-2, &mut rng);
         assert!(err < 1e-3, "{err}");
+    }
+
+    /// |N(0, std)| + floor: strictly positive samples, so every ReLU sits
+    /// far from its kink and the finite differences stay exact.
+    fn fill_positive(rng: &mut Pcg32, t: &mut Tensor, std: f32, floor: f32) {
+        rng.fill_normal(t.data_mut(), std);
+        for v in t.data_mut() {
+            *v = v.abs() + floor;
+        }
+    }
+
+    #[test]
+    fn conv_fd_exact_on_active_relu() {
+        // positive x, W, b keep every pre-activation strictly positive, so
+        // the conv layer is bilinear on the probe neighbourhood and the
+        // central difference is exact — this pins the im2col linear algebra
+        // (g_x via col2im, g_w via col^T, g_b) without kink noise. The ReLU
+        // mask itself is pinned exactly in conv::tests.
+        let mut rng = Pcg32::new(21);
+        let conv = LayerShape::conv3x3(2, 4, 4, 3).unwrap();
+        let mut x = Tensor::zeros(&[3, conv.d_in]);
+        fill_positive(&mut rng, &mut x, 1.0, 0.5);
+        let mut w = Tensor::zeros(&[18, 3]);
+        fill_positive(&mut rng, &mut w, 0.3, 0.05);
+        let mut b = Tensor::zeros(&[3]);
+        fill_positive(&mut rng, &mut b, 0.1, 0.2);
+        let err = check_layer(&x, &w, &b, conv, 1e-3, &mut rng);
+        assert!(err < 1e-2, "conv3x3 fd mismatch {err}");
+    }
+
+    #[test]
+    fn maxpool_and_flatten_fd() {
+        // maxpool input: distinct values with gap 0.1 ≫ 2·eps, so the
+        // window argmax never flips inside the probe neighbourhood and the
+        // pooled function is exactly linear there
+        let mut rng = Pcg32::new(23);
+        let pool = LayerShape::maxpool2(3, 4, 4).unwrap();
+        let n = 3 * pool.d_in;
+        let mut vals = vec![0.0f32; n];
+        for (p, v) in vals.iter_mut().enumerate() {
+            *v = ((p * 37) % n) as f32 * 0.1;
+        }
+        let x = Tensor::from_vec(&[3, pool.d_in], vals).unwrap();
+        let empty_w = Tensor::zeros(&[0, 0]);
+        let empty_b = Tensor::zeros(&[0]);
+        let err = check_layer(&x, &empty_w, &empty_b, pool, 1e-3, &mut rng);
+        assert!(err < 1e-2, "maxpool fd mismatch {err}");
+
+        let flat = LayerShape::flatten(3, 4, 4).unwrap();
+        let mut x = Tensor::zeros(&[3, flat.d_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let err = check_layer(&x, &empty_w, &empty_b, flat, 1e-3, &mut rng);
+        assert!(err < 1e-3, "flatten fd mismatch {err}");
+    }
+
+    #[test]
+    fn full_cnn_fd_small() {
+        // a conv → flatten → dense-head stack against central differences
+        // on every parametrized layer. All-positive weights/inputs keep
+        // every ReLU strictly active, so the network is smooth on the probe
+        // neighbourhood (softmax-xent is smooth everywhere); maxpool's
+        // gradient has its own exact checks above.
+        let mut rng = Pcg32::new(22);
+        let layers =
+            crate::nn::build_stack(2, 4, 4, &["conv3x3:3", "flatten", "relu:6", "linear:3"]).unwrap();
+        // small positive weights: ReLUs strictly active yet the logits stay
+        // in the healthy softmax range (saturation would starve the FD
+        // numerator below f32 resolution)
+        let mut params = init_params(&mut rng, &layers);
+        for (w, b) in params.iter_mut() {
+            for v in w.data_mut() {
+                *v = v.abs() * 0.1 + 0.01;
+            }
+            for v in b.data_mut() {
+                *v = 0.1;
+            }
+        }
+        let mut x = Tensor::zeros(&[4, 32]);
+        fill_positive(&mut rng, &mut x, 0.5, 0.1);
+        let mut onehot = Tensor::zeros(&[4, 3]);
+        for i in 0..4 {
+            let c = rng.below(3);
+            onehot.data_mut()[i * 3 + c] = 1.0;
+        }
+        let err = check_full(&x, &onehot, &params, &layers, 1e-3, &mut rng);
+        assert!(err < 2e-2, "{err}");
     }
 
     #[test]

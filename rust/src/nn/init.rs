@@ -23,11 +23,22 @@ pub fn glorot_init(rng: &mut Pcg32, d_in: usize, d_out: usize) -> Tensor {
     w
 }
 
-/// Initialize a full layer stack: He weights, zero biases.
+/// Initialize a full layer stack: He weights, zero biases. Conv layers get
+/// He fan-in 9·c_in over their `[9·c_in, c_out]` im2col weights;
+/// parameter-free layers (maxpool/flatten) keep `[0, 0]`/`[0]` placeholders
+/// so every layer owns the uniform (W, b) slot the plumbing expects.
 pub fn init_params(rng: &mut Pcg32, layers: &[LayerShape]) -> Vec<(Tensor, Tensor)> {
     layers
         .iter()
-        .map(|l| (he_init(rng, l.d_in, l.d_out), Tensor::zeros(&[l.d_out])))
+        .map(|l| {
+            let [rows, cols] = l.w_shape();
+            let w = if rows * cols > 0 {
+                he_init(rng, rows, cols)
+            } else {
+                Tensor::zeros(&[rows, cols])
+            };
+            (w, Tensor::zeros(&[l.b_len()]))
+        })
         .collect()
 }
 
@@ -48,15 +59,13 @@ pub fn unflatten_params(flat: &Tensor, layers: &[LayerShape]) -> Vec<(Tensor, Te
     let mut out = Vec::with_capacity(layers.len());
     let mut off = 0;
     for l in layers {
-        let wlen = l.d_in * l.d_out;
-        let w = Tensor::from_vec(
-            &[l.d_in, l.d_out],
-            flat.data()[off..off + wlen].to_vec(),
-        )
-        .unwrap();
+        let [rows, cols] = l.w_shape();
+        let wlen = rows * cols;
+        let w = Tensor::from_vec(&[rows, cols], flat.data()[off..off + wlen].to_vec()).unwrap();
         off += wlen;
-        let b = Tensor::from_vec(&[l.d_out], flat.data()[off..off + l.d_out].to_vec()).unwrap();
-        off += l.d_out;
+        let blen = l.b_len();
+        let b = Tensor::from_vec(&[blen], flat.data()[off..off + blen].to_vec()).unwrap();
+        off += blen;
         out.push((w, b));
     }
     debug_assert_eq!(off, flat.len());

@@ -2,7 +2,15 @@
 //!
 //! `LayerKind` string forms must stay in sync with
 //! `python/compile/kernels/ref.py` (KIND_*) and the manifest emitted by
-//! `python/compile/aot.py`.
+//! `python/compile/aot.py`. The convolutional kinds (`conv3x3`, `maxpool`,
+//! `flatten`) are native-backend-only: no AOT artifacts exist for them yet,
+//! and the manifest loader rejects them until they do.
+//!
+//! Activations stay 2-D `[B, d]` tensors everywhere — the spatial kinds
+//! interpret the flattened vector in NCHW order (channel-major planes),
+//! carried by the [`Spatial`] descriptor alongside the dense `d_in`/`d_out`
+//! vocabulary, so the pipeline/gossip/checkpoint plumbing never has to know
+//! about images.
 
 use crate::error::{Error, Result};
 
@@ -14,15 +22,30 @@ pub enum LayerKind {
     Relu,
     /// relu(z) + x  (requires d_in == d_out)
     Residual,
+    /// relu(conv3x3(x, W) + b): 3×3 kernel, stride 1, zero-pad 1 (same H, W)
+    Conv3x3,
+    /// 2×2 max pooling, stride 2 (requires even H, W); no parameters
+    MaxPool2x2,
+    /// NCHW → dense marker; identity on the flat buffer, no parameters
+    Flatten,
 }
 
 impl LayerKind {
+    /// Parse a layer-kind name — trimmed and case-folded, like
+    /// `BackendKind::parse` / `OptimizerKind::parse`. Unknown names are a
+    /// config error carrying the offending string.
     pub fn parse(s: &str) -> Result<LayerKind> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "linear" => Ok(LayerKind::Linear),
             "relu" => Ok(LayerKind::Relu),
             "residual" => Ok(LayerKind::Residual),
-            _ => Err(Error::Manifest(format!("unknown layer kind {s:?}"))),
+            "conv3x3" => Ok(LayerKind::Conv3x3),
+            "maxpool" => Ok(LayerKind::MaxPool2x2),
+            "flatten" => Ok(LayerKind::Flatten),
+            _ => Err(Error::Config(format!(
+                "unknown layer kind {s:?} \
+                 (want linear|relu|residual|conv3x3|maxpool|flatten)"
+            ))),
         }
     }
 
@@ -31,36 +54,155 @@ impl LayerKind {
             LayerKind::Linear => "linear",
             LayerKind::Relu => "relu",
             LayerKind::Residual => "residual",
+            LayerKind::Conv3x3 => "conv3x3",
+            LayerKind::MaxPool2x2 => "maxpool",
+            LayerKind::Flatten => "flatten",
         }
+    }
+
+    /// Kinds that carry an NCHW [`Spatial`] descriptor.
+    pub fn is_spatial(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv3x3 | LayerKind::MaxPool2x2 | LayerKind::Flatten
+        )
     }
 }
 
-/// Static shape of one dense layer.
+/// NCHW geometry of one spatial layer: the incoming image planes
+/// (`c_in` × `h` × `w`) and the outgoing channel count. Output spatial dims
+/// follow from the kind (conv3x3 preserves H×W, maxpool halves them,
+/// flatten leaves the flat vector as-is).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Spatial {
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_out: usize,
+}
+
+/// Static shape of one layer: the dense `[B, d_in] → [B, d_out]` contract
+/// every engine component sees, plus the NCHW descriptor for spatial kinds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LayerShape {
     pub kind: LayerKind,
     pub d_in: usize,
     pub d_out: usize,
+    /// present iff `kind.is_spatial()`
+    pub spatial: Option<Spatial>,
 }
 
 impl LayerShape {
+    /// Dense constructor (linear/relu/residual). Spatial kinds need their
+    /// NCHW geometry — use [`Self::conv3x3`] / [`Self::maxpool2`] /
+    /// [`Self::flatten`].
     pub fn new(kind: LayerKind, d_in: usize, d_out: usize) -> Result<LayerShape> {
+        if kind.is_spatial() {
+            return Err(Error::Shape(format!(
+                "{} layer needs NCHW dims; use the spatial constructors",
+                kind.as_str()
+            )));
+        }
         if kind == LayerKind::Residual && d_in != d_out {
             return Err(Error::Shape(format!(
                 "residual layer requires d_in == d_out, got {d_in} x {d_out}"
             )));
         }
-        Ok(LayerShape { kind, d_in, d_out })
+        Ok(LayerShape { kind, d_in, d_out, spatial: None })
+    }
+
+    /// 3×3 stride-1 zero-pad conv (+ReLU) over `c_in`×`h`×`w` planes to
+    /// `c_out` channels; H and W are preserved.
+    pub fn conv3x3(c_in: usize, h: usize, w: usize, c_out: usize) -> Result<LayerShape> {
+        if c_in == 0 || c_out == 0 || h == 0 || w == 0 {
+            return Err(Error::Shape(format!(
+                "conv3x3 dims must be nonzero, got {c_in}x{h}x{w} -> {c_out}"
+            )));
+        }
+        Ok(LayerShape {
+            kind: LayerKind::Conv3x3,
+            d_in: c_in * h * w,
+            d_out: c_out * h * w,
+            spatial: Some(Spatial { c_in, h, w, c_out }),
+        })
+    }
+
+    /// 2×2 stride-2 max pool over `c`×`h`×`w` planes (H, W must be even).
+    pub fn maxpool2(c: usize, h: usize, w: usize) -> Result<LayerShape> {
+        if c == 0 || h == 0 || w == 0 {
+            return Err(Error::Shape(format!(
+                "maxpool dims must be nonzero, got {c}x{h}x{w}"
+            )));
+        }
+        if h % 2 != 0 || w % 2 != 0 {
+            return Err(Error::Shape(format!(
+                "maxpool needs even H and W, got {c}x{h}x{w}"
+            )));
+        }
+        Ok(LayerShape {
+            kind: LayerKind::MaxPool2x2,
+            d_in: c * h * w,
+            d_out: c * (h / 2) * (w / 2),
+            spatial: Some(Spatial { c_in: c, h, w, c_out: c }),
+        })
+    }
+
+    /// NCHW → dense boundary marker (identity on the flat buffer).
+    pub fn flatten(c: usize, h: usize, w: usize) -> Result<LayerShape> {
+        if c * h * w == 0 {
+            return Err(Error::Shape(format!(
+                "flatten dims must be nonzero, got {c}x{h}x{w}"
+            )));
+        }
+        Ok(LayerShape {
+            kind: LayerKind::Flatten,
+            d_in: c * h * w,
+            d_out: c * h * w,
+            spatial: Some(Spatial { c_in: c, h, w, c_out: c }),
+        })
+    }
+
+    /// Weight tensor shape `[rows, cols]`: dense layers store `[d_in,
+    /// d_out]`, conv stores the im2col matrix `[9·c_in, c_out]`, and
+    /// parameter-free layers a `[0, 0]` placeholder (so every layer keeps
+    /// the uniform (W, b) slot the optimizer/gossip plumbing expects).
+    pub fn w_shape(&self) -> [usize; 2] {
+        match (self.kind, self.spatial) {
+            (LayerKind::Conv3x3, Some(sp)) => [9 * sp.c_in, sp.c_out],
+            (LayerKind::MaxPool2x2 | LayerKind::Flatten, _) => [0, 0],
+            _ => [self.d_in, self.d_out],
+        }
+    }
+
+    /// Bias length (0 for parameter-free layers).
+    pub fn b_len(&self) -> usize {
+        match (self.kind, self.spatial) {
+            (LayerKind::Conv3x3, Some(sp)) => sp.c_out,
+            (LayerKind::MaxPool2x2 | LayerKind::Flatten, _) => 0,
+            _ => self.d_out,
+        }
     }
 
     /// Flattened parameter count (W then b).
     pub fn param_count(&self) -> usize {
-        self.d_in * self.d_out + self.d_out
+        let [r, c] = self.w_shape();
+        r * c + self.b_len()
     }
 
-    /// Artifact key (matches `LayerSpec.key` in python/compile/model.py).
+    /// Artifact key (matches `LayerSpec.key` in python/compile/model.py for
+    /// the dense kinds; spatial kinds append their NCHW geometry).
     pub fn key(&self, batch: usize) -> String {
-        format!("{}_{batch}x{}x{}", self.kind.as_str(), self.d_in, self.d_out)
+        match (self.kind, self.spatial) {
+            (_, Some(sp)) => format!(
+                "{}_{batch}x{}x{}x{}x{}",
+                self.kind.as_str(),
+                sp.c_in,
+                sp.h,
+                sp.w,
+                sp.c_out
+            ),
+            _ => format!("{}_{batch}x{}x{}", self.kind.as_str(), self.d_in, self.d_out),
+        }
     }
 }
 
@@ -76,18 +218,134 @@ pub fn resmlp_layers(
         kind: LayerKind::Relu,
         d_in,
         d_out: hidden,
+        spatial: None,
     }];
     layers.extend((0..blocks).map(|_| LayerShape {
         kind: LayerKind::Residual,
         d_in: hidden,
         d_out: hidden,
+        spatial: None,
     }));
     layers.push(LayerShape {
         kind: LayerKind::Linear,
         d_in: hidden,
         d_out: classes,
+        spatial: None,
     });
     layers
+}
+
+/// Shape-inference cursor while growing a stack from layer specs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cursor {
+    /// NCHW planes (before `flatten`)
+    Spatial { c: usize, h: usize, w: usize },
+    /// flat feature width (after `flatten`, or a pure-dense stack's input)
+    Flat(usize),
+}
+
+/// Parse the positive-integer parameter of a `name:N` layer spec.
+fn spec_param(spec: &str, val: &str) -> Result<usize> {
+    let n: usize = val
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("bad layer spec {spec:?}: want a positive integer")))?;
+    if n == 0 {
+        return Err(Error::Config(format!(
+            "bad layer spec {spec:?}: parameter must be >= 1"
+        )));
+    }
+    Ok(n)
+}
+
+/// Build a layer stack from the spec grammar, shape-inferring through an
+/// NCHW input of `in_c`×`in_h`×`in_w` planes:
+///
+/// * `conv3x3:C` — 3×3/s1/p1 conv (+ReLU) to C channels (before `flatten`)
+/// * `maxpool`   — 2×2/s2 max pool (before `flatten`; H, W must be even)
+/// * `flatten`   — NCHW → dense boundary (required before any dense spec)
+/// * `relu:D` / `linear:D` — dense layer to width D (after `flatten`)
+/// * `residual`  — square residual dense block (after `flatten`)
+///
+/// Specs are trimmed and case-folded; every rejection is an
+/// [`Error::Config`] carrying the offending spec string.
+pub fn build_stack<S: AsRef<str>>(
+    in_c: usize,
+    in_h: usize,
+    in_w: usize,
+    specs: &[S],
+) -> Result<Vec<LayerShape>> {
+    if specs.is_empty() {
+        return Err(Error::Config("layer spec list is empty".into()));
+    }
+    let mut cursor = Cursor::Spatial { c: in_c, h: in_h, w: in_w };
+    let mut layers = Vec::with_capacity(specs.len());
+    for raw in specs {
+        let raw = raw.as_ref();
+        let spec = raw.trim().to_ascii_lowercase();
+        let (name, param) = match spec.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (spec.as_str(), None),
+        };
+        let need_spatial = |cursor: Cursor| match cursor {
+            Cursor::Spatial { c, h, w } => Ok((c, h, w)),
+            Cursor::Flat(_) => Err(Error::Config(format!(
+                "layer spec {raw:?} needs NCHW input but follows \"flatten\""
+            ))),
+        };
+        let need_flat = |cursor: Cursor| match cursor {
+            Cursor::Flat(d) => Ok(d),
+            Cursor::Spatial { .. } => Err(Error::Config(format!(
+                "dense layer spec {raw:?} before \"flatten\""
+            ))),
+        };
+        let layer = match (name, param) {
+            ("conv3x3", Some(p)) => {
+                let (c, h, w) = need_spatial(cursor)?;
+                let c_out = spec_param(raw, p)?;
+                cursor = Cursor::Spatial { c: c_out, h, w };
+                LayerShape::conv3x3(c, h, w, c_out)
+                    .map_err(|e| Error::Config(format!("layer spec {raw:?}: {e}")))?
+            }
+            ("maxpool", None) => {
+                let (c, h, w) = need_spatial(cursor)?;
+                let l = LayerShape::maxpool2(c, h, w)
+                    .map_err(|e| Error::Config(format!("layer spec {raw:?}: {e}")))?;
+                cursor = Cursor::Spatial { c, h: h / 2, w: w / 2 };
+                l
+            }
+            ("flatten", None) => {
+                let (c, h, w) = need_spatial(cursor)?;
+                cursor = Cursor::Flat(c * h * w);
+                LayerShape::flatten(c, h, w)
+                    .map_err(|e| Error::Config(format!("layer spec {raw:?}: {e}")))?
+            }
+            ("relu", Some(p)) | ("linear", Some(p)) => {
+                let d = need_flat(cursor)?;
+                let d_out = spec_param(raw, p)?;
+                let kind = if name == "relu" { LayerKind::Relu } else { LayerKind::Linear };
+                cursor = Cursor::Flat(d_out);
+                LayerShape::new(kind, d, d_out)?
+            }
+            ("residual", None) => {
+                let d = need_flat(cursor)?;
+                LayerShape::new(LayerKind::Residual, d, d)?
+            }
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown layer spec {raw:?} \
+                     (want conv3x3:C|maxpool|flatten|relu:D|linear:D|residual)"
+                )))
+            }
+        };
+        layers.push(layer);
+    }
+    if let Cursor::Spatial { .. } = cursor {
+        return Err(Error::Config(
+            "layer stack never reaches \"flatten\": the loss head needs a dense output".into(),
+        ));
+    }
+    Ok(layers)
 }
 
 #[cfg(test)]
@@ -96,10 +354,26 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for k in [LayerKind::Linear, LayerKind::Relu, LayerKind::Residual] {
+        for k in [
+            LayerKind::Linear,
+            LayerKind::Relu,
+            LayerKind::Residual,
+            LayerKind::Conv3x3,
+            LayerKind::MaxPool2x2,
+            LayerKind::Flatten,
+        ] {
             assert_eq!(LayerKind::parse(k.as_str()).unwrap(), k);
         }
         assert!(LayerKind::parse("conv").is_err());
+    }
+
+    #[test]
+    fn parse_trims_and_case_folds_with_config_error() {
+        assert_eq!(LayerKind::parse(" Conv3x3 ").unwrap(), LayerKind::Conv3x3);
+        assert_eq!(LayerKind::parse("RELU").unwrap(), LayerKind::Relu);
+        let err = LayerKind::parse("warp").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("warp"), "{err}");
     }
 
     #[test]
@@ -110,9 +384,18 @@ mod tests {
     }
 
     #[test]
+    fn spatial_kinds_reject_dense_constructor() {
+        for k in [LayerKind::Conv3x3, LayerKind::MaxPool2x2, LayerKind::Flatten] {
+            assert!(LayerShape::new(k, 4, 4).is_err(), "{k:?}");
+        }
+    }
+
+    #[test]
     fn key_matches_python_format() {
         let l = LayerShape::new(LayerKind::Relu, 256, 128).unwrap();
         assert_eq!(l.key(194), "relu_194x256x128");
+        let c = LayerShape::conv3x3(3, 32, 32, 16).unwrap();
+        assert_eq!(c.key(8), "conv3x3_8x3x32x32x16");
     }
 
     #[test]
@@ -129,5 +412,69 @@ mod tests {
     fn param_count() {
         let l = LayerShape::new(LayerKind::Relu, 3, 2).unwrap();
         assert_eq!(l.param_count(), 8);
+        let c = LayerShape::conv3x3(3, 8, 8, 4).unwrap();
+        assert_eq!(c.param_count(), 9 * 3 * 4 + 4);
+        assert_eq!(LayerShape::maxpool2(4, 8, 8).unwrap().param_count(), 0);
+        assert_eq!(LayerShape::flatten(4, 4, 4).unwrap().param_count(), 0);
+    }
+
+    #[test]
+    fn conv_shapes_flatten_nchw() {
+        let c = LayerShape::conv3x3(3, 32, 32, 16).unwrap();
+        assert_eq!((c.d_in, c.d_out), (3 * 1024, 16 * 1024));
+        assert_eq!(c.w_shape(), [27, 16]);
+        assert_eq!(c.b_len(), 16);
+        let p = LayerShape::maxpool2(16, 32, 32).unwrap();
+        assert_eq!((p.d_in, p.d_out), (16 * 1024, 16 * 256));
+        assert_eq!(p.w_shape(), [0, 0]);
+        assert!(LayerShape::maxpool2(16, 7, 8).is_err(), "odd H rejected");
+    }
+
+    #[test]
+    fn build_stack_infers_cifar_cnn_shapes() {
+        let layers = build_stack(
+            3,
+            32,
+            32,
+            &["conv3x3:8", "maxpool", "conv3x3:16", "maxpool", "flatten", "relu:64", "linear:10"],
+        )
+        .unwrap();
+        assert_eq!(layers.len(), 7);
+        assert_eq!(layers[0].d_in, 3072);
+        assert_eq!(layers[2].spatial.unwrap().c_in, 8);
+        assert_eq!(layers[2].spatial.unwrap().h, 16);
+        assert_eq!(layers[4].kind, LayerKind::Flatten);
+        assert_eq!(layers[4].d_out, 16 * 8 * 8);
+        assert_eq!(layers[5].d_in, 1024);
+        assert_eq!(layers[6].d_out, 10);
+        // chain is consistent
+        for pair in layers.windows(2) {
+            assert_eq!(pair[0].d_out, pair[1].d_in);
+        }
+    }
+
+    #[test]
+    fn build_stack_specs_are_trimmed_and_case_folded() {
+        let layers = build_stack(2, 4, 4, &[" Conv3x3:3 ", "FLATTEN", "Linear:5"]).unwrap();
+        assert_eq!(layers[0].kind, LayerKind::Conv3x3);
+        assert_eq!(layers[2].d_out, 5);
+    }
+
+    #[test]
+    fn build_stack_rejects_bad_specs_with_the_offending_string() {
+        for (in_dims, bad, why) in [
+            ((3usize, 8usize, 8usize), vec!["conv4x4:8", "flatten"], "unknown"),
+            ((3, 8, 8), vec!["conv3x3:0", "flatten"], ">= 1"),
+            ((3, 8, 8), vec!["conv3x3:x", "flatten"], "integer"),
+            ((3, 8, 8), vec!["relu:8"], "before \"flatten\""),
+            ((3, 8, 8), vec!["flatten", "conv3x3:4"], "follows \"flatten\""),
+            ((3, 8, 8), vec!["conv3x3:4"], "never reaches"),
+            ((3, 7, 8), vec!["maxpool", "flatten"], "even"),
+        ] {
+            let (c, h, w) = in_dims;
+            let err = build_stack(c, h, w, &bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad:?}: {err:?}");
+            assert!(err.to_string().contains(why), "{bad:?}: {err}");
+        }
     }
 }

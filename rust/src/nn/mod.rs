@@ -10,8 +10,9 @@
 //!   3. the "traditional BP on one device" baseline comparator.
 //!
 //! §Perf — every kernel is an **in-place, caller-owned-workspace** variant
-//! (`dense_fwd_into` / `dense_bwd_into` / `softmax_xent_into`): the
-//! steady-state training loop allocates nothing (tests/alloc_guard.rs).
+//! (`dense_fwd_into` / `dense_bwd_into` / `softmax_xent_into`, plus the
+//! [`conv`] family dispatched through `layer_fwd_into` / `layer_bwd_into`):
+//! the steady-state training loop allocates nothing (tests/alloc_guard.rs).
 //! The matmuls are k-blocked (`KBLOCK`-row panels of `b` stay hot in
 //! L1/L2 while the output rows stream past) and parallelized over fixed
 //! output-row chunks with `std::thread::scope` — each output element is
@@ -23,11 +24,13 @@
 //! defeated autovectorization in the old `matmul_nt`, and the ReLU-masked
 //! `g_z` rows make the zero-skip branch pay twice over.
 
+pub mod conv;
 pub mod grad_check;
 pub mod init;
 pub mod layer;
 
-pub use layer::{resmlp_layers, LayerKind, LayerShape};
+pub use conv::FwdScratch;
+pub use layer::{build_stack, resmlp_layers, LayerKind, LayerShape, Spatial};
 
 use crate::tensor::Tensor;
 
@@ -200,14 +203,21 @@ fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
 }
 
 /// Caller-owned scratch for one layer's backward pass: the masked output
-/// gradient and the transposed weight panel. Sized lazily on first use
-/// ([`Tensor::ensure_shape`]), allocation-free after that.
+/// gradient and the transposed weight panel, plus the conv path's im2col
+/// buffers. Sized lazily on first use ([`Tensor::ensure_shape`]),
+/// allocation-free after that; dense layers leave the conv buffers empty.
 #[derive(Debug, Clone, Default)]
 pub struct BwdScratch {
     /// g_z = g_out ⊙ mask(z > 0), [batch, d_out]
     pub g_z: Tensor,
     /// W^T, [d_out, d_in] — lets the g_x matmul run in saxpy form
     pub w_t: Tensor,
+    /// conv: im2col of the stashed input, [B·H·W, 9·c_in]
+    pub col: Tensor,
+    /// conv: masked gradient in matmul layout, [B·H·W, c_out]
+    pub g_tmp: Tensor,
+    /// conv: gradient w.r.t. the column matrix, [B·H·W, 9·c_in]
+    pub g_col: Tensor,
 }
 
 impl BwdScratch {
@@ -215,6 +225,9 @@ impl BwdScratch {
         BwdScratch {
             g_z: Tensor::empty(),
             w_t: Tensor::empty(),
+            col: Tensor::empty(),
+            g_tmp: Tensor::empty(),
+            g_col: Tensor::empty(),
         }
     }
 }
@@ -371,14 +384,81 @@ pub fn softmax_xent_into(logits: &Tensor, onehot: &Tensor, g: &mut Tensor) -> f3
     (loss * inv_b as f64) as f32
 }
 
+/// Forward one layer of any kind into `out` — the single dispatch point
+/// both backends and the oracle utilities share. Dense kinds ignore
+/// `scratch`; the spatial kinds use its im2col buffers.
+pub fn layer_fwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    layer: LayerShape,
+    out: &mut Tensor,
+    scratch: &mut FwdScratch,
+    threads: usize,
+) {
+    match layer.kind {
+        LayerKind::Linear | LayerKind::Relu | LayerKind::Residual => {
+            dense_fwd_into(x, w, b, layer.kind, out, threads)
+        }
+        LayerKind::Conv3x3 => {
+            let sp = layer.spatial.expect("conv layer carries spatial dims");
+            conv::conv3x3_fwd_into(x, w, b, sp, out, scratch, threads)
+        }
+        LayerKind::MaxPool2x2 => {
+            let sp = layer.spatial.expect("maxpool layer carries spatial dims");
+            conv::maxpool2_fwd_into(x, sp, out)
+        }
+        LayerKind::Flatten => conv::flatten_fwd_into(x, out),
+    }
+}
+
+/// Backward one layer of any kind into caller-owned buffers — the dispatch
+/// mirror of [`layer_fwd_into`]. Parameter-free kinds leave `g_w`/`g_b`
+/// sized to their `[0, 0]`/`[0]` placeholders.
+#[allow(clippy::too_many_arguments)]
+pub fn layer_bwd_into(
+    x: &Tensor,
+    w: &Tensor,
+    h_out: &Tensor,
+    g_out: &Tensor,
+    layer: LayerShape,
+    g_x: &mut Tensor,
+    g_w: &mut Tensor,
+    g_b: &mut Tensor,
+    scratch: &mut BwdScratch,
+    threads: usize,
+) {
+    match layer.kind {
+        LayerKind::Linear | LayerKind::Relu | LayerKind::Residual => {
+            dense_bwd_into(x, w, h_out, g_out, layer.kind, g_x, g_w, g_b, scratch, threads)
+        }
+        LayerKind::Conv3x3 => {
+            let sp = layer.spatial.expect("conv layer carries spatial dims");
+            conv::conv3x3_bwd_into(x, w, h_out, g_out, sp, g_x, g_w, g_b, scratch, threads)
+        }
+        LayerKind::MaxPool2x2 => {
+            let sp = layer.spatial.expect("maxpool layer carries spatial dims");
+            conv::maxpool2_bwd_into(x, h_out, g_out, sp, g_x);
+            g_w.ensure_shape(&[0, 0]);
+            g_b.ensure_shape(&[0]);
+        }
+        LayerKind::Flatten => {
+            conv::flatten_bwd_into(g_out, g_x);
+            g_w.ensure_shape(&[0, 0]);
+            g_b.ensure_shape(&[0]);
+        }
+    }
+}
+
 /// Full-network forward over a layer stack; params are (W, b) pairs.
 /// Evaluation/oracle utility — allocates its own activations and runs
 /// single-threaded; the training hot path goes through the workspace API.
 pub fn full_forward(x: &Tensor, params: &[(Tensor, Tensor)], layers: &[LayerShape]) -> Tensor {
     let mut h = x.clone();
     let mut out = Tensor::empty();
+    let mut fs = FwdScratch::new();
     for ((w, b), layer) in params.iter().zip(layers) {
-        dense_fwd_into(&h, w, b, layer.kind, &mut out, 1);
+        layer_fwd_into(&h, w, b, *layer, &mut out, &mut fs, 1);
         std::mem::swap(&mut h, &mut out);
     }
     h
@@ -407,9 +487,10 @@ pub fn full_backward(
 ) -> (f32, Vec<(Tensor, Tensor)>) {
     // forward, stashing every activation (same as the staleness buffers)
     let mut acts = vec![x.clone()];
+    let mut fs = FwdScratch::new();
     for ((w, b), layer) in params.iter().zip(layers) {
         let mut h = Tensor::empty();
-        dense_fwd_into(acts.last().unwrap(), w, b, layer.kind, &mut h, 1);
+        layer_fwd_into(acts.last().unwrap(), w, b, *layer, &mut h, &mut fs, 1);
         acts.push(h);
     }
     let mut g = Tensor::empty();
@@ -420,12 +501,12 @@ pub fn full_backward(
     for i in (0..params.len()).rev() {
         let (w, _) = &params[i];
         let (mut g_w, mut g_b) = (Tensor::empty(), Tensor::empty());
-        dense_bwd_into(
+        layer_bwd_into(
             &acts[i],
             w,
             &acts[i + 1],
             &g,
-            layers[i].kind,
+            layers[i],
             &mut g_x,
             &mut g_w,
             &mut g_b,

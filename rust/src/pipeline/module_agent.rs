@@ -14,7 +14,7 @@
 
 use crate::compensate::{Compensated, Compensator, CompensatorKind, CompensatorState};
 use crate::error::{Error, Result};
-use crate::nn::BwdScratch;
+use crate::nn::{BwdScratch, FwdScratch};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Stash, StashQueue};
 use crate::tensor::Tensor;
@@ -69,6 +69,9 @@ pub struct ModuleAgent {
     /// `apply_update` recycles it into `free`
     pending: Option<Stash>,
     ws: Option<Workspace>,
+    /// per-local-layer forward scratch (im2col buffers of the spatial
+    /// kinds; dense layers leave theirs empty)
+    fwd_scratch: Vec<FwdScratch>,
     /// loss-head gradient buffer [B, classes] (last module only)
     loss_g: Tensor,
     opt: ModuleOptimizer,
@@ -111,6 +114,7 @@ impl ModuleAgent {
             free: Vec::new(),
             pending: None,
             ws: None,
+            fwd_scratch: (lo..hi).map(|_| FwdScratch::new()).collect(),
             loss_g: Tensor::empty(),
             opt: ModuleOptimizer::new(opt),
             comp: comp.build(),
@@ -169,12 +173,15 @@ impl ModuleAgent {
     }
 
     /// A stash slot with buffers shaped for this module's layer slice.
-    fn fresh_stash(&self, x: &Tensor, onehot: &Tensor) -> Stash {
+    /// Activation widths come from the backend's layer stack (a conv
+    /// layer's d_out is c_out·H·W, not its weight matrix's column count).
+    fn fresh_stash(&self, backend: &dyn ComputeBackend, x: &Tensor, onehot: &Tensor) -> Stash {
         let batch = x.shape()[0];
+        let layers = backend.layers();
         let mut acts = Vec::with_capacity(self.params.len() + 1);
         acts.push(Tensor::zeros(x.shape()));
-        for (w, _) in &self.params {
-            acts.push(Tensor::zeros(&[batch, w.shape()[1]]));
+        for off in 0..self.params.len() {
+            acts.push(Tensor::zeros(&[batch, layers[self.lo + off].d_out]));
         }
         Stash {
             batch_id: 0,
@@ -201,7 +208,7 @@ impl ModuleAgent {
     ) -> Result<()> {
         let mut stash = match self.free.pop() {
             Some(s) => s,
-            None => self.fresh_stash(x, onehot),
+            None => self.fresh_stash(backend, x, onehot),
         };
         stash.batch_id = tau;
         stash.acts[0].copy_resize(x);
@@ -213,7 +220,7 @@ impl ModuleAgent {
             Some(t) => t.copy_resize(onehot),
             None => stash.onehot = Some(onehot.clone()),
         }
-        backend.module_fwd_into(self.lo, &stash.params, &mut stash.acts)?;
+        backend.module_fwd_into(self.lo, &stash.params, &mut stash.acts, &mut self.fwd_scratch)?;
         self.stash.push(stash)?;
         Ok(())
     }

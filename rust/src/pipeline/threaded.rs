@@ -709,7 +709,7 @@ mod tests {
             topology: Topology::Ring,
             alpha: None,
             gossip_rounds: 1,
-            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+            model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters,
             lr: LrSchedule::Const(0.2),

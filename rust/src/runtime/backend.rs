@@ -27,7 +27,7 @@ use crate::error::Result;
 use crate::nn::layer::LayerShape;
 use crate::tensor::Tensor;
 
-pub use crate::nn::BwdScratch;
+pub use crate::nn::{BwdScratch, FwdScratch};
 
 pub trait ComputeBackend: Sync {
     /// Human-readable backend name (metrics, logs).
@@ -39,8 +39,11 @@ pub trait ComputeBackend: Sync {
     /// Mini-batch size every call must use.
     fn batch(&self) -> usize;
 
-    /// out = act(x·W + b) [+ x] for layer `idx`. `out` is (re)sized by the
-    /// backend; a pre-sized buffer is reused without allocating.
+    /// out = layer `idx` applied to x (dense act(x·W + b) [+ x], conv,
+    /// pool, or flatten). `out` is (re)sized by the backend; a pre-sized
+    /// buffer is reused without allocating. `scratch` holds the forward
+    /// intermediates of the spatial kinds (im2col buffers); dense layers
+    /// and backends with their own intermediates ignore it.
     fn layer_fwd_into(
         &self,
         idx: usize,
@@ -48,6 +51,7 @@ pub trait ComputeBackend: Sync {
         w: &Tensor,
         b: &Tensor,
         out: &mut Tensor,
+        scratch: &mut FwdScratch,
     ) -> Result<()>;
 
     /// (g_x, g_w, g_b) for layer `idx`, written into caller-owned buffers.
@@ -74,16 +78,20 @@ pub trait ComputeBackend: Sync {
     /// Forward one pipeline module's layer share [lo, lo + params.len())
     /// through caller-owned activation buffers: `acts[0]` holds the input,
     /// `acts[i+1]` receives layer `lo + i`'s output (the stash layout).
+    /// `scratch[i]` is layer `lo + i`'s persistent forward scratch (one
+    /// per local layer so each keeps its own sizes across iterations).
     fn module_fwd_into(
         &self,
         lo: usize,
         params: &[(Tensor, Tensor)],
         acts: &mut [Tensor],
+        scratch: &mut [FwdScratch],
     ) -> Result<()> {
         debug_assert_eq!(acts.len(), params.len() + 1);
-        for (off, (w, b)) in params.iter().enumerate() {
+        debug_assert_eq!(scratch.len(), params.len());
+        for ((off, (w, b)), fs) in params.iter().enumerate().zip(scratch) {
             let (head, tail) = acts.split_at_mut(off + 1);
-            self.layer_fwd_into(lo + off, &head[off], w, b, &mut tail[0])?;
+            self.layer_fwd_into(lo + off, &head[off], w, b, &mut tail[0], fs)?;
         }
         Ok(())
     }
@@ -100,8 +108,9 @@ pub trait ComputeBackend: Sync {
     ) -> Result<f32> {
         let mut h = x.clone();
         let mut out = Tensor::empty();
+        let mut fs = FwdScratch::new();
         for (idx, (w, b)) in params.iter().enumerate() {
-            self.layer_fwd_into(idx, &h, w, b, &mut out)?;
+            self.layer_fwd_into(idx, &h, w, b, &mut out, &mut fs)?;
             std::mem::swap(&mut h, &mut out);
         }
         self.loss_grad_into(&h, onehot, &mut Tensor::empty())
@@ -144,13 +153,14 @@ mod tests {
         // caller-owned stash layout: input + one buffer per local layer,
         // sized by the backend on first use
         let mut acts = vec![x.clone(), Tensor::empty(), Tensor::empty()];
-        backend.module_fwd_into(0, &params[0..2], &mut acts).unwrap();
+        let mut fs = vec![FwdScratch::new(), FwdScratch::new()];
+        backend.module_fwd_into(0, &params[0..2], &mut acts, &mut fs).unwrap();
         assert_eq!(acts[0].shape(), &[4, 6]);
         assert_eq!(acts[1].shape(), &[4, 5]);
         assert_eq!(acts[2].shape(), &[4, 5]);
         // second call reuses the now-sized buffers and must agree
         let snapshot = acts[2].clone();
-        backend.module_fwd_into(0, &params[0..2], &mut acts).unwrap();
+        backend.module_fwd_into(0, &params[0..2], &mut acts, &mut fs).unwrap();
         assert_eq!(acts[2], snapshot);
     }
 }

@@ -51,7 +51,19 @@ impl Manifest {
 
         let mut layers = Vec::new();
         for entry in j.get("layers")?.as_arr()? {
-            let kind = LayerKind::parse(entry.get("kind")?.as_str()?)?;
+            // manifest corruption stays a Manifest error (LayerKind::parse
+            // reports Error::Config for the config-file path)
+            let kind_str = entry.get("kind")?.as_str()?;
+            let kind = LayerKind::parse(kind_str).map_err(|_| {
+                Error::Manifest(format!("unknown layer kind {kind_str:?} in manifest"))
+            })?;
+            if kind.is_spatial() {
+                return Err(Error::Manifest(format!(
+                    "layer kind {:?} has no AOT artifacts yet — the conv \
+                     family runs on the native backend only",
+                    kind.as_str()
+                )));
+            }
             let shape = LayerShape::new(
                 kind,
                 entry.get("d_in")?.as_usize()?,
@@ -176,6 +188,20 @@ mod tests {
         let dir = std::env::temp_dir().join("sgs_manifest_missing");
         write_manifest_fixture(&dir, 8).unwrap();
         std::fs::remove_file(dir.join("b1.hlo.txt")).unwrap();
+        assert!(matches!(Manifest::load(&dir), Err(Error::Manifest(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_conv_kinds_without_artifacts() {
+        // the conv family is native-only until the AOT path grows kernels
+        let dir = std::env::temp_dir().join("sgs_manifest_conv");
+        write_manifest_fixture(&dir, 8).unwrap();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"kind\": \"relu\"", "\"kind\": \"conv3x3\"");
+        std::fs::write(&path, text).unwrap();
         assert!(matches!(Manifest::load(&dir), Err(Error::Manifest(_))));
         std::fs::remove_dir_all(&dir).ok();
     }

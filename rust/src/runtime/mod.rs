@@ -12,7 +12,7 @@ pub mod pjrt;
 #[cfg(feature = "xla")]
 pub mod xla_backend;
 
-pub use backend::{BwdScratch, ComputeBackend};
+pub use backend::{BwdScratch, ComputeBackend, FwdScratch};
 pub use manifest::Manifest;
 pub use native::NativeBackend;
 #[cfg(feature = "xla")]

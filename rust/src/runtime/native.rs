@@ -7,7 +7,7 @@
 //! single-threaded by construction — see `nn` §Perf).
 
 use crate::error::{Error, Result};
-use crate::nn::{self, layer::LayerShape, BwdScratch};
+use crate::nn::{self, layer::LayerShape, BwdScratch, FwdScratch};
 use crate::runtime::backend::ComputeBackend;
 use crate::tensor::Tensor;
 
@@ -67,9 +67,10 @@ impl ComputeBackend for NativeBackend {
         w: &Tensor,
         b: &Tensor,
         out: &mut Tensor,
+        scratch: &mut FwdScratch,
     ) -> Result<()> {
         let layer = self.check_layer(idx)?;
-        nn::dense_fwd_into(x, w, b, layer.kind, out, self.threads);
+        nn::layer_fwd_into(x, w, b, layer, out, scratch, self.threads);
         Ok(())
     }
 
@@ -87,12 +88,12 @@ impl ComputeBackend for NativeBackend {
         scratch: &mut BwdScratch,
     ) -> Result<()> {
         let layer = self.check_layer(idx)?;
-        nn::dense_bwd_into(
+        nn::layer_bwd_into(
             x,
             w,
             h_out,
             g_out,
-            layer.kind,
+            layer,
             g_x,
             g_w,
             g_b,
@@ -124,7 +125,8 @@ mod tests {
         rng.fill_normal(x.data_mut(), 1.0);
 
         let mut h = Tensor::empty();
-        b.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut h).unwrap();
+        let mut fs = FwdScratch::new();
+        b.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut h, &mut fs).unwrap();
         let mut h_direct = Tensor::empty();
         nn::dense_fwd_into(&x, &params[0].0, &params[0].1, layers[0].kind, &mut h_direct, 1);
         assert_eq!(h, h_direct);
@@ -157,8 +159,9 @@ mod tests {
         let mut x = Tensor::zeros(&[4, 6]);
         rng.fill_normal(x.data_mut(), 1.0);
         let (mut ha, mut hp) = (Tensor::empty(), Tensor::empty());
-        auto.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut ha).unwrap();
-        pinned.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut hp).unwrap();
+        let (mut fa, mut fp) = (FwdScratch::new(), FwdScratch::new());
+        auto.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut ha, &mut fa).unwrap();
+        pinned.layer_fwd_into(0, &x, &params[0].0, &params[0].1, &mut hp, &mut fp).unwrap();
         assert_eq!(ha, hp);
     }
 
@@ -168,6 +171,29 @@ mod tests {
         let b = NativeBackend::new(layers, 2);
         let t = Tensor::zeros(&[2, 5]);
         let mut out = Tensor::empty();
-        assert!(b.layer_fwd_into(7, &t, &t, &t, &mut out).is_err());
+        let mut fs = FwdScratch::new();
+        assert!(b.layer_fwd_into(7, &t, &t, &t, &mut out, &mut fs).is_err());
+    }
+
+    #[test]
+    fn conv_stack_through_trait_matches_nn_dispatch() {
+        let layers =
+            nn::build_stack(2, 4, 4, &["conv3x3:3", "maxpool", "flatten", "linear:4"]).unwrap();
+        let b = NativeBackend::with_threads(layers.clone(), 3, 1);
+        let mut rng = Pcg32::new(7);
+        let params = init_params(&mut rng, &layers);
+        let mut x = Tensor::zeros(&[3, 32]);
+        rng.fill_normal(x.data_mut(), 1.0);
+
+        let mut h = x.clone();
+        let mut out = Tensor::empty();
+        let mut fs = FwdScratch::new();
+        for (i, (w, bias)) in params.iter().enumerate() {
+            b.layer_fwd_into(i, &h, w, bias, &mut out, &mut fs).unwrap();
+            std::mem::swap(&mut h, &mut out);
+        }
+        assert_eq!(h.shape(), &[3, 4]);
+        let direct = nn::full_forward(&x, &params, &layers);
+        assert_eq!(h, direct);
     }
 }

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::nn::layer::LayerShape;
-use crate::runtime::backend::{BwdScratch, ComputeBackend};
+use crate::runtime::backend::{BwdScratch, ComputeBackend, FwdScratch};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pjrt::{Executable, PjRt};
 use crate::tensor::Tensor;
@@ -107,7 +107,9 @@ impl ComputeBackend for XlaBackend {
         w: &Tensor,
         b: &Tensor,
         out: &mut Tensor,
+        scratch: &mut FwdScratch,
     ) -> Result<()> {
+        let _ = scratch; // the AOT kernel owns its intermediates
         let res = self.exe_for(idx, false)?.run(&[x, w, b])?;
         *out = res
             .into_iter()
@@ -178,8 +180,9 @@ impl ComputeBackend for XlaBackend {
                 // fall back to per-layer composition
                 let mut h = x.clone();
                 let mut out = Tensor::empty();
+                let mut fs = FwdScratch::new();
                 for (idx, (w, b)) in params.iter().enumerate() {
-                    self.layer_fwd_into(idx, &h, w, b, &mut out)?;
+                    self.layer_fwd_into(idx, &h, w, b, &mut out, &mut fs)?;
                     std::mem::swap(&mut h, &mut out);
                 }
                 self.loss_grad_into(&h, onehot, &mut Tensor::empty())

@@ -7,7 +7,7 @@
 //! wall-time axis of Figs. 3–4 and the Section-5 timing table.
 
 use crate::nn::init::init_params;
-use crate::nn::{BwdScratch, LayerShape};
+use crate::nn::{BwdScratch, FwdScratch, LayerShape};
 use crate::runtime::ComputeBackend;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
@@ -48,15 +48,16 @@ impl CostModel {
         for (idx, layer) in layers.iter().enumerate() {
             let (w, b) = &params[idx];
             let x_in = acts.last().unwrap().clone();
-            // measure the workspace path: a pre-sized out-buffer, reused
+            // measure the workspace path: pre-sized out/scratch buffers, reused
             let mut out = Tensor::empty();
+            let mut fs = FwdScratch::new();
             let times = sample_timings(1, reps, || {
                 backend
-                    .layer_fwd_into(idx, &x_in, w, b, &mut out)
+                    .layer_fwd_into(idx, &x_in, w, b, &mut out, &mut fs)
                     .expect("calibrate fwd")
             });
             fwd_s.push(crate::util::mean(&times));
-            backend.layer_fwd_into(idx, &x_in, w, b, &mut out).unwrap();
+            backend.layer_fwd_into(idx, &x_in, w, b, &mut out, &mut fs).unwrap();
             acts.push(out);
             let _ = layer;
         }

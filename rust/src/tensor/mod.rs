@@ -160,6 +160,13 @@ impl Tensor {
     }
 }
 
+impl Default for Tensor {
+    /// Same as [`Tensor::empty`]: a zero-element placeholder, no allocation.
+    fn default() -> Tensor {
+        Tensor::empty()
+    }
+}
+
 /// out = Σ_i coeffs[i] * xs[i]   (gossip mixing row); shapes must agree.
 pub fn weighted_sum(coeffs: &[f64], xs: &[&Tensor], out: &mut Tensor) {
     debug_assert_eq!(coeffs.len(), xs.len());

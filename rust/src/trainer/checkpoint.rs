@@ -121,6 +121,9 @@ impl Checkpoint {
             j.set("kind", l.kind.as_str())
                 .set("d_in", l.d_in)
                 .set("d_out", l.d_out);
+            if let Some(sp) = l.spatial {
+                j.set("c_in", sp.c_in).set("h", sp.h).set("w", sp.w).set("c_out", sp.c_out);
+            }
             layers.push(j);
         }
         let mut meta = Json::obj();
@@ -157,11 +160,34 @@ impl Checkpoint {
         let n_groups = meta.get("groups")?.as_usize()?;
         let mut layers = Vec::new();
         for l in meta.get("layers")?.as_arr()? {
-            layers.push(LayerShape::new(
-                crate::nn::layer::LayerKind::parse(l.get("kind")?.as_str()?)?,
-                l.get("d_in")?.as_usize()?,
-                l.get("d_out")?.as_usize()?,
-            )?);
+            // corruption of the sidecar is a checkpoint problem, not a
+            // layer-spec grammar problem — don't surface parse's hint text
+            let kind_str = l.get("kind")?.as_str()?;
+            let kind = crate::nn::layer::LayerKind::parse(kind_str).map_err(|_| {
+                Error::Config(format!(
+                    "checkpoint metadata has unknown layer kind {kind_str:?}"
+                ))
+            })?;
+            let layer = match kind {
+                crate::nn::layer::LayerKind::Conv3x3 => LayerShape::conv3x3(
+                    l.get("c_in")?.as_usize()?,
+                    l.get("h")?.as_usize()?,
+                    l.get("w")?.as_usize()?,
+                    l.get("c_out")?.as_usize()?,
+                )?,
+                crate::nn::layer::LayerKind::MaxPool2x2 => LayerShape::maxpool2(
+                    l.get("c_in")?.as_usize()?,
+                    l.get("h")?.as_usize()?,
+                    l.get("w")?.as_usize()?,
+                )?,
+                crate::nn::layer::LayerKind::Flatten => LayerShape::flatten(
+                    l.get("c_in")?.as_usize()?,
+                    l.get("h")?.as_usize()?,
+                    l.get("w")?.as_usize()?,
+                )?,
+                _ => LayerShape::new(kind, l.get("d_in")?.as_usize()?, l.get("d_out")?.as_usize()?)?,
+            };
+            layers.push(layer);
         }
 
         let per_group: usize = layers.iter().map(|l| l.param_count()).sum();
@@ -183,11 +209,12 @@ impl Checkpoint {
         for _ in 0..n_groups {
             let mut group = Vec::with_capacity(layers.len());
             for l in &layers {
-                let w: Vec<f32> = (&mut floats).take(l.d_in * l.d_out).collect();
-                let b: Vec<f32> = (&mut floats).take(l.d_out).collect();
+                let [rows, cols] = l.w_shape();
+                let w: Vec<f32> = (&mut floats).take(rows * cols).collect();
+                let b: Vec<f32> = (&mut floats).take(l.b_len()).collect();
                 group.push((
-                    Tensor::from_vec(&[l.d_in, l.d_out], w)?,
-                    Tensor::from_vec(&[l.d_out], b)?,
+                    Tensor::from_vec(&[rows, cols], w)?,
+                    Tensor::from_vec(&[l.b_len()], b)?,
                 ));
             }
             groups.push(group);
@@ -224,6 +251,27 @@ mod tests {
         let back = Checkpoint::load(&base).unwrap();
         assert_eq!(back.iteration, 123);
         assert_eq!(back.groups.len(), 3);
+        for (g1, g2) in ck.groups.iter().zip(&back.groups) {
+            for ((w1, b1), (w2, b2)) in g1.iter().zip(g2) {
+                assert_eq!(w1, w2);
+                assert_eq!(b1, b2);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cnn_stack_roundtrips_with_spatial_dims() {
+        let dir = std::env::temp_dir().join("sgs_ckpt_cnn");
+        let base = dir.join("ck");
+        let layers = crate::nn::build_stack(2, 4, 4, &["conv3x3:3", "maxpool", "flatten", "linear:4"])
+            .unwrap();
+        let mut rng = Pcg32::new(6);
+        let groups: Vec<_> = (0..2).map(|_| init_params(&mut rng, &layers)).collect();
+        let ck = Checkpoint::new(7, groups, layers.clone());
+        ck.save(&base).unwrap();
+        let back = Checkpoint::load(&base).unwrap();
+        assert_eq!(back.layers, layers);
         for (g1, g2) in ck.groups.iter().zip(&back.groups) {
             for ((w1, b1), (w2, b2)) in g1.iter().zip(g2) {
                 assert_eq!(w1, w2);

@@ -431,7 +431,7 @@ mod tests {
             topology: Topology::Ring,
             alpha: None,
             gossip_rounds: 1,
-            model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 },
+            model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 }.into(),
             batch: 16,
             iters: 200,
             lr: LrSchedule::Const(0.1),
@@ -448,7 +448,7 @@ mod tests {
 
     fn run_cfg(cfg: ExperimentConfig) -> (RecorderSnapshot, f64) {
         let ds = Arc::new(
-            SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3).generate(),
+            SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in(), cfg.model.classes(), 3).generate(),
         );
         let backend: Arc<dyn ComputeBackend> =
             Arc::new(NativeBackend::new(cfg.model.layers(), cfg.batch));

@@ -17,7 +17,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::sync::Arc;
 
-use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::graph::Topology;
 use sgs::runtime::{ComputeBackend, NativeBackend};
@@ -69,7 +69,7 @@ fn steady_state_sim_step_allocates_nothing() {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters: 64,
         lr: LrSchedule::Const(0.1),
@@ -86,14 +86,14 @@ fn steady_state_sim_step_allocates_nothing() {
         compute_threads: 1,
     };
     let ds = Arc::new(
-        SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 3).generate(),
+        SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in(), cfg.model.classes(), 3).generate(),
     );
     let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_threads(
         cfg.model.layers(),
         cfg.batch,
         1,
     ));
-    let mut session = Session::builder(cfg)
+    let mut session = Session::builder(cfg.clone())
         .with_backend(backend)
         .dataset(ds)
         .build()
@@ -120,4 +120,47 @@ fn steady_state_sim_step_allocates_nothing() {
     assert!(session.iterations_done() >= 19);
     assert_eq!(allocs, 0, "steady-state step performed {allocs} heap allocations");
     assert_eq!(deallocs, 0, "steady-state step performed {deallocs} heap frees");
+
+    // ---- the CNN path under the same contract ----
+    // conv im2col buffers, pool/flatten zero-param slots, and the spatial
+    // stash shapes must all reach a fixed point too: 3 steady-state steps
+    // of a 2-module conv-pool-flatten-dense split allocate nothing.
+    // (Same test function: the global allocator is process-wide and a lone
+    // test keeps the measurement window free of harness threads.)
+    let mut cnn_cfg = cfg.clone();
+    cnn_cfg.name = "alloc-guard-cnn".into();
+    cnn_cfg.model = ModelSpec::Stack(
+        StackModel::new(2, 6, 6, ["conv3x3:3", "maxpool", "flatten", "linear:3"], 3).unwrap(),
+    );
+    let cnn_ds = Arc::new(
+        SyntheticSpec::small(cnn_cfg.dataset_n, cnn_cfg.model.d_in(), cnn_cfg.model.classes(), 3)
+            .generate(),
+    );
+    let cnn_backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::with_threads(
+        cnn_cfg.model.layers(),
+        cnn_cfg.batch,
+        1,
+    ));
+    let mut cnn_session = Session::builder(cnn_cfg)
+        .with_backend(cnn_backend)
+        .dataset(cnn_ds)
+        .build()
+        .unwrap();
+    for _ in 0..16 {
+        cnn_session.step().unwrap();
+    }
+
+    ALLOCS.with(|c| c.set(0));
+    DEALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for _ in 0..3 {
+        cnn_session.step().unwrap();
+    }
+    TRACKING.with(|t| t.set(false));
+    let cnn_allocs = ALLOCS.with(|c| c.get());
+    let cnn_deallocs = DEALLOCS.with(|c| c.get());
+
+    assert!(cnn_session.iterations_done() >= 19);
+    assert_eq!(cnn_allocs, 0, "CNN steady-state step performed {cnn_allocs} heap allocations");
+    assert_eq!(cnn_deallocs, 0, "CNN steady-state step performed {cnn_deallocs} heap frees");
 }

@@ -19,7 +19,7 @@ fn base_cfg() -> ExperimentConfig {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 },
+        model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 }.into(),
         batch: 12,
         iters: 300,
         lr: LrSchedule::Const(0.1),
@@ -35,7 +35,7 @@ fn base_cfg() -> ExperimentConfig {
 }
 
 fn run(cfg: ExperimentConfig) -> (Vec<Option<f64>>, Vec<(usize, f64)>, f64) {
-    let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in, cfg.model.classes, 9).generate();
+    let ds = SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in(), cfg.model.classes(), 9).generate();
     let mut session = Session::builder(cfg).dataset(ds).build().unwrap();
     session.run().unwrap();
     let losses = session.recorder().records.iter().map(|r| r.train_loss).collect();

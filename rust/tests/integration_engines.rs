@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::data::Dataset;
 use sgs::graph::Topology;
@@ -22,7 +22,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         topology: Topology::Ring,
         alpha: None,
         gossip_rounds: 1,
-        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 },
+        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters,
         lr: LrSchedule::Const(0.2),
@@ -39,7 +39,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
 
 fn shared(c: &ExperimentConfig) -> (Arc<dyn ComputeBackend>, Arc<Dataset>) {
     let ds = Arc::new(
-        SyntheticSpec::small(c.dataset_n, c.model.d_in, c.model.classes, 3).generate(),
+        SyntheticSpec::small(c.dataset_n, c.model.d_in(), c.model.classes(), 3).generate(),
     );
     let backend: Arc<dyn ComputeBackend> =
         Arc::new(NativeBackend::new(c.model.layers(), c.batch));
@@ -103,6 +103,27 @@ fn sim_and_threaded_are_bit_identical_over_the_sk_grid() {
             assert_eq!(sim.consensus_delta(), thr.consensus_delta(), "S={s} K={k}");
         }
     }
+}
+
+#[test]
+fn sim_and_threaded_are_bit_identical_on_a_cnn_split() {
+    // the conv family through the same equivalence claim: a 4-layer
+    // conv-pool-flatten-dense stack partitioned across 2 modules, S=2
+    // groups, with the conv boundary activation crossing the module edge
+    let mut c = cfg(2, 2, 14);
+    c.model = ModelSpec::Stack(
+        StackModel::new(2, 6, 6, ["conv3x3:3", "maxpool", "flatten", "linear:3"], 3).unwrap(),
+    );
+    let (sim_events, sim) = collect_events(session(&c, EngineKind::Sim));
+    let (thr_events, thr) = collect_events(session(&c, EngineKind::Threaded));
+    assert_eq!(sim_events.len(), thr_events.len());
+    for (a, b) in sim_events.iter().zip(&thr_events) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&sim.final_params(), &thr.final_params());
+    assert_eq!(sim.consensus_delta(), thr.consensus_delta());
+    // training actually happened: losses appear once the pipeline fills
+    assert!(sim_events.iter().any(|ev| ev.train_loss.is_some()));
 }
 
 #[test]

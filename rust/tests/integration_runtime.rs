@@ -57,9 +57,11 @@ fn every_layer_fwd_bwd_matches_native() {
         let bias = rand_t(&mut rng, &[l.d_out], 0.1);
 
         let mut hx = Tensor::empty();
-        xla.layer_fwd_into(i, &x, &w, &bias, &mut hx).unwrap();
+        let mut fx = nn::FwdScratch::new();
+        xla.layer_fwd_into(i, &x, &w, &bias, &mut hx, &mut fx).unwrap();
         let mut hn = Tensor::empty();
-        native.layer_fwd_into(i, &x, &w, &bias, &mut hn).unwrap();
+        let mut fn_ = nn::FwdScratch::new();
+        native.layer_fwd_into(i, &x, &w, &bias, &mut hn, &mut fn_).unwrap();
         assert!(hx.max_abs_diff(&hn) < TOL, "layer {i} fwd");
 
         let g = rand_t(&mut rng, hx.shape(), 1.0);
@@ -158,7 +160,8 @@ fn xla_training_matches_native_training() {
             hidden: layers[0].d_out,
             blocks: layers.len() - 2,
             classes: layers.last().unwrap().d_out,
-        },
+        }
+        .into(),
         batch: xla.batch(),
         iters: 10,
         lr: sgs::trainer::LrSchedule::Const(0.05),

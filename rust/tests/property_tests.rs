@@ -204,7 +204,7 @@ fn prop_config_roundtrip() {
                 },
                 alpha: (r.below(2) == 0).then(|| 0.01 + r.f64() * 0.05),
                 gossip_rounds: 1 + r.below(3),
-                model: ModelShape { d_in: 8 + r.below(8), hidden: 8, blocks: 1 + r.below(3), classes: 3 },
+                model: ModelShape { d_in: 8 + r.below(8), hidden: 8, blocks: 1 + r.below(3), classes: 3 }.into(),
                 batch: 4 + r.below(8),
                 iters: 10 + r.below(100),
                 lr: match r.below(3) {
