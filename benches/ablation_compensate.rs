@@ -42,6 +42,7 @@ fn main() {
         delta_every: 0,
         eval_every: 100,
         compute_threads: 0,
+        placement: None,
     };
 
     let spec = SweepSpec {

@@ -66,6 +66,7 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 10,
         eval_every: 25,
         compute_threads: 0,
+        placement: None,
     };
     println!(
         "config: S={} K={} topology={} iters={} lr={}",

@@ -36,6 +36,7 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 20,
         eval_every: 200,
         compute_threads: 0,
+        placement: None,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

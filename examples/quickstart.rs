@@ -35,6 +35,7 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 10,
         eval_every: 100,
         compute_threads: 0,
+        placement: None,
     };
 
     println!(

@@ -37,6 +37,7 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 0,
         eval_every: 150,
         compute_threads: 0,
+        placement: None,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

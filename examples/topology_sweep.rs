@@ -33,6 +33,7 @@ fn main() -> Result<(), sgs::Error> {
         delta_every: 5,
         eval_every: 0,
         compute_threads: 0,
+        placement: None,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

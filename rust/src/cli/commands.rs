@@ -2,19 +2,23 @@
 //!
 //! * `train`     — run one (S,K) experiment, write CSV
 //! * `compare`   — run the paper's four Section-5 methods side by side
+//! * `worker`    — host module agents for a remote coordinator (TCP)
+//! * `launch`    — coordinator: spawn/dial workers, run distributed
 //! * `describe`  — grid/topology/spectral report for a config
 //! * `trace`     — print the Fig. 1 pipeline schedule
 //! * `calibrate` — measure the cost model and print the timing table
 
+use std::io::BufRead as _;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::cli::args::Args;
-use crate::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
-use crate::nn::resolve_threads;
+use crate::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
 use crate::coordinator::{build_dataset, AgentGrid};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::graph::Topology;
+use crate::net::{TcpTransport, Transport};
+use crate::nn::resolve_threads;
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::session::{EngineKind, EventWriter, Session};
 use crate::simclock::{method_iter_s, CostModel};
@@ -29,12 +33,20 @@ USAGE: sgs <command> [--flag value]...
 COMMANDS
   train      run one experiment            (--s --k --iters --lr --topology
              --alpha --batch --seed --backend native|xla --artifacts DIR
-             --engine sim|threaded --model tiny|small|paper|cnn
+             --engine sim|threaded|dist --model tiny|small|paper|cnn
              --opt sgd|momentum:B|nesterov:B --mode fd|dbp
              --compensate none|dc:LAMBDA|accum:N
+             --workers N (dist engine: in-process workers)
              --compute-threads N (0 = all cores; any N is bit-identical)
              --out CSV --events-out JSONL --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
+  worker     host agents for a coordinator (--listen HOST:PORT, port 0 = any;
+             announces the bound address on stdout; exits on coordinator
+             shutdown, connection loss, or SIGTERM/ctrl-c)
+  launch     run distributed across processes (train flags plus
+             --workers N: spawn N loopback workers, or
+             --hosts A:P,B:P,...: dial already-running `sgs worker`s;
+             placement from the config or an even split)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
   calibrate  cost model + timing table     (--backend --artifacts --model
@@ -103,32 +115,40 @@ fn backend_flags(args: &Args) -> Result<(BackendKind, PathBuf)> {
     Ok((kind, artifacts))
 }
 
-pub fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
-    let (kind, artifacts) = backend_flags(args)?;
-    let engine = EngineKind::parse(args.get_or("engine", "sim"))?;
-    let out_csv = args.get("out").map(PathBuf::from);
-    let events_out = args.get("events-out").map(PathBuf::from);
-    let clock = args.get_bool("clock");
-    args.finish()?;
+/// Apply the `--workers` flag to a dist-engine config: synthesize the even
+/// placement when the config has none, reject a mismatch when it has one.
+fn apply_workers_flag(
+    cfg: &mut ExperimentConfig,
+    engine: EngineKind,
+    workers: usize,
+) -> Result<()> {
+    if workers == 0 {
+        return Ok(());
+    }
+    if engine != EngineKind::Dist {
+        return Err(Error::Cli("--workers requires --engine dist".into()));
+    }
+    match &cfg.placement {
+        None => {
+            cfg.placement = Some(Placement::even(workers, cfg.s, cfg.k)?);
+            Ok(())
+        }
+        Some(p) if p.workers == workers => Ok(()),
+        Some(p) => Err(Error::Cli(format!(
+            "--workers {workers} conflicts with the config placement ({} workers)",
+            p.workers
+        ))),
+    }
+}
 
-    println!(
-        "train: {} S={} K={} topology={} backend={} engine={} iters={}",
-        cfg.name,
-        cfg.s,
-        cfg.k,
-        cfg.topology.name(),
-        kind.as_str(),
-        engine.as_str(),
-        cfg.iters
-    );
-    let mut session = Session::builder(cfg)
-        .backend(kind)
-        .artifacts(artifacts)
-        .engine(engine)
-        .calibrate_clock(clock)
-        .build()?;
-
+/// Drive a built session to completion: stream events to the optional
+/// JSONL sink, then print the summary and write the optional CSV (shared
+/// by `train` and `launch`).
+fn stream_and_report(
+    mut session: Session,
+    out_csv: Option<PathBuf>,
+    events_out: Option<PathBuf>,
+) -> Result<()> {
     let mut events = match &events_out {
         Some(path) => Some(EventWriter::create(path)?),
         None => None,
@@ -157,6 +177,163 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         println!("wrote events {}", path.display());
     }
     Ok(())
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    let (kind, artifacts) = backend_flags(args)?;
+    let engine = EngineKind::parse(args.get_or("engine", "sim"))?;
+    let workers = args.get_usize("workers", 0)?;
+    let out_csv = args.get("out").map(PathBuf::from);
+    let events_out = args.get("events-out").map(PathBuf::from);
+    let clock = args.get_bool("clock");
+    args.finish()?;
+    apply_workers_flag(&mut cfg, engine, workers)?;
+
+    println!(
+        "train: {} S={} K={} topology={} backend={} engine={} iters={}",
+        cfg.name,
+        cfg.s,
+        cfg.k,
+        cfg.topology.name(),
+        kind.as_str(),
+        engine.as_str(),
+        cfg.iters
+    );
+    let session = Session::builder(cfg)
+        .backend(kind)
+        .artifacts(artifacts)
+        .engine(engine)
+        .calibrate_clock(clock)
+        .build()?;
+    stream_and_report(session, out_csv, events_out)
+}
+
+/// `sgs worker --listen HOST:PORT`: host module agents for a remote
+/// coordinator. Announces the bound address on stdout (port 0 picks a free
+/// one), serves one coordinator session, exits 0 on clean shutdown.
+pub fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:0").to_string();
+    args.finish()?;
+    crate::net::worker::install_signal_handlers();
+    crate::net::worker::serve_addr(&listen)
+}
+
+/// `sgs launch`: run one experiment as coordinator + worker processes —
+/// `--workers N` spawns N loopback `sgs worker` children, `--hosts` dials
+/// already-running workers on other machines.
+pub fn cmd_launch(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    let (kind, artifacts) = backend_flags(args)?;
+    let out_csv = args.get("out").map(PathBuf::from);
+    let events_out = args.get("events-out").map(PathBuf::from);
+    let clock = args.get_bool("clock");
+    let hosts: Option<Vec<String>> = args.get("hosts").map(|h| {
+        h.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    });
+    let workers_flag = args.get_usize("workers", 0)?;
+    args.finish()?;
+
+    let n_workers = match (&hosts, workers_flag) {
+        (Some(h), 0) => h.len(),
+        (Some(h), n) if n == h.len() => n,
+        (Some(h), n) => {
+            return Err(Error::Cli(format!(
+                "--workers {n} conflicts with {} --hosts entries",
+                h.len()
+            )))
+        }
+        (None, 0) => cfg
+            .placement
+            .as_ref()
+            .map(|p| p.workers)
+            .ok_or_else(|| {
+                Error::Cli(
+                    "launch needs --workers N, --hosts LIST, or a config placement".into(),
+                )
+            })?,
+        (None, n) => n,
+    };
+    if cfg.placement.is_none() {
+        cfg.placement = Some(Placement::even(n_workers, cfg.s, cfg.k)?);
+    }
+    let placement = cfg.placement.clone().expect("just ensured");
+    if placement.workers != n_workers {
+        return Err(Error::Cli(format!(
+            "config placement wants {} workers, launch resolved {n_workers}",
+            placement.workers
+        )));
+    }
+
+    // connect the fleet: dial --hosts, or spawn loopback children that
+    // announce their ephemeral port on stdout
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let connect_result: Result<Vec<Box<dyn Transport>>> = match &hosts {
+        Some(hs) => hs
+            .iter()
+            .map(|h| {
+                TcpTransport::connect(h.as_str()).map(|t| Box::new(t) as Box<dyn Transport>)
+            })
+            .collect(),
+        None => (0..n_workers)
+            .map(|i| {
+                let exe = std::env::current_exe()?;
+                let mut child = std::process::Command::new(&exe)
+                    .args(["worker", "--listen", "127.0.0.1:0"])
+                    .stdout(std::process::Stdio::piped())
+                    .spawn()?;
+                let stdout = child.stdout.take().expect("stdout was piped");
+                children.push(child);
+                let mut line = String::new();
+                std::io::BufReader::new(stdout).read_line(&mut line)?;
+                let addr = line
+                    .rsplit(' ')
+                    .next()
+                    .map(str::trim)
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| {
+                        Error::Net(format!("worker {i} announced no address: {line:?}"))
+                    })?
+                    .to_string();
+                eprintln!("launch: worker {i} listening on {addr}");
+                Ok(Box::new(TcpTransport::connect(addr.as_str())?) as Box<dyn Transport>)
+            })
+            .collect(),
+    };
+
+    let run = connect_result.and_then(|transports| {
+        println!(
+            "launch: {} S={} K={} workers={} backend={} engine=dist iters={}",
+            cfg.name,
+            cfg.s,
+            cfg.k,
+            n_workers,
+            kind.as_str(),
+            cfg.iters
+        );
+        let session = Session::builder(cfg)
+            .backend(kind)
+            .artifacts(artifacts)
+            .engine(EngineKind::Dist)
+            .dist_workers(transports)
+            .calibrate_clock(clock)
+            .build()?;
+        stream_and_report(session, out_csv, events_out)
+    });
+
+    // the engine's teardown asked the workers to exit; reap them (kill
+    // first on the error path so nothing lingers)
+    for mut child in children {
+        if run.is_err() {
+            let _ = child.kill();
+        }
+        let _ = child.wait();
+    }
+    run
 }
 
 pub fn cmd_compare(args: &Args) -> Result<()> {
@@ -311,6 +488,8 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
+        "worker" => cmd_worker(&args),
+        "launch" => cmd_launch(&args),
         "describe" => cmd_describe(&args),
         "trace" => cmd_trace(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -440,6 +619,44 @@ mod tests {
             cfg.compensate,
             crate::compensate::CompensatorKind::Accumulate { n: 3 }
         );
+    }
+
+    #[test]
+    fn train_dist_engine_with_in_process_workers() {
+        // the full coordinator/worker protocol over the Local transport,
+        // end-to-end through the CLI
+        dispatch(&argv(
+            "train --model tiny --s 2 --k 2 --iters 6 --batch 8 --dataset-n 200 \
+             --engine dist --workers 2 --lr const:0.1",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn train_dist_engine_without_placement_errors() {
+        let err = dispatch(&argv(
+            "train --model tiny --s 1 --k 1 --iters 2 --batch 8 --dataset-n 100 \
+             --engine dist",
+        ))
+        .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("dist"), "{err}");
+    }
+
+    #[test]
+    fn workers_flag_rejects_non_dist_engines_and_mismatches() {
+        assert!(dispatch(&argv(
+            "train --model tiny --s 1 --k 1 --iters 2 --batch 8 --dataset-n 100 \
+             --workers 2",
+        ))
+        .is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.placement = Some(Placement::even(2, cfg.s, cfg.k).unwrap());
+        let mut c = cfg.clone();
+        c.placement = Some(Placement::even(4, cfg.s, cfg.k).unwrap());
+        assert!(apply_workers_flag(&mut c, EngineKind::Dist, 2).is_err());
+        let mut c = cfg;
+        assert!(apply_workers_flag(&mut c, EngineKind::Dist, 2).is_ok());
     }
 
     #[test]

@@ -146,6 +146,91 @@ impl ModelSpec {
     }
 }
 
+/// Where each of the S×K module agents runs in a distributed
+/// (`--engine dist`) deployment: `assign[s*K + k]` names the worker
+/// hosting agent (s, k). Serialized into the config JSON as
+/// `"placement": {"workers": W, "assign": [...]}` (`assign` optional —
+/// omitted means the contiguous [`Placement::even`] split) and shipped to
+/// every worker in the config handshake.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// number of worker processes
+    pub workers: usize,
+    /// agent → worker map, s-major; length S·K
+    pub assign: Vec<usize>,
+}
+
+impl Placement {
+    /// Contiguous block split of the S×K grid over `workers` workers:
+    /// agent index i (s-major) goes to worker `i·W / (S·K)`. Every worker
+    /// gets at least one agent (so `workers ≤ S·K` is required).
+    pub fn even(workers: usize, s: usize, k: usize) -> Result<Placement> {
+        let n = s * k;
+        if workers == 0 || workers > n {
+            return Err(Error::Config(format!(
+                "placement wants {workers} workers for {n} agents (need 1..={n})"
+            )));
+        }
+        let assign = (0..n).map(|i| i * workers / n).collect();
+        Ok(Placement { workers, assign })
+    }
+
+    /// Reject plans that cannot host the (S, K) grid: wrong assignment
+    /// length or worker ids out of range.
+    pub fn validate(&self, s: usize, k: usize) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("placement needs >= 1 worker".into()));
+        }
+        if self.assign.len() != s * k {
+            return Err(Error::Config(format!(
+                "placement assigns {} agents, grid has {}",
+                self.assign.len(),
+                s * k
+            )));
+        }
+        if let Some(&bad) = self.assign.iter().find(|&&w| w >= self.workers) {
+            return Err(Error::Config(format!(
+                "placement references worker {bad}, only {} configured",
+                self.workers
+            )));
+        }
+        Ok(())
+    }
+
+    /// Worker hosting agent (s, k) of a K-module pipeline.
+    pub fn worker_of(&self, s: usize, k: usize, k_modules: usize) -> usize {
+        self.assign[s * k_modules + k]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("workers", self.workers).set(
+            "assign",
+            self.assign.iter().map(|&w| Json::Num(w as f64)).collect::<Vec<Json>>(),
+        );
+        j
+    }
+
+    /// Parse the `placement` object of a config document. `assign` is
+    /// optional — omitted falls back to the [`Self::even`] split for the
+    /// document's (S, K).
+    pub fn from_json(j: &Json, s: usize, k: usize) -> Result<Placement> {
+        let workers = j.get("workers")?.as_usize()?;
+        let p = match j.opt("assign") {
+            Some(arr) => {
+                let mut assign = Vec::new();
+                for w in arr.as_arr()? {
+                    assign.push(w.as_usize()?);
+                }
+                Placement { workers, assign }
+            }
+            None => Placement::even(workers, s, k)?,
+        };
+        p.validate(s, k)?;
+        Ok(p)
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -182,6 +267,9 @@ pub struct ExperimentConfig {
     /// stepping (0 = available parallelism; any value is bit-identical —
     /// chunk boundaries are fixed and reductions keep one order)
     pub compute_threads: usize,
+    /// agent → worker-process plan for the distributed engine (required
+    /// by `--engine dist`, ignored by the in-process engines)
+    pub placement: Option<Placement>,
 }
 
 impl Default for ExperimentConfig {
@@ -205,6 +293,7 @@ impl Default for ExperimentConfig {
             delta_every: 10,
             eval_every: 50,
             compute_threads: 0,
+            placement: None,
         }
     }
 }
@@ -246,6 +335,9 @@ impl ExperimentConfig {
             return Err(Error::Config("gossip_rounds must be >= 1".into()));
         }
         self.compensate.validate()?;
+        if let Some(p) = &self.placement {
+            p.validate(self.s, self.k)?;
+        }
         if self.dataset_n / self.s < self.batch {
             return Err(Error::Config(format!(
                 "shard size {} < batch {}",
@@ -295,6 +387,9 @@ impl ExperimentConfig {
             .set("compute_threads", self.compute_threads);
         if let Some(a) = self.alpha {
             j.set("alpha", a);
+        }
+        if let Some(p) = &self.placement {
+            j.set("placement", p.to_json());
         }
         j
     }
@@ -367,6 +462,15 @@ impl ExperimentConfig {
             compute_threads: match j.opt("compute_threads") {
                 Some(v) => v.as_usize()?,
                 None => 0,
+            },
+            // optional: only the dist engine needs one
+            placement: match j.opt("placement") {
+                Some(p) => Some(Placement::from_json(
+                    p,
+                    j.get("s")?.as_usize()?,
+                    j.get("k")?.as_usize()?,
+                )?),
+                None => None,
             },
         };
         cfg.validate()?;
@@ -480,6 +584,53 @@ mod tests {
         let methods = ExperimentConfig::paper_methods(&ExperimentConfig::default());
         let points: Vec<(usize, usize)> = methods.iter().map(|(_, c)| (c.s, c.k)).collect();
         assert_eq!(points, vec![(1, 1), (1, 2), (4, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn placement_even_splits_contiguously() {
+        let p = Placement::even(2, 2, 2).unwrap();
+        assert_eq!(p.assign, vec![0, 0, 1, 1]);
+        assert_eq!(p.worker_of(0, 1, 2), 0);
+        assert_eq!(p.worker_of(1, 0, 2), 1);
+        // every worker gets at least one agent
+        let p = Placement::even(3, 1, 3).unwrap();
+        assert_eq!(p.assign, vec![0, 1, 2]);
+        assert!(Placement::even(0, 2, 2).is_err());
+        assert!(Placement::even(5, 2, 2).is_err(), "more workers than agents");
+    }
+
+    #[test]
+    fn placement_roundtrips_through_config_json() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.placement = Some(Placement { workers: 2, assign: vec![0, 1, 0, 1, 0, 1, 0, 1] });
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.placement, cfg.placement);
+        // absent key stays None (older configs / in-process engines)
+        assert_eq!(ExperimentConfig::from_json(&ExperimentConfig::default().to_json())
+            .unwrap()
+            .placement, None);
+    }
+
+    #[test]
+    fn placement_json_assign_defaults_to_even() {
+        let mut j = ExperimentConfig::default().to_json();
+        let mut p = Json::obj();
+        p.set("workers", 2);
+        j.set("placement", p);
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        let placement = cfg.placement.unwrap();
+        assert_eq!(placement, Placement::even(2, cfg.s, cfg.k).unwrap());
+    }
+
+    #[test]
+    fn validation_rejects_bad_placements() {
+        let mut c = ExperimentConfig::default();
+        c.placement = Some(Placement { workers: 2, assign: vec![0, 1] }); // wrong len
+        assert!(c.validate().is_err());
+        c.placement = Some(Placement { workers: 2, assign: vec![0, 1, 2, 1, 0, 1, 0, 1] });
+        assert!(c.validate().is_err(), "worker id out of range");
+        c.placement = Some(Placement::even(2, c.s, c.k).unwrap());
+        c.validate().unwrap();
     }
 
     #[test]

@@ -33,6 +33,28 @@ pub fn consensus_error(params: &[Vec<(Tensor, Tensor)>]) -> f64 {
     worst
 }
 
+/// Group-averaged parameters W̄(t) over per-group sets laid out as
+/// [group][layer](W, b) — the quantity the theory tracks and every
+/// engine's eval path reports on. ONE accumulation order (ascending
+/// group, then scale by 1/S) shared by the sim, threaded, and dist
+/// engines, so their eval losses agree bitwise by construction.
+pub fn averaged_params(params: &[Vec<(Tensor, Tensor)>]) -> Vec<(Tensor, Tensor)> {
+    let s = params.len();
+    assert!(s > 0);
+    let mut avg = params[0].clone();
+    for rep in &params[1..] {
+        for (acc, (w, b)) in avg.iter_mut().zip(rep) {
+            acc.0.axpy(1.0, w);
+            acc.1.axpy(1.0, b);
+        }
+    }
+    for (w, b) in avg.iter_mut() {
+        w.scale(1.0 / s as f32);
+        b.scale(1.0 / s as f32);
+    }
+    avg
+}
+
 /// Same metric over flat per-group parameter vectors, splitting at layer
 /// boundaries given by `layers` (the gossip layer works on flats).
 pub fn consensus_error_flat(flats: &[Tensor], layers: &[LayerShape]) -> f64 {

@@ -4,5 +4,5 @@
 pub mod error;
 pub mod gossip;
 
-pub use error::{consensus_error, consensus_error_flat};
+pub use error::{averaged_params, consensus_error, consensus_error_flat};
 pub use gossip::GossipMixer;

@@ -87,6 +87,7 @@ mod tests {
             delta_every: 5,
             eval_every: 10,
             compute_threads: 0,
+            placement: None,
         }
     }
 

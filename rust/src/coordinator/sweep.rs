@@ -145,6 +145,7 @@ mod tests {
             delta_every: 0,
             eval_every: 0,
             compute_threads: 0,
+            placement: None,
         }
     }
 

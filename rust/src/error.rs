@@ -35,6 +35,9 @@ pub enum Error {
     #[error("cli error: {0}")]
     Cli(String),
 
+    #[error("net error: {0}")]
+    Net(String),
+
     #[error("{0}")]
     Other(String),
 }

@@ -30,6 +30,7 @@ pub mod error;
 pub mod graph;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod nn;
 pub mod pipeline;
 pub mod runtime;

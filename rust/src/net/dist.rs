@@ -1,0 +1,758 @@
+//! The distributed engine: a coordinator process driving W worker
+//! processes behind the [`Engine`] trait.
+//!
+//! Topology is a star: every activation stash, error gradient, and gossip
+//! exchange is routed through the coordinator, which therefore always
+//! holds a byte-exact **mirror** of every agent's parameters (it computes
+//! the gossip mixes itself, with the exact `GossipMixer` arithmetic —
+//! zero-fill + axpy in ascending-neighbour order — and hands the results
+//! back to the owners). That mirror is what `eval`, `consensus_delta`,
+//! `final_params`, and the weights of every checkpoint read, with no
+//! extra traffic.
+//!
+//! One `step` is one frame conversation:
+//!
+//! 1. `Step{t, η}` broadcast to every worker;
+//! 2. route `Act`/`Grad` frames between workers while they run the
+//!    forward/backward phases (messages between same-worker agents never
+//!    hit the wire);
+//! 3. collect all S×K `GossipPost` frames, run the configured gossip
+//!    rounds centrally, reply `GossipMixed` to each owner;
+//! 4. collect every worker's `StepDone` (losses + correction norms) and
+//!    assemble the [`IterEvent`] with the same reductions and cadence
+//!    rules as the in-process engines — which is why loopback runs are
+//!    bit-identical to the threaded engine (tests/integration_engines.rs).
+//!
+//! A lost worker (dropped connection, `Abort`, timeout) surfaces as a
+//! typed [`Error::Net`] from `step`, mirroring the threaded engine's
+//! poisoned-channel semantics; the coordinator then tears the remaining
+//! connections down so no process hangs.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::ExperimentConfig;
+use crate::consensus::{consensus_error, GossipMixer};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
+use crate::net::transport::{LocalTransport, Transport};
+use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
+use crate::nn::init::init_params;
+use crate::nn::LayerShape;
+use crate::pipeline::module_agent::ActMsg;
+use crate::runtime::ComputeBackend;
+use crate::session::{Engine, IterEvent};
+use crate::staleness::{partition_layers, Schedule};
+use crate::tensor::Tensor;
+use crate::trainer::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
+use crate::util::rng::Pcg32;
+
+/// How long the coordinator waits for any worker frame before declaring
+/// the fleet lost. Generous: covers a slow worker's whole compute phase.
+const STEP_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long a worker gets to answer the config handshake (it rebuilds the
+/// dataset and weights in that window). A peer that accepts the TCP
+/// connection but never speaks errors out instead of hanging `launch`.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Spawn `n` in-process workers over [`LocalTransport`] pairs — the
+/// `--engine dist` default when no remote workers are supplied: the full
+/// coordinator/worker protocol, zero sockets.
+pub fn spawn_local_workers(
+    n: usize,
+) -> (Vec<Box<dyn Transport>>, Vec<JoinHandle<Result<()>>>) {
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let (coord_end, worker_end) = LocalTransport::pair();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("sgs-worker-{i}"))
+                .spawn(move || crate::net::worker::run_worker(Box::new(worker_end)))
+                .expect("spawn worker thread"),
+        );
+        transports.push(Box::new(coord_end));
+    }
+    (transports, handles)
+}
+
+/// The coordinator: owns the experiment clock, the parameter mirror, and
+/// one connection per worker.
+pub struct DistEngine {
+    cfg: ExperimentConfig,
+    backend: Arc<dyn ComputeBackend>,
+    layers: Vec<LayerShape>,
+    bounds: Vec<(usize, usize)>,
+    /// agent → worker map, s-major (`assign[s*K + k]`)
+    assign: Vec<u32>,
+    /// the exact mixing arithmetic of the in-process engines (None when
+    /// S = 1 — nothing to gossip with, same as the sim engine)
+    mixer: Option<GossipMixer>,
+    /// send halves, one per worker
+    senders: Vec<Box<dyn Transport>>,
+    /// fan-in of every worker's frames (reader threads own the recv halves)
+    fanin: Receiver<(usize, Result<(Frame, usize)>)>,
+    readers: Vec<JoinHandle<()>>,
+    /// in-process worker threads (Local mode); empty for remote workers
+    local_workers: Vec<JoinHandle<Result<()>>>,
+    /// mirror[s][k]: byte-exact copy of agent (s,k)'s current parameters
+    mirror: Vec<Vec<Vec<(Tensor, Tensor)>>>,
+    /// fixed probe batch for eval (same derivation as the other engines)
+    probe: (Tensor, Tensor),
+    staleness_arc: Arc<[usize]>,
+    zero_corr: Arc<[f64]>,
+    /// per-module wire bytes of the last iteration (logical transfers,
+    /// counted once each even though the star routes them twice)
+    net_tx: Vec<u64>,
+    net_rx: Vec<u64>,
+    iter_time_s: f64,
+    t: i64,
+    t_offset: usize,
+    /// set on the first fatal fleet error; every later step returns it
+    failed: Option<String>,
+}
+
+impl DistEngine {
+    /// Handshake with `workers` (one transport per worker, index =
+    /// worker id) and build the coordinator. `local_workers` carries the
+    /// in-process worker threads when self-hosting, so teardown can join
+    /// them.
+    pub fn connect(
+        cfg: ExperimentConfig,
+        backend: Arc<dyn ComputeBackend>,
+        ds: Arc<Dataset>,
+        workers: Vec<Box<dyn Transport>>,
+        local_workers: Vec<JoinHandle<Result<()>>>,
+    ) -> Result<DistEngine> {
+        cfg.validate()?;
+        let placement = cfg.placement.clone().ok_or_else(|| {
+            Error::Config(
+                "engine \"dist\" requires a placement (cfg.placement / --workers N)".into(),
+            )
+        })?;
+        if workers.len() != placement.workers {
+            return Err(Error::Config(format!(
+                "placement wants {} workers, {} transports connected",
+                placement.workers,
+                workers.len()
+            )));
+        }
+        let layers = cfg.model.layers();
+        if backend.layers() != &layers[..] {
+            return Err(Error::Config(format!(
+                "backend layer stack {:?} differs from config model {:?}",
+                backend.layers(),
+                layers
+            )));
+        }
+        let s_groups = cfg.s;
+        let k_modules = cfg.k;
+        let assign: Vec<u32> = placement.assign.iter().map(|&w| w as u32).collect();
+
+        // identical stream discipline to the in-process engines: init fork
+        // first, probe fork second — the mirror starts from the same bytes
+        // every worker derives
+        let mut root_rng = Pcg32::new(cfg.seed);
+        let init = init_params(&mut root_rng.fork(0x1217), &layers);
+        let bounds = partition_layers(layers.len(), k_modules);
+        let mirror: Vec<Vec<Vec<(Tensor, Tensor)>>> = (0..s_groups)
+            .map(|_| bounds.iter().map(|&(lo, hi)| init[lo..hi].to_vec()).collect())
+            .collect();
+        let mut probe_rng = root_rng.fork(0x9E0B);
+        let probe_idx = probe_rng.sample_indices(ds.len(), cfg.batch.min(ds.len()));
+        let probe = ds.gather(&probe_idx);
+
+        // gossip machinery only when there is someone to gossip with —
+        // the SAME GossipMixer the sim engine runs, so the mixing
+        // arithmetic cannot drift between engines
+        let mixer = if s_groups > 1 {
+            let g = Graph::build(cfg.topology, s_groups)?;
+            let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
+            let p = xiao_boyd_weights(&g, alpha)?;
+            Some(GossipMixer::new(&p, 0))
+        } else {
+            None
+        };
+
+        // handshake: greet the whole fleet first, then collect the Ready
+        // replies (workers rebuild dataset + weights concurrently), each
+        // bounded by the handshake deadline so a mute peer can't hang us
+        let cfg_json = cfg.to_json().to_string_compact();
+        let mut handshaken = Vec::with_capacity(workers.len());
+        for (i, mut t) in workers.into_iter().enumerate() {
+            t.send(&Frame::Hello { version: WIRE_VERSION as u32 })?;
+            t.send(&Frame::Config {
+                cfg_json: cfg_json.clone(),
+                worker_id: i as u32,
+                workers: placement.workers as u32,
+                assign: assign.clone(),
+            })?;
+            handshaken.push(t);
+        }
+        for (i, t) in handshaken.iter_mut().enumerate() {
+            match t.recv_deadline(HANDSHAKE_TIMEOUT)?.0 {
+                Frame::Ready { worker_id } if worker_id as usize == i => {}
+                Frame::Abort { msg } => {
+                    return Err(Error::Net(format!("worker {i} rejected config: {msg}")))
+                }
+                other => {
+                    return Err(Error::Net(format!(
+                        "worker {i}: expected ready, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+
+        // split each connection; reader threads fan every inbound frame
+        // into one queue so `step` can route without blocking on any
+        // single worker
+        let (fanin_tx, fanin) = channel();
+        let mut senders = Vec::with_capacity(handshaken.len());
+        let mut readers = Vec::with_capacity(handshaken.len());
+        for (i, t) in handshaken.into_iter().enumerate() {
+            let (tx_half, mut rx_half) = t.split()?;
+            senders.push(tx_half);
+            let q = fanin_tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("sgs-dist-reader-{i}"))
+                    .spawn(move || loop {
+                        match rx_half.recv() {
+                            Ok(x) => {
+                                if q.send((i, Ok(x))).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = q.send((i, Err(e)));
+                                return;
+                            }
+                        }
+                    })
+                    .expect("spawn reader thread"),
+            );
+        }
+
+        let sched = Schedule::with_mode(k_modules, cfg.mode);
+        Ok(DistEngine {
+            staleness_arc: (0..k_modules).map(|k| sched.staleness(k)).collect(),
+            zero_corr: vec![0.0; k_modules].into(),
+            net_tx: vec![0; k_modules],
+            net_rx: vec![0; k_modules],
+            cfg,
+            backend,
+            layers,
+            bounds,
+            assign,
+            mixer,
+            senders,
+            fanin,
+            readers,
+            local_workers,
+            mirror,
+            probe,
+            iter_time_s: 0.0,
+            t: 0,
+            t_offset: 0,
+            failed: None,
+        })
+    }
+
+    fn worker_of(&self, s: usize, k: usize) -> usize {
+        self.assign[s * self.cfg.k + k] as usize
+    }
+
+    /// Record a fatal fleet error and tear the remaining connections down
+    /// so every worker (and reader thread) unblocks promptly.
+    fn fail(&mut self, msg: String) -> Error {
+        if self.failed.is_none() {
+            self.failed = Some(msg.clone());
+            for tx in &mut self.senders {
+                let _ = tx.send(&Frame::Abort { msg: msg.clone() });
+                tx.close();
+            }
+        }
+        Error::Net(msg)
+    }
+
+    /// Next frame from any worker, failing the fleet on loss or timeout.
+    fn next_frame(&mut self) -> Result<(usize, Frame, usize)> {
+        match self.fanin.recv_timeout(STEP_TIMEOUT) {
+            Ok((wid, Ok((frame, n)))) => Ok((wid, frame, n)),
+            Ok((wid, Err(e))) => Err(self.fail(format!("lost worker {wid}: {e}"))),
+            Err(_) => Err(self.fail(format!(
+                "no worker frame within {}s",
+                STEP_TIMEOUT.as_secs()
+            ))),
+        }
+    }
+
+    /// Run the configured gossip rounds over the posted û and reply the
+    /// mixed ŵ to each owner. `posts[k][s]` must be fully populated.
+    /// The mixing itself is [`GossipMixer::mix`] — the sim engine's exact
+    /// gather/mix/scatter loop over every parameter tensor — so the bytes
+    /// handed back equal the in-process engines'; S = 1 has no mixer and
+    /// echoes the posts unchanged.
+    fn mix_and_reply(&mut self, mut posts: Vec<Vec<Vec<(Tensor, Tensor)>>>) -> Result<()> {
+        if let Some(mixer) = &mut self.mixer {
+            let mut gather: Vec<Tensor> = Vec::with_capacity(self.cfg.s);
+            for post_k in posts.iter_mut() {
+                let n_local = post_k[0].len();
+                for l in 0..n_local {
+                    for which in 0..2 {
+                        gather.clear();
+                        for group in post_k.iter_mut() {
+                            let p = &mut group[l];
+                            gather.push(std::mem::replace(
+                                if which == 0 { &mut p.0 } else { &mut p.1 },
+                                Tensor::empty(),
+                            ));
+                        }
+                        // r rounds: contraction γ^r per iteration
+                        for _ in 0..self.cfg.gossip_rounds {
+                            mixer.mix(&mut gather);
+                        }
+                        for (group, mixed) in post_k.iter_mut().zip(gather.drain(..)) {
+                            let p = &mut group[l];
+                            *(if which == 0 { &mut p.0 } else { &mut p.1 }) = mixed;
+                        }
+                    }
+                }
+            }
+        }
+        for (k, row) in posts.into_iter().enumerate() {
+            for (s, params) in row.into_iter().enumerate() {
+                let dest = self.worker_of(s, k);
+                let n = self.senders[dest].send(&Frame::GossipMixed {
+                    s: s as u32,
+                    k: k as u32,
+                    params: params.clone(),
+                })?;
+                self.net_rx[k] += n as u64;
+                self.mirror[s][k] = params;
+            }
+        }
+        Ok(())
+    }
+
+    fn group_params(&self, s: usize) -> Vec<(Tensor, Tensor)> {
+        self.mirror[s].iter().flat_map(|m| m.iter().cloned()).collect()
+    }
+
+    fn all_group_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        (0..self.cfg.s).map(|s| self.group_params(s)).collect()
+    }
+
+    /// Group-averaged parameters W̄(t) — the shared
+    /// [`crate::consensus::averaged_params`] reduction, so eval losses
+    /// agree bitwise with the in-process engines by construction.
+    fn averaged_params(&self) -> Vec<(Tensor, Tensor)> {
+        crate::consensus::averaged_params(&self.all_group_params())
+    }
+
+    fn step_inner(&mut self) -> Result<IterEvent> {
+        let t = self.t;
+        let t_us = self.t_offset + t as usize;
+        let eta = self.cfg.lr.at(t_us);
+        let s_groups = self.cfg.s;
+        let k_modules = self.cfg.k;
+
+        for v in self.net_tx.iter_mut().chain(self.net_rx.iter_mut()) {
+            *v = 0;
+        }
+        for i in 0..self.senders.len() {
+            if let Err(e) = self.senders[i].send(&Frame::Step { t, eta }) {
+                return Err(self.fail(format!("lost worker {i}: {e}")));
+            }
+        }
+
+        let mut done = vec![false; self.senders.len()];
+        let mut losses: Vec<(usize, f64)> = Vec::new();
+        let mut per_group = vec![vec![0.0f64; k_modules]; s_groups];
+        let mut posts: Vec<Vec<Option<Vec<(Tensor, Tensor)>>>> =
+            (0..k_modules).map(|_| vec![None; s_groups]).collect();
+        let mut n_posts = 0usize;
+        let mut gossip_done = false;
+
+        while !done.iter().all(|&d| d) {
+            let (wid, frame, nbytes) = self.next_frame()?;
+            match frame {
+                Frame::Act { s, k_to, .. } => {
+                    let (s_us, k_us) = (s as usize, k_to as usize);
+                    if s_us >= s_groups || k_us == 0 || k_us >= k_modules {
+                        return Err(self.fail(format!(
+                            "worker {wid} sent act for invalid agent ({s},{k_to})"
+                        )));
+                    }
+                    self.net_tx[k_us - 1] += nbytes as u64;
+                    self.net_rx[k_us] += nbytes as u64;
+                    let dest = self.worker_of(s_us, k_us);
+                    if let Err(e) = self.senders[dest].send(&frame) {
+                        return Err(self.fail(format!("lost worker {dest}: {e}")));
+                    }
+                }
+                Frame::Grad { s, k_to, .. } => {
+                    let (s_us, k_us) = (s as usize, k_to as usize);
+                    if s_us >= s_groups || k_us + 1 >= k_modules {
+                        return Err(self.fail(format!(
+                            "worker {wid} sent grad for invalid agent ({s},{k_to})"
+                        )));
+                    }
+                    self.net_tx[k_us + 1] += nbytes as u64;
+                    self.net_rx[k_us] += nbytes as u64;
+                    let dest = self.worker_of(s_us, k_us);
+                    if let Err(e) = self.senders[dest].send(&frame) {
+                        return Err(self.fail(format!("lost worker {dest}: {e}")));
+                    }
+                }
+                Frame::GossipPost { s, k, params } => {
+                    let (s_us, k_us) = (s as usize, k as usize);
+                    if s_us >= s_groups || k_us >= k_modules {
+                        return Err(self.fail(format!(
+                            "worker {wid} posted gossip for invalid agent ({s},{k})"
+                        )));
+                    }
+                    let want = self.bounds[k_us].1 - self.bounds[k_us].0;
+                    if gossip_done || params.len() != want || posts[k_us][s_us].is_some() {
+                        return Err(self.fail(format!(
+                            "worker {wid}: bad gossip post for agent ({s},{k})"
+                        )));
+                    }
+                    self.net_tx[k_us] += nbytes as u64;
+                    posts[k_us][s_us] = Some(params);
+                    n_posts += 1;
+                    if n_posts == s_groups * k_modules {
+                        gossip_done = true;
+                        let full: Vec<Vec<Vec<(Tensor, Tensor)>>> = std::mem::take(&mut posts)
+                            .into_iter()
+                            .map(|row| row.into_iter().map(|p| p.expect("counted")).collect())
+                            .collect();
+                        if let Err(e) = self.mix_and_reply(full) {
+                            return Err(self.fail(format!("gossip reply failed: {e}")));
+                        }
+                    }
+                }
+                Frame::StepDone { worker_id, losses: ls, corrections } => {
+                    let w = worker_id as usize;
+                    if w >= done.len() || done[w] {
+                        return Err(self.fail(format!("duplicate step-done from worker {wid}")));
+                    }
+                    for (s, l) in ls {
+                        losses.push((s as usize, l as f64));
+                    }
+                    for (s, k, c) in corrections {
+                        let (s_us, k_us) = (s as usize, k as usize);
+                        if s_us >= s_groups || k_us >= k_modules {
+                            return Err(self.fail(format!(
+                                "worker {wid} reported correction for invalid agent"
+                            )));
+                        }
+                        per_group[s_us][k_us] = c;
+                    }
+                    done[w] = true;
+                }
+                Frame::Abort { msg } => {
+                    return Err(self.fail(format!("worker {wid} aborted: {msg}")));
+                }
+                other => {
+                    return Err(self.fail(format!(
+                        "protocol error: {} frame from worker {wid} mid-step",
+                        other.name()
+                    )));
+                }
+            }
+        }
+
+        // this iteration's losses, in data-group order for a deterministic
+        // mean (bit-identical to the in-process engines)
+        losses.sort_by_key(|&(s, _)| s);
+        let loss_vals: Vec<f64> = losses.into_iter().map(|(_, l)| l).collect();
+        let correction = crate::compensate::group_mean_correction(k_modules, &per_group);
+        let correction = crate::session::event::correction_arc(&self.zero_corr, &correction);
+
+        self.t += 1;
+        // LOCKSTEP with Trainer::step / ThreadedEngine::step record
+        // assembly: cadence conditions, sim_time formula, and loss mean
+        // must stay identical (tests/integration_engines.rs).
+        let mut ev = IterEvent {
+            t: t_us,
+            lr: eta,
+            train_loss: (!loss_vals.is_empty()).then(|| crate::util::mean(&loss_vals)),
+            eval_loss: None,
+            eval_acc: None,
+            delta: None,
+            sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
+            staleness: Arc::clone(&self.staleness_arc),
+            correction,
+            net_tx: Some(Arc::from(&self.net_tx[..])),
+            net_rx: Some(Arc::from(&self.net_rx[..])),
+        };
+        if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
+            ev.delta = Some(self.consensus_delta());
+        }
+        if self.cfg.eval_every > 0
+            && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
+        {
+            let avg = self.averaged_params();
+            let (x, oh) = &self.probe;
+            ev.eval_loss = Some(self.backend.eval_loss(x, oh, &avg)? as f64);
+            let logits = crate::nn::full_forward(x, &avg, &self.layers);
+            ev.eval_acc = Some(crate::nn::accuracy(&logits, oh));
+        }
+        Ok(ev)
+    }
+
+    /// Gather every worker's exact agent state into a [`ResumeState`].
+    fn collect_resume(&mut self) -> Result<ResumeState> {
+        for i in 0..self.senders.len() {
+            if let Err(e) = self.senders[i].send(&Frame::CkptReq) {
+                return Err(self.fail(format!("lost worker {i}: {e}")));
+            }
+        }
+        let mut snaps: Vec<Option<AgentSnap>> = vec![None; self.cfg.s * self.cfg.k];
+        let mut pending = self.senders.len();
+        while pending > 0 {
+            let (wid, frame, _) = self.next_frame()?;
+            match frame {
+                Frame::CkptState { agents } => {
+                    for a in agents {
+                        let idx = a.s as usize * self.cfg.k + a.k as usize;
+                        if idx >= snaps.len() || snaps[idx].is_some() {
+                            return Err(self.fail(format!(
+                                "worker {wid}: bad checkpoint entry ({},{})",
+                                a.s, a.k
+                            )));
+                        }
+                        snaps[idx] = Some(a);
+                    }
+                    pending -= 1;
+                }
+                Frame::Abort { msg } => {
+                    return Err(self.fail(format!("worker {wid} aborted: {msg}")));
+                }
+                other => {
+                    return Err(self.fail(format!(
+                        "protocol error: {} frame from worker {wid} during checkpoint",
+                        other.name()
+                    )));
+                }
+            }
+        }
+        let mut groups = Vec::with_capacity(self.cfg.s);
+        for s in 0..self.cfg.s {
+            let mut modules = Vec::with_capacity(self.cfg.k);
+            let mut sampler_rng = None;
+            for k in 0..self.cfg.k {
+                let snap = snaps[s * self.cfg.k + k].take().ok_or_else(|| {
+                    Error::Net(format!("checkpoint missing agent ({s},{k})"))
+                })?;
+                if k == 0 {
+                    sampler_rng = snap.sampler_rng;
+                }
+                modules.push(ModuleResume {
+                    velocity: snap.velocity,
+                    stashes: snap.stashes.into_iter().map(WireStash::into_stash).collect(),
+                    comp: crate::compensate::CompensatorState {
+                        accum: snap.comp_accum,
+                        count: snap.comp_count as usize,
+                    },
+                    act_in: snap.act_in.map(|(tau, x, onehot)| (tau, ActMsg { x, onehot })),
+                    grad_in: snap.grad_in,
+                });
+            }
+            groups.push(GroupResume {
+                sampler_rng: sampler_rng.ok_or_else(|| {
+                    Error::Net(format!("group {s}: k=0 agent reported no sampler state"))
+                })?,
+                modules,
+            });
+        }
+        Ok(ResumeState { t: self.t, t_offset: self.t_offset, groups })
+    }
+}
+
+impl Engine for DistEngine {
+    fn name(&self) -> &'static str {
+        "dist"
+    }
+
+    fn step(&mut self) -> Result<IterEvent> {
+        if let Some(msg) = &self.failed {
+            return Err(Error::Net(format!("distributed run already failed: {msg}")));
+        }
+        self.step_inner()
+    }
+
+    fn iterations_done(&self) -> usize {
+        self.t_offset + self.t as usize
+    }
+
+    /// Full-resume snapshot gathered through the coordinator. If a worker
+    /// is lost mid-gather the checkpoint degrades to weights-only (the
+    /// mirror is always current) and the failure surfaces from the next
+    /// `step`.
+    fn checkpoint(&mut self) -> Checkpoint {
+        let ck = Checkpoint::new(
+            self.t_offset + self.t as usize,
+            self.all_group_params(),
+            self.layers.clone(),
+        );
+        if self.failed.is_some() {
+            return ck;
+        }
+        match self.collect_resume() {
+            Ok(rs) => ck.with_resume(rs),
+            Err(e) => {
+                eprintln!("dist checkpoint degraded to weights-only: {e}");
+                ck
+            }
+        }
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        if let Some(msg) = &self.failed {
+            return Err(Error::Net(format!("distributed run already failed: {msg}")));
+        }
+        let s_groups = self.cfg.s;
+        let k_modules = self.cfg.k;
+        if ck.groups.len() != s_groups {
+            return Err(Error::Config(format!(
+                "checkpoint has {} groups, engine has {s_groups}",
+                ck.groups.len()
+            )));
+        }
+        if ck.layers != self.layers {
+            return Err(Error::Config(
+                "checkpoint layer stack differs from engine model".into(),
+            ));
+        }
+        if let Some(rs) = &ck.resume {
+            if rs.groups.len() != s_groups {
+                return Err(Error::Config(format!(
+                    "resume state has {} groups, engine has {s_groups}",
+                    rs.groups.len()
+                )));
+            }
+            for gr in &rs.groups {
+                if gr.modules.len() != k_modules {
+                    return Err(Error::Config(format!(
+                        "resume state has {} modules, engine has {k_modules}",
+                        gr.modules.len()
+                    )));
+                }
+            }
+        }
+        // refresh the mirror from the checkpoint weights
+        for (s, saved) in ck.groups.iter().enumerate() {
+            for (k, &(lo, hi)) in self.bounds.iter().enumerate() {
+                self.mirror[s][k] = saved[lo..hi].to_vec();
+            }
+        }
+        // ship each worker its agents' weights (+ exact state on full
+        // resumes) and wait for every acknowledgement
+        let weights_only = ck.resume.is_none();
+        for w in 0..self.senders.len() {
+            let mut agents = Vec::new();
+            for s in 0..s_groups {
+                for k in 0..k_modules {
+                    if self.worker_of(s, k) != w {
+                        continue;
+                    }
+                    let state = ck.resume.as_ref().map(|rs| {
+                        let mr = &rs.groups[s].modules[k];
+                        AgentSnap {
+                            s: s as u32,
+                            k: k as u32,
+                            sampler_rng: (k == 0).then_some(rs.groups[s].sampler_rng),
+                            velocity: mr.velocity.clone(),
+                            stashes: mr.stashes.iter().map(WireStash::from_stash).collect(),
+                            comp_accum: mr.comp.accum.clone(),
+                            comp_count: mr.comp.count as u64,
+                            act_in: mr
+                                .act_in
+                                .as_ref()
+                                .map(|(tau, m)| (*tau, m.x.clone(), m.onehot.clone())),
+                            grad_in: mr.grad_in.clone(),
+                        }
+                    });
+                    agents.push(AgentRestore {
+                        s: s as u32,
+                        k: k as u32,
+                        params: self.mirror[s][k].clone(),
+                        state,
+                    });
+                }
+            }
+            if let Err(e) = self.senders[w].send(&Frame::Restore { weights_only, agents }) {
+                return Err(self.fail(format!("lost worker {w}: {e}")));
+            }
+        }
+        let mut pending = self.senders.len();
+        while pending > 0 {
+            let (wid, frame, _) = self.next_frame()?;
+            match frame {
+                Frame::RestoreDone { .. } => pending -= 1,
+                Frame::Abort { msg } => {
+                    return Err(self.fail(format!("worker {wid} aborted restore: {msg}")));
+                }
+                other => {
+                    return Err(self.fail(format!(
+                        "protocol error: {} frame from worker {wid} during restore",
+                        other.name()
+                    )));
+                }
+            }
+        }
+        match &ck.resume {
+            Some(rs) => {
+                self.t = rs.t;
+                self.t_offset = rs.t_offset;
+            }
+            None => {
+                self.t = 0;
+                self.t_offset = ck.iteration;
+            }
+        }
+        Ok(())
+    }
+
+    fn final_params(&self) -> Vec<Vec<(Tensor, Tensor)>> {
+        self.all_group_params()
+    }
+
+    fn consensus_delta(&self) -> f64 {
+        if self.cfg.s < 2 {
+            return 0.0;
+        }
+        consensus_error(&self.all_group_params())
+    }
+
+    fn set_iter_time_s(&mut self, iter_time_s: f64) {
+        self.iter_time_s = iter_time_s;
+    }
+}
+
+impl Drop for DistEngine {
+    /// Clean teardown: ask every worker to exit, force-close the
+    /// connections, then join the helper threads (readers exit on
+    /// connection loss; in-process workers exit on `Shutdown`).
+    fn drop(&mut self) {
+        for tx in &mut self.senders {
+            let _ = tx.send(&Frame::Shutdown);
+        }
+        for tx in &mut self.senders {
+            tx.close();
+        }
+        for h in self.local_workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Multi-process distributed runtime: the transport subsystem that lets
+//! module agents and data-groups run as separate OS processes while
+//! computing the **same bits** as the in-process engines.
+//!
+//! Three layers:
+//!
+//! * [`wire`] — the versioned, length-framed binary protocol covering the
+//!   full message vocabulary: activation stashes, backward gradients,
+//!   gossip parameter exchanges, and control frames (config handshake,
+//!   step, checkpoint/restore, shutdown).
+//! * [`transport`] — the [`Transport`] contract with two implementations:
+//!   [`LocalTransport`] (in-process mpsc, what `--engine dist` self-hosts
+//!   on) and [`TcpTransport`] (`std::net`, no external dependencies).
+//! * [`dist`] / [`worker`] — the coordinator ([`DistEngine`], an
+//!   [`crate::session::Engine`]) and the worker runtime behind
+//!   `sgs worker --listen ADDR` / `sgs launch --workers N`.
+//!
+//! # Determinism contract
+//!
+//! Workers rebuild the experiment from the config document alone — same
+//! dataset, shards, weight init, and sampler streams as the sim and
+//! threaded engines — and all f32 arithmetic runs in the same fixed
+//! orders, so a loopback `dist` run is **bit-identical** to both
+//! in-process engines (asserted over an S×K grid, both pipeline modes,
+//! in `tests/integration_engines.rs`). Checkpoints round-trip through
+//! the coordinator with full resume state and stay portable across all
+//! three engines.
+//!
+//! # Quickstart (local loopback)
+//!
+//! ```bash
+//! # one process, in-process workers over the Local transport:
+//! sgs train --engine dist --workers 2 --model tiny --s 2 --k 2 --iters 100
+//!
+//! # separate OS processes over loopback TCP (spawns the workers):
+//! sgs launch --workers 2 --model tiny --s 2 --k 2 --iters 100
+//!
+//! # by hand, against remote machines:
+//! sgs worker --listen 0.0.0.0:7070            # on each host
+//! sgs launch --hosts hostA:7070,hostB:7070 --s 2 --k 2
+//! ```
+
+pub mod dist;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use dist::{spawn_local_workers, DistEngine};
+pub use transport::{LocalTransport, TcpTransport, Transport};
+pub use wire::{Frame, WIRE_VERSION};

@@ -1,0 +1,322 @@
+//! Frame transports: how coordinator and workers exchange [`Frame`]s.
+//!
+//! Two implementations of one [`Transport`] contract:
+//!
+//! * [`LocalTransport`] — an in-process pair of mpsc channels carrying
+//!   encoded frames, the same channel discipline the threaded engine uses
+//!   for its per-edge messages. `sgs train --engine dist` runs its workers
+//!   on this (one thread per worker, zero sockets).
+//! * [`TcpTransport`] — `std::net::TcpStream` carrying length-prefixed
+//!   frames (`[len: u32 LE][payload]`), no external dependencies. Reads go
+//!   through an incremental buffer under a short poll timeout, so a worker
+//!   blocked on its coordinator can notice SIGTERM/ctrl-c (see
+//!   [`crate::net::worker`]) and a dropped peer surfaces as a typed
+//!   [`Error::Net`] instead of a hang.
+//!
+//! Both serialize through the same [`crate::net::wire`] codec, so the bytes
+//! a loopback-TCP run moves are exactly the bytes the in-process path
+//! moves — one codec to test, one source of truth for bit-identity.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::net::wire::{decode, encode, Frame};
+
+/// Frames above this size are rejected on receive: a corrupt length prefix
+/// must error, not allocate unbounded memory.
+const MAX_FRAME: usize = 1 << 30;
+
+/// Poll granularity for TCP reads: how often a blocked `recv` rechecks the
+/// shutdown flag (signal teardown latency, not throughput — data moves as
+/// fast as the socket delivers it).
+const POLL: Duration = Duration::from_millis(200);
+
+/// A bidirectional frame pipe. `send`/`recv` report the on-wire byte count
+/// of each frame so the coordinator can publish per-module communication
+/// volume in the event stream (`net_bytes_tx`/`net_bytes_rx`).
+pub trait Transport: Send {
+    /// Send one frame; returns its encoded size in bytes.
+    fn send(&mut self, frame: &Frame) -> Result<usize>;
+
+    /// Receive the next frame and its encoded size. Blocks; a closed or
+    /// dropped peer returns [`Error::Net`], never hangs forever (TCP polls
+    /// the shutdown flag, channels observe disconnection).
+    fn recv(&mut self) -> Result<(Frame, usize)>;
+
+    /// [`Self::recv`] bounded by a deadline: a peer that accepts the
+    /// connection but never speaks returns [`Error::Net`] after `timeout`
+    /// (the coordinator's handshake guard).
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<(Frame, usize)>;
+
+    /// Split into independently usable (send, receive) halves — the
+    /// coordinator's fan-in threads own the receive half while the step
+    /// loop keeps sending on the other.
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)>;
+
+    /// Force-close the underlying connection so any peer blocked on it
+    /// unblocks with an error (teardown path; best-effort).
+    fn close(&mut self);
+}
+
+// ---- in-process transport ----
+
+/// In-process transport: encoded frames over a pair of mpsc channels.
+pub struct LocalTransport {
+    tx: Option<Sender<Vec<u8>>>,
+    rx: Option<Receiver<Vec<u8>>>,
+}
+
+impl LocalTransport {
+    /// Two connected endpoints: what one sends, the other receives.
+    pub fn pair() -> (LocalTransport, LocalTransport) {
+        let (atx, brx) = channel();
+        let (btx, arx) = channel();
+        (
+            LocalTransport { tx: Some(atx), rx: Some(arx) },
+            LocalTransport { tx: Some(btx), rx: Some(brx) },
+        )
+    }
+}
+
+impl Transport for LocalTransport {
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        let bytes = encode(frame);
+        let n = bytes.len();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::Net("send on a receive-only half".into()))?
+            .send(bytes)
+            .map_err(|_| Error::Net("peer disconnected (channel closed)".into()))?;
+        Ok(n)
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        let rx = self
+            .rx
+            .as_ref()
+            .ok_or_else(|| Error::Net("recv on a send-only half".into()))?;
+        let bytes = rx
+            .recv()
+            .map_err(|_| Error::Net("peer disconnected (channel closed)".into()))?;
+        let n = bytes.len();
+        Ok((decode(&bytes)?, n))
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<(Frame, usize)> {
+        let rx = self
+            .rx
+            .as_ref()
+            .ok_or_else(|| Error::Net("recv on a send-only half".into()))?;
+        let bytes = rx.recv_timeout(timeout).map_err(|e| match e {
+            std::sync::mpsc::RecvTimeoutError::Timeout => {
+                Error::Net(format!("no frame within {}s", timeout.as_secs()))
+            }
+            std::sync::mpsc::RecvTimeoutError::Disconnected => {
+                Error::Net("peer disconnected (channel closed)".into())
+            }
+        })?;
+        let n = bytes.len();
+        Ok((decode(&bytes)?, n))
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+        let LocalTransport { tx, rx } = *self;
+        let send_half: Box<dyn Transport> = Box::new(LocalTransport { tx, rx: None });
+        let recv_half: Box<dyn Transport> = Box::new(LocalTransport { tx: None, rx });
+        Ok((send_half, recv_half))
+    }
+
+    fn close(&mut self) {
+        self.tx = None;
+        self.rx = None;
+    }
+}
+
+// ---- TCP transport ----
+
+/// TCP transport: length-prefixed frames over `std::net::TcpStream`.
+pub struct TcpTransport {
+    stream: TcpStream,
+    /// incremental receive buffer: short poll timeouts may hand us partial
+    /// frames, which accumulate here until a whole frame is parseable
+    buf: Vec<u8>,
+    /// optional flag checked while polling; set by the worker's signal
+    /// handler so SIGTERM interrupts a blocking read
+    interrupt: Option<&'static std::sync::atomic::AtomicBool>,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> Result<TcpTransport> {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(POLL))
+            .map_err(|e| Error::Net(format!("set_read_timeout: {e}")))?;
+        Ok(TcpTransport { stream, buf: Vec::new(), interrupt: None })
+    }
+
+    /// Connect to a listening peer (`host:port`).
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| Error::Net(format!("connect {addr:?}: {e}")))?;
+        TcpTransport::new(stream)
+    }
+
+    /// Abort a blocked `recv` when `flag` becomes true (the worker CLI sets
+    /// this from its SIGTERM/SIGINT handler).
+    pub fn interrupt_on(&mut self, flag: &'static std::sync::atomic::AtomicBool) {
+        self.interrupt = Some(flag);
+    }
+
+    /// Blocking frame read with optional deadline: accumulate bytes under
+    /// the short poll timeout, checking the interrupt flag and the
+    /// deadline between reads (partial frames survive in `buf`).
+    fn recv_bounded(&mut self, deadline: Option<std::time::Instant>) -> Result<(Frame, usize)> {
+        loop {
+            if let Some(out) = self.try_parse()? {
+                return Ok(out);
+            }
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d {
+                    return Err(Error::Net("no frame within the deadline".into()));
+                }
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(Error::Net("connection closed by peer".into())),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    if let Some(flag) = self.interrupt {
+                        if flag.load(std::sync::atomic::Ordering::SeqCst) {
+                            return Err(Error::Net("shutdown signal received".into()));
+                        }
+                    }
+                }
+                Err(e) => return Err(Error::Net(format!("recv failed: {e}"))),
+            }
+        }
+    }
+
+    /// Parse one `[len][payload]` frame from the front of `buf`, if whole.
+    fn try_parse(&mut self) -> Result<Option<(Frame, usize)>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(Error::Net(format!("oversized frame ({len} bytes) from peer")));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = decode(&self.buf[4..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some((frame, len)))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        let payload = encode(frame);
+        let mut msg = Vec::with_capacity(4 + payload.len());
+        msg.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&payload);
+        self.stream
+            .write_all(&msg)
+            .map_err(|e| Error::Net(format!("send failed: {e}")))?;
+        Ok(payload.len())
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        self.recv_bounded(None)
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<(Frame, usize)> {
+        self.recv_bounded(Some(std::time::Instant::now() + timeout))
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+        let clone = self
+            .stream
+            .try_clone()
+            .map_err(|e| Error::Net(format!("split: {e}")))?;
+        let send_half: Box<dyn Transport> =
+            Box::new(TcpTransport { stream: clone, buf: Vec::new(), interrupt: None });
+        let recv_half: Box<dyn Transport> = self;
+        Ok((send_half, recv_half))
+    }
+
+    fn close(&mut self) {
+        self.stream.shutdown(std::net::Shutdown::Both).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_pair_roundtrips_frames() {
+        let (mut a, mut b) = LocalTransport::pair();
+        let f = Frame::Step { t: 3, eta: 0.5 };
+        let sent = a.send(&f).unwrap();
+        let (got, n) = b.recv().unwrap();
+        assert_eq!(got, f);
+        assert_eq!(sent, n);
+        // and the other direction
+        b.send(&Frame::Shutdown).unwrap();
+        assert_eq!(a.recv().unwrap().0, Frame::Shutdown);
+    }
+
+    #[test]
+    fn local_disconnect_is_a_typed_net_error() {
+        let (a, mut b) = LocalTransport::pair();
+        drop(a);
+        let err = b.recv().unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+    }
+
+    #[test]
+    fn local_split_halves_work_and_reject_misuse() {
+        let (a, mut b) = LocalTransport::pair();
+        let (mut tx, mut rx) = Box::new(a).split().unwrap();
+        tx.send(&Frame::CkptReq).unwrap();
+        b.send(&Frame::Shutdown).unwrap();
+        assert_eq!(b.recv().unwrap().0, Frame::CkptReq);
+        assert_eq!(rx.recv().unwrap().0, Frame::Shutdown);
+        assert!(tx.recv().is_err());
+        assert!(rx.send(&Frame::CkptReq).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrips_and_reports_peer_loss() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream).unwrap();
+            let (f, _) = t.recv().unwrap();
+            t.send(&f).unwrap(); // echo
+            // drop: client's next recv must observe the close
+        });
+        let mut c = TcpTransport::connect(addr).unwrap();
+        let f = Frame::Act {
+            s: 0,
+            k_to: 1,
+            tau: 9,
+            x: crate::tensor::Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            onehot: crate::tensor::Tensor::from_vec(&[2, 1], vec![0.0, 1.0]).unwrap(),
+        };
+        c.send(&f).unwrap();
+        assert_eq!(c.recv().unwrap().0, f);
+        server.join().unwrap();
+        let err = c.recv().unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+    }
+}

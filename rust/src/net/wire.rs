@@ -1,0 +1,710 @@
+//! The versioned binary wire protocol of the distributed runtime.
+//!
+//! Every message is one [`Frame`], encoded as `[version: u8][tag: u8][body]`
+//! and carried length-prefixed by the transports (`[len: u32 LE][payload]`
+//! on TCP; one `Vec<u8>` per frame over the in-process channel). All
+//! integers are little-endian, tensors travel as `[ndim: u8][dims: u32...]
+//! [data: f32 LE...]` — the exact bytes of the host representation, which
+//! is what keeps loopback runs bit-identical to the in-process engines.
+//!
+//! Decoding never panics: truncated buffers, version mismatches, unknown
+//! tags, and oversized counts all surface as typed [`Error::Net`]
+//! (`tests/net_transport.rs` asserts this for every frame kind).
+
+use crate::error::{Error, Result};
+use crate::staleness::Stash;
+use crate::tensor::Tensor;
+
+/// Protocol version stamped on every frame; bumped on any layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Sanity cap on decoded element counts (dims, vec lengths): a corrupt
+/// length prefix must produce an error, not an attempted huge allocation.
+const MAX_COUNT: usize = 1 << 28;
+
+/// Exact transient state of one module agent crossing the wire — the
+/// network form of [`crate::trainer::checkpoint::ModuleResume`] plus the
+/// agent's grid coordinates and (for k = 0 agents) the sampler position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentSnap {
+    pub s: u32,
+    pub k: u32,
+    /// mini-batch sampler RNG position; `Some` iff this is a k = 0 agent
+    pub sampler_rng: Option<(u64, u64)>,
+    /// optimizer velocity buffers (empty = not yet allocated / plain SGD)
+    pub velocity: Vec<(Tensor, Tensor)>,
+    /// in-flight forward stashes, oldest first
+    pub stashes: Vec<WireStash>,
+    /// accumulated compensator gradients ([`crate::compensate::CompensatorState`])
+    pub comp_accum: Vec<(Tensor, Tensor)>,
+    /// compensator micro-steps accumulated so far
+    pub comp_count: u64,
+    /// activation message pending delivery TO this agent (batch id, x, onehot)
+    pub act_in: Option<(i64, Tensor, Tensor)>,
+    /// error-gradient message pending delivery TO this agent
+    pub grad_in: Option<(i64, Tensor)>,
+}
+
+/// One in-flight forward stash on the wire (the network form of
+/// [`crate::staleness::Stash`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireStash {
+    pub batch_id: i64,
+    pub acts: Vec<Tensor>,
+    pub params: Vec<(Tensor, Tensor)>,
+    pub onehot: Option<Tensor>,
+}
+
+impl WireStash {
+    pub fn from_stash(s: &Stash) -> WireStash {
+        WireStash {
+            batch_id: s.batch_id,
+            acts: s.acts.clone(),
+            params: s.params.clone(),
+            onehot: s.onehot.clone(),
+        }
+    }
+
+    pub fn into_stash(self) -> Stash {
+        Stash {
+            batch_id: self.batch_id,
+            acts: self.acts,
+            params: self.params,
+            onehot: self.onehot,
+        }
+    }
+}
+
+/// Restore payload for one agent: the weights it must hold, plus the exact
+/// transient state when resuming from a full-state checkpoint (`None` for
+/// weights-only restores, which refill the pipeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentRestore {
+    pub s: u32,
+    pub k: u32,
+    pub params: Vec<(Tensor, Tensor)>,
+    pub state: Option<AgentSnap>,
+}
+
+/// The message vocabulary of the coordinator ↔ worker protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Coordinator → worker, first frame: protocol version check.
+    Hello { version: u32 },
+    /// Coordinator → worker: full experiment config (JSON text, the same
+    /// document `sgs train --config` reads) plus this worker's identity and
+    /// the agent→worker assignment (`assign[s*K + k] = worker`).
+    Config {
+        cfg_json: String,
+        worker_id: u32,
+        workers: u32,
+        assign: Vec<u32>,
+    },
+    /// Worker → coordinator: built backend/dataset/agents, ready to step.
+    Ready { worker_id: u32 },
+    /// Coordinator → worker: run global iteration `t` with step size η.
+    Step { t: i64, eta: f64 },
+    /// Activation stash crossing a module boundary to agent (s, k_to):
+    /// batch `tau`'s boundary activation and its riding labels.
+    Act {
+        s: u32,
+        k_to: u32,
+        tau: i64,
+        x: Tensor,
+        onehot: Tensor,
+    },
+    /// Backward error gradient to agent (s, k_to) for batch `tau`.
+    Grad { s: u32, k_to: u32, tau: i64, g: Tensor },
+    /// Worker → coordinator: agent (s, k)'s post-update parameters û for
+    /// this iteration's gossip exchange (eq. 13b).
+    GossipPost {
+        s: u32,
+        k: u32,
+        params: Vec<(Tensor, Tensor)>,
+    },
+    /// Coordinator → worker: the mixed parameters ŵ after all configured
+    /// gossip rounds; the agent adopts them wholesale.
+    GossipMixed {
+        s: u32,
+        k: u32,
+        params: Vec<(Tensor, Tensor)>,
+    },
+    /// Worker → coordinator: iteration finished; the last-module losses
+    /// (`(s, loss)`) and per-agent compensation correction norms
+    /// (`(s, k, ‖g_eff − g_raw‖₂)`) observed locally.
+    StepDone {
+        worker_id: u32,
+        losses: Vec<(u32, f32)>,
+        corrections: Vec<(u32, u32, f64)>,
+    },
+    /// Coordinator → worker: snapshot every local agent's exact state.
+    CkptReq,
+    /// Worker → coordinator: the snapshot (one entry per local agent).
+    CkptState { agents: Vec<AgentSnap> },
+    /// Coordinator → worker: install weights (+ exact state for full
+    /// resumes) on every local agent.
+    Restore {
+        weights_only: bool,
+        agents: Vec<AgentRestore>,
+    },
+    /// Worker → coordinator: restore applied.
+    RestoreDone { worker_id: u32 },
+    /// Coordinator → worker: clean shutdown; the worker exits Ok.
+    Shutdown,
+    /// Either direction: fatal error; the receiver tears down.
+    Abort { msg: String },
+}
+
+impl Frame {
+    /// Frame name for protocol-error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Config { .. } => "config",
+            Frame::Ready { .. } => "ready",
+            Frame::Step { .. } => "step",
+            Frame::Act { .. } => "act",
+            Frame::Grad { .. } => "grad",
+            Frame::GossipPost { .. } => "gossip-post",
+            Frame::GossipMixed { .. } => "gossip-mixed",
+            Frame::StepDone { .. } => "step-done",
+            Frame::CkptReq => "ckpt-req",
+            Frame::CkptState { .. } => "ckpt-state",
+            Frame::Restore { .. } => "restore",
+            Frame::RestoreDone { .. } => "restore-done",
+            Frame::Shutdown => "shutdown",
+            Frame::Abort { .. } => "abort",
+        }
+    }
+}
+
+// ---- encoding ----
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    buf.push(t.shape().len() as u8);
+    for &d in t.shape() {
+        put_u32(buf, d as u32);
+    }
+    // element count is explicit: a rank-0 shape is ambiguous on its own
+    // (Tensor::empty holds 0 elements, Tensor::scalar holds 1)
+    put_u32(buf, t.len() as u32);
+    for &v in t.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_pairs(buf: &mut Vec<u8>, ps: &[(Tensor, Tensor)]) {
+    put_u32(buf, ps.len() as u32);
+    for (w, b) in ps {
+        put_tensor(buf, w);
+        put_tensor(buf, b);
+    }
+}
+
+fn put_snap(buf: &mut Vec<u8>, a: &AgentSnap) {
+    put_u32(buf, a.s);
+    put_u32(buf, a.k);
+    match a.sampler_rng {
+        Some((st, inc)) => {
+            buf.push(1);
+            put_u64(buf, st);
+            put_u64(buf, inc);
+        }
+        None => buf.push(0),
+    }
+    put_pairs(buf, &a.velocity);
+    put_u32(buf, a.stashes.len() as u32);
+    for st in &a.stashes {
+        put_i64(buf, st.batch_id);
+        put_u32(buf, st.acts.len() as u32);
+        for t in &st.acts {
+            put_tensor(buf, t);
+        }
+        put_pairs(buf, &st.params);
+        match &st.onehot {
+            Some(t) => {
+                buf.push(1);
+                put_tensor(buf, t);
+            }
+            None => buf.push(0),
+        }
+    }
+    put_pairs(buf, &a.comp_accum);
+    put_u64(buf, a.comp_count);
+    match &a.act_in {
+        Some((tau, x, oh)) => {
+            buf.push(1);
+            put_i64(buf, *tau);
+            put_tensor(buf, x);
+            put_tensor(buf, oh);
+        }
+        None => buf.push(0),
+    }
+    match &a.grad_in {
+        Some((tau, g)) => {
+            buf.push(1);
+            put_i64(buf, *tau);
+            put_tensor(buf, g);
+        }
+        None => buf.push(0),
+    }
+}
+
+/// Encode a frame to its wire payload: `[version][tag][body]` (the
+/// length prefix is the transport's concern).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.push(WIRE_VERSION);
+    match frame {
+        Frame::Hello { version } => {
+            buf.push(0x01);
+            put_u32(&mut buf, *version);
+        }
+        Frame::Config { cfg_json, worker_id, workers, assign } => {
+            buf.push(0x02);
+            put_str(&mut buf, cfg_json);
+            put_u32(&mut buf, *worker_id);
+            put_u32(&mut buf, *workers);
+            put_u32(&mut buf, assign.len() as u32);
+            for &w in assign {
+                put_u32(&mut buf, w);
+            }
+        }
+        Frame::Ready { worker_id } => {
+            buf.push(0x03);
+            put_u32(&mut buf, *worker_id);
+        }
+        Frame::Step { t, eta } => {
+            buf.push(0x04);
+            put_i64(&mut buf, *t);
+            put_f64(&mut buf, *eta);
+        }
+        Frame::Act { s, k_to, tau, x, onehot } => {
+            buf.push(0x05);
+            put_u32(&mut buf, *s);
+            put_u32(&mut buf, *k_to);
+            put_i64(&mut buf, *tau);
+            put_tensor(&mut buf, x);
+            put_tensor(&mut buf, onehot);
+        }
+        Frame::Grad { s, k_to, tau, g } => {
+            buf.push(0x06);
+            put_u32(&mut buf, *s);
+            put_u32(&mut buf, *k_to);
+            put_i64(&mut buf, *tau);
+            put_tensor(&mut buf, g);
+        }
+        Frame::GossipPost { s, k, params } => {
+            buf.push(0x07);
+            put_u32(&mut buf, *s);
+            put_u32(&mut buf, *k);
+            put_pairs(&mut buf, params);
+        }
+        Frame::GossipMixed { s, k, params } => {
+            buf.push(0x08);
+            put_u32(&mut buf, *s);
+            put_u32(&mut buf, *k);
+            put_pairs(&mut buf, params);
+        }
+        Frame::StepDone { worker_id, losses, corrections } => {
+            buf.push(0x09);
+            put_u32(&mut buf, *worker_id);
+            put_u32(&mut buf, losses.len() as u32);
+            for (s, l) in losses {
+                put_u32(&mut buf, *s);
+                buf.extend_from_slice(&l.to_le_bytes());
+            }
+            put_u32(&mut buf, corrections.len() as u32);
+            for (s, k, c) in corrections {
+                put_u32(&mut buf, *s);
+                put_u32(&mut buf, *k);
+                put_f64(&mut buf, *c);
+            }
+        }
+        Frame::CkptReq => buf.push(0x0A),
+        Frame::CkptState { agents } => {
+            buf.push(0x0B);
+            put_u32(&mut buf, agents.len() as u32);
+            for a in agents {
+                put_snap(&mut buf, a);
+            }
+        }
+        Frame::Restore { weights_only, agents } => {
+            buf.push(0x0C);
+            buf.push(*weights_only as u8);
+            put_u32(&mut buf, agents.len() as u32);
+            for a in agents {
+                put_u32(&mut buf, a.s);
+                put_u32(&mut buf, a.k);
+                put_pairs(&mut buf, &a.params);
+                match &a.state {
+                    Some(snap) => {
+                        buf.push(1);
+                        put_snap(&mut buf, snap);
+                    }
+                    None => buf.push(0),
+                }
+            }
+        }
+        Frame::RestoreDone { worker_id } => {
+            buf.push(0x0D);
+            put_u32(&mut buf, *worker_id);
+        }
+        Frame::Shutdown => buf.push(0x0E),
+        Frame::Abort { msg } => {
+            buf.push(0x0F);
+            put_str(&mut buf, msg);
+        }
+    }
+    buf
+}
+
+// ---- decoding ----
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Net(format!(
+                "truncated frame: want {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix bounded by [`MAX_COUNT`] — a corrupt count errors
+    /// instead of reserving gigabytes.
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_COUNT {
+            return Err(Error::Net(format!("implausible count {n} in frame")));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Net("invalid utf-8 string in frame".into()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.u8()? as usize;
+        if ndim > 8 {
+            return Err(Error::Net(format!("implausible tensor rank {ndim}")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut want = 1usize;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            want = want.saturating_mul(d);
+            shape.push(d);
+        }
+        let len = self.count()?;
+        // rank-0 carries 0 (Tensor::empty) or 1 (Tensor::scalar) elements;
+        // every other rank must match its shape product exactly
+        let rank0_ok = ndim == 0 && len <= 1;
+        if !rank0_ok && len != want {
+            return Err(Error::Net(format!(
+                "tensor length {len} does not match shape {shape:?}"
+            )));
+        }
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(self.f32()?);
+        }
+        if ndim == 0 && len == 0 {
+            return Ok(Tensor::empty());
+        }
+        Tensor::from_vec(&shape, data).map_err(|e| Error::Net(format!("bad tensor: {e}")))
+    }
+
+    fn pairs(&mut self) -> Result<Vec<(Tensor, Tensor)>> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            out.push((self.tensor()?, self.tensor()?));
+        }
+        Ok(out)
+    }
+
+    fn snap(&mut self) -> Result<AgentSnap> {
+        let s = self.u32()?;
+        let k = self.u32()?;
+        let sampler_rng = match self.u8()? {
+            0 => None,
+            _ => Some((self.u64()?, self.u64()?)),
+        };
+        let velocity = self.pairs()?;
+        let n_stash = self.count()?;
+        let mut stashes = Vec::with_capacity(n_stash.min(1024));
+        for _ in 0..n_stash {
+            let batch_id = self.i64()?;
+            let n_acts = self.count()?;
+            let mut acts = Vec::with_capacity(n_acts.min(1024));
+            for _ in 0..n_acts {
+                acts.push(self.tensor()?);
+            }
+            let params = self.pairs()?;
+            let onehot = match self.u8()? {
+                0 => None,
+                _ => Some(self.tensor()?),
+            };
+            stashes.push(WireStash { batch_id, acts, params, onehot });
+        }
+        let comp_accum = self.pairs()?;
+        let comp_count = self.u64()?;
+        let act_in = match self.u8()? {
+            0 => None,
+            _ => Some((self.i64()?, self.tensor()?, self.tensor()?)),
+        };
+        let grad_in = match self.u8()? {
+            0 => None,
+            _ => Some((self.i64()?, self.tensor()?)),
+        };
+        Ok(AgentSnap {
+            s,
+            k,
+            sampler_rng,
+            velocity,
+            stashes,
+            comp_accum,
+            comp_count,
+            act_in,
+            grad_in,
+        })
+    }
+}
+
+/// Decode a wire payload produced by [`encode`]. Malformed input — short
+/// buffers, unknown tags, version mismatches — returns [`Error::Net`].
+pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let version = r.u8()?;
+    if version != WIRE_VERSION {
+        return Err(Error::Net(format!(
+            "wire version mismatch: peer sent v{version}, this build speaks v{WIRE_VERSION}"
+        )));
+    }
+    let tag = r.u8()?;
+    let frame = match tag {
+        0x01 => Frame::Hello { version: r.u32()? },
+        0x02 => {
+            let cfg_json = r.str()?;
+            let worker_id = r.u32()?;
+            let workers = r.u32()?;
+            let n = r.count()?;
+            let mut assign = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                assign.push(r.u32()?);
+            }
+            Frame::Config { cfg_json, worker_id, workers, assign }
+        }
+        0x03 => Frame::Ready { worker_id: r.u32()? },
+        0x04 => Frame::Step { t: r.i64()?, eta: r.f64()? },
+        0x05 => Frame::Act {
+            s: r.u32()?,
+            k_to: r.u32()?,
+            tau: r.i64()?,
+            x: r.tensor()?,
+            onehot: r.tensor()?,
+        },
+        0x06 => Frame::Grad {
+            s: r.u32()?,
+            k_to: r.u32()?,
+            tau: r.i64()?,
+            g: r.tensor()?,
+        },
+        0x07 => Frame::GossipPost { s: r.u32()?, k: r.u32()?, params: r.pairs()? },
+        0x08 => Frame::GossipMixed { s: r.u32()?, k: r.u32()?, params: r.pairs()? },
+        0x09 => {
+            let worker_id = r.u32()?;
+            let n = r.count()?;
+            let mut losses = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                losses.push((r.u32()?, r.f32()?));
+            }
+            let n = r.count()?;
+            let mut corrections = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                corrections.push((r.u32()?, r.u32()?, r.f64()?));
+            }
+            Frame::StepDone { worker_id, losses, corrections }
+        }
+        0x0A => Frame::CkptReq,
+        0x0B => {
+            let n = r.count()?;
+            let mut agents = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                agents.push(r.snap()?);
+            }
+            Frame::CkptState { agents }
+        }
+        0x0C => {
+            let weights_only = r.u8()? != 0;
+            let n = r.count()?;
+            let mut agents = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let s = r.u32()?;
+                let k = r.u32()?;
+                let params = r.pairs()?;
+                let state = match r.u8()? {
+                    0 => None,
+                    _ => Some(r.snap()?),
+                };
+                agents.push(AgentRestore { s, k, params, state });
+            }
+            Frame::Restore { weights_only, agents }
+        }
+        0x0D => Frame::RestoreDone { worker_id: r.u32()? },
+        0x0E => Frame::Shutdown,
+        0x0F => Frame::Abort { msg: r.str()? },
+        other => {
+            return Err(Error::Net(format!("unknown frame tag 0x{other:02x}")));
+        }
+    };
+    if r.pos != bytes.len() {
+        return Err(Error::Net(format!(
+            "{} bytes of trailing garbage after {} frame",
+            bytes.len() - r.pos,
+            frame.name()
+        )));
+    }
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_control_frames() {
+        for f in [
+            Frame::Hello { version: 7 },
+            Frame::Ready { worker_id: 3 },
+            Frame::Step { t: -4, eta: 0.125 },
+            Frame::CkptReq,
+            Frame::Shutdown,
+            Frame::RestoreDone { worker_id: 1 },
+            Frame::Abort { msg: "boom".into() },
+        ] {
+            assert_eq!(decode(&encode(&f)).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn rank0_and_zero_sized_tensors_roundtrip() {
+        // rank-0 is ambiguous without the explicit element count:
+        // Tensor::empty holds 0 elements, Tensor::scalar holds 1 — and
+        // zero-sized placeholder params ([0,0] / [0]) must survive too
+        for t in [
+            Tensor::empty(),
+            Tensor::scalar(2.5),
+            Tensor::zeros(&[0, 0]),
+            Tensor::zeros(&[0]),
+        ] {
+            let f = Frame::Grad { s: 0, k_to: 0, tau: 1, g: t.clone() };
+            let Frame::Grad { g, .. } = decode(&encode(&f)).unwrap() else {
+                panic!("wrong frame decoded");
+            };
+            assert_eq!(g, t);
+        }
+        // a frame whose tensor follows another field still parses cleanly
+        let f = Frame::Act {
+            s: 0,
+            k_to: 1,
+            tau: 2,
+            x: Tensor::empty(),
+            onehot: Tensor::scalar(1.0),
+        };
+        assert_eq!(decode(&encode(&f)).unwrap(), f);
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_unknown_tag() {
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[0] = 99;
+        let err = decode(&bytes).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("version"), "{err}");
+
+        let bytes = vec![WIRE_VERSION, 0xEE];
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("unknown frame tag"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation_everywhere() {
+        let f = Frame::Act {
+            s: 1,
+            k_to: 2,
+            tau: 5,
+            x: Tensor::from_vec(&[2, 3], vec![1.0; 6]).unwrap(),
+            onehot: Tensor::from_vec(&[2, 2], vec![0.0, 1.0, 1.0, 0.0]).unwrap(),
+        };
+        let full = encode(&f);
+        for cut in 0..full.len() {
+            let err = decode(&full[..cut]).unwrap_err();
+            assert!(matches!(err, Error::Net(_)), "cut={cut}: {err}");
+        }
+        assert_eq!(decode(&full).unwrap(), f);
+    }
+}

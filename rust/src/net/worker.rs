@@ -1,0 +1,586 @@
+//! The worker side of the distributed runtime: hosts one or more module
+//! agents and drives them over a single coordinator connection.
+//!
+//! A worker is **stateless about time**: it derives everything from the
+//! [`Frame::Config`] handshake (the same deterministic constructions the
+//! in-process engines run — dataset, shards, weight init, sampler seeds)
+//! and then executes whatever iteration the coordinator's `Step` frames
+//! name. Local agents step serially in ascending (s, k) order for the
+//! forward phase and descending k for the backward phase — the sim
+//! engine's proven-equivalent ordering — with cross-process messages
+//! buffered in pending maps that mirror the threaded engine's channel
+//! buffering (messages posted at iteration t, consumed at t+1; DBP-mode
+//! forward chains block mid-iteration until the upstream activation
+//! frame arrives).
+//!
+//! Teardown is never a hang: a dropped coordinator connection surfaces
+//! from the transport as a typed [`Error::Net`] (TCP reads poll a
+//! shutdown flag, so SIGTERM/ctrl-c interrupts a blocking read the same
+//! way — see [`install_signal_handlers`]), and the worker exits with
+//! that error.
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::compensate::CompensatorState;
+use crate::config::ExperimentConfig;
+use crate::data::{shard_even, Dataset, MiniBatchSampler};
+use crate::error::{Error, Result};
+use crate::net::transport::{TcpTransport, Transport};
+use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
+use crate::nn::init::init_params;
+use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
+use crate::runtime::ComputeBackend;
+use crate::staleness::{partition_layers, Schedule};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+// ---- signal-aware shutdown ----
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// The process-wide shutdown flag the TCP transport polls while blocked.
+pub fn shutdown_flag() -> &'static AtomicBool {
+    &SHUTDOWN
+}
+
+/// Trip the shutdown flag (what the signal handler does; public so tests
+/// and embedders can trigger the same teardown path).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGTERM/SIGINT handlers that trip [`shutdown_flag`], so a
+/// worker blocked on its coordinator connection exits with a typed
+/// [`Error::Net`] instead of dying mid-write or hanging. No-op on
+/// non-Unix platforms.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: core::ffi::c_int) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: core::ffi::c_int, handler: extern "C" fn(core::ffi::c_int)) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal); // SIGINT
+        signal(15, on_signal); // SIGTERM
+    }
+}
+
+/// No-op: only Unix signals are wired up.
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+// ---- TCP entry points ----
+
+/// Serve one coordinator session on an already-bound listener: accept a
+/// single connection, run the worker protocol on it, return when the
+/// coordinator sends `Shutdown` (Ok) or the connection drops (Err).
+pub fn serve(listener: TcpListener) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Net(format!("listener: {e}")))?;
+    let stream = loop {
+        if SHUTDOWN.load(Ordering::SeqCst) {
+            return Err(Error::Net("shutdown signal received".into()));
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                eprintln!("worker: coordinator connected from {peer}");
+                break stream;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            Err(e) => return Err(Error::Net(format!("accept: {e}"))),
+        }
+    };
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| Error::Net(format!("stream: {e}")))?;
+    let mut transport = TcpTransport::new(stream)?;
+    transport.interrupt_on(shutdown_flag());
+    run_worker(Box::new(transport))
+}
+
+/// Bind `addr`, announce the bound address on stdout (the launcher parses
+/// it — `--listen 127.0.0.1:0` picks a free port), then [`serve`].
+pub fn serve_addr(addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+    // stdout, flushed: the launch command reads this line to find the port
+    println!("sgs worker listening on {local}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    serve(listener)
+}
+
+// ---- the worker protocol ----
+
+/// Run the worker protocol over any transport: handshake (`Hello` +
+/// `Config` in, `Ready` out), then serve `Step`/`CkptReq`/`Restore`
+/// frames until `Shutdown` (Ok) or a connection/protocol failure (Err).
+pub fn run_worker(mut transport: Box<dyn Transport>) -> Result<()> {
+    let t: &mut dyn Transport = &mut *transport;
+    match t.recv()?.0 {
+        Frame::Hello { version } if version == WIRE_VERSION as u32 => {}
+        Frame::Hello { version } => {
+            let msg = format!(
+                "protocol version mismatch: coordinator v{version}, worker v{WIRE_VERSION}"
+            );
+            let _ = t.send(&Frame::Abort { msg: msg.clone() });
+            return Err(Error::Net(msg));
+        }
+        other => {
+            let msg = format!("expected hello, got {}", other.name());
+            let _ = t.send(&Frame::Abort { msg: msg.clone() });
+            return Err(Error::Net(msg));
+        }
+    }
+    let (cfg_json, worker_id, workers, assign) = match t.recv()?.0 {
+        Frame::Config { cfg_json, worker_id, workers, assign } => {
+            (cfg_json, worker_id, workers, assign)
+        }
+        other => {
+            let msg = format!("expected config, got {}", other.name());
+            let _ = t.send(&Frame::Abort { msg: msg.clone() });
+            return Err(Error::Net(msg));
+        }
+    };
+    let built = WorkerRuntime::build(&cfg_json, worker_id as usize, workers as usize, &assign);
+    let mut rt = match built {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = t.send(&Frame::Abort { msg: format!("worker build failed: {e}") });
+            return Err(e);
+        }
+    };
+    t.send(&Frame::Ready { worker_id })?;
+
+    loop {
+        let frame = t.recv()?.0;
+        let out = match frame {
+            Frame::Step { t: iter, eta } => rt.run_iteration(t, iter, eta),
+            f @ (Frame::Act { .. } | Frame::Grad { .. }) => rt.absorb(f),
+            Frame::CkptReq => rt.send_checkpoint(t),
+            Frame::Restore { weights_only, agents } => {
+                rt.apply_restore(t, weights_only, agents)
+            }
+            Frame::Shutdown => return Ok(()),
+            Frame::Abort { msg } => {
+                return Err(Error::Net(format!("coordinator aborted: {msg}")))
+            }
+            other => Err(Error::Net(format!(
+                "unexpected {} frame between iterations",
+                other.name()
+            ))),
+        };
+        if let Err(e) = out {
+            // tell the coordinator why before dying (best-effort: the
+            // connection may be the thing that failed)
+            let _ = t.send(&Frame::Abort { msg: format!("worker {worker_id}: {e}") });
+            return Err(e);
+        }
+    }
+}
+
+/// One locally-hosted agent (s, k) and its private machinery.
+struct WorkerAgent {
+    s: usize,
+    k: usize,
+    agent: ModuleAgent,
+    /// only k = 0 agents sample (Algorithm 1: agent (s,1))
+    sampler: Option<MiniBatchSampler>,
+    batch_x: Tensor,
+    batch_oh: Tensor,
+    grad_scale: f64,
+}
+
+/// All state a worker holds between frames.
+struct WorkerRuntime {
+    cfg: ExperimentConfig,
+    backend: Box<dyn ComputeBackend>,
+    ds: Dataset,
+    sched: Schedule,
+    worker_id: usize,
+    /// agent → worker assignment, s-major (`assign[s*K + k]`)
+    assign: Vec<u32>,
+    /// local agents, ascending (s, k)
+    agents: Vec<WorkerAgent>,
+    /// inbound activations keyed (s, k_to, tau) — the cross-process form
+    /// of the threaded engine's buffered channel messages
+    pending_act: BTreeMap<(usize, usize, i64), ActMsg>,
+    /// inbound error gradients keyed (s, k_to, tau)
+    pending_grad: BTreeMap<(usize, usize, i64), Tensor>,
+    /// gossip replies that arrived while awaiting another agent's
+    pending_mixed: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>>,
+}
+
+impl WorkerRuntime {
+    /// Rebuild the experiment deterministically from the config document:
+    /// same dataset, shards, init weights, and sampler seeds as every
+    /// in-process engine — that determinism is what lets separate OS
+    /// processes compute bit-identical iterates.
+    fn build(
+        cfg_json: &str,
+        worker_id: usize,
+        workers: usize,
+        assign: &[u32],
+    ) -> Result<WorkerRuntime> {
+        let cfg = ExperimentConfig::from_json(&Json::parse(cfg_json)?)?;
+        let layers = cfg.model.layers();
+        if assign.len() != cfg.s * cfg.k {
+            return Err(Error::Config(format!(
+                "assignment covers {} agents, grid has {}",
+                assign.len(),
+                cfg.s * cfg.k
+            )));
+        }
+        let ds = crate::coordinator::build_dataset(&cfg);
+        let shards = shard_even(&ds, cfg.s, cfg.seed ^ 0xDA7A)?;
+        let mut root_rng = Pcg32::new(cfg.seed);
+        let init = init_params(&mut root_rng.fork(0x1217), &layers);
+        let bounds = partition_layers(layers.len(), cfg.k);
+        // kernel share: the common deployments (in-process Local workers,
+        // `launch --workers N` loopback) co-locate the whole fleet on one
+        // host, so each worker takes 1/W of the compute budget — any
+        // worker count computes identical bits (PR-3 invariant), this
+        // only avoids oversubscription. Multi-host `--hosts` fleets can
+        // pin `compute_threads` per run if they want the full core count.
+        let threads = (crate::nn::resolve_threads(cfg.compute_threads) / workers.max(1)).max(1);
+        let backend: Box<dyn ComputeBackend> = Box::new(
+            crate::runtime::NativeBackend::with_threads(layers, cfg.batch, threads),
+        );
+
+        let mut agents = Vec::new();
+        for s in 0..cfg.s {
+            for (k, &(lo, hi)) in bounds.iter().enumerate() {
+                if assign[s * cfg.k + k] as usize != worker_id {
+                    continue;
+                }
+                agents.push(WorkerAgent {
+                    s,
+                    k,
+                    agent: ModuleAgent::with_strategies(
+                        k,
+                        lo,
+                        hi,
+                        init[lo..hi].to_vec(),
+                        cfg.optimizer,
+                        cfg.compensate,
+                    ),
+                    sampler: (k == 0).then(|| {
+                        MiniBatchSampler::new(
+                            shards[s].clone(),
+                            cfg.batch,
+                            cfg.seed ^ (0xBA7C << 8) ^ s as u64,
+                        )
+                    }),
+                    batch_x: Tensor::empty(),
+                    batch_oh: Tensor::empty(),
+                    grad_scale: shards[s].weight(),
+                });
+            }
+        }
+        Ok(WorkerRuntime {
+            sched: Schedule::with_mode(cfg.k, cfg.mode),
+            cfg,
+            backend,
+            ds,
+            worker_id,
+            assign: assign.to_vec(),
+            agents,
+            pending_act: BTreeMap::new(),
+            pending_grad: BTreeMap::new(),
+            pending_mixed: BTreeMap::new(),
+        })
+    }
+
+    fn hosts(&self, s: usize, k: usize) -> bool {
+        self.assign[s * self.cfg.k + k] as usize == self.worker_id
+    }
+
+    /// Buffer an inbound payload frame; anything else mid-protocol is fatal.
+    fn absorb(&mut self, frame: Frame) -> Result<()> {
+        match frame {
+            Frame::Act { s, k_to, tau, x, onehot } => {
+                self.pending_act
+                    .insert((s as usize, k_to as usize, tau), ActMsg { x, onehot });
+                Ok(())
+            }
+            Frame::Grad { s, k_to, tau, g } => {
+                self.pending_grad.insert((s as usize, k_to as usize, tau), g);
+                Ok(())
+            }
+            Frame::GossipMixed { s, k, params } => {
+                self.pending_mixed.insert((s as usize, k as usize), params);
+                Ok(())
+            }
+            Frame::Abort { msg } => Err(Error::Net(format!("coordinator aborted: {msg}"))),
+            other => Err(Error::Net(format!(
+                "unexpected {} frame mid-iteration",
+                other.name()
+            ))),
+        }
+    }
+
+    fn await_act(&mut self, t: &mut dyn Transport, s: usize, k: usize, tau: i64) -> Result<ActMsg> {
+        loop {
+            if let Some(m) = self.pending_act.remove(&(s, k, tau)) {
+                return Ok(m);
+            }
+            let frame = t.recv()?.0;
+            self.absorb(frame)?;
+        }
+    }
+
+    fn await_grad(
+        &mut self,
+        t: &mut dyn Transport,
+        s: usize,
+        k: usize,
+        tau: i64,
+    ) -> Result<Tensor> {
+        loop {
+            if let Some(g) = self.pending_grad.remove(&(s, k, tau)) {
+                return Ok(g);
+            }
+            let frame = t.recv()?.0;
+            self.absorb(frame)?;
+        }
+    }
+
+    fn await_mixed(
+        &mut self,
+        t: &mut dyn Transport,
+        s: usize,
+        k: usize,
+    ) -> Result<Vec<(Tensor, Tensor)>> {
+        loop {
+            if let Some(p) = self.pending_mixed.remove(&(s, k)) {
+                return Ok(p);
+            }
+            let frame = t.recv()?.0;
+            self.absorb(frame)?;
+        }
+    }
+
+    /// One global iteration over the local agents: forward phase ascending
+    /// (s, k), backward phase descending, then the gossip exchange, then a
+    /// `StepDone` report. Bit-identical to the same agents' slice of a
+    /// threaded-engine step.
+    // indexed loops: each body interleaves `&mut self.agents[i]` with
+    // `&mut self` transport pumps, which an iterator borrow would forbid
+    #[allow(clippy::needless_range_loop)]
+    fn run_iteration(&mut self, t: &mut dyn Transport, iter: i64, eta: f64) -> Result<()> {
+        let k_modules = self.cfg.k;
+        let sched = self.sched;
+        let mut losses: Vec<(u32, f32)> = Vec::new();
+        let mut corrections: Vec<(u32, u32, f64)> = Vec::new();
+
+        // ---- forward phase (ascending s, k) ----
+        for i in 0..self.agents.len() {
+            let (s, k) = (self.agents[i].s, self.agents[i].k);
+            let Some(tau) = sched.forward_batch(iter, k) else { continue };
+            if k == 0 {
+                let a = &mut self.agents[i];
+                a.sampler.as_mut().expect("module 0 owns the sampler").sample_batch_into(
+                    &self.ds,
+                    &mut a.batch_x,
+                    &mut a.batch_oh,
+                );
+                // move the batch buffers out for the duration of the call
+                // (forward borrows the agent mutably) — no copy, and the
+                // buffers keep their capacity across iterations
+                let x = std::mem::replace(&mut a.batch_x, Tensor::empty());
+                let oh = std::mem::replace(&mut a.batch_oh, Tensor::empty());
+                let out = self.agents[i].agent.forward(&*self.backend, tau, &x, &oh);
+                let a = &mut self.agents[i];
+                a.batch_x = x;
+                a.batch_oh = oh;
+                out?;
+            } else {
+                let msg = self.await_act(t, s, k, tau)?;
+                self.agents[i].agent.forward(&*self.backend, tau, &msg.x, &msg.onehot)?;
+            }
+            if k + 1 < k_modules {
+                let (bx, boh) = self.agents[i].agent.boundary_msg();
+                let (x, onehot) = (bx.clone(), boh.clone());
+                if self.hosts(s, k + 1) {
+                    self.pending_act.insert((s, k + 1, tau), ActMsg { x, onehot });
+                } else {
+                    t.send(&Frame::Act {
+                        s: s as u32,
+                        k_to: (k + 1) as u32,
+                        tau,
+                        x,
+                        onehot,
+                    })?;
+                }
+            }
+        }
+
+        // ---- backward + update phase (descending) ----
+        for i in (0..self.agents.len()).rev() {
+            let (s, k) = (self.agents[i].s, self.agents[i].k);
+            let Some(tau) = sched.backward_batch(iter, k) else { continue };
+            let g_in: Option<Tensor> = if k == k_modules - 1 {
+                let loss = self.agents[i].agent.loss_of(&*self.backend, tau)?;
+                losses.push((s as u32, loss));
+                None
+            } else {
+                Some(self.await_grad(t, s, k, tau)?)
+            };
+            self.agents[i].agent.backward(&*self.backend, tau, g_in.as_ref())?;
+            if k > 0 {
+                let g = self.agents[i].agent.upstream_grad().clone();
+                if self.hosts(s, k - 1) {
+                    self.pending_grad.insert((s, k - 1, tau), g);
+                } else {
+                    t.send(&Frame::Grad { s: s as u32, k_to: (k - 1) as u32, tau, g })?;
+                }
+            }
+            let scale = self.agents[i].grad_scale;
+            let norm = self.agents[i].agent.apply_update(eta, scale);
+            corrections.push((s as u32, k as u32, norm));
+        }
+
+        // ---- gossip exchange (eq. 13b, mixed centrally) ----
+        // post every local agent's û, then adopt the coordinator's mixed
+        // ŵ wholesale — the coordinator runs the exact GossipMixer
+        // arithmetic, so the adopted bytes equal the threaded engine's
+        for i in 0..self.agents.len() {
+            let (s, k) = (self.agents[i].s, self.agents[i].k);
+            t.send(&Frame::GossipPost {
+                s: s as u32,
+                k: k as u32,
+                params: self.agents[i].agent.params.clone(),
+            })?;
+        }
+        for i in 0..self.agents.len() {
+            let (s, k) = (self.agents[i].s, self.agents[i].k);
+            let mixed = self.await_mixed(t, s, k)?;
+            if mixed.len() != self.agents[i].agent.params.len() {
+                return Err(Error::Net(format!(
+                    "gossip reply for ({s},{k}) has {} layers, agent has {}",
+                    mixed.len(),
+                    self.agents[i].agent.params.len()
+                )));
+            }
+            self.agents[i].agent.params = mixed;
+        }
+
+        t.send(&Frame::StepDone {
+            worker_id: self.worker_id as u32,
+            losses,
+            corrections,
+        })?;
+        Ok(())
+    }
+
+    /// Snapshot every local agent's exact transient state for the
+    /// coordinator's full-resume checkpoint.
+    fn send_checkpoint(&mut self, t: &mut dyn Transport) -> Result<()> {
+        let mut out = Vec::with_capacity(self.agents.len());
+        for a in &self.agents {
+            let (s, k) = (a.s, a.k);
+            let act_in = self
+                .pending_act
+                .range((s, k, i64::MIN)..=(s, k, i64::MAX))
+                .next()
+                .map(|(&(_, _, tau), m)| (tau, m.x.clone(), m.onehot.clone()));
+            let grad_in = self
+                .pending_grad
+                .range((s, k, i64::MIN)..=(s, k, i64::MAX))
+                .next()
+                .map(|(&(_, _, tau), g)| (tau, g.clone()));
+            let comp = a.agent.comp_state();
+            out.push(AgentSnap {
+                s: s as u32,
+                k: k as u32,
+                sampler_rng: a.sampler.as_ref().map(|sm| sm.rng_state()),
+                velocity: a.agent.opt_velocity(),
+                stashes: a.agent.stash_snapshot().iter().map(WireStash::from_stash).collect(),
+                comp_accum: comp.accum,
+                comp_count: comp.count as u64,
+                act_in,
+                grad_in,
+            });
+        }
+        t.send(&Frame::CkptState { agents: out })?;
+        Ok(())
+    }
+
+    /// Install a restore payload: weights always; transient state and
+    /// sampler position for full resumes, refill semantics otherwise.
+    fn apply_restore(
+        &mut self,
+        t: &mut dyn Transport,
+        weights_only: bool,
+        payload: Vec<AgentRestore>,
+    ) -> Result<()> {
+        self.pending_act.clear();
+        self.pending_grad.clear();
+        self.pending_mixed.clear();
+        for ar in payload {
+            let (s, k) = (ar.s as usize, ar.k as usize);
+            let idx = self
+                .agents
+                .iter()
+                .position(|a| a.s == s && a.k == k)
+                .ok_or_else(|| {
+                    Error::Net(format!("restore for ({s},{k}), not hosted here"))
+                })?;
+            let a = &mut self.agents[idx];
+            if ar.params.len() != a.agent.params.len() {
+                return Err(Error::Net(format!(
+                    "restore for ({s},{k}) has {} layers, agent has {}",
+                    ar.params.len(),
+                    a.agent.params.len()
+                )));
+            }
+            a.agent.params = ar.params;
+            a.agent.reset_transient();
+            if weights_only {
+                if let Some(sm) = a.sampler.as_mut() {
+                    let shard = sm.shard().clone();
+                    *sm = MiniBatchSampler::new(
+                        shard,
+                        self.cfg.batch,
+                        self.cfg.seed ^ (0xBA7C << 8) ^ s as u64,
+                    );
+                }
+                continue;
+            }
+            let snap = ar.state.ok_or_else(|| {
+                Error::Net(format!("full restore for ({s},{k}) missing agent state"))
+            })?;
+            a.agent.set_opt_velocity(snap.velocity);
+            a.agent
+                .restore_stash(snap.stashes.into_iter().map(WireStash::into_stash).collect());
+            a.agent.set_comp_state(CompensatorState {
+                accum: snap.comp_accum,
+                count: snap.comp_count as usize,
+            });
+            if let Some((st, inc)) = snap.sampler_rng {
+                if let Some(sm) = a.sampler.as_mut() {
+                    sm.set_rng_state((st, inc));
+                }
+            }
+            if let Some((tau, x, onehot)) = snap.act_in {
+                self.pending_act.insert((s, k, tau), ActMsg { x, onehot });
+            }
+            if let Some((tau, g)) = snap.grad_in {
+                self.pending_grad.insert((s, k, tau), g);
+            }
+        }
+        t.send(&Frame::RestoreDone { worker_id: self.worker_id as u32 })?;
+        Ok(())
+    }
+}

@@ -258,22 +258,11 @@ impl ThreadedEngine {
         (0..self.cfg.s).map(|s| self.group_params(s)).collect()
     }
 
-    /// Group-averaged parameters W̄(t) — same accumulation order as the sim
-    /// engine so eval losses agree bitwise.
+    /// Group-averaged parameters W̄(t) — the shared
+    /// [`crate::consensus::averaged_params`] reduction, so eval losses
+    /// agree bitwise with the other engines by construction.
     fn averaged_params(&self) -> Vec<(Tensor, Tensor)> {
-        let s_groups = self.cfg.s;
-        let mut avg = self.group_params(0);
-        for s in 1..s_groups {
-            for (acc, (w, b)) in avg.iter_mut().zip(self.group_params(s)) {
-                acc.0.axpy(1.0, &w);
-                acc.1.axpy(1.0, &b);
-            }
-        }
-        for (w, b) in avg.iter_mut() {
-            w.scale(1.0 / s_groups as f32);
-            b.scale(1.0 / s_groups as f32);
-        }
-        avg
+        crate::consensus::averaged_params(&self.all_group_params())
     }
 
     /// Read the exact transient state. The in-flight messages live in the
@@ -542,6 +531,8 @@ impl Engine for ThreadedEngine {
             sim_time_s: (self.t_offset as f64 + self.t as f64) * self.iter_time_s,
             staleness: Arc::clone(&self.staleness_arc),
             correction,
+            net_tx: None,
+            net_rx: None,
         };
         if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
             ev.delta = Some(self.consensus_delta());
@@ -721,6 +712,7 @@ mod tests {
             delta_every: 0,
             eval_every: 0,
             compute_threads: 0,
+            placement: None,
         }
     }
 

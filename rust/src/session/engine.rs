@@ -17,16 +17,24 @@ pub enum EngineKind {
     /// shape — synchronized by a per-iteration barrier. Computes the same
     /// iterates as the sim engine, bit for bit.
     Threaded,
+    /// Multi-process: a coordinator driving worker processes over the
+    /// [`crate::net`] transport subsystem (loopback or remote TCP, or
+    /// in-process workers over the Local transport). Requires a
+    /// [`crate::config::Placement`] in the config; computes the same
+    /// iterates as the other engines, bit for bit.
+    Dist,
 }
 
 impl EngineKind {
-    /// Parse "sim" | "threaded" (case-insensitive, whitespace-tolerant).
+    /// Parse "sim" | "threaded" | "dist" (case-insensitive,
+    /// whitespace-tolerant).
     pub fn parse(s: &str) -> Result<EngineKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "sim" => Ok(EngineKind::Sim),
             "threaded" | "threads" => Ok(EngineKind::Threaded),
+            "dist" | "distributed" => Ok(EngineKind::Dist),
             _ => Err(crate::error::Error::Config(format!(
-                "unknown engine {s:?} (want sim|threaded)"
+                "unknown engine {s:?} (want sim|threaded|dist)"
             ))),
         }
     }
@@ -35,6 +43,7 @@ impl EngineKind {
         match self {
             EngineKind::Sim => "sim",
             EngineKind::Threaded => "threaded",
+            EngineKind::Dist => "dist",
         }
     }
 }
@@ -87,12 +96,14 @@ mod tests {
         assert_eq!(EngineKind::parse("sim").unwrap(), EngineKind::Sim);
         assert_eq!(EngineKind::parse(" Threaded ").unwrap(), EngineKind::Threaded);
         assert_eq!(EngineKind::parse("SIM").unwrap(), EngineKind::Sim);
+        assert_eq!(EngineKind::parse(" DIST ").unwrap(), EngineKind::Dist);
+        assert_eq!(EngineKind::parse("distributed").unwrap(), EngineKind::Dist);
         assert!(EngineKind::parse("gpu").is_err());
     }
 
     #[test]
     fn engine_kind_roundtrip() {
-        for k in [EngineKind::Sim, EngineKind::Threaded] {
+        for k in [EngineKind::Sim, EngineKind::Threaded, EngineKind::Dist] {
             assert_eq!(EngineKind::parse(k.as_str()).unwrap(), k);
         }
     }

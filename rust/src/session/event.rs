@@ -2,17 +2,25 @@
 //! engine yields through [`crate::session::Session::step`], plus a JSONL
 //! writer for the CLI's `--events-out` stream.
 //!
-//! JSONL schema (one object per line, `None` fields omitted):
+//! JSONL schema v3 (one object per line, `None` fields omitted):
 //!
 //! ```json
 //! {"t": 12, "lr": 0.1, "train_loss": 2.19, "eval_loss": 2.25,
 //!  "eval_acc": 0.14, "delta": 1.3e-3, "sim_time_s": 0.696,
-//!  "staleness": [2, 0], "correction": [0.0031, 0.0]}
+//!  "staleness": [2, 0], "correction": [0.0031, 0.0],
+//!  "net_bytes_tx": [1184, 0], "net_bytes_rx": [0, 1184]}
 //! ```
 //!
 //! `correction[k]` is the group-mean staleness-compensation correction norm
 //! ‖g_eff − g_raw‖₂ of module k this iteration (all zeros under the
 //! `none` baseline — see [`crate::compensate`]).
+//!
+//! `net_bytes_tx[k]`/`net_bytes_rx[k]` are the wire bytes module k's agents
+//! sent/received this iteration (activation stashes, backward gradients,
+//! and gossip parameter exchanges, summed over the S data-groups). Only the
+//! distributed engine emits them; the in-process engines move no bytes and
+//! omit the fields entirely — which is what makes them the benchable
+//! measure of communication volume (see [`crate::net`]).
 
 use std::io::Write as _;
 use std::path::Path;
@@ -51,6 +59,13 @@ pub struct IterEvent {
     /// per-module compensation correction norm ‖g_eff − g_raw‖₂, group
     /// mean (zeros under the `none` baseline or while the pipeline fills)
     pub correction: Arc<[f64]>,
+    /// wire bytes each module's agents sent this iteration (distributed
+    /// engine only; `None` — omitted from the JSONL — for in-process
+    /// engines, which move no bytes)
+    pub net_tx: Option<Arc<[u64]>>,
+    /// wire bytes each module's agents received this iteration
+    /// (distributed engine only)
+    pub net_rx: Option<Arc<[u64]>>,
 }
 
 /// Share `vals` as an event's correction field: the cached all-zeros
@@ -94,6 +109,12 @@ impl IterEvent {
         set_opt(&mut j, "eval_loss", self.eval_loss);
         set_opt(&mut j, "eval_acc", self.eval_acc);
         set_opt(&mut j, "delta", self.delta);
+        if let Some(tx) = &self.net_tx {
+            j.set("net_bytes_tx", tx.iter().map(|&b| b as usize).collect::<Vec<usize>>());
+        }
+        if let Some(rx) = &self.net_rx {
+            j.set("net_bytes_rx", rx.iter().map(|&b| b as usize).collect::<Vec<usize>>());
+        }
         j
     }
 }
@@ -141,6 +162,8 @@ mod tests {
             sim_time_s: 0.25,
             staleness: Arc::from(vec![2, 0]),
             correction: Arc::from(vec![0.01, 0.0]),
+            net_tx: None,
+            net_rx: None,
         }
     }
 
@@ -167,6 +190,22 @@ mod tests {
         let corr = j.get("correction").unwrap().as_arr().unwrap();
         assert_eq!(corr.len(), 2);
         assert_eq!(corr[0].as_f64().unwrap(), 0.01);
+        // in-process engines omit the transport counters entirely
+        assert!(j.opt("net_bytes_tx").is_none());
+        assert!(j.opt("net_bytes_rx").is_none());
+    }
+
+    #[test]
+    fn net_counters_serialize_when_present() {
+        let mut e = ev();
+        e.net_tx = Some(Arc::from(vec![128u64, 0]));
+        e.net_rx = Some(Arc::from(vec![0u64, 128]));
+        let j = e.to_json();
+        let tx = j.get("net_bytes_tx").unwrap().as_arr().unwrap();
+        assert_eq!(tx.len(), 2);
+        assert_eq!(tx[0].as_usize().unwrap(), 128);
+        let rx = j.get("net_bytes_rx").unwrap().as_arr().unwrap();
+        assert_eq!(rx[1].as_usize().unwrap(), 128);
     }
 
     #[test]

@@ -53,8 +53,9 @@ use std::sync::Arc;
 use crate::config::ExperimentConfig;
 use crate::coordinator::grid::AgentGrid;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Recorder;
+use crate::net::{DistEngine, Transport};
 use crate::pipeline::ThreadedEngine;
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::simclock::{method_iter_s_mode, CostModel};
@@ -86,6 +87,7 @@ pub struct SessionBuilder {
     dataset: Option<Arc<Dataset>>,
     cost_model: Option<CostModel>,
     calibrate_clock: bool,
+    dist_workers: Option<Vec<Box<dyn Transport>>>,
 }
 
 impl SessionBuilder {
@@ -99,6 +101,7 @@ impl SessionBuilder {
             dataset: None,
             cost_model: None,
             calibrate_clock: false,
+            dist_workers: None,
         }
     }
 
@@ -153,11 +156,52 @@ impl SessionBuilder {
         self
     }
 
+    /// Already-connected worker transports for the dist engine (one per
+    /// worker, index = worker id — what `sgs launch` hands over after
+    /// spawning loopback workers or dialing `--hosts`). Without this, a
+    /// dist session self-hosts its workers in-process over the Local
+    /// transport.
+    pub fn dist_workers(mut self, transports: Vec<Box<dyn Transport>>) -> SessionBuilder {
+        self.dist_workers = Some(transports);
+        self
+    }
+
     /// Validate the config, check Assumption 3.1, build dataset + backend +
     /// engine, and hand back a ready [`Session`].
     pub fn build(self) -> Result<Session> {
         let cfg = self.cfg;
         cfg.validate()?;
+        // a dist session with nowhere to place its agents is a config
+        // error, surfaced before any backend/dataset work happens
+        if self.engine == EngineKind::Dist && cfg.placement.is_none() {
+            return Err(Error::Config(format!(
+                "engine {:?} requires a worker placement: set \"placement\" in the \
+                 config (workers + optional assign) or pass --workers N",
+                self.engine.as_str()
+            )));
+        }
+        // workers always compute on the native backend (no AOT artifacts
+        // ship over the wire); a coordinator evaluating on a different
+        // backend would silently break train/eval consistency
+        if self.engine == EngineKind::Dist && matches!(self.backend_kind, BackendKind::Xla) {
+            return Err(Error::Config(
+                "engine \"dist\" runs its workers on the native backend; \
+                 --backend xla is not supported for distributed runs"
+                    .into(),
+            ));
+        }
+        // workers rebuild the dataset deterministically from the config
+        // document alone — a caller-supplied dataset cannot be shipped to
+        // them, and silently evaluating on different data than the
+        // workers train on would be worse than refusing
+        if self.engine == EngineKind::Dist && self.dataset.is_some() {
+            return Err(Error::Config(
+                "engine \"dist\" rebuilds the dataset from the config on every \
+                 worker; a custom dataset via SessionBuilder::dataset is not \
+                 supported for distributed runs"
+                    .into(),
+            ));
+        }
         let grid = AgentGrid::build(cfg.s, cfg.k, cfg.topology, cfg.alpha)?;
         grid.check_assumption_3_1()?;
         let gamma = grid.gamma();
@@ -177,6 +221,9 @@ impl SessionBuilder {
         let outer = match self.engine {
             EngineKind::Sim => resolved.min(cfg.s),
             EngineKind::Threaded => cfg.s * cfg.k,
+            // the coordinator itself only evaluates (workers own their
+            // compute budgets), so its kernels get the full share
+            EngineKind::Dist => 1,
         };
         let kernel_threads = (resolved / outer.max(1)).max(1);
         let backend: Arc<dyn ComputeBackend> = match self.backend {
@@ -213,6 +260,22 @@ impl SessionBuilder {
             }
             EngineKind::Threaded => {
                 Box::new(ThreadedEngine::new(cfg.clone(), backend.clone(), ds.clone())?)
+            }
+            EngineKind::Dist => {
+                let placement = cfg.placement.as_ref().expect("checked above");
+                let (transports, handles) = match self.dist_workers {
+                    Some(t) => (t, Vec::new()),
+                    // no external workers: self-host them in-process over
+                    // the Local transport (full protocol, zero sockets)
+                    None => crate::net::spawn_local_workers(placement.workers),
+                };
+                Box::new(DistEngine::connect(
+                    cfg.clone(),
+                    backend.clone(),
+                    ds.clone(),
+                    transports,
+                    handles,
+                )?)
             }
         };
         engine.set_iter_time_s(iter_time_s);
@@ -380,6 +443,7 @@ mod tests {
             delta_every: 3,
             eval_every: 6,
             compute_threads: 0,
+            placement: None,
         }
     }
 
@@ -419,5 +483,46 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.k = 99;
         assert!(Session::builder(cfg).build().is_err());
+    }
+
+    #[test]
+    fn dist_engine_without_placement_is_a_typed_config_error() {
+        let err = Session::builder(tiny_cfg())
+            .engine(EngineKind::Dist)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("dist"), "{err}");
+    }
+
+    #[test]
+    fn dist_engine_rejects_custom_datasets() {
+        // workers rebuild data from the config; a builder-supplied dataset
+        // would silently diverge eval from training — refuse instead
+        let mut cfg = tiny_cfg();
+        cfg.placement = Some(crate::config::Placement::even(2, cfg.s, cfg.k).unwrap());
+        let ds = crate::coordinator::build_dataset(&cfg);
+        let err = Session::builder(cfg)
+            .engine(EngineKind::Dist)
+            .dataset(ds)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn dist_engine_self_hosts_in_process_workers() {
+        let mut cfg = tiny_cfg();
+        cfg.placement = Some(crate::config::Placement::even(2, cfg.s, cfg.k).unwrap());
+        let mut session = Session::builder(cfg).engine(EngineKind::Dist).build().unwrap();
+        assert_eq!(session.engine_name(), "dist");
+        for _ in 0..4 {
+            let ev = session.step().unwrap();
+            // the dist engine publishes per-module transport counters
+            let tx = ev.net_tx.as_ref().expect("dist events carry net_bytes_tx");
+            assert_eq!(tx.len(), 2);
+            assert!(ev.net_rx.is_some());
+        }
+        assert_eq!(session.iterations_done(), 4);
     }
 }

@@ -56,6 +56,8 @@ impl Engine for SimEngine {
             sim_time_s: r.sim_time_s,
             staleness: Arc::clone(&self.staleness),
             correction: correction_arc(&self.zero_corr, self.tr.last_correction()),
+            net_tx: None,
+            net_rx: None,
         })
     }
 

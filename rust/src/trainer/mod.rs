@@ -272,21 +272,13 @@ impl Trainer {
         Ok(())
     }
 
-    /// Group-averaged parameters W̄(t) (the quantity the theory tracks).
+    /// Group-averaged parameters W̄(t) (the quantity the theory tracks) —
+    /// the shared [`crate::consensus::averaged_params`] reduction, so all
+    /// engines' eval paths agree bitwise by construction.
     pub fn averaged_params(&self) -> Vec<(Tensor, Tensor)> {
-        let s = self.groups.len();
-        let mut avg = self.groups[0].all_params();
-        for g in &self.groups[1..] {
-            for (acc, (w, b)) in avg.iter_mut().zip(g.all_params()) {
-                acc.0.axpy(1.0, &w);
-                acc.1.axpy(1.0, &b);
-            }
-        }
-        for (w, b) in avg.iter_mut() {
-            w.scale(1.0 / s as f32);
-            b.scale(1.0 / s as f32);
-        }
-        avg
+        let per_group: Vec<Vec<(Tensor, Tensor)>> =
+            self.groups.iter().map(|g| g.all_params()).collect();
+        crate::consensus::averaged_params(&per_group)
     }
 
     /// δ(t) of eq. (22) over the current per-group parameters.
@@ -443,6 +435,7 @@ mod tests {
             delta_every: 5,
             eval_every: 20,
             compute_threads: 0,
+            placement: None,
         }
     }
 

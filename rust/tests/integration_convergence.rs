@@ -31,6 +31,7 @@ fn base_cfg() -> ExperimentConfig {
         delta_every: 1,
         eval_every: 50,
         compute_threads: 0,
+        placement: None,
     }
 }
 

@@ -2,14 +2,20 @@
 //! the paper's central claim — the decoupled multi-agent (threaded)
 //! deployment computes the SAME iterates as the lock-step sim reference —
 //! plus exact checkpoint/resume on both engines, including cross-engine
-//! snapshot portability.
+//! snapshot portability. The distributed engine joins the same claim:
+//! coordinator + loopback-TCP worker processes compute the same bits as
+//! both in-process engines, and checkpoints round-trip through the
+//! coordinator.
 
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
-use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
+use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::data::Dataset;
 use sgs::graph::Topology;
+use sgs::net::{TcpTransport, Transport};
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::{EngineKind, IterEvent, Session};
 use sgs::trainer::LrSchedule;
@@ -34,6 +40,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         delta_every: 4,
         eval_every: 8,
         compute_threads: 0,
+        placement: None,
     }
 }
 
@@ -86,6 +93,43 @@ fn assert_params_eq(a: &[Vec<(sgs::tensor::Tensor, sgs::tensor::Tensor)>],
     }
 }
 
+/// A session on the config's own (deterministic) dataset and backend —
+/// what distributed workers rebuild from the config document, so dist
+/// comparisons must use the same construction on every engine.
+fn default_session(c: &ExperimentConfig, kind: EngineKind) -> Session {
+    Session::builder(c.clone()).engine(kind).build().unwrap()
+}
+
+/// A dist session over REAL loopback-TCP worker processes (one thread per
+/// worker running the full `sgs worker` serve path on an ephemeral port),
+/// with every pipeline split across the workers so activations, gradients,
+/// and gossip all cross the wire.
+fn dist_tcp_session(
+    c: &ExperimentConfig,
+    workers: usize,
+) -> (Session, Vec<JoinHandle<sgs::Result<()>>>) {
+    let mut cfg = c.clone();
+    let n = cfg.s * cfg.k;
+    cfg.placement = Some(Placement {
+        workers,
+        assign: (0..n).map(|i| i % workers).collect(),
+    });
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        handles.push(std::thread::spawn(move || sgs::net::worker::serve(listener)));
+        transports.push(Box::new(TcpTransport::connect(addr).unwrap()));
+    }
+    let session = Session::builder(cfg)
+        .engine(EngineKind::Dist)
+        .dist_workers(transports)
+        .build()
+        .unwrap();
+    (session, handles)
+}
+
 #[test]
 fn sim_and_threaded_are_bit_identical_over_the_sk_grid() {
     // s ∈ {1,2} × k ∈ {1,2}: per-iteration losses (and the δ/eval cadence
@@ -124,6 +168,142 @@ fn sim_and_threaded_are_bit_identical_on_a_cnn_split() {
     assert_eq!(sim.consensus_delta(), thr.consensus_delta());
     // training actually happened: losses appear once the pipeline fills
     assert!(sim_events.iter().any(|ev| ev.train_loss.is_some()));
+}
+
+#[test]
+fn dist_loopback_tcp_matches_sim_and_threaded_bitwise() {
+    // the distributed engine joins the equivalence claim over the s,k grid
+    // in BOTH pipeline modes: coordinator + loopback-TCP workers compute
+    // the exact per-iteration observations and final parameters of the
+    // in-process engines
+    for mode in [
+        sgs::staleness::PipelineMode::FullyDecoupled,
+        sgs::staleness::PipelineMode::BackwardUnlocked,
+    ] {
+        for s in [1usize, 2] {
+            for k in [1usize, 2] {
+                let mut c = cfg(s, k, 10);
+                c.mode = mode;
+                let (sim_events, sim) = collect_events(default_session(&c, EngineKind::Sim));
+                let (thr_events, _) = collect_events(default_session(&c, EngineKind::Threaded));
+                let workers = (s * k).min(2);
+                let (dist, handles) = dist_tcp_session(&c, workers);
+                let (dist_events, dist) = collect_events(dist);
+
+                assert_eq!(sim_events.len(), dist_events.len());
+                for ((a, b), d) in sim_events.iter().zip(&thr_events).zip(&dist_events) {
+                    assert_events_eq(a, b);
+                    assert_events_eq(a, d);
+                    // schema v3: only the dist engine reports wire volume
+                    assert!(a.net_tx.is_none() && b.net_tx.is_none());
+                    let tx = d.net_tx.as_ref().expect("dist events carry net_bytes_tx");
+                    let rx = d.net_rx.as_ref().expect("dist events carry net_bytes_rx");
+                    assert_eq!(tx.len(), k);
+                    assert_eq!(rx.len(), k);
+                    // gossip posts flow every iteration, so module 0 always
+                    // moves bytes upstream
+                    assert!(tx[0] > 0, "S={s} K={k} {mode:?}: no gossip traffic");
+                }
+                assert_params_eq(&sim.final_params(), &dist.final_params());
+                assert_eq!(
+                    sim.consensus_delta(),
+                    dist.consensus_delta(),
+                    "S={s} K={k} {mode:?}"
+                );
+                drop(dist); // shuts the workers down
+                for h in handles {
+                    h.join().unwrap().unwrap_or_else(|e| {
+                        panic!("worker exited uncleanly (S={s} K={k} {mode:?}): {e}")
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_checkpoint_restores_bit_identically_through_the_coordinator() {
+    // full-resume checkpoints gathered over the wire (stashes, velocity,
+    // compensator state, pending messages, sampler positions) must resume
+    // the exact iterate stream — and stay portable to the in-process
+    // engines, which share the ResumeState format
+    let mut c = cfg(2, 2, 16);
+    c.optimizer = sgs::trainer::OptimizerKind::Momentum { beta: 0.9 };
+    c.compensate = sgs::compensate::CompensatorKind::Accumulate { n: 2 };
+
+    let (full_events, full) = collect_events(default_session(&c, EngineKind::Sim));
+
+    let (mut part, part_handles) = dist_tcp_session(&c, 2);
+    for _ in 0..7 {
+        part.step().unwrap();
+    }
+    let ck = part.checkpoint();
+    assert!(ck.resume.is_some(), "dist checkpoints carry resume state");
+    assert_eq!(ck.iteration, 7);
+    drop(part);
+    for h in part_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // dist → dist resume
+    let (mut resumed, handles) = dist_tcp_session(&c, 2);
+    resumed.restore(&ck).unwrap();
+    assert_eq!(resumed.iterations_done(), 7);
+    let (tail_events, resumed) = collect_events(resumed);
+    assert_eq!(tail_events.len(), 9);
+    for (a, b) in full_events[7..].iter().zip(&tail_events) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&full.final_params(), &resumed.final_params());
+    drop(resumed);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // dist snapshot resumes exactly on the sim engine too (portability)
+    let mut on_sim = default_session(&c, EngineKind::Sim);
+    on_sim.restore(&ck).unwrap();
+    let (sim_tail, _) = collect_events(on_sim);
+    for (a, b) in full_events[7..].iter().zip(&sim_tail) {
+        assert_events_eq(a, b);
+    }
+}
+
+#[test]
+fn dist_weights_only_restore_refills_like_the_other_engines() {
+    let c = cfg(2, 2, 12);
+    let (mut part, handles) = dist_tcp_session(&c, 2);
+    for _ in 0..6 {
+        part.step().unwrap();
+    }
+    let mut ck = part.checkpoint();
+    ck.resume = None; // simulate a disk round-trip
+    part.restore(&ck).unwrap();
+    assert_eq!(part.iterations_done(), 6);
+    let ev = part.step().unwrap();
+    assert_eq!(ev.t, 6);
+    assert!(ev.train_loss.is_none(), "pipeline should be refilling");
+
+    // the refill trajectory matches the threaded engine's byte for byte
+    let mut thr = default_session(&c, EngineKind::Threaded);
+    for _ in 0..6 {
+        thr.step().unwrap();
+    }
+    let mut tck = thr.checkpoint();
+    tck.resume = None;
+    thr.restore(&tck).unwrap();
+    let first = thr.step().unwrap();
+    assert_events_eq(&first, &ev);
+    let (dist_events, dist) = collect_events(part);
+    let (thr_events, thr) = collect_events(thr);
+    for (a, b) in thr_events.iter().zip(&dist_events) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&thr.final_params(), &dist.final_params());
+    drop(dist);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
 }
 
 #[test]

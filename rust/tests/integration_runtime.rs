@@ -173,6 +173,7 @@ fn xla_training_matches_native_training() {
         delta_every: 0,
         eval_every: 0,
         compute_threads: 0,
+        placement: None,
     };
     let ds = std::sync::Arc::new(sgs::coordinator::build_dataset(&cfg));
 

@@ -1,0 +1,279 @@
+//! Wire-protocol and teardown tests for the distributed runtime:
+//!
+//! * round-trip property tests for every frame type (including configs
+//!   carrying `Spatial` conv stacks and non-empty `CompensatorState`);
+//! * malformed/truncated/wrong-version payloads surface typed
+//!   [`sgs::Error::Net`] — never panics;
+//! * graceful teardown: a worker whose coordinator connection drops exits
+//!   with `Error::Net` instead of hanging, and the coordinator surfaces a
+//!   killed worker as `Err` from `step` (mirroring the threaded engine's
+//!   poisoned-channel semantics).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
+use sgs::graph::Topology;
+use sgs::net::wire::{self, AgentRestore, AgentSnap, WireStash};
+use sgs::net::{Frame, TcpTransport, Transport};
+use sgs::session::{EngineKind, Session};
+use sgs::tensor::Tensor;
+use sgs::trainer::LrSchedule;
+use sgs::util::rng::Pcg32;
+
+fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+fn rand_pairs(rng: &mut Pcg32, shapes: &[([usize; 2], usize)]) -> Vec<(Tensor, Tensor)> {
+    shapes
+        .iter()
+        .map(|&(w, b)| (rand_tensor(rng, &w), rand_tensor(rng, &[b])))
+        .collect()
+}
+
+fn sample_snap(rng: &mut Pcg32, s: u32, k: u32) -> AgentSnap {
+    AgentSnap {
+        s,
+        k,
+        sampler_rng: (k == 0).then_some((0xDEAD_BEEF_u64, 0x1234_5679_u64)),
+        velocity: rand_pairs(rng, &[([4, 3], 3), ([3, 2], 2)]),
+        stashes: vec![WireStash {
+            batch_id: 7,
+            acts: vec![rand_tensor(rng, &[2, 4]), rand_tensor(rng, &[2, 3])],
+            params: rand_pairs(rng, &[([4, 3], 3)]),
+            onehot: Some(rand_tensor(rng, &[2, 2])),
+        }],
+        // non-empty CompensatorState: mid-window accum:N accumulation
+        comp_accum: rand_pairs(rng, &[([4, 3], 3)]),
+        comp_count: 1,
+        act_in: Some((6, rand_tensor(rng, &[2, 4]), rand_tensor(rng, &[2, 2]))),
+        grad_in: Some((5, rand_tensor(rng, &[2, 3]))),
+    }
+}
+
+/// Every frame kind with representative payloads, for the round-trip and
+/// truncation sweeps.
+fn sample_frames() -> Vec<Frame> {
+    let mut rng = Pcg32::new(0xC0DEC);
+    // a config whose model is a Spatial conv stack, with a placement
+    let mut cfg = ExperimentConfig {
+        model: ModelSpec::Stack(
+            StackModel::new(2, 6, 6, ["conv3x3:3", "maxpool", "flatten", "linear:3"], 3)
+                .unwrap(),
+        ),
+        s: 2,
+        k: 2,
+        batch: 4,
+        dataset_n: 64,
+        topology: Topology::Ring,
+        lr: LrSchedule::Const(0.1),
+        ..ExperimentConfig::default()
+    };
+    cfg.placement = Some(Placement::even(2, 2, 2).unwrap());
+    vec![
+        Frame::Hello { version: 1 },
+        Frame::Config {
+            cfg_json: cfg.to_json().to_string_compact(),
+            worker_id: 1,
+            workers: 2,
+            assign: vec![0, 0, 1, 1],
+        },
+        Frame::Ready { worker_id: 1 },
+        Frame::Step { t: 42, eta: 0.05 },
+        Frame::Act {
+            s: 1,
+            k_to: 1,
+            tau: 41,
+            // conv boundary activation: flat [B, C·H·W] with its labels
+            x: rand_tensor(&mut rng, &[4, 108]),
+            onehot: rand_tensor(&mut rng, &[4, 3]),
+        },
+        Frame::Grad { s: 0, k_to: 0, tau: 39, g: rand_tensor(&mut rng, &[4, 108]) },
+        Frame::GossipPost {
+            s: 1,
+            k: 0,
+            params: rand_pairs(&mut rng, &[([27, 3], 3), ([0, 0], 1)]),
+        },
+        Frame::GossipMixed {
+            s: 1,
+            k: 0,
+            params: rand_pairs(&mut rng, &[([27, 3], 3)]),
+        },
+        Frame::StepDone {
+            worker_id: 0,
+            losses: vec![(0, 1.25), (1, 0.75)],
+            corrections: vec![(0, 0, 0.125), (1, 1, 0.0)],
+        },
+        Frame::CkptReq,
+        Frame::CkptState {
+            agents: vec![sample_snap(&mut rng, 0, 0), sample_snap(&mut rng, 1, 1)],
+        },
+        Frame::Restore {
+            weights_only: false,
+            agents: vec![AgentRestore {
+                s: 0,
+                k: 1,
+                params: rand_pairs(&mut rng, &[([3, 2], 2)]),
+                state: Some(sample_snap(&mut rng, 0, 1)),
+            }],
+        },
+        Frame::Restore { weights_only: true, agents: Vec::new() },
+        Frame::RestoreDone { worker_id: 0 },
+        Frame::Shutdown,
+        Frame::Abort { msg: "lost the plot".into() },
+    ]
+}
+
+#[test]
+fn every_frame_type_roundtrips_exactly() {
+    for frame in sample_frames() {
+        let bytes = wire::encode(&frame);
+        let back = wire::decode(&bytes)
+            .unwrap_or_else(|e| panic!("{} failed to decode: {e}", frame.name()));
+        assert_eq!(back, frame, "{} round-trip", frame.name());
+    }
+}
+
+#[test]
+fn truncated_frames_error_and_never_panic() {
+    for frame in sample_frames() {
+        let bytes = wire::encode(&frame);
+        // every prefix of every frame must fail cleanly with Error::Net
+        for cut in 0..bytes.len() {
+            match wire::decode(&bytes[..cut]) {
+                Err(sgs::Error::Net(_)) => {}
+                Err(other) => panic!("{} cut at {cut}: wrong error {other}", frame.name()),
+                Ok(f) => panic!("{} cut at {cut}: decoded {}", frame.name(), f.name()),
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_version_and_unknown_tag_are_typed_errors() {
+    for frame in sample_frames() {
+        let mut bytes = wire::encode(&frame);
+        bytes[0] = bytes[0].wrapping_add(1);
+        let err = wire::decode(&bytes).unwrap_err();
+        assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+    let err = wire::decode(&[sgs::net::WIRE_VERSION, 0x7F]).unwrap_err();
+    assert!(err.to_string().contains("unknown frame tag"), "{err}");
+}
+
+#[test]
+fn corrupt_counts_error_instead_of_allocating() {
+    // a GossipPost whose pair-count field claims 2^27 entries
+    let mut bytes = wire::encode(&Frame::GossipPost { s: 0, k: 0, params: vec![] });
+    let n = bytes.len();
+    bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = wire::decode(&bytes).unwrap_err();
+    assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+}
+
+// ---- teardown semantics ----
+
+fn tiny_cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "net-teardown".into(),
+        s,
+        k,
+        topology: Topology::Ring,
+        alpha: None,
+        gossip_rounds: 1,
+        model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
+        batch: 8,
+        iters,
+        lr: LrSchedule::Const(0.2),
+        optimizer: sgs::trainer::OptimizerKind::Sgd,
+        compensate: sgs::compensate::CompensatorKind::None,
+        mode: sgs::staleness::PipelineMode::FullyDecoupled,
+        seed: 3,
+        dataset_n: 240,
+        delta_every: 0,
+        eval_every: 0,
+        compute_threads: 1,
+        placement: None,
+    }
+}
+
+#[test]
+fn worker_exits_with_net_error_when_coordinator_drops() {
+    // the satellite contract: a worker whose coordinator connection goes
+    // away must exit with a typed Error::Net, not hang on a blocking read
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker: JoinHandle<sgs::Result<()>> =
+        std::thread::spawn(move || sgs::net::worker::serve(listener));
+    let conn = TcpStream::connect(addr).unwrap();
+    drop(conn); // coordinator vanishes before even saying hello
+    let err = worker.join().unwrap().unwrap_err();
+    assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+}
+
+type KillableWorker = (Box<dyn Transport>, mpsc::Receiver<TcpStream>, JoinHandle<sgs::Result<()>>);
+
+/// A real TCP worker plus a clone of its connection the test can shoot.
+fn killable_worker() -> KillableWorker {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (htx, hrx) = mpsc::channel();
+    let handle = std::thread::spawn(move || -> sgs::Result<()> {
+        let (stream, _) = listener
+            .accept()
+            .map_err(|e| sgs::Error::Net(format!("accept: {e}")))?;
+        htx.send(stream.try_clone().expect("clone stream")).ok();
+        sgs::net::worker::run_worker(Box::new(TcpTransport::new(stream)?))
+    });
+    let t = TcpTransport::connect(addr).unwrap();
+    (Box::new(t), hrx, handle)
+}
+
+#[test]
+fn killed_worker_surfaces_as_err_from_step_and_peers_exit() {
+    let mut cfg = tiny_cfg(2, 2, 50);
+    // split every pipeline across both workers so traffic crosses the wire
+    cfg.placement = Some(Placement { workers: 2, assign: vec![0, 1, 0, 1] });
+
+    let (t0, _h0, w0) = killable_worker();
+    let (t1, h1, w1) = killable_worker();
+    let mut session = Session::builder(cfg)
+        .engine(EngineKind::Dist)
+        .dist_workers(vec![t0, t1])
+        .build()
+        .unwrap();
+    for _ in 0..3 {
+        session.step().unwrap();
+    }
+
+    // shoot worker 1: close its connection out from under it
+    let stream1 = h1.recv().unwrap();
+    stream1.shutdown(std::net::Shutdown::Both).unwrap();
+
+    // the coordinator must surface the loss as Err, not hang or panic
+    let mut saw_err = None;
+    for _ in 0..3 {
+        match session.step() {
+            Ok(_) => continue, // a step already in flight may still land
+            Err(e) => {
+                saw_err = Some(e);
+                break;
+            }
+        }
+    }
+    let err = saw_err.expect("coordinator kept stepping past a dead worker");
+    assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+    // and the failure is sticky, like the threaded engine's poisoned state
+    assert!(session.step().is_err());
+
+    drop(session); // tears down the surviving connection
+    let e1 = w1.join().unwrap().unwrap_err();
+    assert!(matches!(e1, sgs::Error::Net(_)), "{e1}");
+    let e0 = w0.join().unwrap().unwrap_err();
+    assert!(matches!(e0, sgs::Error::Net(_)), "{e0}");
+}

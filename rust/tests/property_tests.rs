@@ -232,6 +232,7 @@ fn prop_config_roundtrip() {
                 delta_every: r.below(20),
                 eval_every: r.below(20),
                 compute_threads: 0,
+                placement: None,
             }
         },
         |cfg| {
