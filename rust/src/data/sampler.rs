@@ -7,6 +7,7 @@
 
 use crate::data::shard::Shard;
 use crate::data::Dataset;
+use crate::steady_state;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -56,6 +57,10 @@ impl MiniBatchSampler {
     /// Draw the mini-batch for iteration t into the reusable pick buffer.
     /// Consumes RNG state — call exactly once per iteration, in iteration
     /// order.
+    ///
+    /// Marked `#[steady_state]`: `cargo run -p xtask -- lint` rejects any
+    /// allocating construct added to this body (rule `hot-alloc`).
+    #[steady_state]
     pub fn sample_into(&mut self) -> &[usize] {
         self.rng.sample_indices_into(
             self.shard.len(),
@@ -84,6 +89,7 @@ impl MiniBatchSampler {
 
     /// Draw and gather into caller-owned buffers — the engines' hot path;
     /// allocation-free once the buffers are sized.
+    #[steady_state]
     pub fn sample_batch_into(&mut self, ds: &Dataset, x: &mut Tensor, onehot: &mut Tensor) {
         self.sample_into();
         ds.gather_into(&self.picks, x, onehot);
@@ -100,7 +106,9 @@ mod tests {
     fn samples_stay_inside_shard() {
         let ds = SyntheticSpec::small(100, 6, 3, 0).generate();
         let shards = shard_even(&ds, 4, 5).unwrap();
-        let allowed: std::collections::HashSet<usize> =
+        // BTreeSet, not HashSet: even test-side containers stay
+        // order-stable so failure output is reproducible run to run
+        let allowed: std::collections::BTreeSet<usize> =
             shards[2].indices.iter().copied().collect();
         let mut sampler = MiniBatchSampler::new(shards[2].clone(), 8, 77);
         for _ in 0..20 {

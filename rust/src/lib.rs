@@ -43,3 +43,11 @@ pub mod trainer;
 pub mod util;
 
 pub use error::{Error, Result};
+
+/// Marker attribute for zero-allocation steady-state functions.
+///
+/// `#[sgs::steady_state]` expands to a no-op; it exists so the repo's
+/// static-analysis pass (`cargo run -p xtask -- lint`, rule `hot-alloc`)
+/// can forbid allocating constructors inside annotated bodies. See the
+/// README section "Invariants & static analysis".
+pub use sgs_macros::steady_state;

@@ -64,7 +64,7 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(120);
 /// coordinator/worker protocol, zero sockets.
 pub fn spawn_local_workers(
     n: usize,
-) -> (Vec<Box<dyn Transport>>, Vec<JoinHandle<Result<()>>>) {
+) -> Result<(Vec<Box<dyn Transport>>, Vec<JoinHandle<Result<()>>>)> {
     let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
     for i in 0..n {
@@ -72,12 +72,11 @@ pub fn spawn_local_workers(
         handles.push(
             std::thread::Builder::new()
                 .name(format!("sgs-worker-{i}"))
-                .spawn(move || crate::net::worker::run_worker(Box::new(worker_end)))
-                .expect("spawn worker thread"),
+                .spawn(move || crate::net::worker::run_worker(Box::new(worker_end)))?,
         );
         transports.push(Box::new(coord_end));
     }
-    (transports, handles)
+    Ok((transports, handles))
 }
 
 /// The coordinator: owns the experiment clock, the parameter mirror, and
@@ -233,8 +232,7 @@ impl DistEngine {
                                 return;
                             }
                         }
-                    })
-                    .expect("spawn reader thread"),
+                    })?,
             );
         }
 
@@ -428,10 +426,24 @@ impl DistEngine {
                     n_posts += 1;
                     if n_posts == s_groups * k_modules {
                         gossip_done = true;
-                        let full: Vec<Vec<Vec<(Tensor, Tensor)>>> = std::mem::take(&mut posts)
-                            .into_iter()
-                            .map(|row| row.into_iter().map(|p| p.expect("counted")).collect())
-                            .collect();
+                        let mut full: Vec<Vec<Vec<(Tensor, Tensor)>>> =
+                            Vec::with_capacity(k_modules);
+                        for row in std::mem::take(&mut posts) {
+                            let mut groups = Vec::with_capacity(row.len());
+                            for p in row {
+                                match p {
+                                    Some(params) => groups.push(params),
+                                    // unreachable given the duplicate-post
+                                    // check above, but typed, not a panic
+                                    None => {
+                                        return Err(self.fail(
+                                            "gossip post missing despite full count".to_string(),
+                                        ));
+                                    }
+                                }
+                            }
+                            full.push(groups);
+                        }
                         if let Err(e) = self.mix_and_reply(full) {
                             return Err(self.fail(format!("gossip reply failed: {e}")));
                         }
@@ -595,23 +607,24 @@ impl Engine for DistEngine {
     /// Full-resume snapshot gathered through the coordinator. If a worker
     /// is lost mid-gather the checkpoint degrades to weights-only (the
     /// mirror is always current) and the failure surfaces from the next
-    /// `step`.
-    fn checkpoint(&mut self) -> Checkpoint {
+    /// `step` — a degraded snapshot is still a valid checkpoint, so this
+    /// only returns `Err` if the trait contract ever needs it to.
+    fn checkpoint(&mut self) -> Result<Checkpoint> {
         let ck = Checkpoint::new(
             self.t_offset + self.t as usize,
             self.all_group_params(),
             self.layers.clone(),
         );
         if self.failed.is_some() {
-            return ck;
+            return Ok(ck);
         }
-        match self.collect_resume() {
+        Ok(match self.collect_resume() {
             Ok(rs) => ck.with_resume(rs),
             Err(e) => {
                 eprintln!("dist checkpoint degraded to weights-only: {e}");
                 ck
             }
-        }
+        })
     }
 
     fn restore(&mut self, ck: &Checkpoint) -> Result<()> {

@@ -26,6 +26,18 @@
 //! the coordinator with full resume state and stay portable across all
 //! three engines.
 //!
+//! # Robustness contract (enforced by `sgs-lint`)
+//!
+//! Everything in this module handles untrusted runtime input — bytes off
+//! a socket, frames from a peer that may die mid-write — so failures
+//! must surface as typed [`crate::error::Error`] values, never process
+//! aborts. `cargo run -p xtask -- lint` enforces this structurally:
+//! rules `rob-unwrap` and `rob-panic` forbid `unwrap`/`expect`/`panic!`
+//! anywhere under `net/`, and `rob-slice-index` forbids direct slice
+//! indexing in the decoders (`wire.rs`, `transport.rs`) — every byte
+//! access bounds-checks and reports truncation as `Error::Net`. See
+//! README "Invariants & static analysis".
+//!
 //! # Quickstart (local loopback)
 //!
 //! ```bash

@@ -186,7 +186,12 @@ impl TcpTransport {
             let mut chunk = [0u8; 16 * 1024];
             match self.stream.read(&mut chunk) {
                 Ok(0) => return Err(Error::Net("connection closed by peer".into())),
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Ok(n) => {
+                    let filled = chunk
+                        .get(..n)
+                        .ok_or_else(|| Error::Net(format!("impossible read length {n}")))?;
+                    self.buf.extend_from_slice(filled);
+                }
                 Err(e)
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut
@@ -204,18 +209,19 @@ impl TcpTransport {
     }
 
     /// Parse one `[len][payload]` frame from the front of `buf`, if whole.
+    /// Every access is bounds-checked: the buffer holds untrusted bytes.
     fn try_parse(&mut self) -> Result<Option<(Frame, usize)>> {
-        if self.buf.len() < 4 {
+        let Some(header) = self.buf.first_chunk::<4>() else {
             return Ok(None);
-        }
-        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        };
+        let len = u32::from_le_bytes(*header) as usize;
         if len > MAX_FRAME {
             return Err(Error::Net(format!("oversized frame ({len} bytes) from peer")));
         }
-        if self.buf.len() < 4 + len {
+        let Some(payload) = self.buf.get(4..4 + len) else {
             return Ok(None);
-        }
-        let frame = decode(&self.buf[4..4 + len])?;
+        };
+        let frame = decode(payload)?;
         self.buf.drain(..4 + len);
         Ok(Some((frame, len)))
     }
@@ -261,17 +267,24 @@ impl Transport for TcpTransport {
 mod tests {
     use super::*;
 
+    fn join<T>(handle: std::thread::JoinHandle<Result<T>>) -> Result<T> {
+        handle
+            .join()
+            .map_err(|_| Error::Net("test thread panicked".into()))?
+    }
+
     #[test]
-    fn local_pair_roundtrips_frames() {
+    fn local_pair_roundtrips_frames() -> Result<()> {
         let (mut a, mut b) = LocalTransport::pair();
         let f = Frame::Step { t: 3, eta: 0.5 };
-        let sent = a.send(&f).unwrap();
-        let (got, n) = b.recv().unwrap();
+        let sent = a.send(&f)?;
+        let (got, n) = b.recv()?;
         assert_eq!(got, f);
         assert_eq!(sent, n);
         // and the other direction
-        b.send(&Frame::Shutdown).unwrap();
-        assert_eq!(a.recv().unwrap().0, Frame::Shutdown);
+        b.send(&Frame::Shutdown)?;
+        assert_eq!(a.recv()?.0, Frame::Shutdown);
+        Ok(())
     }
 
     #[test]
@@ -283,40 +296,94 @@ mod tests {
     }
 
     #[test]
-    fn local_split_halves_work_and_reject_misuse() {
+    fn local_split_halves_work_and_reject_misuse() -> Result<()> {
         let (a, mut b) = LocalTransport::pair();
-        let (mut tx, mut rx) = Box::new(a).split().unwrap();
-        tx.send(&Frame::CkptReq).unwrap();
-        b.send(&Frame::Shutdown).unwrap();
-        assert_eq!(b.recv().unwrap().0, Frame::CkptReq);
-        assert_eq!(rx.recv().unwrap().0, Frame::Shutdown);
+        let (mut tx, mut rx) = Box::new(a).split()?;
+        tx.send(&Frame::CkptReq)?;
+        b.send(&Frame::Shutdown)?;
+        assert_eq!(b.recv()?.0, Frame::CkptReq);
+        assert_eq!(rx.recv()?.0, Frame::Shutdown);
         assert!(tx.recv().is_err());
         assert!(rx.send(&Frame::CkptReq).is_err());
+        Ok(())
     }
 
     #[test]
-    fn tcp_roundtrips_and_reports_peer_loss() {
-        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            let mut t = TcpTransport::new(stream).unwrap();
-            let (f, _) = t.recv().unwrap();
-            t.send(&f).unwrap(); // echo
+    fn tcp_roundtrips_and_reports_peer_loss() -> Result<()> {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let server = std::thread::spawn(move || -> Result<()> {
+            let (stream, _) = listener.accept()?;
+            let mut t = TcpTransport::new(stream)?;
+            let (f, _) = t.recv()?;
+            t.send(&f)?; // echo
             // drop: client's next recv must observe the close
+            Ok(())
         });
-        let mut c = TcpTransport::connect(addr).unwrap();
+        let mut c = TcpTransport::connect(addr)?;
         let f = Frame::Act {
             s: 0,
             k_to: 1,
             tau: 9,
-            x: crate::tensor::Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
-            onehot: crate::tensor::Tensor::from_vec(&[2, 1], vec![0.0, 1.0]).unwrap(),
+            x: crate::tensor::Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])?,
+            onehot: crate::tensor::Tensor::from_vec(&[2, 1], vec![0.0, 1.0])?,
         };
-        c.send(&f).unwrap();
-        assert_eq!(c.recv().unwrap().0, f);
-        server.join().unwrap();
+        c.send(&f)?;
+        assert_eq!(c.recv()?.0, f);
+        join(server)?;
         let err = c.recv().unwrap_err();
         assert!(matches!(err, Error::Net(_)), "{err}");
+        Ok(())
+    }
+
+    /// A peer that dies mid-frame (length prefix promised more payload than
+    /// was ever sent) must surface as `Err` on the reader, and continued
+    /// sends into the dead socket must surface as `Err` on the writer —
+    /// neither end may panic or hang.
+    #[test]
+    fn mid_frame_close_is_a_typed_error_on_both_ends() -> Result<()> {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let server = std::thread::spawn(move || -> Result<()> {
+            let (mut stream, _) = listener.accept()?;
+            // Promise a 64-byte payload, deliver 3 bytes, then vanish.
+            stream.write_all(&64u32.to_le_bytes())?;
+            stream.write_all(&[1, 2, 3])?;
+            stream.shutdown(std::net::Shutdown::Both).ok();
+            Ok(())
+        });
+        let mut c = TcpTransport::connect(addr)?;
+        let err = c.recv().unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        join(server)?;
+
+        // Writer side: sends into a peer that closed mid-conversation must
+        // eventually error (never panic). The OS may buffer a few sends
+        // before the RST surfaces, hence the bounded loop.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let closer = std::thread::spawn(move || -> Result<()> {
+            let (stream, _) = listener.accept()?;
+            drop(stream); // close immediately, mid-conversation
+            Ok(())
+        });
+        let mut c = TcpTransport::connect(addr)?;
+        join(closer)?;
+        let big = Frame::Act {
+            s: 0,
+            k_to: 1,
+            tau: 0,
+            x: crate::tensor::Tensor::from_vec(&[64, 64], vec![1.0; 64 * 64])?,
+            onehot: crate::tensor::Tensor::from_vec(&[64, 1], vec![0.0; 64])?,
+        };
+        let mut saw_err = false;
+        for _ in 0..64 {
+            if c.send(&big).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "send into a closed peer never errored");
+        Ok(())
     }
 }

@@ -389,31 +389,38 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            return Err(Error::Net(format!(
+        let end = self.pos.saturating_add(n);
+        let out = self.buf.get(self.pos..end).ok_or_else(|| {
+            Error::Net(format!(
                 "truncated frame: want {} bytes at offset {}, have {}",
                 n,
                 self.pos,
                 self.buf.len()
-            )));
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+            ))
+        })?;
+        self.pos = end;
         Ok(out)
     }
 
+    /// `take` into a fixed-size array: the checked length makes the
+    /// conversion infallible without any slice indexing.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let b = self.take(N)?;
+        b.try_into()
+            .map_err(|_| Error::Net(format!("short read: want {N} bytes")))
+    }
+
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.array::<1>()?;
+        Ok(b)
     }
 
     fn u32(&mut self) -> Result<u32> {
-        let b = self.take(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        Ok(u32::from_le_bytes(self.array::<4>()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        let b = self.take(8)?;
-        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(self.array::<8>()?))
     }
 
     fn i64(&mut self) -> Result<i64> {
@@ -421,8 +428,7 @@ impl<'a> Reader<'a> {
     }
 
     fn f32(&mut self) -> Result<f32> {
-        let b = self.take(4)?;
-        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        Ok(f32::from_le_bytes(self.array::<4>()?))
     }
 
     fn f64(&mut self) -> Result<f64> {

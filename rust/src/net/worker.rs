@@ -390,11 +390,11 @@ impl WorkerRuntime {
             let Some(tau) = sched.forward_batch(iter, k) else { continue };
             if k == 0 {
                 let a = &mut self.agents[i];
-                a.sampler.as_mut().expect("module 0 owns the sampler").sample_batch_into(
-                    &self.ds,
-                    &mut a.batch_x,
-                    &mut a.batch_oh,
-                );
+                let sampler = a
+                    .sampler
+                    .as_mut()
+                    .ok_or_else(|| Error::Schedule("module 0 missing its sampler".into()))?;
+                sampler.sample_batch_into(&self.ds, &mut a.batch_x, &mut a.batch_oh);
                 // move the batch buffers out for the duration of the call
                 // (forward borrows the agent mutably) — no copy, and the
                 // buffers keep their capacity across iterations
@@ -410,7 +410,7 @@ impl WorkerRuntime {
                 self.agents[i].agent.forward(&*self.backend, tau, &msg.x, &msg.onehot)?;
             }
             if k + 1 < k_modules {
-                let (bx, boh) = self.agents[i].agent.boundary_msg();
+                let (bx, boh) = self.agents[i].agent.boundary_msg()?;
                 let (x, onehot) = (bx.clone(), boh.clone());
                 if self.hosts(s, k + 1) {
                     self.pending_act.insert((s, k + 1, tau), ActMsg { x, onehot });
@@ -439,7 +439,7 @@ impl WorkerRuntime {
             };
             self.agents[i].agent.backward(&*self.backend, tau, g_in.as_ref())?;
             if k > 0 {
-                let g = self.agents[i].agent.upstream_grad().clone();
+                let g = self.agents[i].agent.upstream_grad()?.clone();
                 if self.hosts(s, k - 1) {
                     self.pending_grad.insert((s, k - 1, tau), g);
                 } else {
@@ -447,7 +447,7 @@ impl WorkerRuntime {
                 }
             }
             let scale = self.agents[i].grad_scale;
-            let norm = self.agents[i].agent.apply_update(eta, scale);
+            let norm = self.agents[i].agent.apply_update(eta, scale)?;
             corrections.push((s as u32, k as u32, norm));
         }
 

@@ -1,6 +1,20 @@
 //! The fully decoupled pipeline: per-module agents, the deterministic sim
 //! engine's group state, and the one-thread-per-agent engine. Both engines
 //! are driven through [`crate::session::Session`].
+//!
+//! # Invariants (enforced by `sgs-lint`)
+//!
+//! This module sits on both guarded paths of the repo's static-analysis
+//! pass (`cargo run -p xtask -- lint`, README "Invariants & static
+//! analysis"): the `det-*` rules keep it free of hash-ordered
+//! containers, wall clocks, and ambient RNG — engine equivalence is
+//! bitwise, so no iteration order may depend on allocator or hasher
+//! state — and the `rob-*` rules forbid `unwrap`/`panic!` so scheduling
+//! faults surface as [`crate::error::Error::Schedule`] instead of
+//! aborting agent threads. Steady-state kernels are annotated
+//! `#[sgs::steady_state]`, which arms the `hot-alloc` rule: the lint
+//! rejects any allocating construct added to those bodies, backing the
+//! alloc-guard tests (`tests/alloc_guard.rs`) at the AST level.
 
 pub mod module_agent;
 pub mod sim;

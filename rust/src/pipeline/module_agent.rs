@@ -14,6 +14,7 @@
 
 use crate::compensate::{Compensated, Compensator, CompensatorKind, CompensatorState};
 use crate::error::{Error, Result};
+use crate::steady_state;
 use crate::nn::{BwdScratch, FwdScratch};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Stash, StashQueue};
@@ -199,6 +200,10 @@ impl ModuleAgent {
     /// stashing activations + a weight snapshot for the later backward.
     /// The boundary activation stays readable via [`Self::boundary_msg`]
     /// until the next forward.
+    ///
+    /// Marked `#[steady_state]`: `cargo run -p xtask -- lint` rejects any
+    /// allocating construct added to this body (rule `hot-alloc`).
+    #[steady_state]
     pub fn forward(
         &mut self,
         backend: &dyn ComputeBackend,
@@ -218,6 +223,8 @@ impl ModuleAgent {
         }
         match stash.onehot.as_mut() {
             Some(t) => t.copy_resize(onehot),
+            // first-call sizing only: every recycled slot carries Some
+            // sgs-lint: allow(hot-alloc)
             None => stash.onehot = Some(onehot.clone()),
         }
         backend.module_fwd_into(self.lo, &stash.params, &mut stash.acts, &mut self.fwd_scratch)?;
@@ -226,13 +233,22 @@ impl ModuleAgent {
     }
 
     /// The boundary activation and labels of the most recently forwarded
-    /// batch (what gets sent downstream).
-    pub fn boundary_msg(&self) -> (&Tensor, &Tensor) {
-        let stash = self.stash.newest().expect("boundary_msg before forward");
-        (
-            stash.acts.last().unwrap(),
-            stash.onehot.as_ref().expect("stash carries labels"),
-        )
+    /// batch (what gets sent downstream). `Err(Schedule)` when no forward
+    /// has run yet — the same scheduling-bug class [`StashQueue`] reports.
+    pub fn boundary_msg(&self) -> Result<(&Tensor, &Tensor)> {
+        let stash = self
+            .stash
+            .newest()
+            .ok_or_else(|| Error::Schedule("boundary_msg before forward".into()))?;
+        let bx = stash
+            .acts
+            .last()
+            .ok_or_else(|| Error::Schedule("stash has no activations".into()))?;
+        let boh = stash
+            .onehot
+            .as_ref()
+            .ok_or_else(|| Error::Schedule("stash missing labels".into()))?;
+        Ok((bx, boh))
     }
 
     /// For the LAST module: mean loss of stashed batch `tau` (its forward
@@ -243,7 +259,10 @@ impl ModuleAgent {
             .stash
             .get(tau)
             .ok_or_else(|| Error::other(format!("no stash for batch {tau}")))?;
-        let logits = stash.acts.last().unwrap();
+        let logits = stash
+            .acts
+            .last()
+            .ok_or_else(|| Error::Schedule("stash has no activations".into()))?;
         let onehot = stash
             .onehot
             .as_ref()
@@ -278,6 +297,10 @@ impl ModuleAgent {
     /// [`Self::loss_of`] this iteration" (the last module). Afterwards the
     /// upstream gradient is readable via [`Self::upstream_grad`] and the
     /// parameter gradients via [`Self::last_grads`].
+    ///
+    /// Marked `#[steady_state]`: the lint keeps this body allocation-free
+    /// (all scratch lives in the workspace sized by `ensure_ws`).
+    #[steady_state]
     pub fn backward(
         &mut self,
         backend: &dyn ComputeBackend,
@@ -287,7 +310,10 @@ impl ModuleAgent {
         let stash = self.stash.pop(tau)?;
         self.ensure_ws(&stash);
         let n = self.params.len();
-        let ws = self.ws.as_mut().expect("workspace just ensured");
+        let ws = self
+            .ws
+            .as_mut()
+            .ok_or_else(|| Error::Schedule("workspace missing after ensure_ws".into()))?;
         let Workspace { g_x, grads, scratch } = ws;
         for off in (0..n).rev() {
             let (gx_head, gx_tail) = g_x.split_at_mut(off + 1);
@@ -323,13 +349,23 @@ impl ModuleAgent {
 
     /// The gradient to send upstream (w.r.t. this module's input), valid
     /// after [`Self::backward`] until the next backward.
-    pub fn upstream_grad(&self) -> &Tensor {
-        &self.ws.as_ref().expect("upstream_grad before backward").g_x[0]
+    pub fn upstream_grad(&self) -> Result<&Tensor> {
+        let ws = self
+            .ws
+            .as_ref()
+            .ok_or_else(|| Error::Schedule("upstream_grad before backward".into()))?;
+        ws.g_x
+            .first()
+            .ok_or_else(|| Error::Schedule("workspace has no input gradient".into()))
     }
 
     /// The workspace parameter gradients of the last [`Self::backward`].
-    pub fn last_grads(&self) -> &[(Tensor, Tensor)] {
-        &self.ws.as_ref().expect("last_grads before backward").grads
+    pub fn last_grads(&self) -> Result<&[(Tensor, Tensor)]> {
+        let ws = self
+            .ws
+            .as_ref()
+            .ok_or_else(|| Error::Schedule("last_grads before backward".into()))?;
+        Ok(&ws.grads)
     }
 
     /// Apply the stale-gradient update (eq. (13a), generalized to the
@@ -339,13 +375,19 @@ impl ModuleAgent {
     /// preceding [`Self::backward`] and recycles its stash. Returns the
     /// correction norm ‖g_eff − g_raw‖₂ (0 for the raw baseline or a held
     /// update).
-    pub fn apply_update(&mut self, eta: f64, scale: f64) -> f64 {
+    ///
+    /// Marked `#[steady_state]`: the lint keeps this body allocation-free.
+    #[steady_state]
+    pub fn apply_update(&mut self, eta: f64, scale: f64) -> Result<f64> {
         let pending = self.pending.take();
         // every engine path runs backward (which parks the snapshot stash)
         // immediately before apply_update; a missing snapshot is the same
         // scheduling-bug class StashQueue reports as Error::Schedule
         debug_assert!(pending.is_some(), "apply_update without a preceding backward");
-        let ws = self.ws.as_mut().expect("apply_update before any backward");
+        let ws = self
+            .ws
+            .as_mut()
+            .ok_or_else(|| Error::Schedule("apply_update before any backward".into()))?;
         let snap: &[(Tensor, Tensor)] = match &pending {
             Some(s) => &s.params,
             // release fallback: correct against current weights (zero drift)
@@ -361,7 +403,7 @@ impl ModuleAgent {
         if let Some(s) = pending {
             self.free.push(s);
         }
-        norm
+        Ok(norm)
     }
 }
 
@@ -392,7 +434,7 @@ mod tests {
     fn forward_stashes_and_emits_boundary() {
         let (backend, mut agent, msg) = setup();
         agent.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
-        let (bx, boh) = agent.boundary_msg();
+        let (bx, boh) = agent.boundary_msg().unwrap();
         assert_eq!(bx.shape(), &[4, 5]);
         assert_eq!(boh.shape(), &[4, 3]);
         assert_eq!(agent.inflight(), 1);
@@ -415,8 +457,8 @@ mod tests {
         let g_out = Tensor::from_vec(&[4, 5], vec![0.1; 20]).unwrap();
         agent.backward(&backend, 0, Some(&g_out)).unwrap();
         agent2.backward(&backend, 0, Some(&g_out)).unwrap();
-        assert_eq!(agent.upstream_grad(), agent2.upstream_grad());
-        assert_eq!(agent.last_grads(), agent2.last_grads());
+        assert_eq!(agent.upstream_grad().unwrap(), agent2.upstream_grad().unwrap());
+        assert_eq!(agent.last_grads().unwrap(), agent2.last_grads().unwrap());
         assert_eq!(agent.inflight(), 0);
     }
 
@@ -427,8 +469,8 @@ mod tests {
         agent.forward(&backend, 0, &msg.x, &msg.onehot).unwrap();
         let g_out = Tensor::from_vec(&[4, 5], vec![1.0; 20]).unwrap();
         agent.backward(&backend, 0, Some(&g_out)).unwrap();
-        let grads = agent.last_grads().to_vec();
-        agent.apply_update(0.1, 0.5);
+        let grads = agent.last_grads().unwrap().to_vec();
+        agent.apply_update(0.1, 0.5).unwrap();
         for ((w_new, _), ((w_old, _), (g_w, _))) in
             agent.params.iter().zip(before.iter().zip(&grads))
         {
@@ -447,7 +489,7 @@ mod tests {
         for tau in 0..6i64 {
             agent.forward(&backend, tau, &msg.x, &msg.onehot).unwrap();
             agent.backward(&backend, tau, Some(&g_out)).unwrap();
-            agent.apply_update(0.05, 1.0);
+            agent.apply_update(0.05, 1.0).unwrap();
         }
         assert_eq!(agent.inflight(), 0);
         assert_eq!(agent.free.len(), 1, "one slot cycling, none leaked");
@@ -473,6 +515,6 @@ mod tests {
         assert_eq!(agent.loss_g.shape(), &[4, 3]);
         // backward with None consumes the loss-head gradient
         agent.backward(&backend, 0, None).unwrap();
-        assert_eq!(agent.upstream_grad().shape(), &[4, 6]);
+        assert_eq!(agent.upstream_grad().unwrap().shape(), &[4, 6]);
     }
 }

@@ -13,7 +13,7 @@
 //! and gradient workspace are recycled by the agent itself.
 
 use crate::data::{Dataset, MiniBatchSampler};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Mailbox, PipelineMode, Schedule};
@@ -133,11 +133,13 @@ impl PipelineGroup {
                         .sample_batch_into(ds, &mut self.src.x, &mut self.src.onehot);
                     None
                 } else if direct {
-                    Some(carry.take().expect("locked forward chain broken"))
+                    Some(carry.take().ok_or_else(|| {
+                        Error::Schedule("locked forward chain broken".into())
+                    })?)
                 } else {
-                    Some(self.act_mail[k].take(tau).unwrap_or_else(|| {
-                        panic!("missing act for batch {tau} at module {k}")
-                    }))
+                    Some(self.act_mail[k].take(tau).ok_or_else(|| {
+                        Error::Schedule(format!("missing act for batch {tau} at module {k}"))
+                    })?)
                 };
                 match &consumed {
                     Some(m) => self.modules[k].forward(backend, tau, &m.x, &m.onehot)?,
@@ -150,7 +152,7 @@ impl PipelineGroup {
                 }
                 if k + 1 < k_modules {
                     let mut buf = self.act_pool[k + 1].pop().unwrap_or_else(ActMsg::empty);
-                    let (bx, boh) = self.modules[k].boundary_msg();
+                    let (bx, boh) = self.modules[k].boundary_msg()?;
                     buf.x.copy_resize(bx);
                     buf.onehot.copy_resize(boh);
                     if direct {
@@ -171,9 +173,9 @@ impl PipelineGroup {
                     out.loss_batch = Some(tau);
                     None
                 } else {
-                    Some(self.grad_mail[k].take(tau).unwrap_or_else(|| {
-                        panic!("missing grad for batch {tau} at module {k}")
-                    }))
+                    Some(self.grad_mail[k].take(tau).ok_or_else(|| {
+                        Error::Schedule(format!("missing grad for batch {tau} at module {k}"))
+                    })?)
                 };
                 self.modules[k].backward(backend, tau, consumed.as_ref())?;
                 if let Some(g) = consumed {
@@ -181,10 +183,10 @@ impl PipelineGroup {
                 }
                 if k > 0 {
                     let mut buf = self.grad_pool[k - 1].pop().unwrap_or_else(Tensor::empty);
-                    buf.copy_resize(self.modules[k].upstream_grad());
+                    buf.copy_resize(self.modules[k].upstream_grad()?);
                     self.grad_mail[k - 1].post(tau, buf);
                 }
-                self.last_correction[k] = self.modules[k].apply_update(eta, self.grad_scale);
+                self.last_correction[k] = self.modules[k].apply_update(eta, self.grad_scale)?;
             } // eq. (10): zero gradient before warm-up
         }
 

@@ -269,7 +269,7 @@ impl ThreadedEngine {
     /// mpsc buffers between iterations, so each is drained and immediately
     /// sent back (FIFO order preserved; at an iteration boundary every
     /// channel holds at most one message — schedule transit consistency).
-    fn resume_state(&mut self) -> ResumeState {
+    fn resume_state(&mut self) -> Result<ResumeState> {
         let t = self.t;
         let k_modules = self.cfg.k;
         let fd = self.sched.mode() == PipelineMode::FullyDecoupled;
@@ -279,7 +279,7 @@ impl ThreadedEngine {
             let sampler_rng = self.agents[base]
                 .sampler
                 .as_ref()
-                .expect("module 0 owns the sampler")
+                .ok_or_else(|| Error::Schedule("module 0 missing its sampler".into()))?
                 .rng_state();
             let mut modules = Vec::with_capacity(k_modules);
             for k in 0..k_modules {
@@ -288,37 +288,49 @@ impl ThreadedEngine {
                     .act_rx
                     .as_ref()
                     .and_then(|rx| rx.try_recv().ok());
-                let act_in = pending_act.map(|msg| {
-                    assert!(fd, "pending act in forward-locked mode");
-                    let id = self
-                        .sched
-                        .forward_batch(t, k)
-                        .expect("pending act without a scheduled consumer");
-                    self.agents[idx - 1]
-                        .act_tx
-                        .as_ref()
-                        .expect("act sender exists for a wired edge")
-                        .send(msg.clone())
-                        .expect("re-buffer act");
-                    (id, msg)
-                });
+                let act_in = match pending_act {
+                    None => None,
+                    Some(msg) => {
+                        if !fd {
+                            return Err(Error::Schedule(
+                                "pending act in forward-locked mode".into(),
+                            ));
+                        }
+                        let id = self.sched.forward_batch(t, k).ok_or_else(|| {
+                            Error::Schedule("pending act without a scheduled consumer".into())
+                        })?;
+                        self.agents[idx - 1]
+                            .act_tx
+                            .as_ref()
+                            .ok_or_else(|| {
+                                Error::Schedule("act sender missing for a wired edge".into())
+                            })?
+                            .send(msg.clone())
+                            .map_err(|_| Error::Schedule("could not re-buffer act".into()))?;
+                        Some((id, msg))
+                    }
+                };
                 let pending_grad = self.agents[idx]
                     .grad_rx
                     .as_ref()
                     .and_then(|rx| rx.try_recv().ok());
-                let grad_in = pending_grad.map(|g| {
-                    let id = self
-                        .sched
-                        .backward_batch(t, k)
-                        .expect("pending grad without a scheduled consumer");
-                    self.agents[idx + 1]
-                        .grad_tx
-                        .as_ref()
-                        .expect("grad sender exists for a wired edge")
-                        .send(g.clone())
-                        .expect("re-buffer grad");
-                    (id, g)
-                });
+                let grad_in = match pending_grad {
+                    None => None,
+                    Some(g) => {
+                        let id = self.sched.backward_batch(t, k).ok_or_else(|| {
+                            Error::Schedule("pending grad without a scheduled consumer".into())
+                        })?;
+                        self.agents[idx + 1]
+                            .grad_tx
+                            .as_ref()
+                            .ok_or_else(|| {
+                                Error::Schedule("grad sender missing for a wired edge".into())
+                            })?
+                            .send(g.clone())
+                            .map_err(|_| Error::Schedule("could not re-buffer grad".into()))?;
+                        Some((id, g))
+                    }
+                };
                 let slot = &self.agents[idx];
                 modules.push(ModuleResume {
                     velocity: slot.agent.opt_velocity(),
@@ -333,11 +345,11 @@ impl ThreadedEngine {
                 modules,
             });
         }
-        ResumeState {
+        Ok(ResumeState {
             t,
             t_offset: self.t_offset,
             groups,
-        }
+        })
     }
 }
 
@@ -388,24 +400,31 @@ impl Engine for ThreadedEngine {
                     let work = (|| -> Result<()> {
                         if let Some(tau) = sched.forward_batch(t, k) {
                             if k == 0 {
-                                slot.sampler.as_mut().unwrap().sample_batch_into(
-                                    ds,
-                                    &mut slot.batch_x,
-                                    &mut slot.batch_oh,
-                                );
+                                slot.sampler
+                                    .as_mut()
+                                    .ok_or_else(|| {
+                                        Error::Schedule("module 0 missing its sampler".into())
+                                    })?
+                                    .sample_batch_into(
+                                        ds,
+                                        &mut slot.batch_x,
+                                        &mut slot.batch_oh,
+                                    );
                                 slot.agent
                                     .forward(backend, tau, &slot.batch_x, &slot.batch_oh)?;
                             } else {
                                 let msg = slot
                                     .act_rx
                                     .as_ref()
-                                    .unwrap()
+                                    .ok_or_else(|| {
+                                        Error::Schedule("act receiver missing for k>0".into())
+                                    })?
                                     .recv()
                                     .map_err(|_| Error::other("act channel closed"))?;
                                 slot.agent.forward(backend, tau, &msg.x, &msg.onehot)?;
                             }
                             if let Some(tx) = &slot.act_tx {
-                                let (bx, boh) = slot.agent.boundary_msg();
+                                let (bx, boh) = slot.agent.boundary_msg()?;
                                 tx.send(ActMsg {
                                     x: bx.clone(),
                                     onehot: boh.clone(),
@@ -422,17 +441,21 @@ impl Engine for ThreadedEngine {
                                 Some(
                                     slot.grad_rx
                                         .as_ref()
-                                        .unwrap()
+                                        .ok_or_else(|| {
+                                            Error::Schedule(
+                                                "grad receiver missing for k<K-1".into(),
+                                            )
+                                        })?
                                         .recv()
                                         .map_err(|_| Error::other("grad channel closed"))?,
                                 )
                             };
                             slot.agent.backward(backend, tau, g_in.as_ref())?;
                             if let Some(tx) = &slot.grad_tx {
-                                tx.send(slot.agent.upstream_grad().clone())
+                                tx.send(slot.agent.upstream_grad()?.clone())
                                     .map_err(|_| Error::other("grad send failed"))?;
                             }
-                            let norm = slot.agent.apply_update(eta, slot.grad_scale);
+                            let norm = slot.agent.apply_update(eta, slot.grad_scale)?;
                             let _ = corr_tx.send((s, k, norm));
                         }
                         Ok(())
@@ -452,8 +475,14 @@ impl Engine for ThreadedEngine {
                             {
                                 // post û into the preallocated slot (copy,
                                 // not clone — runs on the error path too so
-                                // peers mix against current weights)
-                                let mut posted = gossip_slots[k][s].lock().unwrap();
+                                // peers mix against current weights). A
+                                // poisoned lock is recovered, not unwrapped:
+                                // this section must keep pacing the barriers
+                                // even when a peer failed, or everyone hangs.
+                                let mut posted = match gossip_slots[k][s].lock() {
+                                    Ok(guard) => guard,
+                                    Err(poisoned) => poisoned.into_inner(),
+                                };
                                 for (dst, src) in posted.iter_mut().zip(&slot.agent.params) {
                                     dst.0.copy_from(&src.0);
                                     dst.1.copy_from(&src.1);
@@ -470,7 +499,10 @@ impl Engine for ThreadedEngine {
                                     mb.fill_zero();
                                 }
                                 for &(r, wgt) in p_row {
-                                    let guard = gossip_slots[k][r].lock().unwrap();
+                                    let guard = match gossip_slots[k][r].lock() {
+                                        Ok(guard) => guard,
+                                        Err(poisoned) => poisoned.into_inner(),
+                                    };
                                     for (acc, (uw, ub)) in
                                         slot.mix_buf.iter_mut().zip(guard.iter())
                                     {
@@ -491,7 +523,10 @@ impl Engine for ThreadedEngine {
             }
             handles
                 .into_iter()
-                .map(|h| h.join().expect("agent thread panicked"))
+                .map(|h| match h.join() {
+                    Ok(res) => res,
+                    Err(_) => Err(Error::Schedule("agent thread panicked".into())),
+                })
                 .collect()
         });
         result?;
@@ -553,15 +588,15 @@ impl Engine for ThreadedEngine {
         self.t_offset + self.t as usize
     }
 
-    fn checkpoint(&mut self) -> Checkpoint {
+    fn checkpoint(&mut self) -> Result<Checkpoint> {
         let groups = self.all_group_params();
-        let resume = self.resume_state();
-        Checkpoint::new(
+        let resume = self.resume_state()?;
+        Ok(Checkpoint::new(
             self.t_offset + self.t as usize,
             groups,
             self.layers.clone(),
         )
-        .with_resume(resume)
+        .with_resume(resume))
     }
 
     fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
@@ -617,7 +652,7 @@ impl Engine for ThreadedEngine {
                     self.agents[base]
                         .sampler
                         .as_mut()
-                        .expect("module 0 owns the sampler")
+                        .ok_or_else(|| Error::Schedule("module 0 missing its sampler".into()))?
                         .set_rng_state(gr.sampler_rng);
                     for (k, mr) in gr.modules.iter().enumerate() {
                         let slot = &mut self.agents[base + k];
@@ -631,7 +666,9 @@ impl Engine for ThreadedEngine {
                             self.agents[base + k - 1]
                                 .act_tx
                                 .as_ref()
-                                .expect("act sender exists for a wired edge")
+                                .ok_or_else(|| {
+                                    Error::Schedule("act sender missing for a wired edge".into())
+                                })?
                                 .send(msg.clone())
                                 .map_err(|_| Error::other("act re-buffer failed"))?;
                         }
@@ -639,7 +676,9 @@ impl Engine for ThreadedEngine {
                             self.agents[base + k + 1]
                                 .grad_tx
                                 .as_ref()
-                                .expect("grad sender exists for a wired edge")
+                                .ok_or_else(|| {
+                                    Error::Schedule("grad sender missing for a wired edge".into())
+                                })?
                                 .send(g.clone())
                                 .map_err(|_| Error::other("grad re-buffer failed"))?;
                         }
@@ -657,7 +696,7 @@ impl Engine for ThreadedEngine {
                     let shard = slot
                         .sampler
                         .as_ref()
-                        .expect("module 0 owns the sampler")
+                        .ok_or_else(|| Error::Schedule("module 0 missing its sampler".into()))?
                         .shard()
                         .clone();
                     slot.sampler = Some(MiniBatchSampler::new(shard, batch, seed));
@@ -782,7 +821,7 @@ mod tests {
         for _ in 0..9 {
             part.step().unwrap();
         }
-        let ck = part.checkpoint();
+        let ck = part.checkpoint().unwrap();
         assert!(ck.resume.is_some());
         assert_eq!(ck.iteration, 9);
 
@@ -806,7 +845,7 @@ mod tests {
     fn threaded_weights_only_restore_refills() {
         let c = cfg(2, 2, 16);
         let (_, mut eng) = drive_threaded(&c);
-        let mut ck = eng.checkpoint();
+        let mut ck = eng.checkpoint().unwrap();
         ck.resume = None; // simulate a disk round-trip
         eng.restore(&ck).unwrap();
         assert_eq!(eng.iterations_done(), 16);

@@ -68,8 +68,10 @@ pub trait Engine {
 
     /// Snapshot weights + iteration, with the exact-resume payload attached
     /// (`&mut` because the threaded engine drains and refills its channel
-    /// buffers to read the in-flight messages).
-    fn checkpoint(&mut self) -> Checkpoint;
+    /// buffers to read the in-flight messages). Fallible: an engine whose
+    /// transient state is inconsistent (e.g. a torn-down channel) reports
+    /// `Err` instead of panicking mid-snapshot.
+    fn checkpoint(&mut self) -> Result<Checkpoint>;
 
     /// Restore a checkpoint. With a resume payload the continuation is
     /// bit-identical to the uninterrupted run; weights-only checkpoints

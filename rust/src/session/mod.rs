@@ -32,7 +32,7 @@
 //!     })?;
 //!
 //!     // mid-run observation, checkpoint/restore, and summary also work:
-//!     let ck = session.checkpoint(); // exact in-memory snapshot
+//!     let ck = session.checkpoint()?; // exact in-memory snapshot
 //!     let out = session.finish();    // RunOutput: recorder, γ, δ(T), ...
 //!     println!("final δ = {:.3e}, γ = {:.4}", out.final_delta, out.gamma);
 //!     drop(ck);
@@ -262,12 +262,14 @@ impl SessionBuilder {
                 Box::new(ThreadedEngine::new(cfg.clone(), backend.clone(), ds.clone())?)
             }
             EngineKind::Dist => {
-                let placement = cfg.placement.as_ref().expect("checked above");
+                let placement = cfg.placement.as_ref().ok_or_else(|| {
+                    Error::Config("dist engine requires cfg.placement".into())
+                })?;
                 let (transports, handles) = match self.dist_workers {
                     Some(t) => (t, Vec::new()),
                     // no external workers: self-host them in-process over
                     // the Local transport (full protocol, zero sockets)
-                    None => crate::net::spawn_local_workers(placement.workers),
+                    None => crate::net::spawn_local_workers(placement.workers)?,
                 };
                 Box::new(DistEngine::connect(
                     cfg.clone(),
@@ -371,7 +373,7 @@ impl Session {
 
     /// Exact in-memory snapshot (weights + full transient state). `save` on
     /// the returned checkpoint persists the portable weights-only core.
-    pub fn checkpoint(&mut self) -> Checkpoint {
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
         self.engine.checkpoint()
     }
 

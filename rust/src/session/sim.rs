@@ -65,8 +65,8 @@ impl Engine for SimEngine {
         self.tr.iterations_done()
     }
 
-    fn checkpoint(&mut self) -> Checkpoint {
-        self.tr.checkpoint()
+    fn checkpoint(&mut self) -> Result<Checkpoint> {
+        Ok(self.tr.checkpoint())
     }
 
     fn restore(&mut self, ck: &Checkpoint) -> Result<()> {

@@ -10,7 +10,7 @@
 //!   posted at iteration t become visible at t+1, mirroring Algorithm 1's
 //!   send/receive pairing.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
@@ -108,17 +108,23 @@ impl StashQueue {
 ///
 /// `post` during iteration t; `flip` at the iteration boundary; `take`
 /// during iteration t+1.
+///
+/// Keyed by a `BTreeMap`, not a hash map: every walk over pending
+/// messages (snapshots, debug dumps) observes batch-id order regardless
+/// of allocator or hasher state, which keeps the engines' checkpoint
+/// bytes and event streams bitwise reproducible (lint rule
+/// `det-hash-container`).
 #[derive(Debug)]
 pub struct Mailbox<T> {
-    staged: HashMap<i64, T>,
-    visible: HashMap<i64, T>,
+    staged: BTreeMap<i64, T>,
+    visible: BTreeMap<i64, T>,
 }
 
 impl<T> Default for Mailbox<T> {
     fn default() -> Self {
         Mailbox {
-            staged: HashMap::new(),
-            visible: HashMap::new(),
+            staged: BTreeMap::new(),
+            visible: BTreeMap::new(),
         }
     }
 }
@@ -161,19 +167,13 @@ impl<T> Mailbox<T> {
     }
 
     /// Clone the messages already visible to the next iteration, in batch-id
-    /// order (full-state checkpoints; at an iteration boundary `staged` is
-    /// always empty because `flip` just ran).
+    /// order — free with the ordered map (full-state checkpoints; at an
+    /// iteration boundary `staged` is always empty because `flip` just ran).
     pub fn visible_snapshot(&self) -> Vec<(i64, T)>
     where
         T: Clone,
     {
-        let mut v: Vec<(i64, T)> = self
-            .visible
-            .iter()
-            .map(|(id, msg)| (*id, msg.clone()))
-            .collect();
-        v.sort_by_key(|(id, _)| *id);
-        v
+        self.visible.iter().map(|(id, msg)| (*id, msg.clone())).collect()
     }
 
     /// Re-inject a message directly into the visible set (checkpoint

@@ -18,7 +18,7 @@ use std::sync::Arc;
 use crate::config::ExperimentConfig;
 use crate::consensus::{consensus_error, GossipMixer};
 use crate::data::{shard_even, Dataset, MiniBatchSampler};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
 use crate::linalg::Mat;
 use crate::metrics::{Record, Recorder};
@@ -182,7 +182,12 @@ impl Trainer {
                 }));
             }
             for h in handles {
-                h.join().expect("group thread panicked")?;
+                match h.join() {
+                    Ok(res) => res?,
+                    Err(_) => {
+                        return Err(Error::Schedule("group thread panicked".into()));
+                    }
+                }
             }
             Ok(())
         })

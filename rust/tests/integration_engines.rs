@@ -237,7 +237,7 @@ fn dist_checkpoint_restores_bit_identically_through_the_coordinator() {
     for _ in 0..7 {
         part.step().unwrap();
     }
-    let ck = part.checkpoint();
+    let ck = part.checkpoint().unwrap();
     assert!(ck.resume.is_some(), "dist checkpoints carry resume state");
     assert_eq!(ck.iteration, 7);
     drop(part);
@@ -276,7 +276,7 @@ fn dist_weights_only_restore_refills_like_the_other_engines() {
     for _ in 0..6 {
         part.step().unwrap();
     }
-    let mut ck = part.checkpoint();
+    let mut ck = part.checkpoint().unwrap();
     ck.resume = None; // simulate a disk round-trip
     part.restore(&ck).unwrap();
     assert_eq!(part.iterations_done(), 6);
@@ -289,7 +289,7 @@ fn dist_weights_only_restore_refills_like_the_other_engines() {
     for _ in 0..6 {
         thr.step().unwrap();
     }
-    let mut tck = thr.checkpoint();
+    let mut tck = thr.checkpoint().unwrap();
     tck.resume = None;
     thr.restore(&tck).unwrap();
     let first = thr.step().unwrap();
@@ -373,7 +373,7 @@ fn compensated_runs_resume_bit_identically() {
             for _ in 0..9 {
                 part.step().unwrap();
             }
-            let ck = part.checkpoint();
+            let ck = part.checkpoint().unwrap();
             let mut resumed = session(&c, kind);
             resumed.restore(&ck).unwrap();
             let (tail_events, resumed) = collect_events(resumed);
@@ -399,7 +399,7 @@ fn resume_equivalence_on_both_engines() {
         for _ in 0..9 {
             part.step().unwrap();
         }
-        let ck = part.checkpoint();
+        let ck = part.checkpoint().unwrap();
         assert!(ck.resume.is_some(), "engine checkpoints carry resume state");
         assert_eq!(ck.iteration, 9);
 
@@ -430,7 +430,7 @@ fn snapshots_are_portable_across_engines() {
         for _ in 0..7 {
             part.step().unwrap();
         }
-        let ck = part.checkpoint();
+        let ck = part.checkpoint().unwrap();
 
         let mut resumed = session(&c, dst);
         resumed.restore(&ck).unwrap();
@@ -452,7 +452,7 @@ fn weights_only_restore_refills_on_both_engines() {
         for _ in 0..6 {
             part.step().unwrap();
         }
-        let mut ck = part.checkpoint();
+        let mut ck = part.checkpoint().unwrap();
         ck.resume = None; // simulate a disk round-trip
         let mut resumed = session(&c, kind);
         resumed.restore(&ck).unwrap();
@@ -467,4 +467,44 @@ fn weights_only_restore_refills_on_both_engines() {
         assert_events_eq(a, b);
     }
     assert_params_eq(&outs[0].1, &outs[1].1);
+}
+
+#[test]
+fn event_stream_is_identical_under_perturbed_allocator_state() {
+    // Determinism must not depend on where the allocator happens to place
+    // things or on any hasher seed (lint rule det-hash-container exists so
+    // no iteration order can leak into the math). Run the same config
+    // twice, with the heap deliberately churned between and during runs,
+    // and require bitwise-identical IterEvent streams and final weights.
+    let c = cfg(2, 2, 14);
+
+    let (events_a, sess_a) = collect_events(session(&c, EngineKind::Sim));
+    let params_a = sess_a.final_params();
+    drop(sess_a);
+
+    // churn the allocator: many odd-sized, interleaved live allocations
+    // shift every later placement the first run never saw
+    let mut churn: Vec<Vec<u8>> = Vec::new();
+    for i in 0..512 {
+        churn.push(vec![i as u8; 17 + (i * 131) % 4093]);
+    }
+    churn.retain(|v| v.len() % 3 != 0);
+
+    let (events_b, sess_b) = collect_events(session(&c, EngineKind::Sim));
+    let params_b = sess_b.final_params();
+    drop(churn);
+
+    assert_eq!(events_a.len(), events_b.len());
+    for (a, b) in events_a.iter().zip(&events_b) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&params_a, &params_b);
+
+    // the threaded engine sees a different heap again (two sessions' worth
+    // of churn) and must still produce the same stream as itself
+    let (events_c, _) = collect_events(session(&c, EngineKind::Threaded));
+    let (events_d, _) = collect_events(session(&c, EngineKind::Threaded));
+    for (a, b) in events_c.iter().zip(&events_d) {
+        assert_events_eq(a, b);
+    }
 }

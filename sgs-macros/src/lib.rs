@@ -1,0 +1,34 @@
+//! Marker attributes for the sgs invariant linter.
+//!
+//! These attributes expand to exactly the item they annotate — they exist
+//! so `cargo run -p xtask -- lint` (the repo's custom static-analysis
+//! pass) can key rules on them without any runtime cost or external
+//! dependency. The crate deliberately uses only the compiler-provided
+//! `proc_macro` API: the shipped `sgs` library stays free of third-party
+//! dependencies.
+
+use proc_macro::TokenStream;
+
+/// Marks a function as part of the zero-allocation steady-state hot path.
+///
+/// No-op at runtime. The `sgs-lint` pass (`cargo run -p xtask -- lint`)
+/// forbids allocating constructors — `Vec::new`, `vec![…]`, `.to_vec()`,
+/// `.clone()`, `format!`, `.collect()`, `Box::new`, … — inside annotated
+/// bodies (rule `hot-alloc`), and `rust/tests/alloc_guard.rs` enforces
+/// the same property dynamically with a counting global allocator.
+///
+/// Annotate via the re-export so the marker reads as a crate invariant:
+///
+/// ```ignore
+/// use sgs_macros::steady_state;
+///
+/// #[steady_state]
+/// pub fn sample_into(&mut self) -> &[usize] { /* no allocation */ }
+/// ```
+///
+/// First-call sizing paths inside an annotated body (buffers grown once,
+/// then reused) carry an explicit `// sgs-lint: allow(hot-alloc)` line.
+#[proc_macro_attribute]
+pub fn steady_state(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}

@@ -1,0 +1,149 @@
+//! `bench-summary`: fold `bench_out/*.csv` smoke results into the
+//! `BENCH_<n>.json` perf-trajectory format and (report-only) diff the
+//! hot-path timings against a committed baseline.
+
+use std::fs;
+use std::path::Path;
+
+use crate::json::{parse, Json};
+
+/// A parsed CSV: header row plus data rows, all fields as strings.
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+/// Read the two smoke CSVs from `bench_dir`, write/print the JSON
+/// summary, and diff hot-path means against `baseline` when it carries
+/// measured numbers. The diff never fails the run — perf drift is
+/// reported, not gated, because CI runner timing is noisy.
+pub fn run(bench_dir: &Path, baseline: Option<&Path>, out: Option<&Path>) -> Result<(), String> {
+    let hot = read_csv(&bench_dir.join("hot_path.csv"))?;
+    let ablation = read_csv(&bench_dir.join("ablation_compensate.csv"))?;
+    let measured = hot.is_some() || ablation.is_some();
+    let summary = summary_json(hot.as_ref(), ablation.as_ref(), measured);
+    match out {
+        Some(path) => {
+            fs::write(path, &summary).map_err(|e| format!("writing {}: {e}", path.display()))?;
+            println!("bench-summary: wrote {}", path.display());
+        }
+        None => print!("{summary}"),
+    }
+    if let Some(base) = baseline {
+        diff_against(base, hot.as_ref())?;
+    }
+    Ok(())
+}
+
+fn read_csv(path: &Path) -> Result<Option<Csv>, String> {
+    if !path.exists() {
+        println!("bench-summary: {} missing, skipping", path.display());
+        return Ok(None);
+    }
+    let text = fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let Some(header_line) = lines.next() else {
+        return Ok(None);
+    };
+    let header: Vec<String> = header_line.split(',').map(|s| s.trim().to_string()).collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        let row: Vec<String> = line.split(',').map(|s| s.trim().to_string()).collect();
+        if row.len() != header.len() {
+            return Err(format!("{}: ragged row `{line}`", path.display()));
+        }
+        rows.push(row);
+    }
+    Ok(Some(Csv { header, rows }))
+}
+
+fn summary_json(hot: Option<&Csv>, ablation: Option<&Csv>, measured: bool) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"sgs-bench/v1\",\n");
+    s.push_str("  \"issue\": 6,\n");
+    s.push_str(&format!("  \"measured\": {measured},\n"));
+    s.push_str("  \"hot_path\": ");
+    s.push_str(&csv_json(hot));
+    s.push_str(",\n  \"ablation_compensate\": ");
+    s.push_str(&csv_json(ablation));
+    s.push_str("\n}\n");
+    s
+}
+
+/// Render CSV rows as a JSON array of objects keyed by the header.
+/// Fields that parse as finite numbers are emitted bare, others quoted.
+fn csv_json(csv: Option<&Csv>) -> String {
+    let Some(csv) = csv else {
+        return "[]".to_string();
+    };
+    let mut s = String::from("[");
+    for (i, row) in csv.rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {");
+        for (j, (key, value)) in csv.header.iter().zip(row.iter()).enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{key}\": "));
+            match value.parse::<f64>() {
+                Ok(n) if n.is_finite() => s.push_str(value),
+                _ => s.push_str(&format!("\"{value}\"")),
+            }
+        }
+        s.push('}');
+    }
+    if !csv.rows.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push(']');
+    s
+}
+
+fn diff_against(baseline: &Path, hot: Option<&Csv>) -> Result<(), String> {
+    let text =
+        fs::read_to_string(baseline).map_err(|e| format!("reading {}: {e}", baseline.display()))?;
+    let base = parse(&text).map_err(|e| format!("{}: {e}", baseline.display()))?;
+    if base.get("measured").and_then(Json::as_bool) != Some(true) {
+        println!(
+            "bench-summary: baseline {} has no measured numbers yet; recording only",
+            baseline.display()
+        );
+        return Ok(());
+    }
+    let Some(hot) = hot else {
+        println!("bench-summary: no hot_path.csv to diff against the baseline");
+        return Ok(());
+    };
+    let empty = Vec::new();
+    let entries = match base.get("hot_path") {
+        Some(Json::Arr(items)) => items,
+        _ => &empty,
+    };
+    for row in &hot.rows {
+        let (Some(name), Some(mean_text)) = (row.first(), row.get(1)) else {
+            continue;
+        };
+        let mean: f64 = mean_text.parse().unwrap_or(f64::NAN);
+        let base_mean = entries.iter().find_map(|e| {
+            let n = e.get("bench").and_then(Json::as_str)?;
+            if n == name {
+                e.get("mean_s").and_then(Json::as_f64)
+            } else {
+                None
+            }
+        });
+        match base_mean {
+            Some(b) if b > 0.0 && mean.is_finite() => {
+                let pct = (mean - b) / b * 100.0;
+                let tag = if pct > 25.0 { "  <-- regression?" } else { "" };
+                println!(
+                    "bench-summary: {name}: {mean:.6}s vs baseline {b:.6}s ({pct:+.1}%){tag}"
+                );
+            }
+            _ => println!("bench-summary: {name}: {mean:.6}s (no baseline entry)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Library surface of the repo's automation tool, exposed so
+//! `xtask/tests/` can drive the lint pass directly against fixture
+//! sources. The binary (`cargo run -p xtask -- <cmd>`) is a thin wrapper
+//! over these modules.
+
+pub mod bench;
+pub mod json;
+pub mod lint;

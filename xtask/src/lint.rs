@@ -1,0 +1,535 @@
+//! `sgs-lint`: the repo's custom invariant-enforcing static-analysis pass.
+//!
+//! A syn-based AST walk over `rust/src/**` enforcing three rule families:
+//!
+//! - **determinism** (`det-*`) — modules on the bitwise-reproducibility
+//!   path (sim ≡ threaded ≡ dist) must not consult hash-ordered
+//!   containers, wall clocks, ambient RNG, or reduce floats in an
+//!   unspecified order.
+//! - **robustness** (`rob-*`) — fallible runtime paths must surface
+//!   failures through the typed `Error` enum, never `unwrap`/`panic!`;
+//!   the untrusted-input decoders must bounds-check instead of indexing.
+//! - **hot-path allocation** (`hot-alloc`) — functions annotated
+//!   `#[sgs::steady_state]` must not allocate.
+//!
+//! Suppress a finding with `// sgs-lint: allow(<rule>)` on the same line
+//! or the line directly above. `allow(all)` suppresses every rule.
+//! Test-only code (`#[cfg(test)]`) is skipped entirely.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use proc_macro2::Span;
+use quote::ToTokens;
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// Modules that must stay bitwise deterministic (same schedule, same
+/// floats, run to run). Matched as `name/` prefixes or `name.rs` files
+/// relative to `rust/src/`.
+const DETERMINISTIC: &[&str] = &[
+    "nn",
+    "tensor",
+    "pipeline",
+    "trainer",
+    "data",
+    "staleness",
+    "compensate",
+    "consensus",
+    "graph",
+    "simclock",
+];
+
+/// Modules whose runtime paths must propagate typed errors, never panic:
+/// a lost peer or a corrupt frame has to surface as `Err`, not a crash.
+const FALLIBLE: &[&str] = &["net", "pipeline", "trainer", "session"];
+
+/// Files where direct slice indexing is forbidden outright: these decode
+/// untrusted bytes, so every access must be a checked `.get(..)`. The
+/// rest of `net/` indexes invariant-backed local state and is exempt.
+const INDEX_SCOPED: &[&str] = &["net/wire.rs", "net/transport.rs"];
+
+/// A lint rule. [`Rule::name`] is the stable identifier used in reports
+/// and in `// sgs-lint: allow(<name>)` suppressions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    DetHashContainer,
+    DetWallClock,
+    DetAmbientRng,
+    DetUnorderedReduction,
+    RobUnwrap,
+    RobPanic,
+    RobSliceIndex,
+    HotAlloc,
+}
+
+impl Rule {
+    pub const ALL: &'static [Rule] = &[
+        Rule::DetHashContainer,
+        Rule::DetWallClock,
+        Rule::DetAmbientRng,
+        Rule::DetUnorderedReduction,
+        Rule::RobUnwrap,
+        Rule::RobPanic,
+        Rule::RobSliceIndex,
+        Rule::HotAlloc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::DetHashContainer => "det-hash-container",
+            Rule::DetWallClock => "det-wall-clock",
+            Rule::DetAmbientRng => "det-ambient-rng",
+            Rule::DetUnorderedReduction => "det-unordered-reduction",
+            Rule::RobUnwrap => "rob-unwrap",
+            Rule::RobPanic => "rob-panic",
+            Rule::RobSliceIndex => "rob-slice-index",
+            Rule::HotAlloc => "hot-alloc",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One finding. `line` is 1-based, `column` is 0-based (both from the
+/// proc-macro2 span of the offending token).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub column: usize,
+    pub message: String,
+}
+
+/// Result of linting a single file.
+pub struct FileOutcome {
+    pub violations: Vec<Violation>,
+    pub allowed: usize,
+}
+
+/// Result of linting a whole source tree.
+pub struct Report {
+    pub files_scanned: usize,
+    pub allowed: usize,
+    pub violations: Vec<Violation>,
+    pub errors: Vec<String>,
+}
+
+/// Lint one file's source text. `rel_path` is the path relative to
+/// `rust/src/` (forward slashes) — it decides which rule families apply.
+pub fn lint_source(rel_path: &str, source: &str) -> Result<FileOutcome, String> {
+    let parsed = syn::parse_file(source)
+        .map_err(|e| format!("{rel_path}:{}: parse error: {e}", e.span().start().line))?;
+    let ctx = FileCtx::classify(rel_path);
+    let mut visitor = LintVisitor {
+        ctx: &ctx,
+        raw: Vec::new(),
+        steady_depth: 0,
+    };
+    visitor.visit_file(&parsed);
+    let lines: Vec<&str> = source.lines().collect();
+    let mut violations = Vec::new();
+    let mut allowed = 0usize;
+    for v in visitor.raw {
+        if is_allowed(&lines, v.line, v.rule) {
+            allowed += 1;
+        } else {
+            violations.push(v);
+        }
+    }
+    violations.sort_by(|a, b| (a.line, a.column).cmp(&(b.line, b.column)));
+    Ok(FileOutcome { violations, allowed })
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src`).
+pub fn lint_tree(src_root: &Path) -> Report {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files);
+    files.sort();
+    let mut report = Report {
+        files_scanned: 0,
+        allowed: 0,
+        violations: Vec::new(),
+        errors: Vec::new(),
+    };
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        match fs::read_to_string(&path) {
+            Ok(text) => match lint_source(&rel, &text) {
+                Ok(out) => {
+                    report.files_scanned += 1;
+                    report.allowed += out.allowed;
+                    report.violations.extend(out.violations);
+                }
+                Err(e) => report.errors.push(e),
+            },
+            Err(e) => report.errors.push(format!("{}: {e}", path.display())),
+        }
+    }
+    report
+}
+
+/// Render the machine-readable JSON report (schema `sgs-lint-report/v1`).
+pub fn report_json(report: &Report) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"sgs-lint-report/v1\",\n");
+    s.push_str("  \"root\": \"rust/src\",\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    s.push_str(&format!("  \"allowed_suppressions\": {},\n", report.allowed));
+    s.push_str("  \"errors\": [");
+    for (i, e) in report.errors.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{}\"", json_escape(e)));
+    }
+    s.push_str("],\n");
+    s.push_str("  \"violations\": [");
+    for (i, v) in report.violations.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {");
+        s.push_str(&format!("\"rule\": \"{}\", ", v.rule));
+        s.push_str(&format!("\"file\": \"{}\", ", json_escape(&v.file)));
+        s.push_str(&format!("\"line\": {}, ", v.line));
+        s.push_str(&format!("\"column\": {}, ", v.column));
+        s.push_str(&format!("\"message\": \"{}\"}}", json_escape(&v.message)));
+    }
+    if !report.violations.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+fn json_escape(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    for c in text.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+struct FileCtx {
+    rel: String,
+    deterministic: bool,
+    fallible: bool,
+    index_scoped: bool,
+}
+
+impl FileCtx {
+    fn classify(rel_path: &str) -> FileCtx {
+        let rel = rel_path.replace('\\', "/");
+        let in_family = |families: &[&str]| {
+            families
+                .iter()
+                .any(|m| rel.starts_with(&format!("{m}/")) || rel == format!("{m}.rs"))
+        };
+        let deterministic = in_family(DETERMINISTIC);
+        let fallible = in_family(FALLIBLE);
+        let index_scoped = INDEX_SCOPED.contains(&rel.as_str());
+        FileCtx {
+            rel,
+            deterministic,
+            fallible,
+            index_scoped,
+        }
+    }
+}
+
+/// `// sgs-lint: allow(rule-a, rule-b)` on the violation line or the line
+/// directly above suppresses the finding.
+fn is_allowed(lines: &[&str], line: usize, rule: Rule) -> bool {
+    let check = |idx: usize| lines.get(idx).map(|l| line_allows(l, rule)).unwrap_or(false);
+    // `line` is 1-based; check it and the line above.
+    check(line.wrapping_sub(1)) || (line >= 2 && check(line - 2))
+}
+
+fn line_allows(line: &str, rule: Rule) -> bool {
+    let Some(pos) = line.find("sgs-lint: allow(") else {
+        return false;
+    };
+    let rest = &line[pos + "sgs-lint: allow(".len()..];
+    let Some(end) = rest.find(')') else {
+        return false;
+    };
+    rest[..end]
+        .split(',')
+        .map(str::trim)
+        .any(|r| r == rule.name() || r == "all")
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg")
+            && a.meta
+                .require_list()
+                .map(|l| l.tokens.to_string() == "test")
+                .unwrap_or(false)
+    })
+}
+
+fn is_steady_state(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path()
+            .segments
+            .last()
+            .map(|s| s.ident == "steady_state")
+            .unwrap_or(false)
+    })
+}
+
+/// True when a `sum`/`product`/`fold` receiver chain bottoms out in
+/// `.keys()` / `.values()`, i.e. an iteration order the container — not
+/// the code — decides. Pass-through adapters are chased.
+fn reduction_over_keyed_iter(receiver: &syn::Expr) -> bool {
+    let mut cur = receiver;
+    loop {
+        match cur {
+            syn::Expr::MethodCall(mc) => {
+                let method = mc.method.to_string();
+                match method.as_str() {
+                    "keys" | "values" | "values_mut" => return true,
+                    "map" | "copied" | "cloned" | "filter" | "iter" | "iter_mut" | "into_iter" => {
+                        cur = &mc.receiver;
+                    }
+                    _ => return false,
+                }
+            }
+            syn::Expr::Paren(p) => cur = &p.expr,
+            _ => return false,
+        }
+    }
+}
+
+/// Allocating `Type::method` constructors forbidden in steady-state fns.
+fn is_alloc_ctor(segments: &[String]) -> bool {
+    let n = segments.len();
+    if n < 2 {
+        return false;
+    }
+    let ty = segments[n - 2].as_str();
+    let method = segments[n - 1].as_str();
+    let alloc_ty = matches!(
+        ty,
+        "Vec" | "VecDeque" | "Box" | "String" | "BTreeMap" | "BTreeSet" | "HashMap" | "HashSet"
+    );
+    alloc_ty && matches!(method, "new" | "with_capacity" | "from")
+}
+
+struct LintVisitor<'a> {
+    ctx: &'a FileCtx,
+    raw: Vec<Violation>,
+    steady_depth: usize,
+}
+
+impl LintVisitor<'_> {
+    fn flag(&mut self, rule: Rule, span: Span, message: String) {
+        let start = span.start();
+        self.raw.push(Violation {
+            rule,
+            file: self.ctx.rel.clone(),
+            line: start.line,
+            column: start.column,
+            message,
+        });
+    }
+}
+
+impl<'ast> Visit<'ast> for LintVisitor<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if is_cfg_test(&node.attrs) {
+            return;
+        }
+        visit::visit_item_mod(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if is_cfg_test(&node.attrs) {
+            return;
+        }
+        visit::visit_item_impl(self, node);
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if is_cfg_test(&node.attrs) {
+            return;
+        }
+        let steady = is_steady_state(&node.attrs) as usize;
+        self.steady_depth += steady;
+        visit::visit_item_fn(self, node);
+        self.steady_depth -= steady;
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if is_cfg_test(&node.attrs) {
+            return;
+        }
+        let steady = is_steady_state(&node.attrs) as usize;
+        self.steady_depth += steady;
+        visit::visit_impl_item_fn(self, node);
+        self.steady_depth -= steady;
+    }
+
+    fn visit_trait_item_fn(&mut self, node: &'ast syn::TraitItemFn) {
+        if is_cfg_test(&node.attrs) {
+            return;
+        }
+        let steady = is_steady_state(&node.attrs) as usize;
+        self.steady_depth += steady;
+        visit::visit_trait_item_fn(self, node);
+        self.steady_depth -= steady;
+    }
+
+    fn visit_ident(&mut self, node: &'ast proc_macro2::Ident) {
+        if !self.ctx.deterministic {
+            return;
+        }
+        let name = node.to_string();
+        match name.as_str() {
+            "HashMap" | "HashSet" | "RandomState" => self.flag(
+                Rule::DetHashContainer,
+                node.span(),
+                format!("`{name}` in deterministic module — use BTreeMap/BTreeSet or a dense Vec"),
+            ),
+            "Instant" | "SystemTime" => self.flag(
+                Rule::DetWallClock,
+                node.span(),
+                format!("`{name}` in deterministic module — time must come from simclock/config"),
+            ),
+            "thread_rng" | "from_entropy" => self.flag(
+                Rule::DetAmbientRng,
+                node.span(),
+                format!("`{name}` in deterministic module — randomness must flow from seeded Pcg32"),
+            ),
+            _ => {}
+        }
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        if self.ctx.fallible && (method == "unwrap" || method == "expect") {
+            self.flag(
+                Rule::RobUnwrap,
+                node.method.span(),
+                format!("`.{method}()` on a fallible runtime path — propagate a typed `Error`"),
+            );
+        }
+        if self.ctx.deterministic
+            && matches!(method.as_str(), "sum" | "product" | "fold")
+            && reduction_over_keyed_iter(&node.receiver)
+        {
+            self.flag(
+                Rule::DetUnorderedReduction,
+                node.method.span(),
+                format!(
+                    "float `.{method}()` over `.keys()`/`.values()` — fix the iteration order \
+                     (order-stable container) or allow-list with a proof"
+                ),
+            );
+        }
+        if self.steady_depth > 0
+            && matches!(
+                method.as_str(),
+                "to_vec" | "to_string" | "to_owned" | "clone" | "collect"
+            )
+        {
+            self.flag(
+                Rule::HotAlloc,
+                node.method.span(),
+                format!("allocating `.{method}()` inside a #[steady_state] fn"),
+            );
+        }
+        visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if self.steady_depth > 0 {
+            if let syn::Expr::Path(p) = &*node.func {
+                let segments: Vec<String> =
+                    p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+                if is_alloc_ctor(&segments) {
+                    self.flag(
+                        Rule::HotAlloc,
+                        node.func.span(),
+                        format!(
+                            "allocating call `{}` inside a #[steady_state] fn",
+                            p.path.to_token_stream()
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_expr_call(self, node);
+    }
+
+    fn visit_expr_index(&mut self, node: &'ast syn::ExprIndex) {
+        if self.ctx.index_scoped {
+            self.flag(
+                Rule::RobSliceIndex,
+                node.span(),
+                "direct index in an untrusted-input decoder — use `.get(..)` and surface \
+                 `Error::Net`"
+                    .to_string(),
+            );
+        }
+        visit::visit_expr_index(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        let name = node
+            .path
+            .segments
+            .last()
+            .map(|s| s.ident.to_string())
+            .unwrap_or_default();
+        if self.ctx.fallible && matches!(name.as_str(), "panic" | "todo" | "unimplemented") {
+            self.flag(
+                Rule::RobPanic,
+                node.path.span(),
+                format!("`{name}!` on a fallible runtime path — return `Err(Error::…)` instead"),
+            );
+        }
+        if self.steady_depth > 0 && matches!(name.as_str(), "vec" | "format") {
+            self.flag(
+                Rule::HotAlloc,
+                node.path.span(),
+                format!("allocating `{name}!` inside a #[steady_state] fn"),
+            );
+        }
+        visit::visit_macro(self, node);
+    }
+}

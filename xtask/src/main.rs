@@ -1,0 +1,119 @@
+//! Repo automation (the `cargo xtask` pattern — build-time only, never
+//! part of the shipped library):
+//!
+//! - `cargo run -p xtask -- lint` runs the `sgs-lint` invariant pass over
+//!   `rust/src/**` (see `xtask/src/lint.rs` and the README section
+//!   "Invariants & static analysis").
+//! - `cargo run -p xtask -- bench-summary` folds `bench_out/*.csv` smoke
+//!   results into the `BENCH_*.json` perf-trajectory format and diffs
+//!   against a committed baseline.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::{bench, lint};
+
+const USAGE: &str = "\
+usage:
+  cargo run -p xtask -- lint [--root DIR] [--json PATH]
+  cargo run -p xtask -- bench-summary [--bench-dir DIR] [--baseline PATH] [--out PATH]
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => cmd_lint(&args[1..]),
+        Some("bench-summary") => cmd_bench(&args[1..]),
+        _ => {
+            eprint!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn cmd_lint(args: &[String]) -> ExitCode {
+    let root = match flag_value(args, "--root") {
+        Ok(v) => v.unwrap_or_else(|| PathBuf::from(".")),
+        Err(e) => return fail(&e),
+    };
+    let json_out = match flag_value(args, "--json") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let src_root = root.join("rust").join("src");
+    let report = lint::lint_tree(&src_root);
+    if report.files_scanned == 0 {
+        return fail(&format!(
+            "no .rs files under {} — run from the repo root or pass --root",
+            src_root.display()
+        ));
+    }
+    for err in &report.errors {
+        eprintln!("sgs-lint: error: {err}");
+    }
+    for v in &report.violations {
+        eprintln!(
+            "rust/src/{}:{}:{}: [{}] {}",
+            v.file,
+            v.line,
+            v.column + 1,
+            v.rule,
+            v.message
+        );
+    }
+    if let Some(path) = json_out {
+        if let Err(e) = fs::write(&path, lint::report_json(&report)) {
+            return fail(&format!("writing {}: {e}", path.display()));
+        }
+        println!("sgs-lint: report written to {}", path.display());
+    }
+    println!(
+        "sgs-lint: {} files scanned, {} violations, {} suppressed",
+        report.files_scanned,
+        report.violations.len(),
+        report.allowed
+    );
+    if report.violations.is_empty() && report.errors.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_bench(args: &[String]) -> ExitCode {
+    let bench_dir = match flag_value(args, "--bench-dir") {
+        Ok(v) => v.unwrap_or_else(|| PathBuf::from("bench_out")),
+        Err(e) => return fail(&e),
+    };
+    let baseline = match flag_value(args, "--baseline") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    let out = match flag_value(args, "--out") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    match bench::run(&bench_dir, baseline.as_deref(), out.as_deref()) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => fail(&e),
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Result<Option<PathBuf>, String> {
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == name {
+            return match it.next() {
+                Some(v) => Ok(Some(PathBuf::from(v))),
+                None => Err(format!("{name} needs a value")),
+            };
+        }
+    }
+    Ok(None)
+}
+
+fn fail(msg: &str) -> ExitCode {
+    eprintln!("xtask: {msg}");
+    ExitCode::FAILURE
+}

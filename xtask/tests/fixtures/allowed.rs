@@ -1,0 +1,8 @@
+pub fn checked(x: Option<u32>) -> u32 {
+    // sgs-lint: allow(rob-unwrap)
+    x.unwrap()
+}
+
+pub fn checked_inline(x: Option<u32>) -> u32 {
+    x.unwrap() // sgs-lint: allow(rob-unwrap)
+}

@@ -1,0 +1,11 @@
+pub fn fine() -> u32 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn uses_unwrap() {
+        Some(1u32).unwrap();
+    }
+}

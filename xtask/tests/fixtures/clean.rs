@@ -1,0 +1,9 @@
+use std::collections::BTreeMap;
+
+pub fn total(map: &BTreeMap<u32, f64>) -> f64 {
+    let mut acc = 0.0;
+    for (_, v) in map {
+        acc += *v;
+    }
+    acc
+}

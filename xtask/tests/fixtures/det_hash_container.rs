@@ -1,0 +1,9 @@
+use std::collections::HashMap;
+
+pub fn order_sensitive(map: &HashMap<u32, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, v) in map {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,5 @@
+use std::collections::BTreeMap;
+
+pub fn total(map: &BTreeMap<u32, f64>) -> f64 {
+    map.values().copied().sum()
+}

@@ -1,0 +1,3 @@
+pub fn stamp() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,10 @@
+#[steady_state]
+pub fn kernel() -> usize {
+    let scratch: Vec<f64> = Vec::new();
+    let extra = vec![0.0f64; 4];
+    scratch.len() + extra.len()
+}
+
+pub fn setup() -> Vec<f64> {
+    Vec::new()
+}

@@ -1,0 +1,5 @@
+pub fn explode(ok: bool) {
+    if !ok {
+        panic!("boom");
+    }
+}

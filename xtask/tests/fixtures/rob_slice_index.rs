@@ -1,0 +1,3 @@
+pub fn first(buf: &[u8]) -> u8 {
+    buf[0]
+}

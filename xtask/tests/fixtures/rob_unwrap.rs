@@ -1,0 +1,7 @@
+pub fn risky(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn also_risky(x: Result<u32, String>) -> u32 {
+    x.expect("present")
+}

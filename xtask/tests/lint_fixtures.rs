@@ -1,0 +1,128 @@
+//! Tests for the `sgs-lint` pass itself: every rule must fire on its
+//! seeded-violation fixture with the right span, stay quiet on the clean
+//! fixture, and honor `// sgs-lint: allow(...)` suppressions.
+
+use std::fs;
+use std::path::PathBuf;
+
+use xtask::lint::{lint_source, FileOutcome, Rule};
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+fn lint_fixture(rel: &str, name: &str) -> FileOutcome {
+    lint_source(rel, &fixture(name)).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+fn lines_for(out: &FileOutcome, rule: Rule) -> Vec<usize> {
+    out.violations
+        .iter()
+        .filter(|v| v.rule == rule)
+        .map(|v| v.line)
+        .collect()
+}
+
+#[test]
+fn det_hash_container_fires_with_span() {
+    let out = lint_fixture("pipeline/fixture.rs", "det_hash_container.rs");
+    let lines = lines_for(&out, Rule::DetHashContainer);
+    assert!(lines.contains(&1), "use statement flagged: {lines:?}");
+    assert!(lines.contains(&3), "type position flagged: {lines:?}");
+}
+
+#[test]
+fn det_wall_clock_fires_with_span() {
+    let out = lint_fixture("staleness/fixture.rs", "det_wall_clock.rs");
+    assert_eq!(lines_for(&out, Rule::DetWallClock), vec![2]);
+}
+
+#[test]
+fn det_ambient_rng_fires_with_span() {
+    let out = lint_fixture("data/fixture.rs", "det_ambient_rng.rs");
+    assert_eq!(lines_for(&out, Rule::DetAmbientRng), vec![2]);
+}
+
+#[test]
+fn det_unordered_reduction_fires_with_span() {
+    let out = lint_fixture("consensus/fixture.rs", "det_unordered_reduction.rs");
+    assert_eq!(lines_for(&out, Rule::DetUnorderedReduction), vec![4]);
+}
+
+#[test]
+fn rob_unwrap_fires_on_unwrap_and_expect() {
+    let out = lint_fixture("net/fixture.rs", "rob_unwrap.rs");
+    assert_eq!(lines_for(&out, Rule::RobUnwrap), vec![2, 6]);
+}
+
+#[test]
+fn rob_panic_fires_with_span() {
+    let out = lint_fixture("session/fixture.rs", "rob_panic.rs");
+    assert_eq!(lines_for(&out, Rule::RobPanic), vec![3]);
+}
+
+#[test]
+fn rob_slice_index_fires_only_in_scoped_files() {
+    let out = lint_fixture("net/wire.rs", "rob_slice_index.rs");
+    assert_eq!(lines_for(&out, Rule::RobSliceIndex), vec![2]);
+    // The same source outside the decoder files is exempt.
+    let elsewhere = lint_fixture("net/dist.rs", "rob_slice_index.rs");
+    assert!(lines_for(&elsewhere, Rule::RobSliceIndex).is_empty());
+}
+
+#[test]
+fn hot_alloc_fires_only_inside_steady_state_fns() {
+    // `runtime/` is in neither rule family, so only hot-alloc can fire.
+    let out = lint_fixture("runtime/fixture.rs", "hot_alloc.rs");
+    assert_eq!(lines_for(&out, Rule::HotAlloc), vec![3, 4]);
+    assert_eq!(out.violations.len(), 2, "un-annotated fn stays clean");
+}
+
+#[test]
+fn clean_fixture_has_no_violations() {
+    let out = lint_fixture("pipeline/fixture.rs", "clean.rs");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert_eq!(out.allowed, 0);
+}
+
+#[test]
+fn allow_comment_suppresses_same_line_and_line_above() {
+    let out = lint_fixture("net/fixture.rs", "allowed.rs");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert_eq!(out.allowed, 2);
+}
+
+#[test]
+fn cfg_test_items_are_skipped() {
+    let out = lint_fixture("net/fixture.rs", "cfg_test_skipped.rs");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn rules_do_not_fire_outside_their_module_family() {
+    // A HashMap in a non-deterministic module is fine.
+    let out = lint_fixture("metrics/fixture.rs", "det_hash_container.rs");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    // An unwrap in a non-fallible module is fine.
+    let out = lint_fixture("benchkit/fixture.rs", "rob_unwrap.rs");
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn repo_source_tree_is_lint_clean() {
+    // The acceptance bar: `cargo run -p xtask -- lint` exits 0 on the
+    // repo. Running it here too makes `cargo test -p xtask` self-contained.
+    let src_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../rust/src");
+    let report = xtask::lint::lint_tree(&src_root);
+    assert!(report.files_scanned > 0, "rust/src not found from xtask/");
+    assert!(report.errors.is_empty(), "{:?}", report.errors);
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+        .collect();
+    assert!(rendered.is_empty(), "lint violations:\n{}", rendered.join("\n"));
+}
