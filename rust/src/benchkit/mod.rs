@@ -6,8 +6,7 @@
 
 pub mod figures;
 
-use std::time::Instant;
-
+use crate::obs::WallClock;
 use crate::util::{mean, percentile, stddev};
 
 /// One timed result.
@@ -58,9 +57,9 @@ impl BenchSet {
         }
         let mut times = Vec::with_capacity(samples);
         for _ in 0..samples {
-            let t0 = Instant::now();
+            let t0 = WallClock::new();
             std::hint::black_box(f());
-            times.push(t0.elapsed().as_secs_f64());
+            times.push(t0.elapsed_s());
         }
         self.results.push(BenchResult {
             name: name.into(),

@@ -1,8 +1,8 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
-//! Grammar: `sgs <command> [--flag value]... [--switch]...`
-//! Flags are declared by the command handlers via typed getters; unknown
-//! flags are an error (catches typos).
+//! Grammar: `sgs <command> [FILE]... [--flag value]... [--switch]...`
+//! Flags and positionals are declared by the command handlers via typed
+//! getters; anything nobody consumed is an error (catches typos).
 
 use std::collections::BTreeMap;
 
@@ -12,7 +12,9 @@ use crate::error::{Error, Result};
 pub struct Args {
     pub command: String,
     flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+    consumed_pos: std::cell::RefCell<std::collections::BTreeSet<usize>>,
 }
 
 impl Args {
@@ -22,29 +24,43 @@ impl Args {
         }
         let command = argv[0].clone();
         let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
         let mut i = 1;
         while i < argv.len() {
             let arg = &argv[i];
-            let name = arg
-                .strip_prefix("--")
-                .ok_or_else(|| Error::Cli(format!("expected --flag, got {arg:?}")))?;
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), argv[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(name.to_string(), "true".into()); // bare switch
-                i += 1;
+            match arg.strip_prefix("--") {
+                Some(name) => {
+                    if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                        flags.insert(name.to_string(), argv[i + 1].clone());
+                        i += 2;
+                    } else {
+                        flags.insert(name.to_string(), "true".into()); // bare switch
+                        i += 1;
+                    }
+                }
+                None => {
+                    positionals.push(arg.clone());
+                    i += 1;
+                }
             }
         }
         Ok(Args {
             command,
             flags,
+            positionals,
             consumed: Default::default(),
+            consumed_pos: Default::default(),
         })
     }
 
     fn mark(&self, name: &str) {
         self.consumed.borrow_mut().insert(name.to_string());
+    }
+
+    /// The `idx`-th bare (non-`--flag`) argument, if present.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.consumed_pos.borrow_mut().insert(idx);
+        self.positionals.get(idx).map(|s| s.as_str())
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -82,7 +98,8 @@ impl Args {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
-    /// Call after all getters: errors on flags nobody consumed.
+    /// Call after all getters: errors on flags or positionals nobody
+    /// consumed.
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
         let unknown: Vec<&String> = self
@@ -90,10 +107,21 @@ impl Args {
             .keys()
             .filter(|k| !consumed.contains(*k))
             .collect();
-        if unknown.is_empty() {
+        if !unknown.is_empty() {
+            return Err(Error::Cli(format!("unknown flags: {unknown:?}")));
+        }
+        let consumed_pos = self.consumed_pos.borrow();
+        let stray: Vec<&String> = self
+            .positionals
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !consumed_pos.contains(i))
+            .map(|(_, v)| v)
+            .collect();
+        if stray.is_empty() {
             Ok(())
         } else {
-            Err(Error::Cli(format!("unknown flags: {unknown:?}")))
+            Err(Error::Cli(format!("unexpected arguments: {stray:?}")))
         }
     }
 }
@@ -132,8 +160,18 @@ mod tests {
     }
 
     #[test]
-    fn rejects_positional_garbage() {
-        assert!(Args::parse(&argv("train oops")).is_err());
+    fn rejects_unconsumed_positionals() {
+        let a = Args::parse(&argv("train oops")).unwrap();
+        assert!(a.finish().is_err());
         assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn consumed_positionals_pass_finish() {
+        let a = Args::parse(&argv("trace-report trace.json --json")).unwrap();
+        assert_eq!(a.positional(0), Some("trace.json"));
+        assert!(a.get_bool("json"));
+        a.finish().unwrap();
+        assert_eq!(a.positional(1), None);
     }
 }

@@ -6,6 +6,7 @@
 //! * `launch`    — coordinator: spawn/dial workers, run distributed
 //! * `describe`  — grid/topology/spectral report for a config
 //! * `trace`     — print the Fig. 1 pipeline schedule
+//! * `trace-report` — analyze a `--trace-out` Chrome trace JSON
 //! * `calibrate` — measure the cost model and print the timing table
 
 use std::io::BufRead as _;
@@ -19,6 +20,7 @@ use crate::error::{Error, Result};
 use crate::graph::Topology;
 use crate::net::{TcpTransport, Transport};
 use crate::nn::resolve_threads;
+use crate::obs::{Tracer, WallClock, DEFAULT_SPAN_CAPACITY};
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::session::{EngineKind, EventWriter, Session};
 use crate::simclock::{method_iter_s, CostModel};
@@ -38,7 +40,7 @@ COMMANDS
              --compensate none|dc:LAMBDA|accum:N
              --workers N (dist engine: in-process workers)
              --compute-threads N (0 = all cores; any N is bit-identical)
-             --out CSV --events-out JSONL --clock)
+             --out CSV --events-out JSONL --trace-out JSON --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   worker     host agents for a coordinator (--listen HOST:PORT, port 0 = any;
              announces the bound address on stdout; exits on coordinator
@@ -49,6 +51,9 @@ COMMANDS
              placement from the config or an even split)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
+  trace-report  analyze a trace            (sgs trace-report FILE [--json];
+             per-module/per-phase breakdown, pipeline fill vs steady state,
+             stragglers — FILE comes from train/launch --trace-out)
   calibrate  cost model + timing table     (--backend --artifacts --model
              --compute-threads N)
   help       this text
@@ -142,17 +147,19 @@ fn apply_workers_flag(
 }
 
 /// Drive a built session to completion: stream events to the optional
-/// JSONL sink, then print the summary and write the optional CSV (shared
-/// by `train` and `launch`).
+/// JSONL sink, export the optional trace, then print the summary and
+/// write the optional CSV (shared by `train` and `launch`).
 fn stream_and_report(
     mut session: Session,
     out_csv: Option<PathBuf>,
     events_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
 ) -> Result<()> {
     let mut events = match &events_out {
         Some(path) => Some(EventWriter::create(path)?),
         None => None,
     };
+    let wall = WallClock::new();
     session.run_streaming(|ev| {
         if let Some(w) = events.as_mut() {
             w.write(ev)?;
@@ -161,6 +168,10 @@ fn stream_and_report(
     })?;
     if let Some(w) = events.as_mut() {
         w.flush()?;
+    }
+    if let Some(path) = &trace_out {
+        session.write_trace(path, wall.elapsed_s())?;
+        println!("wrote trace {}", path.display());
     }
     let out = session.finish();
 
@@ -186,6 +197,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", 0)?;
     let out_csv = args.get("out").map(PathBuf::from);
     let events_out = args.get("events-out").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
     args.finish()?;
     apply_workers_flag(&mut cfg, engine, workers)?;
@@ -200,13 +212,16 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         engine.as_str(),
         cfg.iters
     );
-    let session = Session::builder(cfg)
+    let mut builder = Session::builder(cfg)
         .backend(kind)
         .artifacts(artifacts)
         .engine(engine)
-        .calibrate_clock(clock)
-        .build()?;
-    stream_and_report(session, out_csv, events_out)
+        .calibrate_clock(clock);
+    if trace_out.is_some() {
+        builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+    }
+    let session = builder.build()?;
+    stream_and_report(session, out_csv, events_out, trace_out)
 }
 
 /// `sgs worker --listen HOST:PORT`: host module agents for a remote
@@ -227,6 +242,7 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
     let (kind, artifacts) = backend_flags(args)?;
     let out_csv = args.get("out").map(PathBuf::from);
     let events_out = args.get("events-out").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
     let hosts: Option<Vec<String>> = args.get("hosts").map(|h| {
         h.split(',')
@@ -315,14 +331,17 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             kind.as_str(),
             cfg.iters
         );
-        let session = Session::builder(cfg)
+        let mut builder = Session::builder(cfg)
             .backend(kind)
             .artifacts(artifacts)
             .engine(EngineKind::Dist)
             .dist_workers(transports)
-            .calibrate_clock(clock)
-            .build()?;
-        stream_and_report(session, out_csv, events_out)
+            .calibrate_clock(clock);
+        if trace_out.is_some() {
+            builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+        }
+        let session = builder.build()?;
+        stream_and_report(session, out_csv, events_out, trace_out)
     });
 
     // the engine's teardown asked the workers to exit; reap them (kill
@@ -448,6 +467,26 @@ pub fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sgs trace-report FILE [--json]`: analyze a Chrome trace written by
+/// `train`/`launch --trace-out` — per-module/per-phase time breakdown,
+/// pipeline-fill vs steady-state split, and a straggler summary.
+pub fn cmd_trace_report(args: &Args) -> Result<()> {
+    let file = args
+        .positional(0)
+        .map(PathBuf::from)
+        .ok_or_else(|| Error::Cli("usage: sgs trace-report FILE [--json]".into()))?;
+    let json = args.get_bool("json");
+    args.finish()?;
+
+    let report = crate::obs::report::analyze_file(&file)?;
+    if json {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(())
+}
+
 pub fn cmd_calibrate(args: &Args) -> Result<()> {
     let (kind, artifacts) = backend_flags(args)?;
     let model = model_of(args.get_or("model", "small"))?;
@@ -492,6 +531,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "launch" => cmd_launch(&args),
         "describe" => cmd_describe(&args),
         "trace" => cmd_trace(&args),
+        "trace-report" => cmd_trace_report(&args),
         "calibrate" => cmd_calibrate(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -619,6 +659,31 @@ mod tests {
             cfg.compensate,
             crate::compensate::CompensatorKind::Accumulate { n: 3 }
         );
+    }
+
+    #[test]
+    fn train_trace_out_then_trace_report_roundtrip() {
+        let dir = std::env::temp_dir().join("sgs_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        dispatch(&argv(&format!(
+            "train --model tiny --s 2 --k 2 --iters 8 --batch 8 --dataset-n 200 \
+             --engine threaded --lr const:0.1 --trace-out {}",
+            path.display()
+        )))
+        .unwrap();
+        let doc = crate::util::json::Json::from_file(&path).unwrap();
+        assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > 4);
+        // the analyzer accepts what the exporter wrote, in both renderings
+        dispatch(&argv(&format!("trace-report {}", path.display()))).unwrap();
+        dispatch(&argv(&format!("trace-report {} --json", path.display()))).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_report_wants_a_file() {
+        assert!(dispatch(&argv("trace-report")).is_err());
+        assert!(dispatch(&argv("trace-report does_not_exist.json")).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod session;

@@ -42,6 +42,7 @@ use crate::net::transport::{LocalTransport, Transport};
 use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
 use crate::nn::init::init_params;
 use crate::nn::LayerShape;
+use crate::obs::{Histogram, MetricsRegistry, Phase, Span, Tracer, WallClock, NO_COORD};
 use crate::pipeline::module_agent::ActMsg;
 use crate::runtime::ComputeBackend;
 use crate::session::{Engine, IterEvent};
@@ -113,6 +114,28 @@ pub struct DistEngine {
     t_offset: usize,
     /// set on the first fatal fleet error; every later step returns it
     failed: Option<String>,
+    /// wall clock since construction — stamps `wall_time_s` on events
+    clock: WallClock,
+    /// merges local coordinator spans and the workers' `Frame::Obs`
+    /// batches (worker w lands on pid w+1); pure observer
+    tracer: Option<Arc<Tracer>>,
+    /// destination for worker metric samples (`w{id}_` prefixed)
+    metrics: Option<Arc<MetricsRegistry>>,
+    /// cached handle: seconds per central gossip mix (registered once at
+    /// attach time, observed per iteration without registry lookups)
+    mix_hist: Option<Arc<Histogram>>,
+}
+
+/// Close a coordinator-track span opened at `start` (None = no tracer).
+fn rec_span(tracer: &Option<Arc<Tracer>>, start: Option<u64>, phase: Phase, t: i64) {
+    if let (Some(tr), Some(start_us)) = (tracer.as_ref(), start) {
+        let dur_us = tr.now_us().saturating_sub(start_us);
+        tr.record(Span { track: 0, phase, s: NO_COORD, k: NO_COORD, t, start_us, dur_us });
+    }
+}
+
+fn span_open(tracer: &Option<Arc<Tracer>>) -> Option<u64> {
+    tracer.as_ref().map(|tr| tr.now_us())
 }
 
 impl DistEngine {
@@ -258,6 +281,10 @@ impl DistEngine {
             t: 0,
             t_offset: 0,
             failed: None,
+            clock: WallClock::new(),
+            tracer: None,
+            metrics: None,
+            mix_hist: None,
         })
     }
 
@@ -354,6 +381,7 @@ impl DistEngine {
     }
 
     fn step_inner(&mut self) -> Result<IterEvent> {
+        let step_open = span_open(&self.tracer);
         let t = self.t;
         let t_us = self.t_offset + t as usize;
         let eta = self.cfg.lr.at(t_us);
@@ -444,9 +472,16 @@ impl DistEngine {
                             }
                             full.push(groups);
                         }
+                        let mix_open = span_open(&self.tracer);
+                        let mix_start_us = self.clock.now_us();
                         if let Err(e) = self.mix_and_reply(full) {
                             return Err(self.fail(format!("gossip reply failed: {e}")));
                         }
+                        if let Some(h) = &self.mix_hist {
+                            let dur = self.clock.now_us().saturating_sub(mix_start_us);
+                            h.observe(dur as f64 * 1e-6);
+                        }
+                        rec_span(&self.tracer, mix_open, Phase::GossipMix, t);
                     }
                 }
                 Frame::StepDone { worker_id, losses: ls, corrections } => {
@@ -470,6 +505,19 @@ impl DistEngine {
                 }
                 Frame::Abort { msg } => {
                     return Err(self.fail(format!("worker {wid} aborted: {msg}")));
+                }
+                Frame::Obs { worker_id, spans, samples } => {
+                    // pure observer: obs bytes are deliberately NOT counted
+                    // into net_tx/net_rx, so ITER_EVENTS stay bit-identical
+                    // with tracing on or off
+                    if let Some(tr) = &self.tracer {
+                        tr.record_remote(worker_id as u16 + 1, &spans);
+                    }
+                    if let Some(reg) = &self.metrics {
+                        for (name, kind, value) in samples {
+                            reg.apply_sample(&format!("w{worker_id}_{name}"), kind, value);
+                        }
+                    }
                 }
                 other => {
                     return Err(self.fail(format!(
@@ -503,6 +551,7 @@ impl DistEngine {
             correction,
             net_tx: Some(Arc::from(&self.net_tx[..])),
             net_rx: Some(Arc::from(&self.net_rx[..])),
+            wall_time_s: None,
         };
         if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
             ev.delta = Some(self.consensus_delta());
@@ -510,12 +559,16 @@ impl DistEngine {
         if self.cfg.eval_every > 0
             && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
         {
+            let eval_open = span_open(&self.tracer);
             let avg = self.averaged_params();
             let (x, oh) = &self.probe;
             ev.eval_loss = Some(self.backend.eval_loss(x, oh, &avg)? as f64);
             let logits = crate::nn::full_forward(x, &avg, &self.layers);
             ev.eval_acc = Some(crate::nn::accuracy(&logits, oh));
+            rec_span(&self.tracer, eval_open, Phase::Eval, t);
         }
+        rec_span(&self.tracer, step_open, Phase::Step, t);
+        ev.wall_time_s = Some(self.clock.elapsed_s());
         Ok(ev)
     }
 
@@ -747,6 +800,14 @@ impl Engine for DistEngine {
 
     fn set_iter_time_s(&mut self, iter_time_s: f64) {
         self.iter_time_s = iter_time_s;
+    }
+
+    fn attach_obs(&mut self, tracer: Option<Arc<Tracer>>, metrics: Option<Arc<MetricsRegistry>>) {
+        self.mix_hist = metrics.as_ref().map(|reg| {
+            reg.histogram("gossip_mix_s", &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0])
+        });
+        self.tracer = tracer;
+        self.metrics = metrics;
     }
 }
 

@@ -24,6 +24,7 @@ use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::net::wire::{decode, encode, Frame};
+use crate::obs::Deadline;
 
 /// Frames above this size are rejected on receive: a corrupt length prefix
 /// must error, not allocate unbounded memory.
@@ -173,13 +174,13 @@ impl TcpTransport {
     /// Blocking frame read with optional deadline: accumulate bytes under
     /// the short poll timeout, checking the interrupt flag and the
     /// deadline between reads (partial frames survive in `buf`).
-    fn recv_bounded(&mut self, deadline: Option<std::time::Instant>) -> Result<(Frame, usize)> {
+    fn recv_bounded(&mut self, deadline: Option<Deadline>) -> Result<(Frame, usize)> {
         loop {
             if let Some(out) = self.try_parse()? {
                 return Ok(out);
             }
             if let Some(d) = deadline {
-                if std::time::Instant::now() >= d {
+                if d.expired() {
                     return Err(Error::Net("no frame within the deadline".into()));
                 }
             }
@@ -244,7 +245,7 @@ impl Transport for TcpTransport {
     }
 
     fn recv_deadline(&mut self, timeout: Duration) -> Result<(Frame, usize)> {
-        self.recv_bounded(Some(std::time::Instant::now() + timeout))
+        self.recv_bounded(Some(Deadline::after(timeout)))
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {

@@ -12,6 +12,7 @@
 //! (`tests/net_transport.rs` asserts this for every frame kind).
 
 use crate::error::{Error, Result};
+use crate::obs::{Phase, Span};
 use crate::staleness::Stash;
 use crate::tensor::Tensor;
 
@@ -153,6 +154,17 @@ pub enum Frame {
     Shutdown,
     /// Either direction: fatal error; the receiver tears down.
     Abort { msg: String },
+    /// Worker → coordinator: observability batch — the spans and metric
+    /// samples ([`crate::obs::span`] kind bytes) the worker recorded since
+    /// its last drain. A pure observer message: the coordinator merges it
+    /// into its tracer/registry (or drops it when none is attached) and
+    /// never replies, and its bytes are excluded from the per-module
+    /// `net_bytes_*` counters it helps report.
+    Obs {
+        worker_id: u32,
+        spans: Vec<Span>,
+        samples: Vec<(String, u8, f64)>,
+    },
 }
 
 impl Frame {
@@ -174,11 +186,16 @@ impl Frame {
             Frame::RestoreDone { .. } => "restore-done",
             Frame::Shutdown => "shutdown",
             Frame::Abort { .. } => "abort",
+            Frame::Obs { .. } => "obs",
         }
     }
 }
 
 // ---- encoding ----
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -376,6 +393,26 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             buf.push(0x0F);
             put_str(&mut buf, msg);
         }
+        Frame::Obs { worker_id, spans, samples } => {
+            buf.push(0x10);
+            put_u32(&mut buf, *worker_id);
+            put_u32(&mut buf, spans.len() as u32);
+            for sp in spans {
+                put_u16(&mut buf, sp.track);
+                buf.push(sp.phase as u8);
+                put_u16(&mut buf, sp.s);
+                put_u16(&mut buf, sp.k);
+                put_i64(&mut buf, sp.t);
+                put_u64(&mut buf, sp.start_us);
+                put_u64(&mut buf, sp.dur_us);
+            }
+            put_u32(&mut buf, samples.len() as u32);
+            for (name, kind, value) in samples {
+                buf.push(*kind);
+                put_str(&mut buf, name);
+                put_f64(&mut buf, *value);
+            }
+        }
     }
     buf
 }
@@ -413,6 +450,10 @@ impl<'a> Reader<'a> {
     fn u8(&mut self) -> Result<u8> {
         let [b] = self.array::<1>()?;
         Ok(b)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.array::<2>()?))
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -623,6 +664,30 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
         0x0D => Frame::RestoreDone { worker_id: r.u32()? },
         0x0E => Frame::Shutdown,
         0x0F => Frame::Abort { msg: r.str()? },
+        0x10 => {
+            let worker_id = r.u32()?;
+            let n = r.count()?;
+            let mut spans = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let track = r.u16()?;
+                let phase = Phase::from_u8(r.u8()?)?;
+                let s = r.u16()?;
+                let k = r.u16()?;
+                let t = r.i64()?;
+                let start_us = r.u64()?;
+                let dur_us = r.u64()?;
+                spans.push(Span { track, phase, s, k, t, start_us, dur_us });
+            }
+            let n = r.count()?;
+            let mut samples = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let kind = r.u8()?;
+                let name = r.str()?;
+                let value = r.f64()?;
+                samples.push((name, kind, value));
+            }
+            Frame::Obs { worker_id, spans, samples }
+        }
         other => {
             return Err(Error::Net(format!("unknown frame tag 0x{other:02x}")));
         }
@@ -695,6 +760,89 @@ mod tests {
         let bytes = vec![WIRE_VERSION, 0xEE];
         let err = decode(&bytes).unwrap_err();
         assert!(err.to_string().contains("unknown frame tag"), "{err}");
+    }
+
+    #[test]
+    fn obs_frame_roundtrips() {
+        let f = Frame::Obs {
+            worker_id: 2,
+            spans: vec![
+                Span {
+                    track: 3,
+                    phase: Phase::Bwd,
+                    s: 1,
+                    k: 1,
+                    t: 7,
+                    start_us: 123_456,
+                    dur_us: 789,
+                },
+                Span {
+                    track: 0,
+                    phase: Phase::WireRx,
+                    s: u16::MAX,
+                    k: u16::MAX,
+                    t: -1,
+                    start_us: 0,
+                    dur_us: 0,
+                },
+            ],
+            samples: vec![
+                ("stash_hits".into(), 0, 4.0),
+                ("mailbox_depth".into(), 1, 2.0),
+                ("gossip_wait_s".into(), 2, 0.025),
+            ],
+        };
+        assert_eq!(decode(&encode(&f)).unwrap(), f);
+        // empty batches are legal (a worker with nothing new still drains)
+        let empty = Frame::Obs { worker_id: 0, spans: vec![], samples: vec![] };
+        assert_eq!(decode(&encode(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn obs_frame_rejects_unknown_phase_byte() {
+        let f = Frame::Obs {
+            worker_id: 0,
+            spans: vec![Span {
+                track: 0,
+                phase: Phase::Fwd,
+                s: 0,
+                k: 0,
+                t: 0,
+                start_us: 0,
+                dur_us: 0,
+            }],
+            samples: vec![],
+        };
+        let mut bytes = encode(&f);
+        // phase byte sits after [version][tag][worker_id u32][count u32][track u16]
+        let phase_off = 1 + 1 + 4 + 4 + 2;
+        bytes[phase_off] = 250;
+        let err = decode(&bytes).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("phase"), "{err}");
+    }
+
+    #[test]
+    fn obs_frame_rejects_truncation_everywhere() {
+        let f = Frame::Obs {
+            worker_id: 1,
+            spans: vec![Span {
+                track: 2,
+                phase: Phase::Gossip,
+                s: 0,
+                k: 1,
+                t: 3,
+                start_us: 55,
+                dur_us: 9,
+            }],
+            samples: vec![("net_hits".into(), 0, 1.0)],
+        };
+        let full = encode(&f);
+        for cut in 0..full.len() {
+            let err = decode(&full[..cut]).unwrap_err();
+            assert!(matches!(err, Error::Net(_)), "cut={cut}: {err}");
+        }
+        assert_eq!(decode(&full).unwrap(), f);
     }
 
     #[test]

@@ -30,6 +30,8 @@ use crate::error::{Error, Result};
 use crate::net::transport::{TcpTransport, Transport};
 use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
 use crate::nn::init::init_params;
+use crate::obs::span::{METRIC_COUNTER_ADD, METRIC_GAUGE_SET};
+use crate::obs::{ObsBuffer, Phase, Span, DEFAULT_SPAN_CAPACITY};
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{partition_layers, Schedule};
@@ -220,6 +222,11 @@ struct WorkerRuntime {
     pending_grad: BTreeMap<(usize, usize, i64), Tensor>,
     /// gossip replies that arrived while awaiting another agent's
     pending_mixed: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>>,
+    /// local span/metric buffer, drained into one `Frame::Obs` per
+    /// iteration (the coordinator merges or drops it — pure observer)
+    obs: ObsBuffer,
+    /// whether the clock origin has been re-anchored to the first `Step`
+    obs_anchored: bool,
 }
 
 impl WorkerRuntime {
@@ -299,7 +306,23 @@ impl WorkerRuntime {
             pending_act: BTreeMap::new(),
             pending_grad: BTreeMap::new(),
             pending_mixed: BTreeMap::new(),
+            obs: ObsBuffer::new(DEFAULT_SPAN_CAPACITY),
+            obs_anchored: false,
         })
+    }
+
+    /// Close a span opened at `start_us` on agent (s, k)'s track.
+    fn obs_span(&mut self, phase: Phase, s: usize, k: usize, t: i64, start_us: u64) {
+        let dur_us = self.obs.now_us().saturating_sub(start_us);
+        self.obs.record(Span {
+            track: (s * self.cfg.k + k) as u16,
+            phase,
+            s: s as u16,
+            k: k as u16,
+            t,
+            start_us,
+            dur_us,
+        });
     }
 
     fn hosts(&self, s: usize, k: usize) -> bool {
@@ -384,10 +407,18 @@ impl WorkerRuntime {
         let mut losses: Vec<(u32, f32)> = Vec::new();
         let mut corrections: Vec<(u32, u32, f64)> = Vec::new();
 
+        // re-anchor the span clock to the first Step so this worker's
+        // tracks roughly align with the coordinator's run loop
+        if !self.obs_anchored {
+            self.obs.reset_clock();
+            self.obs_anchored = true;
+        }
+
         // ---- forward phase (ascending s, k) ----
         for i in 0..self.agents.len() {
             let (s, k) = (self.agents[i].s, self.agents[i].k);
             let Some(tau) = sched.forward_batch(iter, k) else { continue };
+            let fwd_open = self.obs.now_us();
             if k == 0 {
                 let a = &mut self.agents[i];
                 let sampler = a
@@ -406,7 +437,9 @@ impl WorkerRuntime {
                 a.batch_oh = oh;
                 out?;
             } else {
+                let wait_open = self.obs.now_us();
                 let msg = self.await_act(t, s, k, tau)?;
+                self.obs_span(Phase::WireRx, s, k, iter, wait_open);
                 self.agents[i].agent.forward(&*self.backend, tau, &msg.x, &msg.onehot)?;
             }
             if k + 1 < k_modules {
@@ -424,18 +457,23 @@ impl WorkerRuntime {
                     })?;
                 }
             }
+            self.obs_span(Phase::Fwd, s, k, iter, fwd_open);
         }
 
         // ---- backward + update phase (descending) ----
         for i in (0..self.agents.len()).rev() {
             let (s, k) = (self.agents[i].s, self.agents[i].k);
             let Some(tau) = sched.backward_batch(iter, k) else { continue };
+            let bwd_open = self.obs.now_us();
             let g_in: Option<Tensor> = if k == k_modules - 1 {
                 let loss = self.agents[i].agent.loss_of(&*self.backend, tau)?;
                 losses.push((s as u32, loss));
                 None
             } else {
-                Some(self.await_grad(t, s, k, tau)?)
+                let wait_open = self.obs.now_us();
+                let g = self.await_grad(t, s, k, tau)?;
+                self.obs_span(Phase::WireRx, s, k, iter, wait_open);
+                Some(g)
             };
             self.agents[i].agent.backward(&*self.backend, tau, g_in.as_ref())?;
             if k > 0 {
@@ -446,8 +484,11 @@ impl WorkerRuntime {
                     t.send(&Frame::Grad { s: s as u32, k_to: (k - 1) as u32, tau, g })?;
                 }
             }
+            self.obs_span(Phase::Bwd, s, k, iter, bwd_open);
+            let opt_open = self.obs.now_us();
             let scale = self.agents[i].grad_scale;
             let norm = self.agents[i].agent.apply_update(eta, scale)?;
+            self.obs_span(Phase::Opt, s, k, iter, opt_open);
             corrections.push((s as u32, k as u32, norm));
         }
 
@@ -465,6 +506,7 @@ impl WorkerRuntime {
         }
         for i in 0..self.agents.len() {
             let (s, k) = (self.agents[i].s, self.agents[i].k);
+            let gossip_open = self.obs.now_us();
             let mixed = self.await_mixed(t, s, k)?;
             if mixed.len() != self.agents[i].agent.params.len() {
                 return Err(Error::Net(format!(
@@ -474,7 +516,18 @@ impl WorkerRuntime {
                 )));
             }
             self.agents[i].agent.params = mixed;
+            self.obs_span(Phase::Gossip, s, k, iter, gossip_open);
         }
+
+        // ---- ship the observability batch, then report the step ----
+        // the Obs frame travels before StepDone so the coordinator can
+        // merge it inside the same iteration's receive loop; its bytes are
+        // deliberately not part of the per-module net counters
+        self.obs.sample("steps_total", METRIC_COUNTER_ADD, 1.0);
+        self.obs.sample("mailbox_act_depth", METRIC_GAUGE_SET, self.pending_act.len() as f64);
+        self.obs.sample("mailbox_grad_depth", METRIC_GAUGE_SET, self.pending_grad.len() as f64);
+        let (spans, samples) = self.obs.drain();
+        t.send(&Frame::Obs { worker_id: self.worker_id as u32, spans, samples })?;
 
         t.send(&Frame::StepDone {
             worker_id: self.worker_id as u32,

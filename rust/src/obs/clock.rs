@@ -1,0 +1,102 @@
+//! The crate's only gateway to the host's wall clock.
+//!
+//! Lint rule `det-wall-clock` forbids `Instant`/`SystemTime` everywhere
+//! outside `obs/` (see `xtask/src/lint.rs`), so every engine, transport,
+//! and bench reads real time through the handles here. That keeps the
+//! deterministic families honest — they can *hold* a [`WallClock`] for
+//! observability without being able to branch on it by accident — and
+//! gives the tracer one clock origin per process to timestamp spans
+//! against.
+
+use std::time::{Duration, Instant};
+
+/// A monotonic clock anchored at its construction instant.
+///
+/// All span timestamps in a process are microseconds since one
+/// `WallClock` origin, which is what makes per-track timestamps
+/// comparable within a trace. Cloning shares the origin.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { origin: Instant::now() }
+    }
+
+    /// Microseconds elapsed since the clock's origin.
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Seconds elapsed since the clock's origin.
+    pub fn elapsed_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// Re-anchor the origin to the current instant (dist workers reset at
+    /// the first `Step` frame so their track roughly aligns with the
+    /// coordinator's).
+    pub fn reset(&mut self) {
+        self.origin = Instant::now();
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+/// An opaque point in the future, handed to blocking receives so the
+/// transport layer can poll against real time without naming `Instant`
+/// itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `timeout` from now.
+    pub fn after(timeout: Duration) -> Deadline {
+        Deadline { at: Instant::now() + timeout }
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let clk = WallClock::new();
+        let a = clk.now_us();
+        let b = clk.now_us();
+        assert!(b >= a);
+        assert!(clk.elapsed_s() >= 0.0);
+    }
+
+    #[test]
+    fn reset_rewinds_the_origin() {
+        let mut clk = WallClock::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(clk.now_us() >= 2_000);
+        clk.reset();
+        assert!(clk.now_us() < 2_000);
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(d.expired());
+        let far = Deadline::after(Duration::from_secs(3600));
+        assert!(!far.expired());
+    }
+}

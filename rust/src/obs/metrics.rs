@@ -1,0 +1,270 @@
+//! Counters, gauges, and fixed-bucket histograms behind a registry.
+//!
+//! The contract that lets engines update metrics from their hottest
+//! loops: **registration allocates, updates never do**. A handle
+//! (`Arc<Counter>` etc.) is obtained once at setup; every subsequent
+//! `add`/`set`/`observe` is a handful of relaxed atomic operations on
+//! preallocated storage — which is why `rust/tests/alloc_guard.rs` can
+//! pin steady-state steps at zero allocations *with* a registry attached,
+//! and why lint rule `hot-alloc` stays clean.
+//!
+//! Snapshots (`MetricsRegistry::to_json`) walk a `BTreeMap`, so exported
+//! metric order is deterministic regardless of registration order.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written value (f64 stored as bits in one atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: bucket `i` counts observations `<= bounds[i]`,
+/// with one implicit overflow bucket above the last bound. The running
+/// sum is kept in integer micro-units so `observe` stays a pure atomic
+/// add (no CAS loop, no float atomics).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Box<[f64]>,
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be finite and strictly increasing; the storage for
+    /// all buckets is allocated here, once.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds not increasing");
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds: bounds.into(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    /// Evenly spaced bounds over `[0, max]` (`n` finite buckets + overflow).
+    pub fn linear(max: f64, n: usize) -> Histogram {
+        let n = n.max(1);
+        let bounds: Vec<f64> = (1..=n).map(|i| max * i as f64 / n as f64).collect();
+        Histogram::new(&bounds)
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let micro = if v.is_finite() && v > 0.0 { (v * 1e6) as u64 } else { 0 };
+        self.sum_micro.fetch_add(micro, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations (micro-unit resolution).
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Per-bucket counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+}
+
+/// Name → instrument registry shared by a session and its engine.
+///
+/// `counter`/`gauge`/`histogram` get-or-create: the first call allocates
+/// the instrument, later calls (any thread) return the same handle.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            lock(&self.counters).entry(name.to_string()).or_insert_with(Arc::default),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(lock(&self.gauges).entry(name.to_string()).or_insert_with(Arc::default))
+    }
+
+    /// Get-or-create a histogram; `bounds` are used only on first
+    /// creation (later callers share the existing buckets).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        Arc::clone(
+            lock(&self.histograms)
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new(bounds))),
+        )
+    }
+
+    /// Apply one remote sample shipped over `Frame::Obs`: kind bytes per
+    /// `crate::obs::span` (`METRIC_*` constants). Unknown kinds are
+    /// ignored — a newer worker must not wedge an older coordinator.
+    pub fn apply_sample(&self, name: &str, kind: u8, value: f64) {
+        use crate::obs::span::{METRIC_COUNTER_ADD, METRIC_GAUGE_SET, METRIC_HISTOGRAM_OBSERVE};
+        match kind {
+            METRIC_COUNTER_ADD => self.counter(name).add(value.max(0.0) as u64),
+            METRIC_GAUGE_SET => self.gauge(name).set(value),
+            METRIC_HISTOGRAM_OBSERVE => {
+                // remote histograms default to a decade of log-ish buckets;
+                // local registrants that got there first keep their bounds
+                self.histogram(name, &[0.001, 0.01, 0.1, 1.0, 10.0, 100.0]).observe(value)
+            }
+            _ => {}
+        }
+    }
+
+    /// Deterministically ordered snapshot of every instrument.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let mut counters = Json::obj();
+        for (name, c) in lock(&self.counters).iter() {
+            counters.set(name, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in lock(&self.gauges).iter() {
+            gauges.set(name, g.get());
+        }
+        let mut hists = Json::obj();
+        for (name, h) in lock(&self.histograms).iter() {
+            let mut hj = Json::obj();
+            hj.set("count", h.count())
+                .set("sum", h.sum())
+                .set("mean", h.mean())
+                .set("bounds", h.bounds().to_vec())
+                .set("buckets", h.bucket_counts().iter().map(|&c| c as usize).collect::<Vec<_>>());
+            hists.set(name, hj);
+        }
+        j.set("counters", counters).set("gauges", gauges).set("histograms", hists);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("iters_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(reg.counter("iters_total").get(), 5, "same handle by name");
+        let g = reg.gauge("train_loss_last");
+        g.set(2.25);
+        assert_eq!(g.get(), 2.25);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.bucket_counts(), vec![1, 1, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 105.0).abs() < 1e-3);
+        assert!((h.mean() - 26.25).abs() < 1e-3);
+    }
+
+    #[test]
+    fn linear_bounds_cover_the_range() {
+        let h = Histogram::linear(8.0, 4);
+        assert_eq!(h.bounds(), &[2.0, 4.0, 6.0, 8.0]);
+        h.observe(8.0); // on the last bound: counted, not overflow
+        assert_eq!(h.bucket_counts(), vec![0, 0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn remote_samples_apply_by_kind() {
+        use crate::obs::span::{METRIC_COUNTER_ADD, METRIC_GAUGE_SET, METRIC_HISTOGRAM_OBSERVE};
+        let reg = MetricsRegistry::new();
+        reg.apply_sample("w0_mailbox_hits", METRIC_COUNTER_ADD, 3.0);
+        reg.apply_sample("w0_mailbox_depth", METRIC_GAUGE_SET, 2.0);
+        reg.apply_sample("w0_wait_s", METRIC_HISTOGRAM_OBSERVE, 0.05);
+        reg.apply_sample("ignored", 200, 1.0); // unknown kind: no-op
+        assert_eq!(reg.counter("w0_mailbox_hits").get(), 3);
+        assert_eq!(reg.gauge("w0_mailbox_depth").get(), 2.0);
+        assert_eq!(reg.histogram("w0_wait_s", &[1.0]).count(), 1);
+    }
+
+    #[test]
+    fn json_snapshot_is_deterministic() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b").add(2);
+        reg.counter("a").add(1);
+        reg.histogram("h", &[1.0]).observe(0.5);
+        let j = reg.to_json();
+        let text = j.to_string_compact();
+        // BTreeMap ordering: "a" serializes before "b"
+        assert!(text.find("\"a\"").unwrap() < text.find("\"b\"").unwrap());
+        assert_eq!(j.get("counters").unwrap().get("a").unwrap().as_usize().unwrap(), 1);
+        let h = j.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,47 @@
+//! Observability: span tracing, metrics, and wall-clock access for all
+//! three engines — zero external dependencies.
+//!
+//! * [`clock`] — the crate's only gateway to `Instant`/`SystemTime`
+//!   (lint rule `det-wall-clock` bans them everywhere else outside
+//!   tests); engines and transports hold [`WallClock`]/[`Deadline`]
+//!   handles instead of naming the std types.
+//! * [`span`] — phase spans ([`Phase`]: `fwd`, `bwd`, `opt`,
+//!   `compensate`, `gossip`, `stash_wait`, `barrier`, `wire_tx/rx`, ...)
+//!   recorded into the bounded, preallocated [`Tracer`]; dist workers
+//!   stage theirs in an [`ObsBuffer`] and ship them over `Frame::Obs`.
+//! * [`metrics`] — [`MetricsRegistry`] of counters/gauges/fixed-bucket
+//!   histograms.
+//! * [`trace`] — Chrome trace-event JSON export (Perfetto-loadable),
+//!   written by `sgs train/launch --trace-out FILE`.
+//! * [`report`] — the `sgs trace-report` analyzer: per-module/per-phase
+//!   breakdowns, pipeline-fill vs steady-state split, bubble/straggler
+//!   summary.
+//! * [`timer`] — stopwatch + sampling helpers for benches and cost-model
+//!   calibration (re-exported as `crate::util::timer`).
+//!
+//! # Contracts
+//!
+//! **Determinism (pure observer).** Attaching a tracer or registry never
+//! changes what an engine computes: the sim engine's event stream and
+//! final parameters are bit-identical with tracing on or off
+//! (`rust/tests/obs_purity.rs`). Sim spans are synthesized from the
+//! schedule and the *sim clock* — the deterministic engine never reads
+//! real time.
+//!
+//! **Zero allocation after warmup.** Metric handles are registered once
+//! at setup; every hot-path update is a relaxed atomic on preallocated
+//! storage. Span buffers are preallocated and bounded: overflow drops
+//! (and counts) spans instead of growing. `rust/tests/alloc_guard.rs`
+//! pins steady-state steps at zero allocations with a registry attached.
+
+pub mod clock;
+pub mod metrics;
+pub mod report;
+pub mod span;
+pub mod timer;
+pub mod trace;
+
+pub use clock::{Deadline, WallClock};
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use span::{ObsBuffer, Phase, Span, Tracer, DEFAULT_SPAN_CAPACITY, NO_COORD};
+pub use trace::{chrome_trace_json, write_chrome_trace, TraceMeta};

@@ -1,0 +1,606 @@
+//! The `sgs trace-report` analyzer: load a Chrome trace produced by
+//! `--trace-out`, validate it, and reduce it to the numbers the paper's
+//! timing argument needs — per-module/per-phase breakdowns, the
+//! pipeline-fill vs steady-state split, and a bubble/straggler summary.
+//!
+//! Validation doubles as the CI `trace-smoke` schema gate: malformed
+//! events, non-monotonic per-track timestamps, or a dist trace missing a
+//! worker track are typed errors (non-zero exit), never panics.
+//!
+//! Durations are reported as **exclusive** (self) time: a span's total
+//! minus the spans nested inside it on the same track. Exclusive phase
+//! totals partition each track's busy time, so they sum to the track's
+//! span coverage instead of double-counting parents and children.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+fn bad(msg: impl std::fmt::Display) -> Error {
+    Error::Other(format!("trace-report: {msg}"))
+}
+
+/// One parsed `"ph": "X"` event.
+#[derive(Debug, Clone)]
+struct Ev {
+    pid: usize,
+    tid: usize,
+    ts: f64,
+    dur: f64,
+    name: String,
+    /// iteration index from `args.t` (absent on foreign traces)
+    t: Option<i64>,
+    /// module index from `args.k`
+    k: Option<usize>,
+}
+
+/// Per-track (process × thread) aggregate.
+#[derive(Debug, Clone)]
+pub struct TrackStats {
+    pub pid: usize,
+    pub tid: usize,
+    /// `thread_name` metadata when present, else "pid/tid"
+    pub name: String,
+    pub spans: usize,
+    /// last span end − first span start, seconds
+    pub extent_s: f64,
+    /// sum of top-level span durations, seconds
+    pub busy_s: f64,
+    /// exclusive seconds in wait phases (stash_wait, barrier, wire_rx)
+    pub wait_s: f64,
+}
+
+/// Everything `sgs trace-report` prints, in structured form.
+#[derive(Debug)]
+pub struct TraceReport {
+    pub engine: String,
+    pub s: usize,
+    pub k: usize,
+    pub iters: usize,
+    pub warmup_iters: usize,
+    pub workers: usize,
+    pub clock: String,
+    pub wall_time_s: f64,
+    pub iter_time_s: f64,
+    pub dropped_spans: u64,
+    pub n_spans: usize,
+    pub tracks: Vec<TrackStats>,
+    /// exclusive seconds per phase name, all tracks
+    pub phase_totals: BTreeMap<String, f64>,
+    /// exclusive seconds per phase, per module index (len = k when known)
+    pub per_module: Vec<BTreeMap<String, f64>>,
+    /// exclusive seconds spent in iterations before/after `warmup_iters`
+    pub fill_s: f64,
+    pub steady_s: f64,
+    /// pid-0 top-level span seconds divided by the run's measured time
+    /// (wall clock, or total sim time for sim traces) — the acceptance
+    /// figure: phase totals must cover the run
+    pub coverage: f64,
+    /// (straggler track name, seconds it finished after the fastest
+    /// worker) for dist traces with ≥ 2 workers
+    pub straggler: Option<(String, f64)>,
+}
+
+const WAIT_PHASES: [&str; 3] = ["stash_wait", "barrier", "wire_rx"];
+
+fn parse_events(doc: &Json) -> Result<(Vec<Ev>, BTreeMap<(usize, usize), String>)> {
+    let events = doc
+        .get("traceEvents")
+        .map_err(|_| bad("no traceEvents array — not a Chrome trace"))?
+        .as_arr()
+        .map_err(|_| bad("traceEvents is not an array"))?;
+    let mut xs = Vec::new();
+    let mut names = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .map_err(|_| bad(format!("event {i}: missing \"ph\"")))?;
+        match ph {
+            "M" => {
+                let kind = e.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                if kind == "thread_name" {
+                    let pid = e.get("pid").and_then(|v| v.as_usize()).unwrap_or(0);
+                    let tid = e.get("tid").and_then(|v| v.as_usize()).unwrap_or(0);
+                    if let Some(n) =
+                        e.opt("args").and_then(|a| a.opt("name")).and_then(|n| n.as_str().ok())
+                    {
+                        names.insert((pid, tid), n.to_string());
+                    }
+                }
+            }
+            "X" => {
+                let field = |key: &str| -> Result<f64> {
+                    e.get(key)
+                        .and_then(|v| v.as_f64())
+                        .map_err(|_| bad(format!("event {i}: missing numeric {key:?}")))
+                };
+                let ts = field("ts")?;
+                let dur = field("dur")?;
+                if ts < 0.0 || dur < 0.0 {
+                    return Err(bad(format!("event {i}: negative ts/dur")));
+                }
+                let name = e
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .map_err(|_| bad(format!("event {i}: missing name")))?
+                    .to_string();
+                let args = e.opt("args");
+                let t = args
+                    .and_then(|a| a.opt("t"))
+                    .and_then(|v| v.as_f64().ok())
+                    .map(|v| v as i64);
+                let k = args.and_then(|a| a.opt("k")).and_then(|v| v.as_usize().ok());
+                xs.push(Ev {
+                    pid: field("pid")? as usize,
+                    tid: field("tid")? as usize,
+                    ts,
+                    dur,
+                    name,
+                    t,
+                    k,
+                });
+            }
+            // other phase kinds (counters, async, ...) are legal Chrome
+            // trace content we simply don't analyze
+            _ => {}
+        }
+    }
+    Ok((xs, names))
+}
+
+fn validate(xs: &[Ev], workers: usize) -> Result<()> {
+    if xs.is_empty() {
+        return Err(bad("trace contains no complete (\"X\") span events"));
+    }
+    // per-track timestamps must be monotonic in file order
+    let mut last: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for e in xs {
+        if let Some(prev) = last.get(&(e.pid, e.tid)) {
+            if e.ts < *prev {
+                return Err(bad(format!(
+                    "track pid {} tid {} goes backwards: ts {} after {}",
+                    e.pid, e.tid, e.ts, prev
+                )));
+            }
+        }
+        last.insert((e.pid, e.tid), e.ts);
+    }
+    // a dist trace must carry every worker's track
+    for w in 0..workers {
+        let pid = w + 1;
+        if !xs.iter().any(|e| e.pid == pid) {
+            return Err(bad(format!("worker {w} (pid {pid}) has no spans")));
+        }
+    }
+    Ok(())
+}
+
+/// Exclusive (self) duration per span of one track, computed with a
+/// containment stack over `(ts, -dur)`-sorted spans.
+fn exclusive_durs(track: &mut [Ev]) -> Vec<f64> {
+    track.sort_by(|a, b| {
+        a.ts.partial_cmp(&b.ts).unwrap_or(std::cmp::Ordering::Equal).then(
+            b.dur.partial_cmp(&a.dur).unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    let mut excl: Vec<f64> = track.iter().map(|e| e.dur).collect();
+    let mut stack: Vec<usize> = Vec::new(); // indices of open ancestors
+    for i in 0..track.len() {
+        while let Some(&top) = stack.last() {
+            if track[top].ts + track[top].dur <= track[i].ts {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&parent) = stack.last() {
+            // nested span: its time is not the parent's self time
+            excl[parent] -= track[i].dur;
+        }
+        stack.push(i);
+    }
+    excl
+}
+
+/// Parse + validate + aggregate a Chrome trace document.
+pub fn analyze(doc: &Json) -> Result<TraceReport> {
+    let meta = doc.opt("sgsMeta");
+    let meta_usize =
+        |key: &str| meta.and_then(|m| m.opt(key)).and_then(|v| v.as_usize().ok()).unwrap_or(0);
+    let meta_f64 =
+        |key: &str| meta.and_then(|m| m.opt(key)).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    let meta_str = |key: &str| {
+        meta.and_then(|m| m.opt(key))
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("unknown")
+            .to_string()
+    };
+    let workers = meta_usize("workers");
+    let warmup_iters = meta_usize("warmup_iters");
+
+    let (events, names) = parse_events(doc)?;
+    validate(&events, workers)?;
+
+    // group by track
+    let mut by_track: BTreeMap<(usize, usize), Vec<Ev>> = BTreeMap::new();
+    for e in &events {
+        by_track.entry((e.pid, e.tid)).or_default().push(e.clone());
+    }
+
+    let mut phase_totals: BTreeMap<String, f64> = BTreeMap::new();
+    let k_modules = meta_usize("k");
+    let mut per_module: Vec<BTreeMap<String, f64>> = vec![BTreeMap::new(); k_modules];
+    let (mut fill_s, mut steady_s) = (0.0, 0.0);
+    let mut tracks = Vec::new();
+    let mut pid0_busy = 0.0;
+
+    for ((pid, tid), mut track) in by_track {
+        let excl = exclusive_durs(&mut track);
+        let start = track.iter().map(|e| e.ts).fold(f64::INFINITY, f64::min);
+        let end = track.iter().map(|e| e.ts + e.dur).fold(0.0, f64::max);
+        let mut wait_us = 0.0;
+        // busy: top-level spans only (those whose start is not inside an
+        // earlier span's interval — recompute cheaply via a sweep)
+        let mut busy_us = 0.0;
+        let mut open_until = f64::NEG_INFINITY;
+        for e in track.iter() {
+            if e.ts >= open_until {
+                busy_us += e.dur;
+                open_until = e.ts + e.dur;
+            }
+        }
+        for (e, ex) in track.iter().zip(&excl) {
+            let secs = ex / 1e6;
+            *phase_totals.entry(e.name.clone()).or_insert(0.0) += secs;
+            if WAIT_PHASES.contains(&e.name.as_str()) {
+                wait_us += ex;
+            }
+            if let Some(k) = e.k {
+                if k < per_module.len() {
+                    *per_module[k].entry(e.name.clone()).or_insert(0.0) += secs;
+                }
+            }
+            if let Some(t) = e.t {
+                if t < warmup_iters as i64 {
+                    fill_s += secs;
+                } else {
+                    steady_s += secs;
+                }
+            }
+        }
+        if pid == 0 {
+            pid0_busy += busy_us / 1e6;
+        }
+        tracks.push(TrackStats {
+            pid,
+            tid,
+            name: names.get(&(pid, tid)).cloned().unwrap_or_else(|| format!("{pid}/{tid}")),
+            spans: track.len(),
+            extent_s: (end - start).max(0.0) / 1e6,
+            busy_s: busy_us / 1e6,
+            wait_s: wait_us / 1e6,
+        });
+    }
+
+    let clock = meta_str("clock");
+    let wall_time_s = meta_f64("wall_time_s");
+    let iter_time_s = meta_f64("iter_time_s");
+    let iters = meta_usize("iters");
+    // the denominator the phase totals should cover: measured wall time
+    // for real-clock traces, total modelled time for sim traces
+    let denom = if clock == "sim" {
+        let sim_total = iters as f64 * if iter_time_s > 0.0 { iter_time_s } else { 1.0 };
+        sim_total
+    } else {
+        wall_time_s
+    };
+    let coverage = if denom > 0.0 { pid0_busy / denom } else { 0.0 };
+
+    // straggler: which worker's track finished last, and by how much
+    let mut worker_ends: BTreeMap<usize, (f64, String)> = BTreeMap::new();
+    for tr in &tracks {
+        if tr.pid == 0 {
+            continue;
+        }
+        let end = tr.extent_s; // extents share a rough origin (clock reset at first Step)
+        let entry = worker_ends.entry(tr.pid).or_insert((0.0, tr.name.clone()));
+        if end > entry.0 {
+            *entry = (end, tr.name.clone());
+        }
+    }
+    let straggler = if worker_ends.len() >= 2 {
+        let min = worker_ends.values().map(|(e, _)| *e).fold(f64::INFINITY, f64::min);
+        worker_ends
+            .values()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(e, n)| (n.clone(), e - min))
+    } else {
+        None
+    };
+
+    Ok(TraceReport {
+        engine: meta_str("engine"),
+        s: meta_usize("s"),
+        k: k_modules,
+        iters,
+        warmup_iters,
+        workers,
+        clock,
+        wall_time_s,
+        iter_time_s,
+        dropped_spans: meta_f64("dropped_spans") as u64,
+        n_spans: events.len(),
+        tracks,
+        phase_totals,
+        per_module,
+        fill_s,
+        steady_s,
+        coverage,
+        straggler,
+    })
+}
+
+/// Load a trace file and analyze it.
+pub fn analyze_file(path: &std::path::Path) -> Result<TraceReport> {
+    let doc = Json::from_file(path)?;
+    analyze(&doc)
+}
+
+impl TraceReport {
+    /// Human-readable report (the default `sgs trace-report` output).
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "engine {}, S={} K={}, {} iters ({} fill), {} spans on {} tracks ({} workers)",
+            self.engine,
+            self.s,
+            self.k,
+            self.iters,
+            self.warmup_iters,
+            self.n_spans,
+            self.tracks.len(),
+            self.workers,
+        );
+        if self.dropped_spans > 0 {
+            let _ = writeln!(out, "WARNING: {} spans dropped (buffer full)", self.dropped_spans);
+        }
+        let total: f64 = self.phase_totals.values().sum();
+        let _ = writeln!(out, "phase breakdown (exclusive time):");
+        for (name, secs) in &self.phase_totals {
+            let pct = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            let _ = writeln!(out, "  {name:<12} {secs:>10.6}s  {pct:5.1}%");
+        }
+        if self.per_module.iter().any(|m| !m.is_empty()) {
+            let _ = writeln!(out, "per-module breakdown:");
+            for (k, phases) in self.per_module.iter().enumerate() {
+                let parts: Vec<String> =
+                    phases.iter().map(|(n, s)| format!("{n} {s:.6}s")).collect();
+                let _ = writeln!(out, "  module {k}: {}", parts.join("  "));
+            }
+        }
+        let span_total = self.fill_s + self.steady_s;
+        if span_total > 0.0 {
+            let _ = writeln!(
+                out,
+                "pipeline fill {:.6}s ({:.1}%) / steady state {:.6}s ({:.1}%)",
+                self.fill_s,
+                100.0 * self.fill_s / span_total,
+                self.steady_s,
+                100.0 * self.steady_s / span_total,
+            );
+        }
+        let _ = writeln!(out, "per-track:");
+        for tr in &self.tracks {
+            let bubble = (tr.extent_s - tr.busy_s).max(0.0);
+            let _ = writeln!(
+                out,
+                "  pid {} tid {} {:<14} {:>4} spans  extent {:.6}s  busy {:.6}s  \
+                 wait {:.6}s  bubble {:.6}s",
+                tr.pid, tr.tid, tr.name, tr.spans, tr.extent_s, tr.busy_s, tr.wait_s, bubble,
+            );
+        }
+        if let Some((name, behind)) = &self.straggler {
+            let _ = writeln!(out, "straggler: {name} finished {:.6}s after the fastest worker", behind);
+        }
+        let denom_kind = if self.clock == "sim" { "modelled sim time" } else { "measured wall time" };
+        let denom = if self.coverage > 0.0 {
+            self.tracks.iter().filter(|t| t.pid == 0).map(|t| t.busy_s).sum::<f64>()
+                / self.coverage
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            out,
+            "coverage: pid-0 phase totals {:.6}s = {:.1}% of {denom_kind} {:.6}s",
+            self.tracks.iter().filter(|t| t.pid == 0).map(|t| t.busy_s).sum::<f64>(),
+            100.0 * self.coverage,
+            denom,
+        );
+        out
+    }
+
+    /// Machine-readable report (`sgs trace-report --json`), ingested by
+    /// `xtask bench-summary --trace`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", "sgs-trace-report/v1")
+            .set("engine", self.engine.as_str())
+            .set("s", self.s)
+            .set("k", self.k)
+            .set("iters", self.iters)
+            .set("warmup_iters", self.warmup_iters)
+            .set("workers", self.workers)
+            .set("clock", self.clock.as_str())
+            .set("wall_time_s", self.wall_time_s)
+            .set("iter_time_s", self.iter_time_s)
+            .set("dropped_spans", self.dropped_spans as usize)
+            .set("n_spans", self.n_spans)
+            .set("fill_s", self.fill_s)
+            .set("steady_s", self.steady_s)
+            .set("coverage", self.coverage);
+        let mut phases = Json::obj();
+        for (name, secs) in &self.phase_totals {
+            phases.set(name, *secs);
+        }
+        j.set("phase_totals_s", phases);
+        let mut modules = Vec::new();
+        for m in &self.per_module {
+            let mut mj = Json::obj();
+            for (name, secs) in m {
+                mj.set(name, *secs);
+            }
+            modules.push(mj);
+        }
+        j.set("per_module_s", Json::Arr(modules));
+        let mut tracks = Vec::new();
+        for tr in &self.tracks {
+            let mut tj = Json::obj();
+            tj.set("pid", tr.pid)
+                .set("tid", tr.tid)
+                .set("name", tr.name.as_str())
+                .set("spans", tr.spans)
+                .set("extent_s", tr.extent_s)
+                .set("busy_s", tr.busy_s)
+                .set("wait_s", tr.wait_s);
+            tracks.push(tj);
+        }
+        j.set("tracks", Json::Arr(tracks));
+        if let Some((name, behind)) = &self.straggler {
+            let mut sj = Json::obj();
+            sj.set("track", name.as_str()).set("behind_s", *behind);
+            j.set("straggler", sj);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+    use crate::obs::span::{Phase, Span, Tracer, NO_COORD};
+    use crate::obs::trace::{chrome_trace_json, TraceMeta};
+
+    fn meta(engine: &str, workers: usize, clock: &'static str) -> TraceMeta {
+        TraceMeta {
+            engine: engine.into(),
+            s: 1,
+            k: 2,
+            iters: 4,
+            warmup_iters: 2,
+            iter_time_s: 0.0,
+            wall_time_s: 0.001,
+            workers,
+            clock,
+        }
+    }
+
+    fn span(track: u16, phase: Phase, k: u16, t: i64, start_us: u64, dur_us: u64) -> Span {
+        Span { track, phase, s: 0, k, t, start_us, dur_us }
+    }
+
+    #[test]
+    fn analyze_aggregates_phases_and_modules() {
+        let tr = Tracer::new(32);
+        // track 0: fwd(100) then nested-free bwd(300); track 1 waits
+        tr.record(span(0, Phase::Fwd, 0, 0, 0, 100));
+        tr.record(span(0, Phase::Bwd, 0, 2, 100, 300));
+        tr.record(span(1, Phase::StashWait, 1, 2, 0, 50));
+        let doc = chrome_trace_json(&tr, None, &meta("threaded", 0, "wall"));
+        let rep = analyze(&doc).unwrap();
+        assert_eq!(rep.n_spans, 3);
+        assert!((rep.phase_totals["fwd"] - 100e-6).abs() < 1e-12);
+        assert!((rep.phase_totals["bwd"] - 300e-6).abs() < 1e-12);
+        assert!((rep.per_module[0]["fwd"] - 100e-6).abs() < 1e-12);
+        assert!((rep.per_module[1]["stash_wait"] - 50e-6).abs() < 1e-12);
+        // t=0 is fill (warmup 2), t=2 is steady
+        assert!((rep.fill_s - 100e-6).abs() < 1e-12);
+        assert!((rep.steady_s - 350e-6).abs() < 1e-12);
+        let w = &rep.tracks[1];
+        assert!((w.wait_s - 50e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_spans_report_exclusive_time() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Step, NO_COORD, 0, 0, 1000));
+        tr.record(span(0, Phase::GossipMix, NO_COORD, 0, 200, 300));
+        let doc = chrome_trace_json(&tr, None, &meta("dist", 0, "wall"));
+        let rep = analyze(&doc).unwrap();
+        assert!((rep.phase_totals["step"] - 700e-6).abs() < 1e-12, "self time only");
+        assert!((rep.phase_totals["gossip_mix"] - 300e-6).abs() < 1e-12);
+        // busy counts the outer span once
+        assert!((rep.tracks[0].busy_s - 1000e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_compares_pid0_busy_to_wall() {
+        let tr = Tracer::new(8);
+        // 1000us of step spans vs 0.001s wall → coverage 1.0
+        tr.record(span(0, Phase::Step, NO_COORD, 0, 0, 600));
+        tr.record(span(0, Phase::Step, NO_COORD, 1, 600, 400));
+        let doc = chrome_trace_json(&tr, None, &meta("dist", 0, "wall"));
+        let rep = analyze(&doc).unwrap();
+        assert!((rep.coverage - 1.0).abs() < 1e-9, "coverage {}", rep.coverage);
+    }
+
+    #[test]
+    fn missing_worker_track_is_a_typed_error() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Step, NO_COORD, 0, 0, 10));
+        tr.record_remote(1, &[span(0, Phase::Fwd, 0, 0, 0, 5)]);
+        // meta says 2 workers but only pid 1 recorded
+        let doc = chrome_trace_json(&tr, None, &meta("dist", 2, "wall"));
+        let err = analyze(&doc).unwrap_err();
+        assert!(err.to_string().contains("worker 1"), "{err}");
+    }
+
+    #[test]
+    fn straggler_is_the_slowest_worker() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Step, NO_COORD, 0, 0, 100));
+        tr.record_remote(1, &[span(0, Phase::Fwd, 0, 0, 0, 100)]);
+        tr.record_remote(2, &[span(0, Phase::Fwd, 0, 0, 0, 400)]);
+        let doc = chrome_trace_json(&tr, None, &meta("dist", 2, "wall"));
+        let rep = analyze(&doc).unwrap();
+        let (name, behind) = rep.straggler.expect("2 workers → straggler summary");
+        assert!((behind - 300e-6).abs() < 1e-12, "{behind}");
+        assert!(name.contains("agent") || name.contains('/'), "{name}");
+    }
+
+    #[test]
+    fn report_json_has_schema_and_phases() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Fwd, 0, 0, 0, 10));
+        let reg = MetricsRegistry::new();
+        reg.counter("iters_total").inc();
+        let doc = chrome_trace_json(&tr, Some(&reg), &meta("sim", 0, "sim"));
+        let rep = analyze(&doc).unwrap();
+        let j = rep.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "sgs-trace-report/v1");
+        assert!(j.get("phase_totals_s").unwrap().opt("fwd").is_some());
+        assert!(j.get("tracks").unwrap().as_arr().unwrap().len() == 1);
+        // text rendering never panics and mentions the engine
+        assert!(rep.render_text().contains("engine sim"));
+    }
+
+    #[test]
+    fn garbage_documents_are_typed_errors() {
+        assert!(analyze(&Json::parse("{}").unwrap()).is_err());
+        let no_spans = Json::parse(r#"{"traceEvents": []}"#).unwrap();
+        assert!(analyze(&no_spans).is_err());
+        let backwards = Json::parse(
+            r#"{"traceEvents": [
+                {"ph":"X","pid":0,"tid":0,"ts":100,"dur":5,"name":"fwd"},
+                {"ph":"X","pid":0,"tid":0,"ts":50,"dur":5,"name":"fwd"}
+            ]}"#,
+        )
+        .unwrap();
+        let err = analyze(&backwards).unwrap_err();
+        assert!(err.to_string().contains("backwards"), "{err}");
+    }
+}

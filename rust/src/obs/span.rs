@@ -1,0 +1,378 @@
+//! Phase spans and the [`Tracer`] they are recorded into.
+//!
+//! A [`Span`] is one contiguous stretch of one track's time spent in one
+//! [`Phase`] — `fwd` on module k of group s, waiting on a stash, mixing
+//! gossip, pushing bytes down the wire. Engines record spans into a
+//! shared `Tracer`, whose storage is **preallocated and bounded**: once
+//! the buffer is full, new spans are counted as dropped instead of
+//! growing the buffer, so tracing never allocates on the hot path and
+//! never OOMs a long run.
+//!
+//! Tracing is a **pure observer**: whether a tracer is attached, and
+//! whatever it records, has zero effect on the training math — the sim
+//! engine's event stream and final parameters are bit-identical with
+//! tracing on or off (pinned by `rust/tests/obs_purity.rs`).
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::obs::clock::WallClock;
+
+/// Default span capacity per process: enough for ~40k spans (tens of
+/// thousands of iterations on a small grid) in a few MB.
+pub const DEFAULT_SPAN_CAPACITY: usize = 1 << 16;
+
+/// What a track was doing during a span. The wire encoding (`as u8`) is
+/// part of the `Frame::Obs` format — append only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// forward pass of one module on one mini-batch
+    Fwd = 0,
+    /// backward pass (stale gradient evaluation)
+    Bwd = 1,
+    /// optimizer update (apply the stale gradient)
+    Opt = 2,
+    /// staleness-compensation correction
+    Compensate = 3,
+    /// gossip exchange: post parameters + absorb the mixed result
+    Gossip = 4,
+    /// waiting on an in-flight stash/mailbox message (act or grad)
+    StashWait = 5,
+    /// iteration barrier / waiting for the coordinator's `Step`
+    Barrier = 6,
+    /// serializing + sending frames on the wire
+    WireTx = 7,
+    /// blocking on frames from the wire
+    WireRx = 8,
+    /// coordinator-side gossip mixing (star topology hub)
+    GossipMix = 9,
+    /// eval/δ cadence probes on the averaged weights
+    Eval = 10,
+    /// one whole engine iteration (outer span on the coordinator track)
+    Step = 11,
+}
+
+impl Phase {
+    /// Stable name used in trace JSON `name`/`cat` fields and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Fwd => "fwd",
+            Phase::Bwd => "bwd",
+            Phase::Opt => "opt",
+            Phase::Compensate => "compensate",
+            Phase::Gossip => "gossip",
+            Phase::StashWait => "stash_wait",
+            Phase::Barrier => "barrier",
+            Phase::WireTx => "wire_tx",
+            Phase::WireRx => "wire_rx",
+            Phase::GossipMix => "gossip_mix",
+            Phase::Eval => "eval",
+            Phase::Step => "step",
+        }
+    }
+
+    /// Decode a wire byte; unknown values are a typed [`Error::Net`]
+    /// (never a panic — span bytes cross the trust boundary in
+    /// `Frame::Obs`).
+    pub fn from_u8(b: u8) -> Result<Phase> {
+        Ok(match b {
+            0 => Phase::Fwd,
+            1 => Phase::Bwd,
+            2 => Phase::Opt,
+            3 => Phase::Compensate,
+            4 => Phase::Gossip,
+            5 => Phase::StashWait,
+            6 => Phase::Barrier,
+            7 => Phase::WireTx,
+            8 => Phase::WireRx,
+            9 => Phase::GossipMix,
+            10 => Phase::Eval,
+            11 => Phase::Step,
+            _ => return Err(Error::Net(format!("unknown span phase byte {b}"))),
+        })
+    }
+
+    /// Every phase, in wire order (reports iterate this for stable
+    /// breakdown ordering).
+    pub fn all() -> [Phase; 12] {
+        [
+            Phase::Fwd,
+            Phase::Bwd,
+            Phase::Opt,
+            Phase::Compensate,
+            Phase::Gossip,
+            Phase::StashWait,
+            Phase::Barrier,
+            Phase::WireTx,
+            Phase::WireRx,
+            Phase::GossipMix,
+            Phase::Eval,
+            Phase::Step,
+        ]
+    }
+}
+
+/// One recorded phase interval on one track.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// track within the owning process: agent index `s*K + k`, or 0 for a
+    /// coordinator/engine-level track
+    pub track: u16,
+    pub phase: Phase,
+    /// data-group index (u16::MAX when not group-scoped, e.g. `gossip_mix`)
+    pub s: u16,
+    /// module index (u16::MAX when not module-scoped)
+    pub k: u16,
+    /// global iteration the span belongs to
+    pub t: i64,
+    /// start, microseconds since the process clock origin
+    pub start_us: u64,
+    /// duration in microseconds
+    pub dur_us: u64,
+}
+
+/// Sentinel for [`Span::s`]/[`Span::k`] on spans that are not scoped to a
+/// grid coordinate.
+pub const NO_COORD: u16 = u16::MAX;
+
+struct TracerInner {
+    /// (pid, span): pid 0 is the recording process itself; dist workers
+    /// land at `worker_id + 1` via [`Tracer::record_remote`]
+    spans: Vec<(u16, Span)>,
+    dropped: u64,
+}
+
+/// Bounded span sink shared by every thread of an engine.
+///
+/// Interior mutability is one `Mutex` around a preallocated `Vec`: spans
+/// are recorded a handful of times per agent per iteration, so the lock
+/// is uncontended in practice, and a full buffer drops (and counts) new
+/// spans instead of reallocating.
+pub struct Tracer {
+    clock: WallClock,
+    inner: Mutex<TracerInner>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            clock: WallClock::new(),
+            inner: Mutex::new(TracerInner { spans: Vec::with_capacity(capacity), dropped: 0 }),
+        }
+    }
+
+    /// The process clock spans should be timestamped against.
+    pub fn clock(&self) -> &WallClock {
+        &self.clock
+    }
+
+    /// Microseconds since the tracer's clock origin (convenience for
+    /// callers timing spans by hand).
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Record one local (pid 0) span.
+    pub fn record(&self, span: Span) {
+        self.record_pid(0, span);
+    }
+
+    /// Record a batch of spans shipped from a remote process (dist
+    /// coordinator merging `Frame::Obs` payloads; `pid` should be
+    /// `worker_id + 1`).
+    pub fn record_remote(&self, pid: u16, spans: &[Span]) {
+        for &s in spans {
+            self.record_pid(pid, s);
+        }
+    }
+
+    fn record_pid(&self, pid: u16, span: Span) {
+        let mut inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        if inner.spans.len() < inner.spans.capacity() {
+            inner.spans.push((pid, span));
+        } else {
+            inner.dropped = inner.dropped.saturating_add(1);
+        }
+    }
+
+    /// Number of spans recorded so far (all pids).
+    pub fn len(&self) -> usize {
+        match self.inner.lock() {
+            Ok(g) => g.spans.len(),
+            Err(p) => p.into_inner().spans.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        match self.inner.lock() {
+            Ok(g) => g.dropped,
+            Err(p) => p.into_inner().dropped,
+        }
+    }
+
+    /// Snapshot every recorded `(pid, span)` pair, in recording order per
+    /// the interleaving the mutex observed (export path only).
+    pub fn snapshot(&self) -> Vec<(u16, Span)> {
+        match self.inner.lock() {
+            Ok(g) => g.spans.clone(),
+            Err(p) => p.into_inner().spans.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+/// Bounded local span/metric buffer for processes that ship their
+/// observations elsewhere instead of exporting them (dist workers). The
+/// worker drains it into one `Frame::Obs` per iteration.
+#[derive(Debug)]
+pub struct ObsBuffer {
+    clock: WallClock,
+    spans: Vec<Span>,
+    /// (name, kind, value) metric samples staged for the next drain;
+    /// kind bytes follow `Frame::Obs` (0 counter-add, 1 gauge-set,
+    /// 2 histogram-observe)
+    metrics: Vec<(&'static str, u8, f64)>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Metric-sample kind bytes carried in `Frame::Obs`.
+pub const METRIC_COUNTER_ADD: u8 = 0;
+/// See [`METRIC_COUNTER_ADD`].
+pub const METRIC_GAUGE_SET: u8 = 1;
+/// See [`METRIC_COUNTER_ADD`].
+pub const METRIC_HISTOGRAM_OBSERVE: u8 = 2;
+
+impl ObsBuffer {
+    pub fn new(capacity: usize) -> ObsBuffer {
+        ObsBuffer {
+            clock: WallClock::new(),
+            spans: Vec::with_capacity(capacity),
+            metrics: Vec::with_capacity(64),
+            cap: capacity,
+            dropped: 0,
+        }
+    }
+
+    pub fn clock(&self) -> &WallClock {
+        &self.clock
+    }
+
+    /// Re-anchor the clock origin (workers call this on the first `Step`
+    /// so their tracks roughly align with the coordinator's).
+    pub fn reset_clock(&mut self) {
+        self.clock.reset();
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    pub fn record(&mut self, span: Span) {
+        if self.spans.len() < self.cap {
+            self.spans.push(span);
+        } else {
+            self.dropped = self.dropped.saturating_add(1);
+        }
+    }
+
+    /// Stage a metric sample for the next drain.
+    pub fn sample(&mut self, name: &'static str, kind: u8, value: f64) {
+        if self.metrics.len() < self.metrics.capacity() {
+            self.metrics.push((name, kind, value));
+        }
+    }
+
+    /// Take everything staged since the last drain (spans + metric
+    /// samples), leaving the buffers empty but their capacity intact.
+    pub fn drain(&mut self) -> (Vec<Span>, Vec<(String, u8, f64)>) {
+        let spans = std::mem::take(&mut self.spans);
+        self.spans.reserve(self.cap);
+        let metrics = self.metrics.drain(..).map(|(n, k, v)| (n.to_string(), k, v)).collect();
+        (spans, metrics)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(track: u16, phase: Phase, start_us: u64) -> Span {
+        Span { track, phase, s: 0, k: 0, t: 0, start_us, dur_us: 10 }
+    }
+
+    #[test]
+    fn phase_wire_bytes_roundtrip() {
+        for p in Phase::all() {
+            assert_eq!(Phase::from_u8(p as u8).unwrap(), p);
+        }
+        assert!(Phase::from_u8(200).is_err(), "unknown byte must be typed Err");
+    }
+
+    #[test]
+    fn tracer_records_and_snapshots() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Fwd, 0));
+        tr.record_remote(2, &[span(1, Phase::Gossip, 5)]);
+        let snap = tr.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, 0);
+        assert_eq!(snap[1].0, 2);
+        assert_eq!(snap[1].1.phase, Phase::Gossip);
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn tracer_drops_instead_of_growing() {
+        let tr = Tracer::new(2);
+        for i in 0..5 {
+            tr.record(span(0, Phase::Fwd, i));
+        }
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr.dropped(), 3);
+        // capacity is still exactly what was preallocated
+        assert_eq!(tr.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn obs_buffer_drains_clean() {
+        let mut buf = ObsBuffer::new(4);
+        buf.record(span(0, Phase::Bwd, 1));
+        buf.sample("mailbox_depth", METRIC_GAUGE_SET, 3.0);
+        let (spans, metrics) = buf.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(metrics, vec![("mailbox_depth".to_string(), METRIC_GAUGE_SET, 3.0)]);
+        let (spans2, metrics2) = buf.drain();
+        assert!(spans2.is_empty() && metrics2.is_empty());
+    }
+
+    #[test]
+    fn obs_buffer_bounded() {
+        let mut buf = ObsBuffer::new(1);
+        buf.record(span(0, Phase::Fwd, 0));
+        buf.record(span(0, Phase::Fwd, 1));
+        assert_eq!(buf.dropped(), 1);
+        assert_eq!(buf.drain().0.len(), 1);
+    }
+}

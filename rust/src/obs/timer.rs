@@ -1,0 +1,144 @@
+//! Wall-clock timing helpers used by the bench harness and cost-model
+//! calibration (`simclock::cost_model`). Lives under `obs/` because this
+//! is real time, not sim time — lint rule `det-wall-clock` confines
+//! `Instant` to this module family (`crate::util::timer` re-exports these
+//! names for existing callers).
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+///
+/// Release-safe by construction: `start` while already running is a
+/// no-op (the original start instant stands), `stop` while stopped is a
+/// no-op, and the lap counter saturates instead of wrapping — misuse
+/// degrades the statistics, never the process.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+    laps: u64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a lap. Calling `start` on a running stopwatch keeps the
+    /// earlier start instant (restart-while-running is a no-op), so the
+    /// in-flight lap is never silently shortened.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Is a lap currently in flight?
+    pub fn running(&self) -> bool {
+        self.started.is_some()
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.total += s.elapsed();
+            self.laps = self.laps.saturating_add(1);
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    /// Mean lap time in seconds (0.0 before any lap completes).
+    pub fn mean_secs(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.total.as_secs_f64() / self.laps as f64
+        }
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `n` times after `warmup` unrecorded calls; return per-call
+/// seconds for each recorded run.
+pub fn sample_timings<T>(warmup: usize, n: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.total() >= Duration::from_millis(4));
+        assert_eq!(sw.laps(), 2);
+        assert!(sw.mean_secs() >= 0.002);
+    }
+
+    #[test]
+    fn restart_while_running_is_a_noop() {
+        // double-start keeps the FIRST start instant: the lap measures the
+        // full interval and still counts exactly once
+        let mut sw = Stopwatch::new();
+        sw.start();
+        assert!(sw.running());
+        std::thread::sleep(Duration::from_millis(3));
+        sw.start(); // would previously debug_assert / silently rewind
+        sw.stop();
+        assert!(!sw.running());
+        assert_eq!(sw.laps(), 1);
+        assert!(sw.total() >= Duration::from_millis(3), "lap was shortened");
+        // stop on a stopped watch stays a no-op
+        sw.stop();
+        assert_eq!(sw.laps(), 1);
+    }
+
+    #[test]
+    fn lap_count_saturates() {
+        let mut sw = Stopwatch { total: Duration::ZERO, started: None, laps: u64::MAX };
+        sw.start();
+        sw.stop();
+        assert_eq!(sw.laps(), u64::MAX, "lap counter must saturate, not wrap");
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn sample_timings_len() {
+        let xs = sample_timings(2, 5, || 1 + 1);
+        assert_eq!(xs.len(), 5);
+    }
+}

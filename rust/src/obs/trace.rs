@@ -1,0 +1,267 @@
+//! Chrome trace-event export: turn a [`Tracer`] snapshot into the JSON
+//! that `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) load
+//! directly.
+//!
+//! Layout: one trace *process* (`pid`) per OS process — 0 is the
+//! recording process (coordinator or in-process engine), `n ≥ 1` is dist
+//! worker `n − 1` — and one *thread* (`tid`) per track (agent `s·K + k`,
+//! or 0 for the engine/coordinator track). Spans become `"ph": "X"`
+//! complete events; `"ph": "M"` metadata names every process and thread.
+//! Events are sorted by `(pid, tid, ts)` so per-track timestamps are
+//! monotonic in file order — the property `sgs trace-report` and the CI
+//! `trace-smoke` job validate.
+//!
+//! Two extra top-level keys ride along (Perfetto ignores unknown keys):
+//! `sgsMeta` (run shape, clock kind, measured wall time) and
+//! `sgsMetrics` (a [`MetricsRegistry`] snapshot).
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::span::{Span, Tracer, NO_COORD};
+use crate::util::json::Json;
+
+/// Run-level context embedded as the `sgsMeta` top-level key.
+#[derive(Debug, Clone)]
+pub struct TraceMeta {
+    /// engine name ("sim" | "threaded" | "dist")
+    pub engine: String,
+    pub s: usize,
+    pub k: usize,
+    /// iterations the run executed
+    pub iters: usize,
+    /// pipeline-fill iterations (first iteration with real gradients
+    /// everywhere) — `sgs trace-report` splits fill vs steady state here
+    pub warmup_iters: usize,
+    /// modelled seconds per iteration (0 without a cost model)
+    pub iter_time_s: f64,
+    /// measured wall-clock seconds for the run loop
+    pub wall_time_s: f64,
+    /// dist worker count (0 for in-process engines)
+    pub workers: usize,
+    /// "wall" when span timestamps are real microseconds, "sim" when the
+    /// sim engine synthesized them from the sim clock
+    pub clock: &'static str,
+}
+
+impl TraceMeta {
+    fn to_json(&self, dropped: u64) -> Json {
+        let mut m = Json::obj();
+        m.set("engine", self.engine.as_str())
+            .set("s", self.s)
+            .set("k", self.k)
+            .set("iters", self.iters)
+            .set("warmup_iters", self.warmup_iters)
+            .set("iter_time_s", self.iter_time_s)
+            .set("wall_time_s", self.wall_time_s)
+            .set("workers", self.workers)
+            .set("clock", self.clock)
+            .set("dropped_spans", dropped);
+        m
+    }
+}
+
+fn process_name(pid: u16, meta: &TraceMeta) -> String {
+    if pid == 0 {
+        if meta.engine == "dist" {
+            "coordinator".to_string()
+        } else {
+            format!("{} engine", meta.engine)
+        }
+    } else {
+        format!("worker {}", pid - 1)
+    }
+}
+
+fn track_name(span: &Span) -> String {
+    if span.s == NO_COORD || span.k == NO_COORD {
+        "engine".to_string()
+    } else {
+        format!("agent s{} k{}", span.s, span.k)
+    }
+}
+
+fn meta_event(pid: u16, tid: Option<u16>, kind: &str, name: &str) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", "M").set("pid", pid as usize).set("name", kind);
+    if let Some(tid) = tid {
+        e.set("tid", tid as usize);
+    }
+    let mut args = Json::obj();
+    args.set("name", name);
+    e.set("args", args);
+    e
+}
+
+fn span_event(pid: u16, span: &Span) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", "X")
+        .set("pid", pid as usize)
+        .set("tid", span.track as usize)
+        .set("ts", span.start_us)
+        .set("dur", span.dur_us)
+        .set("name", span.phase.name())
+        .set("cat", span.phase.name());
+    let mut args = Json::obj();
+    args.set("t", span.t);
+    if span.s != NO_COORD {
+        args.set("s", span.s as usize);
+    }
+    if span.k != NO_COORD {
+        args.set("k", span.k as usize);
+    }
+    e.set("args", args);
+    e
+}
+
+/// Assemble the full Chrome trace document from a tracer snapshot.
+pub fn chrome_trace_json(
+    tracer: &Tracer,
+    metrics: Option<&MetricsRegistry>,
+    meta: &TraceMeta,
+) -> Json {
+    let mut spans = tracer.snapshot();
+    // (pid, tid, ts) order: monotonic per-track timestamps in file order,
+    // with enclosing spans before the spans they contain
+    spans.sort_by_key(|(pid, s)| (*pid, s.track, s.start_us, std::cmp::Reverse(s.dur_us)));
+
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+    let mut named_pid: Vec<u16> = Vec::new();
+    let mut named_track: Vec<(u16, u16)> = Vec::new();
+    for (pid, span) in &spans {
+        if !named_pid.contains(pid) {
+            named_pid.push(*pid);
+            events.push(meta_event(*pid, None, "process_name", &process_name(*pid, meta)));
+        }
+        if !named_track.contains(&(*pid, span.track)) {
+            named_track.push((*pid, span.track));
+            events.push(meta_event(*pid, Some(span.track), "thread_name", &track_name(span)));
+        }
+        events.push(span_event(*pid, span));
+    }
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms")
+        .set("sgsMeta", meta.to_json(tracer.dropped()));
+    if let Some(reg) = metrics {
+        doc.set("sgsMetrics", reg.to_json());
+    }
+    doc
+}
+
+/// Write the trace document to `path` (compact JSON, parent dirs created).
+pub fn write_chrome_trace(
+    path: impl AsRef<Path>,
+    tracer: &Tracer,
+    metrics: Option<&MetricsRegistry>,
+    meta: &TraceMeta,
+) -> Result<()> {
+    let doc = chrome_trace_json(tracer, metrics, meta);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.to_string_compact())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Phase;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            engine: "threaded".into(),
+            s: 2,
+            k: 2,
+            iters: 4,
+            warmup_iters: 2,
+            iter_time_s: 0.0,
+            wall_time_s: 0.5,
+            workers: 0,
+            clock: "wall",
+        }
+    }
+
+    fn span(track: u16, phase: Phase, s: u16, k: u16, start_us: u64, dur_us: u64) -> Span {
+        Span { track, phase, s, k, t: 1, start_us, dur_us }
+    }
+
+    #[test]
+    fn trace_has_metadata_and_sorted_spans() {
+        let tr = Tracer::new(16);
+        tr.record(span(1, Phase::Bwd, 0, 1, 50, 10));
+        tr.record(span(0, Phase::Fwd, 0, 0, 10, 20));
+        tr.record(span(0, Phase::Gossip, 0, 0, 40, 5));
+        tr.record_remote(1, &[span(0, Phase::Fwd, 1, 0, 12, 9)]);
+        let doc = chrome_trace_json(&tr, None, &meta());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name + 3 thread_name + 4 spans
+        let xs: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X").collect();
+        assert_eq!(xs.len(), 4);
+        let ms = events.len() - xs.len();
+        assert_eq!(ms, 5, "process+thread metadata events");
+        // per-(pid,tid) ts monotonic in file order
+        let mut last: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for e in &xs {
+            let key = (
+                e.get("pid").unwrap().as_usize().unwrap(),
+                e.get("tid").unwrap().as_usize().unwrap(),
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last.get(&key) {
+                assert!(ts >= *prev, "track {key:?} went backwards");
+            }
+            last.insert(key, ts);
+        }
+        let m = doc.get("sgsMeta").unwrap();
+        assert_eq!(m.get("engine").unwrap().as_str().unwrap(), "threaded");
+        assert_eq!(m.get("warmup_iters").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn enclosing_span_sorts_before_its_children() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::GossipMix, NO_COORD, NO_COORD, 100, 10));
+        tr.record(span(0, Phase::Step, NO_COORD, NO_COORD, 100, 200));
+        let doc = chrome_trace_json(&tr, None, &meta());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(xs, vec!["step", "gossip_mix"], "outer span first at equal ts");
+    }
+
+    #[test]
+    fn metrics_snapshot_rides_along() {
+        let tr = Tracer::new(4);
+        tr.record(span(0, Phase::Fwd, 0, 0, 0, 1));
+        let reg = MetricsRegistry::new();
+        reg.counter("iters_total").add(4);
+        let doc = chrome_trace_json(&tr, Some(&reg), &meta());
+        let m = doc.get("sgsMetrics").unwrap();
+        assert_eq!(
+            m.get("counters").unwrap().get("iters_total").unwrap().as_usize().unwrap(),
+            4
+        );
+    }
+
+    #[test]
+    fn write_round_trips_through_the_parser() {
+        let tr = Tracer::new(4);
+        tr.record(span(0, Phase::Fwd, 0, 0, 0, 7));
+        let dir = std::env::temp_dir().join("sgs_trace_export");
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &tr, None, &meta()).unwrap();
+        let j = Json::from_file(&path).unwrap();
+        assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

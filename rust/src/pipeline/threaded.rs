@@ -31,7 +31,7 @@
 //! (`e2e_iteration/S4K2_threaded` vs `_sim`); persistent workers behind a
 //! phase barrier are the follow-up if that overhead starts to matter.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::config::ExperimentConfig;
@@ -41,6 +41,7 @@ use crate::error::{Error, Result};
 use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
 use crate::nn::init::init_params;
 use crate::nn::LayerShape;
+use crate::obs::{Counter, MetricsRegistry, Phase, Span, Tracer, WallClock, NO_COORD};
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
 use crate::session::{Engine, IterEvent};
@@ -99,6 +100,62 @@ pub struct ThreadedEngine {
     iter_time_s: f64,
     t: i64,
     t_offset: usize,
+    /// wall clock since construction — stamps `wall_time_s` on events
+    clock: WallClock,
+    /// span sink; agent threads clone the Arc and record real phase
+    /// timings into it (a pure observer — never touches the iterates)
+    tracer: Option<Arc<Tracer>>,
+    /// stash-pool hit rate: a cross-module recv that finds its message
+    /// already buffered counts as a hit; one that has to block is a miss.
+    /// Handles are cached here so the hot loop stays allocation-free.
+    stash_hit: Option<Arc<Counter>>,
+    stash_miss: Option<Arc<Counter>>,
+}
+
+/// Close a span opened at `start` (None when no tracer is attached).
+fn rec_span(
+    tracer: &Option<Arc<Tracer>>,
+    start: Option<u64>,
+    track: u16,
+    phase: Phase,
+    s: u16,
+    k: u16,
+    t: i64,
+) {
+    if let (Some(tr), Some(start_us)) = (tracer.as_ref(), start) {
+        let dur_us = tr.now_us().saturating_sub(start_us);
+        tr.record(Span { track, phase, s, k, t, start_us, dur_us });
+    }
+}
+
+fn span_open(tracer: &Option<Arc<Tracer>>) -> Option<u64> {
+    tracer.as_ref().map(|tr| tr.now_us())
+}
+
+/// Receive from a cross-module channel, counting whether the message was
+/// already buffered (stash-pool hit) or the agent had to block (miss).
+/// try_recv-then-recv is semantically identical to a plain blocking recv,
+/// so the counters never perturb the iterate stream.
+fn recv_counted<T>(
+    rx: &Receiver<T>,
+    hit: &Option<Arc<Counter>>,
+    miss: &Option<Arc<Counter>>,
+) -> std::result::Result<T, std::sync::mpsc::RecvError> {
+    match rx.try_recv() {
+        Ok(msg) => {
+            if let Some(c) = hit {
+                c.inc();
+            }
+            Ok(msg)
+        }
+        Err(TryRecvError::Disconnected) => Err(std::sync::mpsc::RecvError),
+        Err(TryRecvError::Empty) => {
+            if let Some(c) = miss {
+                c.inc();
+            }
+            rx.recv()
+        }
+    }
 }
 
 impl ThreadedEngine {
@@ -215,6 +272,10 @@ impl ThreadedEngine {
             iter_time_s: 0.0,
             t: 0,
             t_offset: 0,
+            clock: WallClock::new(),
+            tracer: None,
+            stash_hit: None,
+            stash_miss: None,
             cfg,
             backend,
             ds,
@@ -381,6 +442,10 @@ impl Engine for ThreadedEngine {
         let p_rows = &self.p_rows;
         let loss_tx_root = self.loss_tx.clone();
         let corr_tx_root = self.corr_tx.clone();
+        let tracer_root = self.tracer.clone();
+        let stash_hit_root = self.stash_hit.clone();
+        let stash_miss_root = self.stash_miss.clone();
+        let step_open = span_open(&tracer_root);
 
         let result: Result<Vec<()>> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(s_groups * k_modules);
@@ -388,9 +453,14 @@ impl Engine for ThreadedEngine {
                 let p_row = &p_rows[slot.s];
                 let loss_tx = loss_tx_root.clone();
                 let corr_tx = corr_tx_root.clone();
+                let tracer = tracer_root.clone();
+                let stash_hit = stash_hit_root.clone();
+                let stash_miss = stash_miss_root.clone();
                 handles.push(scope.spawn(move || -> Result<()> {
                     let s = slot.s;
                     let k = slot.k;
+                    let track = (s * k_modules + k) as u16;
+                    let (s16, k16) = (s as u16, k as u16);
                     // ---- forward + backward (Algorithm 1 body) ----
                     // Errors here (schedule violations, backend failures)
                     // must NOT strand the other agents: the error path below
@@ -399,6 +469,7 @@ impl Engine for ThreadedEngine {
                     // returns the failure instead of deadlocking.
                     let work = (|| -> Result<()> {
                         if let Some(tau) = sched.forward_batch(t, k) {
+                            let fwd_open = span_open(&tracer);
                             if k == 0 {
                                 slot.sampler
                                     .as_mut()
@@ -413,16 +484,18 @@ impl Engine for ThreadedEngine {
                                 slot.agent
                                     .forward(backend, tau, &slot.batch_x, &slot.batch_oh)?;
                             } else {
-                                let msg = slot
-                                    .act_rx
-                                    .as_ref()
-                                    .ok_or_else(|| {
-                                        Error::Schedule("act receiver missing for k>0".into())
-                                    })?
-                                    .recv()
+                                let wait_open = span_open(&tracer);
+                                let rx = slot.act_rx.as_ref().ok_or_else(|| {
+                                    Error::Schedule("act receiver missing for k>0".into())
+                                })?;
+                                let msg = recv_counted(rx, &stash_hit, &stash_miss)
                                     .map_err(|_| Error::other("act channel closed"))?;
+                                rec_span(
+                                    &tracer, wait_open, track, Phase::StashWait, s16, k16, t,
+                                );
                                 slot.agent.forward(backend, tau, &msg.x, &msg.onehot)?;
                             }
+                            rec_span(&tracer, fwd_open, track, Phase::Fwd, s16, k16, t);
                             if let Some(tx) = &slot.act_tx {
                                 let (bx, boh) = slot.agent.boundary_msg()?;
                                 tx.send(ActMsg {
@@ -433,29 +506,34 @@ impl Engine for ThreadedEngine {
                             }
                         }
                         if let Some(tau) = sched.backward_batch(t, k) {
+                            let bwd_open = span_open(&tracer);
                             let g_in: Option<Tensor> = if k == k_modules - 1 {
                                 let loss = slot.agent.loss_of(backend, tau)?;
                                 let _ = loss_tx.send((s, loss));
                                 None
                             } else {
-                                Some(
-                                    slot.grad_rx
-                                        .as_ref()
-                                        .ok_or_else(|| {
-                                            Error::Schedule(
-                                                "grad receiver missing for k<K-1".into(),
-                                            )
-                                        })?
-                                        .recv()
-                                        .map_err(|_| Error::other("grad channel closed"))?,
-                                )
+                                let wait_open = span_open(&tracer);
+                                let rx = slot.grad_rx.as_ref().ok_or_else(|| {
+                                    Error::Schedule(
+                                        "grad receiver missing for k<K-1".into(),
+                                    )
+                                })?;
+                                let g = recv_counted(rx, &stash_hit, &stash_miss)
+                                    .map_err(|_| Error::other("grad channel closed"))?;
+                                rec_span(
+                                    &tracer, wait_open, track, Phase::StashWait, s16, k16, t,
+                                );
+                                Some(g)
                             };
                             slot.agent.backward(backend, tau, g_in.as_ref())?;
                             if let Some(tx) = &slot.grad_tx {
                                 tx.send(slot.agent.upstream_grad()?.clone())
                                     .map_err(|_| Error::other("grad send failed"))?;
                             }
+                            rec_span(&tracer, bwd_open, track, Phase::Bwd, s16, k16, t);
+                            let opt_open = span_open(&tracer);
                             let norm = slot.agent.apply_update(eta, slot.grad_scale)?;
+                            rec_span(&tracer, opt_open, track, Phase::Opt, s16, k16, t);
                             let _ = corr_tx.send((s, k, norm));
                         }
                         Ok(())
@@ -470,6 +548,7 @@ impl Engine for ThreadedEngine {
                     // runs on the error path as well (posting the current û,
                     // skipping only the local mix) so every agent makes the
                     // same number of barrier waits
+                    let gossip_open = span_open(&tracer);
                     for _round in 0..gossip_rounds {
                         if s_groups > 1 {
                             {
@@ -518,6 +597,7 @@ impl Engine for ThreadedEngine {
                             barrier.wait();
                         }
                     }
+                    rec_span(&tracer, gossip_open, track, Phase::Gossip, s16, k16, t);
                     work
                 }));
             }
@@ -568,6 +648,7 @@ impl Engine for ThreadedEngine {
             correction,
             net_tx: None,
             net_rx: None,
+            wall_time_s: None,
         };
         if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
             ev.delta = Some(self.consensus_delta());
@@ -575,12 +656,21 @@ impl Engine for ThreadedEngine {
         if self.cfg.eval_every > 0
             && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
         {
+            let eval_open = span_open(&self.tracer);
             let avg = self.averaged_params();
             let (x, oh) = &self.probe;
             ev.eval_loss = Some(self.backend.eval_loss(x, oh, &avg)? as f64);
             let logits = crate::nn::full_forward(x, &avg, &self.layers);
             ev.eval_acc = Some(crate::nn::accuracy(&logits, oh));
+            let engine_track = (s_groups * k_modules) as u16;
+            rec_span(
+                &self.tracer, eval_open, engine_track, Phase::Eval, NO_COORD, NO_COORD, t,
+            );
         }
+        // the engine track's Step span encloses compute + gossip + eval
+        let engine_track = (s_groups * k_modules) as u16;
+        rec_span(&self.tracer, step_open, engine_track, Phase::Step, NO_COORD, NO_COORD, t);
+        ev.wall_time_s = Some(self.clock.elapsed_s());
         Ok(ev)
     }
 
@@ -720,6 +810,12 @@ impl Engine for ThreadedEngine {
     fn set_iter_time_s(&mut self, iter_time_s: f64) {
         self.iter_time_s = iter_time_s;
     }
+
+    fn attach_obs(&mut self, tracer: Option<Arc<Tracer>>, metrics: Option<Arc<MetricsRegistry>>) {
+        self.stash_hit = metrics.as_ref().map(|r| r.counter("stash_hit_total"));
+        self.stash_miss = metrics.as_ref().map(|r| r.counter("stash_miss_total"));
+        self.tracer = tracer;
+    }
 }
 
 #[cfg(test)]
@@ -839,6 +935,36 @@ mod tests {
                 assert_eq!(b1, b2);
             }
         }
+    }
+
+    #[test]
+    fn tracing_is_a_pure_observer_and_wall_time_stamps() {
+        let c = cfg(2, 2, 6);
+        let (plain_losses, _) = drive_threaded(&c);
+        let (backend, ds) = setup(&c);
+        let mut eng = ThreadedEngine::new(c.clone(), backend, ds).unwrap();
+        let tracer = Arc::new(Tracer::new(4096));
+        let registry = Arc::new(MetricsRegistry::new());
+        eng.attach_obs(Some(Arc::clone(&tracer)), Some(Arc::clone(&registry)));
+        let mut last_wall = 0.0;
+        for t in 0..c.iters {
+            let ev = eng.step().unwrap();
+            assert_eq!(ev.train_loss, plain_losses[t], "t={t}: tracing changed the iterates");
+            let wall = ev.wall_time_s.expect("threaded events carry wall time");
+            assert!(wall >= last_wall, "wall clock went backwards");
+            last_wall = wall;
+        }
+        // every agent track (0..S·K) plus the engine track recorded spans
+        let tracks: std::collections::BTreeSet<u16> =
+            tracer.snapshot().iter().map(|(_, sp)| sp.track).collect();
+        for tr in 0..4u16 {
+            assert!(tracks.contains(&tr), "agent track {tr} has no spans");
+        }
+        assert!(tracks.contains(&4), "engine track records step spans");
+        // every cross-module recv was classified as a stash-pool hit or miss
+        let hits = registry.counter("stash_hit_total").get();
+        let misses = registry.counter("stash_miss_total").get();
+        assert!(hits + misses > 0, "no stash recvs were counted");
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //! every caller — CLI, examples, benches, tests — drives training the same
 //! way and the engines stay interchangeable (and bit-identical).
 
+use std::sync::Arc;
+
 use crate::error::Result;
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::session::IterEvent;
 use crate::tensor::Tensor;
 use crate::trainer::Checkpoint;
@@ -87,6 +90,17 @@ pub trait Engine {
     /// Attach the modelled seconds-per-iteration (sim clock) reported in
     /// each event's `sim_time_s`.
     fn set_iter_time_s(&mut self, iter_time_s: f64);
+
+    /// Attach observability sinks before the first step: a span tracer
+    /// (engines record phase spans into it — the sim engine synthesizes
+    /// them from the schedule and sim clock, the threaded/dist engines
+    /// time real work) and the session's metrics registry (the dist
+    /// engine observes gossip-mix timings and merges worker samples into
+    /// it). Both are pure observers: attaching them never changes the
+    /// computed iterates. The default implementation ignores them.
+    fn attach_obs(&mut self, tracer: Option<Arc<Tracer>>, metrics: Option<Arc<MetricsRegistry>>) {
+        let _ = (tracer, metrics);
+    }
 }
 
 #[cfg(test)]

@@ -2,12 +2,12 @@
 //! engine yields through [`crate::session::Session::step`], plus a JSONL
 //! writer for the CLI's `--events-out` stream.
 //!
-//! JSONL schema v3 (one object per line, `None` fields omitted):
+//! JSONL schema v4 (one object per line, `None` fields omitted):
 //!
 //! ```json
 //! {"t": 12, "lr": 0.1, "train_loss": 2.19, "eval_loss": 2.25,
 //!  "eval_acc": 0.14, "delta": 1.3e-3, "sim_time_s": 0.696,
-//!  "staleness": [2, 0], "correction": [0.0031, 0.0],
+//!  "wall_time_s": 0.132, "staleness": [2, 0], "correction": [0.0031, 0.0],
 //!  "net_bytes_tx": [1184, 0], "net_bytes_rx": [0, 1184]}
 //! ```
 //!
@@ -21,6 +21,14 @@
 //! distributed engine emits them; the in-process engines move no bytes and
 //! omit the fields entirely — which is what makes them the benchable
 //! measure of communication volume (see [`crate::net`]).
+//!
+//! `wall_time_s` (v4) is the real elapsed wall clock at the end of the
+//! iteration, measured from engine construction by an
+//! [`crate::obs::WallClock`]. The threaded and dist engines emit it; the
+//! sim engine omits it — there `sim_time_s` is authoritative and the
+//! deterministic engine never reads real time (lint `det-wall-clock`).
+//! It is an observation, not part of the engine-equivalence claim: the
+//! bit-identical-engines tests compare every field except this one.
 
 use std::io::Write as _;
 use std::path::Path;
@@ -66,6 +74,10 @@ pub struct IterEvent {
     /// wire bytes each module's agents received this iteration
     /// (distributed engine only)
     pub net_rx: Option<Arc<[u64]>>,
+    /// real elapsed seconds since engine construction (threaded/dist
+    /// engines; `None` — omitted from the JSONL — on the sim engine,
+    /// where `sim_time_s` is authoritative)
+    pub wall_time_s: Option<f64>,
 }
 
 /// Share `vals` as an event's correction field: the cached all-zeros
@@ -109,6 +121,7 @@ impl IterEvent {
         set_opt(&mut j, "eval_loss", self.eval_loss);
         set_opt(&mut j, "eval_acc", self.eval_acc);
         set_opt(&mut j, "delta", self.delta);
+        set_opt(&mut j, "wall_time_s", self.wall_time_s);
         if let Some(tx) = &self.net_tx {
             j.set("net_bytes_tx", tx.iter().map(|&b| b as usize).collect::<Vec<usize>>());
         }
@@ -164,6 +177,7 @@ mod tests {
             correction: Arc::from(vec![0.01, 0.0]),
             net_tx: None,
             net_rx: None,
+            wall_time_s: None,
         }
     }
 
@@ -206,6 +220,17 @@ mod tests {
         assert_eq!(tx[0].as_usize().unwrap(), 128);
         let rx = j.get("net_bytes_rx").unwrap().as_arr().unwrap();
         assert_eq!(rx[1].as_usize().unwrap(), 128);
+    }
+
+    #[test]
+    fn wall_time_serializes_only_when_present() {
+        // schema v4: sim events omit wall_time_s, wall-clock engines emit it
+        let j = ev().to_json();
+        assert!(j.opt("wall_time_s").is_none());
+        let mut e = ev();
+        e.wall_time_s = Some(0.125);
+        let j = e.to_json();
+        assert_eq!(j.get("wall_time_s").unwrap().as_f64().unwrap(), 0.125);
     }
 
     #[test]

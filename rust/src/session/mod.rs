@@ -56,6 +56,7 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
 use crate::net::{DistEngine, Transport};
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry, TraceMeta, Tracer};
 use crate::pipeline::ThreadedEngine;
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::simclock::{method_iter_s_mode, CostModel};
@@ -88,6 +89,8 @@ pub struct SessionBuilder {
     cost_model: Option<CostModel>,
     calibrate_clock: bool,
     dist_workers: Option<Vec<Box<dyn Transport>>>,
+    tracer: Option<Arc<Tracer>>,
+    metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl SessionBuilder {
@@ -102,6 +105,8 @@ impl SessionBuilder {
             cost_model: None,
             calibrate_clock: false,
             dist_workers: None,
+            tracer: None,
+            metrics: None,
         }
     }
 
@@ -163,6 +168,22 @@ impl SessionBuilder {
     /// transport.
     pub fn dist_workers(mut self, transports: Vec<Box<dyn Transport>>) -> SessionBuilder {
         self.dist_workers = Some(transports);
+        self
+    }
+
+    /// Attach a span tracer (see [`crate::obs`]): the engine records
+    /// phase spans into it, and [`Session::write_trace`] exports the
+    /// Chrome trace. Tracing is a pure observer — iterates are
+    /// bit-identical with or without it.
+    pub fn tracer(mut self, tracer: Arc<Tracer>) -> SessionBuilder {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Share a metrics registry (default: the session creates its own,
+    /// reachable via [`Session::metrics`]).
+    pub fn metrics(mut self, registry: Arc<MetricsRegistry>) -> SessionBuilder {
+        self.metrics = Some(registry);
         self
     }
 
@@ -254,6 +275,13 @@ impl SessionBuilder {
             })
             .unwrap_or(0.0);
 
+        // one registry per session unless the caller shares theirs; the
+        // hot-path handles are resolved HERE, once — `Session::step` only
+        // touches atomics through them (registration allocates the name
+        // Strings, updates never allocate: tests/alloc_guard.rs)
+        let metrics = self.metrics.unwrap_or_default();
+        let handles = MetricHandles::register(&metrics, cfg.k);
+
         let mut engine: Box<dyn Engine> = match self.engine {
             EngineKind::Sim => {
                 Box::new(SimEngine::new(cfg.clone(), backend.clone(), ds.clone())?)
@@ -281,6 +309,7 @@ impl SessionBuilder {
             }
         };
         engine.set_iter_time_s(iter_time_s);
+        engine.attach_obs(self.tracer.clone(), Some(Arc::clone(&metrics)));
 
         let recorder = Recorder::with_capacity(cfg.iters);
         Ok(Session {
@@ -291,7 +320,84 @@ impl SessionBuilder {
             iter_time_s,
             backend,
             ds,
+            tracer: self.tracer,
+            metrics,
+            handles,
         })
+    }
+}
+
+/// Hot-path metric handles, resolved once at build time so
+/// [`Session::step`] never goes through the name-keyed registry maps
+/// (`MetricsRegistry::counter` &co. allocate the key `String`, which the
+/// steady state must not — see tests/alloc_guard.rs and lint `hot-alloc`).
+struct MetricHandles {
+    /// iterations completed across the session lifetime
+    iters_total: Arc<Counter>,
+    /// most recent mean mini-batch loss
+    train_loss_last: Arc<Gauge>,
+    /// most recent consensus error δ(t)
+    delta_last: Arc<Gauge>,
+    /// per-module weight-update staleness distribution (`staleness_mod{k}`)
+    staleness: Vec<Arc<Histogram>>,
+    /// per-module wire bytes sent/received (`net_bytes_{tx,rx}_mod{k}`,
+    /// absorbing the dist engine's event counters; zero for in-process
+    /// engines, which move no bytes)
+    net_tx: Vec<Arc<Counter>>,
+    net_rx: Vec<Arc<Counter>>,
+}
+
+impl MetricHandles {
+    fn register(reg: &MetricsRegistry, k: usize) -> MetricHandles {
+        // integer-valued staleness: one bucket per achievable value
+        // (FD mode tops out at 2(K−1)), plus the registry's overflow bucket
+        let bounds: Vec<f64> = (0..2 * k.max(1)).map(|i| i as f64).collect();
+        let mut staleness = Vec::with_capacity(k);
+        let mut net_tx = Vec::with_capacity(k);
+        let mut net_rx = Vec::with_capacity(k);
+        for m in 0..k {
+            staleness.push(reg.histogram(&format!("staleness_mod{m}"), &bounds));
+            net_tx.push(reg.counter(&format!("net_bytes_tx_mod{m}")));
+            net_rx.push(reg.counter(&format!("net_bytes_rx_mod{m}")));
+        }
+        MetricHandles {
+            iters_total: reg.counter("iters_total"),
+            train_loss_last: reg.gauge("train_loss_last"),
+            delta_last: reg.gauge("delta_last"),
+            staleness,
+            net_tx,
+            net_rx,
+        }
+    }
+
+    /// Fold one iteration's observations in — atomic ops only.
+    fn update(&self, ev: &IterEvent) {
+        self.iters_total.inc();
+        if let Some(loss) = ev.train_loss {
+            self.train_loss_last.set(loss);
+        }
+        if let Some(delta) = ev.delta {
+            self.delta_last.set(delta);
+        }
+        for (m, h) in self.staleness.iter().enumerate() {
+            if let Some(&tau) = ev.staleness.get(m) {
+                h.observe(tau as f64);
+            }
+        }
+        if let Some(tx) = &ev.net_tx {
+            for (m, c) in self.net_tx.iter().enumerate() {
+                if let Some(&b) = tx.get(m) {
+                    c.add(b);
+                }
+            }
+        }
+        if let Some(rx) = &ev.net_rx {
+            for (m, c) in self.net_rx.iter().enumerate() {
+                if let Some(&b) = rx.get(m) {
+                    c.add(b);
+                }
+            }
+        }
     }
 }
 
@@ -305,6 +411,9 @@ pub struct Session {
     iter_time_s: f64,
     backend: Arc<dyn ComputeBackend>,
     ds: Arc<Dataset>,
+    tracer: Option<Arc<Tracer>>,
+    metrics: Arc<MetricsRegistry>,
+    handles: MetricHandles,
 }
 
 impl Session {
@@ -346,6 +455,7 @@ impl Session {
     /// Advance one global iteration and record + return its event.
     pub fn step(&mut self) -> Result<IterEvent> {
         let ev = self.engine.step()?;
+        self.handles.update(&ev);
         self.recorder.push(ev.to_record());
         Ok(ev)
     }
@@ -397,6 +507,60 @@ impl Session {
     /// Consensus error δ(t) over the current parameters (eq. 22).
     pub fn consensus_delta(&self) -> f64 {
         self.engine.consensus_delta()
+    }
+
+    /// The session's metrics registry (session-made unless the builder
+    /// shared one; the engine and every step feed it).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// The attached span tracer, if any.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Run-level context for the Chrome trace export: engine name, grid
+    /// shape, fill/steady split, worker count, and which clock stamped
+    /// the spans.
+    pub fn trace_meta(&self, wall_time_s: f64) -> TraceMeta {
+        let sched =
+            crate::staleness::Schedule::with_mode(self.cfg.k, self.cfg.mode);
+        let workers = if self.engine.name() == "dist" {
+            self.cfg.placement.as_ref().map(|p| p.workers).unwrap_or(0)
+        } else {
+            0
+        };
+        TraceMeta {
+            engine: self.engine.name().to_string(),
+            s: self.cfg.s,
+            k: self.cfg.k,
+            iters: self.iterations_done(),
+            warmup_iters: sched.warmup_iters(),
+            iter_time_s: self.iter_time_s,
+            wall_time_s,
+            workers,
+            clock: if self.engine.name() == "sim" { "sim" } else { "wall" },
+        }
+    }
+
+    /// Export the recorded spans (plus the metrics snapshot) as a Chrome
+    /// trace-event JSON file — what `sgs train --trace-out` writes and
+    /// `sgs trace-report` / Perfetto read. `wall_time_s` is the measured
+    /// run-loop wall time the caller clocked around the run. Typed error
+    /// if the builder never attached a tracer.
+    pub fn write_trace(&self, path: impl AsRef<std::path::Path>, wall_time_s: f64) -> Result<()> {
+        let tracer = self.tracer.as_ref().ok_or_else(|| {
+            Error::Config(
+                "write_trace: no tracer attached (SessionBuilder::tracer)".into(),
+            )
+        })?;
+        crate::obs::write_chrome_trace(
+            path,
+            tracer,
+            Some(&self.metrics),
+            &self.trace_meta(wall_time_s),
+        )
     }
 
     /// Close the session and hand back the run artifacts.
@@ -510,6 +674,61 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn session_feeds_its_metrics_registry() {
+        let mut session = Session::builder(tiny_cfg()).build().unwrap();
+        session.run().unwrap();
+        let reg = Arc::clone(session.metrics());
+        assert_eq!(reg.counter("iters_total").get(), 12);
+        // staleness histogram: one observation per iteration per module,
+        // every one at the schedule's constant value (K=2 FD: τ₀=2, τ₁=0)
+        let h0 = reg.histogram("staleness_mod0", &[]);
+        assert_eq!(h0.count(), 12);
+        assert!((h0.mean() - 2.0).abs() < 1e-9);
+        let h1 = reg.histogram("staleness_mod1", &[]);
+        assert!((h1.mean() - 0.0).abs() < 1e-9);
+        // in-process engines move no bytes
+        assert_eq!(reg.counter("net_bytes_tx_mod0").get(), 0);
+        assert!(reg.gauge("train_loss_last").get().is_finite());
+    }
+
+    #[test]
+    fn write_trace_without_tracer_is_a_typed_error() {
+        let session = Session::builder(tiny_cfg()).build().unwrap();
+        let err = session.write_trace("/tmp/never-written.json", 1.0).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn sim_session_exports_a_trace() {
+        let tracer = Arc::new(crate::obs::Tracer::new(4096));
+        let mut session = Session::builder(tiny_cfg())
+            .tracer(Arc::clone(&tracer))
+            .build()
+            .unwrap();
+        session.run().unwrap();
+        assert!(!tracer.is_empty(), "sim engine synthesizes schedule spans");
+        let dir = std::env::temp_dir().join("sgs_session_trace");
+        let path = dir.join("trace.json");
+        session.write_trace(&path, 0.0).unwrap();
+        let doc = crate::util::json::Json::from_file(&path).unwrap();
+        let m = doc.get("sgsMeta").unwrap();
+        assert_eq!(m.get("engine").unwrap().as_str().unwrap(), "sim");
+        assert_eq!(m.get("clock").unwrap().as_str().unwrap(), "sim");
+        assert_eq!(m.get("iters").unwrap().as_usize().unwrap(), 12);
+        assert!(doc.get("sgsMetrics").is_ok(), "metrics snapshot rides along");
+        // every agent track (S×K = 4) shows up with at least one span
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut tracks = std::collections::BTreeSet::new();
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() == "X" {
+                tracks.insert(e.get("tid").unwrap().as_usize().unwrap());
+            }
+        }
+        assert_eq!(tracks.len(), 4, "one track per agent: {tracks:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

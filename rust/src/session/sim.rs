@@ -1,12 +1,21 @@
 //! The sim engine behind the [`Engine`] trait: a thin adapter over
 //! [`crate::trainer::Trainer`], which already computes eval/δ cadence and
 //! full-state checkpoints.
+//!
+//! Tracing: the deterministic engine never reads a wall clock (lint
+//! `det-wall-clock`), so when a tracer is attached it *synthesizes* spans
+//! from the staleness schedule and the sim clock — each iteration is one
+//! modelled time unit (`iter_time_s`, or 1 virtual second without a cost
+//! model) carved into fwd/bwd/opt/gossip segments per agent. A pure
+//! observer either way: tests/obs_purity.rs pins events and final params
+//! bitwise identical with tracing on and off.
 
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::obs::{MetricsRegistry, Phase, Span, Tracer};
 use crate::runtime::ComputeBackend;
 use crate::session::event::correction_arc;
 use crate::session::{Engine, IterEvent};
@@ -20,6 +29,11 @@ pub(crate) struct SimEngine {
     staleness: Arc<[usize]>,
     /// cached all-zeros correction (the `none` baseline's steady state)
     zero_corr: Arc<[f64]>,
+    /// which (t, k) pairs compute — drives span synthesis
+    sched: Schedule,
+    s: usize,
+    k: usize,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl SimEngine {
@@ -31,11 +45,47 @@ impl SimEngine {
         let sched = Schedule::with_mode(cfg.k, cfg.mode);
         let staleness: Arc<[usize]> = (0..cfg.k).map(|k| sched.staleness(k)).collect();
         let zero_corr: Arc<[f64]> = vec![0.0; cfg.k].into();
+        let (s, k) = (cfg.s, cfg.k);
         Ok(SimEngine {
             tr: Trainer::new(cfg, backend, ds)?,
             staleness,
             zero_corr,
+            sched,
+            s,
+            k,
+            tracer: None,
         })
+    }
+
+    /// Synthesize this iteration's spans on the sim clock: iteration `t`
+    /// occupies `[t·unit, (t+1)·unit)` microseconds, split into the
+    /// schedule's active phases per agent. No wall clock is read.
+    fn record_sim_spans(&self, t: usize, iter_time_s: f64) {
+        let Some(tracer) = &self.tracer else { return };
+        let unit = if iter_time_s > 0.0 { iter_time_s * 1e6 } else { 1e6 };
+        let base = t as f64 * unit;
+        let seg = |frac: f64, width: f64| -> (u64, u64) {
+            ((base + frac * unit) as u64, (width * unit) as u64)
+        };
+        let ti = t as i64;
+        for s in 0..self.s {
+            for k in 0..self.k {
+                let track = (s * self.k + k) as u16;
+                let (s16, k16) = (s as u16, k as u16);
+                let mut push = |phase: Phase, frac: f64, width: f64| {
+                    let (start_us, dur_us) = seg(frac, width);
+                    tracer.record(Span { track, phase, s: s16, k: k16, t: ti, start_us, dur_us });
+                };
+                if self.sched.forward_batch(ti, k).is_some() {
+                    push(Phase::Fwd, 0.0, 0.30);
+                }
+                if self.sched.backward_batch(ti, k).is_some() {
+                    push(Phase::Bwd, 0.35, 0.30);
+                    push(Phase::Opt, 0.70, 0.10);
+                }
+                push(Phase::Gossip, 0.82, 0.15);
+            }
+        }
     }
 }
 
@@ -46,6 +96,7 @@ impl Engine for SimEngine {
 
     fn step(&mut self) -> Result<IterEvent> {
         let r = self.tr.step()?;
+        self.record_sim_spans(r.t, self.tr.iter_time_s);
         Ok(IterEvent {
             t: r.t,
             lr: r.lr,
@@ -58,6 +109,9 @@ impl Engine for SimEngine {
             correction: correction_arc(&self.zero_corr, self.tr.last_correction()),
             net_tx: None,
             net_rx: None,
+            // sim events never carry wall time: `sim_time_s` is
+            // authoritative and the engine reads no real clock
+            wall_time_s: None,
         })
     }
 
@@ -83,5 +137,9 @@ impl Engine for SimEngine {
 
     fn set_iter_time_s(&mut self, iter_time_s: f64) {
         self.tr.iter_time_s = iter_time_s;
+    }
+
+    fn attach_obs(&mut self, tracer: Option<Arc<Tracer>>, _metrics: Option<Arc<MetricsRegistry>>) {
+        self.tracer = tracer;
     }
 }

@@ -1,101 +1,6 @@
-//! Wall-clock timing helpers used by the bench harness and cost-model
-//! calibration (simclock::cost_model).
+//! Wall-clock timing helpers — now a thin re-export of
+//! [`crate::obs::timer`], where the implementation moved so that `obs/`
+//! is the only module family touching `std::time::Instant` (lint rule
+//! `det-wall-clock`). Existing callers keep their `util::timer` paths.
 
-use std::time::{Duration, Instant};
-
-/// Accumulating stopwatch: start/stop many times, read the total.
-#[derive(Debug, Default)]
-pub struct Stopwatch {
-    total: Duration,
-    started: Option<Instant>,
-    laps: u64,
-}
-
-impl Stopwatch {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn start(&mut self) {
-        debug_assert!(self.started.is_none(), "stopwatch already running");
-        self.started = Some(Instant::now());
-    }
-
-    pub fn stop(&mut self) {
-        if let Some(s) = self.started.take() {
-            self.total += s.elapsed();
-            self.laps += 1;
-        }
-    }
-
-    pub fn total(&self) -> Duration {
-        self.total
-    }
-
-    pub fn laps(&self) -> u64 {
-        self.laps
-    }
-
-    /// Mean lap time in seconds (0.0 before any lap completes).
-    pub fn mean_secs(&self) -> f64 {
-        if self.laps == 0 {
-            0.0
-        } else {
-            self.total.as_secs_f64() / self.laps as f64
-        }
-    }
-}
-
-/// Time a closure, returning (result, seconds).
-pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
-    let t0 = Instant::now();
-    let out = f();
-    (out, t0.elapsed().as_secs_f64())
-}
-
-/// Run `f` `n` times after `warmup` unrecorded calls; return per-call
-/// seconds for each recorded run.
-pub fn sample_timings<T>(warmup: usize, n: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
-    for _ in 0..warmup {
-        std::hint::black_box(f());
-    }
-    (0..n)
-        .map(|_| {
-            let t0 = Instant::now();
-            std::hint::black_box(f());
-            t0.elapsed().as_secs_f64()
-        })
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn stopwatch_accumulates() {
-        let mut sw = Stopwatch::new();
-        sw.start();
-        std::thread::sleep(Duration::from_millis(2));
-        sw.stop();
-        sw.start();
-        std::thread::sleep(Duration::from_millis(2));
-        sw.stop();
-        assert!(sw.total() >= Duration::from_millis(4));
-        assert_eq!(sw.laps(), 2);
-        assert!(sw.mean_secs() >= 0.002);
-    }
-
-    #[test]
-    fn time_it_returns_value() {
-        let (v, secs) = time_it(|| 41 + 1);
-        assert_eq!(v, 42);
-        assert!(secs >= 0.0);
-    }
-
-    #[test]
-    fn sample_timings_len() {
-        let xs = sample_timings(2, 5, || 1 + 1);
-        assert_eq!(xs.len(), 5);
-    }
-}
+pub use crate::obs::timer::{sample_timings, time_it, Stopwatch};

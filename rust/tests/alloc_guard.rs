@@ -20,6 +20,7 @@ use std::sync::Arc;
 use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::graph::Topology;
+use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::Session;
 use sgs::trainer::LrSchedule;
@@ -94,9 +95,16 @@ fn steady_state_sim_step_allocates_nothing() {
         cfg.batch,
         1,
     ));
+    // observability attached in full: the metrics registry (handles are
+    // cached Arcs, updated lock-free) and a tracer (ring buffer sized up
+    // front) must both stay allocation-free in steady state
+    let registry = Arc::new(MetricsRegistry::new());
+    let tracer = Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY));
     let mut session = Session::builder(cfg.clone())
         .with_backend(backend)
         .dataset(ds)
+        .metrics(Arc::clone(&registry))
+        .tracer(Arc::clone(&tracer))
         .build()
         .unwrap();
 
@@ -121,6 +129,13 @@ fn steady_state_sim_step_allocates_nothing() {
     assert!(session.iterations_done() >= 19);
     assert_eq!(allocs, 0, "steady-state step performed {allocs} heap allocations");
     assert_eq!(deallocs, 0, "steady-state step performed {deallocs} heap frees");
+
+    // the observers really observed: every step hit the counter, and the
+    // sim engine synthesized spans into the tracer's preallocated buffer
+    assert_eq!(registry.counter("iters_total").get() as usize, session.iterations_done());
+    assert!(registry.histogram("staleness_mod0", &[]).count() >= 19);
+    assert!(!tracer.snapshot().is_empty(), "tracer captured no spans");
+    assert_eq!(tracer.dropped(), 0);
 
     // ---- the CNN path under the same contract ----
     // conv im2col buffers, pool/flatten zero-param slots, and the spatial

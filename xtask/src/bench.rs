@@ -13,15 +13,25 @@ pub struct Csv {
     pub rows: Vec<Vec<String>>,
 }
 
-/// Read the two smoke CSVs from `bench_dir`, write/print the JSON
-/// summary, and diff hot-path means against `baseline` when it carries
-/// measured numbers. The diff never fails the run — perf drift is
-/// reported, not gated, because CI runner timing is noisy.
-pub fn run(bench_dir: &Path, baseline: Option<&Path>, out: Option<&Path>) -> Result<(), String> {
+/// Read the two smoke CSVs from `bench_dir`, optionally ingest a
+/// `sgs trace-report --json` document, write/print the JSON summary, and
+/// diff hot-path means against `baseline` when it carries measured
+/// numbers. The diff never fails the run — perf drift is reported, not
+/// gated, because CI runner timing is noisy.
+pub fn run(
+    bench_dir: &Path,
+    baseline: Option<&Path>,
+    out: Option<&Path>,
+    trace: Option<&Path>,
+) -> Result<(), String> {
     let hot = read_csv(&bench_dir.join("hot_path.csv"))?;
     let ablation = read_csv(&bench_dir.join("ablation_compensate.csv"))?;
+    let trace_report = match trace {
+        Some(path) => Some(read_trace_report(path)?),
+        None => None,
+    };
     let measured = hot.is_some() || ablation.is_some();
-    let summary = summary_json(hot.as_ref(), ablation.as_ref(), measured);
+    let summary = summary_json(hot.as_ref(), ablation.as_ref(), measured, trace_report.as_deref());
     match out {
         Some(path) => {
             fs::write(path, &summary).map_err(|e| format!("writing {}: {e}", path.display()))?;
@@ -57,7 +67,36 @@ fn read_csv(path: &Path) -> Result<Option<Csv>, String> {
     Ok(Some(Csv { header, rows }))
 }
 
-fn summary_json(hot: Option<&Csv>, ablation: Option<&Csv>, measured: bool) -> String {
+/// Load and sanity-check a `sgs trace-report --json` document, returning
+/// its (compact, validated) JSON text for embedding.
+fn read_trace_report(path: &Path) -> Result<String, String> {
+    let text = fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let doc = parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("sgs-trace-report/v1") => {}
+        Some(other) => {
+            return Err(format!(
+                "{}: unexpected schema {other:?} (want sgs-trace-report/v1 from \
+                 `sgs trace-report FILE --json`)",
+                path.display()
+            ))
+        }
+        None => {
+            return Err(format!(
+                "{}: missing \"schema\" key — pass the output of `sgs trace-report FILE --json`",
+                path.display()
+            ))
+        }
+    }
+    Ok(text.trim().to_string())
+}
+
+fn summary_json(
+    hot: Option<&Csv>,
+    ablation: Option<&Csv>,
+    measured: bool,
+    trace_report: Option<&str>,
+) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"sgs-bench/v1\",\n");
     s.push_str("  \"issue\": 6,\n");
@@ -66,6 +105,8 @@ fn summary_json(hot: Option<&Csv>, ablation: Option<&Csv>, measured: bool) -> St
     s.push_str(&csv_json(hot));
     s.push_str(",\n  \"ablation_compensate\": ");
     s.push_str(&csv_json(ablation));
+    s.push_str(",\n  \"trace_report\": ");
+    s.push_str(trace_report.unwrap_or("null"));
     s.push_str("\n}\n");
     s
 }

@@ -4,8 +4,9 @@
 //!
 //! - **determinism** (`det-*`) — modules on the bitwise-reproducibility
 //!   path (sim ≡ threaded ≡ dist) must not consult hash-ordered
-//!   containers, wall clocks, ambient RNG, or reduce floats in an
-//!   unspecified order.
+//!   containers, ambient RNG, or reduce floats in an unspecified order.
+//!   `det-wall-clock` is repo-wide: `Instant`/`SystemTime` may only be
+//!   named inside the `obs/` module family (the crate's clock gateway).
 //! - **robustness** (`rob-*`) — fallible runtime paths must surface
 //!   failures through the typed `Error` enum, never `unwrap`/`panic!`;
 //!   the untrusted-input decoders must bounds-check instead of indexing.
@@ -243,11 +244,18 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
+/// The only module family allowed to name `Instant`/`SystemTime`: the
+/// observability clock gateway. Everything else — deterministic or not —
+/// must read real time through `obs::WallClock` / `obs::Deadline` /
+/// `obs::timer`, so wall-clock access stays auditable in one place.
+const WALL_CLOCK_EXEMPT: &[&str] = &["obs"];
+
 struct FileCtx {
     rel: String,
     deterministic: bool,
     fallible: bool,
     index_scoped: bool,
+    wall_clock_exempt: bool,
 }
 
 impl FileCtx {
@@ -261,11 +269,13 @@ impl FileCtx {
         let deterministic = in_family(DETERMINISTIC);
         let fallible = in_family(FALLIBLE);
         let index_scoped = INDEX_SCOPED.contains(&rel.as_str());
+        let wall_clock_exempt = in_family(WALL_CLOCK_EXEMPT);
         FileCtx {
             rel,
             deterministic,
             fallible,
             index_scoped,
+            wall_clock_exempt,
         }
     }
 }
@@ -415,20 +425,27 @@ impl<'ast> Visit<'ast> for LintVisitor<'_> {
     }
 
     fn visit_ident(&mut self, node: &'ast proc_macro2::Ident) {
+        let name = node.to_string();
+        // Wall-clock access is repo-wide, not just deterministic modules:
+        // `obs/` is the single gateway to real time.
+        if matches!(name.as_str(), "Instant" | "SystemTime") && !self.ctx.wall_clock_exempt {
+            self.flag(
+                Rule::DetWallClock,
+                node.span(),
+                format!(
+                    "`{name}` outside the `obs/` clock gateway — use obs::WallClock, \
+                     obs::Deadline, or obs::timer"
+                ),
+            );
+        }
         if !self.ctx.deterministic {
             return;
         }
-        let name = node.to_string();
         match name.as_str() {
             "HashMap" | "HashSet" | "RandomState" => self.flag(
                 Rule::DetHashContainer,
                 node.span(),
                 format!("`{name}` in deterministic module — use BTreeMap/BTreeSet or a dense Vec"),
-            ),
-            "Instant" | "SystemTime" => self.flag(
-                Rule::DetWallClock,
-                node.span(),
-                format!("`{name}` in deterministic module — time must come from simclock/config"),
             ),
             "thread_rng" | "from_entropy" => self.flag(
                 Rule::DetAmbientRng,

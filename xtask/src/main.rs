@@ -18,6 +18,7 @@ const USAGE: &str = "\
 usage:
   cargo run -p xtask -- lint [--root DIR] [--json PATH]
   cargo run -p xtask -- bench-summary [--bench-dir DIR] [--baseline PATH] [--out PATH]
+                                      [--trace PATH (sgs trace-report --json output)]
 ";
 
 fn main() -> ExitCode {
@@ -94,7 +95,11 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         Ok(v) => v,
         Err(e) => return fail(&e),
     };
-    match bench::run(&bench_dir, baseline.as_deref(), out.as_deref()) {
+    let trace = match flag_value(args, "--trace") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    match bench::run(&bench_dir, baseline.as_deref(), out.as_deref(), trace.as_deref()) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => fail(&e),
     }

@@ -40,6 +40,23 @@ fn det_wall_clock_fires_with_span() {
     assert_eq!(lines_for(&out, Rule::DetWallClock), vec![2]);
 }
 
+/// `det-wall-clock` is repo-wide — it fires even in modules outside the
+/// deterministic family — and `obs/` is the only exempt module family.
+#[test]
+fn det_wall_clock_is_repo_wide_except_obs() {
+    // benchkit is neither deterministic nor fallible, yet Instant still fires
+    let out = lint_fixture("benchkit/fixture.rs", "det_wall_clock.rs");
+    assert_eq!(lines_for(&out, Rule::DetWallClock), vec![2]);
+    // cli too
+    let out = lint_fixture("cli/commands.rs", "det_wall_clock.rs");
+    assert_eq!(lines_for(&out, Rule::DetWallClock), vec![2]);
+    // the obs clock gateway is the sole exemption
+    let out = lint_fixture("obs/clock.rs", "det_wall_clock.rs");
+    assert!(lines_for(&out, Rule::DetWallClock).is_empty(), "{:?}", out.violations);
+    let out = lint_fixture("obs/timer.rs", "det_wall_clock.rs");
+    assert!(lines_for(&out, Rule::DetWallClock).is_empty(), "{:?}", out.violations);
+}
+
 #[test]
 fn det_ambient_rng_fires_with_span() {
     let out = lint_fixture("data/fixture.rs", "det_ambient_rng.rs");
