@@ -43,6 +43,7 @@ fn main() {
         eval_every: 100,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
 
     let spec = SweepSpec {

@@ -132,6 +132,7 @@ fn main() {
         eval_every: 0,
         compute_threads: 0, // all cores: kernel row chunks + group fan-out
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     let (e_warm, e_samples) = if smoke { (0, 2) } else { (5, 30) };
     let ds = SyntheticSpec::small(cfg.dataset_n, 64, 10, 1).generate();

@@ -67,6 +67,7 @@ fn main() -> Result<(), sgs::Error> {
         eval_every: 25,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     println!(
         "config: S={} K={} topology={} iters={} lr={}",

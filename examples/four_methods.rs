@@ -37,6 +37,7 @@ fn main() -> Result<(), sgs::Error> {
         eval_every: 200,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

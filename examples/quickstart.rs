@@ -36,6 +36,7 @@ fn main() -> Result<(), sgs::Error> {
         eval_every: 100,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
 
     println!(

@@ -38,6 +38,7 @@ fn main() -> Result<(), sgs::Error> {
         eval_every: 150,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

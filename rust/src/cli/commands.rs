@@ -39,6 +39,7 @@ COMMANDS
              --opt sgd|momentum:B|nesterov:B --mode fd|dbp
              --compensate none|dc:LAMBDA|accum:N
              --workers N (dist engine: in-process workers)
+             --codec raw|f16|delta (dist data-plane wire codec)
              --compute-threads N (0 = all cores; any N is bit-identical)
              --out CSV --events-out JSONL --trace-out JSON --clock)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
@@ -48,6 +49,7 @@ COMMANDS
   launch     run distributed across processes (train flags plus
              --workers N: spawn N loopback workers, or
              --hosts A:P,B:P,...: dial already-running `sgs worker`s;
+             --codec raw|f16|delta: compress the p2p data plane;
              placement from the config or an even split)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
@@ -109,6 +111,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(mode) = args.get("mode") {
         cfg.mode = crate::staleness::PipelineMode::parse(mode)?;
+    }
+    if let Some(codec) = args.get("codec") {
+        cfg.codec = crate::net::WireCodec::parse(codec)?;
     }
     cfg.validate()?;
     Ok(cfg)

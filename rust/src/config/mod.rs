@@ -5,6 +5,7 @@
 use crate::compensate::CompensatorKind;
 use crate::error::{Error, Result};
 use crate::graph::Topology;
+use crate::net::WireCodec;
 use crate::staleness::PipelineMode;
 use crate::trainer::lr::LrSchedule;
 use crate::trainer::opt::OptimizerKind;
@@ -270,6 +271,9 @@ pub struct ExperimentConfig {
     /// agent → worker-process plan for the distributed engine (required
     /// by `--engine dist`, ignored by the in-process engines)
     pub placement: Option<Placement>,
+    /// wire codec for the distributed data plane (act/grad/gossip tensor
+    /// payloads); ignored by the in-process engines
+    pub codec: WireCodec,
 }
 
 impl Default for ExperimentConfig {
@@ -294,6 +298,7 @@ impl Default for ExperimentConfig {
             eval_every: 50,
             compute_threads: 0,
             placement: None,
+            codec: WireCodec::Raw,
         }
     }
 }
@@ -391,6 +396,10 @@ impl ExperimentConfig {
         if let Some(p) = &self.placement {
             j.set("placement", p.to_json());
         }
+        // only emitted when non-default so older readers keep parsing
+        if self.codec != WireCodec::Raw {
+            j.set("codec", self.codec.name());
+        }
         j
     }
 
@@ -471,6 +480,11 @@ impl ExperimentConfig {
                     j.get("k")?.as_usize()?,
                 )?),
                 None => None,
+            },
+            // optional: raw when absent (configs predating the codec layer)
+            codec: match j.opt("codec") {
+                Some(c) => WireCodec::parse(c.as_str()?)?,
+                None => WireCodec::Raw,
             },
         };
         cfg.validate()?;

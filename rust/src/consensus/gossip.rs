@@ -52,6 +52,14 @@ impl GossipMixer {
         self.rows.len()
     }
 
+    /// Row `s` of P as stored: the `(r, P_sr)` pairs with nonzero weight,
+    /// in ascending `r`. The decentralized workers replay exactly this
+    /// sparse row (same order, same f32 casts) so their local mixes stay
+    /// bit-identical to [`GossipMixer::mix`].
+    pub fn row(&self, s: usize) -> &[(usize, f64)] {
+        &self.rows[s]
+    }
+
     /// Scratch-set index for `shape`, creating it on first encounter.
     fn scratch_for(&mut self, shape: &[usize]) -> usize {
         if let Some(i) = self.scratch.iter().position(|(s, _)| s[..] == *shape) {

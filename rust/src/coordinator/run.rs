@@ -88,6 +88,7 @@ mod tests {
             eval_every: 10,
             compute_threads: 0,
             placement: None,
+            codec: crate::net::WireCodec::Raw,
         }
     }
 

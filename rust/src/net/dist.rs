@@ -1,45 +1,51 @@
-//! The distributed engine: a coordinator process driving W worker
+//! The distributed coordinator: a **control plane** driving W worker
 //! processes behind the [`Engine`] trait.
 //!
-//! Topology is a star: every activation stash, error gradient, and gossip
-//! exchange is routed through the coordinator, which therefore always
-//! holds a byte-exact **mirror** of every agent's parameters (it computes
-//! the gossip mixes itself, with the exact `GossipMixer` arithmetic —
-//! zero-fill + axpy in ascending-neighbour order — and hands the results
-//! back to the owners). That mirror is what `eval`, `consensus_delta`,
-//! `final_params`, and the weights of every checkpoint read, with no
-//! extra traffic.
+//! The data plane is decentralized: activation stashes, error gradients,
+//! and gossip parameter exchanges flow **directly between workers** over
+//! a full peer mesh (see [`crate::net::worker`]), never through this
+//! process. The coordinator's job is everything that is not tensor
+//! traffic:
 //!
-//! One `step` is one frame conversation:
+//! * the config/placement handshake, including **peer address exchange**
+//!   (workers advertise their data-plane listeners in `Ready`, the
+//!   coordinator broadcasts the full roster in `Peers`, and waits for
+//!   every `PeerReady` before stepping) and **codec negotiation** (the
+//!   `Hello` frame names the [`crate::net::wire::WireCodec`] the whole
+//!   fleet speaks);
+//! * step pacing: one `Step{t, η}` broadcast per iteration, one
+//!   `StepDone` per worker carrying losses, correction norms, and the
+//!   per-module compressed byte counters that become the event's
+//!   `net_tx`/`net_rx` fields;
+//! * eval / consensus-δ / checkpoint collection. The coordinator keeps a
+//!   parameter **mirror**, but only by *collecting* mixed parameters from
+//!   the owners (`ParamsReq` → `ParamsState`) on the cadences that read
+//!   it — it never re-does the gossip arithmetic.
 //!
-//! 1. `Step{t, η}` broadcast to every worker;
-//! 2. route `Act`/`Grad` frames between workers while they run the
-//!    forward/backward phases (messages between same-worker agents never
-//!    hit the wire);
-//! 3. collect all S×K `GossipPost` frames, run the configured gossip
-//!    rounds centrally, reply `GossipMixed` to each owner;
-//! 4. collect every worker's `StepDone` (losses + correction norms) and
-//!    assemble the [`IterEvent`] with the same reductions and cadence
-//!    rules as the in-process engines — which is why loopback runs are
-//!    bit-identical to the threaded engine (tests/integration_engines.rs).
+//! Any tensor data-plane frame arriving here is a protocol violation:
+//! its bytes land in [`DistEngine::data_plane_bytes`] (asserted zero in
+//! steady state by `tests/integration_engines.rs`) and the fleet is
+//! failed.
 //!
 //! A lost worker (dropped connection, `Abort`, timeout) surfaces as a
 //! typed [`Error::Net`] from `step`, mirroring the threaded engine's
 //! poisoned-channel semantics; the coordinator then tears the remaining
 //! connections down so no process hangs.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::config::ExperimentConfig;
-use crate::consensus::{consensus_error, GossipMixer};
+use crate::consensus::consensus_error;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::graph::{max_safe_alpha, xiao_boyd_weights, Graph};
 use crate::net::transport::{LocalTransport, Transport};
 use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
+use crate::net::worker::PeerSetup;
 use crate::nn::init::init_params;
 use crate::nn::LayerShape;
 use crate::obs::{Histogram, MetricsRegistry, Phase, Span, Tracer, WallClock, NO_COORD};
@@ -55,33 +61,54 @@ use crate::util::rng::Pcg32;
 /// the fleet lost. Generous: covers a slow worker's whole compute phase.
 const STEP_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// How long a worker gets to answer the config handshake (it rebuilds the
-/// dataset and weights in that window). A peer that accepts the TCP
-/// connection but never speaks errors out instead of hanging `launch`.
+/// How long a worker gets to answer each handshake stage (it rebuilds the
+/// dataset and weights, then bootstraps its peer mesh, in these windows).
+/// A peer that accepts the TCP connection but never speaks errors out
+/// instead of hanging `launch`.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Spawn `n` in-process workers over [`LocalTransport`] pairs — the
 /// `--engine dist` default when no remote workers are supplied: the full
-/// coordinator/worker protocol, zero sockets.
+/// coordinator/worker protocol, zero sockets. The workers' data-plane
+/// mesh is pre-wired here with one more `LocalTransport` pair per worker
+/// pair, so peer traffic stays in-process too.
 pub fn spawn_local_workers(
     n: usize,
 ) -> Result<(Vec<Box<dyn Transport>>, Vec<JoinHandle<Result<()>>>)> {
+    let mut meshes: Vec<BTreeMap<usize, Box<dyn Transport>>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (a, b) = LocalTransport::pair();
+            if let Some(m) = meshes.get_mut(i) {
+                m.insert(j, Box::new(a) as Box<dyn Transport>);
+            }
+            if let Some(m) = meshes.get_mut(j) {
+                m.insert(i, Box::new(b) as Box<dyn Transport>);
+            }
+        }
+    }
     let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
-    for i in 0..n {
+    for (i, mesh) in meshes.into_iter().enumerate() {
         let (coord_end, worker_end) = LocalTransport::pair();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("sgs-worker-{i}"))
-                .spawn(move || crate::net::worker::run_worker(Box::new(worker_end)))?,
+                .spawn(move || {
+                    crate::net::worker::run_worker(
+                        Box::new(worker_end),
+                        PeerSetup::Prewired(mesh),
+                    )
+                })?,
         );
         transports.push(Box::new(coord_end));
     }
     Ok((transports, handles))
 }
 
-/// The coordinator: owns the experiment clock, the parameter mirror, and
-/// one connection per worker.
+/// The coordinator: owns the experiment clock, the collected parameter
+/// mirror, and one control connection per worker.
 pub struct DistEngine {
     cfg: ExperimentConfig,
     backend: Arc<dyn ComputeBackend>,
@@ -89,9 +116,6 @@ pub struct DistEngine {
     bounds: Vec<(usize, usize)>,
     /// agent → worker map, s-major (`assign[s*K + k]`)
     assign: Vec<u32>,
-    /// the exact mixing arithmetic of the in-process engines (None when
-    /// S = 1 — nothing to gossip with, same as the sim engine)
-    mixer: Option<GossipMixer>,
     /// send halves, one per worker
     senders: Vec<Box<dyn Transport>>,
     /// fan-in of every worker's frames (reader threads own the recv halves)
@@ -99,16 +123,22 @@ pub struct DistEngine {
     readers: Vec<JoinHandle<()>>,
     /// in-process worker threads (Local mode); empty for remote workers
     local_workers: Vec<JoinHandle<Result<()>>>,
-    /// mirror[s][k]: byte-exact copy of agent (s,k)'s current parameters
+    /// mirror[s][k]: agent (s,k)'s parameters as of the last
+    /// [`DistEngine::refresh_mirror`] pull (init / restore weights before
+    /// the first pull). Collected from the owners, never recomputed.
     mirror: Vec<Vec<Vec<(Tensor, Tensor)>>>,
     /// fixed probe batch for eval (same derivation as the other engines)
     probe: (Tensor, Tensor),
     staleness_arc: Arc<[usize]>,
     zero_corr: Arc<[f64]>,
-    /// per-module wire bytes of the last iteration (logical transfers,
-    /// counted once each even though the star routes them twice)
+    /// per-module compressed wire bytes of the last iteration, summed
+    /// from the workers' `StepDone` reports
     net_tx: Vec<u64>,
     net_rx: Vec<u64>,
+    /// bytes of tensor data-plane frames that reached the coordinator —
+    /// zero by design; a nonzero value means the p2p mesh leaked traffic
+    /// through the control plane
+    data_plane_bytes: u64,
     iter_time_s: f64,
     t: i64,
     t_offset: usize,
@@ -121,9 +151,9 @@ pub struct DistEngine {
     tracer: Option<Arc<Tracer>>,
     /// destination for worker metric samples (`w{id}_` prefixed)
     metrics: Option<Arc<MetricsRegistry>>,
-    /// cached handle: seconds per central gossip mix (registered once at
-    /// attach time, observed per iteration without registry lookups)
-    mix_hist: Option<Arc<Histogram>>,
+    /// cached handle: seconds per mirror sync (registered once at attach
+    /// time, observed per pull without registry lookups)
+    mirror_hist: Option<Arc<Histogram>>,
 }
 
 /// Close a coordinator-track span opened at `start` (None = no tracer).
@@ -140,9 +170,11 @@ fn span_open(tracer: &Option<Arc<Tracer>>) -> Option<u64> {
 
 impl DistEngine {
     /// Handshake with `workers` (one transport per worker, index =
-    /// worker id) and build the coordinator. `local_workers` carries the
-    /// in-process worker threads when self-hosting, so teardown can join
-    /// them.
+    /// worker id) and build the coordinator: greet the fleet (version +
+    /// codec + config), collect data-plane addresses from the `Ready`
+    /// replies, broadcast the roster, and wait for every worker to report
+    /// its mesh complete. `local_workers` carries the in-process worker
+    /// threads when self-hosting, so teardown can join them.
     pub fn connect(
         cfg: ExperimentConfig,
         backend: Arc<dyn ComputeBackend>,
@@ -188,25 +220,28 @@ impl DistEngine {
         let probe_idx = probe_rng.sample_indices(ds.len(), cfg.batch.min(ds.len()));
         let probe = ds.gather(&probe_idx);
 
-        // gossip machinery only when there is someone to gossip with —
-        // the SAME GossipMixer the sim engine runs, so the mixing
-        // arithmetic cannot drift between engines
-        let mixer = if s_groups > 1 {
+        // fail fast on a bad gossip configuration before any worker burns
+        // time rebuilding the experiment — the workers run the identical
+        // construction themselves (the coordinator never mixes)
+        if s_groups > 1 {
             let g = Graph::build(cfg.topology, s_groups)?;
             let alpha = cfg.alpha.unwrap_or_else(|| max_safe_alpha(&g));
-            let p = xiao_boyd_weights(&g, alpha)?;
-            Some(GossipMixer::new(&p, 0))
-        } else {
-            None
-        };
+            xiao_boyd_weights(&g, alpha)?;
+        }
 
-        // handshake: greet the whole fleet first, then collect the Ready
-        // replies (workers rebuild dataset + weights concurrently), each
-        // bounded by the handshake deadline so a mute peer can't hang us
+        // handshake stage 1: greet the whole fleet (version + codec +
+        // config), then collect the Ready replies with their data-plane
+        // addresses (workers rebuild dataset + weights concurrently),
+        // each bounded by the handshake deadline so a mute peer can't
+        // hang us
         let cfg_json = cfg.to_json().to_string_compact();
         let mut handshaken = Vec::with_capacity(workers.len());
         for (i, mut t) in workers.into_iter().enumerate() {
-            t.send(&Frame::Hello { version: WIRE_VERSION as u32 })?;
+            t.set_codec(cfg.codec);
+            t.send(&Frame::Hello {
+                version: WIRE_VERSION as u32,
+                codec: cfg.codec.id(),
+            })?;
             t.send(&Frame::Config {
                 cfg_json: cfg_json.clone(),
                 worker_id: i as u32,
@@ -215,9 +250,12 @@ impl DistEngine {
             })?;
             handshaken.push(t);
         }
+        let mut addrs = vec![String::new(); handshaken.len()];
         for (i, t) in handshaken.iter_mut().enumerate() {
             match t.recv_deadline(HANDSHAKE_TIMEOUT)?.0 {
-                Frame::Ready { worker_id } if worker_id as usize == i => {}
+                Frame::Ready { worker_id, peer_addr } if worker_id as usize == i => {
+                    addrs[i] = peer_addr;
+                }
                 Frame::Abort { msg } => {
                     return Err(Error::Net(format!("worker {i} rejected config: {msg}")))
                 }
@@ -230,9 +268,28 @@ impl DistEngine {
             }
         }
 
+        // handshake stage 2: broadcast the roster (every listener already
+        // exists), then wait for each worker to finish wiring its mesh
+        for t in handshaken.iter_mut() {
+            t.send(&Frame::Peers { addrs: addrs.clone() })?;
+        }
+        for (i, t) in handshaken.iter_mut().enumerate() {
+            match t.recv_deadline(HANDSHAKE_TIMEOUT)?.0 {
+                Frame::PeerReady { worker_id } if worker_id as usize == i => {}
+                Frame::Abort { msg } => {
+                    return Err(Error::Net(format!("worker {i} failed its peer mesh: {msg}")))
+                }
+                other => {
+                    return Err(Error::Net(format!(
+                        "worker {i}: expected peer-ready, got {}",
+                        other.name()
+                    )))
+                }
+            }
+        }
+
         // split each connection; reader threads fan every inbound frame
-        // into one queue so `step` can route without blocking on any
-        // single worker
+        // into one queue so the run loop never blocks on a single worker
         let (fanin_tx, fanin) = channel();
         let mut senders = Vec::with_capacity(handshaken.len());
         let mut readers = Vec::with_capacity(handshaken.len());
@@ -265,12 +322,12 @@ impl DistEngine {
             zero_corr: vec![0.0; k_modules].into(),
             net_tx: vec![0; k_modules],
             net_rx: vec![0; k_modules],
+            data_plane_bytes: 0,
             cfg,
             backend,
             layers,
             bounds,
             assign,
-            mixer,
             senders,
             fanin,
             readers,
@@ -284,12 +341,19 @@ impl DistEngine {
             clock: WallClock::new(),
             tracer: None,
             metrics: None,
-            mix_hist: None,
+            mirror_hist: None,
         })
     }
 
     fn worker_of(&self, s: usize, k: usize) -> usize {
         self.assign[s * self.cfg.k + k] as usize
+    }
+
+    /// Bytes of tensor data-plane frames (act/grad/gossip) that reached
+    /// the coordinator. The decentralized design keeps this at **zero**;
+    /// `tests/integration_engines.rs` asserts it.
+    pub fn data_plane_bytes(&self) -> u64 {
+        self.data_plane_bytes
     }
 
     /// Record a fatal fleet error and tear the remaining connections down
@@ -317,51 +381,76 @@ impl DistEngine {
         }
     }
 
-    /// Run the configured gossip rounds over the posted û and reply the
-    /// mixed ŵ to each owner. `posts[k][s]` must be fully populated.
-    /// The mixing itself is [`GossipMixer::mix`] — the sim engine's exact
-    /// gather/mix/scatter loop over every parameter tensor — so the bytes
-    /// handed back equal the in-process engines'; S = 1 has no mixer and
-    /// echoes the posts unchanged.
-    fn mix_and_reply(&mut self, mut posts: Vec<Vec<Vec<(Tensor, Tensor)>>>) -> Result<()> {
-        if let Some(mixer) = &mut self.mixer {
-            let mut gather: Vec<Tensor> = Vec::with_capacity(self.cfg.s);
-            for post_k in posts.iter_mut() {
-                let n_local = post_k[0].len();
-                for l in 0..n_local {
-                    for which in 0..2 {
-                        gather.clear();
-                        for group in post_k.iter_mut() {
-                            let p = &mut group[l];
-                            gather.push(std::mem::replace(
-                                if which == 0 { &mut p.0 } else { &mut p.1 },
-                                Tensor::empty(),
-                            ));
-                        }
-                        // r rounds: contraction γ^r per iteration
-                        for _ in 0..self.cfg.gossip_rounds {
-                            mixer.mix(&mut gather);
-                        }
-                        for (group, mixed) in post_k.iter_mut().zip(gather.drain(..)) {
-                            let p = &mut group[l];
-                            *(if which == 0 { &mut p.0 } else { &mut p.1 }) = mixed;
-                        }
+    /// Pull every agent's current (post-gossip) parameters into the
+    /// mirror: `ParamsReq` broadcast, one `ParamsState` per worker back.
+    /// Called only on the cadences that read the mirror (eval, δ, final
+    /// iteration, checkpoint) — steady-state iterations never pay for it.
+    fn refresh_mirror(&mut self) -> Result<()> {
+        let sync_open = span_open(&self.tracer);
+        let sync_start_us = self.clock.now_us();
+        for i in 0..self.senders.len() {
+            if let Err(e) = self.senders[i].send(&Frame::ParamsReq) {
+                return Err(self.fail(format!("lost worker {i}: {e}")));
+            }
+        }
+        let s_groups = self.cfg.s;
+        let k_modules = self.cfg.k;
+        let mut seen = vec![false; s_groups * k_modules];
+        let mut pending = self.senders.len();
+        while pending > 0 {
+            let (wid, frame, _) = self.next_frame()?;
+            match frame {
+                Frame::ParamsState { worker_id, agents } => {
+                    if worker_id as usize != wid {
+                        return Err(self.fail(format!(
+                            "params-state for worker {worker_id} arrived on link {wid}"
+                        )));
                     }
+                    for (s, k, params) in agents {
+                        let (s_us, k_us) = (s as usize, k as usize);
+                        if s_us >= s_groups || k_us >= k_modules {
+                            return Err(self.fail(format!(
+                                "worker {wid} sent params for invalid agent ({s},{k})"
+                            )));
+                        }
+                        let idx = s_us * k_modules + k_us;
+                        let want = self.bounds[k_us].1 - self.bounds[k_us].0;
+                        if self.worker_of(s_us, k_us) != wid
+                            || params.len() != want
+                            || seen[idx]
+                        {
+                            return Err(self.fail(format!(
+                                "worker {wid}: bad params-state entry for agent ({s},{k})"
+                            )));
+                        }
+                        seen[idx] = true;
+                        self.mirror[s_us][k_us] = params;
+                    }
+                    pending -= 1;
+                }
+                Frame::Abort { msg } => {
+                    return Err(self.fail(format!("worker {wid} aborted: {msg}")));
+                }
+                other => {
+                    return Err(self.fail(format!(
+                        "protocol error: {} frame from worker {wid} during mirror sync",
+                        other.name()
+                    )));
                 }
             }
         }
-        for (k, row) in posts.into_iter().enumerate() {
-            for (s, params) in row.into_iter().enumerate() {
-                let dest = self.worker_of(s, k);
-                let n = self.senders[dest].send(&Frame::GossipMixed {
-                    s: s as u32,
-                    k: k as u32,
-                    params: params.clone(),
-                })?;
-                self.net_rx[k] += n as u64;
-                self.mirror[s][k] = params;
-            }
+        if let Some(missing) = seen.iter().position(|&b| !b) {
+            return Err(self.fail(format!(
+                "mirror sync missing agent ({},{})",
+                missing / k_modules,
+                missing % k_modules
+            )));
         }
+        if let Some(h) = &self.mirror_hist {
+            let dur = self.clock.now_us().saturating_sub(sync_start_us);
+            h.observe(dur as f64 * 1e-6);
+        }
+        rec_span(&self.tracer, sync_open, Phase::GossipMix, self.t);
         Ok(())
     }
 
@@ -397,97 +486,31 @@ impl DistEngine {
             }
         }
 
+        // the data plane runs peer-to-peer: the only frames this loop
+        // should see are StepDone reports and Obs batches
         let mut done = vec![false; self.senders.len()];
         let mut losses: Vec<(usize, f64)> = Vec::new();
         let mut per_group = vec![vec![0.0f64; k_modules]; s_groups];
-        let mut posts: Vec<Vec<Option<Vec<(Tensor, Tensor)>>>> =
-            (0..k_modules).map(|_| vec![None; s_groups]).collect();
-        let mut n_posts = 0usize;
-        let mut gossip_done = false;
-
         while !done.iter().all(|&d| d) {
             let (wid, frame, nbytes) = self.next_frame()?;
+            let fname = frame.name();
             match frame {
-                Frame::Act { s, k_to, .. } => {
-                    let (s_us, k_us) = (s as usize, k_to as usize);
-                    if s_us >= s_groups || k_us == 0 || k_us >= k_modules {
-                        return Err(self.fail(format!(
-                            "worker {wid} sent act for invalid agent ({s},{k_to})"
-                        )));
-                    }
-                    self.net_tx[k_us - 1] += nbytes as u64;
-                    self.net_rx[k_us] += nbytes as u64;
-                    let dest = self.worker_of(s_us, k_us);
-                    if let Err(e) = self.senders[dest].send(&frame) {
-                        return Err(self.fail(format!("lost worker {dest}: {e}")));
-                    }
-                }
-                Frame::Grad { s, k_to, .. } => {
-                    let (s_us, k_us) = (s as usize, k_to as usize);
-                    if s_us >= s_groups || k_us + 1 >= k_modules {
-                        return Err(self.fail(format!(
-                            "worker {wid} sent grad for invalid agent ({s},{k_to})"
-                        )));
-                    }
-                    self.net_tx[k_us + 1] += nbytes as u64;
-                    self.net_rx[k_us] += nbytes as u64;
-                    let dest = self.worker_of(s_us, k_us);
-                    if let Err(e) = self.senders[dest].send(&frame) {
-                        return Err(self.fail(format!("lost worker {dest}: {e}")));
-                    }
-                }
-                Frame::GossipPost { s, k, params } => {
-                    let (s_us, k_us) = (s as usize, k as usize);
-                    if s_us >= s_groups || k_us >= k_modules {
-                        return Err(self.fail(format!(
-                            "worker {wid} posted gossip for invalid agent ({s},{k})"
-                        )));
-                    }
-                    let want = self.bounds[k_us].1 - self.bounds[k_us].0;
-                    if gossip_done || params.len() != want || posts[k_us][s_us].is_some() {
-                        return Err(self.fail(format!(
-                            "worker {wid}: bad gossip post for agent ({s},{k})"
-                        )));
-                    }
-                    self.net_tx[k_us] += nbytes as u64;
-                    posts[k_us][s_us] = Some(params);
-                    n_posts += 1;
-                    if n_posts == s_groups * k_modules {
-                        gossip_done = true;
-                        let mut full: Vec<Vec<Vec<(Tensor, Tensor)>>> =
-                            Vec::with_capacity(k_modules);
-                        for row in std::mem::take(&mut posts) {
-                            let mut groups = Vec::with_capacity(row.len());
-                            for p in row {
-                                match p {
-                                    Some(params) => groups.push(params),
-                                    // unreachable given the duplicate-post
-                                    // check above, but typed, not a panic
-                                    None => {
-                                        return Err(self.fail(
-                                            "gossip post missing despite full count".to_string(),
-                                        ));
-                                    }
-                                }
-                            }
-                            full.push(groups);
-                        }
-                        let mix_open = span_open(&self.tracer);
-                        let mix_start_us = self.clock.now_us();
-                        if let Err(e) = self.mix_and_reply(full) {
-                            return Err(self.fail(format!("gossip reply failed: {e}")));
-                        }
-                        if let Some(h) = &self.mix_hist {
-                            let dur = self.clock.now_us().saturating_sub(mix_start_us);
-                            h.observe(dur as f64 * 1e-6);
-                        }
-                        rec_span(&self.tracer, mix_open, Phase::GossipMix, t);
-                    }
-                }
-                Frame::StepDone { worker_id, losses: ls, corrections } => {
+                Frame::StepDone { worker_id, losses: ls, corrections, net_tx, net_rx } => {
                     let w = worker_id as usize;
-                    if w >= done.len() || done[w] {
+                    if w != wid || w >= done.len() || done[w] {
                         return Err(self.fail(format!("duplicate step-done from worker {wid}")));
+                    }
+                    if net_tx.len() != k_modules || net_rx.len() != k_modules {
+                        return Err(self.fail(format!(
+                            "worker {wid}: step-done byte counters cover {} modules, grid has {k_modules}",
+                            net_tx.len()
+                        )));
+                    }
+                    for (dst, v) in self.net_tx.iter_mut().zip(net_tx) {
+                        *dst += v;
+                    }
+                    for (dst, v) in self.net_rx.iter_mut().zip(net_rx) {
+                        *dst += v;
                     }
                     for (s, l) in ls {
                         losses.push((s as usize, l as f64));
@@ -519,10 +542,17 @@ impl DistEngine {
                         }
                     }
                 }
-                other => {
+                Frame::Act { .. } | Frame::Grad { .. } | Frame::GossipPost { .. } => {
+                    // tensor traffic does not belong on the control plane
+                    self.data_plane_bytes += nbytes as u64;
                     return Err(self.fail(format!(
-                        "protocol error: {} frame from worker {wid} mid-step",
-                        other.name()
+                        "protocol error: worker {wid} routed a {fname} data-plane frame \
+                         through the coordinator"
+                    )));
+                }
+                _ => {
+                    return Err(self.fail(format!(
+                        "protocol error: {fname} frame from worker {wid} mid-step"
                     )));
                 }
             }
@@ -536,6 +566,17 @@ impl DistEngine {
         let correction = crate::session::event::correction_arc(&self.zero_corr, &correction);
 
         self.t += 1;
+
+        // pull the mixed parameters only when something reads the mirror
+        // this iteration — steady-state steps stay collection-free
+        let needs_delta = self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0;
+        let needs_eval = self.cfg.eval_every > 0
+            && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters);
+        let last_iter = t_us + 1 == self.cfg.iters;
+        if needs_delta || needs_eval || last_iter {
+            self.refresh_mirror()?;
+        }
+
         // LOCKSTEP with Trainer::step / ThreadedEngine::step record
         // assembly: cadence conditions, sim_time formula, and loss mean
         // must stay identical (tests/integration_engines.rs).
@@ -553,12 +594,10 @@ impl DistEngine {
             net_rx: Some(Arc::from(&self.net_rx[..])),
             wall_time_s: None,
         };
-        if self.cfg.delta_every > 0 && t_us % self.cfg.delta_every == 0 {
+        if needs_delta {
             ev.delta = Some(self.consensus_delta());
         }
-        if self.cfg.eval_every > 0
-            && (t_us % self.cfg.eval_every == 0 || t_us + 1 == self.cfg.iters)
-        {
+        if needs_eval {
             let eval_open = span_open(&self.tracer);
             let avg = self.averaged_params();
             let (x, oh) = &self.probe;
@@ -657,12 +696,17 @@ impl Engine for DistEngine {
         self.t_offset + self.t as usize
     }
 
-    /// Full-resume snapshot gathered through the coordinator. If a worker
-    /// is lost mid-gather the checkpoint degrades to weights-only (the
-    /// mirror is always current) and the failure surfaces from the next
-    /// `step` — a degraded snapshot is still a valid checkpoint, so this
-    /// only returns `Err` if the trait contract ever needs it to.
+    /// Full-resume snapshot gathered through the control plane, starting
+    /// with a mirror pull so the weights are current. If a worker is lost
+    /// mid-gather the checkpoint degrades to weights-only from the last
+    /// good mirror and the failure surfaces from the next `step` — a
+    /// degraded snapshot is still a valid checkpoint.
     fn checkpoint(&mut self) -> Result<Checkpoint> {
+        if self.failed.is_none() {
+            if let Err(e) = self.refresh_mirror() {
+                eprintln!("dist checkpoint mirror refresh failed: {e}");
+            }
+        }
         let ck = Checkpoint::new(
             self.t_offset + self.t as usize,
             self.all_group_params(),
@@ -803,8 +847,8 @@ impl Engine for DistEngine {
     }
 
     fn attach_obs(&mut self, tracer: Option<Arc<Tracer>>, metrics: Option<Arc<MetricsRegistry>>) {
-        self.mix_hist = metrics.as_ref().map(|reg| {
-            reg.histogram("gossip_mix_s", &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0])
+        self.mirror_hist = metrics.as_ref().map(|reg| {
+            reg.histogram("mirror_sync_s", &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0])
         });
         self.tracer = tracer;
         self.metrics = metrics;

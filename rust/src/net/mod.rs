@@ -2,18 +2,31 @@
 //! module agents and data-groups run as separate OS processes while
 //! computing the **same bits** as the in-process engines.
 //!
+//! The runtime is split into a **decentralized data plane** and a thin
+//! **control plane**. Workers exchange activation stashes and error
+//! gradients peer-to-peer along the module chain, and run gossip
+//! decentralized over the `graph::topology` / `graph::weights` mixing
+//! matrices — tensor traffic never transits the coordinator, which only
+//! paces steps, brokers the handshake (config, placement, peer address
+//! roster, codec negotiation), and *collects* parameters for
+//! eval/δ/checkpoints.
+//!
 //! Three layers:
 //!
 //! * [`wire`] — the versioned, length-framed binary protocol covering the
 //!   full message vocabulary: activation stashes, backward gradients,
 //!   gossip parameter exchanges, and control frames (config handshake,
-//!   step, checkpoint/restore, shutdown).
+//!   peer roster, step, checkpoint/restore, parameter pulls, shutdown).
+//!   Bulky tensor payloads run through a pluggable [`WireCodec`]
+//!   (`raw` | `f16` | `delta`) negotiated in the handshake.
 //! * [`transport`] — the [`Transport`] contract with two implementations:
 //!   [`LocalTransport`] (in-process mpsc, what `--engine dist` self-hosts
-//!   on) and [`TcpTransport`] (`std::net`, no external dependencies).
+//!   on) and [`TcpTransport`] (`std::net`, `TCP_NODELAY`, single-write
+//!   framing, no external dependencies).
 //! * [`dist`] / [`worker`] — the coordinator ([`DistEngine`], an
 //!   [`crate::session::Engine`]) and the worker runtime behind
-//!   `sgs worker --listen ADDR` / `sgs launch --workers N`.
+//!   `sgs worker --listen ADDR` / `sgs launch --workers N`, including the
+//!   peer-mesh bootstrap ([`PeerSetup`]).
 //!
 //! # Determinism contract
 //!
@@ -47,6 +60,9 @@
 //! # separate OS processes over loopback TCP (spawns the workers):
 //! sgs launch --workers 2 --model tiny --s 2 --k 2 --iters 100
 //!
+//! # compress the peer-to-peer data plane (lossless delta codec):
+//! sgs launch --workers 3 --s 3 --k 2 --codec delta --iters 100
+//!
 //! # by hand, against remote machines:
 //! sgs worker --listen 0.0.0.0:7070            # on each host
 //! sgs launch --hosts hostA:7070,hostB:7070 --s 2 --k 2
@@ -59,4 +75,5 @@ pub mod worker;
 
 pub use dist::{spawn_local_workers, DistEngine};
 pub use transport::{LocalTransport, TcpTransport, Transport};
-pub use wire::{Frame, WIRE_VERSION};
+pub use wire::{Frame, WireCodec, WIRE_VERSION};
+pub use worker::PeerSetup;

@@ -13,9 +13,14 @@
 //!   [`crate::net::worker`]) and a dropped peer surfaces as a typed
 //!   [`Error::Net`] instead of a hang.
 //!
-//! Both serialize through the same [`crate::net::wire`] codec, so the bytes
+//! Both serialize through the same [`crate::net::wire`] layer, so the bytes
 //! a loopback-TCP run moves are exactly the bytes the in-process path
-//! moves — one codec to test, one source of truth for bit-identity.
+//! moves — one codec to test, one source of truth for bit-identity. Each
+//! transport owns its link's [`WireCodec`] and the per-direction
+//! [`CodecState`] delta references ([`Transport::set_codec`]); `split`
+//! hands the send-side state to the send half and keeps the receive-side
+//! state with the receive half, so a split link keeps (de)compressing
+//! exactly where the unsplit link left off.
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -23,7 +28,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
-use crate::net::wire::{decode, encode, Frame};
+use crate::net::wire::{decode_with, encode_with, CodecState, Frame, WireCodec};
 use crate::obs::Deadline;
 
 /// Frames above this size are rejected on receive: a corrupt length prefix
@@ -60,6 +65,12 @@ pub trait Transport: Send {
     /// Force-close the underlying connection so any peer blocked on it
     /// unblocks with an error (teardown path; best-effort).
     fn close(&mut self);
+
+    /// Select the codec this link speaks from now on (both ends must
+    /// agree — that is what the handshake negotiates). Defaults to
+    /// [`WireCodec::Raw`]; switching mid-stream resets no delta state, so
+    /// call it before any parameter frames cross the link.
+    fn set_codec(&mut self, codec: WireCodec);
 }
 
 // ---- in-process transport ----
@@ -68,6 +79,9 @@ pub trait Transport: Send {
 pub struct LocalTransport {
     tx: Option<Sender<Vec<u8>>>,
     rx: Option<Receiver<Vec<u8>>>,
+    codec: WireCodec,
+    tx_state: CodecState,
+    rx_state: CodecState,
 }
 
 impl LocalTransport {
@@ -76,15 +90,27 @@ impl LocalTransport {
         let (atx, brx) = channel();
         let (btx, arx) = channel();
         (
-            LocalTransport { tx: Some(atx), rx: Some(arx) },
-            LocalTransport { tx: Some(btx), rx: Some(brx) },
+            LocalTransport {
+                tx: Some(atx),
+                rx: Some(arx),
+                codec: WireCodec::Raw,
+                tx_state: CodecState::default(),
+                rx_state: CodecState::default(),
+            },
+            LocalTransport {
+                tx: Some(btx),
+                rx: Some(brx),
+                codec: WireCodec::Raw,
+                tx_state: CodecState::default(),
+                rx_state: CodecState::default(),
+            },
         )
     }
 }
 
 impl Transport for LocalTransport {
     fn send(&mut self, frame: &Frame) -> Result<usize> {
-        let bytes = encode(frame);
+        let bytes = encode_with(frame, self.codec, &mut self.tx_state);
         let n = bytes.len();
         self.tx
             .as_ref()
@@ -103,7 +129,7 @@ impl Transport for LocalTransport {
             .recv()
             .map_err(|_| Error::Net("peer disconnected (channel closed)".into()))?;
         let n = bytes.len();
-        Ok((decode(&bytes)?, n))
+        Ok((decode_with(&bytes, self.codec, &mut self.rx_state)?, n))
     }
 
     fn recv_deadline(&mut self, timeout: Duration) -> Result<(Frame, usize)> {
@@ -120,19 +146,35 @@ impl Transport for LocalTransport {
             }
         })?;
         let n = bytes.len();
-        Ok((decode(&bytes)?, n))
+        Ok((decode_with(&bytes, self.codec, &mut self.rx_state)?, n))
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
-        let LocalTransport { tx, rx } = *self;
-        let send_half: Box<dyn Transport> = Box::new(LocalTransport { tx, rx: None });
-        let recv_half: Box<dyn Transport> = Box::new(LocalTransport { tx: None, rx });
+        let LocalTransport { tx, rx, codec, tx_state, rx_state } = *self;
+        let send_half: Box<dyn Transport> = Box::new(LocalTransport {
+            tx,
+            rx: None,
+            codec,
+            tx_state,
+            rx_state: CodecState::default(),
+        });
+        let recv_half: Box<dyn Transport> = Box::new(LocalTransport {
+            tx: None,
+            rx,
+            codec,
+            tx_state: CodecState::default(),
+            rx_state,
+        });
         Ok((send_half, recv_half))
     }
 
     fn close(&mut self) {
         self.tx = None;
         self.rx = None;
+    }
+
+    fn set_codec(&mut self, codec: WireCodec) {
+        self.codec = codec;
     }
 }
 
@@ -147,15 +189,29 @@ pub struct TcpTransport {
     /// optional flag checked while polling; set by the worker's signal
     /// handler so SIGTERM interrupts a blocking read
     interrupt: Option<&'static std::sync::atomic::AtomicBool>,
+    codec: WireCodec,
+    tx_state: CodecState,
+    rx_state: CodecState,
 }
 
 impl TcpTransport {
     pub fn new(stream: TcpStream) -> Result<TcpTransport> {
-        stream.set_nodelay(true).ok();
+        // TCP_NODELAY on every stream: frames are written whole (header +
+        // payload in one syscall below), so Nagle only adds latency
+        stream
+            .set_nodelay(true)
+            .map_err(|e| Error::Net(format!("set_nodelay: {e}")))?;
         stream
             .set_read_timeout(Some(POLL))
             .map_err(|e| Error::Net(format!("set_read_timeout: {e}")))?;
-        Ok(TcpTransport { stream, buf: Vec::new(), interrupt: None })
+        Ok(TcpTransport {
+            stream,
+            buf: Vec::new(),
+            interrupt: None,
+            codec: WireCodec::Raw,
+            tx_state: CodecState::default(),
+            rx_state: CodecState::default(),
+        })
     }
 
     /// Connect to a listening peer (`host:port`).
@@ -222,7 +278,7 @@ impl TcpTransport {
         let Some(payload) = self.buf.get(4..4 + len) else {
             return Ok(None);
         };
-        let frame = decode(payload)?;
+        let frame = decode_with(payload, self.codec, &mut self.rx_state)?;
         self.buf.drain(..4 + len);
         Ok(Some((frame, len)))
     }
@@ -230,7 +286,9 @@ impl TcpTransport {
 
 impl Transport for TcpTransport {
     fn send(&mut self, frame: &Frame) -> Result<usize> {
-        let payload = encode(frame);
+        let payload = encode_with(frame, self.codec, &mut self.tx_state);
+        // one buffered write: header + payload in a single syscall, so
+        // NODELAY never ships a lone 4-byte length segment
         let mut msg = Vec::with_capacity(4 + payload.len());
         msg.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         msg.extend_from_slice(&payload);
@@ -249,18 +307,32 @@ impl Transport for TcpTransport {
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
-        let clone = self
+        let mut this = *self;
+        let clone = this
             .stream
             .try_clone()
             .map_err(|e| Error::Net(format!("split: {e}")))?;
-        let send_half: Box<dyn Transport> =
-            Box::new(TcpTransport { stream: clone, buf: Vec::new(), interrupt: None });
-        let recv_half: Box<dyn Transport> = self;
+        // try_clone shares the socket, so NODELAY carries over; set it
+        // anyway so the invariant is local and visible
+        clone.set_nodelay(true).ok();
+        let send_half: Box<dyn Transport> = Box::new(TcpTransport {
+            stream: clone,
+            buf: Vec::new(),
+            interrupt: None,
+            codec: this.codec,
+            tx_state: std::mem::take(&mut this.tx_state),
+            rx_state: CodecState::default(),
+        });
+        let recv_half: Box<dyn Transport> = Box::new(this);
         Ok((send_half, recv_half))
     }
 
     fn close(&mut self) {
         self.stream.shutdown(std::net::Shutdown::Both).ok();
+    }
+
+    fn set_codec(&mut self, codec: WireCodec) {
+        self.codec = codec;
     }
 }
 
@@ -306,6 +378,56 @@ mod tests {
         assert_eq!(rx.recv()?.0, Frame::Shutdown);
         assert!(tx.recv().is_err());
         assert!(rx.send(&Frame::CkptReq).is_err());
+        Ok(())
+    }
+
+    #[test]
+    fn local_link_applies_the_negotiated_codec() -> Result<()> {
+        let (mut a, mut b) = LocalTransport::pair();
+        a.set_codec(WireCodec::Delta);
+        b.set_codec(WireCodec::Delta);
+        let t = crate::tensor::Tensor::from_vec(&[32, 8], vec![0.5; 256])?;
+        let f = Frame::GossipPost { s: 0, k: 1, params: vec![(t.clone(), t)] };
+        let first = a.send(&f)?;
+        let second = a.send(&f)?;
+        assert!(second < first / 2, "unchanged params must delta-compress: {second} vs {first}");
+        assert_eq!(b.recv()?.0, f);
+        assert_eq!(b.recv()?.0, f, "delta decode must be bit-exact");
+        Ok(())
+    }
+
+    #[test]
+    fn split_halves_keep_the_link_codec() -> Result<()> {
+        let (mut a, b) = LocalTransport::pair();
+        a.set_codec(WireCodec::Delta);
+        let mut b = Box::new(b);
+        b.set_codec(WireCodec::Delta);
+        let t = crate::tensor::Tensor::from_vec(&[16, 16], vec![1.25; 256])?;
+        let f = Frame::GossipPost { s: 1, k: 0, params: vec![(t.clone(), t)] };
+        let first = a.send(&f)?;
+        // receive once unsplit (primes b's delta references), then split
+        assert_eq!(b.recv()?.0, f);
+        let (_tx, mut rx) = (b as Box<dyn Transport>).split()?;
+        let second = a.send(&f)?;
+        assert!(second < first / 2, "{second} vs {first}");
+        assert_eq!(rx.recv()?.0, f, "split recv half must keep the delta references");
+        Ok(())
+    }
+
+    #[test]
+    fn tcp_streams_have_nodelay() -> Result<()> {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let server = std::thread::spawn(move || -> Result<bool> {
+            let (stream, _) = listener.accept()?;
+            let t = TcpTransport::new(stream)?;
+            Ok(t.stream.nodelay()?)
+        });
+        let c = TcpTransport::connect(addr)?;
+        // both ends of the connection, and (since try_clone shares the
+        // socket and split re-sets it) every split half, run with NODELAY
+        assert!(c.stream.nodelay()?, "client stream must have TCP_NODELAY");
+        assert!(join(server)?, "accepted stream must have TCP_NODELAY");
         Ok(())
     }
 

@@ -3,13 +3,37 @@
 //! Every message is one [`Frame`], encoded as `[version: u8][tag: u8][body]`
 //! and carried length-prefixed by the transports (`[len: u32 LE][payload]`
 //! on TCP; one `Vec<u8>` per frame over the in-process channel). All
-//! integers are little-endian, tensors travel as `[ndim: u8][dims: u32...]
-//! [data: f32 LE...]` — the exact bytes of the host representation, which
-//! is what keeps loopback runs bit-identical to the in-process engines.
+//! integers are little-endian. Tensors travel as
+//! `[mode: u8][ndim: u8][dims: u32...][count: u32][payload]`, where `mode`
+//! selects the payload representation produced by the link's negotiated
+//! [`WireCodec`]:
+//!
+//! * mode 0 — raw f32 LE: the exact bytes of the host representation,
+//!   which is what keeps loopback runs bit-identical to the in-process
+//!   engines.
+//! * mode 1 — IEEE 754 half precision (u16 LE), produced by
+//!   [`WireCodec::F16`]. Lossy within the tolerance documented on the
+//!   codec.
+//! * mode 2 — delta: the XOR of the f32 bit patterns against the
+//!   last tensor sent in the same slot on the same link, laid out
+//!   byte-plane-ordered (all low bytes, then the next plane, …, then all
+//!   sign/exponent bytes) and zero-run-length compressed. Lossless;
+//!   produced by [`WireCodec::Delta`] for parameter gossip. Successive
+//!   parameter snapshots differ in the low mantissa bits but keep their
+//!   signs and exponents, so the plane shuffle turns the stable high
+//!   bytes into the long zero runs the RLE needs.
+//!
+//! Since v2 the protocol is peer-to-peer: workers exchange [`Frame::Act`] /
+//! [`Frame::Grad`] / [`Frame::GossipPost`] directly over a full mesh
+//! (bootstrapped by [`Frame::Peers`] / [`Frame::PeerHello`]), and the
+//! coordinator is a pure control plane that pulls mixed parameters with
+//! [`Frame::ParamsReq`] when it needs a mirror refresh.
 //!
 //! Decoding never panics: truncated buffers, version mismatches, unknown
 //! tags, and oversized counts all surface as typed [`Error::Net`]
 //! (`tests/net_transport.rs` asserts this for every frame kind).
+
+use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 use crate::obs::{Phase, Span};
@@ -17,11 +41,166 @@ use crate::staleness::Stash;
 use crate::tensor::Tensor;
 
 /// Protocol version stamped on every frame; bumped on any layout change.
-pub const WIRE_VERSION: u8 = 1;
+/// v2: peer-to-peer data plane, codec negotiation, coded tensor payloads.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Sanity cap on decoded element counts (dims, vec lengths): a corrupt
 /// length prefix must produce an error, not an attempted huge allocation.
 const MAX_COUNT: usize = 1 << 28;
+
+/// How the bulky tensor payloads (act/grad/gossip) are represented on a
+/// link. Negotiated once in the handshake ([`Frame::Hello`] /
+/// [`Frame::PeerHello`]) and then fixed for the connection's lifetime;
+/// control-plane tensors (checkpoints, restores) always travel raw.
+///
+/// Loss guarantees:
+///
+/// * [`WireCodec::Raw`] and [`WireCodec::Delta`] are bit-exact — loopback
+///   runs match the in-process engines bitwise.
+/// * [`WireCodec::F16`] rounds each f32 to the nearest half-precision
+///   value (ties to even): relative error ≤ 2⁻¹¹ for values in the f16
+///   normal range, absolute error ≤ 2⁻²⁵ below it, and magnitudes above
+///   65504 clamp to ±65504 (never ±∞).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// f32 bytes as-is. Lossless, largest.
+    #[default]
+    Raw,
+    /// IEEE 754 half precision for act/grad/gossip tensors. Lossy (see
+    /// the type-level tolerance), halves data-plane volume.
+    F16,
+    /// XOR parameter gossip against the last-sent snapshot per slot,
+    /// zero-RLE compressed. Lossless; act/grad tensors (whose payloads
+    /// change wholesale every batch) stay raw under this codec.
+    Delta,
+}
+
+impl WireCodec {
+    /// Parse a CLI/config spelling (`raw` | `f16` | `delta`).
+    pub fn parse(s: &str) -> Result<WireCodec> {
+        match s {
+            "raw" => Ok(WireCodec::Raw),
+            "f16" => Ok(WireCodec::F16),
+            "delta" => Ok(WireCodec::Delta),
+            other => Err(Error::Config(format!(
+                "unknown wire codec {other:?} (expected raw | f16 | delta)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling, round-trips through [`WireCodec::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Raw => "raw",
+            WireCodec::F16 => "f16",
+            WireCodec::Delta => "delta",
+        }
+    }
+
+    /// Single-byte identity carried in the handshake frames.
+    pub fn id(self) -> u8 {
+        match self {
+            WireCodec::Raw => 0,
+            WireCodec::F16 => 1,
+            WireCodec::Delta => 2,
+        }
+    }
+
+    /// Inverse of [`WireCodec::id`]; unknown bytes are a typed error.
+    pub fn from_id(b: u8) -> Result<WireCodec> {
+        match b {
+            0 => Ok(WireCodec::Raw),
+            1 => Ok(WireCodec::F16),
+            2 => Ok(WireCodec::Delta),
+            other => Err(Error::Net(format!("unknown wire codec id {other}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A delta-codec slot: which frame kind / agent / tensor position a
+/// parameter tensor occupies. Point-to-point links deliver frames in
+/// order, so keeping the last bits sent (sender side) and last bits
+/// decoded (receiver side) per slot stays in sync without any handshake.
+type SlotKey = (u8, u32, u32, u32);
+
+/// Per-link codec memory: the f32 bit patterns of the last parameter
+/// tensor that crossed this link in each slot. One instance per transport
+/// direction; empty until the first parameter frame.
+#[derive(Debug, Default)]
+pub struct CodecState {
+    last: BTreeMap<SlotKey, Vec<u32>>,
+}
+
+// ---- half-precision conversion (hand-rolled: no external deps) ----
+
+/// Round an f32 to the nearest f16 bit pattern (ties to even). Values
+/// beyond the f16 finite range clamp to ±65504 so a lossy link never
+/// manufactures infinities; NaN maps to a quiet f16 NaN.
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp32 == 0xFF {
+        // NaN stays NaN; ±∞ clamps to the largest finite half
+        return if man != 0 { sign | 0x7E00 } else { sign | 0x7BFF };
+    }
+    let exp = exp32 - 127 + 15;
+    if exp >= 0x1F {
+        return sign | 0x7BFF; // overflow → clamp to 65504
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflows even the smallest subnormal → ±0
+        }
+        // subnormal half: shift the (implicit-bit) mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let half = (man >> shift) as u16;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            return sign | (half + 1);
+        }
+        return sign | half;
+    }
+    let mut half = (((exp as u32) << 10) | (man >> 13)) as u16;
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half = half.wrapping_add(1); // may carry into the exponent: exact
+    }
+    if (half & 0x7FFF) >= 0x7C00 {
+        return sign | 0x7BFF; // rounding overflowed the top exponent
+    }
+    sign | half
+}
+
+/// Exact widening of an f16 bit pattern back to f32.
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal half: value = man · 2⁻²⁴, renormalize for f32
+            let p = 31 - man.leading_zeros();
+            sign | ((p + 103) << 23) | ((man << (23 - p)) & 0x007F_FFFF)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
 
 /// Exact transient state of one module agent crossing the wire — the
 /// network form of [`crate::trainer::checkpoint::ModuleResume`] plus the
@@ -87,11 +266,13 @@ pub struct AgentRestore {
     pub state: Option<AgentSnap>,
 }
 
-/// The message vocabulary of the coordinator ↔ worker protocol.
+/// The message vocabulary of the protocol: coordinator ↔ worker control
+/// frames plus the worker ↔ worker data plane (act / grad / gossip).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Coordinator → worker, first frame: protocol version check.
-    Hello { version: u32 },
+    /// Coordinator → worker, first frame: protocol version check and the
+    /// codec every link of this run must speak.
+    Hello { version: u32, codec: u8 },
     /// Coordinator → worker: full experiment config (JSON text, the same
     /// document `sgs train --config` reads) plus this worker's identity and
     /// the agent→worker assignment (`assign[s*K + k] = worker`).
@@ -102,11 +283,14 @@ pub enum Frame {
         assign: Vec<u32>,
     },
     /// Worker → coordinator: built backend/dataset/agents, ready to step.
-    Ready { worker_id: u32 },
+    /// `peer_addr` is the address other workers dial for the data plane
+    /// (empty when the mesh is pre-wired in-process).
+    Ready { worker_id: u32, peer_addr: String },
     /// Coordinator → worker: run global iteration `t` with step size η.
     Step { t: i64, eta: f64 },
     /// Activation stash crossing a module boundary to agent (s, k_to):
     /// batch `tau`'s boundary activation and its riding labels.
+    /// Worker → worker since v2.
     Act {
         s: u32,
         k_to: u32,
@@ -115,28 +299,28 @@ pub enum Frame {
         onehot: Tensor,
     },
     /// Backward error gradient to agent (s, k_to) for batch `tau`.
+    /// Worker → worker since v2.
     Grad { s: u32, k_to: u32, tau: i64, g: Tensor },
-    /// Worker → coordinator: agent (s, k)'s post-update parameters û for
-    /// this iteration's gossip exchange (eq. 13b).
+    /// Agent (s, k)'s post-update parameters û for one gossip round
+    /// (eq. 13b). Worker → worker since v2: each worker sends its agents'
+    /// parameters to the workers hosting their graph neighbors and mixes
+    /// locally with the shared doubly-stochastic weights.
     GossipPost {
         s: u32,
         k: u32,
         params: Vec<(Tensor, Tensor)>,
     },
-    /// Coordinator → worker: the mixed parameters ŵ after all configured
-    /// gossip rounds; the agent adopts them wholesale.
-    GossipMixed {
-        s: u32,
-        k: u32,
-        params: Vec<(Tensor, Tensor)>,
-    },
     /// Worker → coordinator: iteration finished; the last-module losses
-    /// (`(s, loss)`) and per-agent compensation correction norms
-    /// (`(s, k, ‖g_eff − g_raw‖₂)`) observed locally.
+    /// (`(s, loss)`), per-agent compensation correction norms
+    /// (`(s, k, ‖g_eff − g_raw‖₂)`), and the per-module compressed
+    /// data-plane byte counts this worker sent/received since its last
+    /// report (both length K).
     StepDone {
         worker_id: u32,
         losses: Vec<(u32, f32)>,
         corrections: Vec<(u32, u32, f64)>,
+        net_tx: Vec<u64>,
+        net_rx: Vec<u64>,
     },
     /// Coordinator → worker: snapshot every local agent's exact state.
     CkptReq,
@@ -165,6 +349,26 @@ pub enum Frame {
         spans: Vec<Span>,
         samples: Vec<(String, u8, f64)>,
     },
+    /// Coordinator → worker: the data-plane addresses of all workers
+    /// (`addrs[i]` belongs to worker i; empty strings for pre-wired
+    /// meshes). Each worker dials every lower-id peer and accepts from
+    /// every higher-id peer.
+    Peers { addrs: Vec<String> },
+    /// Worker → worker, first frame on a dialed data-plane link: the
+    /// dialer's identity and codec (the acceptor validates both).
+    PeerHello { worker_id: u32, codec: u8 },
+    /// Worker → coordinator: the full data-plane mesh is connected.
+    PeerReady { worker_id: u32 },
+    /// Coordinator → worker: send back the current (post-gossip)
+    /// parameters of every local agent so the coordinator can refresh its
+    /// mirror — it collects mixed parameters, it never re-mixes.
+    ParamsReq,
+    /// Worker → coordinator: reply to [`Frame::ParamsReq`] — each local
+    /// agent's coordinates and current parameters.
+    ParamsState {
+        worker_id: u32,
+        agents: Vec<(u32, u32, Vec<(Tensor, Tensor)>)>,
+    },
 }
 
 impl Frame {
@@ -178,7 +382,6 @@ impl Frame {
             Frame::Act { .. } => "act",
             Frame::Grad { .. } => "grad",
             Frame::GossipPost { .. } => "gossip-post",
-            Frame::GossipMixed { .. } => "gossip-mixed",
             Frame::StepDone { .. } => "step-done",
             Frame::CkptReq => "ckpt-req",
             Frame::CkptState { .. } => "ckpt-state",
@@ -187,6 +390,11 @@ impl Frame {
             Frame::Shutdown => "shutdown",
             Frame::Abort { .. } => "abort",
             Frame::Obs { .. } => "obs",
+            Frame::Peers { .. } => "peers",
+            Frame::PeerHello { .. } => "peer-hello",
+            Frame::PeerReady { .. } => "peer-ready",
+            Frame::ParamsReq => "params-req",
+            Frame::ParamsState { .. } => "params-state",
         }
     }
 }
@@ -218,16 +426,154 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+/// Shared tensor header: `[mode][ndim][dims...][count]`. The element
+/// count is explicit because a rank-0 shape is ambiguous on its own
+/// (`Tensor::empty` holds 0 elements, `Tensor::scalar` holds 1).
+fn put_tensor_header(buf: &mut Vec<u8>, t: &Tensor, mode: u8) {
+    buf.push(mode);
     buf.push(t.shape().len() as u8);
     for &d in t.shape() {
         put_u32(buf, d as u32);
     }
-    // element count is explicit: a rank-0 shape is ambiguous on its own
-    // (Tensor::empty holds 0 elements, Tensor::scalar holds 1)
     put_u32(buf, t.len() as u32);
+}
+
+/// Mode-0 tensor: exact f32 bytes. Used for all control-plane tensors and
+/// as the lossless representation of the data plane.
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_tensor_header(buf, t, 0);
     for &v in t.data() {
         buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Mode-1 tensor: half-precision payload.
+fn put_tensor_f16(buf: &mut Vec<u8>, t: &Tensor) {
+    put_tensor_header(buf, t, 1);
+    for &v in t.data() {
+        put_u16(buf, f32_to_f16_bits(v));
+    }
+}
+
+/// Streamed data-plane tensor (activations / gradients): f16 under the
+/// `f16` codec, raw otherwise — a fresh batch shares nothing with the
+/// previous one, so delta coding would only add overhead.
+fn put_stream_tensor(buf: &mut Vec<u8>, t: &Tensor, codec: WireCodec) {
+    match codec {
+        WireCodec::F16 => put_tensor_f16(buf, t),
+        WireCodec::Raw | WireCodec::Delta => put_tensor(buf, t),
+    }
+}
+
+/// Zero-run-length encode `data` as `[zero_run: u16][lit_len: u16][lit
+/// bytes]` tokens covering the buffer exactly. Literal runs break when ≥ 4
+/// consecutive zero bytes begin (shorter zero islands and short tails are
+/// cheaper left inside the literal than as an extra 4-byte token).
+fn rle_encode(out: &mut Vec<u8>, data: &[u8]) {
+    let mut rest = data;
+    while !rest.is_empty() {
+        let zeros = rest
+            .iter()
+            .take(u16::MAX as usize)
+            .take_while(|&&b| b == 0)
+            .count();
+        let tail = rest.get(zeros..).unwrap_or(&[]);
+        let mut lit = 0usize;
+        while lit < tail.len().min(u16::MAX as usize) {
+            match tail.get(lit) {
+                Some(0) => {
+                    let zrun = tail
+                        .get(lit..)
+                        .map(|s| s.iter().take_while(|&&b| b == 0).count())
+                        .unwrap_or(0);
+                    if zrun >= 4 || lit + zrun > u16::MAX as usize {
+                        break;
+                    }
+                    if lit + zrun == tail.len() {
+                        lit += zrun; // absorb a short tail of zeros
+                        break;
+                    }
+                    lit += zrun;
+                }
+                Some(_) => lit += 1,
+                None => break,
+            }
+        }
+        put_u16(out, zeros as u16);
+        put_u16(out, lit as u16);
+        out.extend_from_slice(tail.get(..lit).unwrap_or(&[]));
+        rest = tail.get(lit..).unwrap_or(&[]);
+    }
+}
+
+/// Parameter tensor under the link codec. Under `delta` the payload is
+/// the XOR of the f32 bit patterns against the last tensor sent in this
+/// slot (mode 2), falling back to raw when there is no same-shaped
+/// reference or when RLE would not actually shrink the bytes; either way
+/// the slot reference advances, mirroring the receiver's bookkeeping.
+fn put_param_tensor(
+    buf: &mut Vec<u8>,
+    t: &Tensor,
+    codec: WireCodec,
+    state: &mut CodecState,
+    key: SlotKey,
+) {
+    match codec {
+        WireCodec::Raw => put_tensor(buf, t),
+        WireCodec::F16 => put_tensor_f16(buf, t),
+        WireCodec::Delta => {
+            let bits: Vec<u32> = t.data().iter().map(|v| v.to_bits()).collect();
+            let coded = match state.last.get(&key) {
+                Some(prev) if prev.len() == bits.len() && !bits.is_empty() => {
+                    // byte-plane shuffle: emit plane 0 (low mantissa) of
+                    // every word, then plane 1, …, then plane 3 (sign +
+                    // exponent), so the bytes that rarely change between
+                    // snapshots cluster into RLE-friendly zero runs
+                    let mut xor_bytes = Vec::with_capacity(bits.len() * 4);
+                    for shift in [0u32, 8, 16, 24] {
+                        for (b, p) in bits.iter().zip(prev.iter()) {
+                            xor_bytes.push(((b ^ p) >> shift) as u8);
+                        }
+                    }
+                    let mut rle = Vec::with_capacity(xor_bytes.len() / 2);
+                    rle_encode(&mut rle, &xor_bytes);
+                    // only ship the delta when it actually saves bytes
+                    if rle.len() < xor_bytes.len() {
+                        Some(rle)
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            match coded {
+                Some(rle) => {
+                    put_tensor_header(buf, t, 2);
+                    buf.extend_from_slice(&rle);
+                }
+                None => put_tensor(buf, t),
+            }
+            state.last.insert(key, bits);
+        }
+    }
+}
+
+/// Parameter list under the link codec; slots are keyed by the frame tag,
+/// agent coordinates, and flattened tensor index so every (weight, bias)
+/// position has a stable delta reference.
+fn put_pairs_coded(
+    buf: &mut Vec<u8>,
+    ps: &[(Tensor, Tensor)],
+    codec: WireCodec,
+    state: &mut CodecState,
+    tag: u8,
+    s: u32,
+    k: u32,
+) {
+    put_u32(buf, ps.len() as u32);
+    for (i, (w, b)) in ps.iter().enumerate() {
+        put_param_tensor(buf, w, codec, state, (tag, s, k, 2 * i as u32));
+        put_param_tensor(buf, b, codec, state, (tag, s, k, 2 * i as u32 + 1));
     }
 }
 
@@ -288,15 +634,24 @@ fn put_snap(buf: &mut Vec<u8>, a: &AgentSnap) {
     }
 }
 
-/// Encode a frame to its wire payload: `[version][tag][body]` (the
-/// length prefix is the transport's concern).
+/// Encode a frame to its wire payload (`[version][tag][body]`, length
+/// prefix is the transport's concern) with the raw codec. Convenience for
+/// tests and control-plane-only users; the transports call
+/// [`encode_with`].
 pub fn encode(frame: &Frame) -> Vec<u8> {
+    encode_with(frame, WireCodec::Raw, &mut CodecState::default())
+}
+
+/// Encode a frame under a link's negotiated codec, advancing the link's
+/// send-side delta references.
+pub fn encode_with(frame: &Frame, codec: WireCodec, state: &mut CodecState) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64);
     buf.push(WIRE_VERSION);
     match frame {
-        Frame::Hello { version } => {
+        Frame::Hello { version, codec: c } => {
             buf.push(0x01);
             put_u32(&mut buf, *version);
+            buf.push(*c);
         }
         Frame::Config { cfg_json, worker_id, workers, assign } => {
             buf.push(0x02);
@@ -308,9 +663,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put_u32(&mut buf, w);
             }
         }
-        Frame::Ready { worker_id } => {
+        Frame::Ready { worker_id, peer_addr } => {
             buf.push(0x03);
             put_u32(&mut buf, *worker_id);
+            put_str(&mut buf, peer_addr);
         }
         Frame::Step { t, eta } => {
             buf.push(0x04);
@@ -322,7 +678,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut buf, *s);
             put_u32(&mut buf, *k_to);
             put_i64(&mut buf, *tau);
-            put_tensor(&mut buf, x);
+            put_stream_tensor(&mut buf, x, codec);
+            // labels are exact class indicators: always raw
             put_tensor(&mut buf, onehot);
         }
         Frame::Grad { s, k_to, tau, g } => {
@@ -330,21 +687,15 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut buf, *s);
             put_u32(&mut buf, *k_to);
             put_i64(&mut buf, *tau);
-            put_tensor(&mut buf, g);
+            put_stream_tensor(&mut buf, g, codec);
         }
         Frame::GossipPost { s, k, params } => {
             buf.push(0x07);
             put_u32(&mut buf, *s);
             put_u32(&mut buf, *k);
-            put_pairs(&mut buf, params);
+            put_pairs_coded(&mut buf, params, codec, state, 0x07, *s, *k);
         }
-        Frame::GossipMixed { s, k, params } => {
-            buf.push(0x08);
-            put_u32(&mut buf, *s);
-            put_u32(&mut buf, *k);
-            put_pairs(&mut buf, params);
-        }
-        Frame::StepDone { worker_id, losses, corrections } => {
+        Frame::StepDone { worker_id, losses, corrections, net_tx, net_rx } => {
             buf.push(0x09);
             put_u32(&mut buf, *worker_id);
             put_u32(&mut buf, losses.len() as u32);
@@ -357,6 +708,14 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put_u32(&mut buf, *s);
                 put_u32(&mut buf, *k);
                 put_f64(&mut buf, *c);
+            }
+            put_u32(&mut buf, net_tx.len() as u32);
+            for &b in net_tx {
+                put_u64(&mut buf, b);
+            }
+            put_u32(&mut buf, net_rx.len() as u32);
+            for &b in net_rx {
+                put_u64(&mut buf, b);
             }
         }
         Frame::CkptReq => buf.push(0x0A),
@@ -411,6 +770,33 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 buf.push(*kind);
                 put_str(&mut buf, name);
                 put_f64(&mut buf, *value);
+            }
+        }
+        Frame::Peers { addrs } => {
+            buf.push(0x11);
+            put_u32(&mut buf, addrs.len() as u32);
+            for a in addrs {
+                put_str(&mut buf, a);
+            }
+        }
+        Frame::PeerHello { worker_id, codec: c } => {
+            buf.push(0x12);
+            put_u32(&mut buf, *worker_id);
+            buf.push(*c);
+        }
+        Frame::PeerReady { worker_id } => {
+            buf.push(0x13);
+            put_u32(&mut buf, *worker_id);
+        }
+        Frame::ParamsReq => buf.push(0x14),
+        Frame::ParamsState { worker_id, agents } => {
+            buf.push(0x15);
+            put_u32(&mut buf, *worker_id);
+            put_u32(&mut buf, agents.len() as u32);
+            for (s, k, params) in agents {
+                put_u32(&mut buf, *s);
+                put_u32(&mut buf, *k);
+                put_pairs_coded(&mut buf, params, codec, state, 0x15, *s, *k);
             }
         }
     }
@@ -493,7 +879,10 @@ impl<'a> Reader<'a> {
             .map_err(|_| Error::Net("invalid utf-8 string in frame".into()))
     }
 
-    fn tensor(&mut self) -> Result<Tensor> {
+    /// Tensor header shared by every mode: `[mode][ndim][dims...][count]`,
+    /// validating rank, count, and the shape/count consistency.
+    fn tensor_header(&mut self) -> Result<(u8, Vec<usize>, usize)> {
+        let mode = self.u8()?;
         let ndim = self.u8()? as usize;
         if ndim > 8 {
             return Err(Error::Net(format!("implausible tensor rank {ndim}")));
@@ -514,14 +903,139 @@ impl<'a> Reader<'a> {
                 "tensor length {len} does not match shape {shape:?}"
             )));
         }
-        let mut data = Vec::with_capacity(len);
-        for _ in 0..len {
-            data.push(self.f32()?);
-        }
-        if ndim == 0 && len == 0 {
+        Ok((mode, shape, len))
+    }
+
+    fn build_tensor(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if shape.is_empty() && data.is_empty() {
             return Ok(Tensor::empty());
         }
-        Tensor::from_vec(&shape, data).map_err(|e| Error::Net(format!("bad tensor: {e}")))
+        Tensor::from_vec(shape, data).map_err(|e| Error::Net(format!("bad tensor: {e}")))
+    }
+
+    /// Zero-run-length decode exactly `total` bytes; a token that makes no
+    /// progress or overruns the target size is a typed error.
+    fn rle_decode(&mut self, total: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(total);
+        while out.len() < total {
+            let zeros = self.u16()? as usize;
+            let lit = self.u16()? as usize;
+            if zeros == 0 && lit == 0 {
+                return Err(Error::Net("zero-progress rle token in delta tensor".into()));
+            }
+            if out.len() + zeros + lit > total {
+                return Err(Error::Net(format!(
+                    "rle tokens overrun delta tensor payload ({} > {total} bytes)",
+                    out.len() + zeros + lit
+                )));
+            }
+            out.resize(out.len() + zeros, 0);
+            out.extend_from_slice(self.take(lit)?);
+        }
+        Ok(out)
+    }
+
+    /// A stateless tensor slot: raw or f16 payloads only. A delta payload
+    /// here means the sender coded a slot the receiver cannot reference.
+    fn tensor(&mut self) -> Result<Tensor> {
+        let (mode, shape, len) = self.tensor_header()?;
+        let data = match mode {
+            0 => {
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(self.f32()?);
+                }
+                data
+            }
+            1 => {
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(f16_bits_to_f32(self.u16()?));
+                }
+                data
+            }
+            2 => {
+                return Err(Error::Net(
+                    "delta-coded tensor in a stateless slot".into(),
+                ))
+            }
+            other => return Err(Error::Net(format!("unknown tensor mode {other}"))),
+        };
+        Self::build_tensor(&shape, data)
+    }
+
+    /// A parameter tensor slot: like [`Reader::tensor`] but able to
+    /// resolve mode-2 payloads against (and advance) the link's delta
+    /// references, mirroring the sender's bookkeeping exactly.
+    fn param_tensor(
+        &mut self,
+        codec: WireCodec,
+        state: &mut CodecState,
+        key: SlotKey,
+    ) -> Result<Tensor> {
+        let (mode, shape, len) = self.tensor_header()?;
+        let bits = match mode {
+            0 => {
+                let mut bits = Vec::with_capacity(len);
+                for _ in 0..len {
+                    bits.push(self.u32()?);
+                }
+                bits
+            }
+            1 => {
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(f16_bits_to_f32(self.u16()?));
+                }
+                return Self::build_tensor(&shape, data);
+            }
+            2 => {
+                let planes = self.rle_decode(len.saturating_mul(4))?;
+                let prev = state.last.get(&key).filter(|p| p.len() == len).ok_or_else(|| {
+                    Error::Net(format!(
+                        "delta tensor without a matching reference in slot {key:?}"
+                    ))
+                })?;
+                // undo the sender's byte-plane shuffle: word i is
+                // reassembled from byte i of each of the 4 planes
+                let mut bits = Vec::with_capacity(len);
+                for (i, p) in prev.iter().enumerate() {
+                    let mut x = 0u32;
+                    for j in 0..4usize {
+                        let byte = planes.get(j * len + i).copied().ok_or_else(|| {
+                            Error::Net("short delta plane in tensor payload".into())
+                        })?;
+                        x |= u32::from(byte) << (8 * j);
+                    }
+                    bits.push(x ^ p);
+                }
+                bits
+            }
+            other => return Err(Error::Net(format!("unknown tensor mode {other}"))),
+        };
+        if codec == WireCodec::Delta {
+            state.last.insert(key, bits.clone());
+        }
+        let data: Vec<f32> = bits.into_iter().map(f32::from_bits).collect();
+        Self::build_tensor(&shape, data)
+    }
+
+    fn pairs_coded(
+        &mut self,
+        codec: WireCodec,
+        state: &mut CodecState,
+        tag: u8,
+        s: u32,
+        k: u32,
+    ) -> Result<Vec<(Tensor, Tensor)>> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for i in 0..n {
+            let w = self.param_tensor(codec, state, (tag, s, k, 2 * i as u32))?;
+            let b = self.param_tensor(codec, state, (tag, s, k, 2 * i as u32 + 1))?;
+            out.push((w, b));
+        }
+        Ok(out)
     }
 
     fn pairs(&mut self) -> Result<Vec<(Tensor, Tensor)>> {
@@ -581,9 +1095,16 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Decode a wire payload produced by [`encode`]. Malformed input — short
-/// buffers, unknown tags, version mismatches — returns [`Error::Net`].
+/// Decode a wire payload produced by [`encode`] (raw codec). Malformed
+/// input — short buffers, unknown tags, version mismatches — returns
+/// [`Error::Net`].
 pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    decode_with(bytes, WireCodec::Raw, &mut CodecState::default())
+}
+
+/// Decode a wire payload under a link's negotiated codec, advancing the
+/// link's receive-side delta references.
+pub fn decode_with(bytes: &[u8], codec: WireCodec, state: &mut CodecState) -> Result<Frame> {
     let mut r = Reader { buf: bytes, pos: 0 };
     let version = r.u8()?;
     if version != WIRE_VERSION {
@@ -593,7 +1114,7 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
     }
     let tag = r.u8()?;
     let frame = match tag {
-        0x01 => Frame::Hello { version: r.u32()? },
+        0x01 => Frame::Hello { version: r.u32()?, codec: r.u8()? },
         0x02 => {
             let cfg_json = r.str()?;
             let worker_id = r.u32()?;
@@ -605,7 +1126,7 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
             }
             Frame::Config { cfg_json, worker_id, workers, assign }
         }
-        0x03 => Frame::Ready { worker_id: r.u32()? },
+        0x03 => Frame::Ready { worker_id: r.u32()?, peer_addr: r.str()? },
         0x04 => Frame::Step { t: r.i64()?, eta: r.f64()? },
         0x05 => Frame::Act {
             s: r.u32()?,
@@ -620,8 +1141,12 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
             tau: r.i64()?,
             g: r.tensor()?,
         },
-        0x07 => Frame::GossipPost { s: r.u32()?, k: r.u32()?, params: r.pairs()? },
-        0x08 => Frame::GossipMixed { s: r.u32()?, k: r.u32()?, params: r.pairs()? },
+        0x07 => {
+            let s = r.u32()?;
+            let k = r.u32()?;
+            let params = r.pairs_coded(codec, state, 0x07, s, k)?;
+            Frame::GossipPost { s, k, params }
+        }
         0x09 => {
             let worker_id = r.u32()?;
             let n = r.count()?;
@@ -634,7 +1159,17 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
             for _ in 0..n {
                 corrections.push((r.u32()?, r.u32()?, r.f64()?));
             }
-            Frame::StepDone { worker_id, losses, corrections }
+            let n = r.count()?;
+            let mut net_tx = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                net_tx.push(r.u64()?);
+            }
+            let n = r.count()?;
+            let mut net_rx = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                net_rx.push(r.u64()?);
+            }
+            Frame::StepDone { worker_id, losses, corrections, net_tx, net_rx }
         }
         0x0A => Frame::CkptReq,
         0x0B => {
@@ -688,6 +1223,29 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
             }
             Frame::Obs { worker_id, spans, samples }
         }
+        0x11 => {
+            let n = r.count()?;
+            let mut addrs = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                addrs.push(r.str()?);
+            }
+            Frame::Peers { addrs }
+        }
+        0x12 => Frame::PeerHello { worker_id: r.u32()?, codec: r.u8()? },
+        0x13 => Frame::PeerReady { worker_id: r.u32()? },
+        0x14 => Frame::ParamsReq,
+        0x15 => {
+            let worker_id = r.u32()?;
+            let n = r.count()?;
+            let mut agents = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let s = r.u32()?;
+                let k = r.u32()?;
+                let params = r.pairs_coded(codec, state, 0x15, s, k)?;
+                agents.push((s, k, params));
+            }
+            Frame::ParamsState { worker_id, agents }
+        }
         other => {
             return Err(Error::Net(format!("unknown frame tag 0x{other:02x}")));
         }
@@ -709,13 +1267,17 @@ mod tests {
     #[test]
     fn roundtrip_control_frames() {
         for f in [
-            Frame::Hello { version: 7 },
-            Frame::Ready { worker_id: 3 },
+            Frame::Hello { version: 7, codec: 2 },
+            Frame::Ready { worker_id: 3, peer_addr: "127.0.0.1:4321".into() },
             Frame::Step { t: -4, eta: 0.125 },
             Frame::CkptReq,
             Frame::Shutdown,
             Frame::RestoreDone { worker_id: 1 },
             Frame::Abort { msg: "boom".into() },
+            Frame::Peers { addrs: vec!["a:1".into(), String::new(), "b:2".into()] },
+            Frame::PeerHello { worker_id: 2, codec: 1 },
+            Frame::PeerReady { worker_id: 4 },
+            Frame::ParamsReq,
         ] {
             assert_eq!(decode(&encode(&f)).unwrap(), f);
         }
@@ -757,9 +1319,129 @@ mod tests {
         assert!(matches!(err, Error::Net(_)), "{err}");
         assert!(err.to_string().contains("version"), "{err}");
 
-        let bytes = vec![WIRE_VERSION, 0xEE];
+        // 0x08 was GossipMixed in v1; v2 retired it with central mixing
+        for tag in [0x08, 0xEE] {
+            let bytes = vec![WIRE_VERSION, tag];
+            let err = decode(&bytes).unwrap_err();
+            assert!(err.to_string().contains("unknown frame tag"), "{err}");
+        }
+    }
+
+    #[test]
+    fn codec_ids_and_names_roundtrip() {
+        for c in [WireCodec::Raw, WireCodec::F16, WireCodec::Delta] {
+            assert_eq!(WireCodec::from_id(c.id()).unwrap(), c);
+            assert_eq!(WireCodec::parse(c.name()).unwrap(), c);
+        }
+        assert!(WireCodec::from_id(9).is_err());
+        assert!(WireCodec::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn f16_conversion_is_exact_on_halves_and_bounded_elsewhere() {
+        // values exactly representable in f16 survive the round trip
+        for v in [0.0f32, -0.0, 1.0, -1.5, 0.25, 65504.0, 2.0f32.powi(-14)] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+        // relative error ≤ 2⁻¹¹ across the normal range
+        let mut x = 6.2e-5f32;
+        while x < 6.0e4 {
+            for v in [x, -x] {
+                let back = f16_bits_to_f32(f32_to_f16_bits(v));
+                let rel = ((back - v) / v).abs();
+                assert!(rel <= 1.0 / 2048.0, "{v} -> {back} rel {rel}");
+            }
+            x *= 1.37;
+        }
+        // overflow clamps to the largest finite half, never infinity
+        for v in [7.0e4f32, f32::INFINITY, -1.0e9] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!(back.is_finite(), "{v} -> {back}");
+            assert_eq!(back.abs(), 65504.0, "{v} -> {back}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // subnormal halves stay within absolute error 2⁻²⁵
+        for v in [1.0e-7f32, 3.3e-5, -5.0e-6, 2.0f32.powi(-24)] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!((back - v).abs() <= 2.0f32.powi(-25), "{v} -> {back}");
+        }
+    }
+
+    fn ramp(shape: &[usize], scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|i| i as f32 * scale).collect()).unwrap()
+    }
+
+    #[test]
+    fn delta_codec_roundtrips_bit_exactly_and_shrinks_repeats() {
+        let mut tx = CodecState::default();
+        let mut rx = CodecState::default();
+        let base = ramp(&[8, 16], 0.01);
+        let mut nudged = base.clone();
+        // perturb a few entries: most XOR words are zero → high compression
+        for v in nudged.data_mut().iter_mut().take(5) {
+            *v += 1.0e-4;
+        }
+        let f0 = Frame::GossipPost { s: 1, k: 0, params: vec![(base.clone(), ramp(&[16], 0.5))] };
+        let f1 = Frame::GossipPost { s: 1, k: 0, params: vec![(nudged, ramp(&[16], 0.5))] };
+        let b0 = encode_with(&f0, WireCodec::Delta, &mut tx);
+        let b1 = encode_with(&f1, WireCodec::Delta, &mut tx);
+        assert_eq!(decode_with(&b0, WireCodec::Delta, &mut rx).unwrap(), f0);
+        assert_eq!(decode_with(&b1, WireCodec::Delta, &mut rx).unwrap(), f1);
+        let raw = encode(&f1).len();
+        assert!(
+            b1.len() < raw / 2,
+            "second send should delta-compress: {} vs raw {raw}",
+            b1.len()
+        );
+    }
+
+    #[test]
+    fn delta_without_reference_is_a_typed_error() {
+        let mut tx = CodecState::default();
+        let t = ramp(&[4, 4], 0.1);
+        let f = Frame::GossipPost { s: 0, k: 0, params: vec![(t.clone(), t)] };
+        encode_with(&f, WireCodec::Delta, &mut tx); // primes the slot
+        let second = encode_with(&f, WireCodec::Delta, &mut tx); // mode-2 payload
+        // a fresh receiver has no reference for the slot
+        let err = decode_with(&second, WireCodec::Delta, &mut CodecState::default()).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("reference"), "{err}");
+        // and a stateless slot rejects the mode byte outright
+        let err = decode(&second).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+    }
+
+    #[test]
+    fn f16_codec_halves_stream_payloads_within_tolerance() {
+        let x = ramp(&[16, 32], 0.003);
+        let f = Frame::Grad { s: 0, k_to: 1, tau: 9, g: x.clone() };
+        let mut st = CodecState::default();
+        let coded = encode_with(&f, WireCodec::F16, &mut st);
+        let raw = encode(&f).len();
+        assert!(coded.len() < raw * 3 / 4, "f16 {} vs raw {raw}", coded.len());
+        let Frame::Grad { g, .. } = decode(&coded).unwrap() else {
+            panic!("wrong frame decoded");
+        };
+        for (a, b) in g.data().iter().zip(x.data()) {
+            assert!((a - b).abs() <= b.abs() / 2048.0 + 1.0e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rle_never_makes_zero_progress_and_rejects_overrun() {
+        // hand-built mode-2 payload with a zero-progress token
+        let mut bytes = vec![WIRE_VERSION, 0x06];
+        put_u32(&mut bytes, 0); // s
+        put_u32(&mut bytes, 1); // k_to
+        put_i64(&mut bytes, 0); // tau
+        bytes.push(2); // mode 2 in a stateless slot → typed error
+        bytes.push(1);
+        put_u32(&mut bytes, 2);
+        put_u32(&mut bytes, 2);
         let err = decode(&bytes).unwrap_err();
-        assert!(err.to_string().contains("unknown frame tag"), "{err}");
+        assert!(matches!(err, Error::Net(_)), "{err}");
     }
 
     #[test]

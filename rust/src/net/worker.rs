@@ -1,5 +1,7 @@
 //! The worker side of the distributed runtime: hosts one or more module
-//! agents and drives them over a single coordinator connection.
+//! agents, exchanges act/grad/gossip frames **directly with peer workers**
+//! over a full data-plane mesh, and answers the coordinator's control
+//! frames (step pacing, checkpoint/restore, parameter pulls).
 //!
 //! A worker is **stateless about time**: it derives everything from the
 //! [`Frame::Config`] handshake (the same deterministic constructions the
@@ -13,31 +15,58 @@
 //! forward chains block mid-iteration until the upstream activation
 //! frame arrives).
 //!
+//! Gossip runs decentralized (the paper's consensus setting): every
+//! worker holds the same sparse doubly-stochastic row of the mixing
+//! matrix (built from `graph::topology` / `graph::weights` exactly as
+//! [`crate::consensus::GossipMixer`] builds it), sends its agents'
+//! post-update parameters to the workers hosting graph neighbors, and
+//! replays the mixer's zero-fill + ascending-neighbor axpy locally — the
+//! same f32 operations in the same order, so the mixed bytes equal the
+//! in-process engines'.
+//!
+//! All inbound links (coordinator + every peer) are pumped by reader
+//! threads into one fan-in channel, so frames from any link are absorbed
+//! whether the worker is mid-iteration or idle between steps.
+//!
 //! Teardown is never a hang: a dropped coordinator connection surfaces
 //! from the transport as a typed [`Error::Net`] (TCP reads poll a
 //! shutdown flag, so SIGTERM/ctrl-c interrupts a blocking read the same
 //! way — see [`install_signal_handlers`]), and the worker exits with
-//! that error.
+//! that error. A peer link lost between iterations is remembered and
+//! turned into a typed error on the next `Step` (the fleet cannot make
+//! progress without it); lost mid-iteration it fails the step directly.
 
-use std::collections::BTreeMap;
-use std::net::TcpListener;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::net::{IpAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
 use crate::compensate::CompensatorState;
 use crate::config::ExperimentConfig;
 use crate::data::{shard_even, Dataset, MiniBatchSampler};
 use crate::error::{Error, Result};
 use crate::net::transport::{TcpTransport, Transport};
-use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireStash, WIRE_VERSION};
+use crate::net::wire::{AgentRestore, AgentSnap, Frame, WireCodec, WireStash, WIRE_VERSION};
 use crate::nn::init::init_params;
 use crate::obs::span::{METRIC_COUNTER_ADD, METRIC_GAUGE_SET};
-use crate::obs::{ObsBuffer, Phase, Span, DEFAULT_SPAN_CAPACITY};
+use crate::obs::{Deadline, ObsBuffer, Phase, Span, DEFAULT_SPAN_CAPACITY};
 use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{partition_layers, Schedule};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
+
+/// Fan-in sentinel for the coordinator link (peer links use worker ids).
+const COORD: usize = usize::MAX;
+
+/// How long a worker waits for a missing mid-iteration frame before
+/// declaring the fleet lost (matches the coordinator's step timeout).
+const FRAME_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long the data-plane mesh bootstrap may take end to end.
+const MESH_TIMEOUT: Duration = Duration::from_secs(120);
 
 // ---- signal-aware shutdown ----
 
@@ -76,11 +105,157 @@ pub fn install_signal_handlers() {
 #[cfg(not(unix))]
 pub fn install_signal_handlers() {}
 
+// ---- peer mesh bootstrap ----
+
+/// How this worker reaches its peers' data plane.
+pub enum PeerSetup {
+    /// No mesh — only valid for single-worker runs.
+    None,
+    /// In-process mesh: one pre-connected transport per peer worker id
+    /// (what [`crate::net::spawn_local_workers`] wires up).
+    Prewired(BTreeMap<usize, Box<dyn Transport>>),
+    /// TCP mesh: bind an ephemeral listener on `ip` (the interface the
+    /// coordinator reached us on), advertise it via [`Frame::Ready`], then
+    /// dial lower-id peers and accept higher-id peers.
+    Tcp { ip: IpAddr },
+}
+
+/// Dial `addr` with a short retry window: every peer listener is bound
+/// before the coordinator broadcasts [`Frame::Peers`], so the first
+/// attempt should land — the retries absorb transient multi-host hiccups.
+fn dial_peer(addr: &str) -> Result<TcpTransport> {
+    let deadline = Deadline::after(Duration::from_secs(30));
+    loop {
+        match TcpTransport::connect(addr) {
+            Ok(t) => return Ok(t),
+            Err(e) => {
+                if SHUTDOWN.load(Ordering::SeqCst) {
+                    return Err(Error::Net("shutdown signal received".into()));
+                }
+                if deadline.expired() {
+                    return Err(Error::Net(format!("dialing peer {addr}: {e}")));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Build the full data-plane mesh once the coordinator has broadcast every
+/// worker's address: dial every lower id (sending [`Frame::PeerHello`]),
+/// accept from every higher id (validating theirs), or adopt the pre-wired
+/// links. Every link ends up speaking `codec`.
+fn connect_mesh(
+    peers: PeerSetup,
+    listener: Option<TcpListener>,
+    addrs: &[String],
+    worker_id: usize,
+    workers: usize,
+    codec: WireCodec,
+) -> Result<BTreeMap<usize, Box<dyn Transport>>> {
+    if addrs.len() != workers {
+        return Err(Error::Net(format!(
+            "peers frame lists {} addresses for {workers} workers",
+            addrs.len()
+        )));
+    }
+    let mut mesh: BTreeMap<usize, Box<dyn Transport>> = BTreeMap::new();
+    match peers {
+        PeerSetup::None => {
+            if workers > 1 {
+                return Err(Error::Net(format!(
+                    "{workers}-worker run needs a peer mesh, but none was provided"
+                )));
+            }
+        }
+        PeerSetup::Prewired(mut map) => {
+            for j in (0..workers).filter(|&j| j != worker_id) {
+                let mut t = map.remove(&j).ok_or_else(|| {
+                    Error::Net(format!("pre-wired mesh is missing the link to worker {j}"))
+                })?;
+                t.set_codec(codec);
+                mesh.insert(j, t);
+            }
+        }
+        PeerSetup::Tcp { .. } => {
+            // dial every lower-id peer and introduce ourselves
+            for (j, addr) in addrs.iter().enumerate().take(worker_id) {
+                let mut t = dial_peer(addr)?;
+                t.interrupt_on(shutdown_flag());
+                t.set_codec(codec);
+                let mut link: Box<dyn Transport> = Box::new(t);
+                link.send(&Frame::PeerHello {
+                    worker_id: worker_id as u32,
+                    codec: codec.id(),
+                })?;
+                mesh.insert(j, link);
+            }
+            // accept every higher-id peer (they dial us)
+            let listener = listener.ok_or_else(|| {
+                Error::Net("tcp peer setup lost its listener before the mesh handshake".into())
+            })?;
+            let deadline = Deadline::after(MESH_TIMEOUT);
+            while mesh.len() < workers.saturating_sub(1) {
+                if SHUTDOWN.load(Ordering::SeqCst) {
+                    return Err(Error::Net("shutdown signal received".into()));
+                }
+                if deadline.expired() {
+                    return Err(Error::Net(format!(
+                        "peer mesh incomplete after {}s: have {} of {} links",
+                        MESH_TIMEOUT.as_secs(),
+                        mesh.len(),
+                        workers - 1
+                    )));
+                }
+                let stream = match listener.accept() {
+                    Ok((stream, _peer)) => stream,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                    Err(e) => return Err(Error::Net(format!("peer accept: {e}"))),
+                };
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| Error::Net(format!("peer stream: {e}")))?;
+                let mut t = TcpTransport::new(stream)?;
+                t.interrupt_on(shutdown_flag());
+                let (frame, _) = t.recv_deadline(Duration::from_secs(30))?;
+                let (pid, pcodec) = match frame {
+                    Frame::PeerHello { worker_id, codec } => (worker_id as usize, codec),
+                    other => {
+                        return Err(Error::Net(format!(
+                            "expected peer-hello on the data plane, got {}",
+                            other.name()
+                        )))
+                    }
+                };
+                if pcodec != codec.id() {
+                    return Err(Error::Net(format!(
+                        "codec mismatch on the data plane: worker {pid} speaks {}, we speak {}",
+                        WireCodec::from_id(pcodec).map(|c| c.name()).unwrap_or("?"),
+                        codec.name()
+                    )));
+                }
+                if pid <= worker_id || pid >= workers || mesh.contains_key(&pid) {
+                    return Err(Error::Net(format!(
+                        "unexpected peer-hello from worker {pid} (we are {worker_id}/{workers})"
+                    )));
+                }
+                t.set_codec(codec);
+                mesh.insert(pid, Box::new(t));
+            }
+        }
+    }
+    Ok(mesh)
+}
+
 // ---- TCP entry points ----
 
 /// Serve one coordinator session on an already-bound listener: accept a
-/// single connection, run the worker protocol on it, return when the
-/// coordinator sends `Shutdown` (Ok) or the connection drops (Err).
+/// single connection, run the worker protocol on it (with a TCP peer mesh
+/// on the same interface), return when the coordinator sends `Shutdown`
+/// (Ok) or the connection drops (Err).
 pub fn serve(listener: TcpListener) -> Result<()> {
     listener
         .set_nonblocking(true)
@@ -103,9 +278,15 @@ pub fn serve(listener: TcpListener) -> Result<()> {
     stream
         .set_nonblocking(false)
         .map_err(|e| Error::Net(format!("stream: {e}")))?;
+    // advertise the interface the coordinator actually reached us on —
+    // that is the address the peers can reach too
+    let ip = stream
+        .local_addr()
+        .map_err(|e| Error::Net(format!("local_addr: {e}")))?
+        .ip();
     let mut transport = TcpTransport::new(stream)?;
     transport.interrupt_on(shutdown_flag());
-    run_worker(Box::new(transport))
+    run_worker(Box::new(transport), PeerSetup::Tcp { ip })
 }
 
 /// Bind `addr`, announce the bound address on stdout (the launcher parses
@@ -123,16 +304,98 @@ pub fn serve_addr(addr: &str) -> Result<()> {
     serve(listener)
 }
 
+// ---- link fan-in ----
+
+/// The worker's live connections after the handshake: retained send
+/// halves plus one fan-in channel fed by a reader thread per link.
+struct Links {
+    coord: Box<dyn Transport>,
+    peers: BTreeMap<usize, Box<dyn Transport>>,
+    fanin: Receiver<(usize, Result<(Frame, usize)>)>,
+    /// peer links that died between iterations (fatal on the next Step)
+    dead: BTreeMap<usize, String>,
+    /// reader threads; detached on drop (they exit when their link dies)
+    _readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Links {
+    fn peer(&mut self, j: usize) -> Result<&mut Box<dyn Transport>> {
+        self.peers
+            .get_mut(&j)
+            .ok_or_else(|| Error::Net(format!("no data-plane link to worker {j}")))
+    }
+
+    /// Block for the next frame from any link (between iterations).
+    fn next(&mut self) -> Result<(usize, Result<(Frame, usize)>)> {
+        self.fanin
+            .recv()
+            .map_err(|_| Error::Net("all links closed".into()))
+    }
+
+    /// Bounded wait for the next frame from any link (mid-iteration).
+    fn next_timeout(&mut self) -> Result<(usize, Result<(Frame, usize)>)> {
+        self.fanin.recv_timeout(FRAME_TIMEOUT).map_err(|e| match e {
+            std::sync::mpsc::RecvTimeoutError::Timeout => Error::Net(format!(
+                "no frame from any link within {}s",
+                FRAME_TIMEOUT.as_secs()
+            )),
+            std::sync::mpsc::RecvTimeoutError::Disconnected => {
+                Error::Net("all links closed".into())
+            }
+        })
+    }
+}
+
+fn spawn_reader(
+    from: usize,
+    mut link: Box<dyn Transport>,
+    tx: Sender<(usize, Result<(Frame, usize)>)>,
+) -> Result<std::thread::JoinHandle<()>> {
+    let name = if from == COORD {
+        "sgs-worker-reader-coord".to_string()
+    } else {
+        format!("sgs-worker-reader-{from}")
+    };
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || loop {
+            match link.recv() {
+                Ok(ok) => {
+                    if tx.send((from, Ok(ok))).is_err() {
+                        return; // worker main loop is gone
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((from, Err(e)));
+                    return;
+                }
+            }
+        })
+        .map_err(|e| Error::Net(format!("spawning reader thread: {e}")))
+}
+
 // ---- the worker protocol ----
 
-/// Run the worker protocol over any transport: handshake (`Hello` +
-/// `Config` in, `Ready` out), then serve `Step`/`CkptReq`/`Restore`
+/// Run the worker protocol over any coordinator transport: handshake
+/// (`Hello` + `Config` in, `Ready` out, `Peers` in, mesh bootstrap,
+/// `PeerReady` out), then serve `Step`/`CkptReq`/`Restore`/`ParamsReq`
 /// frames until `Shutdown` (Ok) or a connection/protocol failure (Err).
-pub fn run_worker(mut transport: Box<dyn Transport>) -> Result<()> {
+/// Peer data-plane frames (act/grad/gossip) flow over `peers`, never
+/// through the coordinator.
+pub fn run_worker(mut transport: Box<dyn Transport>, peers: PeerSetup) -> Result<()> {
     let t: &mut dyn Transport = &mut *transport;
-    match t.recv()?.0 {
-        Frame::Hello { version } if version == WIRE_VERSION as u32 => {}
-        Frame::Hello { version } => {
+    let codec = match t.recv()?.0 {
+        Frame::Hello { version, codec } if version == WIRE_VERSION as u32 => {
+            match WireCodec::from_id(codec) {
+                Ok(c) => c,
+                Err(e) => {
+                    let msg = format!("handshake: {e}");
+                    let _ = t.send(&Frame::Abort { msg: msg.clone() });
+                    return Err(Error::Net(msg));
+                }
+            }
+        }
+        Frame::Hello { version, .. } => {
             let msg = format!(
                 "protocol version mismatch: coordinator v{version}, worker v{WIRE_VERSION}"
             );
@@ -144,7 +407,8 @@ pub fn run_worker(mut transport: Box<dyn Transport>) -> Result<()> {
             let _ = t.send(&Frame::Abort { msg: msg.clone() });
             return Err(Error::Net(msg));
         }
-    }
+    };
+    t.set_codec(codec);
     let (cfg_json, worker_id, workers, assign) = match t.recv()?.0 {
         Frame::Config { cfg_json, worker_id, workers, assign } => {
             (cfg_json, worker_id, workers, assign)
@@ -157,36 +421,138 @@ pub fn run_worker(mut transport: Box<dyn Transport>) -> Result<()> {
     };
     let built = WorkerRuntime::build(&cfg_json, worker_id as usize, workers as usize, &assign);
     let mut rt = match built {
-        Ok(rt) => rt,
+        Ok(rt) if rt.cfg.codec == codec => rt,
+        Ok(rt) => {
+            let msg = format!(
+                "codec negotiation mismatch: hello says {codec}, config says {}",
+                rt.cfg.codec
+            );
+            let _ = t.send(&Frame::Abort { msg: msg.clone() });
+            return Err(Error::Net(msg));
+        }
         Err(e) => {
             let _ = t.send(&Frame::Abort { msg: format!("worker build failed: {e}") });
             return Err(e);
         }
     };
-    t.send(&Frame::Ready { worker_id })?;
+
+    // data-plane listener first, so its address rides the Ready frame and
+    // every listener exists before the coordinator broadcasts Peers
+    let (listener, peer_addr) = match &peers {
+        PeerSetup::Tcp { ip } => {
+            let bind = match TcpListener::bind((*ip, 0)) {
+                Ok(l) => l,
+                Err(e) => {
+                    let msg = format!("binding the data-plane listener on {ip}: {e}");
+                    let _ = t.send(&Frame::Abort { msg: msg.clone() });
+                    return Err(Error::Net(msg));
+                }
+            };
+            if let Err(e) = bind.set_nonblocking(true) {
+                let msg = format!("data-plane listener: {e}");
+                let _ = t.send(&Frame::Abort { msg: msg.clone() });
+                return Err(Error::Net(msg));
+            }
+            match bind.local_addr() {
+                Ok(a) => (Some(bind), a.to_string()),
+                Err(e) => {
+                    let msg = format!("data-plane listener address: {e}");
+                    let _ = t.send(&Frame::Abort { msg: msg.clone() });
+                    return Err(Error::Net(msg));
+                }
+            }
+        }
+        _ => (None, String::new()),
+    };
+    t.send(&Frame::Ready { worker_id, peer_addr })?;
+
+    let addrs = match t.recv()?.0 {
+        Frame::Peers { addrs } => addrs,
+        Frame::Abort { msg } => {
+            return Err(Error::Net(format!("coordinator aborted: {msg}")))
+        }
+        other => {
+            let msg = format!("expected peers, got {}", other.name());
+            let _ = t.send(&Frame::Abort { msg: msg.clone() });
+            return Err(Error::Net(msg));
+        }
+    };
+    let mesh = match connect_mesh(
+        peers,
+        listener,
+        &addrs,
+        worker_id as usize,
+        workers as usize,
+        codec,
+    ) {
+        Ok(mesh) => mesh,
+        Err(e) => {
+            let _ = t.send(&Frame::Abort { msg: format!("worker {worker_id} mesh: {e}") });
+            return Err(e);
+        }
+    };
+    t.send(&Frame::PeerReady { worker_id })?;
+
+    // split every link; reader threads feed one fan-in channel
+    let (fan_tx, fanin) = channel();
+    let (coord_tx, coord_rx) = transport.split()?;
+    let mut readers = vec![spawn_reader(COORD, coord_rx, fan_tx.clone())?];
+    let mut peer_send = BTreeMap::new();
+    for (j, link) in mesh {
+        let (tx_half, rx_half) = link.split()?;
+        readers.push(spawn_reader(j, rx_half, fan_tx.clone())?);
+        peer_send.insert(j, tx_half);
+    }
+    drop(fan_tx);
+    let mut links = Links {
+        coord: coord_tx,
+        peers: peer_send,
+        fanin,
+        dead: BTreeMap::new(),
+        _readers: readers,
+    };
 
     loop {
-        let frame = t.recv()?.0;
-        let out = match frame {
-            Frame::Step { t: iter, eta } => rt.run_iteration(t, iter, eta),
-            f @ (Frame::Act { .. } | Frame::Grad { .. }) => rt.absorb(f),
-            Frame::CkptReq => rt.send_checkpoint(t),
-            Frame::Restore { weights_only, agents } => {
-                rt.apply_restore(t, weights_only, agents)
+        let (from, res) = links.next()?;
+        let out = if from == COORD {
+            let frame = match res {
+                Ok((frame, _)) => frame,
+                Err(e) => return Err(e),
+            };
+            match frame {
+                Frame::Step { t: iter, eta } => rt.run_iteration(&mut links, iter, eta),
+                Frame::CkptReq => rt.send_checkpoint(&mut links),
+                Frame::ParamsReq => rt.send_params(&mut links),
+                Frame::Restore { weights_only, agents } => {
+                    rt.apply_restore(&mut links, weights_only, agents)
+                }
+                Frame::Shutdown => return Ok(()),
+                Frame::Abort { msg } => {
+                    return Err(Error::Net(format!("coordinator aborted: {msg}")))
+                }
+                other => Err(Error::Net(format!(
+                    "unexpected {} frame between iterations",
+                    other.name()
+                ))),
             }
-            Frame::Shutdown => return Ok(()),
-            Frame::Abort { msg } => {
-                return Err(Error::Net(format!("coordinator aborted: {msg}")))
+        } else {
+            match res {
+                // peers may run ahead: buffer their data frames
+                Ok((frame, n)) => rt.absorb(frame, n),
+                Err(e) => {
+                    // remembered, not fatal: during clean shutdown a peer
+                    // may drop its links before our Shutdown frame lands
+                    links.dead.insert(from, e.to_string());
+                    Ok(())
+                }
             }
-            other => Err(Error::Net(format!(
-                "unexpected {} frame between iterations",
-                other.name()
-            ))),
         };
         if let Err(e) = out {
             // tell the coordinator why before dying (best-effort: the
             // connection may be the thing that failed)
-            let _ = t.send(&Frame::Abort { msg: format!("worker {worker_id}: {e}") });
+            let _ = links
+                .coord
+                .send(&Frame::Abort { msg: format!("worker {worker_id}: {e}") });
             return Err(e);
         }
     }
@@ -220,8 +586,16 @@ struct WorkerRuntime {
     pending_act: BTreeMap<(usize, usize, i64), ActMsg>,
     /// inbound error gradients keyed (s, k_to, tau)
     pending_grad: BTreeMap<(usize, usize, i64), Tensor>,
-    /// gossip replies that arrived while awaiting another agent's
-    pending_mixed: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>>,
+    /// inbound gossip replicas keyed (s, k), FIFO per slot — per-link
+    /// frame order keeps multi-round exchanges in round order
+    gossip_inbox: BTreeMap<(usize, usize), VecDeque<Vec<(Tensor, Tensor)>>>,
+    /// sparse rows of the mixing matrix P (empty when S = 1): row s holds
+    /// the ascending (r, P_sr) pairs [`crate::consensus::GossipMixer`]
+    /// would use, so the local mix replays its exact arithmetic
+    gossip_rows: Vec<Vec<(usize, f64)>>,
+    /// per-module compressed bytes sent/received since the last StepDone
+    net_tx: Vec<u64>,
+    net_rx: Vec<u64>,
     /// local span/metric buffer, drained into one `Frame::Obs` per
     /// iteration (the coordinator merges or drops it — pure observer)
     obs: ObsBuffer,
@@ -231,9 +605,9 @@ struct WorkerRuntime {
 
 impl WorkerRuntime {
     /// Rebuild the experiment deterministically from the config document:
-    /// same dataset, shards, init weights, and sampler seeds as every
-    /// in-process engine — that determinism is what lets separate OS
-    /// processes compute bit-identical iterates.
+    /// same dataset, shards, init weights, sampler seeds, and mixing
+    /// weights as every in-process engine — that determinism is what lets
+    /// separate OS processes compute bit-identical iterates.
     fn build(
         cfg_json: &str,
         worker_id: usize,
@@ -264,6 +638,19 @@ impl WorkerRuntime {
         let backend: Box<dyn ComputeBackend> = Box::new(
             crate::runtime::NativeBackend::with_threads(layers, cfg.batch, threads),
         );
+
+        // the shared mixing rows: the same construction the in-process
+        // engines run, through the same GossipMixer filtering, so every
+        // worker (and the sim/threaded engines) mixes identical f32 ops
+        let gossip_rows: Vec<Vec<(usize, f64)>> = if cfg.s > 1 {
+            let g = crate::graph::Graph::build(cfg.topology, cfg.s)?;
+            let alpha = cfg.alpha.unwrap_or_else(|| crate::graph::max_safe_alpha(&g));
+            let p = crate::graph::xiao_boyd_weights(&g, alpha)?;
+            let mixer = crate::consensus::GossipMixer::new(&p, 0);
+            (0..cfg.s).map(|s| mixer.row(s).to_vec()).collect()
+        } else {
+            Vec::new()
+        };
 
         let mut agents = Vec::new();
         for s in 0..cfg.s {
@@ -297,6 +684,8 @@ impl WorkerRuntime {
         }
         Ok(WorkerRuntime {
             sched: Schedule::with_mode(cfg.k, cfg.mode),
+            net_tx: vec![0; cfg.k],
+            net_rx: vec![0; cfg.k],
             cfg,
             backend,
             ds,
@@ -305,7 +694,8 @@ impl WorkerRuntime {
             agents,
             pending_act: BTreeMap::new(),
             pending_grad: BTreeMap::new(),
-            pending_mixed: BTreeMap::new(),
+            gossip_inbox: BTreeMap::new(),
+            gossip_rows,
             obs: ObsBuffer::new(DEFAULT_SPAN_CAPACITY),
             obs_anchored: false,
         })
@@ -325,83 +715,126 @@ impl WorkerRuntime {
         });
     }
 
-    fn hosts(&self, s: usize, k: usize) -> bool {
-        self.assign[s * self.cfg.k + k] as usize == self.worker_id
+    /// Which worker hosts agent (s, k).
+    fn host_of(&self, s: usize, k: usize) -> usize {
+        self.assign[s * self.cfg.k + k] as usize
     }
 
-    /// Buffer an inbound payload frame; anything else mid-protocol is fatal.
-    fn absorb(&mut self, frame: Frame) -> Result<()> {
+    /// Buffer an inbound data-plane frame (counting its compressed bytes
+    /// against the destination module); anything else from a peer is a
+    /// protocol error.
+    fn absorb(&mut self, frame: Frame, n: usize) -> Result<()> {
         match frame {
             Frame::Act { s, k_to, tau, x, onehot } => {
-                self.pending_act
-                    .insert((s as usize, k_to as usize, tau), ActMsg { x, onehot });
+                let (s, k_to) = self.check_coords(s, k_to, "act")?;
+                self.net_rx[k_to] += n as u64;
+                self.pending_act.insert((s, k_to, tau), ActMsg { x, onehot });
                 Ok(())
             }
             Frame::Grad { s, k_to, tau, g } => {
-                self.pending_grad.insert((s as usize, k_to as usize, tau), g);
+                let (s, k_to) = self.check_coords(s, k_to, "grad")?;
+                self.net_rx[k_to] += n as u64;
+                self.pending_grad.insert((s, k_to, tau), g);
                 Ok(())
             }
-            Frame::GossipMixed { s, k, params } => {
-                self.pending_mixed.insert((s as usize, k as usize), params);
+            Frame::GossipPost { s, k, params } => {
+                let (s, k) = self.check_coords(s, k, "gossip-post")?;
+                self.net_rx[k] += n as u64;
+                self.gossip_inbox.entry((s, k)).or_default().push_back(params);
                 Ok(())
             }
-            Frame::Abort { msg } => Err(Error::Net(format!("coordinator aborted: {msg}"))),
             other => Err(Error::Net(format!(
-                "unexpected {} frame mid-iteration",
+                "unexpected {} frame on the data plane",
                 other.name()
             ))),
         }
     }
 
-    fn await_act(&mut self, t: &mut dyn Transport, s: usize, k: usize, tau: i64) -> Result<ActMsg> {
+    fn check_coords(&self, s: u32, k: u32, what: &str) -> Result<(usize, usize)> {
+        let (s, k) = (s as usize, k as usize);
+        if s >= self.cfg.s || k >= self.cfg.k {
+            return Err(Error::Net(format!(
+                "{what} frame for agent ({s},{k}) outside the {}x{} grid",
+                self.cfg.s, self.cfg.k
+            )));
+        }
+        Ok((s, k))
+    }
+
+    /// Pull one frame off the fan-in mid-iteration and buffer it. A link
+    /// error here is fatal: the iteration cannot complete without the
+    /// fleet.
+    fn pump(&mut self, links: &mut Links) -> Result<()> {
+        let (from, res) = links.next_timeout()?;
+        let (frame, n) = match res {
+            Ok(x) => x,
+            Err(e) if from == COORD => {
+                return Err(Error::Net(format!("coordinator link lost: {e}")))
+            }
+            Err(e) => {
+                return Err(Error::Net(format!("peer worker {from} link lost: {e}")))
+            }
+        };
+        if from == COORD {
+            return match frame {
+                Frame::Abort { msg } => {
+                    Err(Error::Net(format!("coordinator aborted: {msg}")))
+                }
+                other => Err(Error::Net(format!(
+                    "unexpected {} frame from the coordinator mid-iteration",
+                    other.name()
+                ))),
+            };
+        }
+        self.absorb(frame, n)
+    }
+
+    fn await_act(&mut self, links: &mut Links, s: usize, k: usize, tau: i64) -> Result<ActMsg> {
         loop {
             if let Some(m) = self.pending_act.remove(&(s, k, tau)) {
                 return Ok(m);
             }
-            let frame = t.recv()?.0;
-            self.absorb(frame)?;
+            self.pump(links)?;
         }
     }
 
-    fn await_grad(
-        &mut self,
-        t: &mut dyn Transport,
-        s: usize,
-        k: usize,
-        tau: i64,
-    ) -> Result<Tensor> {
+    fn await_grad(&mut self, links: &mut Links, s: usize, k: usize, tau: i64) -> Result<Tensor> {
         loop {
             if let Some(g) = self.pending_grad.remove(&(s, k, tau)) {
                 return Ok(g);
             }
-            let frame = t.recv()?.0;
-            self.absorb(frame)?;
+            self.pump(links)?;
         }
     }
 
-    fn await_mixed(
+    fn await_gossip(
         &mut self,
-        t: &mut dyn Transport,
+        links: &mut Links,
         s: usize,
         k: usize,
     ) -> Result<Vec<(Tensor, Tensor)>> {
         loop {
-            if let Some(p) = self.pending_mixed.remove(&(s, k)) {
+            if let Some(p) = self.gossip_inbox.get_mut(&(s, k)).and_then(VecDeque::pop_front) {
                 return Ok(p);
             }
-            let frame = t.recv()?.0;
-            self.absorb(frame)?;
+            self.pump(links)?;
         }
     }
 
     /// One global iteration over the local agents: forward phase ascending
-    /// (s, k), backward phase descending, then the gossip exchange, then a
-    /// `StepDone` report. Bit-identical to the same agents' slice of a
+    /// (s, k), backward phase descending, then the decentralized gossip
+    /// rounds, then a `StepDone` report carrying the per-module byte
+    /// counters. Bit-identical to the same agents' slice of a
     /// threaded-engine step.
     // indexed loops: each body interleaves `&mut self.agents[i]` with
     // `&mut self` transport pumps, which an iterator borrow would forbid
     #[allow(clippy::needless_range_loop)]
-    fn run_iteration(&mut self, t: &mut dyn Transport, iter: i64, eta: f64) -> Result<()> {
+    fn run_iteration(&mut self, links: &mut Links, iter: i64, eta: f64) -> Result<()> {
+        if let Some((peer, msg)) = links.dead.iter().next() {
+            return Err(Error::Net(format!(
+                "cannot step: data-plane link to worker {peer} is down ({msg})"
+            )));
+        }
         let k_modules = self.cfg.k;
         let sched = self.sched;
         let mut losses: Vec<(u32, f32)> = Vec::new();
@@ -438,23 +871,25 @@ impl WorkerRuntime {
                 out?;
             } else {
                 let wait_open = self.obs.now_us();
-                let msg = self.await_act(t, s, k, tau)?;
+                let msg = self.await_act(links, s, k, tau)?;
                 self.obs_span(Phase::WireRx, s, k, iter, wait_open);
                 self.agents[i].agent.forward(&*self.backend, tau, &msg.x, &msg.onehot)?;
             }
             if k + 1 < k_modules {
                 let (bx, boh) = self.agents[i].agent.boundary_msg()?;
                 let (x, onehot) = (bx.clone(), boh.clone());
-                if self.hosts(s, k + 1) {
+                let dest = self.host_of(s, k + 1);
+                if dest == self.worker_id {
                     self.pending_act.insert((s, k + 1, tau), ActMsg { x, onehot });
                 } else {
-                    t.send(&Frame::Act {
+                    let n = links.peer(dest)?.send(&Frame::Act {
                         s: s as u32,
                         k_to: (k + 1) as u32,
                         tau,
                         x,
                         onehot,
                     })?;
+                    self.net_tx[k] += n as u64;
                 }
             }
             self.obs_span(Phase::Fwd, s, k, iter, fwd_open);
@@ -471,17 +906,21 @@ impl WorkerRuntime {
                 None
             } else {
                 let wait_open = self.obs.now_us();
-                let g = self.await_grad(t, s, k, tau)?;
+                let g = self.await_grad(links, s, k, tau)?;
                 self.obs_span(Phase::WireRx, s, k, iter, wait_open);
                 Some(g)
             };
             self.agents[i].agent.backward(&*self.backend, tau, g_in.as_ref())?;
             if k > 0 {
                 let g = self.agents[i].agent.upstream_grad()?.clone();
-                if self.hosts(s, k - 1) {
+                let dest = self.host_of(s, k - 1);
+                if dest == self.worker_id {
                     self.pending_grad.insert((s, k - 1, tau), g);
                 } else {
-                    t.send(&Frame::Grad { s: s as u32, k_to: (k - 1) as u32, tau, g })?;
+                    let n = links
+                        .peer(dest)?
+                        .send(&Frame::Grad { s: s as u32, k_to: (k - 1) as u32, tau, g })?;
+                    self.net_tx[k] += n as u64;
                 }
             }
             self.obs_span(Phase::Bwd, s, k, iter, bwd_open);
@@ -492,32 +931,8 @@ impl WorkerRuntime {
             corrections.push((s as u32, k as u32, norm));
         }
 
-        // ---- gossip exchange (eq. 13b, mixed centrally) ----
-        // post every local agent's û, then adopt the coordinator's mixed
-        // ŵ wholesale — the coordinator runs the exact GossipMixer
-        // arithmetic, so the adopted bytes equal the threaded engine's
-        for i in 0..self.agents.len() {
-            let (s, k) = (self.agents[i].s, self.agents[i].k);
-            t.send(&Frame::GossipPost {
-                s: s as u32,
-                k: k as u32,
-                params: self.agents[i].agent.params.clone(),
-            })?;
-        }
-        for i in 0..self.agents.len() {
-            let (s, k) = (self.agents[i].s, self.agents[i].k);
-            let gossip_open = self.obs.now_us();
-            let mixed = self.await_mixed(t, s, k)?;
-            if mixed.len() != self.agents[i].agent.params.len() {
-                return Err(Error::Net(format!(
-                    "gossip reply for ({s},{k}) has {} layers, agent has {}",
-                    mixed.len(),
-                    self.agents[i].agent.params.len()
-                )));
-            }
-            self.agents[i].agent.params = mixed;
-            self.obs_span(Phase::Gossip, s, k, iter, gossip_open);
-        }
+        // ---- decentralized gossip rounds (eq. 13b) ----
+        self.run_gossip(links, iter)?;
 
         // ---- ship the observability batch, then report the step ----
         // the Obs frame travels before StepDone so the coordinator can
@@ -527,19 +942,154 @@ impl WorkerRuntime {
         self.obs.sample("mailbox_act_depth", METRIC_GAUGE_SET, self.pending_act.len() as f64);
         self.obs.sample("mailbox_grad_depth", METRIC_GAUGE_SET, self.pending_grad.len() as f64);
         let (spans, samples) = self.obs.drain();
-        t.send(&Frame::Obs { worker_id: self.worker_id as u32, spans, samples })?;
+        links
+            .coord
+            .send(&Frame::Obs { worker_id: self.worker_id as u32, spans, samples })?;
 
-        t.send(&Frame::StepDone {
+        // per-module compressed byte counts since the last report (frames
+        // absorbed between iterations land in the next report)
+        let net_tx = std::mem::replace(&mut self.net_tx, vec![0; k_modules]);
+        let net_rx = std::mem::replace(&mut self.net_rx, vec![0; k_modules]);
+        links.coord.send(&Frame::StepDone {
             worker_id: self.worker_id as u32,
             losses,
             corrections,
+            net_tx,
+            net_rx,
         })?;
+        Ok(())
+    }
+
+    /// The decentralized gossip exchange: for each configured round, send
+    /// every local agent's current replica to the workers hosting its
+    /// graph neighbors, await theirs, and replay the mixer row locally —
+    /// zero-fill then ascending-neighbor axpy, the exact
+    /// [`crate::consensus::GossipMixer::mix`] op order, so the result is
+    /// bit-identical to central mixing. Two-phase per round: every mix
+    /// reads round-start replicas, installs after all are computed.
+    fn run_gossip(&mut self, links: &mut Links, iter: i64) -> Result<()> {
+        if self.gossip_rows.is_empty() || self.agents.is_empty() {
+            return Ok(());
+        }
+        let coords: Vec<(usize, usize)> = self.agents.iter().map(|a| (a.s, a.k)).collect();
+        let mut cur: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>> = self
+            .agents
+            .iter()
+            .map(|a| ((a.s, a.k), a.agent.params.clone()))
+            .collect();
+        for _round in 0..self.cfg.gossip_rounds {
+            let round_open = self.obs.now_us();
+            // 1) ship our replicas to every remote worker hosting a
+            //    neighbor (P is symmetric: r needs us iff we need r)
+            for &(s, k) in &coords {
+                let mut sent: BTreeSet<usize> = BTreeSet::new();
+                for ri in 0..self.gossip_rows[s].len() {
+                    let r = self.gossip_rows[s][ri].0;
+                    if r == s {
+                        continue;
+                    }
+                    let host = self.host_of(r, k);
+                    if host == self.worker_id || sent.contains(&host) {
+                        continue;
+                    }
+                    let params = cur
+                        .get(&(s, k))
+                        .cloned()
+                        .ok_or_else(|| Error::Net(format!("gossip lost replica ({s},{k})")))?;
+                    let n = links.peer(host)?.send(&Frame::GossipPost {
+                        s: s as u32,
+                        k: k as u32,
+                        params,
+                    })?;
+                    self.net_tx[k] += n as u64;
+                    sent.insert(host);
+                }
+            }
+            // 2) gather every remote neighbor replica this round needs
+            let mut needed: BTreeSet<(usize, usize)> = BTreeSet::new();
+            for &(s, k) in &coords {
+                for &(r, _) in &self.gossip_rows[s] {
+                    if r != s && !cur.contains_key(&(r, k)) {
+                        needed.insert((r, k));
+                    }
+                }
+            }
+            let mut remote: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>> = BTreeMap::new();
+            for &(r, k) in &needed {
+                let p = self.await_gossip(links, r, k)?;
+                remote.insert((r, k), p);
+            }
+            // 3) mix every local replica against frozen round-start values
+            let mut next: BTreeMap<(usize, usize), Vec<(Tensor, Tensor)>> = BTreeMap::new();
+            for &(s, k) in &coords {
+                let row = &self.gossip_rows[s];
+                let mine = cur
+                    .get(&(s, k))
+                    .ok_or_else(|| Error::Net(format!("gossip lost replica ({s},{k})")))?;
+                let n_layers = mine.len();
+                let mut mixed = Vec::with_capacity(n_layers);
+                for l in 0..n_layers {
+                    let mut out = (
+                        Tensor::zeros(mine[l].0.shape()),
+                        Tensor::zeros(mine[l].1.shape()),
+                    );
+                    for &(r, w) in row {
+                        let src = if r == s {
+                            mine
+                        } else {
+                            cur.get(&(r, k)).or_else(|| remote.get(&(r, k))).ok_or_else(
+                                || {
+                                    Error::Net(format!(
+                                        "gossip round missing replica ({r},{k})"
+                                    ))
+                                },
+                            )?
+                        };
+                        let (pw, pb) = src.get(l).ok_or_else(|| {
+                            Error::Net(format!(
+                                "gossip replica ({r},{k}) has {} layers, agent has {n_layers}",
+                                src.len()
+                            ))
+                        })?;
+                        out.0.axpy(w as f32, pw);
+                        out.1.axpy(w as f32, pb);
+                    }
+                    mixed.push(out);
+                }
+                next.insert((s, k), mixed);
+            }
+            cur = next;
+            for &(s, k) in &coords {
+                self.obs_span(Phase::Gossip, s, k, iter, round_open);
+            }
+        }
+        for i in 0..self.agents.len() {
+            let key = (self.agents[i].s, self.agents[i].k);
+            if let Some(p) = cur.remove(&key) {
+                self.agents[i].agent.params = p;
+            }
+        }
+        Ok(())
+    }
+
+    /// Answer a coordinator parameter pull: every local agent's current
+    /// (post-gossip) parameters. This is how the coordinator's mirror
+    /// stays honest without the data plane ever passing through it.
+    fn send_params(&mut self, links: &mut Links) -> Result<()> {
+        let agents: Vec<(u32, u32, Vec<(Tensor, Tensor)>)> = self
+            .agents
+            .iter()
+            .map(|a| (a.s as u32, a.k as u32, a.agent.params.clone()))
+            .collect();
+        links
+            .coord
+            .send(&Frame::ParamsState { worker_id: self.worker_id as u32, agents })?;
         Ok(())
     }
 
     /// Snapshot every local agent's exact transient state for the
     /// coordinator's full-resume checkpoint.
-    fn send_checkpoint(&mut self, t: &mut dyn Transport) -> Result<()> {
+    fn send_checkpoint(&mut self, links: &mut Links) -> Result<()> {
         let mut out = Vec::with_capacity(self.agents.len());
         for a in &self.agents {
             let (s, k) = (a.s, a.k);
@@ -566,7 +1116,7 @@ impl WorkerRuntime {
                 grad_in,
             });
         }
-        t.send(&Frame::CkptState { agents: out })?;
+        links.coord.send(&Frame::CkptState { agents: out })?;
         Ok(())
     }
 
@@ -574,13 +1124,13 @@ impl WorkerRuntime {
     /// sampler position for full resumes, refill semantics otherwise.
     fn apply_restore(
         &mut self,
-        t: &mut dyn Transport,
+        links: &mut Links,
         weights_only: bool,
         payload: Vec<AgentRestore>,
     ) -> Result<()> {
         self.pending_act.clear();
         self.pending_grad.clear();
-        self.pending_mixed.clear();
+        self.gossip_inbox.clear();
         for ar in payload {
             let (s, k) = (ar.s as usize, ar.k as usize);
             let idx = self
@@ -633,7 +1183,7 @@ impl WorkerRuntime {
                 self.pending_grad.insert((s, k, tau), g);
             }
         }
-        t.send(&Frame::RestoreDone { worker_id: self.worker_id as u32 })?;
+        links.coord.send(&Frame::RestoreDone { worker_id: self.worker_id as u32 })?;
         Ok(())
     }
 }

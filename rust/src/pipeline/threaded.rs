@@ -848,6 +848,7 @@ mod tests {
             eval_every: 0,
             compute_threads: 0,
             placement: None,
+            codec: crate::net::WireCodec::Raw,
         }
     }
 

@@ -610,6 +610,7 @@ mod tests {
             eval_every: 6,
             compute_threads: 0,
             placement: None,
+            codec: crate::net::WireCodec::Raw,
         }
     }
 

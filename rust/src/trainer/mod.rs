@@ -441,6 +441,7 @@ mod tests {
             eval_every: 20,
             compute_threads: 0,
             placement: None,
+            codec: crate::net::WireCodec::Raw,
         }
     }
 

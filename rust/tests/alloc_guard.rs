@@ -86,6 +86,7 @@ fn steady_state_sim_step_allocates_nothing() {
         // single worker: keeps every kernel on the counted thread
         compute_threads: 1,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     let ds = Arc::new(
         SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in(), cfg.model.classes(), 3).generate(),

@@ -32,6 +32,7 @@ fn base_cfg() -> ExperimentConfig {
         eval_every: 50,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     }
 }
 

@@ -41,6 +41,7 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         eval_every: 8,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     }
 }
 
@@ -173,51 +174,179 @@ fn sim_and_threaded_are_bit_identical_on_a_cnn_split() {
 #[test]
 fn dist_loopback_tcp_matches_sim_and_threaded_bitwise() {
     // the distributed engine joins the equivalence claim over the s,k grid
-    // in BOTH pipeline modes: coordinator + loopback-TCP workers compute
-    // the exact per-iteration observations and final parameters of the
-    // in-process engines
-    for mode in [
-        sgs::staleness::PipelineMode::FullyDecoupled,
-        sgs::staleness::PipelineMode::BackwardUnlocked,
-    ] {
-        for s in [1usize, 2] {
-            for k in [1usize, 2] {
-                let mut c = cfg(s, k, 10);
-                c.mode = mode;
-                let (sim_events, sim) = collect_events(default_session(&c, EngineKind::Sim));
-                let (thr_events, _) = collect_events(default_session(&c, EngineKind::Threaded));
-                let workers = (s * k).min(2);
-                let (dist, handles) = dist_tcp_session(&c, workers);
-                let (dist_events, dist) = collect_events(dist);
+    // in BOTH pipeline modes and under BOTH lossless wire codecs:
+    // coordinator + loopback-TCP workers exchanging act/grad/gossip
+    // frames peer-to-peer compute the exact per-iteration observations
+    // and final parameters of the in-process engines
+    for codec in [sgs::net::WireCodec::Raw, sgs::net::WireCodec::Delta] {
+        for mode in [
+            sgs::staleness::PipelineMode::FullyDecoupled,
+            sgs::staleness::PipelineMode::BackwardUnlocked,
+        ] {
+            for s in [1usize, 2] {
+                for k in [1usize, 2] {
+                    let mut c = cfg(s, k, 10);
+                    c.mode = mode;
+                    c.codec = codec;
+                    let (sim_events, sim) = collect_events(default_session(&c, EngineKind::Sim));
+                    let (thr_events, _) = collect_events(default_session(&c, EngineKind::Threaded));
+                    let workers = (s * k).min(2);
+                    let (dist, handles) = dist_tcp_session(&c, workers);
+                    let (dist_events, dist) = collect_events(dist);
 
-                assert_eq!(sim_events.len(), dist_events.len());
-                for ((a, b), d) in sim_events.iter().zip(&thr_events).zip(&dist_events) {
-                    assert_events_eq(a, b);
-                    assert_events_eq(a, d);
-                    // schema v3: only the dist engine reports wire volume
-                    assert!(a.net_tx.is_none() && b.net_tx.is_none());
-                    let tx = d.net_tx.as_ref().expect("dist events carry net_bytes_tx");
-                    let rx = d.net_rx.as_ref().expect("dist events carry net_bytes_rx");
-                    assert_eq!(tx.len(), k);
-                    assert_eq!(rx.len(), k);
-                    // gossip posts flow every iteration, so module 0 always
-                    // moves bytes upstream
-                    assert!(tx[0] > 0, "S={s} K={k} {mode:?}: no gossip traffic");
-                }
-                assert_params_eq(&sim.final_params(), &dist.final_params());
-                assert_eq!(
-                    sim.consensus_delta(),
-                    dist.consensus_delta(),
-                    "S={s} K={k} {mode:?}"
-                );
-                drop(dist); // shuts the workers down
-                for h in handles {
-                    h.join().unwrap().unwrap_or_else(|e| {
-                        panic!("worker exited uncleanly (S={s} K={k} {mode:?}): {e}")
-                    });
+                    assert_eq!(sim_events.len(), dist_events.len());
+                    for ((a, b), d) in sim_events.iter().zip(&thr_events).zip(&dist_events) {
+                        assert_events_eq(a, b);
+                        assert_events_eq(a, d);
+                        // schema v3: only the dist engine reports wire volume
+                        assert!(a.net_tx.is_none() && b.net_tx.is_none());
+                        let tx = d.net_tx.as_ref().expect("dist events carry net_bytes_tx");
+                        let rx = d.net_rx.as_ref().expect("dist events carry net_bytes_rx");
+                        assert_eq!(tx.len(), k);
+                        assert_eq!(rx.len(), k);
+                        // with the pipelines split across 2 workers, module
+                        // 0 always moves bytes (boundary acts when K > 1,
+                        // cross-host gossip when S > 1); a single-worker
+                        // 1×1 run has no remote peer, so nothing crosses
+                        if s * k > 1 {
+                            assert!(tx[0] > 0, "S={s} K={k} {mode:?} {codec}: no p2p traffic");
+                        } else {
+                            assert!(tx.iter().all(|&b| b == 0), "1x1 run sent wire bytes");
+                        }
+                    }
+                    assert_params_eq(&sim.final_params(), &dist.final_params());
+                    assert_eq!(
+                        sim.consensus_delta(),
+                        dist.consensus_delta(),
+                        "S={s} K={k} {mode:?} {codec}"
+                    );
+                    drop(dist); // shuts the workers down
+                    for h in handles {
+                        h.join().unwrap().unwrap_or_else(|e| {
+                            panic!("worker exited uncleanly (S={s} K={k} {mode:?} {codec}): {e}")
+                        });
+                    }
                 }
             }
         }
+    }
+}
+
+/// The delta codec moves fewer bytes than raw on the same run: parameter
+/// gossip re-sends nearly-identical tensors every round, exactly the
+/// redundancy the XOR+RLE path eliminates.
+#[test]
+fn delta_codec_moves_fewer_bytes_than_raw() {
+    let mut totals = Vec::new();
+    for codec in [sgs::net::WireCodec::Raw, sgs::net::WireCodec::Delta] {
+        let mut c = cfg(2, 1, 8);
+        c.codec = codec;
+        let (dist, handles) = dist_tcp_session(&c, 2);
+        let (events, dist) = collect_events(dist);
+        let total: u64 = events
+            .iter()
+            .filter_map(|ev| ev.net_tx.as_ref())
+            .flat_map(|tx| tx.iter().copied())
+            .sum();
+        assert!(total > 0, "{codec}: no wire traffic measured");
+        totals.push(total);
+        drop(dist);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+    assert!(
+        totals[1] < totals[0],
+        "delta ({}) should undercut raw ({})",
+        totals[1],
+        totals[0]
+    );
+}
+
+/// The f16 codec is lossy by contract: the run must stay close to the
+/// lossless trajectory (half precision holds ~3 decimal digits) without
+/// matching it bitwise.
+#[test]
+fn f16_codec_tracks_the_lossless_trajectory_within_tolerance() {
+    let mut c = cfg(2, 2, 8);
+    c.codec = sgs::net::WireCodec::F16;
+    let (sim_events, sim) = collect_events(default_session(&c, EngineKind::Sim));
+    let (dist, handles) = dist_tcp_session(&c, 2);
+    let (dist_events, dist) = collect_events(dist);
+    assert_eq!(sim_events.len(), dist_events.len());
+    for (a, d) in sim_events.iter().zip(&dist_events) {
+        match (a.train_loss, d.train_loss) {
+            (Some(la), Some(ld)) => {
+                assert!(ld.is_finite(), "t={}: non-finite loss under f16", a.t);
+                assert!(
+                    (la - ld).abs() <= la.abs() * 0.05 + 1e-3,
+                    "t={}: f16 loss {ld} drifted from lossless {la}",
+                    a.t
+                );
+            }
+            (la, ld) => assert_eq!(la.is_some(), ld.is_some(), "t={}", a.t),
+        }
+    }
+    let (ps, pd) = (sim.final_params(), dist.final_params());
+    for (ga, gb) in ps.iter().zip(&pd) {
+        for ((w1, b1), (w2, b2)) in ga.iter().zip(gb.iter()) {
+            let xs = w1.data().iter().chain(b1.data());
+            let ys = w2.data().iter().chain(b2.data());
+            for (x, y) in xs.zip(ys) {
+                assert!(
+                    (x - y).abs() <= x.abs() * 0.05 + 1e-2,
+                    "f16 weight {y} drifted from lossless {x}"
+                );
+            }
+        }
+    }
+    drop(dist);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+/// The decentralized contract itself: in steady state no tensor data-plane
+/// frame transits the coordinator, even with every pipeline and every
+/// gossip edge split across workers. [`sgs::net::DistEngine`] counts the
+/// bytes of any act/grad/gossip frame that reaches it — that counter must
+/// stay zero across stepping, mirror-refreshing cadences, and checkpoints.
+#[test]
+fn coordinator_sees_zero_data_plane_bytes() {
+    use sgs::session::Engine as _;
+    let mut c = cfg(2, 2, 10);
+    c.codec = sgs::net::WireCodec::Delta;
+    let n = c.s * c.k;
+    c.placement = Some(Placement {
+        workers: 2,
+        assign: (0..n).map(|i| i % 2).collect(),
+    });
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(NativeBackend::new(c.model.layers(), c.batch));
+    let ds = Arc::new(sgs::coordinator::build_dataset(&c));
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        handles.push(std::thread::spawn(move || sgs::net::worker::serve(listener)));
+        transports.push(Box::new(TcpTransport::connect(addr).unwrap()) as Box<dyn Transport>);
+    }
+    let mut engine =
+        sgs::net::DistEngine::connect(c.clone(), backend, ds, transports, Vec::new()).unwrap();
+    for _ in 0..c.iters {
+        engine.step().unwrap();
+    }
+    let ck = engine.checkpoint().unwrap();
+    assert!(ck.resume.is_some());
+    assert_eq!(
+        engine.data_plane_bytes(),
+        0,
+        "tensor frames leaked through the control plane"
+    );
+    drop(engine);
+    for h in handles {
+        h.join().unwrap().unwrap();
     }
 }
 

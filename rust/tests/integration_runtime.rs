@@ -174,6 +174,7 @@ fn xla_training_matches_native_training() {
         eval_every: 0,
         compute_threads: 0,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     };
     let ds = std::sync::Arc::new(sgs::coordinator::build_dataset(&cfg));
 

@@ -1,13 +1,17 @@
 //! Wire-protocol and teardown tests for the distributed runtime:
 //!
 //! * round-trip property tests for every frame type (including configs
-//!   carrying `Spatial` conv stacks and non-empty `CompensatorState`);
+//!   carrying `Spatial` conv stacks and non-empty `CompensatorState`),
+//!   under every [`WireCodec`]: `raw` and `delta` bit-exact, `f16` within
+//!   its documented tolerance;
 //! * malformed/truncated/wrong-version payloads surface typed
-//!   [`sgs::Error::Net`] — never panics;
+//!   [`sgs::Error::Net`] — never panics — under every codec;
 //! * graceful teardown: a worker whose coordinator connection drops exits
 //!   with `Error::Net` instead of hanging, and the coordinator surfaces a
 //!   killed worker as `Err` from `step` (mirroring the threaded engine's
 //!   poisoned-channel semantics).
+//!
+//! The `codec` module is socket-free so the Miri CI job can interpret it.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -15,8 +19,9 @@ use std::thread::JoinHandle;
 
 use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
 use sgs::graph::Topology;
-use sgs::net::wire::{self, AgentRestore, AgentSnap, WireStash};
-use sgs::net::{Frame, TcpTransport, Transport};
+use sgs::net::wire::{self, AgentRestore, AgentSnap, CodecState, WireStash};
+use sgs::net::{Frame, PeerSetup, TcpTransport, Transport, WireCodec};
+use sgs::obs::{Phase, Span};
 use sgs::session::{EngineKind, Session};
 use sgs::tensor::Tensor;
 use sgs::trainer::LrSchedule;
@@ -71,18 +76,22 @@ fn sample_frames() -> Vec<Frame> {
         dataset_n: 64,
         topology: Topology::Ring,
         lr: LrSchedule::Const(0.1),
+        codec: WireCodec::Delta,
         ..ExperimentConfig::default()
     };
     cfg.placement = Some(Placement::even(2, 2, 2).unwrap());
     vec![
-        Frame::Hello { version: 1 },
+        Frame::Hello { version: 2, codec: WireCodec::Delta.id() },
         Frame::Config {
             cfg_json: cfg.to_json().to_string_compact(),
             worker_id: 1,
             workers: 2,
             assign: vec![0, 0, 1, 1],
         },
-        Frame::Ready { worker_id: 1 },
+        Frame::Ready { worker_id: 1, peer_addr: "127.0.0.1:39001".into() },
+        Frame::Peers { addrs: vec!["127.0.0.1:39000".into(), "127.0.0.1:39001".into()] },
+        Frame::PeerHello { worker_id: 1, codec: WireCodec::Delta.id() },
+        Frame::PeerReady { worker_id: 1 },
         Frame::Step { t: 42, eta: 0.05 },
         Frame::Act {
             s: 1,
@@ -98,15 +107,30 @@ fn sample_frames() -> Vec<Frame> {
             k: 0,
             params: rand_pairs(&mut rng, &[([27, 3], 3), ([0, 0], 1)]),
         },
-        Frame::GossipMixed {
-            s: 1,
-            k: 0,
-            params: rand_pairs(&mut rng, &[([27, 3], 3)]),
-        },
         Frame::StepDone {
             worker_id: 0,
             losses: vec![(0, 1.25), (1, 0.75)],
             corrections: vec![(0, 0, 0.125), (1, 1, 0.0)],
+            net_tx: vec![4096, 0],
+            net_rx: vec![0, 65536],
+        },
+        Frame::Obs {
+            worker_id: 1,
+            spans: vec![Span {
+                track: 3,
+                phase: Phase::WireRx,
+                s: 1,
+                k: 0,
+                t: 41,
+                start_us: 12_345,
+                dur_us: 678,
+            }],
+            samples: vec![("steps_total".into(), 0, 1.0)],
+        },
+        Frame::ParamsReq,
+        Frame::ParamsState {
+            worker_id: 1,
+            agents: vec![(1, 0, rand_pairs(&mut rng, &[([27, 3], 3)]))],
         },
         Frame::CkptReq,
         Frame::CkptState {
@@ -144,19 +168,116 @@ mod codec {
         }
     }
 
+    /// The delta codec is stateful but lossless: a whole frame stream —
+    /// including repeated parameter frames, where the payload switches to
+    /// XOR mode — decodes bit-exactly on a receiver that has seen the
+    /// same stream.
     #[test]
-    fn truncated_frames_error_and_never_panic() {
-        for frame in sample_frames() {
-            let bytes = wire::encode(&frame);
-            // every prefix of every frame must fail cleanly with Error::Net
-            for cut in 0..bytes.len() {
-                match wire::decode(&bytes[..cut]) {
-                    Err(sgs::Error::Net(_)) => {}
-                    Err(other) => panic!("{} cut at {cut}: wrong error {other}", frame.name()),
-                    Ok(f) => panic!("{} cut at {cut}: decoded {}", frame.name(), f.name()),
+    fn delta_codec_is_bit_exact_across_a_frame_stream() {
+        let mut tx = CodecState::default();
+        let mut rx = CodecState::default();
+        // every frame type once, then the gossip frame twice more: the
+        // second repeat is a lightly-nudged copy of the first, so its XOR
+        // against the slot reference is nearly all zeros and the mode-2
+        // delta path actually compresses
+        let mut stream = sample_frames();
+        let mut rng = Pcg32::new(0xD317A);
+        let base = rand_pairs(&mut rng, &[([27, 3], 3), ([0, 0], 1)]);
+        let mut nudged = base.clone();
+        for v in nudged[0].0.data_mut().iter_mut().take(4) {
+            *v += 1.0e-4;
+        }
+        stream.push(Frame::GossipPost { s: 1, k: 0, params: base });
+        stream.push(Frame::GossipPost { s: 1, k: 0, params: nudged });
+        stream.push(Frame::ParamsState {
+            worker_id: 1,
+            agents: vec![(1, 0, rand_pairs(&mut rng, &[([27, 3], 3)]))],
+        });
+        let mut saw_delta_shrink = false;
+        for frame in stream {
+            let coded = wire::encode_with(&frame, WireCodec::Delta, &mut tx);
+            let raw = wire::encode(&frame);
+            if coded.len() < raw.len() {
+                saw_delta_shrink = true;
+            }
+            let back = wire::decode_with(&coded, WireCodec::Delta, &mut rx)
+                .unwrap_or_else(|e| panic!("{} failed to decode: {e}", frame.name()));
+            assert_eq!(back, frame, "{} delta round-trip", frame.name());
+        }
+        assert!(saw_delta_shrink, "no repeated parameter frame delta-compressed");
+    }
+
+    /// The f16 codec halves bulky stream tensors at a bounded relative
+    /// error (2⁻¹¹ across the normal range — the type-level guarantee),
+    /// and leaves every control field exact.
+    #[test]
+    fn f16_codec_stays_within_documented_tolerance() {
+        let mut rng = Pcg32::new(0xF16);
+        let x = rand_tensor(&mut rng, &[8, 64]);
+        let f = Frame::Act {
+            s: 1,
+            k_to: 1,
+            tau: 3,
+            x: x.clone(),
+            onehot: rand_tensor(&mut rng, &[8, 3]),
+        };
+        let mut tx = CodecState::default();
+        let coded = wire::encode_with(&f, WireCodec::F16, &mut tx);
+        let raw = wire::encode(&f).len();
+        assert!(coded.len() < raw * 3 / 4, "f16 {} vs raw {raw}", coded.len());
+        let Frame::Act { s, k_to, tau, x: back, .. } =
+            wire::decode_with(&coded, WireCodec::F16, &mut CodecState::default()).unwrap()
+        else {
+            panic!("wrong frame decoded");
+        };
+        assert_eq!((s, k_to, tau), (1, 1, 3), "control fields must stay exact");
+        for (a, b) in back.data().iter().zip(x.data()) {
+            assert!(
+                (a - b).abs() <= b.abs() / 2048.0 + 6.0e-8,
+                "f16 error out of tolerance: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_and_never_panic_under_every_codec() {
+        for codec in [WireCodec::Raw, WireCodec::F16, WireCodec::Delta] {
+            for frame in sample_frames() {
+                let bytes = wire::encode_with(&frame, codec, &mut CodecState::default());
+                // every prefix of every frame must fail cleanly: Error::Net
+                for cut in 0..bytes.len() {
+                    match wire::decode_with(&bytes[..cut], codec, &mut CodecState::default()) {
+                        Err(sgs::Error::Net(_)) => {}
+                        Err(other) => {
+                            panic!("{} cut at {cut}: wrong error {other}", frame.name())
+                        }
+                        Ok(f) => panic!("{} cut at {cut}: decoded {}", frame.name(), f.name()),
+                    }
                 }
             }
         }
+    }
+
+    /// A mode-2 (XOR) parameter payload is only decodable by the link
+    /// that saw the reference snapshot; a fresh receiver must get a typed
+    /// error, and a raw-codec slot must reject the mode byte outright.
+    #[test]
+    fn delta_payload_without_a_reference_is_a_typed_error() {
+        let mut rng = Pcg32::new(0x11FE);
+        let f = Frame::GossipPost {
+            s: 0,
+            k: 1,
+            params: rand_pairs(&mut rng, &[([6, 4], 4)]),
+        };
+        let mut tx = CodecState::default();
+        wire::encode_with(&f, WireCodec::Delta, &mut tx); // primes the slot
+        let second = wire::encode_with(&f, WireCodec::Delta, &mut tx); // XOR mode
+        let err = wire::decode_with(&second, WireCodec::Delta, &mut CodecState::default())
+            .unwrap_err();
+        assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("reference"), "{err}");
+        let err = wire::decode(&second).unwrap_err();
+        assert!(matches!(err, sgs::Error::Net(_)), "{err}");
     }
 
     #[test]
@@ -168,18 +289,41 @@ mod codec {
             assert!(matches!(err, sgs::Error::Net(_)), "{err}");
             assert!(err.to_string().contains("version"), "{err}");
         }
-        let err = wire::decode(&[sgs::net::WIRE_VERSION, 0x7F]).unwrap_err();
-        assert!(err.to_string().contains("unknown frame tag"), "{err}");
+        // 0x08 was GossipMixed in wire v1; v2 retired it with the
+        // decentralized data plane — it must now be an unknown tag
+        for tag in [0x08, 0x7F] {
+            let err = wire::decode(&[sgs::net::WIRE_VERSION, tag]).unwrap_err();
+            assert!(err.to_string().contains("unknown frame tag"), "{err}");
+        }
     }
 
     #[test]
     fn corrupt_counts_error_instead_of_allocating() {
-        // a GossipPost whose pair-count field claims 2^27 entries
+        // a GossipPost whose pair-count field claims 2^32-1 entries
         let mut bytes = wire::encode(&Frame::GossipPost { s: 0, k: 0, params: vec![] });
         let n = bytes.len();
         bytes[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = wire::decode(&bytes).unwrap_err();
         assert!(matches!(err, sgs::Error::Net(_)), "{err}");
+    }
+
+    #[test]
+    fn garbage_bytes_never_panic() {
+        // deterministic fuzz: random buffers through every codec decoder
+        let mut rng = Pcg32::new(0xBAD_BEEF);
+        for len in [0usize, 1, 2, 7, 33, 256] {
+            for _ in 0..64 {
+                let mut buf = vec![0u8; len];
+                for b in buf.iter_mut() {
+                    *b = (rng.next_u32() & 0xFF) as u8;
+                }
+                for codec in [WireCodec::Raw, WireCodec::F16, WireCodec::Delta] {
+                    // must return, never panic; Ok is fine if the bytes
+                    // happen to spell a valid frame
+                    let _ = wire::decode_with(&buf, codec, &mut CodecState::default());
+                }
+            }
+        }
     }
 }
 
@@ -243,6 +387,7 @@ fn tiny_cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         eval_every: 0,
         compute_threads: 1,
         placement: None,
+        codec: WireCodec::Raw,
     }
 }
 
@@ -263,6 +408,7 @@ fn worker_exits_with_net_error_when_coordinator_drops() {
 type KillableWorker = (Box<dyn Transport>, mpsc::Receiver<TcpStream>, JoinHandle<sgs::Result<()>>);
 
 /// A real TCP worker plus a clone of its connection the test can shoot.
+/// The worker runs the full peer-mesh bootstrap over loopback TCP.
 fn killable_worker() -> KillableWorker {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -272,7 +418,14 @@ fn killable_worker() -> KillableWorker {
             .accept()
             .map_err(|e| sgs::Error::Net(format!("accept: {e}")))?;
         htx.send(stream.try_clone().expect("clone stream")).ok();
-        sgs::net::worker::run_worker(Box::new(TcpTransport::new(stream)?))
+        let ip = stream
+            .local_addr()
+            .map_err(|e| sgs::Error::Net(format!("local_addr: {e}")))?
+            .ip();
+        sgs::net::worker::run_worker(
+            Box::new(TcpTransport::new(stream)?),
+            PeerSetup::Tcp { ip },
+        )
     });
     let t = TcpTransport::connect(addr).unwrap();
     (Box::new(t), hrx, handle)
@@ -295,7 +448,7 @@ fn killed_worker_surfaces_as_err_from_step_and_peers_exit() {
         session.step().unwrap();
     }
 
-    // shoot worker 1: close its connection out from under it
+    // shoot worker 1: close its coordinator connection out from under it
     let stream1 = h1.recv().unwrap();
     stream1.shutdown(std::net::Shutdown::Both).unwrap();
 

@@ -34,6 +34,7 @@ fn cfg() -> ExperimentConfig {
         eval_every: 6,
         compute_threads: 1,
         placement: None,
+        codec: sgs::net::WireCodec::Raw,
     }
 }
 

@@ -233,6 +233,7 @@ fn prop_config_roundtrip() {
                 eval_every: r.below(20),
                 compute_threads: 0,
                 placement: None,
+                codec: sgs::net::WireCodec::Raw,
             }
         },
         |cfg| {
