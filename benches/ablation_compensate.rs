@@ -8,10 +8,8 @@
 use sgs::compensate::CompensatorKind;
 use sgs::config::{ExperimentConfig, ModelShape};
 use sgs::coordinator::{run_sweep, SweepSpec};
-use sgs::graph::Topology;
 use sgs::session::EngineKind;
-use sgs::staleness::PipelineMode;
-use sgs::trainer::{LrSchedule, OptimizerKind};
+use sgs::trainer::LrSchedule;
 use sgs::util::csv::CsvWriter;
 
 fn main() {
@@ -27,23 +25,15 @@ fn main() {
         name: "ablation-compensate".into(),
         s: 1,
         k: 1,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape::tiny().into(),
         batch: 32,
         iters,
         lr: LrSchedule::Const(0.1),
-        optimizer: OptimizerKind::Sgd,
-        compensate: CompensatorKind::None,
-        mode: PipelineMode::FullyDecoupled,
         seed: 1717,
         dataset_n: 4000,
         delta_every: 0,
         eval_every: 100,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
 
     let spec = SweepSpec {

@@ -14,8 +14,7 @@ use sgs::config::{ExperimentConfig, ModelShape, Placement};
 use sgs::graph::Topology;
 use sgs::net::WireCodec;
 use sgs::session::{EngineKind, Session};
-use sgs::staleness::PipelineMode;
-use sgs::trainer::{LrSchedule, OptimizerKind};
+use sgs::trainer::LrSchedule;
 use sgs::util::csv::CsvWriter;
 
 const WORKERS: usize = 3;
@@ -27,16 +26,10 @@ fn base(iters: usize) -> ExperimentConfig {
         name: "comm-volume".into(),
         s,
         k,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 16, hidden: 16, blocks: 2, classes: 4 }.into(),
         batch: 16,
         iters,
         lr: LrSchedule::Const(0.1),
-        optimizer: OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: PipelineMode::FullyDecoupled,
         seed: 808,
         dataset_n: 512,
         delta_every: 0,
@@ -46,7 +39,7 @@ fn base(iters: usize) -> ExperimentConfig {
             workers: WORKERS,
             assign: (0..s * k).map(|i| i % WORKERS).collect(),
         }),
-        codec: WireCodec::Raw,
+        ..ExperimentConfig::default()
     }
 }
 

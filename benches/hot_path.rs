@@ -114,25 +114,16 @@ fn main() {
     // end-to-end distributed iteration (native, bench-scale model)
     let cfg = ExperimentConfig {
         name: "hotpath-e2e".into(),
-        s: 4,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 48,
         iters: 10_000, // bounded by bench samples below, not by this
         lr: LrSchedule::Const(0.1),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 3,
         dataset_n: 6000,
         delta_every: 0,
         eval_every: 0,
-        compute_threads: 0, // all cores: kernel row chunks + group fan-out
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        // compute_threads 0 = all cores: kernel row chunks + group fan-out
+        ..ExperimentConfig::default()
     };
     let (e_warm, e_samples) = if smoke { (0, 2) } else { (5, 30) };
     let ds = SyntheticSpec::small(cfg.dataset_n, 64, 10, 1).generate();

@@ -1,0 +1,160 @@
+//! PERF: serving throughput/latency — the dynamic batcher's core claim
+//! (one padded forward amortized over co-batched requests) measured two
+//! ways. CSV: bench_out/serve_qps.csv (ingested by xtask bench-summary).
+//!
+//! 1. `engine/forward_bN` — BatchEngine stage+forward with N staged rows.
+//!    The forward always runs the full padded max_batch, so the cost is
+//!    ~flat in N and rows/s scales with occupancy: the batching win.
+//! 2. `transport_e2e/clientsC` — a real loopback runtime (Transport
+//!    front, wire codec, queue, demux) under C concurrent synchronous
+//!    clients; QPS from wall clock, per-request latency from the
+//!    server's own `serve_latency_us` histogram.
+//!
+//! `--smoke` (CI): minimal counts — asserts the pipeline runs and the
+//! CSV is emitted, without pretending shared-runner timings mean much.
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use sgs::benchkit::BenchSet;
+use sgs::checkpoint::Checkpoint;
+use sgs::config::ServeConfig;
+use sgs::net::worker::{request_shutdown, shutdown_flag};
+use sgs::net::WireCodec;
+use sgs::nn::init::init_params;
+use sgs::nn::resmlp_layers;
+use sgs::obs::{MetricsRegistry, WallClock};
+use sgs::runtime::NativeBackend;
+use sgs::serve::{run_with_listeners, BatchEngine, ServeClient};
+use sgs::session::Predictor;
+use sgs::tensor::Tensor;
+use sgs::util::csv::CsvWriter;
+use sgs::util::rng::Pcg32;
+
+const MAX_BATCH: usize = 32;
+const D_IN: usize = 64;
+
+fn build_engine(threads: usize) -> BatchEngine {
+    let layers = resmlp_layers(D_IN, 48, 3, 10);
+    let mut rng = Pcg32::new(29);
+    let groups: Vec<_> = (0..4).map(|_| init_params(&mut rng, &layers)).collect();
+    let ck = Checkpoint::new(0, groups, layers.clone());
+    let backend = NativeBackend::with_threads(layers, MAX_BATCH, threads);
+    let predictor = Predictor::from_parts(Box::new(backend), ck).unwrap();
+    BatchEngine::new(predictor, MAX_BATCH).unwrap()
+}
+
+fn rand_rows(n: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg32::new(seed);
+    let mut x = Tensor::zeros(&[n, D_IN]);
+    rng.fill_normal(x.data_mut(), 1.0);
+    x
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, samples) = if smoke { (0, 2) } else { (5, 40) };
+    let mut set = BenchSet::new(if smoke { "serve qps (smoke)" } else { "serve qps" });
+
+    // csv rows: (bench, qps, mean_latency_us, samples)
+    let mut csv_rows: Vec<(String, f64, f64, usize)> = Vec::new();
+
+    // ---- 1. the batcher's compute core at increasing occupancy ----
+    let mut engine = build_engine(0);
+    for &rows in &[1usize, 8, MAX_BATCH] {
+        let x = rand_rows(rows, 100 + rows as u64);
+        let name = format!("engine/forward_b{rows}");
+        set.bench(name.clone(), warmup, samples, || {
+            engine.stage(0, &x).unwrap();
+            engine.forward(rows).unwrap();
+        });
+        let r = set.results.last().unwrap();
+        csv_rows.push((name, rows as f64 / r.mean_s(), r.mean_s() * 1e6, samples));
+    }
+
+    // ---- 2. loopback end-to-end over the Transport front ----
+    let (clients, per_client) = if smoke { (2usize, 5usize) } else { (4, 200) };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = ServeConfig::default()
+        .with_max_batch(MAX_BATCH)
+        .with_max_wait_ms(1);
+    let metrics = Arc::new(MetricsRegistry::new());
+    shutdown_flag().store(false, Ordering::SeqCst);
+    let server = {
+        let metrics = Arc::clone(&metrics);
+        let engine = build_engine(0);
+        std::thread::spawn(move || {
+            run_with_listeners(engine, &cfg, Some(listener), None, &metrics, None).unwrap()
+        })
+    };
+
+    let wall = WallClock::new();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(&addr, WireCodec::Raw).unwrap();
+                let x = rand_rows(1, 500 + c as u64);
+                for _ in 0..per_client {
+                    client.predict(&x).unwrap();
+                }
+                client.close();
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let elapsed = wall.elapsed_s();
+    request_shutdown();
+    let stats = server.join().unwrap();
+    shutdown_flag().store(false, Ordering::SeqCst);
+
+    let total = (clients * per_client) as u64;
+    assert_eq!(stats.requests, total, "server lost requests");
+    let qps = total as f64 / elapsed.max(1e-9);
+    let latency = metrics.histogram(
+        "serve_latency_us",
+        &[
+            100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0, 25_000.0, 50_000.0,
+            100_000.0, 250_000.0, 1_000_000.0,
+        ],
+    );
+    let name = format!("transport_e2e/clients{clients}");
+    println!(
+        "{name}: {total} requests in {elapsed:.3}s = {qps:.0} qps, mean latency {:.0}us, {} batches",
+        latency.mean(),
+        stats.batches
+    );
+    csv_rows.push((name, qps, latency.mean(), total as usize));
+
+    set.report();
+
+    std::fs::create_dir_all("bench_out").ok();
+    let mut w = CsvWriter::create(
+        "bench_out/serve_qps.csv",
+        &["bench", "qps", "mean_latency_us", "samples"],
+    )
+    .unwrap();
+    for (name, qps, lat_us, n) in &csv_rows {
+        w.row_str(&[
+            name.clone(),
+            format!("{qps:.3}"),
+            format!("{lat_us:.3}"),
+            format!("{n}"),
+        ])
+        .unwrap();
+    }
+    w.flush().unwrap();
+    if smoke {
+        assert!(
+            std::path::Path::new("bench_out/serve_qps.csv").exists(),
+            "smoke run must emit the CSV"
+        );
+        assert!(qps > 0.0, "no throughput measured");
+        println!("smoke OK: {} rows, CSV emitted", csv_rows.len());
+    }
+    println!("CSV: bench_out/serve_qps.csv");
+}

@@ -21,7 +21,6 @@ fn main() -> Result<(), sgs::Error> {
     use std::sync::Arc;
 
     use sgs::config::{ExperimentConfig, ModelShape};
-    use sgs::graph::Topology;
     use sgs::runtime::{ComputeBackend, XlaBackend};
     use sgs::session::Session;
     use sgs::trainer::LrSchedule;
@@ -43,11 +42,6 @@ fn main() -> Result<(), sgs::Error> {
     let layers = backend.layers();
     let cfg = ExperimentConfig {
         name: "e2e".into(),
-        s: 4,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape {
             d_in: layers[0].d_in,
             hidden: layers[0].d_out,
@@ -58,16 +52,9 @@ fn main() -> Result<(), sgs::Error> {
         batch: backend.batch(),
         iters,
         lr: LrSchedule::strategy_2(iters),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 2026,
-        dataset_n: 50_000,
-        delta_every: 10,
         eval_every: 25,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
     println!(
         "config: S={} K={} topology={} iters={} lr={}",

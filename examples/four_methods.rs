@@ -10,34 +10,21 @@ use std::sync::Arc;
 
 use sgs::config::{ExperimentConfig, ModelShape};
 use sgs::coordinator::build_dataset;
-use sgs::graph::Topology;
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::Session;
 use sgs::simclock::CostModel;
-use sgs::trainer::LrSchedule;
 
 fn main() -> Result<(), sgs::Error> {
     let base = ExperimentConfig {
         name: "four-methods".into(),
-        s: 4,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 32,
         iters: 800,
-        lr: LrSchedule::strategy_1(),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 7,
         dataset_n: 8000,
         delta_every: 20,
         eval_every: 200,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

@@ -6,9 +6,7 @@
 //!     cargo run --release --example quickstart [-- --threaded]
 
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::graph::Topology;
 use sgs::session::{EngineKind, Session};
-use sgs::trainer::LrSchedule;
 
 fn main() -> Result<(), sgs::Error> {
     let engine = if std::env::args().any(|a| a == "--threaded") {
@@ -18,25 +16,13 @@ fn main() -> Result<(), sgs::Error> {
     };
     let cfg = ExperimentConfig {
         name: "quickstart".into(),
-        s: 4,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 64, hidden: 48, blocks: 3, classes: 10 }.into(),
         batch: 32,
         iters: 500,
-        lr: LrSchedule::strategy_1(),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 42,
         dataset_n: 4000,
-        delta_every: 10,
         eval_every: 100,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
 
     println!(

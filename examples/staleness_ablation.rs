@@ -22,23 +22,16 @@ fn main() -> Result<(), sgs::Error> {
         s: 2,
         k: 1,
         topology: Topology::Complete,
-        alpha: None,
-        gossip_rounds: 1,
         // 6 layers so K in {1,2,3,6} partitions evenly
         model: ModelShape { d_in: 48, hidden: 32, blocks: 4, classes: 10 }.into(),
         batch: 24,
         iters: 600,
         lr: LrSchedule::Const(0.1),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 11,
         dataset_n: 8000,
         delta_every: 0,
         eval_every: 150,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

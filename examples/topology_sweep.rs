@@ -17,24 +17,15 @@ fn main() -> Result<(), sgs::Error> {
     let base = ExperimentConfig {
         name: "topology-sweep".into(),
         s,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 48, hidden: 32, blocks: 2, classes: 10 }.into(),
         batch: 24,
         iters: 400,
         lr: LrSchedule::Const(0.1),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 3,
         dataset_n: 12_000,
         delta_every: 5,
         eval_every: 0,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
     let ds = Arc::new(build_dataset(&base));
     let backend: Arc<dyn ComputeBackend> =

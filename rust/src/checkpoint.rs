@@ -1,9 +1,16 @@
-//! Training checkpoints: persist per-group parameters + run position.
+//! Checkpoints: persist per-group parameters + run position behind ONE
+//! typed entry point, [`Checkpoint::save`] / [`Checkpoint::load`].
 //!
-//! Format: a JSON sidecar (`<name>.json`: config echo, iteration, shapes)
-//! plus a raw little-endian f32 blob (`<name>.bin`: group-major, layer-
-//! major, W then b) — no serde/bincode offline, and the blob form keeps
-//! 100k-param checkpoints instant.
+//! Callers never touch the on-disk layout: `save(base)` writes both halves
+//! of a checkpoint — a JSON sidecar (`<base>.json`: version, iteration,
+//! layer shapes incl. conv spatial dims) and a raw little-endian f32 blob
+//! (`<base>.bin`: group-major, layer-major, W then b) — and `load(base)`
+//! reassembles them, returning [`crate::Error::Io`] on missing files and
+//! [`crate::Error::Config`] on version/size/shape mismatch. No
+//! serde/bincode, and the blob form keeps 100k-param checkpoints instant.
+//! Training (`sgs train --ckpt-out`), the distributed worker, and the
+//! forward-only serving path (`sgs serve --ckpt`, via
+//! [`crate::session::Predictor`]) all go through this one API.
 //!
 //! Semantics — two tiers:
 //!

@@ -8,6 +8,8 @@
 //! * `trace`     — print the Fig. 1 pipeline schedule
 //! * `trace-report` — analyze a `--trace-out` Chrome trace JSON
 //! * `calibrate` — measure the cost model and print the timing table
+//! * `serve`     — dynamically-batched inference over a checkpoint
+//! * `predict`   — query a running `serve` over the Transport front
 
 use std::io::BufRead as _;
 use std::path::{Path, PathBuf};
@@ -41,7 +43,8 @@ COMMANDS
              --workers N (dist engine: in-process workers)
              --codec raw|f16|delta (dist data-plane wire codec)
              --compute-threads N (0 = all cores; any N is bit-identical)
-             --out CSV --events-out JSONL --trace-out JSON --clock)
+             --out CSV --events-out JSONL --trace-out JSON --clock
+             --ckpt-out BASE: save final weights as BASE.json + BASE.bin)
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   worker     host agents for a coordinator (--listen HOST:PORT, port 0 = any;
              announces the bound address on stdout; exits on coordinator
@@ -58,6 +61,15 @@ COMMANDS
              stragglers — FILE comes from train/launch --trace-out)
   calibrate  cost model + timing table     (--backend --artifacts --model
              --compute-threads N)
+  serve      batched inference over a checkpoint (--ckpt BASE from
+             train --ckpt-out; --listen HOST:PORT wire-protocol front,
+             default 127.0.0.1:0; --http HOST:PORT HTTP/1.1 front
+             (POST /predict, GET /metrics, GET /healthz);
+             --max-batch N --max-wait-ms MS --codec raw|f16|delta
+             --compute-threads N --trace-out JSON; SIGTERM/ctrl-c stops)
+  predict    query a running serve         (--connect HOST:PORT;
+             --x F,F,... one row, or --json FILE with {\"x\": [[...]]};
+             --codec raw|f16|delta --repeat N)
   help       this text
 ";
 
@@ -159,6 +171,7 @@ fn stream_and_report(
     out_csv: Option<PathBuf>,
     events_out: Option<PathBuf>,
     trace_out: Option<PathBuf>,
+    ckpt_out: Option<PathBuf>,
 ) -> Result<()> {
     let mut events = match &events_out {
         Some(path) => Some(EventWriter::create(path)?),
@@ -177,6 +190,10 @@ fn stream_and_report(
     if let Some(path) = &trace_out {
         session.write_trace(path, wall.elapsed_s())?;
         println!("wrote trace {}", path.display());
+    }
+    if let Some(base) = &ckpt_out {
+        session.checkpoint()?.save(base)?;
+        println!("wrote checkpoint {}.json + {}.bin", base.display(), base.display());
     }
     let out = session.finish();
 
@@ -203,6 +220,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let out_csv = args.get("out").map(PathBuf::from);
     let events_out = args.get("events-out").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let ckpt_out = args.get("ckpt-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
     args.finish()?;
     apply_workers_flag(&mut cfg, engine, workers)?;
@@ -226,7 +244,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
     }
     let session = builder.build()?;
-    stream_and_report(session, out_csv, events_out, trace_out)
+    stream_and_report(session, out_csv, events_out, trace_out, ckpt_out)
 }
 
 /// `sgs worker --listen HOST:PORT`: host module agents for a remote
@@ -248,6 +266,7 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
     let out_csv = args.get("out").map(PathBuf::from);
     let events_out = args.get("events-out").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let ckpt_out = args.get("ckpt-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
     let hosts: Option<Vec<String>> = args.get("hosts").map(|h| {
         h.split(',')
@@ -346,7 +365,7 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
         }
         let session = builder.build()?;
-        stream_and_report(session, out_csv, events_out, trace_out)
+        stream_and_report(session, out_csv, events_out, trace_out, ckpt_out)
     });
 
     // the engine's teardown asked the workers to exit; reap them (kill
@@ -527,6 +546,118 @@ pub fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sgs serve --ckpt BASE [--listen HOST:PORT] [--http HOST:PORT]`: load a
+/// checkpoint written by `train --ckpt-out` and answer prediction requests
+/// with dynamic batching until SIGTERM/ctrl-c.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let ckpt = args.get("ckpt").map(PathBuf::from).ok_or_else(|| {
+        Error::Cli("serve needs --ckpt BASE (write one with train --ckpt-out)".into())
+    })?;
+    let listen = args.get("listen").map(String::from);
+    let http = args.get("http").map(String::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let defaults = crate::config::ServeConfig::default();
+    let mut cfg = crate::config::ServeConfig::default()
+        .with_max_batch(args.get_usize("max-batch", defaults.max_batch)?)
+        .with_max_wait_ms(args.get_u64("max-wait-ms", defaults.max_wait_ms)?)
+        .with_compute_threads(args.get_usize("compute-threads", defaults.compute_threads)?);
+    if let Some(codec) = args.get("codec") {
+        cfg = cfg.with_codec(crate::net::WireCodec::parse(codec)?);
+    }
+    args.finish()?;
+
+    // with no front requested, default to a Transport front on an
+    // ephemeral loopback port
+    let listen = match (&listen, &http) {
+        (None, None) => Some("127.0.0.1:0".to_string()),
+        _ => listen,
+    };
+    crate::net::worker::install_signal_handlers();
+    let metrics = Arc::new(crate::obs::MetricsRegistry::new());
+    let tracer = trace_out
+        .as_ref()
+        .map(|_| Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+    println!(
+        "serve: ckpt={} max_batch={} max_wait_ms={} codec={}",
+        ckpt.display(),
+        cfg.max_batch,
+        cfg.max_wait_ms,
+        cfg.codec.name()
+    );
+    let wall = WallClock::new();
+    let opts = crate::serve::ServeOptions { cfg, ckpt, listen, http };
+    let stats = crate::serve::run(&opts, &metrics, tracer.as_ref())?;
+    println!(
+        "serve: answered {} requests ({} rows) in {} batches",
+        stats.requests, stats.rows, stats.batches
+    );
+    if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
+        let meta = crate::obs::TraceMeta {
+            engine: "serve".into(),
+            s: 0,
+            k: 0,
+            iters: stats.batches as usize,
+            warmup_iters: 0,
+            iter_time_s: 0.0,
+            wall_time_s: wall.elapsed_s(),
+            workers: 0,
+            clock: "wall",
+        };
+        crate::obs::write_chrome_trace(path, tracer, Some(&metrics), &meta)?;
+        println!("wrote trace {}", path.display());
+    }
+    Ok(())
+}
+
+/// `sgs predict --connect HOST:PORT (--x F,F,... | --json FILE)`: send one
+/// request batch over the Transport front and print the JSON reply.
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .map(String::from)
+        .ok_or_else(|| Error::Cli("predict needs --connect HOST:PORT".into()))?;
+    let codec = match args.get("codec") {
+        Some(c) => crate::net::WireCodec::parse(c)?,
+        None => crate::net::WireCodec::Raw,
+    };
+    let repeat = args.get_usize("repeat", 1)?;
+    let x = match (args.get("x"), args.get("json")) {
+        (Some(csv), _) => {
+            let vals = csv
+                .split(',')
+                .map(|v| {
+                    v.trim().parse::<f32>().map_err(|_| {
+                        Error::Cli(format!("--x wants comma-separated floats, got {v:?}"))
+                    })
+                })
+                .collect::<Result<Vec<f32>>>()?;
+            let d = vals.len();
+            crate::tensor::Tensor::from_vec(&[1, d], vals)?
+        }
+        (None, Some(path)) => {
+            let doc = crate::util::json::Json::from_file(Path::new(path))?;
+            crate::serve::http::tensor_from_json(&doc)?
+        }
+        (None, None) => {
+            return Err(Error::Cli(
+                "predict needs --x F,F,... or --json FILE".into(),
+            ))
+        }
+    };
+    args.finish()?;
+
+    let mut client = crate::serve::ServeClient::connect(&addr, codec)?;
+    let mut last = None;
+    for _ in 0..repeat.max(1) {
+        last = Some(client.predict(&x)?);
+    }
+    client.close();
+    if let Some(rep) = last {
+        println!("{}", crate::serve::http::reply_to_json(&rep).to_string_compact());
+    }
+    Ok(())
+}
+
 pub fn dispatch(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
@@ -538,6 +669,8 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "trace" => cmd_trace(&args),
         "trace-report" => cmd_trace_report(&args),
         "calibrate" => cmd_calibrate(&args),
+        "serve" => cmd_serve(&args),
+        "predict" => cmd_predict(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -689,6 +822,50 @@ mod tests {
     fn trace_report_wants_a_file() {
         assert!(dispatch(&argv("trace-report")).is_err());
         assert!(dispatch(&argv("trace-report does_not_exist.json")).is_err());
+    }
+
+    #[test]
+    fn train_ckpt_out_then_predictor_loads_it() {
+        let dir = std::env::temp_dir().join("sgs_cli_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("final");
+        dispatch(&argv(&format!(
+            "train --model tiny --s 2 --k 2 --iters 6 --batch 8 --dataset-n 200 \
+             --lr const:0.1 --ckpt-out {}",
+            base.display()
+        )))
+        .unwrap();
+        assert!(base.with_extension("json").exists());
+        assert!(base.with_extension("bin").exists());
+        let mut p = crate::session::Predictor::from_checkpoint(&base, 4, 1).unwrap();
+        let x = crate::tensor::Tensor::zeros(&[2, p.d_in()]);
+        let mut logits = crate::tensor::Tensor::empty();
+        p.predict_into(&x, &mut logits).unwrap();
+        assert_eq!(logits.shape(), &[2, p.classes()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_and_predict_validate_their_flags() {
+        // all of these fail before any socket blocks
+        assert!(dispatch(&argv("serve")).is_err(), "--ckpt is required");
+        assert!(
+            dispatch(&argv("serve --ckpt nope --max-batch 0")).is_err(),
+            "config validation rejects max_batch 0"
+        );
+        assert!(
+            dispatch(&argv("serve --ckpt does_not_exist")).is_err(),
+            "missing checkpoint surfaces as an error"
+        );
+        assert!(dispatch(&argv("predict")).is_err(), "--connect is required");
+        assert!(
+            dispatch(&argv("predict --connect 127.0.0.1:9 --x a,b")).is_err(),
+            "--x wants floats"
+        );
+        assert!(
+            dispatch(&argv("predict --connect 127.0.0.1:9")).is_err(),
+            "an input is required"
+        );
     }
 
     #[test]

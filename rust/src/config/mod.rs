@@ -304,6 +304,72 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// `Default` with a different experiment name — the usual first call of
+    /// a builder chain (`ExperimentConfig::named("ablation").with_grid(2, 2)`).
+    pub fn named(name: &str) -> ExperimentConfig {
+        ExperimentConfig { name: name.into(), ..ExperimentConfig::default() }
+    }
+
+    /// Set the (S, K) grid: S data-groups × K model-groups.
+    pub fn with_grid(mut self, s: usize, k: usize) -> ExperimentConfig {
+        self.s = s;
+        self.k = k;
+        self
+    }
+
+    pub fn with_model(mut self, model: impl Into<ModelSpec>) -> ExperimentConfig {
+        self.model = model.into();
+        self
+    }
+
+    pub fn with_topology(mut self, topology: Topology) -> ExperimentConfig {
+        self.topology = topology;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> ExperimentConfig {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> ExperimentConfig {
+        self.iters = iters;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: LrSchedule) -> ExperimentConfig {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ExperimentConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_dataset_n(mut self, dataset_n: usize) -> ExperimentConfig {
+        self.dataset_n = dataset_n;
+        self
+    }
+
+    /// Instrumentation cadence: δ(t) every `delta_every`, probe-batch eval
+    /// every `eval_every` (0 disables either).
+    pub fn with_cadence(mut self, delta_every: usize, eval_every: usize) -> ExperimentConfig {
+        self.delta_every = delta_every;
+        self.eval_every = eval_every;
+        self
+    }
+
+    pub fn with_compute_threads(mut self, compute_threads: usize) -> ExperimentConfig {
+        self.compute_threads = compute_threads;
+        self
+    }
+
+    pub fn with_codec(mut self, codec: WireCodec) -> ExperimentConfig {
+        self.codec = codec;
+        self
+    }
+
     /// The paper's four Section-5 methods at a given iteration budget.
     /// Returns (label, config) in the paper's order.
     pub fn paper_methods(base: &ExperimentConfig) -> Vec<(&'static str, ExperimentConfig)> {
@@ -500,6 +566,108 @@ impl ExperimentConfig {
     }
 }
 
+/// Knobs for the forward-only serving runtime (`sgs serve`).
+///
+/// The dynamic batcher drains up to [`max_batch`](Self::max_batch) queued
+/// requests into one `module_fwd_into` pass, waiting at most
+/// [`max_wait_ms`](Self::max_wait_ms) for stragglers once the first request
+/// of a batch has arrived. Constructed with `..Default::default()` or the
+/// `with_*` builders, so new fields never ripple through call sites the way
+/// pre-defaulting `ExperimentConfig` literals did.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// largest batch a single forward pass may carry (also the fixed
+    /// workspace row count — partial batches are padded up to it so
+    /// activation shapes never change in steady state)
+    pub max_batch: usize,
+    /// how long the batcher lingers for more requests after the first one
+    /// of a batch arrives (0 = drain immediately)
+    pub max_wait_ms: u64,
+    /// compute workers for the forward kernels (0 = available parallelism;
+    /// bit-identical at any value, same contract as training)
+    pub compute_threads: usize,
+    /// wire codec advertised to `Transport` clients in the Hello handshake
+    pub codec: WireCodec,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 32, max_wait_ms: 2, compute_threads: 0, codec: WireCodec::Raw }
+    }
+}
+
+impl ServeConfig {
+    pub fn with_max_batch(mut self, max_batch: usize) -> ServeConfig {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_max_wait_ms(mut self, max_wait_ms: u64) -> ServeConfig {
+        self.max_wait_ms = max_wait_ms;
+        self
+    }
+
+    pub fn with_compute_threads(mut self, compute_threads: usize) -> ServeConfig {
+        self.compute_threads = compute_threads;
+        self
+    }
+
+    pub fn with_codec(mut self, codec: WireCodec) -> ServeConfig {
+        self.codec = codec;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Config("serve max_batch must be >= 1".into()));
+        }
+        if self.max_wait_ms > 60_000 {
+            return Err(Error::Config(format!(
+                "serve max_wait_ms {} is over the 60s sanity cap",
+                self.max_wait_ms
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("max_batch", self.max_batch)
+            .set("max_wait_ms", self.max_wait_ms as usize)
+            .set("compute_threads", self.compute_threads);
+        if self.codec != WireCodec::Raw {
+            j.set("codec", self.codec.name());
+        }
+        j
+    }
+
+    /// Parse a serve config document; every key is optional and falls back
+    /// to the [`Default`] value, so `{}` is a valid config.
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            max_batch: match j.opt("max_batch") {
+                Some(v) => v.as_usize()?,
+                None => d.max_batch,
+            },
+            max_wait_ms: match j.opt("max_wait_ms") {
+                Some(v) => v.as_usize()? as u64,
+                None => d.max_wait_ms,
+            },
+            compute_threads: match j.opt("compute_threads") {
+                Some(v) => v.as_usize()?,
+                None => d.compute_threads,
+            },
+            codec: match j.opt("codec") {
+                Some(c) => WireCodec::parse(c.as_str()?)?,
+                None => d.codec,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -507,6 +675,48 @@ mod tests {
     #[test]
     fn default_is_valid() {
         ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn builders_chain_over_default() {
+        let cfg = ExperimentConfig::named("bench")
+            .with_grid(2, 3)
+            .with_model(ModelShape::tiny())
+            .with_batch(8)
+            .with_iters(5)
+            .with_seed(7)
+            .with_dataset_n(256)
+            .with_cadence(0, 0)
+            .with_compute_threads(1)
+            .with_codec(WireCodec::F16);
+        assert_eq!(cfg.name, "bench");
+        assert_eq!((cfg.s, cfg.k), (2, 3));
+        assert_eq!(cfg.model, ModelSpec::ResMlp(ModelShape::tiny()));
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.codec, WireCodec::F16);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_default_valid_and_roundtrips() {
+        let cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        let tuned = ServeConfig::default()
+            .with_max_batch(64)
+            .with_max_wait_ms(5)
+            .with_compute_threads(2)
+            .with_codec(WireCodec::Delta);
+        let back = ServeConfig::from_json(&tuned.to_json()).unwrap();
+        assert_eq!(back, tuned);
+    }
+
+    #[test]
+    fn serve_config_empty_doc_is_default_and_bad_values_reject() {
+        assert_eq!(ServeConfig::from_json(&Json::obj()).unwrap(), ServeConfig::default());
+        assert!(ServeConfig::default().with_max_batch(0).validate().is_err());
+        assert!(ServeConfig::default().with_max_wait_ms(120_000).validate().is_err());
     }
 
     #[test]

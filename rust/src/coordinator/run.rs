@@ -73,22 +73,15 @@ mod tests {
             s: 2,
             k: 2,
             topology: Topology::Complete,
-            alpha: None,
-            gossip_rounds: 1,
             model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters: 30,
             lr: LrSchedule::Const(0.2),
-            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
-            compensate: crate::compensate::CompensatorKind::None,
-            mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 5,
             dataset_n: 200,
             delta_every: 5,
             eval_every: 10,
-            compute_threads: 0,
-            placement: None,
-            codec: crate::net::WireCodec::Raw,
+            ..ExperimentConfig::default()
         }
     }
 

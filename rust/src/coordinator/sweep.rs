@@ -121,32 +121,22 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
 mod tests {
     use super::*;
     use crate::config::ModelShape;
-    use crate::graph::Topology;
-    use crate::staleness::PipelineMode;
-    use crate::trainer::{LrSchedule, OptimizerKind};
+    use crate::trainer::LrSchedule;
 
     fn base() -> ExperimentConfig {
         ExperimentConfig {
             name: "sweep-test".into(),
             s: 1,
             k: 1,
-            topology: Topology::Ring,
-            alpha: None,
-            gossip_rounds: 1,
             model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters: 10,
             lr: LrSchedule::Const(0.2),
-            optimizer: OptimizerKind::Sgd,
-            compensate: CompensatorKind::None,
-            mode: PipelineMode::FullyDecoupled,
             seed: 5,
             dataset_n: 200,
             delta_every: 0,
             eval_every: 0,
-            compute_threads: 0,
-            placement: None,
-            codec: crate::net::WireCodec::Raw,
+            ..ExperimentConfig::default()
         }
     }
 

@@ -20,6 +20,7 @@
 //! either engine (sim or threaded) — or the `examples/` directory.
 
 pub mod benchkit;
+pub mod checkpoint;
 pub mod cli;
 pub mod compensate;
 pub mod config;
@@ -35,6 +36,7 @@ pub mod nn;
 pub mod obs;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod simclock;
 pub mod staleness;

@@ -54,7 +54,7 @@ use crate::runtime::ComputeBackend;
 use crate::session::{Engine, IterEvent};
 use crate::staleness::{partition_layers, Schedule};
 use crate::tensor::Tensor;
-use crate::trainer::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
+use crate::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
 use crate::util::rng::Pcg32;
 
 /// How long the coordinator waits for any worker frame before declaring

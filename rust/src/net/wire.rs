@@ -203,7 +203,7 @@ fn f16_bits_to_f32(h: u16) -> f32 {
 }
 
 /// Exact transient state of one module agent crossing the wire — the
-/// network form of [`crate::trainer::checkpoint::ModuleResume`] plus the
+/// network form of [`crate::checkpoint::ModuleResume`] plus the
 /// agent's grid coordinates and (for k = 0 agents) the sampler position.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AgentSnap {
@@ -369,6 +369,18 @@ pub enum Frame {
         worker_id: u32,
         agents: Vec<(u32, u32, Vec<(Tensor, Tensor)>)>,
     },
+    /// Client → server (`sgs serve`): one inference request. `x` is
+    /// `[n, d_in]` (usually n = 1); the request id is echoed on the
+    /// response so clients may pipeline. Rides the stream-tensor codec.
+    Predict { id: u64, x: Tensor },
+    /// Server → client: the answer to [`Frame::Predict`] with the same
+    /// `id` — per-row argmax class indices plus the full `[n, classes]`
+    /// softmax scores.
+    Prediction {
+        id: u64,
+        argmax: Vec<u32>,
+        scores: Tensor,
+    },
 }
 
 impl Frame {
@@ -395,6 +407,8 @@ impl Frame {
             Frame::PeerReady { .. } => "peer-ready",
             Frame::ParamsReq => "params-req",
             Frame::ParamsState { .. } => "params-state",
+            Frame::Predict { .. } => "predict",
+            Frame::Prediction { .. } => "prediction",
         }
     }
 }
@@ -798,6 +812,20 @@ pub fn encode_with(frame: &Frame, codec: WireCodec, state: &mut CodecState) -> V
                 put_u32(&mut buf, *k);
                 put_pairs_coded(&mut buf, params, codec, state, 0x15, *s, *k);
             }
+        }
+        Frame::Predict { id, x } => {
+            buf.push(0x16);
+            put_u64(&mut buf, *id);
+            put_stream_tensor(&mut buf, x, codec);
+        }
+        Frame::Prediction { id, argmax, scores } => {
+            buf.push(0x17);
+            put_u64(&mut buf, *id);
+            put_u32(&mut buf, argmax.len() as u32);
+            for &c in argmax {
+                put_u32(&mut buf, c);
+            }
+            put_stream_tensor(&mut buf, scores, codec);
         }
     }
     buf
@@ -1246,6 +1274,17 @@ pub fn decode_with(bytes: &[u8], codec: WireCodec, state: &mut CodecState) -> Re
             }
             Frame::ParamsState { worker_id, agents }
         }
+        0x16 => Frame::Predict { id: r.u64()?, x: r.tensor()? },
+        0x17 => {
+            let id = r.u64()?;
+            let n = r.count()?;
+            let mut argmax = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                argmax.push(r.u32()?);
+            }
+            let scores = r.tensor()?;
+            Frame::Prediction { id, argmax, scores }
+        }
         other => {
             return Err(Error::Net(format!("unknown frame tag 0x{other:02x}")));
         }
@@ -1525,6 +1564,62 @@ mod tests {
             assert!(matches!(err, Error::Net(_)), "cut={cut}: {err}");
         }
         assert_eq!(decode(&full).unwrap(), f);
+    }
+
+    #[test]
+    fn predict_frames_roundtrip() {
+        let req = Frame::Predict {
+            id: u64::MAX - 1,
+            x: Tensor::from_vec(&[2, 3], vec![0.5, -1.0, 2.0, 0.0, 3.5, -0.25]).unwrap(),
+        };
+        assert_eq!(decode(&encode(&req)).unwrap(), req);
+        let resp = Frame::Prediction {
+            id: u64::MAX - 1,
+            argmax: vec![2, 0],
+            scores: Tensor::from_vec(&[2, 3], vec![0.1, 0.2, 0.7, 0.6, 0.3, 0.1]).unwrap(),
+        };
+        assert_eq!(decode(&encode(&resp)).unwrap(), resp);
+        // empty-argmax responses are legal on the wire (servers never send
+        // them, but a decoder must not confuse the count with the tensor)
+        let empty = Frame::Prediction { id: 0, argmax: vec![], scores: Tensor::empty() };
+        assert_eq!(decode(&encode(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn predict_frames_reject_truncation_everywhere() {
+        for f in [
+            Frame::Predict {
+                id: 9,
+                x: Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            },
+            Frame::Prediction {
+                id: 9,
+                argmax: vec![3],
+                scores: Tensor::from_vec(&[1, 4], vec![0.1, 0.2, 0.3, 0.4]).unwrap(),
+            },
+        ] {
+            let full = encode(&f);
+            for cut in 0..full.len() {
+                let err = decode(&full[..cut]).unwrap_err();
+                assert!(matches!(err, Error::Net(_)), "cut={cut}: {err}");
+            }
+            assert_eq!(decode(&full).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn predict_request_respects_stream_codec() {
+        let x = ramp(&[4, 32], 0.01);
+        let f = Frame::Predict { id: 1, x: x.clone() };
+        let mut st = CodecState::default();
+        let coded = encode_with(&f, WireCodec::F16, &mut st);
+        assert!(coded.len() < encode(&f).len() * 3 / 4);
+        let Frame::Predict { x: back, .. } = decode(&coded).unwrap() else {
+            panic!("wrong frame decoded");
+        };
+        for (a, b) in back.data().iter().zip(x.data()) {
+            assert!((a - b).abs() <= b.abs() / 2048.0 + 1.0e-7, "{a} vs {b}");
+        }
     }
 
     #[test]

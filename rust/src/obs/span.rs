@@ -51,6 +51,8 @@ pub enum Phase {
     Eval = 10,
     /// one whole engine iteration (outer span on the coordinator track)
     Step = 11,
+    /// one batched forward pass of the serving runtime (`sgs serve`)
+    Serve = 12,
 }
 
 impl Phase {
@@ -69,6 +71,7 @@ impl Phase {
             Phase::GossipMix => "gossip_mix",
             Phase::Eval => "eval",
             Phase::Step => "step",
+            Phase::Serve => "serve",
         }
     }
 
@@ -89,13 +92,14 @@ impl Phase {
             9 => Phase::GossipMix,
             10 => Phase::Eval,
             11 => Phase::Step,
+            12 => Phase::Serve,
             _ => return Err(Error::Net(format!("unknown span phase byte {b}"))),
         })
     }
 
     /// Every phase, in wire order (reports iterate this for stable
     /// breakdown ordering).
-    pub fn all() -> [Phase; 12] {
+    pub fn all() -> [Phase; 13] {
         [
             Phase::Fwd,
             Phase::Bwd,
@@ -109,6 +113,7 @@ impl Phase {
             Phase::GossipMix,
             Phase::Eval,
             Phase::Step,
+            Phase::Serve,
         ]
     }
 }

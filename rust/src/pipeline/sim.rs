@@ -18,7 +18,7 @@ use crate::pipeline::module_agent::{ActMsg, ModuleAgent};
 use crate::runtime::ComputeBackend;
 use crate::staleness::{Mailbox, PipelineMode, Schedule};
 use crate::tensor::Tensor;
-use crate::trainer::checkpoint::{GroupResume, ModuleResume};
+use crate::checkpoint::{GroupResume, ModuleResume};
 
 /// Output of one iteration of one data-group (plain value — the
 /// per-module correction norms stay in the group, see

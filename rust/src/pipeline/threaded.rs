@@ -47,7 +47,7 @@ use crate::runtime::ComputeBackend;
 use crate::session::{Engine, IterEvent};
 use crate::staleness::{partition_layers, PipelineMode, Schedule};
 use crate::tensor::Tensor;
-use crate::trainer::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
+use crate::checkpoint::{Checkpoint, GroupResume, ModuleResume, ResumeState};
 use crate::util::rng::Pcg32;
 
 /// Per-agent state the engine keeps between iterations. Channel endpoints
@@ -823,7 +823,6 @@ mod tests {
     use super::*;
     use crate::config::ModelShape;
     use crate::data::synthetic::SyntheticSpec;
-    use crate::graph::Topology;
     use crate::runtime::NativeBackend;
     use crate::trainer::{LrSchedule, Trainer};
 
@@ -832,23 +831,15 @@ mod tests {
             name: "threaded-test".into(),
             s,
             k,
-            topology: Topology::Ring,
-            alpha: None,
-            gossip_rounds: 1,
             model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters,
             lr: LrSchedule::Const(0.2),
-            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
-            compensate: crate::compensate::CompensatorKind::None,
-            mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 11,
             dataset_n: 240,
             delta_every: 0,
             eval_every: 0,
-            compute_threads: 0,
-            placement: None,
-            codec: crate::net::WireCodec::Raw,
+            ..ExperimentConfig::default()
         }
     }
 

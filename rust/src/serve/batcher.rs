@@ -1,0 +1,333 @@
+//! The dynamic batcher's compute core: many queued requests, ONE padded
+//! forward pass.
+//!
+//! [`BatchEngine`] owns a [`Predictor`] plus every buffer the serve hot
+//! path touches — a `[max_batch, d_in]` staging input, the logits, the
+//! softmax scores, and the per-row argmax. The input is always forwarded
+//! at the FULL `max_batch` row count (partial batches ride with padding
+//! rows), so activation shapes never change and the steady state
+//! allocates nothing (`tests/alloc_guard.rs`). Padding is free to hold
+//! stale rows: every kernel in the stack is per-row with a fixed
+//! ascending-k accumulation order, so a request row's logits are bitwise
+//! identical whatever occupies the other rows — which is also what makes
+//! co-batching unrelated requests safe ([`crate::session::Predictor`]
+//! pins this with a test).
+
+use std::sync::mpsc::Sender;
+
+use crate::error::{Error, Result};
+use crate::session::Predictor;
+use crate::steady_state;
+use crate::tensor::Tensor;
+
+/// One queued inference request, as staged by a front (Transport or HTTP).
+pub struct ServeRequest {
+    /// request id, echoed on the reply
+    pub id: u64,
+    /// feature rows, `[n, d_in]` with 1 ≤ n ≤ max_batch
+    pub x: Tensor,
+    /// where the demuxed answer goes (the front blocks on the other end)
+    pub reply: Sender<Result<ServeReply>>,
+    /// enqueue timestamp in µs on the server's clock (latency histogram)
+    pub enqueued_us: u64,
+}
+
+/// The demuxed answer for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReply {
+    pub id: u64,
+    /// winning class per request row
+    pub argmax: Vec<u32>,
+    /// `[n, classes]` softmax scores
+    pub scores: Tensor,
+}
+
+/// The serve loop's compute state: predictor + preallocated workspaces.
+pub struct BatchEngine {
+    predictor: Predictor,
+    /// `[max_batch, d_in]` staging input (padding rows beyond the staged
+    /// count are forwarded but their outputs ignored)
+    input: Tensor,
+    /// `[max_batch, classes]` raw logits of the last forward
+    logits: Tensor,
+    /// `[max_batch, classes]` softmax of the last forward's logits
+    scores: Tensor,
+    /// winning class per row of the last forward
+    argmax: Vec<u32>,
+    max_batch: usize,
+    d_in: usize,
+    classes: usize,
+}
+
+impl BatchEngine {
+    /// Wrap a predictor and warm every workspace with one full-size
+    /// forward pass, so the first real request already runs allocation-free.
+    pub fn new(predictor: Predictor, max_batch: usize) -> Result<BatchEngine> {
+        if max_batch == 0 {
+            return Err(Error::Config("serve max_batch must be >= 1".into()));
+        }
+        let d_in = predictor.d_in();
+        let classes = predictor.classes();
+        if d_in == 0 || classes == 0 {
+            return Err(Error::Config("predictor has an empty layer stack".into()));
+        }
+        let mut engine = BatchEngine {
+            predictor,
+            input: Tensor::zeros(&[max_batch, d_in]),
+            logits: Tensor::empty(),
+            scores: Tensor::zeros(&[max_batch, classes]),
+            argmax: vec![0; max_batch],
+            max_batch,
+            d_in,
+            classes,
+        };
+        engine.forward(max_batch)?;
+        Ok(engine)
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+
+    /// Copy a request's rows into the staging input starting at row `off`.
+    /// Returns the number of rows staged.
+    pub fn stage(&mut self, off: usize, x: &Tensor) -> Result<usize> {
+        let shape = x.shape();
+        if shape.len() != 2 || shape[1] != self.d_in {
+            return Err(Error::Shape(format!(
+                "request rows must be [n, {}], got {shape:?}",
+                self.d_in
+            )));
+        }
+        let n = shape[0];
+        if n == 0 || off + n > self.max_batch {
+            return Err(Error::Shape(format!(
+                "request of {n} rows at offset {off} overflows max_batch {}",
+                self.max_batch
+            )));
+        }
+        let dst = self
+            .input
+            .data_mut()
+            .get_mut(off * self.d_in..(off + n) * self.d_in)
+            .ok_or_else(|| Error::Shape("staging input out of range".into()))?;
+        dst.copy_from_slice(x.data());
+        Ok(n)
+    }
+
+    /// Run the staged input through the model and fill `scores`/`argmax`
+    /// for rows `[0, n)`. The forward always covers the full padded
+    /// `max_batch` rows — constant shapes keep the workspaces fixed, and
+    /// per-row kernels make the padding invisible to the live rows.
+    /// Marked `#[steady_state]`: the lint keeps this body allocation-free.
+    #[steady_state]
+    pub fn forward(&mut self, n: usize) -> Result<()> {
+        if n == 0 || n > self.max_batch {
+            // static message: this body is #[steady_state], format! would
+            // allocate on the hot path
+            return Err(Error::Shape(
+                "forward row count outside [1, max_batch]".into(),
+            ));
+        }
+        self.predictor.predict_into(&self.input, &mut self.logits)?;
+        for row in 0..n {
+            let lo = row * self.classes;
+            let hi = lo + self.classes;
+            let logits = self
+                .logits
+                .data()
+                .get(lo..hi)
+                .ok_or_else(|| Error::Shape("logits shorter than staged rows".into()))?;
+            let scores = self
+                .scores
+                .data_mut()
+                .get_mut(lo..hi)
+                .ok_or_else(|| Error::Shape("score buffer shorter than staged rows".into()))?;
+            // stable softmax + argmax in one sweep, written in place
+            let mut best = 0usize;
+            let mut max = f32::NEG_INFINITY;
+            for (j, &v) in logits.iter().enumerate() {
+                if v > max {
+                    max = v;
+                    best = j;
+                }
+            }
+            let mut sum = 0.0f32;
+            for (dst, &v) in scores.iter_mut().zip(logits) {
+                let e = (v - max).exp();
+                *dst = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for dst in scores.iter_mut() {
+                *dst *= inv;
+            }
+            if let Some(slot) = self.argmax.get_mut(row) {
+                *slot = best as u32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Winning classes of the last [`BatchEngine::forward`], first `n` rows
+    /// valid.
+    pub fn argmax(&self) -> &[u32] {
+        &self.argmax
+    }
+
+    /// `[max_batch, classes]` softmax scores of the last forward, first
+    /// `n` rows valid.
+    pub fn scores(&self) -> &Tensor {
+        &self.scores
+    }
+
+    /// Raw logits of the last forward (tests compare these bitwise against
+    /// a direct `module_fwd_into` pass).
+    pub fn logits(&self) -> &Tensor {
+        &self.logits
+    }
+
+    /// Build the reply for a request occupying rows `[off, off + n)` of
+    /// the last forward. Allocates the reply payload — demux runs outside
+    /// the steady-state region.
+    pub fn demux(&self, id: u64, off: usize, n: usize) -> Result<ServeReply> {
+        if n == 0 || off + n > self.max_batch {
+            return Err(Error::Shape(format!(
+                "demux of {n} rows at offset {off} overflows max_batch {}",
+                self.max_batch
+            )));
+        }
+        let argmax = self
+            .argmax
+            .get(off..off + n)
+            .ok_or_else(|| Error::Shape("argmax shorter than staged rows".into()))?
+            .to_vec();
+        let flat = self
+            .scores
+            .data()
+            .get(off * self.classes..(off + n) * self.classes)
+            .ok_or_else(|| Error::Shape("scores shorter than staged rows".into()))?
+            .to_vec();
+        Ok(ServeReply {
+            id,
+            argmax,
+            scores: Tensor::from_vec(&[n, self.classes], flat)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Pcg32;
+
+    fn engine(max_batch: usize) -> BatchEngine {
+        let layers = resmlp_layers(6, 5, 1, 3);
+        let mut rng = Pcg32::new(21);
+        let groups: Vec<_> = (0..2).map(|_| init_params(&mut rng, &layers)).collect();
+        let ck = Checkpoint::new(0, groups, layers.clone());
+        let backend = NativeBackend::with_threads(layers, max_batch, 1);
+        let predictor = Predictor::from_parts(Box::new(backend), ck).unwrap();
+        BatchEngine::new(predictor, max_batch).unwrap()
+    }
+
+    fn rand_rows(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut x = Tensor::zeros(&[n, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        x
+    }
+
+    #[test]
+    fn scores_are_softmax_of_logits_and_argmax_wins() {
+        let mut e = engine(4);
+        let x = rand_rows(3, 1);
+        e.stage(0, &x).unwrap();
+        e.forward(3).unwrap();
+        for row in 0..3 {
+            let s = &e.scores().data()[row * 3..(row + 1) * 3];
+            let sum: f32 = s.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {row} sums to {sum}");
+            assert!(s.iter().all(|&v| v > 0.0));
+            let l = &e.logits().data()[row * 3..(row + 1) * 3];
+            let best = (0..3).max_by(|&a, &b| l[a].total_cmp(&l[b])).unwrap();
+            assert_eq!(e.argmax()[row], best as u32);
+        }
+    }
+
+    #[test]
+    fn co_batched_rows_match_solo_rows_bitwise() {
+        let mut e = engine(4);
+        let a = rand_rows(2, 2);
+        let b = rand_rows(1, 3);
+
+        // batch a (2 rows) and b (1 row) together, padding row 4
+        e.stage(0, &a).unwrap();
+        e.stage(2, &b).unwrap();
+        e.forward(3).unwrap();
+        let together = e.demux(7, 0, 3).unwrap();
+
+        // now run b alone: identical scores bitwise
+        e.stage(0, &b).unwrap();
+        e.forward(1).unwrap();
+        let solo = e.demux(8, 0, 1).unwrap();
+        assert_eq!(solo.scores.data(), &together.scores.data()[2 * 3..3 * 3]);
+        assert_eq!(solo.argmax[0], together.argmax[2]);
+    }
+
+    #[test]
+    fn batcher_is_deterministic_across_interleavings() {
+        // the same 4 single-row requests, grouped every possible way, must
+        // produce identical per-request replies
+        let rows: Vec<Tensor> = (0..4).map(|i| rand_rows(1, 40 + i)).collect();
+        let mut reference: Vec<ServeReply> = Vec::new();
+        let mut e = engine(4);
+        for (i, r) in rows.iter().enumerate() {
+            e.stage(0, r).unwrap();
+            e.forward(1).unwrap();
+            reference.push(e.demux(i as u64, 0, 1).unwrap());
+        }
+        // every split point of the 4 requests into two consecutive batches
+        for split in 1..4 {
+            let mut e = engine(4);
+            for (batch_lo, batch_hi) in [(0usize, split), (split, 4usize)] {
+                for (off, r) in rows[batch_lo..batch_hi].iter().enumerate() {
+                    e.stage(off, r).unwrap();
+                }
+                e.forward(batch_hi - batch_lo).unwrap();
+                for i in batch_lo..batch_hi {
+                    let got = e.demux(i as u64, i - batch_lo, 1).unwrap();
+                    assert_eq!(got.scores, reference[i].scores, "split {split} req {i}");
+                    assert_eq!(got.argmax, reference[i].argmax, "split {split} req {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stage_and_forward_reject_overflow() {
+        let mut e = engine(2);
+        let x = rand_rows(2, 5);
+        assert!(e.stage(1, &x).is_err(), "2 rows at offset 1 overflow max_batch 2");
+        assert!(e.stage(0, &Tensor::zeros(&[1, 9])).is_err(), "wrong d_in");
+        assert!(e.forward(0).is_err());
+        assert!(e.forward(3).is_err());
+        assert!(e.demux(0, 1, 2).is_err());
+    }
+}

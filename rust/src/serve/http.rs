@@ -1,0 +1,413 @@
+//! Minimal HTTP/1.1 front for `sgs serve` — `std::net` only, no deps.
+//!
+//! Routes:
+//!
+//! * `POST /predict` — body `{"x": [[...]]}` (or a flat `{"x": [...]}`
+//!   for a single row); replies
+//!   `{"id": N, "argmax": [...], "scores": [[...]]}`. Ids are a
+//!   per-connection sequence assigned by the server.
+//! * `GET /metrics` — the serve process's
+//!   [`MetricsRegistry`] snapshot as JSON (request
+//!   latency histogram, batch occupancy, `serve_qps`, ...).
+//! * `GET /healthz` — `{"ok": true}` liveness probe.
+//!
+//! Parsing is deliberately small: request line + headers, with only
+//! `Content-Length` and `Connection` interpreted. Connections are
+//! keep-alive by default (`Connection: close` honored); bodies are
+//! capped at [`MAX_BODY`] bytes. Handler threads block on the socket
+//! without a timeout, so an idle keep-alive connection lives until the
+//! client closes it — the accept loop (not the handlers) is what watches
+//! the shutdown flag.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::net::worker::shutdown_flag;
+use crate::obs::{MetricsRegistry, WallClock};
+use crate::serve::{enqueue_and_wait, ServeReply, ServeRequest};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Largest accepted request body (4 MiB — thousands of float rows).
+pub const MAX_BODY: usize = 4 << 20;
+
+/// One parsed request, enough for routing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    /// upper-cased method (`GET`, `POST`, ...)
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// false iff the client sent `Connection: close`
+    pub keep_alive: bool,
+}
+
+/// Read one request off the wire. `Ok(None)` is a clean EOF (client done
+/// with the connection); errors are malformed requests or I/O failures.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    let n = r
+        .read_line(&mut line)
+        .map_err(|e| Error::Net(format!("http read: {e}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let first = line.trim_end();
+    let mut parts = first.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(Error::Net(format!("malformed http request line {first:?}")));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true;
+    loop {
+        let mut header = String::new();
+        let n = r
+            .read_line(&mut header)
+            .map_err(|e| Error::Net(format!("http read: {e}")))?;
+        if n == 0 {
+            return Err(Error::Net("http connection closed mid-headers".into()));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .parse()
+                    .map_err(|_| Error::Net(format!("bad content-length {value:?}")))?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                keep_alive = !value.eq_ignore_ascii_case("close");
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(Error::Net(format!(
+            "request body of {content_length} bytes exceeds the {MAX_BODY} byte cap"
+        )));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        r.read_exact(&mut body)
+            .map_err(|e| Error::Net(format!("http body read: {e}")))?;
+    }
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        body,
+        keep_alive,
+    }))
+}
+
+/// Serialize one response (JSON content type throughout).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    body: &str,
+    keep_alive: bool,
+) -> Result<()> {
+    let connection = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes())
+        .map_err(|e| Error::Net(format!("http write: {e}")))?;
+    w.write_all(body.as_bytes())
+        .map_err(|e| Error::Net(format!("http write: {e}")))?;
+    w.flush().map_err(|e| Error::Net(format!("http flush: {e}")))
+}
+
+/// Decode a predict body: `{"x": [[f, ...], ...]}` rows, or a flat
+/// `{"x": [f, ...]}` treated as one row.
+pub fn tensor_from_json(doc: &Json) -> Result<Tensor> {
+    let x = doc
+        .opt("x")
+        .ok_or_else(|| Error::Json("predict body needs an \"x\" array".into()))?;
+    let arr = x
+        .as_arr()
+        .map_err(|_| Error::Json("\"x\" must be an array".into()))?;
+    if arr.is_empty() {
+        return Err(Error::Json("\"x\" must not be empty".into()));
+    }
+    let scalar = |v: &Json| -> Result<f32> {
+        v.as_f64()
+            .map(|f| f as f32)
+            .map_err(|_| Error::Json("\"x\" entries must be numbers".into()))
+    };
+    let mut flat = Vec::new();
+    let (rows, cols) = if arr.first().is_some_and(|v| v.as_arr().is_ok()) {
+        let mut cols = 0usize;
+        for row in arr {
+            let row = row
+                .as_arr()
+                .map_err(|_| Error::Json("\"x\" rows must all be arrays".into()))?;
+            if cols == 0 {
+                cols = row.len();
+            } else if row.len() != cols {
+                return Err(Error::Json(format!(
+                    "ragged \"x\": row of {} values after rows of {cols}",
+                    row.len()
+                )));
+            }
+            for v in row {
+                flat.push(scalar(v)?);
+            }
+        }
+        (arr.len(), cols)
+    } else {
+        for v in arr {
+            flat.push(scalar(v)?);
+        }
+        (1, arr.len())
+    };
+    if cols == 0 {
+        return Err(Error::Json("\"x\" rows must not be empty".into()));
+    }
+    Tensor::from_vec(&[rows, cols], flat)
+}
+
+/// Encode a reply as the `POST /predict` response body.
+pub fn reply_to_json(rep: &ServeReply) -> Json {
+    let shape = rep.scores.shape();
+    let cols = shape.get(1).copied().unwrap_or(rep.scores.len());
+    let rows: Vec<Json> = rep
+        .scores
+        .data()
+        .chunks(cols.max(1))
+        .map(|row| Json::from(row.iter().map(|&v| v as f64).collect::<Vec<f64>>()))
+        .collect();
+    let mut j = Json::obj();
+    j.set("id", rep.id)
+        .set(
+            "argmax",
+            Json::from(rep.argmax.iter().map(|&c| c as u64).collect::<Vec<u64>>()),
+        )
+        .set("scores", Json::Arr(rows));
+    j
+}
+
+/// Accept HTTP connections until shutdown; each gets a detached handler
+/// thread.
+pub(crate) fn accept_http(
+    listener: TcpListener,
+    tx: Sender<ServeRequest>,
+    clock: Arc<WallClock>,
+    metrics: Arc<MetricsRegistry>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let flag = shutdown_flag();
+    while !flag.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let conn_tx = tx.clone();
+                let conn_clock = Arc::clone(&clock);
+                let conn_metrics = Arc::clone(&metrics);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-http".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &conn_tx, &conn_clock, &conn_metrics);
+                    });
+                if spawned.is_err() {
+                    continue;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(super::IDLE_POLL);
+            }
+            Err(_) => std::thread::sleep(super::IDLE_POLL),
+        }
+    }
+}
+
+/// One keep-alive connection: read requests until EOF or
+/// `Connection: close`.
+fn handle_conn(
+    stream: TcpStream,
+    tx: &Sender<ServeRequest>,
+    clock: &WallClock,
+    metrics: &MetricsRegistry,
+) -> Result<()> {
+    let read_half = stream
+        .try_clone()
+        .map_err(|e| Error::Net(format!("http clone stream: {e}")))?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut next_id = 0u64;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let body = error_body(&e);
+                write_response(&mut writer, 400, "Bad Request", &body, false)?;
+                return Ok(());
+            }
+        };
+        let keep_alive = req.keep_alive;
+        let (status, reason, body) = route(&req, tx, clock, metrics, &mut next_id);
+        write_response(&mut writer, status, reason, &body, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn error_body(e: &Error) -> String {
+    let mut j = Json::obj();
+    j.set("error", format!("{e}"));
+    j.to_string_compact()
+}
+
+/// Dispatch one request to its handler.
+fn route(
+    req: &HttpRequest,
+    tx: &Sender<ServeRequest>,
+    clock: &WallClock,
+    metrics: &MetricsRegistry,
+    next_id: &mut u64,
+) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => match predict(req, tx, clock, next_id) {
+            Ok(body) => (200, "OK", body),
+            Err(e) => (400, "Bad Request", error_body(&e)),
+        },
+        ("GET", "/metrics") => (200, "OK", metrics.to_json().to_string_compact()),
+        ("GET", "/healthz") => (200, "OK", "{\"ok\":true}".into()),
+        _ => {
+            let e = Error::Net(format!("no route for {} {}", req.method, req.path));
+            (404, "Not Found", error_body(&e))
+        }
+    }
+}
+
+fn predict(
+    req: &HttpRequest,
+    tx: &Sender<ServeRequest>,
+    clock: &WallClock,
+    next_id: &mut u64,
+) -> Result<String> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| Error::Json("predict body is not UTF-8".into()))?;
+    let doc = Json::parse(text)?;
+    let x = tensor_from_json(&doc)?;
+    let id = *next_id;
+    *next_id = next_id.wrapping_add(1);
+    let rep = enqueue_and_wait(tx, clock, id, x)?;
+    Ok(reply_to_json(&rep).to_string_compact())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(text: &str) -> Result<Option<HttpRequest>> {
+        read_request(&mut Cursor::new(text.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body_and_connection_close() {
+        let r = req(
+            "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\nConnection: close\r\n\r\n{\"x\":[1,2]}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/predict");
+        assert_eq!(r.body, b"{\"x\":[1,2]}");
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn get_defaults_to_keep_alive_with_empty_body() {
+        let r = req("GET /healthz HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn eof_is_none_and_garbage_is_an_error() {
+        assert!(req("").unwrap().is_none());
+        assert!(req("nonsense\r\n\r\n").is_err());
+        assert!(req("GET /x HTTP/1.1\r\nContent-Length: zork\r\n\r\n").is_err());
+        let truncated = "POST /p HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort";
+        assert!(req(truncated).is_err());
+        let huge = format!("POST /p HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(req(&huge).is_err());
+    }
+
+    #[test]
+    fn two_pipelined_requests_parse_in_order() {
+        let text = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut c = Cursor::new(text.as_bytes().to_vec());
+        let a = read_request(&mut c).unwrap().unwrap();
+        let b = read_request(&mut c).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.keep_alive), ("/a", true));
+        assert_eq!((b.path.as_str(), b.keep_alive), ("/b", false));
+        assert!(read_request(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn response_writer_emits_status_and_length() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "OK", "{\"ok\":true}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn tensor_from_json_accepts_rows_and_flat() {
+        let doc = Json::parse("{\"x\": [[1, 2, 3], [4, 5, 6]]}").unwrap();
+        let t = tensor_from_json(&doc).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+
+        let doc = Json::parse("{\"x\": [1.5, -2.0]}").unwrap();
+        let t = tensor_from_json(&doc).unwrap();
+        assert_eq!(t.shape(), &[1, 2]);
+
+        assert!(tensor_from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(tensor_from_json(&Json::parse("{\"x\": []}").unwrap()).is_err());
+        assert!(tensor_from_json(&Json::parse("{\"x\": [[1],[2,3]]}").unwrap()).is_err());
+        assert!(tensor_from_json(&Json::parse("{\"x\": [[]]}").unwrap()).is_err());
+        assert!(tensor_from_json(&Json::parse("{\"x\": [\"a\"]}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn reply_round_trips_to_json() {
+        let rep = ServeReply {
+            id: 9,
+            argmax: vec![2, 0],
+            scores: Tensor::from_vec(&[2, 3], vec![0.1, 0.2, 0.7, 0.8, 0.1, 0.1]).unwrap(),
+        };
+        let j = reply_to_json(&rep);
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 9);
+        let argmax = j.get("argmax").unwrap().as_arr().unwrap();
+        assert_eq!(argmax.len(), 2);
+        assert_eq!(argmax[0].as_usize().unwrap(), 2);
+        let scores = j.get("scores").unwrap().as_arr().unwrap();
+        assert_eq!(scores.len(), 2);
+        assert_eq!(scores[1].as_arr().unwrap().len(), 3);
+        let trip = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(trip.get("id").unwrap().as_usize().unwrap(), 9);
+    }
+}

@@ -1,0 +1,529 @@
+//! `sgs serve`: dynamically-batched forward-only inference over the
+//! workspace kernels.
+//!
+//! # Architecture
+//!
+//! ```text
+//!   Transport front (Frame::Predict)  ─┐
+//!                                      ├─> mpsc queue ─> engine loop ─> replies
+//!   HTTP front (POST /predict)        ─┘                 (one thread,
+//!                                                         one BatchEngine)
+//! ```
+//!
+//! Both fronts translate their wire format into a [`ServeRequest`] and
+//! block on a per-request reply channel. A single engine thread drains
+//! the queue into one padded forward pass: it stages rows until either
+//! [`ServeConfig::max_batch`] rows are waiting or
+//! [`ServeConfig::max_wait_ms`] has passed since the batch opened, runs
+//! [`BatchEngine::forward`] ONCE over the full workspace, then demuxes
+//! per-request argmax + softmax scores. Because every kernel is per-row
+//! with a fixed accumulation order, co-batching never changes any
+//! request's bits — `tests/serve_e2e.rs` pins replies against a direct
+//! [`crate::runtime::ComputeBackend::module_fwd_into`] pass.
+//!
+//! # Protocol (Transport front)
+//!
+//! The same handshake discipline as the dist runtime: the client opens
+//! with [`Frame::Hello`] carrying [`WIRE_VERSION`] and its codec id; the
+//! server echoes the hello iff the version matches and the codec equals
+//! [`ServeConfig::codec`] (otherwise [`Frame::Abort`] names what it
+//! expected), and both sides switch codecs. After that the connection is
+//! a synchronous request/reply loop of [`Frame::Predict`] /
+//! [`Frame::Prediction`]; concurrency comes from opening more
+//! connections, not from pipelining. [`Frame::Shutdown`] closes the
+//! connection; a per-request failure is reported as [`Frame::Abort`] and
+//! also closes it. [`ServeClient`] wraps the client side of all of this.
+//!
+//! # Shutdown
+//!
+//! The runtime shares the worker CLI's process-wide shutdown flag
+//! (`crate::net::worker`): SIGTERM/SIGINT (via
+//! `install_signal_handlers`) or `request_shutdown()` stops the accept
+//! loops and the engine loop, and [`run`] returns with the final
+//! [`ServeStats`].
+
+pub mod batcher;
+pub mod http;
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::net::wire::{Frame, WireCodec, WIRE_VERSION};
+use crate::net::worker::shutdown_flag;
+use crate::net::{TcpTransport, Transport};
+use crate::obs::{Deadline, MetricsRegistry, Phase, Span, Tracer, WallClock, NO_COORD};
+use crate::session::Predictor;
+use crate::tensor::Tensor;
+
+pub use batcher::{BatchEngine, ServeReply, ServeRequest};
+
+/// Poll granularity of the engine loop's idle wait and the accept loops.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+/// Spin-sleep while topping up an open batch.
+const TOPUP_POLL: Duration = Duration::from_micros(100);
+/// Client-side reply deadlines.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Everything `sgs serve` needs to start: where the weights are, where
+/// to listen, and the batching knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub cfg: ServeConfig,
+    /// checkpoint base path (`<base>.json` + `<base>.bin`, from
+    /// `sgs train --ckpt-out`)
+    pub ckpt: PathBuf,
+    /// Transport front address (`host:port`, port 0 for ephemeral);
+    /// `None` disables the front
+    pub listen: Option<String>,
+    /// HTTP front address; `None` disables the front
+    pub http: Option<String>,
+}
+
+/// What the runtime did between start and shutdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// requests answered successfully
+    pub requests: u64,
+    /// batched forward passes executed
+    pub batches: u64,
+    /// total rows forwarded on behalf of requests (excludes padding)
+    pub rows: u64,
+}
+
+/// One staged request's slice of the current batch.
+struct PendingSlot {
+    id: u64,
+    off: usize,
+    n: usize,
+    reply: Sender<Result<ServeReply>>,
+    enqueued_us: u64,
+}
+
+/// Load the checkpoint, bind the configured fronts, and serve until the
+/// process-wide shutdown flag is raised. Announces each bound address on
+/// stdout (`sgs serve listening on ADDR` / `sgs serve http on ADDR`) so
+/// launchers and CI can parse the ephemeral ports.
+pub fn run(
+    opts: &ServeOptions,
+    metrics: &Arc<MetricsRegistry>,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<ServeStats> {
+    opts.cfg.validate()?;
+    if opts.listen.is_none() && opts.http.is_none() {
+        return Err(Error::Config(
+            "serve needs at least one front: --listen and/or --http".into(),
+        ));
+    }
+    let predictor =
+        Predictor::from_checkpoint(&opts.ckpt, opts.cfg.max_batch, opts.cfg.compute_threads)?;
+    let engine = BatchEngine::new(predictor, opts.cfg.max_batch)?;
+    let bind = |addr: &String| -> Result<TcpListener> {
+        TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))
+    };
+    let transport = opts.listen.as_ref().map(bind).transpose()?;
+    let http = opts.http.as_ref().map(bind).transpose()?;
+    run_with_listeners(engine, &opts.cfg, transport, http, metrics, tracer)
+}
+
+/// [`run`] with pre-bound listeners — the e2e tests bind on
+/// `127.0.0.1:0` themselves so they know the ports before starting the
+/// runtime on a background thread.
+pub fn run_with_listeners(
+    mut engine: BatchEngine,
+    cfg: &ServeConfig,
+    transport: Option<TcpListener>,
+    http: Option<TcpListener>,
+    metrics: &Arc<MetricsRegistry>,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<ServeStats> {
+    let clock = Arc::new(WallClock::new());
+    let (tx, rx) = mpsc::channel::<ServeRequest>();
+    let mut accepters = Vec::new();
+
+    if let Some(listener) = transport {
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+        println!("sgs serve listening on {local}");
+        use_stdout_now()?;
+        let codec = cfg.codec;
+        let front_tx = tx.clone();
+        let front_clock = Arc::clone(&clock);
+        accepters.push(
+            std::thread::Builder::new()
+                .name("serve-accept-transport".into())
+                .spawn(move || accept_transport(listener, codec, front_tx, front_clock))
+                .map_err(|e| Error::Net(format!("spawn accept thread: {e}")))?,
+        );
+    }
+    if let Some(listener) = http {
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+        println!("sgs serve http on {local}");
+        use_stdout_now()?;
+        let front_tx = tx.clone();
+        let front_clock = Arc::clone(&clock);
+        let front_metrics = Arc::clone(metrics);
+        accepters.push(
+            std::thread::Builder::new()
+                .name("serve-accept-http".into())
+                .spawn(move || http::accept_http(listener, front_tx, front_clock, front_metrics))
+                .map_err(|e| Error::Net(format!("spawn accept thread: {e}")))?,
+        );
+    }
+    drop(tx);
+
+    let stats = engine_loop(&mut engine, cfg, rx, metrics, tracer, &clock);
+    for handle in accepters {
+        if handle.join().is_err() {
+            return Err(Error::Net("serve accept thread panicked".into()));
+        }
+    }
+    stats
+}
+
+/// Flush stdout so launchers blocking on the announce line see it
+/// immediately (same idiom as the dist worker's `serve_addr`).
+fn use_stdout_now() -> Result<()> {
+    use std::io::Write;
+    std::io::stdout()
+        .flush()
+        .map_err(|e| Error::Net(format!("flush stdout: {e}")))
+}
+
+/// The batching core: drain the queue into padded forward passes until
+/// shutdown. Metric handles are registered up front; per-batch work after
+/// warmup touches only preallocated storage (plus the reply payloads,
+/// which are per-request and outside the `#[steady_state]` region).
+fn engine_loop(
+    engine: &mut BatchEngine,
+    cfg: &ServeConfig,
+    rx: Receiver<ServeRequest>,
+    metrics: &Arc<MetricsRegistry>,
+    tracer: Option<&Arc<Tracer>>,
+    clock: &WallClock,
+) -> Result<ServeStats> {
+    let latency_us = metrics.histogram(
+        "serve_latency_us",
+        &[
+            100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0, 25_000.0, 50_000.0,
+            100_000.0, 250_000.0, 1_000_000.0,
+        ],
+    );
+    let row_bounds: Vec<f64> = (1..=engine.max_batch()).map(|i| i as f64).collect();
+    let batch_rows = metrics.histogram("serve_batch_rows", &row_bounds);
+    let requests_total = metrics.counter("serve_requests_total");
+    let errors_total = metrics.counter("serve_errors_total");
+    let batches_total = metrics.counter("serve_batches_total");
+    let qps = metrics.gauge("serve_qps");
+
+    let flag = shutdown_flag();
+    let max_batch = engine.max_batch();
+    let max_wait = Duration::from_millis(cfg.max_wait_ms);
+    let mut staged: Vec<PendingSlot> = Vec::with_capacity(max_batch);
+    let mut carry: Option<ServeRequest> = None;
+    let mut stats = ServeStats::default();
+
+    while !flag.load(Ordering::SeqCst) {
+        // open a batch with the carried-over or next queued request
+        let first = match carry.take() {
+            Some(req) => req,
+            None => match rx.recv_timeout(IDLE_POLL) {
+                Ok(req) => req,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+        };
+        staged.clear();
+        let mut rows = 0usize;
+        stage_one(engine, &mut staged, &mut rows, first, &errors_total);
+
+        // top up until the batch is full or the wait budget is spent
+        let wait = Deadline::after(max_wait);
+        while rows < max_batch && !wait.expired() && !flag.load(Ordering::SeqCst) {
+            match rx.try_recv() {
+                Ok(req) => {
+                    let n = match req.x.shape() {
+                        s if s.len() == 2 => s[0],
+                        _ => 0,
+                    };
+                    if (1..=max_batch).contains(&n) && rows + n > max_batch {
+                        // doesn't fit this batch — it opens the next one
+                        carry = Some(req);
+                        break;
+                    }
+                    stage_one(engine, &mut staged, &mut rows, req, &errors_total);
+                }
+                Err(TryRecvError::Empty) => std::thread::sleep(TOPUP_POLL),
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if rows == 0 {
+            continue;
+        }
+
+        let start_us = clock.now_us();
+        if let Err(e) = engine.forward(rows) {
+            errors_total.add(staged.len() as u64);
+            for slot in staged.drain(..) {
+                let _ = slot.reply.send(Err(Error::other(format!("serve forward: {e}"))));
+            }
+            continue;
+        }
+        let dur_us = clock.now_us().saturating_sub(start_us);
+        if let Some(tr) = tracer {
+            tr.record(Span {
+                track: 0,
+                phase: Phase::Serve,
+                s: NO_COORD,
+                k: NO_COORD,
+                t: stats.batches as i64,
+                start_us,
+                dur_us,
+            });
+        }
+        let done_us = clock.now_us();
+        for slot in staged.drain(..) {
+            let reply = engine.demux(slot.id, slot.off, slot.n);
+            latency_us.observe(done_us.saturating_sub(slot.enqueued_us) as f64);
+            requests_total.inc();
+            stats.requests += 1;
+            stats.rows += slot.n as u64;
+            let _ = slot.reply.send(reply);
+        }
+        stats.batches += 1;
+        batches_total.inc();
+        batch_rows.observe(rows as f64);
+        qps.set(stats.requests as f64 / clock.elapsed_s().max(1.0e-9));
+    }
+    Ok(stats)
+}
+
+/// Stage one request into the open batch, replying with the error
+/// immediately if its rows don't fit the model (the batch proceeds
+/// without it).
+fn stage_one(
+    engine: &mut BatchEngine,
+    staged: &mut Vec<PendingSlot>,
+    rows: &mut usize,
+    req: ServeRequest,
+    errors_total: &crate::obs::Counter,
+) {
+    match engine.stage(*rows, &req.x) {
+        Ok(n) => {
+            staged.push(PendingSlot {
+                id: req.id,
+                off: *rows,
+                n,
+                reply: req.reply,
+                enqueued_us: req.enqueued_us,
+            });
+            *rows += n;
+        }
+        Err(e) => {
+            errors_total.inc();
+            let _ = req.reply.send(Err(e));
+        }
+    }
+}
+
+/// Enqueue a request and block for its reply — the shared path of both
+/// fronts.
+pub(crate) fn enqueue_and_wait(
+    tx: &Sender<ServeRequest>,
+    clock: &WallClock,
+    id: u64,
+    x: Tensor,
+) -> Result<ServeReply> {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    tx.send(ServeRequest {
+        id,
+        x,
+        reply: reply_tx,
+        enqueued_us: clock.now_us(),
+    })
+    .map_err(|_| Error::Net("serve queue closed (server shutting down)".into()))?;
+    match reply_rx.recv() {
+        Ok(result) => result,
+        Err(_) => Err(Error::Net("serve engine dropped the request".into())),
+    }
+}
+
+/// Accept Transport connections until shutdown; each connection gets a
+/// detached handler thread running the synchronous predict loop.
+fn accept_transport(
+    listener: TcpListener,
+    codec: WireCodec,
+    tx: Sender<ServeRequest>,
+    clock: Arc<WallClock>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let flag = shutdown_flag();
+    while !flag.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let conn_tx = tx.clone();
+                let conn_clock = Arc::clone(&clock);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || {
+                        if let Ok(mut t) = TcpTransport::new(stream) {
+                            t.interrupt_on(shutdown_flag());
+                            let _ = serve_conn(&mut t, codec, &conn_tx, &conn_clock);
+                            t.close();
+                        }
+                    });
+                if spawned.is_err() {
+                    // out of threads: drop the connection, keep accepting
+                    continue;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(IDLE_POLL);
+            }
+            Err(_) => std::thread::sleep(IDLE_POLL),
+        }
+    }
+}
+
+/// One Transport connection: codec handshake, then a synchronous
+/// `Predict` → `Prediction` loop until the client closes, sends
+/// `Shutdown`, or a request fails (reported as `Abort`).
+fn serve_conn(
+    t: &mut TcpTransport,
+    expected: WireCodec,
+    tx: &Sender<ServeRequest>,
+    clock: &WallClock,
+) -> Result<()> {
+    let (frame, _) = t.recv()?;
+    match frame {
+        Frame::Hello { version, codec } if version == WIRE_VERSION as u32 => {
+            if codec != expected.id() {
+                let msg = format!(
+                    "codec mismatch: client offered id {codec}, server speaks {}",
+                    expected.name()
+                );
+                t.send(&Frame::Abort { msg: msg.clone() }).ok();
+                return Err(Error::Net(msg));
+            }
+            t.send(&Frame::Hello {
+                version: WIRE_VERSION as u32,
+                codec,
+            })?;
+            t.set_codec(expected);
+        }
+        Frame::Hello { version, .. } => {
+            let msg = format!(
+                "wire version mismatch: client sent v{version}, this build speaks v{WIRE_VERSION}"
+            );
+            t.send(&Frame::Abort { msg: msg.clone() }).ok();
+            return Err(Error::Net(msg));
+        }
+        other => {
+            let msg = format!("expected hello, got {} frame", other.name());
+            t.send(&Frame::Abort { msg: msg.clone() }).ok();
+            return Err(Error::Net(msg));
+        }
+    }
+    loop {
+        let (frame, _) = match t.recv() {
+            Ok(out) => out,
+            // client hung up, or the shutdown flag interrupted the poll
+            Err(_) => return Ok(()),
+        };
+        match frame {
+            Frame::Predict { id, x } => match enqueue_and_wait(tx, clock, id, x) {
+                Ok(rep) => {
+                    t.send(&Frame::Prediction {
+                        id: rep.id,
+                        argmax: rep.argmax,
+                        scores: rep.scores,
+                    })?;
+                }
+                Err(e) => {
+                    t.send(&Frame::Abort { msg: format!("{e}") }).ok();
+                    return Ok(());
+                }
+            },
+            Frame::Shutdown => return Ok(()),
+            other => {
+                let msg = format!("expected predict, got {} frame", other.name());
+                t.send(&Frame::Abort { msg: msg.clone() }).ok();
+                return Err(Error::Net(msg));
+            }
+        }
+    }
+}
+
+/// Client side of the Transport front: handshake on connect, then
+/// synchronous [`ServeClient::predict`] calls. Used by `sgs predict` and
+/// the QPS bench.
+pub struct ServeClient {
+    t: TcpTransport,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect and negotiate `codec` (must equal the server's
+    /// `ServeConfig::codec`).
+    pub fn connect(addr: &str, codec: WireCodec) -> Result<ServeClient> {
+        let mut t = TcpTransport::connect(addr)?;
+        t.send(&Frame::Hello {
+            version: WIRE_VERSION as u32,
+            codec: codec.id(),
+        })?;
+        match t.recv_deadline(HANDSHAKE_TIMEOUT)? {
+            (Frame::Hello { version, codec: c }, _)
+                if version == WIRE_VERSION as u32 && c == codec.id() =>
+            {
+                t.set_codec(codec);
+                Ok(ServeClient { t, next_id: 0 })
+            }
+            (Frame::Abort { msg }, _) => {
+                Err(Error::Net(format!("server rejected handshake: {msg}")))
+            }
+            (other, _) => Err(Error::Net(format!(
+                "unexpected {} frame in handshake",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Send one `[n, d_in]` batch and block for its scores.
+    pub fn predict(&mut self, x: &Tensor) -> Result<ServeReply> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.t.send(&Frame::Predict { id, x: x.clone() })?;
+        match self.t.recv_deadline(REPLY_TIMEOUT)? {
+            (Frame::Prediction { id: rid, argmax, scores }, _) if rid == id => Ok(ServeReply {
+                id: rid,
+                argmax,
+                scores,
+            }),
+            (Frame::Abort { msg }, _) => Err(Error::Net(format!("server aborted: {msg}"))),
+            (other, _) => Err(Error::Net(format!(
+                "unexpected {} frame in reply",
+                other.name()
+            ))),
+        }
+    }
+
+    /// Politely end the connection (best-effort `Shutdown` frame).
+    pub fn close(&mut self) {
+        self.t.send(&Frame::Shutdown).ok();
+        self.t.close();
+    }
+}

@@ -8,7 +8,7 @@ use crate::error::Result;
 use crate::obs::{MetricsRegistry, Tracer};
 use crate::session::IterEvent;
 use crate::tensor::Tensor;
-use crate::trainer::Checkpoint;
+use crate::checkpoint::Checkpoint;
 
 /// Which execution strategy runs the S×K agent grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -42,10 +42,12 @@
 
 pub mod engine;
 pub mod event;
+pub mod predictor;
 mod sim;
 
 pub use engine::{Engine, EngineKind};
 pub use event::{EventWriter, IterEvent};
+pub use predictor::Predictor;
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -61,7 +63,7 @@ use crate::pipeline::ThreadedEngine;
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::simclock::{method_iter_s_mode, CostModel};
 use crate::tensor::Tensor;
-use crate::trainer::Checkpoint;
+use crate::checkpoint::Checkpoint;
 
 use sim::SimEngine;
 
@@ -586,7 +588,6 @@ impl Session {
 mod tests {
     use super::*;
     use crate::config::ModelShape;
-    use crate::graph::Topology;
     use crate::trainer::LrSchedule;
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -594,23 +595,15 @@ mod tests {
             name: "session-test".into(),
             s: 2,
             k: 2,
-            topology: Topology::Ring,
-            alpha: None,
-            gossip_rounds: 1,
             model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
             batch: 8,
             iters: 12,
             lr: LrSchedule::Const(0.2),
-            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
-            compensate: crate::compensate::CompensatorKind::None,
-            mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 5,
             dataset_n: 200,
             delta_every: 3,
             eval_every: 6,
-            compute_threads: 0,
-            placement: None,
-            codec: crate::net::WireCodec::Raw,
+            ..ExperimentConfig::default()
         }
     }
 

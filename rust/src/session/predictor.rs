@@ -1,0 +1,237 @@
+//! Forward-only inference over the workspace kernels.
+//!
+//! [`Predictor`] is the one shared surface for everything that runs the
+//! model WITHOUT training it: `sgs serve`, gradient checking, and future
+//! accelerator backends. It loads weights through
+//! [`crate::checkpoint::Checkpoint::load`], group-averages them into W̄
+//! (the same quantity every engine's eval path reports on, via
+//! [`crate::consensus::averaged_params`]), builds a [`ComputeBackend`],
+//! and exposes [`Predictor::predict_into`] — a caller-owned-workspace
+//! forward pass that allocates nothing once the batch shape has settled.
+//!
+//! Determinism note: every kernel behind the native backend is per-row
+//! (dense rows, im2col rows, softmax rows) with a fixed ascending-k
+//! accumulation order, so a given input row produces bitwise-identical
+//! logits regardless of which other rows share its batch. The serve
+//! batcher leans on this to co-batch unrelated requests.
+
+use std::path::Path;
+
+use crate::checkpoint::Checkpoint;
+use crate::consensus::averaged_params;
+use crate::error::{Error, Result};
+use crate::nn::layer::LayerShape;
+use crate::runtime::{ComputeBackend, FwdScratch, NativeBackend};
+use crate::steady_state;
+use crate::tensor::Tensor;
+
+/// A loaded model plus the preallocated workspaces for forward passes.
+pub struct Predictor {
+    backend: Box<dyn ComputeBackend + Send + Sync>,
+    /// group-averaged (W, b) per layer
+    params: Vec<(Tensor, Tensor)>,
+    /// activation stash: `acts[0]` input, `acts[i+1]` layer i's output
+    acts: Vec<Tensor>,
+    /// per-layer persistent forward scratch (im2col buffers)
+    scratch: Vec<FwdScratch>,
+    /// training iteration the checkpoint was taken at
+    iteration: usize,
+}
+
+impl Predictor {
+    /// Load `<base>.json` + `<base>.bin` and build a native-kernel
+    /// predictor. `threads = 0` means auto; `1` pins the kernels to the
+    /// calling thread (the allocation-guard test uses this).
+    pub fn from_checkpoint(
+        base: impl AsRef<Path>,
+        max_batch: usize,
+        threads: usize,
+    ) -> Result<Predictor> {
+        let ck = Checkpoint::load(base)?;
+        let backend = NativeBackend::with_threads(ck.layers.clone(), max_batch, threads);
+        Self::from_parts(Box::new(backend), ck)
+    }
+
+    /// Build over an explicit backend (tests, future accelerator paths).
+    /// The checkpoint's per-group weights are averaged into one W̄ set.
+    pub fn from_parts(
+        backend: Box<dyn ComputeBackend + Send + Sync>,
+        ck: Checkpoint,
+    ) -> Result<Predictor> {
+        if ck.groups.is_empty() {
+            return Err(Error::Config("checkpoint has no parameter groups".into()));
+        }
+        if ck.layers != backend.layers() {
+            return Err(Error::Config(format!(
+                "checkpoint layer stack ({} layers) does not match backend {:?} ({} layers)",
+                ck.layers.len(),
+                backend.name(),
+                backend.layers().len()
+            )));
+        }
+        let params = averaged_params(&ck.groups);
+        let n_layers = params.len();
+        let mut acts = Vec::with_capacity(n_layers + 1);
+        for _ in 0..=n_layers {
+            acts.push(Tensor::empty());
+        }
+        let mut scratch = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            scratch.push(FwdScratch::new());
+        }
+        Ok(Predictor {
+            backend,
+            params,
+            acts,
+            scratch,
+            iteration: ck.iteration,
+        })
+    }
+
+    /// Input feature width the model expects (columns of a batch).
+    pub fn d_in(&self) -> usize {
+        self.backend.layers().first().map_or(0, |l| l.d_in)
+    }
+
+    /// Output logit width (number of classes).
+    pub fn classes(&self) -> usize {
+        self.backend.layers().last().map_or(0, |l| l.d_out)
+    }
+
+    /// The layer stack the predictor runs.
+    pub fn layers(&self) -> &[LayerShape] {
+        self.backend.layers()
+    }
+
+    /// Training iteration the loaded checkpoint was taken at.
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Backend name (metrics, logs).
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// Forward one batch: `x` is `[n, d_in]`, `logits` receives
+    /// `[n, classes]`. Workspaces are sized on the first call and reused
+    /// allocation-free while the batch shape stays constant — callers on
+    /// the serve hot path keep `n` fixed (padding partial batches) so the
+    /// steady state allocates nothing. Marked `#[steady_state]`: the lint
+    /// keeps this body allocation-free.
+    #[steady_state]
+    pub fn predict_into(&mut self, x: &Tensor, logits: &mut Tensor) -> Result<()> {
+        let want = self.d_in();
+        let shape = x.shape();
+        if shape.len() != 2 || shape[1] != want || shape[0] == 0 {
+            // static message: this body is #[steady_state], format! would
+            // allocate on the hot path
+            return Err(Error::Shape(
+                "predict_into wants a [n>0, d_in] batch matching the model".into(),
+            ));
+        }
+        self.acts[0].ensure_shape(shape);
+        self.acts[0].copy_from(x);
+        self.backend
+            .module_fwd_into(0, &self.params, &mut self.acts, &mut self.scratch)?;
+        let last = self
+            .acts
+            .last()
+            .ok_or_else(|| Error::Shape("predictor has no activation stash".into()))?;
+        logits.ensure_shape(last.shape());
+        logits.copy_from(last);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_params;
+    use crate::nn::resmlp_layers;
+    use crate::util::rng::Pcg32;
+
+    fn two_group_checkpoint() -> Checkpoint {
+        let layers = resmlp_layers(6, 5, 1, 3);
+        let mut rng = Pcg32::new(11);
+        let groups: Vec<_> = (0..2).map(|_| init_params(&mut rng, &layers)).collect();
+        Checkpoint::new(42, groups, layers)
+    }
+
+    #[test]
+    fn predict_matches_direct_module_fwd() {
+        let ck = two_group_checkpoint();
+        let layers = ck.layers.clone();
+        let avg = averaged_params(&ck.groups);
+        let backend = NativeBackend::with_threads(layers.clone(), 4, 1);
+
+        let mut rng = Pcg32::new(12);
+        let mut x = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+
+        // direct composition over the raw backend
+        let mut acts = vec![x.clone()];
+        for _ in 0..layers.len() {
+            acts.push(Tensor::empty());
+        }
+        let mut fs: Vec<FwdScratch> = (0..layers.len()).map(|_| FwdScratch::new()).collect();
+        backend.module_fwd_into(0, &avg, &mut acts, &mut fs).unwrap();
+
+        let mut p = Predictor::from_parts(Box::new(backend.clone()), ck).unwrap();
+        assert_eq!(p.d_in(), 6);
+        assert_eq!(p.classes(), 3);
+        assert_eq!(p.iteration(), 42);
+        let mut logits = Tensor::empty();
+        p.predict_into(&x, &mut logits).unwrap();
+        assert_eq!(&logits, acts.last().unwrap());
+    }
+
+    #[test]
+    fn per_row_outputs_are_batch_invariant() {
+        let ck = two_group_checkpoint();
+        let backend = NativeBackend::with_threads(ck.layers.clone(), 4, 1);
+        let mut p = Predictor::from_parts(Box::new(backend), ck).unwrap();
+
+        let mut rng = Pcg32::new(13);
+        let mut batch = Tensor::zeros(&[4, 6]);
+        rng.fill_normal(batch.data_mut(), 1.0);
+        let mut full = Tensor::empty();
+        p.predict_into(&batch, &mut full).unwrap();
+
+        // each row alone must reproduce its slice of the batched logits
+        for i in 0..4 {
+            let row = Tensor::from_vec(&[1, 6], batch.data()[i * 6..(i + 1) * 6].to_vec()).unwrap();
+            let mut one = Tensor::empty();
+            p.predict_into(&row, &mut one).unwrap();
+            assert_eq!(one.data(), &full.data()[i * 3..(i + 1) * 3]);
+        }
+    }
+
+    #[test]
+    fn rejects_shape_and_stack_mismatch() {
+        let ck = two_group_checkpoint();
+        let wrong = NativeBackend::with_threads(resmlp_layers(7, 5, 1, 3), 4, 1);
+        assert!(Predictor::from_parts(Box::new(wrong), ck.clone()).is_err());
+
+        let backend = NativeBackend::with_threads(ck.layers.clone(), 4, 1);
+        let mut p = Predictor::from_parts(Box::new(backend), ck).unwrap();
+        let bad = Tensor::zeros(&[2, 9]);
+        assert!(p.predict_into(&bad, &mut Tensor::empty()).is_err());
+    }
+
+    #[test]
+    fn from_checkpoint_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("sgs_predictor_ck");
+        let base = dir.join("ck");
+        let ck = two_group_checkpoint();
+        ck.save(&base).unwrap();
+        let mut p = Predictor::from_checkpoint(&base, 4, 1).unwrap();
+        let mut rng = Pcg32::new(14);
+        let mut x = Tensor::zeros(&[2, 6]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut logits = Tensor::empty();
+        p.predict_into(&x, &mut logits).unwrap();
+        assert_eq!(logits.shape(), &[2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -21,7 +21,8 @@ use crate::session::event::correction_arc;
 use crate::session::{Engine, IterEvent};
 use crate::staleness::Schedule;
 use crate::tensor::Tensor;
-use crate::trainer::{Checkpoint, Trainer};
+use crate::checkpoint::Checkpoint;
+use crate::trainer::Trainer;
 
 pub(crate) struct SimEngine {
     tr: Trainer,

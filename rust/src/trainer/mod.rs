@@ -4,12 +4,10 @@
 //! centralized (1,1), decoupled model (1,2), data-parallel (4,1), and the
 //! paper's distributed method (4,2) — plus any other grid point.
 
-pub mod checkpoint;
 pub mod lr;
 pub mod opt;
 pub mod sgd;
 
-pub use checkpoint::Checkpoint;
 pub use lr::LrSchedule;
 pub use opt::OptimizerKind;
 
@@ -29,7 +27,7 @@ use crate::pipeline::sim::{GroupStepOut, PipelineGroup};
 use crate::runtime::ComputeBackend;
 use crate::staleness::partition_layers;
 use crate::tensor::Tensor;
-use crate::trainer::checkpoint::ResumeState;
+use crate::checkpoint::{Checkpoint, ResumeState};
 use crate::util::rng::Pcg32;
 
 /// A ready-to-run experiment (sim engine).
@@ -417,7 +415,6 @@ mod tests {
     use super::*;
     use crate::config::ModelShape;
     use crate::data::synthetic::SyntheticSpec;
-    use crate::graph::Topology;
     use crate::runtime::NativeBackend;
 
     fn tiny_cfg(s: usize, k: usize) -> ExperimentConfig {
@@ -425,23 +422,15 @@ mod tests {
             name: "test".into(),
             s,
             k,
-            topology: Topology::Ring,
-            alpha: None,
-            gossip_rounds: 1,
             model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 }.into(),
             batch: 16,
             iters: 200,
             lr: LrSchedule::Const(0.1),
-            optimizer: crate::trainer::opt::OptimizerKind::Sgd,
-            compensate: crate::compensate::CompensatorKind::None,
-            mode: crate::staleness::PipelineMode::FullyDecoupled,
             seed: 7,
             dataset_n: 400,
             delta_every: 5,
             eval_every: 20,
-            compute_threads: 0,
-            placement: None,
-            codec: crate::net::WireCodec::Raw,
+            ..ExperimentConfig::default()
         }
     }
 

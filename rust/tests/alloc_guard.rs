@@ -19,7 +19,6 @@ use std::sync::Arc;
 
 use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
-use sgs::graph::Topology;
 use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::Session;
@@ -67,16 +66,10 @@ fn steady_state_sim_step_allocates_nothing() {
         name: "alloc-guard".into(),
         s: 2,
         k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters: 64,
         lr: LrSchedule::Const(0.1),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 17,
         dataset_n: 240,
         // eval/δ cadences allocate by design (averaged params, probe
@@ -85,8 +78,7 @@ fn steady_state_sim_step_allocates_nothing() {
         eval_every: 0,
         // single worker: keeps every kernel on the counted thread
         compute_threads: 1,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     };
     let ds = Arc::new(
         SyntheticSpec::small(cfg.dataset_n, cfg.model.d_in(), cfg.model.classes(), 3).generate(),
@@ -180,4 +172,41 @@ fn steady_state_sim_step_allocates_nothing() {
     assert!(cnn_session.iterations_done() >= 19);
     assert_eq!(cnn_allocs, 0, "CNN steady-state step performed {cnn_allocs} heap allocations");
     assert_eq!(cnn_deallocs, 0, "CNN steady-state step performed {cnn_deallocs} heap frees");
+
+    // ---- the serve hot path under the same contract ----
+    // `BatchEngine::stage` + `forward` are the per-batch serving loop
+    // (`sgs serve`); the padded full-max_batch forward keeps every
+    // workspace shape fixed, so 3 steady-state batches allocate nothing.
+    // Reply demux (per-request payloads) is outside the window by design.
+    let serve_layers = sgs::nn::resmlp_layers(10, 8, 2, 3);
+    let mut serve_rng = sgs::util::rng::Pcg32::new(33);
+    let serve_groups: Vec<_> =
+        (0..2).map(|_| sgs::nn::init::init_params(&mut serve_rng, &serve_layers)).collect();
+    let ck = sgs::checkpoint::Checkpoint::new(0, serve_groups, serve_layers.clone());
+    let serve_backend = NativeBackend::with_threads(serve_layers, 8, 1);
+    let predictor = sgs::session::Predictor::from_parts(Box::new(serve_backend), ck).unwrap();
+    let mut serve = sgs::serve::BatchEngine::new(predictor, 8).unwrap();
+    let mut x = sgs::tensor::Tensor::zeros(&[3, 10]);
+    serve_rng.fill_normal(x.data_mut(), 1.0);
+    // one warm batch beyond the constructor's full-size warmup
+    serve.stage(0, &x).unwrap();
+    serve.forward(3).unwrap();
+
+    ALLOCS.with(|c| c.set(0));
+    DEALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for _ in 0..3 {
+        serve.stage(0, &x).unwrap();
+        serve.forward(3).unwrap();
+    }
+    TRACKING.with(|t| t.set(false));
+    let serve_allocs = ALLOCS.with(|c| c.get());
+    let serve_deallocs = DEALLOCS.with(|c| c.get());
+
+    assert_eq!(serve_allocs, 0, "serve batch performed {serve_allocs} heap allocations");
+    assert_eq!(serve_deallocs, 0, "serve batch performed {serve_deallocs} heap frees");
+    // the batches really computed: demux still hands out a coherent reply
+    let rep = serve.demux(1, 0, 3).unwrap();
+    assert_eq!(rep.scores.shape(), &[3, 3]);
+    assert_eq!(rep.argmax.len(), 3);
 }

@@ -14,25 +14,14 @@ use sgs::util::rng::Pcg32;
 fn base_cfg() -> ExperimentConfig {
     ExperimentConfig {
         name: "conv-test".into(),
-        s: 4,
-        k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 12, hidden: 10, blocks: 2, classes: 3 }.into(),
         batch: 12,
         iters: 300,
         lr: LrSchedule::Const(0.1),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 21,
         dataset_n: 480,
         delta_every: 1,
-        eval_every: 50,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     }
 }
 

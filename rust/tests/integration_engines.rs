@@ -14,7 +14,6 @@ use std::thread::JoinHandle;
 use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
 use sgs::data::Dataset;
-use sgs::graph::Topology;
 use sgs::net::{TcpTransport, Transport};
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::{EngineKind, IterEvent, Session};
@@ -25,23 +24,15 @@ fn cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         name: "engines-test".into(),
         s,
         k,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters,
         lr: LrSchedule::Const(0.2),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 11,
         dataset_n: 240,
         delta_every: 4,
         eval_every: 8,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     }
 }
 

@@ -153,8 +153,6 @@ fn xla_training_matches_native_training() {
         s: 2,
         k: 2,
         topology: sgs::graph::Topology::Complete,
-        alpha: None,
-        gossip_rounds: 1,
         model: sgs::config::ModelShape {
             d_in: layers[0].d_in,
             hidden: layers[0].d_out,
@@ -165,16 +163,11 @@ fn xla_training_matches_native_training() {
         batch: xla.batch(),
         iters: 10,
         lr: sgs::trainer::LrSchedule::Const(0.05),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 13,
         dataset_n: 2000,
         delta_every: 0,
         eval_every: 0,
-        compute_threads: 0,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..sgs::config::ExperimentConfig::default()
     };
     let ds = std::sync::Arc::new(sgs::coordinator::build_dataset(&cfg));
 

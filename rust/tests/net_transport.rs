@@ -371,23 +371,16 @@ fn tiny_cfg(s: usize, k: usize, iters: usize) -> ExperimentConfig {
         name: "net-teardown".into(),
         s,
         k,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters,
         lr: LrSchedule::Const(0.2),
-        optimizer: sgs::trainer::OptimizerKind::Sgd,
-        compensate: sgs::compensate::CompensatorKind::None,
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 3,
         dataset_n: 240,
         delta_every: 0,
         eval_every: 0,
         compute_threads: 1,
-        placement: None,
-        codec: WireCodec::Raw,
+        ..ExperimentConfig::default()
     }
 }
 

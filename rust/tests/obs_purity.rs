@@ -8,7 +8,6 @@
 use std::sync::Arc;
 
 use sgs::config::{ExperimentConfig, ModelShape};
-use sgs::graph::Topology;
 use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
 use sgs::session::Session;
 use sgs::trainer::LrSchedule;
@@ -18,23 +17,18 @@ fn cfg() -> ExperimentConfig {
         name: "obs-purity".into(),
         s: 2,
         k: 2,
-        topology: Topology::Ring,
-        alpha: None,
-        gossip_rounds: 1,
         model: ModelShape { d_in: 10, hidden: 8, blocks: 2, classes: 3 }.into(),
         batch: 8,
         iters: 12,
         lr: LrSchedule::Const(0.2),
         optimizer: sgs::trainer::OptimizerKind::Momentum { beta: 0.9 },
         compensate: sgs::compensate::CompensatorKind::DelayCompensate { lambda: 0.04 },
-        mode: sgs::staleness::PipelineMode::FullyDecoupled,
         seed: 23,
         dataset_n: 240,
         delta_every: 4,
         eval_every: 6,
         compute_threads: 1,
-        placement: None,
-        codec: sgs::net::WireCodec::Raw,
+        ..ExperimentConfig::default()
     }
 }
 

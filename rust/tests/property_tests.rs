@@ -231,9 +231,7 @@ fn prop_config_roundtrip() {
                 dataset_n: 2000,
                 delta_every: r.below(20),
                 eval_every: r.below(20),
-                compute_threads: 0,
-                placement: None,
-                codec: sgs::net::WireCodec::Raw,
+                ..ExperimentConfig::default()
             }
         },
         |cfg| {

@@ -1,0 +1,258 @@
+//! End-to-end serving test: a real `run_with_listeners` runtime on
+//! loopback TCP, exercised through BOTH fronts.
+//!
+//! The replies are pinned **bitwise** against a direct
+//! `module_fwd_into` pass over the group-averaged weights (plus the
+//! batcher's exact softmax ops): dynamic batching, the wire codec, and
+//! the HTTP JSON round-trip must all be invisible to the numbers. The
+//! JSON leg stays exact because the serializer emits shortest-roundtrip
+//! f64 (and every f32 is exactly representable as f64).
+//!
+//! One test function: the serve runtime shares the process-wide
+//! shutdown flag with the worker CLI, so parallel tests in this binary
+//! would trip each other's shutdowns.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use sgs::checkpoint::Checkpoint;
+use sgs::config::ServeConfig;
+use sgs::consensus::averaged_params;
+use sgs::net::worker::{request_shutdown, shutdown_flag};
+use sgs::net::WireCodec;
+use sgs::nn::init::init_params;
+use sgs::nn::resmlp_layers;
+use sgs::obs::MetricsRegistry;
+use sgs::runtime::{ComputeBackend, FwdScratch, NativeBackend};
+use sgs::serve::{run_with_listeners, BatchEngine, ServeClient};
+use sgs::session::Predictor;
+use sgs::tensor::Tensor;
+use sgs::util::json::Json;
+use sgs::util::rng::Pcg32;
+
+/// The batcher's softmax, op for op (single max sweep, exp into place,
+/// one scale) — so expectations match bitwise, not just approximately.
+fn softmax_rows(logits: &Tensor) -> Vec<f32> {
+    let cols = logits.shape()[1];
+    let mut out = vec![0.0f32; logits.len()];
+    for (dst, src) in out.chunks_mut(cols).zip(logits.data().chunks(cols)) {
+        let mut max = f32::NEG_INFINITY;
+        for &v in src {
+            if v > max {
+                max = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for (d, &v) in dst.iter_mut().zip(src) {
+            let e = (v - max).exp();
+            *d = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for d in dst.iter_mut() {
+            *d *= inv;
+        }
+    }
+    out
+}
+
+/// Blocking one-shot HTTP exchange; returns (status line, body).
+fn http(addr: &SocketAddr, request: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(request.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.trim_end().is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status.trim_end().to_string(), String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn serve_end_to_end_over_transport_and_http() {
+    // ---- model + ground truth ----
+    let layers = resmlp_layers(6, 5, 1, 3);
+    let mut rng = Pcg32::new(7);
+    let groups: Vec<_> = (0..2).map(|_| init_params(&mut rng, &layers)).collect();
+    let ck = Checkpoint::new(3, groups, layers.clone());
+
+    let mut x = Tensor::zeros(&[2, 6]);
+    rng.fill_normal(x.data_mut(), 1.0);
+
+    let avg = averaged_params(&ck.groups);
+    let truth_backend = NativeBackend::with_threads(layers.clone(), 4, 1);
+    let mut acts = vec![x.clone()];
+    for _ in 0..layers.len() {
+        acts.push(Tensor::empty());
+    }
+    let mut fs: Vec<FwdScratch> = (0..layers.len()).map(|_| FwdScratch::new()).collect();
+    truth_backend.module_fwd_into(0, &avg, &mut acts, &mut fs).unwrap();
+    let logits = acts.last().unwrap().clone();
+    let scores = softmax_rows(&logits);
+    let argmax: Vec<u32> = (0..2)
+        .map(|r| {
+            (0..3)
+                .max_by(|&a, &b| logits.data()[r * 3 + a].total_cmp(&logits.data()[r * 3 + b]))
+                .unwrap() as u32
+        })
+        .collect();
+
+    // ---- the server, on ephemeral loopback ports ----
+    let predictor = Predictor::from_parts(
+        Box::new(NativeBackend::with_threads(layers.clone(), 4, 1)),
+        ck,
+    )
+    .unwrap();
+    let engine = BatchEngine::new(predictor, 4).unwrap();
+    let t_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let h_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let t_addr = t_listener.local_addr().unwrap().to_string();
+    let h_addr = h_listener.local_addr().unwrap();
+    let cfg = ServeConfig::default()
+        .with_max_batch(4)
+        .with_max_wait_ms(1)
+        .with_compute_threads(1);
+    let metrics = Arc::new(MetricsRegistry::new());
+    shutdown_flag().store(false, Ordering::SeqCst);
+    let server = {
+        let metrics = Arc::clone(&metrics);
+        std::thread::spawn(move || {
+            run_with_listeners(engine, &cfg, Some(t_listener), Some(h_listener), &metrics, None)
+                .unwrap()
+        })
+    };
+
+    // ---- Transport front: a 2-row batch, bitwise vs ground truth ----
+    let mut client = ServeClient::connect(&t_addr, WireCodec::Raw).unwrap();
+    let rep = client.predict(&x).unwrap();
+    assert_eq!(rep.scores.shape(), &[2, 3]);
+    assert_eq!(rep.scores.data(), &scores[..], "transport scores drifted");
+    assert_eq!(rep.argmax, argmax);
+
+    // single rows co-batched with whatever else arrives: still bitwise
+    for r in 0..2 {
+        let row = Tensor::from_vec(&[1, 6], x.data()[r * 6..(r + 1) * 6].to_vec()).unwrap();
+        let rep = client.predict(&row).unwrap();
+        assert_eq!(rep.scores.data(), &scores[r * 3..(r + 1) * 3]);
+        assert_eq!(rep.argmax, &argmax[r..=r]);
+    }
+
+    // wrong feature width → per-request Abort, connection reusable via reconnect
+    let mut bad = ServeClient::connect(&t_addr, WireCodec::Raw).unwrap();
+    let err = bad.predict(&Tensor::zeros(&[1, 9])).unwrap_err();
+    assert!(err.to_string().contains("aborted"), "{err}");
+
+    // codec the server doesn't speak → rejected in the handshake
+    let err = ServeClient::connect(&t_addr, WireCodec::F16).unwrap_err();
+    assert!(err.to_string().contains("codec"), "{err}");
+
+    // ---- HTTP front ----
+    let row_csv = |r: usize| {
+        x.data()[r * 6..(r + 1) * 6]
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let body = format!("{{\"x\": [[{}],[{}]]}}", row_csv(0), row_csv(1));
+    let request = format!(
+        "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let (status, reply) = http(&h_addr, &request);
+    assert!(status.starts_with("HTTP/1.1 200"), "{status}: {reply}");
+    let doc = Json::parse(&reply).unwrap();
+    let got_rows = doc.get("scores").unwrap().as_arr().unwrap();
+    assert_eq!(got_rows.len(), 2);
+    for (r, row) in got_rows.iter().enumerate() {
+        for (c, v) in row.as_arr().unwrap().iter().enumerate() {
+            let f = v.as_f64().unwrap() as f32;
+            assert_eq!(f, scores[r * 3 + c], "http scores drifted at [{r},{c}]");
+        }
+    }
+    let got_argmax: Vec<u32> = doc
+        .get("argmax")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(got_argmax, argmax);
+
+    // malformed body → 400 with a JSON error
+    let request = "POST /predict HTTP/1.1\r\nContent-Length: 9\r\nConnection: close\r\n\r\n{\"x\": {}}";
+    let (status, reply) = http(&h_addr, request);
+    assert!(status.starts_with("HTTP/1.1 400"), "{status}");
+    assert!(Json::parse(&reply).unwrap().opt("error").is_some());
+
+    // liveness + metrics endpoints
+    let (status, reply) = http(&h_addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+    assert_eq!(reply, "{\"ok\":true}");
+    let (status, _) = http(&h_addr, "GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert!(status.starts_with("HTTP/1.1 404"), "{status}");
+
+    let (status, reply) = http(&h_addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+    let snap = Json::parse(&reply).unwrap();
+    let requests = snap
+        .get("counters")
+        .unwrap()
+        .get("serve_requests_total")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert!(requests >= 4, "only {requests} requests counted");
+    assert!(
+        snap.get("gauges").unwrap().get("serve_qps").unwrap().as_f64().unwrap() > 0.0,
+        "qps gauge never set"
+    );
+    let latency = snap.get("histograms").unwrap().get("serve_latency_us").unwrap();
+    assert!(latency.get("count").unwrap().as_usize().unwrap() >= 4);
+
+    // ---- concurrent clients co-batch without cross-talk ----
+    let handles: Vec<_> = (0..2)
+        .map(|r| {
+            let addr = t_addr.clone();
+            let row =
+                Tensor::from_vec(&[1, 6], x.data()[r * 6..(r + 1) * 6].to_vec()).unwrap();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr, WireCodec::Raw).unwrap();
+                let mut out = Vec::new();
+                for _ in 0..8 {
+                    out.push(c.predict(&row).unwrap());
+                }
+                c.close();
+                out
+            })
+        })
+        .collect();
+    for (r, h) in handles.into_iter().enumerate() {
+        for rep in h.join().unwrap() {
+            assert_eq!(rep.scores.data(), &scores[r * 3..(r + 1) * 3]);
+        }
+    }
+
+    // ---- clean shutdown hands back the stats ----
+    client.close();
+    request_shutdown();
+    let stats = server.join().unwrap();
+    assert!(stats.requests >= 20, "stats lost requests: {stats:?}");
+    assert!(stats.batches >= 1 && stats.batches <= stats.requests);
+    assert!(stats.rows > stats.requests, "2-row batches must count per row");
+    shutdown_flag().store(false, Ordering::SeqCst);
+}

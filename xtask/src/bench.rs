@@ -27,15 +27,17 @@ pub fn run(
     let hot = read_csv(&bench_dir.join("hot_path.csv"))?;
     let ablation = read_csv(&bench_dir.join("ablation_compensate.csv"))?;
     let comm = read_csv(&bench_dir.join("comm_volume.csv"))?;
+    let serve = read_csv(&bench_dir.join("serve_qps.csv"))?;
     let trace_report = match trace {
         Some(path) => Some(read_trace_report(path)?),
         None => None,
     };
-    let measured = hot.is_some() || ablation.is_some() || comm.is_some();
+    let measured = hot.is_some() || ablation.is_some() || comm.is_some() || serve.is_some();
     let summary = summary_json(
         hot.as_ref(),
         ablation.as_ref(),
         comm.as_ref(),
+        serve.as_ref(),
         measured,
         trace_report.as_deref(),
     );
@@ -102,12 +104,13 @@ fn summary_json(
     hot: Option<&Csv>,
     ablation: Option<&Csv>,
     comm: Option<&Csv>,
+    serve: Option<&Csv>,
     measured: bool,
     trace_report: Option<&str>,
 ) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"sgs-bench/v1\",\n");
-    s.push_str("  \"issue\": 8,\n");
+    s.push_str("  \"issue\": 9,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str("  \"hot_path\": ");
     s.push_str(&csv_json(hot));
@@ -115,6 +118,8 @@ fn summary_json(
     s.push_str(&csv_json(ablation));
     s.push_str(",\n  \"comm_volume\": ");
     s.push_str(&csv_json(comm));
+    s.push_str(",\n  \"serve_qps\": ");
+    s.push_str(&csv_json(serve));
     s.push_str(",\n  \"trace_report\": ");
     s.push_str(trace_report.unwrap_or("null"));
     s.push_str("\n}\n");

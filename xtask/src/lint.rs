@@ -34,17 +34,19 @@ const DETERMINISTIC: &[&str] = &[
     "tensor",
     "pipeline",
     "trainer",
+    "checkpoint",
     "data",
     "staleness",
     "compensate",
     "consensus",
     "graph",
     "simclock",
+    "serve",
 ];
 
 /// Modules whose runtime paths must propagate typed errors, never panic:
 /// a lost peer or a corrupt frame has to surface as `Err`, not a crash.
-const FALLIBLE: &[&str] = &["net", "pipeline", "trainer", "session"];
+const FALLIBLE: &[&str] = &["net", "pipeline", "trainer", "session", "checkpoint", "serve"];
 
 /// Files where direct slice indexing is forbidden outright: these decode
 /// untrusted bytes, so every access must be a checked `.get(..)`. The
