@@ -11,18 +11,20 @@
 //! * `serve`     — dynamically-batched inference over a checkpoint
 //! * `predict`   — query a running `serve` over the Transport front
 
-use std::io::BufRead as _;
+use std::io::{BufRead as _, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::cli::args::Args;
 use crate::config::{ExperimentConfig, ModelShape, ModelSpec, Placement, StackModel};
 use crate::coordinator::{build_dataset, AgentGrid};
 use crate::error::{Error, Result};
 use crate::graph::Topology;
+use crate::monitor::{Monitor, MonitorOptions, RunInfo};
 use crate::net::{TcpTransport, Transport};
 use crate::nn::resolve_threads;
-use crate::obs::{Tracer, WallClock, DEFAULT_SPAN_CAPACITY};
+use crate::obs::{MetricsRegistry, Tracer, WallClock, DEFAULT_SPAN_CAPACITY};
 use crate::runtime::{make_backend, BackendKind, ComputeBackend};
 use crate::session::{EngineKind, EventWriter, Session};
 use crate::simclock::{method_iter_s, CostModel};
@@ -44,7 +46,11 @@ COMMANDS
              --codec raw|f16|delta (dist data-plane wire codec)
              --compute-threads N (0 = all cores; any N is bit-identical)
              --out CSV --events-out JSONL --trace-out JSON --clock
-             --ckpt-out BASE: save final weights as BASE.json + BASE.bin)
+             --ckpt-out BASE: save final weights as BASE.json + BASE.bin
+             --status-addr HOST:PORT: live status server (GET /metrics
+             Prometheus text, /status JSON, /healthz 200|503)
+             --telemetry-out JSONL --telemetry-period-ms MS (default 500)
+             --stall-timeout-s S: /healthz stall deadline (default 60))
   compare    run the paper's four methods  (same flags; --out-dir DIR)
   worker     host agents for a coordinator (--listen HOST:PORT, port 0 = any;
              announces the bound address on stdout; exits on coordinator
@@ -53,7 +59,13 @@ COMMANDS
              --workers N: spawn N loopback workers, or
              --hosts A:P,B:P,...: dial already-running `sgs worker`s;
              --codec raw|f16|delta: compress the p2p data plane;
-             placement from the config or an even split)
+             placement from the config or an even split;
+             --status-addr/--telemetry-out/--stall-timeout-s as in train,
+             with per-worker liveness folded into /status and /healthz)
+  top        live dashboard over a status server (--connect HOST:PORT
+             from train/launch --status-addr or serve --http;
+             --once: print one frame and exit;
+             --interval-ms MS: poll cadence, default 1000)
   describe   print grid + spectral report  (--s --k --topology --alpha)
   trace      print the Fig. 1 schedule     (--k --iters)
   trace-report  analyze a trace            (sgs trace-report FILE [--json];
@@ -164,10 +176,15 @@ fn apply_workers_flag(
 }
 
 /// Drive a built session to completion: stream events to the optional
-/// JSONL sink, export the optional trace, then print the summary and
-/// write the optional CSV (shared by `train` and `launch`).
+/// JSONL sink (feeding the optional monitor's watchdog per event),
+/// export the optional trace, then print the summary and write the
+/// optional CSV (shared by `train` and `launch`). On a run error the
+/// monitor latches `Stalled` and keeps `/healthz` at 503 for its linger
+/// window before the error propagates, so external probes observe the
+/// failure before process exit.
 fn stream_and_report(
     mut session: Session,
+    monitor: Option<Monitor>,
     out_csv: Option<PathBuf>,
     events_out: Option<PathBuf>,
     trace_out: Option<PathBuf>,
@@ -178,12 +195,21 @@ fn stream_and_report(
         None => None,
     };
     let wall = WallClock::new();
-    session.run_streaming(|ev| {
+    let run = session.run_streaming(|ev| {
+        if let Some(m) = &monitor {
+            m.note_step(ev.t as u64 + 1);
+        }
         if let Some(w) = events.as_mut() {
             w.write(ev)?;
         }
         Ok(())
-    })?;
+    });
+    if let Err(e) = run {
+        if let Some(m) = &monitor {
+            m.fail(&e.to_string());
+        }
+        return Err(e);
+    }
     if let Some(w) = events.as_mut() {
         w.flush()?;
     }
@@ -209,7 +235,51 @@ fn stream_and_report(
     if let Some(path) = events_out {
         println!("wrote events {}", path.display());
     }
+    if let Some(m) = monitor {
+        m.shutdown();
+    }
     Ok(())
+}
+
+/// Parse the monitor flags shared by `train` and `launch`; `None` when
+/// neither `--status-addr` nor `--telemetry-out` was given.
+fn monitor_flags(args: &Args) -> Result<Option<MonitorOptions>> {
+    let status_addr = args.get("status-addr").map(String::from);
+    let telemetry_out = args.get("telemetry-out").map(PathBuf::from);
+    let period_ms = args.get_u64("telemetry-period-ms", 500)?;
+    let stall_timeout_s = args.get_f64("stall-timeout-s", 60.0)?;
+    if status_addr.is_none() && telemetry_out.is_none() {
+        return Ok(None);
+    }
+    let mut opts = MonitorOptions::new("");
+    opts.status_addr = status_addr;
+    opts.telemetry_out = telemetry_out;
+    opts.sample_period = Duration::from_millis(period_ms.max(1));
+    opts.health.stall_timeout_s = stall_timeout_s;
+    Ok(Some(opts))
+}
+
+/// Start the monitor for a built session (train/launch with
+/// `--status-addr`/`--telemetry-out`).
+fn start_monitor(
+    opts: MonitorOptions,
+    engine: &str,
+    session: &Session,
+    workers: usize,
+    metrics: &Arc<MetricsRegistry>,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<Monitor> {
+    let info = RunInfo {
+        engine: engine.to_string(),
+        s: session.cfg().s,
+        k: session.cfg().k,
+        workers,
+    };
+    let monitor = Monitor::start(opts, info, Arc::clone(metrics), tracer.cloned())?;
+    if let Some(addr) = monitor.addr() {
+        println!("status server listening on {addr}");
+    }
+    Ok(monitor)
 }
 
 pub fn cmd_train(args: &Args) -> Result<()> {
@@ -222,6 +292,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let ckpt_out = args.get("ckpt-out").map(PathBuf::from);
     let clock = args.get_bool("clock");
+    let monitor_opts = monitor_flags(args)?;
     args.finish()?;
     apply_workers_flag(&mut cfg, engine, workers)?;
 
@@ -235,16 +306,34 @@ pub fn cmd_train(args: &Args) -> Result<()> {
         engine.as_str(),
         cfg.iters
     );
+    let dist_workers = cfg.placement.as_ref().map(|p| p.workers).unwrap_or(0);
+    let metrics = Arc::new(MetricsRegistry::new());
     let mut builder = Session::builder(cfg)
         .backend(kind)
         .artifacts(artifacts)
         .engine(engine)
-        .calibrate_clock(clock);
-    if trace_out.is_some() {
-        builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+        .calibrate_clock(clock)
+        .metrics(Arc::clone(&metrics));
+    // the status server folds occupancy out of the tracer, so a monitor
+    // implies one even without --trace-out (attach is a pure observer)
+    let tracer = (trace_out.is_some() || monitor_opts.is_some())
+        .then(|| Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+    if let Some(t) = &tracer {
+        builder = builder.tracer(Arc::clone(t));
     }
     let session = builder.build()?;
-    stream_and_report(session, out_csv, events_out, trace_out, ckpt_out)
+    let monitor = match monitor_opts {
+        Some(opts) => Some(start_monitor(
+            opts,
+            engine.as_str(),
+            &session,
+            dist_workers,
+            &metrics,
+            tracer.as_ref(),
+        )?),
+        None => None,
+    };
+    stream_and_report(session, monitor, out_csv, events_out, trace_out, ckpt_out)
 }
 
 /// `sgs worker --listen HOST:PORT`: host module agents for a remote
@@ -276,6 +365,7 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             .collect()
     });
     let workers_flag = args.get_usize("workers", 0)?;
+    let monitor_opts = monitor_flags(args)?;
     args.finish()?;
 
     let n_workers = match (&hosts, workers_flag) {
@@ -355,17 +445,32 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             kind.as_str(),
             cfg.iters
         );
+        let metrics = Arc::new(MetricsRegistry::new());
         let mut builder = Session::builder(cfg)
             .backend(kind)
             .artifacts(artifacts)
             .engine(EngineKind::Dist)
             .dist_workers(transports)
-            .calibrate_clock(clock);
-        if trace_out.is_some() {
-            builder = builder.tracer(Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+            .calibrate_clock(clock)
+            .metrics(Arc::clone(&metrics));
+        let tracer = (trace_out.is_some() || monitor_opts.is_some())
+            .then(|| Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY)));
+        if let Some(t) = &tracer {
+            builder = builder.tracer(Arc::clone(t));
         }
         let session = builder.build()?;
-        stream_and_report(session, out_csv, events_out, trace_out, ckpt_out)
+        let monitor = match monitor_opts {
+            Some(opts) => Some(start_monitor(
+                opts,
+                "dist",
+                &session,
+                n_workers,
+                &metrics,
+                tracer.as_ref(),
+            )?),
+            None => None,
+        };
+        stream_and_report(session, monitor, out_csv, events_out, trace_out, ckpt_out)
     });
 
     // the engine's teardown asked the workers to exit; reap them (kill
@@ -658,6 +763,56 @@ pub fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sgs top --connect HOST:PORT [--once] [--interval-ms MS]`: terminal
+/// dashboard over a status server — a training run's `--status-addr` or
+/// a serve instance's `--http`. Polls `GET /status` and renders
+/// occupancy bars, staleness quantiles, stash hit rate, net rates, and
+/// worker liveness (or QPS/latency for a serve target).
+pub fn cmd_top(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .map(String::from)
+        .ok_or_else(|| Error::Cli("top needs --connect HOST:PORT (a --status-addr)".into()))?;
+    let once = args.get_bool("once");
+    let interval_ms = args.get_u64("interval-ms", 1000)?.max(50);
+    args.finish()?;
+
+    let timeout = Duration::from_secs(2);
+    let clock = WallClock::new();
+    let mut prev: Option<(crate::util::json::Json, f64)> = None;
+    let flag = crate::net::worker::shutdown_flag();
+    crate::net::worker::install_signal_handlers();
+    loop {
+        let (code, body) = crate::serve::http::http_get(&addr, "/status", timeout)?;
+        if code != 200 {
+            return Err(Error::Net(format!("{addr} /status returned {code}: {body}")));
+        }
+        let doc = crate::util::json::Json::parse(&body)?;
+        let now = clock.elapsed_s();
+        let frame = crate::monitor::render_status(
+            &doc,
+            prev.as_ref().map(|(d, t)| (d, now - t)),
+        );
+        if once {
+            print!("{frame}");
+            return Ok(());
+        }
+        // clear screen + home, then draw the frame
+        print!("\x1b[2J\x1b[H{frame}");
+        std::io::stdout().flush()?;
+        prev = Some((doc, now));
+        let mut waited = Duration::ZERO;
+        let slice = Duration::from_millis(50);
+        while waited < Duration::from_millis(interval_ms) {
+            if flag.load(std::sync::atomic::Ordering::SeqCst) {
+                return Ok(());
+            }
+            std::thread::sleep(slice);
+            waited += slice;
+        }
+    }
+}
+
 pub fn dispatch(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
@@ -671,6 +826,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
         "predict" => cmd_predict(&args),
+        "top" => cmd_top(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())

@@ -31,6 +31,7 @@ pub mod error;
 pub mod graph;
 pub mod linalg;
 pub mod metrics;
+pub mod monitor;
 pub mod net;
 pub mod nn;
 pub mod obs;

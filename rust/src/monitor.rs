@@ -1,0 +1,896 @@
+//! Training-side live telemetry plane: the status HTTP server behind
+//! `sgs train|launch --status-addr`, the periodic telemetry sampler
+//! behind `--telemetry-out`, and the health watchdog that both feed.
+//!
+//! A [`Monitor`] owns three things:
+//!
+//! * **Status server** — an HTTP/1.1 front (same request/response
+//!   primitives as `sgs serve`, see [`crate::serve::http`]) exposing
+//!   - `GET /metrics` — the training [`MetricsRegistry`] in Prometheus
+//!     text format via [`crate::obs::prom::encode`], byte-identical to
+//!     the serve plane's exposition of the same registry state;
+//!   - `GET /status` — a `sgs-status/v1` JSON document (role `train`):
+//!     iteration, loss, δ, health verdict, per-module staleness
+//!     quantiles, per-module phase occupancy folded from the tracer,
+//!     stash hit rate, wire totals, and per-worker liveness;
+//!   - `GET /healthz` — the watchdog verdict as 200 (healthy) or
+//!     503 (degraded/stalled) with a JSON body naming the reason.
+//! * **Telemetry sampler** — a [`TelemetrySampler`] ticked on a fixed
+//!   cadence; each snapshot optionally appends one `sgs-telemetry/v1`
+//!   JSONL line to `--telemetry-out`. The same tick re-evaluates the
+//!   watchdog so state transitions are recorded even when nobody polls.
+//! * **Watchdog** — [`Watchdog`]: the run loop calls
+//!   [`Monitor::note_step`] per iteration (two relaxed stores — safe in
+//!   the allocation-free steady state) and [`Monitor::fail`] on a
+//!   terminal error, which latches `Stalled` and keeps serving 503 for a
+//!   linger window so external probes observe the failure before the
+//!   process exits (the `monitor-smoke` CI job pins this).
+//!
+//! The monitor is a **pure observer**: with `--status-addr` attached or
+//! not, event streams and final parameters are bitwise identical
+//! (`rust/tests/obs_purity.rs`). Everything here runs on monitor
+//! threads; the only training-loop touchpoint is `note_step`.
+
+use std::fmt::Write as _;
+use std::io::{BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::net::worker::shutdown_flag;
+use crate::obs::{
+    HealthConfig, HealthState, Histogram, MetricsRegistry, TelemetrySampler, Tracer, WallClock,
+    Watchdog,
+};
+use crate::serve::http::{
+    read_request, write_response, write_response_typed, HttpRequest, PROMETHEUS_CONTENT_TYPE,
+};
+use crate::util::json::Json;
+
+/// Poll cadence for the nonblocking accept loop and interruptible sleeps.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Configuration for [`Monitor::start`].
+#[derive(Debug, Clone)]
+pub struct MonitorOptions {
+    /// `HOST:PORT` to bind the status server on (`:0` for ephemeral);
+    /// `None` runs the sampler/watchdog without an HTTP front
+    /// (`--telemetry-out` alone).
+    pub status_addr: Option<String>,
+    /// Append one `sgs-telemetry/v1` JSONL line per sample tick here.
+    pub telemetry_out: Option<PathBuf>,
+    /// Telemetry sampling cadence.
+    pub sample_period: Duration,
+    /// Snapshots retained in the in-memory ring.
+    pub ring_capacity: usize,
+    /// Watchdog thresholds.
+    pub health: HealthConfig,
+    /// How long [`Monitor::fail`] keeps serving 503 before returning, so
+    /// probes can observe the failure before process exit.
+    pub fail_linger: Duration,
+}
+
+impl MonitorOptions {
+    pub fn new(status_addr: impl Into<String>) -> MonitorOptions {
+        MonitorOptions {
+            status_addr: Some(status_addr.into()),
+            telemetry_out: None,
+            sample_period: Duration::from_millis(500),
+            ring_capacity: 240,
+            health: HealthConfig::default(),
+            fail_linger: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Static facts about the run the status document reports.
+#[derive(Debug, Clone)]
+pub struct RunInfo {
+    /// Engine name (`sim`, `threaded`, `dist`).
+    pub engine: String,
+    /// Data-parallel groups.
+    pub s: usize,
+    /// Pipeline modules per group.
+    pub k: usize,
+    /// Dist worker processes feeding `w{i}_*` metrics (0 in-process).
+    pub workers: usize,
+}
+
+/// State shared between the run loop, the accept loop, per-connection
+/// handler threads, and the sampler thread.
+struct Shared {
+    metrics: Arc<MetricsRegistry>,
+    tracer: Option<Arc<Tracer>>,
+    watchdog: Watchdog,
+    clock: WallClock,
+    info: RunInfo,
+    stop: AtomicBool,
+}
+
+/// See the module docs. Dropping (or [`Monitor::shutdown`]) stops the
+/// server and sampler threads and joins them.
+pub struct Monitor {
+    shared: Arc<Shared>,
+    addr: Option<SocketAddr>,
+    threads: Vec<JoinHandle<()>>,
+    fail_linger: Duration,
+}
+
+impl Monitor {
+    /// Bind the status server (when an address is configured) and spawn
+    /// the accept + sampler threads.
+    pub fn start(
+        opts: MonitorOptions,
+        info: RunInfo,
+        metrics: Arc<MetricsRegistry>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Result<Monitor> {
+        let listener = match &opts.status_addr {
+            Some(a) => Some(
+                TcpListener::bind(a)
+                    .map_err(|e| Error::Net(format!("status server bind {a}: {e}")))?,
+            ),
+            None => None,
+        };
+        let addr = match &listener {
+            Some(l) => Some(
+                l.local_addr()
+                    .map_err(|e| Error::Net(format!("status server local addr: {e}")))?,
+            ),
+            None => None,
+        };
+        let telemetry_file = match &opts.telemetry_out {
+            Some(path) => {
+                let f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| Error::Net(format!("open {}: {e}", path.display())))?;
+                Some(f)
+            }
+            None => None,
+        };
+        let shared = Arc::new(Shared {
+            metrics,
+            tracer,
+            watchdog: Watchdog::new(opts.health),
+            clock: WallClock::new(),
+            info,
+            stop: AtomicBool::new(false),
+        });
+        let mut threads = Vec::with_capacity(2);
+        if let Some(listener) = listener {
+            let s = Arc::clone(&shared);
+            let t = std::thread::Builder::new()
+                .name("sgs-status".into())
+                .spawn(move || accept_loop(listener, &s))
+                .map_err(|e| Error::Net(format!("spawn status server: {e}")))?;
+            threads.push(t);
+        }
+        {
+            let s = Arc::clone(&shared);
+            let period = opts.sample_period.max(Duration::from_millis(1));
+            let capacity = opts.ring_capacity.max(1);
+            let mut out = telemetry_file;
+            let t = std::thread::Builder::new()
+                .name("sgs-telemetry".into())
+                .spawn(move || {
+                    let mut sampler = TelemetrySampler::new(Arc::clone(&s.metrics), capacity);
+                    loop {
+                        sampler.sample();
+                        // keep transition events flowing even when nobody
+                        // polls /healthz
+                        let _ = s.watchdog.evaluate(&s.metrics, s.info.workers);
+                        if let Some(f) = out.as_mut() {
+                            if let Some(line) = sampler.latest_jsonl() {
+                                let _ = writeln!(f, "{line}");
+                            }
+                        }
+                        if !sleep_unless_stopped(&s.stop, period) {
+                            return;
+                        }
+                    }
+                })
+                .map_err(|e| Error::Net(format!("spawn telemetry sampler: {e}")))?;
+            threads.push(t);
+        }
+        Ok(Monitor { shared, addr, threads, fail_linger: opts.fail_linger })
+    }
+
+    /// The bound status-server address (resolves `:0` to the actual
+    /// ephemeral port); `None` when running sampler-only.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    /// The hosted watchdog (tests and the event hook reach through this).
+    pub fn watchdog(&self) -> &Watchdog {
+        &self.shared.watchdog
+    }
+
+    /// Record one completed iteration. Allocation-free; called from the
+    /// streaming event hook.
+    pub fn note_step(&self, iter: u64) {
+        self.shared.watchdog.note_step(iter);
+    }
+
+    /// Latch a terminal failure, then keep serving `/healthz` = 503 for
+    /// the configured linger window before returning, so an external
+    /// probe can observe the stall before the process exits.
+    pub fn fail(&self, reason: &str) {
+        self.shared.watchdog.mark_stalled(reason);
+        let _ = self.shared.watchdog.evaluate(&self.shared.metrics, self.shared.info.workers);
+        if !self.fail_linger.is_zero() {
+            eprintln!(
+                "sgs monitor: run failed — holding /healthz at 503 for {:.1}s before exit",
+                self.fail_linger.as_secs_f64()
+            );
+            std::thread::sleep(self.fail_linger);
+        }
+    }
+
+    /// Stop and join the server + sampler threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Sleep `total` in [`IDLE_POLL`] slices; false once `stop` is set or the
+/// process shutdown flag trips.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) -> bool {
+    let flag = shutdown_flag();
+    let mut remaining = total;
+    loop {
+        if stop.load(Ordering::Relaxed) || flag.load(Ordering::SeqCst) {
+            return false;
+        }
+        if remaining.is_zero() {
+            return true;
+        }
+        let slice = remaining.min(IDLE_POLL);
+        std::thread::sleep(slice);
+        remaining -= slice;
+    }
+}
+
+/// Accept connections until stopped; each gets a detached handler thread
+/// (the serve front's pattern).
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let flag = shutdown_flag();
+    while !shared.stop.load(Ordering::Relaxed) && !flag.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let s = Arc::clone(shared);
+                let spawned = std::thread::Builder::new()
+                    .name("sgs-status-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &s);
+                    });
+                if spawned.is_err() {
+                    continue;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(IDLE_POLL);
+            }
+            Err(_) => std::thread::sleep(IDLE_POLL),
+        }
+    }
+}
+
+/// One keep-alive connection: serve requests until EOF or
+/// `Connection: close`.
+fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+    let read_half = stream
+        .try_clone()
+        .map_err(|e| Error::Net(format!("http clone stream: {e}")))?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let mut j = Json::obj();
+                j.set("error", format!("{e}"));
+                write_response(&mut writer, 400, "Bad Request", &j.to_string_compact(), false)?;
+                return Ok(());
+            }
+        };
+        let keep_alive = req.keep_alive;
+        let (status, reason, content_type, body) = route(&req, shared);
+        write_response_typed(&mut writer, status, reason, content_type, &body, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+/// Dispatch one request: `(status, reason, content type, body)`.
+fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, &'static str, String) {
+    const JSON: &str = "application/json";
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => {
+            (200, "OK", PROMETHEUS_CONTENT_TYPE, crate::obs::prom::encode(&shared.metrics))
+        }
+        ("GET", "/healthz") => {
+            let (state, reason) = shared.watchdog.evaluate(&shared.metrics, shared.info.workers);
+            let mut j = Json::obj();
+            j.set("state", state.as_str())
+                .set("reason", reason)
+                .set("iter", shared.watchdog.last_iter());
+            let (code, why) = match state {
+                HealthState::Healthy => (200, "OK"),
+                HealthState::Degraded | HealthState::Stalled => (503, "Service Unavailable"),
+            };
+            (code, why, JSON, j.to_string_compact())
+        }
+        ("GET", "/status") => (200, "OK", JSON, status_json(shared)),
+        _ => {
+            let mut j = Json::obj();
+            j.set("error", format!("no route for {} {}", req.method, req.path));
+            (404, "Not Found", JSON, j.to_string_compact())
+        }
+    }
+}
+
+/// A finite f64 as JSON, `null` otherwise (JSON has no NaN/Inf).
+fn finite_json(v: Option<f64>) -> Json {
+    match v {
+        Some(v) if v.is_finite() => Json::from(v),
+        _ => Json::Null,
+    }
+}
+
+fn quantile_json(h: &Histogram, q: f64) -> Json {
+    finite_json(h.quantile(q))
+}
+
+/// `GET /status` on a training run: the `sgs-status/v1` document (role
+/// `train`) that `sgs top` renders. All registry lookups are
+/// non-creating so a poll racing engine startup can't register
+/// instruments first.
+fn status_json(shared: &Shared) -> String {
+    let m = &shared.metrics;
+    let info = &shared.info;
+    let counter = |name: &str| m.find_counter(name).map(|c| c.get()).unwrap_or(0);
+    let gauge = |name: &str| finite_json(m.find_gauge(name).map(|g| g.get()));
+
+    let (state, reason) = shared.watchdog.evaluate(m, info.workers);
+    let mut health = Json::obj();
+    health
+        .set("state", state.as_str())
+        .set("reason", reason)
+        .set("http_status", u64::from(state.http_status()));
+
+    // per-module staleness quantiles from the shared fixed-bucket
+    // estimator — never raw bucket dumps
+    let mut staleness = Json::obj();
+    for k in 0..info.k {
+        if let Some(h) = m.find_histogram(&format!("staleness_mod{k}")) {
+            let mut hj = Json::obj();
+            hj.set("count", h.count())
+                .set("p50", quantile_json(&h, 0.50))
+                .set("p95", quantile_json(&h, 0.95))
+                .set("p99", quantile_json(&h, 0.99));
+            staleness.set(&format!("mod{k}"), hj);
+        }
+    }
+
+    let stash_hits = counter("stash_hit_total");
+    let stash_misses = counter("stash_miss_total");
+    let mut stash = Json::obj();
+    stash
+        .set("hits", stash_hits)
+        .set("misses", stash_misses)
+        .set(
+            "hit_rate",
+            if stash_hits + stash_misses > 0 {
+                Json::from(stash_hits as f64 / (stash_hits + stash_misses) as f64)
+            } else {
+                Json::Null
+            },
+        );
+
+    let mut tx = 0u64;
+    let mut rx = 0u64;
+    for k in 0..info.k {
+        tx += counter(&format!("net_bytes_tx_mod{k}"));
+        rx += counter(&format!("net_bytes_rx_mod{k}"));
+    }
+    let mut net = Json::obj();
+    net.set("tx_bytes", tx).set("rx_bytes", rx);
+
+    let mut worker_status = Vec::with_capacity(info.workers);
+    for i in 0..info.workers {
+        let steps = counter(&format!("w{i}_steps_total"));
+        let mut wj = Json::obj();
+        wj.set("id", i)
+            .set("steps", steps)
+            .set("live", steps > 0)
+            .set("step_wall_s", gauge(&format!("w{i}_step_wall_s")))
+            .set("mailbox_act", gauge(&format!("w{i}_mailbox_act_depth")))
+            .set("mailbox_grad", gauge(&format!("w{i}_mailbox_grad_depth")));
+        worker_status.push(wj);
+    }
+
+    let mut j = Json::obj();
+    j.set("schema", "sgs-status/v1")
+        .set("role", "train")
+        .set("engine", info.engine.as_str())
+        .set("s", info.s)
+        .set("k", info.k)
+        .set("workers", info.workers)
+        .set("uptime_s", shared.clock.elapsed_s())
+        .set("iter", counter("iters_total"))
+        .set("train_loss", gauge("train_loss_last"))
+        .set("delta", gauge("delta_last"))
+        .set("correction_max", gauge("correction_max_last"))
+        .set("spans_dropped_total", counter("spans_dropped_total"))
+        .set("health", health)
+        .set("staleness", staleness)
+        .set("stash", stash)
+        .set("net", net)
+        .set("occupancy", occupancy_json(shared))
+        .set("worker_status", Json::Arr(worker_status));
+    j.to_string_compact()
+}
+
+/// Fold the tracer's spans into per-module phase occupancy: for each
+/// module `k`, the fraction of that module's recorded busy time spent in
+/// each phase. `null` when no tracer is attached.
+fn occupancy_json(shared: &Shared) -> Json {
+    let Some(tracer) = &shared.tracer else {
+        return Json::Null;
+    };
+    let k_modules = shared.info.k.max(1);
+    // [module][phase] microsecond totals
+    let mut per_mod = vec![[0u64; 13]; k_modules];
+    for (_pid, span) in tracer.snapshot() {
+        let k = span.k as usize;
+        if k < k_modules {
+            per_mod[k][span.phase as usize] += span.dur_us;
+        }
+    }
+    let mut out = Json::obj();
+    for (k, phases) in per_mod.iter().enumerate() {
+        let total: u64 = phases.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        let mut mj = Json::obj();
+        mj.set("busy_us", total);
+        for phase in crate::obs::Phase::all() {
+            let us = phases[phase as usize];
+            if us > 0 {
+                mj.set(phase.name(), us as f64 / total as f64);
+            }
+        }
+        out.set(&format!("mod{k}"), mj);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// `sgs top` rendering: turn a `sgs-status/v1` document into a terminal
+// dashboard frame. Pure string → string so it unit-tests on canned JSON.
+// ---------------------------------------------------------------------
+
+/// Render one dashboard frame from a `/status` document. `prev` is the
+/// previous document plus the seconds elapsed since it was fetched,
+/// enabling rate panels (bytes/s, iters/s); `--once` passes `None`.
+pub fn render_status(doc: &Json, prev: Option<(&Json, f64)>) -> String {
+    match doc.opt("role").and_then(|r| r.as_str().ok()) {
+        Some("serve") => render_serve(doc),
+        _ => render_train(doc, prev),
+    }
+}
+
+fn opt_f64(doc: &Json, key: &str) -> Option<f64> {
+    doc.opt(key).and_then(|v| v.as_f64().ok())
+}
+
+fn opt_u64(doc: &Json, key: &str) -> u64 {
+    doc.opt(key).and_then(|v| v.as_f64().ok()).map(|v| v.max(0.0) as u64).unwrap_or(0)
+}
+
+fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b.max(0.0);
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{:.0} {}", v, UNITS[unit])
+    } else {
+        format!("{:.1} {}", v, UNITS[unit])
+    }
+}
+
+fn bar(frac: f64, width: usize) -> String {
+    let frac = frac.clamp(0.0, 1.0);
+    let filled = (frac * width as f64).round() as usize;
+    let mut s = String::with_capacity(width + 2);
+    s.push('[');
+    for i in 0..width {
+        s.push(if i < filled { '#' } else { '.' });
+    }
+    s.push(']');
+    s
+}
+
+fn fmt_quantiles(hj: &Json) -> String {
+    let q = |k: &str| match hj.opt(k).and_then(|v| v.as_f64().ok()) {
+        Some(v) => format!("{v:.1}"),
+        None => "-".into(),
+    };
+    format!("{}/{}/{}", q("p50"), q("p95"), q("p99"))
+}
+
+fn render_train(doc: &Json, prev: Option<(&Json, f64)>) -> String {
+    let mut out = String::with_capacity(1024);
+    let engine = doc.opt("engine").and_then(|v| v.as_str().ok()).unwrap_or("?");
+    let (state, reason) = match doc.opt("health") {
+        Some(h) => (
+            h.opt("state").and_then(|v| v.as_str().ok()).unwrap_or("?").to_string(),
+            h.opt("reason").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
+        ),
+        None => ("?".into(), String::new()),
+    };
+    let _ = writeln!(
+        out,
+        "sgs top — train ({engine}) s={} k={} workers={}   up {:.1}s   health: {} ({reason})",
+        opt_u64(doc, "s"),
+        opt_u64(doc, "k"),
+        opt_u64(doc, "workers"),
+        opt_f64(doc, "uptime_s").unwrap_or(0.0),
+        state.to_uppercase(),
+    );
+    let iter = opt_u64(doc, "iter");
+    let rate = prev.and_then(|(p, dt)| {
+        let di = iter.saturating_sub(opt_u64(p, "iter"));
+        (dt > 0.0).then(|| di as f64 / dt)
+    });
+    let loss = match opt_f64(doc, "train_loss") {
+        Some(v) => format!("{v:.6}"),
+        None => "-".into(),
+    };
+    let delta = match opt_f64(doc, "delta") {
+        Some(v) => format!("{v:.3e}"),
+        None => "-".into(),
+    };
+    let _ = write!(out, "iter {iter}");
+    if let Some(r) = rate {
+        let _ = write!(out, " ({r:.1}/s)");
+    }
+    let _ = writeln!(
+        out,
+        "   loss {loss}   δ {delta}   spans_dropped {}",
+        opt_u64(doc, "spans_dropped_total")
+    );
+
+    if let Some(net) = doc.opt("net") {
+        let tx = opt_u64(net, "tx_bytes");
+        let rx = opt_u64(net, "rx_bytes");
+        let _ = write!(out, "net {} tx / {} rx", fmt_bytes(tx as f64), fmt_bytes(rx as f64));
+        if let Some((p, dt)) = prev {
+            if dt > 0.0 {
+                if let Some(pnet) = p.opt("net") {
+                    let dtx = tx.saturating_sub(opt_u64(pnet, "tx_bytes")) as f64 / dt;
+                    let drx = rx.saturating_sub(opt_u64(pnet, "rx_bytes")) as f64 / dt;
+                    let _ = write!(out, " ({}/s tx, {}/s rx)", fmt_bytes(dtx), fmt_bytes(drx));
+                }
+            }
+        }
+        out.push('\n');
+    }
+    if let Some(stash) = doc.opt("stash") {
+        if let Some(rate) = stash.opt("hit_rate").and_then(|v| v.as_f64().ok()) {
+            let _ = writeln!(
+                out,
+                "stash hit rate {:.1}% ({} hits / {} misses)",
+                rate * 100.0,
+                opt_u64(stash, "hits"),
+                opt_u64(stash, "misses"),
+            );
+        }
+    }
+
+    if let Some(Json::Obj(occ)) = doc.opt("occupancy") {
+        if !occ.is_empty() {
+            let _ = writeln!(out, "module occupancy:");
+            for (module, mj) in occ {
+                let _ = write!(out, "  {module:<6}");
+                for phase in ["fwd", "bwd", "opt", "gossip", "stash_wait", "wire_rx"] {
+                    if let Some(frac) = mj.opt(phase).and_then(|v| v.as_f64().ok()) {
+                        let _ = write!(out, " {phase} {} {:>5.1}%", bar(frac, 10), frac * 100.0);
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+
+    if let Some(Json::Obj(st)) = doc.opt("staleness") {
+        if !st.is_empty() {
+            let _ = writeln!(out, "staleness p50/p95/p99:");
+            for (module, hj) in st {
+                let _ = writeln!(
+                    out,
+                    "  {module:<6} {}  (n={})",
+                    fmt_quantiles(hj),
+                    opt_u64(hj, "count")
+                );
+            }
+        }
+    }
+
+    if let Some(ws) = doc.opt("worker_status").and_then(|v| v.as_arr().ok()) {
+        if !ws.is_empty() {
+            let _ = writeln!(out, "workers:");
+            for w in ws {
+                let live =
+                    if w.opt("live").and_then(|v| v.as_bool().ok()).unwrap_or(false) {
+                        "live"
+                    } else {
+                        "idle"
+                    };
+                let step = match opt_f64(w, "step_wall_s") {
+                    Some(v) => format!("{v:.3}s"),
+                    None => "-".into(),
+                };
+                let _ = writeln!(
+                    out,
+                    "  w{} steps {} step {} mailbox act {} grad {}  {live}",
+                    opt_u64(w, "id"),
+                    opt_u64(w, "steps"),
+                    step,
+                    opt_u64(w, "mailbox_act"),
+                    opt_u64(w, "mailbox_grad"),
+                );
+            }
+        }
+    }
+    out
+}
+
+fn render_serve(doc: &Json) -> String {
+    let mut out = String::with_capacity(256);
+    let _ = writeln!(
+        out,
+        "sgs top — serve   up {:.1}s   qps {:.1}",
+        opt_f64(doc, "uptime_s").unwrap_or(0.0),
+        opt_f64(doc, "qps").unwrap_or(0.0),
+    );
+    let _ = writeln!(
+        out,
+        "requests {}   errors {}   batches {}",
+        opt_u64(doc, "requests_total"),
+        opt_u64(doc, "errors_total"),
+        opt_u64(doc, "batches_total"),
+    );
+    if let Some(lat) = doc.opt("latency") {
+        let q = |k: &str| match lat.opt(k).and_then(|v| v.as_f64().ok()) {
+            Some(v) => format!("{v:.0}"),
+            None => "-".into(),
+        };
+        let _ = writeln!(
+            out,
+            "latency us p50/p95/p99 {}/{}/{}   mean {:.0}   (n={})",
+            q("p50_us"),
+            q("p95_us"),
+            q("p99_us"),
+            opt_f64(lat, "mean_us").unwrap_or(0.0),
+            opt_u64(lat, "count"),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::http::http_get;
+
+    fn info() -> RunInfo {
+        RunInfo { engine: "sim".into(), s: 2, k: 2, workers: 2 }
+    }
+
+    fn quick_opts() -> MonitorOptions {
+        let mut o = MonitorOptions::new("127.0.0.1:0");
+        o.sample_period = Duration::from_millis(5);
+        o.fail_linger = Duration::ZERO;
+        o
+    }
+
+    fn seeded_registry() -> Arc<MetricsRegistry> {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("iters_total").add(42);
+        reg.gauge("train_loss_last").set(0.75);
+        reg.gauge("delta_last").set(3.5e-3);
+        let h = reg.histogram("staleness_mod0", &[0.0, 1.0, 2.0, 3.0]);
+        for v in [1.0, 1.0, 2.0] {
+            h.observe(v);
+        }
+        reg.counter("net_bytes_tx_mod0").add(1024);
+        reg.counter("net_bytes_rx_mod0").add(2048);
+        reg.counter("w0_steps_total").add(42);
+        reg.gauge("w0_step_wall_s").set(0.012);
+        reg
+    }
+
+    #[test]
+    fn serves_metrics_status_and_healthz_then_fail_flips_503() {
+        let reg = seeded_registry();
+        let mon = Monitor::start(quick_opts(), info(), Arc::clone(&reg), None).unwrap();
+        let addr = mon.addr().expect("server bound").to_string();
+        let timeout = Duration::from_secs(5);
+        mon.note_step(42);
+
+        let (code, body) = http_get(&addr, "/metrics", timeout).unwrap();
+        assert_eq!(code, 200);
+        // byte-identical to the shared encoder — the serve front asserts
+        // the same equality, so the two planes agree end to end
+        assert_eq!(body, crate::obs::prom::encode(&reg));
+        assert!(body.contains("# TYPE iters_total counter"), "{body}");
+
+        let (code, body) = http_get(&addr, "/status", timeout).unwrap();
+        assert_eq!(code, 200);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "sgs-status/v1");
+        assert_eq!(doc.get("role").unwrap().as_str().unwrap(), "train");
+        assert_eq!(doc.get("iter").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(
+            doc.get("health").unwrap().get("state").unwrap().as_str().unwrap(),
+            "healthy"
+        );
+        let st = doc.get("staleness").unwrap().get("mod0").unwrap();
+        assert_eq!(st.get("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(st.get("p50").unwrap().as_f64().unwrap(), 1.0);
+        let w0 = &doc.get("worker_status").unwrap().as_arr().unwrap()[0];
+        assert!(w0.get("live").unwrap().as_bool().unwrap());
+
+        let (code, body) = http_get(&addr, "/healthz", timeout).unwrap();
+        assert_eq!(code, 200, "{body}");
+
+        let (code, _) = http_get(&addr, "/nope", timeout).unwrap();
+        assert_eq!(code, 404);
+
+        mon.fail("worker 1 connection reset");
+        let (code, body) = http_get(&addr, "/healthz", timeout).unwrap();
+        assert_eq!(code, 503, "{body}");
+        assert!(body.contains("worker 1 connection reset"), "{body}");
+        mon.shutdown();
+    }
+
+    #[test]
+    fn telemetry_out_appends_parsable_jsonl() {
+        let dir = std::env::temp_dir().join(format!("sgs-mon-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("telemetry.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let reg = seeded_registry();
+        let mut opts = quick_opts();
+        opts.telemetry_out = Some(path.clone());
+        let mon = Monitor::start(opts, info(), reg, None).unwrap();
+        // a few sampler ticks at 5ms cadence
+        std::thread::sleep(Duration::from_millis(60));
+        mon.shutdown();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty(), "sampler wrote no telemetry lines");
+        for line in &lines {
+            let doc = Json::parse(line).expect("telemetry line parses");
+            assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "sgs-telemetry/v1");
+            assert_eq!(
+                doc.get("counters").unwrap().get("iters_total").unwrap().as_usize().unwrap(),
+                42
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn occupancy_folds_tracer_spans_per_module() {
+        use crate::obs::{Phase, Span, Tracer};
+        let span = |phase: Phase, k: u16, start_us: u64, dur_us: u64| Span {
+            track: k,
+            phase,
+            s: 0,
+            k,
+            t: 0,
+            start_us,
+            dur_us,
+        };
+        let tracer = Arc::new(Tracer::new(1024));
+        // module 0: 30us fwd + 10us bwd; module 1: 20us bwd
+        tracer.record(span(Phase::Fwd, 0, 0, 30));
+        tracer.record(span(Phase::Bwd, 0, 30, 10));
+        tracer.record(span(Phase::Bwd, 1, 0, 20));
+        let reg = Arc::new(MetricsRegistry::new());
+        let mon =
+            Monitor::start(quick_opts(), info(), Arc::clone(&reg), Some(tracer)).unwrap();
+        let (code, body) =
+            http_get(&mon.addr().expect("server bound").to_string(), "/status", Duration::from_secs(5))
+                .unwrap();
+        assert_eq!(code, 200);
+        let doc = Json::parse(&body).unwrap();
+        let occ = doc.get("occupancy").unwrap();
+        let m0 = occ.get("mod0").unwrap();
+        assert_eq!(m0.get("busy_us").unwrap().as_usize().unwrap(), 40);
+        assert!((m0.get("fwd").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        assert!((m0.get("bwd").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        let m1 = occ.get("mod1").unwrap();
+        assert!((m1.get("bwd").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        mon.shutdown();
+    }
+
+    #[test]
+    fn render_train_and_serve_frames() {
+        let status = r#"{"schema":"sgs-status/v1","role":"train","engine":"dist",
+            "s":2,"k":2,"workers":2,"uptime_s":12.5,"iter":480,"train_loss":0.843,
+            "delta":0.0032,"spans_dropped_total":0,
+            "health":{"state":"healthy","reason":"ok","http_status":200},
+            "staleness":{"mod0":{"count":480,"p50":2.0,"p95":3.0,"p99":3.0}},
+            "stash":{"hits":900,"misses":12,"hit_rate":0.9868},
+            "net":{"tx_bytes":1048576,"rx_bytes":2097152},
+            "occupancy":{"mod0":{"busy_us":1000,"fwd":0.5,"bwd":0.3,"gossip":0.2}},
+            "worker_status":[{"id":0,"steps":480,"live":true,"step_wall_s":0.012,
+            "mailbox_act":1,"mailbox_grad":0}]}"#;
+        let doc = Json::parse(status).unwrap();
+        let text = render_status(&doc, None);
+        assert!(text.contains("health: HEALTHY"), "{text}");
+        assert!(text.contains("iter 480"), "{text}");
+        assert!(text.contains("mod0"), "{text}");
+        assert!(text.contains("stash hit rate 98.7%"), "{text}");
+        assert!(text.contains("w0 steps 480"), "{text}");
+        // rates appear once a previous frame exists
+        let prev = Json::parse(&status.replace("\"iter\":480", "\"iter\":380")).unwrap();
+        let text = render_status(&doc, Some((&prev, 2.0)));
+        assert!(text.contains("(50.0/s)"), "{text}");
+
+        let serve = r#"{"schema":"sgs-status/v1","role":"serve","uptime_s":3.0,
+            "requests_total":100,"errors_total":1,"batches_total":20,"qps":33.0,
+            "latency":{"count":100,"mean_us":250.0,"p50_us":200.0,"p95_us":400.0,
+            "p99_us":900.0}}"#;
+        let doc = Json::parse(serve).unwrap();
+        let text = render_status(&doc, None);
+        assert!(text.contains("sgs top — serve"), "{text}");
+        assert!(text.contains("200/400/900"), "{text}");
+    }
+
+    #[test]
+    fn bar_and_bytes_formatting() {
+        assert_eq!(bar(0.5, 10), "[#####.....]");
+        assert_eq!(bar(0.0, 4), "[....]");
+        assert_eq!(bar(2.0, 4), "[####]");
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(1536.0), "1.5 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0), "3.0 MiB");
+    }
+}

@@ -846,6 +846,7 @@ impl WorkerRuntime {
             self.obs.reset_clock();
             self.obs_anchored = true;
         }
+        let step_open_us = self.obs.now_us();
 
         // ---- forward phase (ascending s, k) ----
         for i in 0..self.agents.len() {
@@ -941,6 +942,14 @@ impl WorkerRuntime {
         self.obs.sample("steps_total", METRIC_COUNTER_ADD, 1.0);
         self.obs.sample("mailbox_act_depth", METRIC_GAUGE_SET, self.pending_act.len() as f64);
         self.obs.sample("mailbox_grad_depth", METRIC_GAUGE_SET, self.pending_grad.len() as f64);
+        // wall time of this iteration on this worker — lands at the
+        // coordinator as `w{id}_step_wall_s`, the health watchdog's
+        // straggler signal (slowest vs median across workers)
+        self.obs.sample(
+            "step_wall_s",
+            METRIC_GAUGE_SET,
+            self.obs.now_us().saturating_sub(step_open_us) as f64 / 1e6,
+        );
         let (spans, samples) = self.obs.drain();
         links
             .coord

@@ -1,0 +1,309 @@
+//! Health/stall watchdog: turns live telemetry into a three-state signal.
+//!
+//! The [`Watchdog`] is a pure observer on the training side: the event
+//! hook calls [`Watchdog::note_step`] (two relaxed atomic stores — safe
+//! in the allocation-free steady state), and failure paths call
+//! [`Watchdog::mark_stalled`] with a sticky reason. The status server
+//! calls [`Watchdog::evaluate`] on demand to fold the registry's signals
+//! into a [`HealthState`]:
+//!
+//! * `Stalled` — a sticky failure was recorded (engine error, worker
+//!   loss), or no step completed within the stall deadline. `/healthz`
+//!   serves 503.
+//! * `Degraded` — some worker's last step wall time exceeds
+//!   `straggler_factor` × the median across workers, or the last
+//!   correction norm blew past `correction_limit` (the divergence signal
+//!   DC-S3GD monitors online). `/healthz` serves 503.
+//! * `Healthy` — everything else. `/healthz` serves 200.
+//!
+//! State transitions append a typed [`HealthEvent`] to a bounded ring and
+//! emit one warning line on stderr — groundwork for the future
+//! `sgs daemon` / chaos suite, which will consume these events instead of
+//! polling text.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::clock::WallClock;
+use super::metrics::MetricsRegistry;
+
+/// Tri-state health verdict, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    Degraded,
+    Stalled,
+}
+
+impl HealthState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Stalled => "stalled",
+        }
+    }
+
+    /// HTTP status `/healthz` maps this state to.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            HealthState::Healthy => 200,
+            HealthState::Degraded | HealthState::Stalled => 503,
+        }
+    }
+}
+
+/// Thresholds for [`Watchdog::evaluate`].
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Seconds without a completed step before the run counts as stalled.
+    pub stall_timeout_s: f64,
+    /// A worker slower than this multiple of the median step time is a
+    /// straggler (needs ≥ 2 live workers to define a median).
+    pub straggler_factor: f64,
+    /// `correction_max_last` above this is treated as divergence.
+    pub correction_limit: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig { stall_timeout_s: 60.0, straggler_factor: 4.0, correction_limit: 1e6 }
+    }
+}
+
+/// One recorded state transition.
+#[derive(Debug, Clone)]
+pub struct HealthEvent {
+    /// Microseconds since the watchdog started.
+    pub t_us: u64,
+    pub state: HealthState,
+    pub reason: String,
+}
+
+const EVENT_RING: usize = 32;
+
+/// See the module docs. Construction allocates; `note_step` never does.
+#[derive(Debug)]
+pub struct Watchdog {
+    cfg: HealthConfig,
+    clock: WallClock,
+    last_iter: AtomicU64,
+    /// `clock` microseconds when the last step was observed (watchdog
+    /// start counts as step zero so a run that never steps still stalls).
+    last_step_us: AtomicU64,
+    stalled: AtomicBool,
+    stalled_reason: Mutex<String>,
+    last_state: Mutex<HealthState>,
+    events: Mutex<Vec<HealthEvent>>,
+}
+
+impl Watchdog {
+    pub fn new(cfg: HealthConfig) -> Watchdog {
+        Watchdog {
+            cfg,
+            clock: WallClock::new(),
+            last_iter: AtomicU64::new(0),
+            last_step_us: AtomicU64::new(0),
+            stalled: AtomicBool::new(false),
+            stalled_reason: Mutex::new(String::new()),
+            last_state: Mutex::new(HealthState::Healthy),
+            events: Mutex::new(Vec::with_capacity(EVENT_RING)),
+        }
+    }
+
+    /// Record step progress. Allocation-free: two relaxed atomic stores.
+    pub fn note_step(&self, iter: u64) {
+        self.last_iter.store(iter, Ordering::Relaxed);
+        self.last_step_us.store(self.clock.now_us(), Ordering::Relaxed);
+    }
+
+    /// Latch a terminal failure (engine error, worker loss). Sticky: the
+    /// watchdog reports `Stalled` from here on.
+    pub fn mark_stalled(&self, reason: &str) {
+        if !self.stalled.swap(true, Ordering::Relaxed) {
+            if let Ok(mut r) = self.stalled_reason.lock() {
+                r.clear();
+                r.push_str(reason);
+            }
+        }
+    }
+
+    pub fn last_iter(&self) -> u64 {
+        self.last_iter.load(Ordering::Relaxed)
+    }
+
+    /// Recorded state transitions, oldest first (bounded ring).
+    pub fn events(&self) -> Vec<HealthEvent> {
+        match self.events.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    /// Fold current signals into a verdict. Runs on the status-server /
+    /// sampler monitor thread — allocation here is fine; only `note_step`
+    /// sits on the training hot path.
+    pub fn evaluate(&self, reg: &MetricsRegistry, workers: usize) -> (HealthState, String) {
+        let verdict = self.judge(reg, workers);
+        self.record_transition(&verdict);
+        verdict
+    }
+
+    fn judge(&self, reg: &MetricsRegistry, workers: usize) -> (HealthState, String) {
+        if self.stalled.load(Ordering::Relaxed) {
+            let reason = match self.stalled_reason.lock() {
+                Ok(g) => g.clone(),
+                Err(p) => p.into_inner().clone(),
+            };
+            return (HealthState::Stalled, format!("run failed: {reason}"));
+        }
+        let idle_s = self
+            .clock
+            .now_us()
+            .saturating_sub(self.last_step_us.load(Ordering::Relaxed)) as f64
+            / 1e6;
+        if idle_s > self.cfg.stall_timeout_s {
+            return (
+                HealthState::Stalled,
+                format!(
+                    "no step progress in {idle_s:.1}s (deadline {:.1}s)",
+                    self.cfg.stall_timeout_s
+                ),
+            );
+        }
+        let correction = reg.gauge("correction_max_last").get();
+        if !correction.is_nan() && (correction > self.cfg.correction_limit || correction.is_infinite())
+        {
+            return (
+                HealthState::Degraded,
+                format!(
+                    "correction norm blowup: {correction:e} > limit {:e}",
+                    self.cfg.correction_limit
+                ),
+            );
+        }
+        if workers >= 2 {
+            let mut steps: Vec<(usize, f64)> = (0..workers)
+                .map(|i| (i, reg.gauge(&format!("w{i}_step_wall_s")).get()))
+                .filter(|(_, s)| s.is_finite() && *s > 0.0)
+                .collect();
+            if steps.len() >= 2 {
+                let mut sorted: Vec<f64> = steps.iter().map(|(_, s)| *s).collect();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+                let median = sorted[sorted.len() / 2];
+                steps.sort_by(|a, b| {
+                    b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                if let Some(&(worst, wall)) = steps.first() {
+                    if median > 0.0 && wall > self.cfg.straggler_factor * median {
+                        return (
+                            HealthState::Degraded,
+                            format!(
+                                "worker {worst} straggling: step {wall:.3}s vs median \
+                                 {median:.3}s (> {:.1}x)",
+                                self.cfg.straggler_factor
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        (HealthState::Healthy, String::from("ok"))
+    }
+
+    fn record_transition(&self, verdict: &(HealthState, String)) {
+        let mut last = match self.last_state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if *last == verdict.0 {
+            return;
+        }
+        *last = verdict.0;
+        let ev = HealthEvent {
+            t_us: self.clock.now_us(),
+            state: verdict.0,
+            reason: verdict.1.clone(),
+        };
+        if verdict.0 != HealthState::Healthy {
+            eprintln!("sgs health: {} — {}", verdict.0.as_str(), verdict.1);
+        }
+        let mut events = match self.events.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if events.len() == EVENT_RING {
+            events.remove(0);
+        }
+        events.push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn quick_cfg() -> HealthConfig {
+        HealthConfig { stall_timeout_s: 1e6, ..HealthConfig::default() }
+    }
+
+    #[test]
+    fn healthy_by_default_then_sticky_stall() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let dog = Watchdog::new(quick_cfg());
+        dog.note_step(1);
+        let (state, _) = dog.evaluate(&reg, 0);
+        assert_eq!(state, HealthState::Healthy);
+        dog.mark_stalled("worker 1 connection reset");
+        let (state, reason) = dog.evaluate(&reg, 0);
+        assert_eq!(state, HealthState::Stalled);
+        assert!(reason.contains("worker 1 connection reset"), "{reason}");
+        assert_eq!(state.http_status(), 503);
+        // transition recorded exactly once
+        let events = dog.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].state, HealthState::Stalled);
+        dog.evaluate(&reg, 0);
+        assert_eq!(dog.events().len(), 1, "no duplicate transition events");
+    }
+
+    #[test]
+    fn stall_deadline_without_steps() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let dog = Watchdog::new(HealthConfig { stall_timeout_s: 0.0, ..HealthConfig::default() });
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let (state, reason) = dog.evaluate(&reg, 0);
+        assert_eq!(state, HealthState::Stalled);
+        assert!(reason.contains("no step progress"), "{reason}");
+    }
+
+    #[test]
+    fn straggler_and_correction_degrade() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let dog = Watchdog::new(quick_cfg());
+        dog.note_step(3);
+        reg.gauge("w0_step_wall_s").set(0.1);
+        reg.gauge("w1_step_wall_s").set(0.1);
+        reg.gauge("w2_step_wall_s").set(2.0);
+        let (state, reason) = dog.evaluate(&reg, 3);
+        assert_eq!(state, HealthState::Degraded);
+        assert!(reason.contains("worker 2 straggling"), "{reason}");
+        reg.gauge("w2_step_wall_s").set(0.1);
+        let (state, _) = dog.evaluate(&reg, 3);
+        assert_eq!(state, HealthState::Healthy, "recovers when the straggler catches up");
+        reg.gauge("correction_max_last").set(1e9);
+        let (state, reason) = dog.evaluate(&reg, 3);
+        assert_eq!(state, HealthState::Degraded);
+        assert!(reason.contains("correction norm blowup"), "{reason}");
+    }
+
+    #[test]
+    fn single_worker_never_straggles() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let dog = Watchdog::new(quick_cfg());
+        dog.note_step(1);
+        reg.gauge("w0_step_wall_s").set(50.0);
+        assert_eq!(dog.evaluate(&reg, 1).0, HealthState::Healthy);
+    }
+}

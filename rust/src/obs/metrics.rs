@@ -113,9 +113,65 @@ impl Histogram {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
+    /// Copy per-bucket counts into a caller-owned slice (overflow bucket
+    /// last) without allocating — the telemetry sampler's snapshot path.
+    /// Slots beyond `out.len()` are dropped; slots beyond the bucket
+    /// count are zeroed.
+    pub fn bucket_counts_into(&self, out: &mut [u64]) {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = match self.buckets.get(i) {
+                Some(b) => b.load(Ordering::Relaxed),
+                None => 0,
+            };
+        }
+    }
+
     pub fn bounds(&self) -> &[f64] {
         &self.bounds
     }
+
+    /// Interpolated quantile of the recorded distribution, `None` when
+    /// the histogram is empty. See [`quantile_from_buckets`] for the
+    /// interpolation rule. Allocates a transient count snapshot — use
+    /// [`Histogram::bucket_counts_into`] + [`quantile_from_buckets`] on
+    /// preallocated storage from allocation-free contexts.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        quantile_from_buckets(&self.bounds, &self.bucket_counts(), q)
+    }
+}
+
+/// Estimate the `q`-quantile (`q` clamped to `[0, 1]`) of a fixed-bucket
+/// histogram by linear interpolation inside the bucket holding the target
+/// rank — the same estimate Prometheus' `histogram_quantile` computes.
+///
+/// `counts` holds per-bucket counts with the overflow bucket last (one
+/// longer than `bounds`, shorter slices are treated as zero-padded).
+/// Rules: an empty histogram (or empty `bounds`) yields `None`; the first
+/// bucket's lower edge is `0.0` (or `bounds[0]` when that is negative);
+/// a rank landing in the overflow bucket reports the last finite bound —
+/// the distribution's tail is unbounded, so that is the honest floor.
+pub fn quantile_from_buckets(bounds: &[f64], counts: &[u64], q: f64) -> Option<f64> {
+    if bounds.is_empty() {
+        return None;
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let rank = q.clamp(0.0, 1.0) * total as f64;
+    let mut cumulative = 0u64;
+    for (i, &bound) in bounds.iter().enumerate() {
+        let in_bucket = counts.get(i).copied().unwrap_or(0);
+        let next = cumulative + in_bucket;
+        if (next as f64) >= rank && in_bucket > 0 {
+            let lower = if i == 0 { bound.min(0.0) } else { bounds[i - 1] };
+            let fraction = ((rank - cumulative as f64) / in_bucket as f64).clamp(0.0, 1.0);
+            return Some(lower + fraction * (bound - lower));
+        }
+        cumulative = next;
+    }
+    // target rank sits in the overflow bucket
+    bounds.last().copied()
 }
 
 /// Name → instrument registry shared by a session and its engine.
@@ -176,6 +232,52 @@ impl MetricsRegistry {
             }
             _ => {}
         }
+    }
+
+    /// Look up a counter without creating it (read-only exporters use
+    /// these `find_*` variants so a snapshot request can never register
+    /// an instrument — notably a histogram with default bounds — before
+    /// the owning loop does).
+    pub fn find_counter(&self, name: &str) -> Option<Arc<Counter>> {
+        lock(&self.counters).get(name).map(Arc::clone)
+    }
+
+    /// Look up a gauge without creating it.
+    pub fn find_gauge(&self, name: &str) -> Option<Arc<Gauge>> {
+        lock(&self.gauges).get(name).map(Arc::clone)
+    }
+
+    /// Look up a histogram without creating it.
+    pub fn find_histogram(&self, name: &str) -> Option<Arc<Histogram>> {
+        lock(&self.histograms).get(name).map(Arc::clone)
+    }
+
+    /// Every registered counter, name-sorted (BTreeMap order).
+    pub fn counters(&self) -> Vec<(String, Arc<Counter>)> {
+        lock(&self.counters).iter().map(|(n, c)| (n.clone(), Arc::clone(c))).collect()
+    }
+
+    /// Every registered gauge, name-sorted.
+    pub fn gauges(&self) -> Vec<(String, Arc<Gauge>)> {
+        lock(&self.gauges).iter().map(|(n, g)| (n.clone(), Arc::clone(g))).collect()
+    }
+
+    /// Every registered histogram, name-sorted.
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        lock(&self.histograms).iter().map(|(n, h)| (n.clone(), Arc::clone(h))).collect()
+    }
+
+    /// `(counters, gauges, histograms)` cardinality — a cheap fingerprint
+    /// the telemetry sampler polls to detect instruments registered after
+    /// it resolved its handles (e.g. remote `w{i}_*` metrics arriving
+    /// with the first `Frame::Obs`). Instruments are never removed, so
+    /// equal counts mean an identical instrument set.
+    pub fn instrument_counts(&self) -> (usize, usize, usize) {
+        (
+            lock(&self.counters).len(),
+            lock(&self.gauges).len(),
+            lock(&self.histograms).len(),
+        )
     }
 
     /// Deterministically ordered snapshot of every instrument.
@@ -251,6 +353,64 @@ mod tests {
         assert_eq!(reg.counter("w0_mailbox_hits").get(), 3);
         assert_eq!(reg.gauge("w0_mailbox_depth").get(), 2.0);
         assert_eq!(reg.histogram("w0_wait_s", &[1.0]).count(), 1);
+    }
+
+    #[test]
+    fn quantile_interpolates_and_hits_exact_bucket_edges() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        // rank lands exactly on a bucket's upper edge → the edge itself
+        assert_eq!(h.quantile(0.25), Some(1.0));
+        assert_eq!(h.quantile(0.5), Some(2.0));
+        assert_eq!(h.quantile(0.75), Some(4.0));
+        // overflow bucket: report the last finite bound
+        assert_eq!(h.quantile(1.0), Some(4.0));
+        // q=0 → lower edge of the first populated bucket (0.0 floor)
+        assert_eq!(h.quantile(0.0), Some(0.0));
+        // mid-bucket rank interpolates linearly: rank 1.5 is halfway
+        // through bucket (1, 2]
+        assert_eq!(h.quantile(0.375), Some(1.5));
+    }
+
+    #[test]
+    fn quantile_empty_histogram_and_degenerate_inputs() {
+        let h = Histogram::new(&[1.0, 2.0]);
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantile");
+        assert_eq!(quantile_from_buckets(&[], &[3], 0.5), None, "no bounds, no estimate");
+        // out-of-range q clamps rather than erroring
+        let h2 = Histogram::new(&[2.0]);
+        h2.observe(1.0);
+        assert_eq!(h2.quantile(7.0), Some(2.0));
+        assert_eq!(h2.quantile(-1.0), Some(0.0));
+        // short count slices are zero-padded
+        assert_eq!(quantile_from_buckets(&[1.0, 2.0], &[2], 0.5), Some(0.5));
+    }
+
+    #[test]
+    fn bucket_counts_into_copies_without_resizing() {
+        let h = Histogram::new(&[1.0, 2.0]);
+        h.observe(0.5);
+        h.observe(9.0);
+        let mut out = [7u64; 5];
+        h.bucket_counts_into(&mut out);
+        assert_eq!(out, [1, 0, 1, 0, 0], "extra slots zeroed");
+        let mut short = [0u64; 1];
+        h.bucket_counts_into(&mut short);
+        assert_eq!(short, [1]);
+    }
+
+    #[test]
+    fn registry_enumeration_is_name_sorted() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b").inc();
+        reg.counter("a").inc();
+        reg.gauge("g").set(1.0);
+        reg.histogram("h", &[1.0]).observe(0.5);
+        let names: Vec<String> = reg.counters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.instrument_counts(), (2, 1, 1));
     }
 
     #[test]

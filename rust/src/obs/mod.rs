@@ -18,6 +18,17 @@
 //!   summary.
 //! * [`timer`] — stopwatch + sampling helpers for benches and cost-model
 //!   calibration (re-exported as `crate::util::timer`).
+//! * [`prom`] — zero-dep Prometheus text-exposition encoder; the one
+//!   formatter behind `/metrics` on both `sgs serve` and the training
+//!   status server (`crate::monitor`), so the two planes emit
+//!   byte-identical expositions.
+//! * [`telemetry`] — [`TelemetrySampler`]: periodic registry snapshots
+//!   (counters, gauges, histogram buckets + p50/p95/p99) into a bounded
+//!   preallocated ring, encodable as JSONL for `--telemetry-out`.
+//! * [`health`] — [`Watchdog`]: folds live signals into
+//!   `Healthy | Degraded | Stalled` (`/healthz` 200 vs 503) — stall
+//!   deadline, straggler detection, correction-norm blowup, sticky
+//!   failure latch.
 //!
 //! # Contracts
 //!
@@ -35,13 +46,18 @@
 //! pins steady-state steps at zero allocations with a registry attached.
 
 pub mod clock;
+pub mod health;
 pub mod metrics;
+pub mod prom;
 pub mod report;
 pub mod span;
+pub mod telemetry;
 pub mod timer;
 pub mod trace;
 
 pub use clock::{Deadline, WallClock};
-pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use health::{HealthConfig, HealthEvent, HealthState, Watchdog};
+pub use metrics::{quantile_from_buckets, Counter, Gauge, Histogram, MetricsRegistry};
 pub use span::{ObsBuffer, Phase, Span, Tracer, DEFAULT_SPAN_CAPACITY, NO_COORD};
+pub use telemetry::{TelemetrySampler, TelemetrySnapshot};
 pub use trace::{chrome_trace_json, write_chrome_trace, TraceMeta};

@@ -1,0 +1,141 @@
+//! Zero-dependency Prometheus text-exposition encoder.
+//!
+//! [`encode`] renders a [`MetricsRegistry`] snapshot in the Prometheus
+//! text format (version 0.0.4): a `# TYPE` comment per metric family,
+//! counters and gauges as bare samples, histograms as CUMULATIVE
+//! `_bucket{le="..."}` series closed by `le="+Inf"` plus `_sum` and
+//! `_count`. Both the `sgs serve` HTTP front and the training status
+//! server mount this one encoder on `/metrics`, so the two planes emit
+//! byte-identical expositions for the same registry state (asserted by a
+//! unit test below and re-checked end-to-end by the `monitor-smoke` CI
+//! job's parser).
+//!
+//! Output is deterministic: instruments come out name-sorted (registry
+//! BTreeMap order) within each family group (counters, gauges,
+//! histograms), and floats use Rust's shortest round-trip `Display`.
+
+use std::fmt::Write as _;
+
+use super::metrics::{Histogram, MetricsRegistry};
+
+/// Render every instrument in `reg` as Prometheus exposition text.
+pub fn encode(reg: &MetricsRegistry) -> String {
+    let mut out = String::with_capacity(4096);
+    for (name, c) in reg.counters() {
+        let name = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {}", c.get());
+    }
+    for (name, g) in reg.gauges() {
+        let name = sanitize(&name);
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {}", fmt_value(g.get()));
+    }
+    for (name, h) in reg.histograms() {
+        encode_histogram(&mut out, &name, &h);
+    }
+    out
+}
+
+fn encode_histogram(out: &mut String, name: &str, h: &Histogram) {
+    let name = sanitize(name);
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let counts = h.bucket_counts();
+    let mut cumulative = 0u64;
+    for (bound, in_bucket) in h.bounds().iter().zip(&counts) {
+        cumulative += in_bucket;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cumulative}", fmt_value(*bound));
+    }
+    cumulative += counts.last().copied().unwrap_or(0);
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+    let _ = writeln!(out, "{name}_sum {}", fmt_value(h.sum()));
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Coerce a name into the Prometheus charset `[a-zA-Z_:][a-zA-Z0-9_:]*`:
+/// out-of-charset bytes become `_`, a leading digit gains a `_` prefix.
+/// Registry names are already clean ASCII identifiers; this is the
+/// defensive floor for remote-shipped names.
+fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if s.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+/// Prometheus float rendering: shortest round-trip decimal, with the
+/// spec's spellings for the non-finite values.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_all_three_families_with_cumulative_buckets() {
+        let reg = MetricsRegistry::new();
+        reg.counter("iters_total").add(7);
+        reg.gauge("train_loss_last").set(0.5);
+        let h = reg.histogram("staleness_mod0", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        let text = encode(&reg);
+        let expected = "\
+# TYPE iters_total counter
+iters_total 7
+# TYPE train_loss_last gauge
+train_loss_last 0.5
+# TYPE staleness_mod0 histogram
+staleness_mod0_bucket{le=\"1\"} 1
+staleness_mod0_bucket{le=\"2\"} 2
+staleness_mod0_bucket{le=\"4\"} 3
+staleness_mod0_bucket{le=\"+Inf\"} 4
+staleness_mod0_sum 105
+staleness_mod0_count 4
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn sanitizes_hostile_names_and_nonfinite_values() {
+        let reg = MetricsRegistry::new();
+        reg.counter("9bad name!").inc();
+        reg.gauge("g_nan").set(f64::NAN);
+        reg.gauge("g_inf").set(f64::INFINITY);
+        let text = encode(&reg);
+        assert!(text.contains("_9bad_name_ 1"), "{text}");
+        assert!(text.contains("g_nan NaN"), "{text}");
+        assert!(text.contains("g_inf +Inf"), "{text}");
+    }
+
+    #[test]
+    fn empty_registry_encodes_to_empty_text() {
+        assert_eq!(encode(&MetricsRegistry::new()), "");
+    }
+
+    #[test]
+    fn output_is_deterministic_across_registration_order() {
+        let a = MetricsRegistry::new();
+        a.counter("x").inc();
+        a.counter("a").inc();
+        let b = MetricsRegistry::new();
+        b.counter("a").inc();
+        b.counter("x").inc();
+        assert_eq!(encode(&a), encode(&b));
+    }
+}

@@ -15,6 +15,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+use crate::obs::metrics::quantile_from_buckets;
 use crate::util::json::Json;
 
 fn bad(msg: impl std::fmt::Display) -> Error {
@@ -80,6 +81,11 @@ pub struct TraceReport {
     /// (straggler track name, seconds it finished after the fastest
     /// worker) for dist traces with ≥ 2 workers
     pub straggler: Option<(String, f64)>,
+    /// `(name, count, [p50, p95, p99])` per histogram in the trace's
+    /// embedded `sgsMetrics` registry snapshot (e.g. `staleness_mod0`),
+    /// name-sorted; estimated with the same [`quantile_from_buckets`]
+    /// interpolation `sgs top` uses, so both surfaces agree
+    pub metric_quantiles: Vec<(String, u64, [f64; 3])>,
 }
 
 const WAIT_PHASES: [&str; 3] = ["stash_wait", "barrier", "wire_rx"];
@@ -320,6 +326,33 @@ pub fn analyze(doc: &Json) -> Result<TraceReport> {
         None
     };
 
+    // Histogram quantiles from the embedded registry snapshot. The trace
+    // carries raw (bounds, buckets) pairs; reduce them here rather than
+    // dumping buckets so the report and `sgs top` quote the same numbers.
+    let mut metric_quantiles = Vec::new();
+    if let Some(Json::Obj(hists)) = doc.opt("sgsMetrics").and_then(|m| m.opt("histograms")) {
+        for (name, h) in hists {
+            let count = h.opt("count").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+            if count == 0 {
+                continue;
+            }
+            let bounds: Vec<f64> = h
+                .opt("bounds")
+                .and_then(|b| b.as_arr().ok())
+                .map(|a| a.iter().filter_map(|v| v.as_f64().ok()).collect())
+                .unwrap_or_default();
+            let counts: Vec<u64> = h
+                .opt("buckets")
+                .and_then(|b| b.as_arr().ok())
+                .map(|a| a.iter().filter_map(|v| v.as_f64().ok().map(|c| c as u64)).collect())
+                .unwrap_or_default();
+            let qs = [0.5, 0.95, 0.99].map(|p| quantile_from_buckets(&bounds, &counts, p));
+            if let [Some(p50), Some(p95), Some(p99)] = qs {
+                metric_quantiles.push((name.clone(), count, [p50, p95, p99]));
+            }
+        }
+    }
+
     Ok(TraceReport {
         engine: meta_str("engine"),
         s: meta_usize("s"),
@@ -339,6 +372,7 @@ pub fn analyze(doc: &Json) -> Result<TraceReport> {
         steady_s,
         coverage,
         straggler,
+        metric_quantiles,
     })
 }
 
@@ -405,6 +439,15 @@ impl TraceReport {
         }
         if let Some((name, behind)) = &self.straggler {
             let _ = writeln!(out, "straggler: {name} finished {:.6}s after the fastest worker", behind);
+        }
+        if !self.metric_quantiles.is_empty() {
+            let _ = writeln!(out, "metric histograms (p50/p95/p99):");
+            for (name, count, [p50, p95, p99]) in &self.metric_quantiles {
+                let _ = writeln!(
+                    out,
+                    "  {name:<20} {p50:.3}/{p95:.3}/{p99:.3}  (n={count})",
+                );
+            }
         }
         let denom_kind = if self.clock == "sim" { "modelled sim time" } else { "measured wall time" };
         let denom = if self.coverage > 0.0 {
@@ -473,6 +516,18 @@ impl TraceReport {
             let mut sj = Json::obj();
             sj.set("track", name.as_str()).set("behind_s", *behind);
             j.set("straggler", sj);
+        }
+        if !self.metric_quantiles.is_empty() {
+            let mut mq = Json::obj();
+            for (name, count, [p50, p95, p99]) in &self.metric_quantiles {
+                let mut hj = Json::obj();
+                hj.set("count", *count as usize)
+                    .set("p50", *p50)
+                    .set("p95", *p95)
+                    .set("p99", *p99);
+                mq.set(name, hj);
+            }
+            j.set("metric_quantiles", mq);
         }
         j
     }
@@ -586,6 +641,35 @@ mod tests {
         assert!(j.get("tracks").unwrap().as_arr().unwrap().len() == 1);
         // text rendering never panics and mentions the engine
         assert!(rep.render_text().contains("engine sim"));
+    }
+
+    #[test]
+    fn embedded_histograms_reduce_to_quantiles() {
+        let tr = Tracer::new(8);
+        tr.record(span(0, Phase::Fwd, 0, 0, 0, 10));
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("staleness_mod0", &[1.0, 2.0, 3.0]);
+        for v in [1.0, 1.0, 2.0, 3.0] {
+            h.observe(v);
+        }
+        // a second, empty histogram must not appear in the report
+        reg.histogram("unused", &[1.0]);
+        let doc = chrome_trace_json(&tr, Some(&reg), &meta("sim", 0, "sim"));
+        let rep = analyze(&doc).unwrap();
+        assert_eq!(rep.metric_quantiles.len(), 1, "{:?}", rep.metric_quantiles);
+        let (name, count, [p50, p95, p99]) = &rep.metric_quantiles[0];
+        assert_eq!(name, "staleness_mod0");
+        assert_eq!(*count, 4);
+        assert!(p50 <= p95 && p95 <= p99, "quantiles out of order");
+        assert!(*p50 >= 0.0 && *p99 <= 3.0, "outside bucket range");
+        let j = rep.to_json();
+        let mq = j.get("metric_quantiles").unwrap().get("staleness_mod0").unwrap();
+        assert_eq!(mq.get("count").unwrap().as_usize().unwrap(), 4);
+        assert!(rep.render_text().contains("metric histograms (p50/p95/p99):"));
+        // traces without an embedded registry omit the section entirely
+        let bare = analyze(&chrome_trace_json(&tr, None, &meta("sim", 0, "sim"))).unwrap();
+        assert!(bare.metric_quantiles.is_empty());
+        assert!(bare.to_json().opt("metric_quantiles").is_none());
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Periodic telemetry sampling into a bounded in-memory time-series ring.
+//!
+//! A [`TelemetrySampler`] resolves handles to every instrument in a
+//! [`MetricsRegistry`] once, then [`TelemetrySampler::sample`] copies the
+//! current values — counters, gauges, histogram bucket counts plus
+//! derived p50/p95/p99 — into preallocated ring slots. The contract
+//! mirrors the registry's own ("registration allocates, updates never"):
+//!
+//! * `sample()` is **allocation-free in steady state** — every slot,
+//!   per-histogram bucket array, and name string is sized when handles
+//!   are (re)resolved. `rust/tests/alloc_guard.rs` pins this.
+//! * The instrument set can only grow (the registry never removes), so
+//!   the sampler polls [`MetricsRegistry::instrument_counts`] each tick
+//!   and re-resolves (allocating, once) only when new instruments
+//!   appeared — e.g. remote `w{i}_*` metrics landing with the first
+//!   `Frame::Obs` from a dist worker.
+//! * JSONL encoding ([`TelemetrySampler::latest_jsonl`], the
+//!   `--telemetry-out` sink) allocates freely: it runs on the monitor
+//!   thread, off the training hot path, and only when asked.
+//!
+//! The ring holds the last `capacity` snapshots (oldest evicted first) so
+//! a status server or post-mortem dump can reconstruct recent history
+//! without unbounded memory.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::clock::WallClock;
+use super::metrics::{quantile_from_buckets, Counter, Gauge, Histogram, MetricsRegistry};
+
+/// Snapshot of one histogram at one sample tick.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts, overflow bucket last (non-cumulative).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    /// Derived quantiles; `NaN` while the histogram is empty.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// One ring slot: every instrument's value at `t_us`, positionally
+/// aligned with the sampler's resolved handle lists.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySnapshot {
+    /// Microseconds since the sampler started, per its `WallClock`.
+    pub t_us: u64,
+    pub counters: Vec<u64>,
+    pub gauges: Vec<f64>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct TelemetrySampler {
+    registry: Arc<MetricsRegistry>,
+    clock: WallClock,
+    counter_handles: Vec<(String, Arc<Counter>)>,
+    gauge_handles: Vec<(String, Arc<Gauge>)>,
+    histogram_handles: Vec<(String, Arc<Histogram>)>,
+    fingerprint: (usize, usize, usize),
+    ring: Vec<TelemetrySnapshot>,
+    head: usize,
+    len: usize,
+}
+
+impl TelemetrySampler {
+    /// Resolve handles for every instrument currently registered and
+    /// preallocate `capacity` ring slots sized to them.
+    pub fn new(registry: Arc<MetricsRegistry>, capacity: usize) -> TelemetrySampler {
+        let mut sampler = TelemetrySampler {
+            registry,
+            clock: WallClock::new(),
+            counter_handles: Vec::new(),
+            gauge_handles: Vec::new(),
+            histogram_handles: Vec::new(),
+            fingerprint: (usize::MAX, usize::MAX, usize::MAX),
+            ring: Vec::new(),
+            head: 0,
+            len: 0,
+        };
+        sampler.resolve(capacity.max(1));
+        sampler
+    }
+
+    /// (Re)resolve instrument handles and rebuild the ring's slots. Every
+    /// allocation the sampler will ever make happens here.
+    fn resolve(&mut self, capacity: usize) {
+        self.counter_handles = self.registry.counters();
+        self.gauge_handles = self.registry.gauges();
+        self.histogram_handles = self.registry.histograms();
+        self.fingerprint = self.registry.instrument_counts();
+        let template = TelemetrySnapshot {
+            t_us: 0,
+            counters: vec![0; self.counter_handles.len()],
+            gauges: vec![0.0; self.gauge_handles.len()],
+            histograms: self
+                .histogram_handles
+                .iter()
+                .map(|(_, h)| HistogramSnapshot {
+                    // one slot per finite bound plus the overflow bucket
+                    buckets: vec![0; h.bounds().len() + 1],
+                    ..HistogramSnapshot::default()
+                })
+                .collect(),
+        };
+        self.ring = vec![template; capacity];
+        self.head = 0;
+        self.len = 0;
+    }
+
+    /// Number of snapshots currently held (saturates at capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Instrument names in slot-positional order.
+    pub fn counter_names(&self) -> impl Iterator<Item = &str> {
+        self.counter_handles.iter().map(|(n, _)| n.as_str())
+    }
+
+    /// Capture one snapshot into the ring. Allocation-free unless new
+    /// instruments were registered since the last call (then the handle
+    /// lists and ring slots are rebuilt once).
+    pub fn sample(&mut self) {
+        if self.registry.instrument_counts() != self.fingerprint {
+            self.resolve(self.ring.len());
+        }
+        let t_us = self.clock.now_us();
+        let slot_idx = self.head;
+        // split-borrow: the slot is &mut, the handle lists are shared
+        let Some(slot) = self.ring.get_mut(slot_idx) else {
+            return;
+        };
+        slot.t_us = t_us;
+        for (dst, (_, c)) in slot.counters.iter_mut().zip(&self.counter_handles) {
+            *dst = c.get();
+        }
+        for (dst, (_, g)) in slot.gauges.iter_mut().zip(&self.gauge_handles) {
+            *dst = g.get();
+        }
+        for (dst, (_, h)) in slot.histograms.iter_mut().zip(&self.histogram_handles) {
+            h.bucket_counts_into(&mut dst.buckets);
+            dst.count = h.count();
+            dst.sum = h.sum();
+            let bounds = h.bounds();
+            dst.p50 = quantile_from_buckets(bounds, &dst.buckets, 0.50).unwrap_or(f64::NAN);
+            dst.p95 = quantile_from_buckets(bounds, &dst.buckets, 0.95).unwrap_or(f64::NAN);
+            dst.p99 = quantile_from_buckets(bounds, &dst.buckets, 0.99).unwrap_or(f64::NAN);
+        }
+        self.head = (self.head + 1) % self.ring.len();
+        self.len = (self.len + 1).min(self.ring.len());
+    }
+
+    /// The most recent snapshot, if any.
+    pub fn latest(&self) -> Option<&TelemetrySnapshot> {
+        if self.len == 0 {
+            return None;
+        }
+        let idx = (self.head + self.ring.len() - 1) % self.ring.len();
+        self.ring.get(idx)
+    }
+
+    /// Encode the most recent snapshot as one JSONL line (no trailing
+    /// newline): the `--telemetry-out` record format. Allocates — caller
+    /// is the monitor thread, not the training loop.
+    pub fn latest_jsonl(&self) -> Option<String> {
+        let snap = self.latest()?;
+        let mut s = String::with_capacity(512);
+        s.push_str("{\"schema\":\"sgs-telemetry/v1\",\"t_us\":");
+        let _ = write!(s, "{}", snap.t_us);
+        s.push_str(",\"counters\":{");
+        for (i, ((name, _), value)) in self.counter_handles.iter().zip(&snap.counters).enumerate()
+        {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{name}\":{value}");
+        }
+        s.push_str("},\"gauges\":{");
+        for (i, ((name, _), value)) in self.gauge_handles.iter().zip(&snap.gauges).enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{name}\":");
+            push_json_f64(&mut s, *value);
+        }
+        s.push_str("},\"histograms\":{");
+        for (i, ((name, _), hist)) in
+            self.histogram_handles.iter().zip(&snap.histograms).enumerate()
+        {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{name}\":{{\"count\":{},\"sum\":", hist.count);
+            push_json_f64(&mut s, hist.sum);
+            s.push_str(",\"p50\":");
+            push_json_f64(&mut s, hist.p50);
+            s.push_str(",\"p95\":");
+            push_json_f64(&mut s, hist.p95);
+            s.push_str(",\"p99\":");
+            push_json_f64(&mut s, hist.p99);
+            s.push_str(",\"buckets\":[");
+            for (j, b) in hist.buckets.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "{b}");
+            }
+            s.push_str("]}");
+        }
+        s.push_str("}}");
+        Some(s)
+    }
+}
+
+/// JSON has no NaN/Inf: non-finite values serialize as `null`.
+fn push_json_f64(s: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(s, "{v}");
+    } else {
+        s.push_str("null");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_holds_last_capacity_snapshots() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let c = reg.counter("steps");
+        let mut sampler = TelemetrySampler::new(Arc::clone(&reg), 3);
+        for i in 1..=5u64 {
+            c.add(1);
+            sampler.sample();
+            assert_eq!(sampler.latest().map(|s| s.counters[0]), Some(i));
+        }
+        assert_eq!(sampler.len(), 3, "ring saturates at capacity");
+    }
+
+    #[test]
+    fn late_registered_instruments_are_picked_up() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("early").add(1);
+        let mut sampler = TelemetrySampler::new(Arc::clone(&reg), 4);
+        sampler.sample();
+        assert_eq!(sampler.counter_names().count(), 1);
+        // a dist worker's first Frame::Obs registers new instruments
+        reg.counter("w0_steps_total").add(2);
+        reg.gauge("w0_mailbox_act_depth").set(3.0);
+        sampler.sample();
+        let names: Vec<&str> = sampler.counter_names().collect();
+        assert_eq!(names, vec!["early", "w0_steps_total"]);
+        assert_eq!(sampler.latest().map(|s| s.counters[1]), Some(2));
+        assert_eq!(sampler.len(), 1, "re-resolve restarts the ring");
+    }
+
+    #[test]
+    fn jsonl_line_carries_quantiles_and_parses() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("iters_total").add(12);
+        reg.gauge("train_loss_last").set(0.75);
+        let h = reg.histogram("staleness_mod0", &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 3.5] {
+            h.observe(v);
+        }
+        let mut sampler = TelemetrySampler::new(Arc::clone(&reg), 2);
+        sampler.sample();
+        let line = sampler.latest_jsonl().unwrap();
+        let doc = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "sgs-telemetry/v1");
+        assert_eq!(
+            doc.get("counters").unwrap().get("iters_total").unwrap().as_usize().unwrap(),
+            12
+        );
+        let hist = doc.get("histograms").unwrap().get("staleness_mod0").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(hist.get("p50").unwrap().as_f64().unwrap(), 2.0);
+        assert!(hist.get("p99").unwrap().as_f64().unwrap() <= 4.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_serialize_as_null() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.histogram("h", &[1.0]);
+        let mut sampler = TelemetrySampler::new(Arc::clone(&reg), 1);
+        sampler.sample();
+        let line = sampler.latest_jsonl().unwrap();
+        assert!(line.contains("\"p50\":null"), "{line}");
+    }
+}

@@ -6,10 +6,20 @@
 //!   for a single row); replies
 //!   `{"id": N, "argmax": [...], "scores": [[...]]}`. Ids are a
 //!   per-connection sequence assigned by the server.
-//! * `GET /metrics` — the serve process's
-//!   [`MetricsRegistry`] snapshot as JSON (request
-//!   latency histogram, batch occupancy, `serve_qps`, ...).
+//! * `GET /metrics` — the serve process's [`MetricsRegistry`] in
+//!   Prometheus text-exposition format via [`crate::obs::prom::encode`]
+//!   — the same encoder the training status server
+//!   (`crate::monitor`) mounts, so both planes emit byte-identical
+//!   expositions (request latency histogram, batch occupancy,
+//!   `serve_qps`, ...).
+//! * `GET /status` — JSON serving summary: uptime, request/error/batch
+//!   totals, `serve_qps`, and latency p50/p95/p99 derived with
+//!   [`Histogram::quantile`](crate::obs::Histogram::quantile).
 //! * `GET /healthz` — `{"ok": true}` liveness probe.
+//!
+//! The request/response primitives ([`read_request`], [`write_response`],
+//! [`read_response`], [`http_get`]) are shared with the training status
+//! front and `sgs top`.
 //!
 //! Parsing is deliberately small: request line + headers, with only
 //! `Content-Length` and `Connection` interpreted. Connections are
@@ -107,7 +117,7 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
     }))
 }
 
-/// Serialize one response (JSON content type throughout).
+/// Serialize one response with a JSON content type (most routes).
 pub fn write_response(
     w: &mut impl Write,
     status: u16,
@@ -115,9 +125,25 @@ pub fn write_response(
     body: &str,
     keep_alive: bool,
 ) -> Result<()> {
+    write_response_typed(w, status, reason, "application/json", body, keep_alive)
+}
+
+/// The Prometheus text content type `/metrics` responses carry.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Serialize one response with an explicit content type (`/metrics`
+/// serves Prometheus text, everything else JSON).
+pub fn write_response_typed(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> Result<()> {
     let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
     w.write_all(head.as_bytes())
@@ -125,6 +151,88 @@ pub fn write_response(
     w.write_all(body.as_bytes())
         .map_err(|e| Error::Net(format!("http write: {e}")))?;
     w.flush().map_err(|e| Error::Net(format!("http flush: {e}")))
+}
+
+/// Read one HTTP/1.1 response off the wire (client side): status code
+/// plus UTF-8 body. Only `Content-Length` framing is understood — the
+/// sgs servers always send it.
+pub fn read_response(r: &mut impl BufRead) -> Result<(u16, String)> {
+    let mut line = String::new();
+    r.read_line(&mut line)
+        .map_err(|e| Error::Net(format!("http read: {e}")))?;
+    let status_line = line.trim_end();
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| Error::Net(format!("malformed http status line {status_line:?}")))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        let n = r
+            .read_line(&mut header)
+            .map_err(|e| Error::Net(format!("http read: {e}")))?;
+        if n == 0 {
+            return Err(Error::Net("http connection closed mid-headers".into()));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                let parsed = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Net(format!("bad content-length {value:?}")))?;
+                content_length = Some(parsed);
+            }
+        }
+    }
+    let body = match content_length {
+        Some(len) if len > MAX_BODY => {
+            return Err(Error::Net(format!(
+                "response body of {len} bytes exceeds the {MAX_BODY} byte cap"
+            )))
+        }
+        Some(len) => {
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)
+                .map_err(|e| Error::Net(format!("http body read: {e}")))?;
+            buf
+        }
+        None => {
+            let mut buf = Vec::new();
+            r.read_to_end(&mut buf)
+                .map_err(|e| Error::Net(format!("http body read: {e}")))?;
+            buf
+        }
+    };
+    let body = String::from_utf8(body)
+        .map_err(|_| Error::Net("http response body is not UTF-8".into()))?;
+    Ok((code, body))
+}
+
+/// One-shot GET against `addr` (e.g. `127.0.0.1:9100`): connect, request
+/// `path` with `Connection: close`, return `(status, body)`. The polling
+/// client behind `sgs top` and the smoke tests.
+pub fn http_get(addr: &str, path: &str, timeout: std::time::Duration) -> Result<(u16, String)> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Net(format!("connect {addr}: {e}")))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Net(format!("set timeout: {e}")))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| Error::Net(format!("set timeout: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| Error::Net(format!("clone stream: {e}")))?;
+    writer
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: sgs\r\nConnection: close\r\n\r\n").as_bytes())
+        .map_err(|e| Error::Net(format!("http write: {e}")))?;
+    writer.flush().map_err(|e| Error::Net(format!("http flush: {e}")))?;
+    read_response(&mut BufReader::new(stream))
 }
 
 /// Decode a predict body: `{"x": [[f, ...], ...]}` rows, or a flat
@@ -259,8 +367,8 @@ fn handle_conn(
             }
         };
         let keep_alive = req.keep_alive;
-        let (status, reason, body) = route(&req, tx, clock, metrics, &mut next_id);
-        write_response(&mut writer, status, reason, &body, keep_alive)?;
+        let (status, reason, content_type, body) = route(&req, tx, clock, metrics, &mut next_id);
+        write_response_typed(&mut writer, status, reason, content_type, &body, keep_alive)?;
         if !keep_alive {
             return Ok(());
         }
@@ -273,26 +381,64 @@ fn error_body(e: &Error) -> String {
     j.to_string_compact()
 }
 
-/// Dispatch one request to its handler.
+/// Dispatch one request to its handler: `(status, reason, content type,
+/// body)`.
 fn route(
     req: &HttpRequest,
     tx: &Sender<ServeRequest>,
     clock: &WallClock,
     metrics: &MetricsRegistry,
     next_id: &mut u64,
-) -> (u16, &'static str, String) {
+) -> (u16, &'static str, &'static str, String) {
+    const JSON: &str = "application/json";
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/predict") => match predict(req, tx, clock, next_id) {
-            Ok(body) => (200, "OK", body),
-            Err(e) => (400, "Bad Request", error_body(&e)),
+            Ok(body) => (200, "OK", JSON, body),
+            Err(e) => (400, "Bad Request", JSON, error_body(&e)),
         },
-        ("GET", "/metrics") => (200, "OK", metrics.to_json().to_string_compact()),
-        ("GET", "/healthz") => (200, "OK", "{\"ok\":true}".into()),
+        ("GET", "/metrics") => {
+            (200, "OK", PROMETHEUS_CONTENT_TYPE, crate::obs::prom::encode(metrics))
+        }
+        ("GET", "/status") => (200, "OK", JSON, serve_status_json(clock, metrics)),
+        ("GET", "/healthz") => (200, "OK", JSON, "{\"ok\":true}".into()),
         _ => {
             let e = Error::Net(format!("no route for {} {}", req.method, req.path));
-            (404, "Not Found", error_body(&e))
+            (404, "Not Found", JSON, error_body(&e))
         }
     }
+}
+
+/// `GET /status` on a serve instance: the JSON summary `sgs top` renders
+/// QPS/latency panels from. Latency quantiles come from the shared
+/// fixed-bucket estimator, not raw bucket dumps.
+fn serve_status_json(clock: &WallClock, metrics: &MetricsRegistry) -> String {
+    // JSON has no NaN: an empty histogram's quantiles serialize as null.
+    // All lookups are non-creating so a status poll racing engine
+    // startup can't register instruments first.
+    let quantile_json = |h: Option<&Arc<crate::obs::Histogram>>, q: f64| match h
+        .and_then(|h| h.quantile(q))
+    {
+        Some(v) if v.is_finite() => Json::from(v),
+        _ => Json::Null,
+    };
+    let counter = |name: &str| metrics.find_counter(name).map(|c| c.get()).unwrap_or(0);
+    let latency = metrics.find_histogram("serve_latency_us");
+    let mut lat = Json::obj();
+    lat.set("count", latency.as_ref().map(|h| h.count()).unwrap_or(0))
+        .set("mean_us", latency.as_ref().map(|h| h.mean()).unwrap_or(0.0))
+        .set("p50_us", quantile_json(latency.as_ref(), 0.50))
+        .set("p95_us", quantile_json(latency.as_ref(), 0.95))
+        .set("p99_us", quantile_json(latency.as_ref(), 0.99));
+    let mut j = Json::obj();
+    j.set("schema", "sgs-status/v1")
+        .set("role", "serve")
+        .set("uptime_s", clock.elapsed_s())
+        .set("requests_total", counter("serve_requests_total"))
+        .set("errors_total", counter("serve_errors_total"))
+        .set("batches_total", counter("serve_batches_total"))
+        .set("qps", metrics.find_gauge("serve_qps").map(|g| g.get()).unwrap_or(0.0))
+        .set("latency", lat);
+    j.to_string_compact()
 }
 
 fn predict(
@@ -390,6 +536,92 @@ mod tests {
         assert!(tensor_from_json(&Json::parse("{\"x\": [[1],[2,3]]}").unwrap()).is_err());
         assert!(tensor_from_json(&Json::parse("{\"x\": [[]]}").unwrap()).is_err());
         assert!(tensor_from_json(&Json::parse("{\"x\": [\"a\"]}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn metrics_route_uses_the_shared_prometheus_encoder_byte_for_byte() {
+        use std::sync::mpsc;
+        let metrics = MetricsRegistry::new();
+        metrics.counter("serve_requests_total").add(3);
+        metrics.gauge("serve_qps").set(12.5);
+        metrics.histogram("serve_latency_us", &[100.0, 1000.0]).observe(250.0);
+        let (tx, _rx) = mpsc::channel();
+        let clock = WallClock::new();
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/metrics".into(),
+            body: Vec::new(),
+            keep_alive: false,
+        };
+        let (status, _, content_type, body) = route(&req, &tx, &clock, &metrics, &mut 0);
+        assert_eq!(status, 200);
+        assert_eq!(content_type, PROMETHEUS_CONTENT_TYPE);
+        // byte-equality with the shared encoder: serve and the training
+        // status server must emit the identical exposition format
+        assert_eq!(body, crate::obs::prom::encode(&metrics));
+        assert!(body.contains("# TYPE serve_latency_us histogram"), "{body}");
+    }
+
+    #[test]
+    fn status_route_reports_latency_quantiles() {
+        use std::sync::mpsc;
+        let metrics = MetricsRegistry::new();
+        metrics.counter("serve_requests_total").add(8);
+        let h = metrics.histogram("serve_latency_us", &[100.0, 1000.0]);
+        for _ in 0..4 {
+            h.observe(50.0);
+        }
+        let (tx, _rx) = mpsc::channel();
+        let clock = WallClock::new();
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/status".into(),
+            body: Vec::new(),
+            keep_alive: false,
+        };
+        let (status, _, content_type, body) = route(&req, &tx, &clock, &metrics, &mut 0);
+        assert_eq!((status, content_type), (200, "application/json"));
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("role").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(doc.get("requests_total").unwrap().as_usize().unwrap(), 8);
+        let lat = doc.get("latency").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize().unwrap(), 4);
+        assert!(lat.get("p50_us").unwrap().as_f64().unwrap() <= 100.0);
+    }
+
+    #[test]
+    fn status_route_on_an_empty_registry_serves_nulls_not_nan() {
+        use std::sync::mpsc;
+        let metrics = MetricsRegistry::new();
+        let (tx, _rx) = mpsc::channel();
+        let clock = WallClock::new();
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/status".into(),
+            body: Vec::new(),
+            keep_alive: false,
+        };
+        let (status, _, _, body) = route(&req, &tx, &clock, &metrics, &mut 0);
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).expect("valid JSON even with empty metrics");
+        let p50 = doc.get("latency").unwrap().get("p50_us").unwrap();
+        assert!(p50.as_f64().is_err(), "empty histogram p50 should be null, got {p50:?}");
+        // the read-only path must not have created any instruments
+        assert_eq!(metrics.instrument_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn client_read_response_parses_status_and_content_length_body() {
+        let mut out = Vec::new();
+        write_response_typed(&mut out, 503, "Service Unavailable", "text/plain", "down", false)
+            .unwrap();
+        let (code, body) = read_response(&mut Cursor::new(out)).unwrap();
+        assert_eq!((code, body.as_str()), (503, "down"));
+        // read-to-EOF fallback when no Content-Length is present
+        let raw = b"HTTP/1.1 200 OK\r\n\r\nhello".to_vec();
+        let (code, body) = read_response(&mut Cursor::new(raw)).unwrap();
+        assert_eq!((code, body.as_str()), (200, "hello"));
+        assert!(read_response(&mut Cursor::new(b"garbage\r\n\r\n".to_vec())).is_err());
     }
 
     #[test]

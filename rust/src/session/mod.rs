@@ -325,6 +325,7 @@ impl SessionBuilder {
             tracer: self.tracer,
             metrics,
             handles,
+            spans_dropped_seen: 0,
         })
     }
 }
@@ -340,6 +341,12 @@ struct MetricHandles {
     train_loss_last: Arc<Gauge>,
     /// most recent consensus error δ(t)
     delta_last: Arc<Gauge>,
+    /// largest per-module compensation-correction norm this iteration
+    /// (the divergence signal the health watchdog monitors)
+    correction_max_last: Arc<Gauge>,
+    /// spans the tracer discarded on buffer overflow (synced from
+    /// `Tracer::dropped` each step; surfaced in `/status`)
+    spans_dropped_total: Arc<Counter>,
     /// per-module weight-update staleness distribution (`staleness_mod{k}`)
     staleness: Vec<Arc<Histogram>>,
     /// per-module wire bytes sent/received (`net_bytes_{tx,rx}_mod{k}`,
@@ -366,6 +373,8 @@ impl MetricHandles {
             iters_total: reg.counter("iters_total"),
             train_loss_last: reg.gauge("train_loss_last"),
             delta_last: reg.gauge("delta_last"),
+            correction_max_last: reg.gauge("correction_max_last"),
+            spans_dropped_total: reg.counter("spans_dropped_total"),
             staleness,
             net_tx,
             net_rx,
@@ -380,6 +389,9 @@ impl MetricHandles {
         }
         if let Some(delta) = ev.delta {
             self.delta_last.set(delta);
+        }
+        if !ev.correction.is_empty() {
+            self.correction_max_last.set(ev.correction.iter().fold(0.0f64, |a, &c| a.max(c)));
         }
         for (m, h) in self.staleness.iter().enumerate() {
             if let Some(&tau) = ev.staleness.get(m) {
@@ -416,6 +428,9 @@ pub struct Session {
     tracer: Option<Arc<Tracer>>,
     metrics: Arc<MetricsRegistry>,
     handles: MetricHandles,
+    /// high-water mark of `Tracer::dropped` already folded into the
+    /// `spans_dropped_total` counter
+    spans_dropped_seen: u64,
 }
 
 impl Session {
@@ -458,6 +473,15 @@ impl Session {
     pub fn step(&mut self) -> Result<IterEvent> {
         let ev = self.engine.step()?;
         self.handles.update(&ev);
+        // surface tracer overflow as a counter (delta since last step —
+        // an atomic add, no allocation)
+        if let Some(tracer) = &self.tracer {
+            let dropped = tracer.dropped();
+            if dropped > self.spans_dropped_seen {
+                self.handles.spans_dropped_total.add(dropped - self.spans_dropped_seen);
+                self.spans_dropped_seen = dropped;
+            }
+        }
         self.recorder.push(ev.to_record());
         Ok(ev)
     }

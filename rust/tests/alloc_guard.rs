@@ -19,7 +19,9 @@ use std::sync::Arc;
 
 use sgs::config::{ExperimentConfig, ModelShape, ModelSpec, StackModel};
 use sgs::data::synthetic::SyntheticSpec;
-use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
+use sgs::obs::{
+    HealthConfig, MetricsRegistry, TelemetrySampler, Tracer, Watchdog, DEFAULT_SPAN_CAPACITY,
+};
 use sgs::runtime::{ComputeBackend, NativeBackend};
 use sgs::session::Session;
 use sgs::trainer::LrSchedule;
@@ -129,6 +131,32 @@ fn steady_state_sim_step_allocates_nothing() {
     assert!(registry.histogram("staleness_mod0", &[]).count() >= 19);
     assert!(!tracer.snapshot().is_empty(), "tracer captured no spans");
     assert_eq!(tracer.dropped(), 0);
+
+    // ---- the telemetry plane under the same contract ----
+    // The monitor thread calls `TelemetrySampler::sample` forever and the
+    // event hook calls `Watchdog::note_step` every iteration: sample()
+    // copies into preallocated ring slots (handles resolved against the
+    // now-final instrument set), note_step is two relaxed stores.
+    let mut sampler = TelemetrySampler::new(Arc::clone(&registry), 8);
+    let watchdog = Watchdog::new(HealthConfig::default());
+    sampler.sample(); // warm tick (fingerprint check path included)
+    watchdog.note_step(1);
+
+    ALLOCS.with(|c| c.set(0));
+    DEALLOCS.with(|c| c.set(0));
+    TRACKING.with(|t| t.set(true));
+    for i in 0..3u64 {
+        sampler.sample();
+        watchdog.note_step(2 + i);
+    }
+    TRACKING.with(|t| t.set(false));
+    let tel_allocs = ALLOCS.with(|c| c.get());
+    let tel_deallocs = DEALLOCS.with(|c| c.get());
+    assert_eq!(tel_allocs, 0, "telemetry sample performed {tel_allocs} heap allocations");
+    assert_eq!(tel_deallocs, 0, "telemetry sample performed {tel_deallocs} heap frees");
+    // the samples really landed in the ring
+    assert_eq!(sampler.len(), 4);
+    assert!(sampler.latest().is_some());
 
     // ---- the CNN path under the same contract ----
     // conv im2col buffers, pool/flatten zero-param slots, and the spatial

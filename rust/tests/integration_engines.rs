@@ -341,6 +341,93 @@ fn coordinator_sees_zero_data_plane_bytes() {
     }
 }
 
+/// Worker telemetry rides the control plane for free: attaching a metrics
+/// registry + tracer to the dist coordinator must not change the event
+/// stream — **including the per-module `net_tx`/`net_rx` byte counts**,
+/// because `Frame::Obs` bytes are deliberately excluded from the wire
+/// counters — nor the final parameters. The attached registry proves the
+/// snapshots actually arrived (merged under `w{id}_*` names), so the
+/// equality is not vacuous.
+#[test]
+fn dist_worker_obs_frames_are_uncounted_and_pure() {
+    use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
+
+    let c = cfg(2, 2, 8);
+    let run = |obs: Option<(Arc<MetricsRegistry>, Arc<Tracer>)>| {
+        let mut cc = c.clone();
+        let n = cc.s * cc.k;
+        cc.placement = Some(Placement { workers: 2, assign: (0..n).map(|i| i % 2).collect() });
+        let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            handles.push(std::thread::spawn(move || sgs::net::worker::serve(listener)));
+            transports.push(Box::new(TcpTransport::connect(addr).unwrap()) as Box<dyn Transport>);
+        }
+        let mut builder =
+            Session::builder(cc).engine(EngineKind::Dist).dist_workers(transports);
+        if let Some((reg, tr)) = obs {
+            builder = builder.metrics(reg).tracer(tr);
+        }
+        let (events, session) = collect_events(builder.build().unwrap());
+        let params = session.final_params();
+        drop(session);
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        (events, params)
+    };
+
+    let (plain_events, plain_params) = run(None);
+    let reg = Arc::new(MetricsRegistry::new());
+    let tracer = Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY));
+    let (obs_events, obs_params) = run(Some((Arc::clone(&reg), Arc::clone(&tracer))));
+
+    assert_eq!(plain_events.len(), obs_events.len());
+    for (a, b) in plain_events.iter().zip(&obs_events) {
+        assert_events_eq(a, b);
+    }
+    assert_params_eq(&plain_params, &obs_params);
+
+    // the load-bearing half: identical wire accounting. Per-iteration
+    // attribution of received frames can shift with thread timing, so
+    // compare whole-run per-module totals, which are complete by the
+    // final StepDone.
+    let totals = |events: &[IterEvent], tx: bool| -> Vec<u64> {
+        let mut sums: Vec<u64> = Vec::new();
+        for ev in events {
+            let per_mod = if tx { &ev.net_tx } else { &ev.net_rx };
+            if let Some(v) = per_mod {
+                if sums.len() < v.len() {
+                    sums.resize(v.len(), 0);
+                }
+                for (s, b) in sums.iter_mut().zip(v) {
+                    *s += b;
+                }
+            }
+        }
+        sums
+    };
+    let tx = totals(&plain_events, true);
+    assert!(tx.iter().any(|&b| b > 0), "dist run moved no bytes?");
+    assert_eq!(tx, totals(&obs_events, true), "obs frames leaked into net_tx");
+    assert_eq!(totals(&plain_events, false), totals(&obs_events, false), "obs frames leaked into net_rx");
+
+    // the snapshots flowed: every worker's per-iteration counter landed
+    for w in 0..2 {
+        let steps = reg
+            .find_counter(&format!("w{w}_steps_total"))
+            .unwrap_or_else(|| panic!("w{w}_steps_total never merged"));
+        assert_eq!(steps.get(), c.iters as u64, "worker {w} obs frames missing");
+        assert!(reg.find_gauge(&format!("w{w}_step_wall_s")).is_some());
+    }
+    // and the workers' spans merged onto their own tracks (pid w+1)
+    let tracks: std::collections::BTreeSet<u16> =
+        tracer.snapshot().iter().map(|(pid, _)| *pid).collect();
+    assert!(tracks.contains(&1) && tracks.contains(&2), "worker tracks: {tracks:?}");
+}
+
 #[test]
 fn dist_checkpoint_restores_bit_identically_through_the_coordinator() {
     // full-resume checkpoints gathered over the wire (stashes, velocity,

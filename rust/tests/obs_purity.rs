@@ -6,11 +6,15 @@
 //! with observability on and off.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use sgs::config::{ExperimentConfig, ModelShape};
+use sgs::monitor::{Monitor, MonitorOptions, RunInfo};
 use sgs::obs::{MetricsRegistry, Tracer, DEFAULT_SPAN_CAPACITY};
-use sgs::session::Session;
+use sgs::serve::http::http_get;
+use sgs::session::{EngineKind, Session};
 use sgs::trainer::LrSchedule;
+use sgs::util::json::Json;
 
 fn cfg() -> ExperimentConfig {
     ExperimentConfig {
@@ -64,6 +68,84 @@ fn sim_events_and_params_are_bitwise_identical_with_tracing_on_and_off() {
         for ((w1, b1), (w2, b2)) in ga.iter().zip(gb.iter()) {
             assert_eq!(w1, w2, "weights diverged under tracing");
             assert_eq!(b1, b2, "biases diverged under tracing");
+        }
+    }
+}
+
+type Params = Vec<Vec<(sgs::tensor::Tensor, sgs::tensor::Tensor)>>;
+
+/// One full run on `kind`, optionally with the live telemetry plane
+/// attached: a status server on an ephemeral port, a 5 ms sampler with a
+/// JSONL sink, per-step watchdog pings, and mid-run HTTP polls of all
+/// three endpoints — the heaviest observation the monitor can apply.
+fn run_kind(kind: EngineKind, name: &str, monitored: bool) -> (Vec<String>, Params) {
+    let mut builder = Session::builder(cfg()).engine(kind);
+    let metrics = Arc::new(MetricsRegistry::new());
+    let tracer = Arc::new(Tracer::new(DEFAULT_SPAN_CAPACITY));
+    let mut monitor = None;
+    let out = std::env::temp_dir().join(format!("sgs-obs-purity-{}-{name}.jsonl", std::process::id()));
+    if monitored {
+        builder = builder.metrics(Arc::clone(&metrics)).tracer(Arc::clone(&tracer));
+        let _ = std::fs::remove_file(&out);
+        let mut opts = MonitorOptions::new("127.0.0.1:0");
+        opts.telemetry_out = Some(out.clone());
+        opts.sample_period = Duration::from_millis(5);
+        opts.fail_linger = Duration::ZERO;
+        let info = RunInfo { engine: name.to_string(), s: 2, k: 2, workers: 0 };
+        monitor = Some(
+            Monitor::start(opts, info, Arc::clone(&metrics), Some(Arc::clone(&tracer))).unwrap(),
+        );
+    }
+    let mut session = builder.build().unwrap();
+    let mut events = Vec::new();
+    while session.iterations_done() < session.cfg().iters {
+        let ev = session.step().unwrap();
+        events.push(ev.to_json().to_string_compact());
+        if let Some(mon) = &monitor {
+            mon.note_step(session.iterations_done() as u64);
+            if session.iterations_done() == 6 {
+                let addr = mon.addr().expect("status server bound").to_string();
+                for path in ["/status", "/metrics", "/healthz"] {
+                    let (code, body) = http_get(&addr, path, Duration::from_secs(5)).unwrap();
+                    assert_eq!(code, 200, "{name} {path}: {body}");
+                }
+            }
+        }
+    }
+    let params = session.final_params();
+    if let Some(mon) = monitor {
+        mon.shutdown();
+        let telemetry = std::fs::read_to_string(&out).expect("telemetry JSONL written");
+        let _ = std::fs::remove_file(&out);
+        let lines: Vec<&str> = telemetry.lines().collect();
+        assert!(!lines.is_empty(), "{name}: sampler wrote no telemetry");
+        for line in lines {
+            let doc = Json::parse(line).expect("telemetry line parses");
+            assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), "sgs-telemetry/v1");
+        }
+    }
+    (events, params)
+}
+
+/// The full monitor stack — status server, sampler, watchdog, JSONL sink,
+/// live HTTP polls — must not perturb a single bit of the computation, on
+/// both in-process engines.
+#[test]
+fn monitored_run_is_bitwise_identical_on_sim_and_threaded() {
+    for (kind, name) in [(EngineKind::Sim, "sim"), (EngineKind::Threaded, "threaded")] {
+        let (plain_events, plain_params) = run_kind(kind, name, false);
+        let (mon_events, mon_params) = run_kind(kind, name, true);
+        assert_eq!(plain_events.len(), mon_events.len(), "{name}");
+        for (t, (a, b)) in plain_events.iter().zip(&mon_events).enumerate() {
+            assert_eq!(a, b, "{name}: serialized event diverged at t={t} under monitoring");
+        }
+        assert_eq!(plain_params.len(), mon_params.len(), "{name}");
+        for (ga, gb) in plain_params.iter().zip(&mon_params) {
+            assert_eq!(ga.len(), gb.len(), "{name}");
+            for ((w1, b1), (w2, b2)) in ga.iter().zip(gb.iter()) {
+                assert_eq!(w1, w2, "{name}: weights diverged under monitoring");
+                assert_eq!(b1, b2, "{name}: biases diverged under monitoring");
+            }
         }
     }
 }

@@ -1,6 +1,8 @@
 //! `bench-summary`: fold `bench_out/*.csv` smoke results into the
-//! `BENCH_<n>.json` perf-trajectory format and (report-only) diff the
-//! hot-path timings against a committed baseline.
+//! `BENCH_<n>.json` perf-trajectory format and diff the hot-path
+//! timings against a committed baseline — report-only by default,
+//! failing on >25% regressions with `--check` (armed only once the
+//! baseline carries `measured: true` numbers).
 
 use std::fs;
 use std::path::Path;
@@ -16,13 +18,16 @@ pub struct Csv {
 /// Read the two smoke CSVs from `bench_dir`, optionally ingest a
 /// `sgs trace-report --json` document, write/print the JSON summary, and
 /// diff hot-path means against `baseline` when it carries measured
-/// numbers. The diff never fails the run — perf drift is reported, not
-/// gated, because CI runner timing is noisy.
+/// numbers. By default the diff is report-only (perf drift is reported,
+/// not gated, because CI runner timing is noisy); with `check` the run
+/// fails when any hot-path mean regressed more than 25% against a
+/// `measured: true` baseline. A placeholder baseline never fails.
 pub fn run(
     bench_dir: &Path,
     baseline: Option<&Path>,
     out: Option<&Path>,
     trace: Option<&Path>,
+    check: bool,
 ) -> Result<(), String> {
     let hot = read_csv(&bench_dir.join("hot_path.csv"))?;
     let ablation = read_csv(&bench_dir.join("ablation_compensate.csv"))?;
@@ -49,7 +54,14 @@ pub fn run(
         None => print!("{summary}"),
     }
     if let Some(base) = baseline {
-        diff_against(base, hot.as_ref())?;
+        let regressions = diff_against(base, hot.as_ref())?;
+        if check && !regressions.is_empty() {
+            return Err(format!(
+                "bench-summary --check: {} hot-path regression(s) over 25%: {}",
+                regressions.len(),
+                regressions.join(", ")
+            ));
+        }
     }
     Ok(())
 }
@@ -110,7 +122,7 @@ fn summary_json(
 ) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"sgs-bench/v1\",\n");
-    s.push_str("  \"issue\": 9,\n");
+    s.push_str("  \"issue\": 10,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str("  \"hot_path\": ");
     s.push_str(&csv_json(hot));
@@ -157,7 +169,10 @@ fn csv_json(csv: Option<&Csv>) -> String {
     s
 }
 
-fn diff_against(baseline: &Path, hot: Option<&Csv>) -> Result<(), String> {
+/// Diff hot-path means against the baseline, returning the names of
+/// benches that regressed more than 25% (empty when the baseline is a
+/// placeholder or nothing regressed).
+fn diff_against(baseline: &Path, hot: Option<&Csv>) -> Result<Vec<String>, String> {
     let text =
         fs::read_to_string(baseline).map_err(|e| format!("reading {}: {e}", baseline.display()))?;
     let base = parse(&text).map_err(|e| format!("{}: {e}", baseline.display()))?;
@@ -166,17 +181,18 @@ fn diff_against(baseline: &Path, hot: Option<&Csv>) -> Result<(), String> {
             "bench-summary: baseline {} has no measured numbers yet; recording only",
             baseline.display()
         );
-        return Ok(());
+        return Ok(Vec::new());
     }
     let Some(hot) = hot else {
         println!("bench-summary: no hot_path.csv to diff against the baseline");
-        return Ok(());
+        return Ok(Vec::new());
     };
     let empty = Vec::new();
     let entries = match base.get("hot_path") {
         Some(Json::Arr(items)) => items,
         _ => &empty,
     };
+    let mut regressions = Vec::new();
     for row in &hot.rows {
         let (Some(name), Some(mean_text)) = (row.first(), row.get(1)) else {
             continue;
@@ -197,9 +213,12 @@ fn diff_against(baseline: &Path, hot: Option<&Csv>) -> Result<(), String> {
                 println!(
                     "bench-summary: {name}: {mean:.6}s vs baseline {b:.6}s ({pct:+.1}%){tag}"
                 );
+                if pct > 25.0 {
+                    regressions.push(format!("{name} ({pct:+.1}%)"));
+                }
             }
             _ => println!("bench-summary: {name}: {mean:.6}s (no baseline entry)"),
         }
     }
-    Ok(())
+    Ok(regressions)
 }

@@ -19,6 +19,8 @@ usage:
   cargo run -p xtask -- lint [--root DIR] [--json PATH]
   cargo run -p xtask -- bench-summary [--bench-dir DIR] [--baseline PATH] [--out PATH]
                                       [--trace PATH (sgs trace-report --json output)]
+                                      [--check (fail on >25% hot-path regressions vs a
+                                       measured baseline)]
 ";
 
 fn main() -> ExitCode {
@@ -99,7 +101,8 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         Ok(v) => v,
         Err(e) => return fail(&e),
     };
-    match bench::run(&bench_dir, baseline.as_deref(), out.as_deref(), trace.as_deref()) {
+    let check = args.iter().any(|a| a == "--check");
+    match bench::run(&bench_dir, baseline.as_deref(), out.as_deref(), trace.as_deref(), check) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => fail(&e),
     }
